@@ -1,0 +1,28 @@
+//! Shared micro-bench harness for the paper-figure benches (criterion is
+//! not vendored on this image). Times a closure over warmup + measured
+//! iterations and reports mean/p50/min, and carries the table printers the
+//! EXPERIMENTS.md rows are pasted from.
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub use windmill::util::{stats::fmt_ns, Summary, Table};
+
+/// Time `f` over `iters` measured runs (after `warmup` runs).
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        s.push(t0.elapsed().as_nanos() as f64);
+    }
+    s
+}
+
+/// Render a Summary as "mean ± stddev (min)".
+pub fn fmt_summary(s: &mut Summary) -> String {
+    format!("{} ± {} (min {})", fmt_ns(s.mean()), fmt_ns(s.stddev()), fmt_ns(s.min()))
+}

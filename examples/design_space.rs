@@ -1,0 +1,100 @@
+//! Design-space exploration: the Fig. 6 parameter sweeps as one runnable
+//! study — PEA size, PE-type mix, interconnect topology and shared-memory
+//! size against area / fmax / power, plus the performance effect on a
+//! fixed workload. Demonstrates the "quantitative parameterized
+//! architecture" side of the generator.
+//!
+//! `cargo run --release --example design_space`
+
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::{ppa_report, run_job, JobSpec, Workload};
+use windmill::util::{table, Table};
+
+fn main() -> anyhow::Result<()> {
+    // --- Fig. 6a: area vs PEA size ----------------------------------------
+    let mut t = Table::new(
+        "Fig. 6a analog: PEA size sweep (strong area effect)",
+        &["pea", "gates", "area mm2", "fmax MHz", "power mW", "gemm cycles"],
+    );
+    for edge in [4usize, 6, 8, 12, 16] {
+        let p = presets::with_pea_size(edge);
+        let r = ppa_report(&format!("{edge}x{edge}"), p.clone())?;
+        let job = run_job(&JobSpec {
+            workload: Workload::Gemm { m: 16, n: 16, k: 16 },
+            params: p,
+            seed: 3,
+        })?;
+        t.row(&[
+            r.pea,
+            format!("{:.2e}", r.gates),
+            table::f(r.area_mm2, 3),
+            table::f(r.fmax_mhz, 0),
+            table::f(r.power_mw, 2),
+            job.cycles.to_string(),
+        ]);
+    }
+    t.print();
+
+    // --- Fig. 6b: PE-type mix (SFU / CPE / LSU-ring ablations) ------------
+    let mut t = Table::new(
+        "Fig. 6b analog: PE-type mix (strong area effect)",
+        &["variant", "gates", "area mm2", "note"],
+    );
+    let mut base = presets::standard();
+    let full = ppa_report("full", base.clone())?;
+    t.row(&[
+        "GPE+LSU+CPE+SFU".into(),
+        format!("{:.2e}", full.gates),
+        table::f(full.area_mm2, 3),
+        "standard".into(),
+    ]);
+    base.sfu_enabled = false;
+    let nosfu = ppa_report("nosfu", base.clone())?;
+    t.row(&[
+        "no SFU".into(),
+        format!("{:.2e}", nosfu.gates),
+        table::f(nosfu.area_mm2, 3),
+        format!("-{:.1}% area", 100.0 * (1.0 - nosfu.area_mm2 / full.area_mm2)),
+    ]);
+    base.sfu_enabled = true;
+    base.cpe_enabled = false;
+    let nocpe = ppa_report("nocpe", base.clone())?;
+    t.row(&[
+        "no CPE".into(),
+        format!("{:.2e}", nocpe.gates),
+        table::f(nocpe.area_mm2, 3),
+        format!("-{:.1}% area", 100.0 * (1.0 - nocpe.area_mm2 / full.area_mm2)),
+    ]);
+    t.print();
+
+    // --- Fig. 6c: interconnect (weak) + memory size (moderate) ------------
+    let mut t = Table::new(
+        "Fig. 6c analog: interconnect topology (weak area effect) & memory",
+        &["variant", "gates", "area mm2", "fmax MHz"],
+    );
+    for topo in Topology::ALL {
+        let r = ppa_report(topo.name(), presets::with_topology(topo))?;
+        t.row(&[
+            format!("topology {}", r.topology),
+            format!("{:.2e}", r.gates),
+            table::f(r.area_mm2, 3),
+            table::f(r.fmax_mhz, 0),
+        ]);
+    }
+    for (banks, depth) in [(8usize, 128usize), (16, 256), (32, 512)] {
+        let r = ppa_report(&format!("sm{banks}x{depth}"), presets::with_smem(banks, depth))?;
+        t.row(&[
+            format!("smem {banks}x{depth}x32b"),
+            format!("{:.2e}", r.gates),
+            table::f(r.area_mm2, 3),
+            table::f(r.fmax_mhz, 0),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nReading: PEA size and PE mix dominate area; topology moves area by <2%\n\
+         but shifts fmax — matching the paper's Fig. 6 conclusions."
+    );
+    Ok(())
+}

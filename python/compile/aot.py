@@ -1,0 +1,99 @@
+"""AOT compile path: lower every Layer-2 entry point to HLO *text*.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 bundled with the Rust `xla` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowering goes stablehlo -> XlaComputation (return_tuple=True, so
+the Rust side always unwraps a tuple) -> as_hlo_text. See
+/opt/xla-example/gen_hlo.py for the reference wiring.
+
+Alongside the ``<name>.hlo.txt`` files a ``manifest.json`` records every
+entry point's input/output shapes so the Rust runtime can marshal literals
+without re-deriving shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, in_specs = model.ENTRY_POINTS[name]
+    lowered = jax.jit(fn).lower(*in_specs)
+    out_specs = jax.eval_shape(fn, *in_specs)
+    return lowered, in_specs, out_specs
+
+
+def spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of entry points"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = sorted(model.ENTRY_POINTS)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "shapes": {
+            "obs_dim": model.OBS_DIM,
+            "hidden": model.HIDDEN,
+            "act_dim": model.ACT_DIM,
+            "batch": model.BATCH,
+            "lr": model.LR,
+            "gemm": [model.GEMM_M, model.GEMM_K, model.GEMM_N],
+            "fir": [model.FIR_N, model.FIR_TAPS],
+            "conv": [model.CONV_H, model.CONV_W],
+        },
+        "entries": {},
+    }
+    for name in names:
+        lowered, in_specs, out_specs = lower_entry(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_json(s) for s in in_specs],
+            "outputs": [spec_json(s) for s in out_specs],
+        }
+        print(f"  aot: {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  aot: manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Layer-1 Pallas kernels: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of every WindMill baseline workload (the RL
+policy MLP, GEMM, and the im2col'd FIR/conv all bottom out here). The kernel
+is written the way it would be tiled for a real TPU:
+
+  * the grid walks (M/bm, N/bn, K/bk); each (i, j) output tile accumulates
+    over the K slabs streamed HBM->VMEM by the BlockSpec index maps;
+  * accumulation happens in a float32 VMEM scratch accumulator regardless of
+    input dtype (MXU-style mixed precision);
+  * bias add + activation are fused into the epilogue so the activation
+    never round-trips to HBM.
+
+Autodiff: `pallas_call` has no JVP rule for scratch-carrying grids, so
+`matmul_bias_act` carries a `jax.custom_vjp` whose backward pass is built
+from the *same* tiled kernel (dx = dpre @ w^T, dw = x^T @ dpre) — the AOT'd
+training step therefore runs Pallas in both directions.
+
+On this image the kernel always runs with ``interpret=True`` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls — so the BlockSpec structure is
+validated functionally and its VMEM/MXU characteristics are estimated
+analytically (see DESIGN.md §Perf and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Activation codes shared with ref.py / model.py.
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_TANH = 2
+
+# Default block shape: MXU-friendly 128x128 output tile, 128-deep K slabs.
+# Callers with small problems clamp blocks to the (padded) problem size.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _apply_act(x, act: int):
+    if act == ACT_RELU:
+        return jnp.maximum(x, 0.0)
+    if act == ACT_TANH:
+        return jnp.tanh(x)
+    return x
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int, act: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K slabs."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-style mixed precision: accumulate in f32 whatever the input dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(out, act).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def _pallas_matmul(x, w, b, act, bm, bn, bk, interpret):
+    """Raw (non-differentiable) tiled pallas matmul: act(x @ w + b)."""
+    m, k = x.shape
+    _, n = w.shape
+
+    # Clamp blocks to the problem so tiny shapes stay single-tile.
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(k, 1))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b, bn, 0).reshape(1, -1)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _matmul_vjp(x, w, b, act, bm, bn, bk, interpret):
+    return _pallas_matmul(x, w, b, act, bm, bn, bk, interpret)
+
+
+def _matmul_fwd(x, w, b, act, bm, bn, bk, interpret):
+    out = _pallas_matmul(x, w, b, act, bm, bn, bk, interpret)
+    return out, (x, w, out)
+
+
+def _matmul_bwd(act, bm, bn, bk, interpret, res, dy):
+    x, w, out = res
+    # Activation gradient from the *post*-activation value (exact for the
+    # three supported activations).
+    if act == ACT_RELU:
+        dpre = dy * (out > 0).astype(dy.dtype)
+    elif act == ACT_TANH:
+        dpre = dy * (1.0 - out * out)
+    else:
+        dpre = dy
+    zero_n = jnp.zeros((w.shape[0],), dy.dtype)
+    zero_k = jnp.zeros((w.shape[1],), dy.dtype)
+    # Backward matmuls reuse the same tiled Pallas kernel.
+    dx = _pallas_matmul(dpre, w.T, zero_n, ACT_NONE, bm, bn, bk, interpret)
+    dw = _pallas_matmul(x.T, dpre, zero_k, ACT_NONE, bm, bn, bk, interpret)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    *,
+    act: int = ACT_NONE,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    """``act(x @ w + b)`` with a tiled, differentiable Pallas kernel.
+
+    x: (M, K), w: (K, N), b: (N,). Shapes need not be multiples of the block
+    sizes; inputs are zero-padded and the result sliced back (zero padding is
+    exact for matmul + bias on the valid region).
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    if act not in (ACT_NONE, ACT_RELU, ACT_TANH):
+        raise ValueError(f"unknown activation code {act}")
+    return _matmul_vjp(x, w, b, act, bm, bn, bk, interpret)
+
+
+# --------------------------------------------------------------------------
+# Analytic TPU performance estimators (§Perf): interpret=True gives
+# CPU-numpy timings only, so block-shape quality is scored structurally.
+# --------------------------------------------------------------------------
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """VMEM footprint of one program instance: double-buffered input tiles +
+    f32 accumulator + bias slab + output tile."""
+    x_tile = bm * bk * itemsize * 2  # double-buffered HBM->VMEM stream
+    w_tile = bk * bn * itemsize * 2
+    b_tile = bn * itemsize
+    acc = bm * bn * 4
+    out = bm * bn * itemsize
+    return x_tile + w_tile + b_tile + acc + out
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs doing useful (non-padding) work, times the
+    systolic-array occupancy of the tile shape (8x128 lanes, 128x128 MXU)."""
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    kp = math.ceil(k / bk) * bk
+    useful = (m * n * k) / float(mp * np_ * kp)
+    occupancy = min(bm, 128) * min(bn, 128) / (128.0 * 128.0)
+    return useful * min(1.0, occupancy)

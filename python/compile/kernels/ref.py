@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the Layer-1 kernels and Layer-2 graphs.
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and no
+padding tricks — the simplest possible statement of the math. pytest checks
+the Pallas kernels and the AOT'd model graphs against these oracles, and the
+Rust integration tests check the CGRA simulator's numerics against the AOT
+artifacts (which are themselves checked against this file). ref.py is the
+root of that trust chain, so keep it boring.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_TANH = 2
+
+
+def apply_act(x, act: int):
+    if act == ACT_RELU:
+        return jnp.maximum(x, 0.0)
+    if act == ACT_TANH:
+        return jnp.tanh(x)
+    return x
+
+
+def matmul_bias_act(x, w, b, act: int = ACT_NONE):
+    """act(x @ w + b) — the oracle for kernels.matmul.matmul_bias_act."""
+    return apply_act(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32),
+        act,
+    ).astype(x.dtype)
+
+
+def policy_forward(w1, b1, w2, b2, obs):
+    """2-layer tanh MLP policy: obs -> logits."""
+    h = jnp.tanh(obs @ w1 + b1)
+    return h @ w2 + b2
+
+
+def policy_logprobs(w1, b1, w2, b2, obs):
+    logits = policy_forward(w1, b1, w2, b2, obs)
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def policy_loss(w1, b1, w2, b2, obs, act_onehot, returns):
+    """REINFORCE surrogate: -E[G_t * log pi(a_t | s_t)]."""
+    logp = policy_logprobs(w1, b1, w2, b2, obs)
+    chosen = jnp.sum(logp * act_onehot, axis=-1)
+    return -jnp.mean(returns * chosen)
+
+
+def policy_step(w1, b1, w2, b2, obs, act_onehot, returns, lr: float):
+    """One REINFORCE SGD step; returns (new params..., loss)."""
+    loss, grads = jax.value_and_grad(policy_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, obs, act_onehot, returns
+    )
+    g1, gb1, g2, gb2 = grads
+    return (w1 - lr * g1, b1 - lr * gb1, w2 - lr * g2, b2 - lr * gb2, loss)
+
+
+def fir(signal, taps):
+    """Direct-form FIR: out[i] = sum_j signal[i + j] * taps[j] (valid mode)."""
+    n = signal.shape[0] - taps.shape[0] + 1
+    idx = jnp.arange(n)[:, None] + jnp.arange(taps.shape[0])[None, :]
+    return signal[idx] @ taps
+
+
+def conv2d_3x3(image, kernel):
+    """Valid-mode single-channel 3x3 convolution (correlation convention)."""
+    h, w = image.shape
+    out = jnp.zeros((h - 2, w - 2), image.dtype)
+    for di in range(3):
+        for dj in range(3):
+            out = out + kernel[di, dj] * image[di : di + h - 2, dj : dj + w - 2]
+    return out

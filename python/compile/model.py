@@ -1,0 +1,156 @@
+"""Layer-2 JAX compute graphs for the WindMill baselines.
+
+These are the workloads the paper's evaluation runs on the CGRA, written as
+jax functions whose dense hot-spots call the Layer-1 Pallas kernel
+(`kernels.matmul.matmul_bias_act`). `aot.py` lowers each entry point once to
+HLO text; the Rust coordinator executes them through PJRT as the GPU-analog
+baseline and as the golden numeric reference for the cycle-accurate CGRA
+simulator. Python is never on the request path.
+
+Shapes are fixed at AOT time (see `SHAPES`): the RL policy is a 2-layer tanh
+MLP (obs 4 -> hidden 32 -> 2 actions) trained with REINFORCE over batches of
+64 transitions — the small-batch regime where the paper reports 2.3x vs GPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mk
+
+# --------------------------------------------------------------------------
+# Fixed AOT shapes (single source of truth, mirrored into manifest.json).
+# --------------------------------------------------------------------------
+OBS_DIM = 4
+HIDDEN = 32
+ACT_DIM = 2
+BATCH = 64
+LR = 0.05
+
+GEMM_M = 64
+GEMM_K = 64
+GEMM_N = 64
+
+FIR_N = 256
+FIR_TAPS = 16
+
+CONV_H = 32
+CONV_W = 32
+
+# Block shapes for the Pallas kernel at these problem sizes. A 128x128x128
+# MXU tile would be >99% padding for the RL shapes; 32/32/32 keeps the tile
+# resident in a few KiB of VMEM with no wasted K slabs (see §Perf).
+BLOCK = dict(bm=32, bn=32, bk=32)
+
+
+def _mm(x, w, b, act=mk.ACT_NONE):
+    return mk.matmul_bias_act(x, w, b, act=act, **BLOCK)
+
+
+# --------------------------------------------------------------------------
+# Linear algebra domain: plain GEMM.
+# --------------------------------------------------------------------------
+def gemm(x, w, b):
+    """out = x @ w + b, (64,64)x(64,64)+(64,) — the CGRA GEMM golden ref."""
+    return (_mm(x, w, b),)
+
+
+# --------------------------------------------------------------------------
+# Reinforcement-learning domain: REINFORCE policy gradient.
+# --------------------------------------------------------------------------
+def policy_forward(w1, b1, w2, b2, obs):
+    """Batched policy logits. Hot spots are the two Pallas matmuls."""
+    h = _mm(obs, w1, b1, act=mk.ACT_TANH)
+    logits = _mm(h, w2, b2, act=mk.ACT_NONE)
+    return (logits,)
+
+
+def _policy_loss(params, obs, act_onehot, returns):
+    w1, b1, w2, b2 = params
+    (logits,) = policy_forward(w1, b1, w2, b2, obs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    chosen = jnp.sum(logp * act_onehot, axis=-1)
+    return -jnp.mean(returns * chosen)
+
+
+def policy_step(w1, b1, w2, b2, obs, act_onehot, returns):
+    """One REINFORCE SGD step: returns (w1', b1', w2', b2', loss).
+
+    The backward pass is jax.grad through the Pallas forward, so the AOT'd
+    HLO contains both fwd and bwd of the Layer-1 kernel.
+    """
+    loss, grads = jax.value_and_grad(_policy_loss)(
+        (w1, b1, w2, b2), obs, act_onehot, returns
+    )
+    g1, gb1, g2, gb2 = grads
+    return (
+        w1 - LR * g1,
+        b1 - LR * gb1,
+        w2 - LR * g2,
+        b2 - LR * gb2,
+        loss,
+    )
+
+
+# --------------------------------------------------------------------------
+# Signal-processing domain: FIR filter and 3x3 conv, both im2col'd onto the
+# Pallas GEMM (the same trick the CGRA mapper uses to feed its PEA).
+# --------------------------------------------------------------------------
+def fir(signal, taps):
+    """Valid-mode FIR via im2col: windows (N-T+1, T) @ taps (T, 1)."""
+    n = FIR_N - FIR_TAPS + 1
+    idx = jnp.arange(n)[:, None] + jnp.arange(FIR_TAPS)[None, :]
+    windows = signal[idx]
+    zero = jnp.zeros((1,), signal.dtype)
+    out = _mm(windows, taps.reshape(FIR_TAPS, 1), zero)
+    return (out.reshape(n),)
+
+
+def conv2d_3x3(image, kernel):
+    """Valid 3x3 single-channel conv via im2col onto the Pallas GEMM."""
+    oh, ow = CONV_H - 2, CONV_W - 2
+    ii = jnp.arange(oh)[:, None, None, None] + jnp.arange(3)[None, None, :, None]
+    jj = jnp.arange(ow)[None, :, None, None] + jnp.arange(3)[None, None, None, :]
+    patches = image[ii, jj].reshape(oh * ow, 9)
+    zero = jnp.zeros((1,), image.dtype)
+    out = _mm(patches, kernel.reshape(9, 1), zero)
+    return (out.reshape(oh, ow),)
+
+
+# --------------------------------------------------------------------------
+# AOT entry-point registry: name -> (fn, input ShapeDtypeStructs).
+# --------------------------------------------------------------------------
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ENTRY_POINTS = {
+    "gemm": (gemm, [_f32(GEMM_M, GEMM_K), _f32(GEMM_K, GEMM_N), _f32(GEMM_N)]),
+    "policy_forward": (
+        policy_forward,
+        [
+            _f32(OBS_DIM, HIDDEN),
+            _f32(HIDDEN),
+            _f32(HIDDEN, ACT_DIM),
+            _f32(ACT_DIM),
+            _f32(BATCH, OBS_DIM),
+        ],
+    ),
+    "policy_step": (
+        policy_step,
+        [
+            _f32(OBS_DIM, HIDDEN),
+            _f32(HIDDEN),
+            _f32(HIDDEN, ACT_DIM),
+            _f32(ACT_DIM),
+            _f32(BATCH, OBS_DIM),
+            _f32(BATCH, ACT_DIM),
+            _f32(BATCH),
+        ],
+    ),
+    "fir": (fir, [_f32(FIR_N), _f32(FIR_TAPS)]),
+    "conv2d_3x3": (conv2d_3x3, [_f32(CONV_H, CONV_W), _f32(3, 3)]),
+}

@@ -1,0 +1,198 @@
+"""Layer-1 correctness: the Pallas matmul kernel vs the pure-jnp oracle.
+
+This is the CORE numeric signal of the build path: if these pass, the HLO
+artifacts the Rust runtime executes contain a kernel that matches ref.py.
+hypothesis sweeps shapes, block shapes, dtypes and activations, including
+the ragged cases where the kernel's padding logic has to be exact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+ACTS = [mk.ACT_NONE, mk.ACT_RELU, mk.ACT_TANH]
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def _assert_close(got, want, dtype=np.float32):
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit cases.
+# ---------------------------------------------------------------------------
+class TestMatmulBasics:
+    def test_identity(self):
+        x = jnp.eye(8, dtype=jnp.float32)
+        w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        b = jnp.zeros(8, jnp.float32)
+        _assert_close(mk.matmul_bias_act(x, w, b), w)
+
+    def test_bias_only(self):
+        x = jnp.zeros((4, 4), jnp.float32)
+        w = jnp.zeros((4, 3), jnp.float32)
+        b = jnp.array([1.0, -2.0, 3.0], jnp.float32)
+        out = mk.matmul_bias_act(x, w, b)
+        _assert_close(out, np.tile([1.0, -2.0, 3.0], (4, 1)))
+
+    def test_relu_clamps_negative(self):
+        x = jnp.ones((2, 2), jnp.float32)
+        w = -jnp.ones((2, 2), jnp.float32)
+        b = jnp.zeros(2, jnp.float32)
+        out = mk.matmul_bias_act(x, w, b, act=mk.ACT_RELU)
+        assert np.all(np.asarray(out) == 0.0)
+
+    def test_tanh_saturates(self):
+        x = jnp.full((1, 1), 100.0, jnp.float32)
+        w = jnp.ones((1, 1), jnp.float32)
+        b = jnp.zeros(1, jnp.float32)
+        out = mk.matmul_bias_act(x, w, b, act=mk.ACT_TANH)
+        _assert_close(out, [[1.0]])
+
+    def test_single_element(self):
+        x = jnp.array([[3.0]], jnp.float32)
+        w = jnp.array([[2.0]], jnp.float32)
+        b = jnp.array([1.0], jnp.float32)
+        _assert_close(mk.matmul_bias_act(x, w, b), [[7.0]])
+
+    def test_rank_validation(self):
+        good = jnp.zeros((2, 2), jnp.float32)
+        with pytest.raises(ValueError, match="bad ranks"):
+            mk.matmul_bias_act(jnp.zeros(2), good, jnp.zeros(2))
+
+    def test_shape_mismatch(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            mk.matmul_bias_act(
+                jnp.zeros((2, 3), jnp.float32),
+                jnp.zeros((4, 2), jnp.float32),
+                jnp.zeros(2, jnp.float32),
+            )
+
+    def test_bad_act_code(self):
+        good = jnp.zeros((2, 2), jnp.float32)
+        with pytest.raises(ValueError, match="activation"):
+            mk.matmul_bias_act(good, good, jnp.zeros(2, jnp.float32), act=7)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, blocks, activations, dtypes.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_ragged_shapes(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = mk.matmul_bias_act(
+        jnp.array(x), jnp.array(w), jnp.array(b), act=act, bm=32, bn=32, bk=32
+    )
+    want = ref.matmul_bias_act(jnp.array(x), jnp.array(w), jnp.array(b), act)
+    _assert_close(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([1, 3, 8, 16, 64]),
+    bn=st.sampled_from([1, 5, 8, 32]),
+    bk=st.sampled_from([1, 2, 7, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_shape_invariance(bm, bn, bk, seed):
+    """The numeric result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, 33, 29), _rand(rng, 29, 17), _rand(rng, 17)
+    got = mk.matmul_bias_act(
+        jnp.array(x), jnp.array(w), jnp.array(b), bm=bm, bn=bn, bk=bk
+    )
+    want = ref.matmul_bias_act(jnp.array(x), jnp.array(w), jnp.array(b))
+    _assert_close(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bfloat16_inputs_accumulate_in_f32(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(_rand(rng, 48, 48), jnp.bfloat16)
+    w = jnp.array(_rand(rng, 48, 48), jnp.bfloat16)
+    b = jnp.array(_rand(rng, 48), jnp.bfloat16)
+    got = mk.matmul_bias_act(x, w, b, bm=16, bn=16, bk=16)
+    want = ref.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: the custom_vjp backward (also Pallas) vs jax.grad of the oracle.
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(act=st.sampled_from(ACTS), seed=st.integers(0, 2**31 - 1))
+def test_gradients_match_oracle(act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, 9, 7), _rand(rng, 7, 5), _rand(rng, 5)
+    xj, wj, bj = jnp.array(x), jnp.array(w), jnp.array(b)
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(mk.matmul_bias_act(x, w, b, act=act, bm=8, bn=8, bk=8) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act(x, w, b, act) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(xj, wj, bj)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(xj, wj, bj)
+    for a, c in zip(gp, gr):
+        _assert_close(a, c)
+
+
+def test_value_and_grad_composes_with_jit():
+    rng = np.random.default_rng(7)
+    x, w, b = _rand(rng, 6, 4), _rand(rng, 4, 3), _rand(rng, 3)
+
+    @jax.jit
+    def f(x, w, b):
+        return jnp.mean(mk.matmul_bias_act(x, w, b, act=mk.ACT_TANH))
+
+    v, g = jax.value_and_grad(f, argnums=1)(jnp.array(x), jnp.array(w), jnp.array(b))
+    assert np.isfinite(float(v))
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+# ---------------------------------------------------------------------------
+# Analytic perf estimators.
+# ---------------------------------------------------------------------------
+class TestPerfEstimators:
+    def test_vmem_grows_with_blocks(self):
+        assert mk.vmem_bytes(64, 64, 64) < mk.vmem_bytes(128, 128, 128)
+
+    def test_vmem_default_fits_16mib(self):
+        assert mk.vmem_bytes(mk.DEFAULT_BM, mk.DEFAULT_BN, mk.DEFAULT_BK) < 16 << 20
+
+    def test_mxu_exact_tiling_is_full_utilization(self):
+        assert mk.mxu_utilization(256, 256, 256, 128, 128, 128) == pytest.approx(1.0)
+
+    def test_mxu_padding_penalty(self):
+        # 129 rows with bm=128 pads to 256 -> about half the MACs are waste.
+        u = mk.mxu_utilization(129, 128, 128, 128, 128, 128)
+        assert 0.4 < u < 0.6
+
+    def test_mxu_small_tile_occupancy_penalty(self):
+        full = mk.mxu_utilization(128, 128, 128, 128, 128, 128)
+        tiny = mk.mxu_utilization(128, 128, 128, 8, 8, 128)
+        assert tiny < full

@@ -1,0 +1,164 @@
+"""Layer-2 correctness: the AOT'd model graphs vs the ref.py oracles, plus
+behavioural checks (REINFORCE actually learns) that anchor the end-to-end
+RL example on the Rust side."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _init_params(rng):
+    return (
+        rng.standard_normal((model.OBS_DIM, model.HIDDEN)).astype(np.float32) * 0.3,
+        np.zeros(model.HIDDEN, np.float32),
+        rng.standard_normal((model.HIDDEN, model.ACT_DIM)).astype(np.float32) * 0.3,
+        np.zeros(model.ACT_DIM, np.float32),
+    )
+
+
+def _batch(rng):
+    obs = rng.standard_normal((model.BATCH, model.OBS_DIM)).astype(np.float32)
+    acts = rng.integers(0, model.ACT_DIM, model.BATCH)
+    onehot = np.eye(model.ACT_DIM, dtype=np.float32)[acts]
+    returns = rng.standard_normal(model.BATCH).astype(np.float32)
+    return obs, onehot, returns
+
+
+class TestGemm:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((model.GEMM_M, model.GEMM_K)).astype(np.float32)
+        w = rng.standard_normal((model.GEMM_K, model.GEMM_N)).astype(np.float32)
+        b = rng.standard_normal(model.GEMM_N).astype(np.float32)
+        (got,) = model.gemm(jnp.array(x), jnp.array(w), jnp.array(b))
+        np.testing.assert_allclose(np.asarray(got), x @ w + b, rtol=1e-4, atol=1e-4)
+
+
+class TestPolicyForward:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        w1, b1, w2, b2 = map(jnp.array, _init_params(rng))
+        obs = jnp.array(
+            rng.standard_normal((model.BATCH, model.OBS_DIM)).astype(np.float32)
+        )
+        (got,) = model.policy_forward(w1, b1, w2, b2, obs)
+        want = ref.policy_forward(w1, b1, w2, b2, obs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_logits_shape(self):
+        rng = np.random.default_rng(1)
+        w1, b1, w2, b2 = map(jnp.array, _init_params(rng))
+        obs = jnp.zeros((model.BATCH, model.OBS_DIM), jnp.float32)
+        (logits,) = model.policy_forward(w1, b1, w2, b2, obs)
+        assert logits.shape == (model.BATCH, model.ACT_DIM)
+
+
+class TestPolicyStep:
+    def test_matches_ref_step(self):
+        rng = np.random.default_rng(2)
+        params = tuple(map(jnp.array, _init_params(rng)))
+        obs, onehot, returns = map(jnp.array, _batch(rng))
+        got = model.policy_step(*params, obs, onehot, returns)
+        want = ref.policy_step(*params, obs, onehot, returns, model.LR)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=5e-4, atol=5e-4
+            )
+
+    def test_loss_is_finite_scalar(self):
+        rng = np.random.default_rng(3)
+        params = tuple(map(jnp.array, _init_params(rng)))
+        obs, onehot, returns = map(jnp.array, _batch(rng))
+        out = model.policy_step(*params, obs, onehot, returns)
+        loss = out[-1]
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+
+    def test_reinforce_increases_rewarded_action_prob(self):
+        """One step with all-positive returns on action 0 must raise
+        pi(a=0 | s) — the definitional property of the policy gradient."""
+        rng = np.random.default_rng(4)
+        params = tuple(map(jnp.array, _init_params(rng)))
+        obs = jnp.array(
+            rng.standard_normal((model.BATCH, model.OBS_DIM)).astype(np.float32)
+        )
+        onehot = jnp.tile(jnp.array([[1.0, 0.0]], jnp.float32), (model.BATCH, 1))
+        returns = jnp.ones(model.BATCH, jnp.float32)
+
+        def prob0(ps):
+            (logits,) = model.policy_forward(*ps, obs)
+            return float(jnp.mean(jax.nn.softmax(logits, axis=-1)[:, 0]))
+
+        before = prob0(params)
+        out = model.policy_step(*params, obs, onehot, returns)
+        after = prob0(tuple(out[:4]))
+        assert after > before
+
+    def test_zero_returns_leave_params_fixed(self):
+        rng = np.random.default_rng(5)
+        params = tuple(map(jnp.array, _init_params(rng)))
+        obs, onehot, _ = map(jnp.array, _batch(rng))
+        out = model.policy_step(*params, obs, onehot, jnp.zeros(model.BATCH))
+        for p, q in zip(params, out[:4]):
+            np.testing.assert_allclose(np.asarray(p), np.asarray(q), atol=1e-7)
+
+
+class TestSignalProcessing:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_fir_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        sig = jnp.array(rng.standard_normal(model.FIR_N).astype(np.float32))
+        taps = jnp.array(rng.standard_normal(model.FIR_TAPS).astype(np.float32))
+        (got,) = model.fir(sig, taps)
+        want = ref.fir(sig, taps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_fir_impulse_recovers_taps(self):
+        sig = jnp.zeros(model.FIR_N, jnp.float32).at[0].set(1.0)
+        taps = jnp.arange(model.FIR_TAPS, dtype=jnp.float32)
+        (got,) = model.fir(sig, taps)
+        assert float(got[0]) == pytest.approx(0.0)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_conv2d_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        img = jnp.array(
+            rng.standard_normal((model.CONV_H, model.CONV_W)).astype(np.float32)
+        )
+        ker = jnp.array(rng.standard_normal((3, 3)).astype(np.float32))
+        (got,) = model.conv2d_3x3(img, ker)
+        want = ref.conv2d_3x3(img, ker)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_conv2d_identity_kernel(self):
+        rng = np.random.default_rng(6)
+        img = jnp.array(
+            rng.standard_normal((model.CONV_H, model.CONV_W)).astype(np.float32)
+        )
+        ker = jnp.zeros((3, 3), jnp.float32).at[1, 1].set(1.0)
+        (got,) = model.conv2d_3x3(img, ker)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(img)[1:-1, 1:-1], rtol=1e-5, atol=1e-5
+        )
+
+
+class TestEntryPointRegistry:
+    def test_all_entries_lower_shapes(self):
+        for name, (fn, specs) in model.ENTRY_POINTS.items():
+            out = jax.eval_shape(fn, *specs)
+            assert isinstance(out, tuple) and len(out) >= 1, name
+
+    def test_policy_step_output_arity(self):
+        _, specs = model.ENTRY_POINTS["policy_step"]
+        out = jax.eval_shape(model.policy_step, *specs)
+        assert len(out) == 5
+        assert out[-1].shape == ()

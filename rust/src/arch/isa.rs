@@ -1,0 +1,418 @@
+//! The coarse-grained PE operation set and configuration word format.
+//!
+//! WindMill PEs are word-granularity (32-bit) functional units configured
+//! by context-memory words rather than fetched instructions. A
+//! [`ConfigWord`] is what the PE's config-flow pipeline (fetch → decode)
+//! resolves each control step; the data-flow half (execute → write-back)
+//! then applies [`Op::eval`] to the selected operands.
+//!
+//! The binary layout ([`ConfigWord::encode`] / [`ConfigWord::decode`]) is
+//! 128 bits, which is also what the context-memory area/power accounting
+//! uses. The special-function ops (`Tanh`…`Div`) exist only when the SFU
+//! extension plugin is plugged — the mapper checks capability sets from the
+//! machine description, not this enum.
+
+use crate::diag::error::DiagError;
+
+/// PE operations. `eval` gives the architectural (f32 word) semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    Nop = 0,
+    /// Pass operand A through unchanged (routing PE).
+    Route,
+    Add,
+    Sub,
+    Mul,
+    /// Multiply-accumulate: `a * b + acc` (acc is the PE's local register 0).
+    Mac,
+    Neg,
+    Abs,
+    Min,
+    Max,
+    /// Bitwise ops act on the IEEE-754 bit patterns of the 32-bit word.
+    And,
+    Or,
+    Xor,
+    Not,
+    Shl,
+    Shr,
+    /// Comparisons produce 1.0 / 0.0.
+    Lt,
+    Le,
+    Eq,
+    /// Select: `if a != 0 { b } else { imm }` — with b/imm operand selects.
+    Sel,
+    /// LSU only: shared-memory read (address = a + imm).
+    Load,
+    /// LSU only: shared-memory write (address = a + imm, data = b).
+    Store,
+    // ---- special-function unit (extension plugin) ----
+    Tanh,
+    Exp,
+    Log,
+    Recip,
+    Sqrt,
+    Div,
+}
+
+/// Functional category — drives per-PE area/power accounting and
+/// capability checks in the mapper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    Control,
+    Route,
+    Alu,
+    Mul,
+    Sfu,
+    Mem,
+}
+
+impl Op {
+    pub const ALL: [Op; 27] = [
+        Op::Nop,
+        Op::Route,
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::Mac,
+        Op::Neg,
+        Op::Abs,
+        Op::Min,
+        Op::Max,
+        Op::And,
+        Op::Or,
+        Op::Xor,
+        Op::Not,
+        Op::Shl,
+        Op::Shr,
+        Op::Lt,
+        Op::Le,
+        Op::Eq,
+        Op::Sel,
+        Op::Load,
+        Op::Store,
+        Op::Tanh,
+        Op::Exp,
+        Op::Log,
+        Op::Recip,
+        Op::Sqrt,
+    ];
+
+    pub fn class(self) -> OpClass {
+        use Op::*;
+        match self {
+            Nop => OpClass::Control,
+            Route => OpClass::Route,
+            Add | Sub | Neg | Abs | Min | Max | And | Or | Xor | Not | Shl | Shr | Lt | Le
+            | Eq | Sel => OpClass::Alu,
+            Mul | Mac => OpClass::Mul,
+            Tanh | Exp | Log | Recip | Sqrt | Div => OpClass::Sfu,
+            Load | Store => OpClass::Mem,
+        }
+    }
+
+    /// Execute-stage latency in cycles (post-decode, pre-writeback).
+    pub fn latency(self) -> u32 {
+        match self.class() {
+            OpClass::Control | OpClass::Route => 1,
+            OpClass::Alu => 1,
+            OpClass::Mul => 2,
+            OpClass::Sfu => 4,
+            OpClass::Mem => 2, // plus bank-arbitration stalls at run time
+        }
+    }
+
+    /// Architectural semantics on 32-bit words viewed as f32 (bitwise ops
+    /// act on the raw bits; `acc` is PE-local register 0 for `Mac`).
+    pub fn eval(self, a: f32, b: f32, acc: f32) -> f32 {
+        use Op::*;
+        let bits = |x: f32| x.to_bits();
+        let fb = f32::from_bits;
+        match self {
+            Nop => 0.0,
+            Route => a,
+            Add => a + b,
+            Sub => a - b,
+            Mul => a * b,
+            Mac => a * b + acc,
+            Neg => -a,
+            Abs => a.abs(),
+            Min => a.min(b),
+            Max => a.max(b),
+            And => fb(bits(a) & bits(b)),
+            Or => fb(bits(a) | bits(b)),
+            Xor => fb(bits(a) ^ bits(b)),
+            Not => fb(!bits(a)),
+            Shl => fb(bits(a) << (bits(b) & 31)),
+            Shr => fb(bits(a) >> (bits(b) & 31)),
+            Lt => (a < b) as u32 as f32,
+            Le => (a <= b) as u32 as f32,
+            Eq => (a == b) as u32 as f32,
+            Sel => {
+                if a != 0.0 {
+                    b
+                } else {
+                    acc
+                }
+            }
+            Load | Store => a, // resolved by the LSU model, not here
+            Tanh => a.tanh(),
+            Exp => a.exp(),
+            Log => a.ln(),
+            Recip => 1.0 / a,
+            Sqrt => a.sqrt(),
+            Div => a / b,
+        }
+    }
+
+    fn from_u8(x: u8) -> Option<Op> {
+        use Op::*;
+        Some(match x {
+            0 => Nop,
+            1 => Route,
+            2 => Add,
+            3 => Sub,
+            4 => Mul,
+            5 => Mac,
+            6 => Neg,
+            7 => Abs,
+            8 => Min,
+            9 => Max,
+            10 => And,
+            11 => Or,
+            12 => Xor,
+            13 => Not,
+            14 => Shl,
+            15 => Shr,
+            16 => Lt,
+            17 => Le,
+            18 => Eq,
+            19 => Sel,
+            20 => Load,
+            21 => Store,
+            22 => Tanh,
+            23 => Exp,
+            24 => Log,
+            25 => Recip,
+            26 => Sqrt,
+            27 => Div,
+            _ => return None,
+        })
+    }
+}
+
+/// Operand source select for the two PE inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// Nothing connected (defaults to 0).
+    None,
+    /// Input latch fed by neighbour port `idx` (index into the PE's sorted
+    /// neighbour list — see `Topology::neighbors`).
+    Port(u8),
+    /// PE-local register file entry.
+    Reg(u8),
+    /// The config word's immediate field.
+    Imm,
+    /// Shared-register file entry (inter-schedule delivery).
+    SharedReg(u8),
+}
+
+impl Operand {
+    fn encode(self) -> u16 {
+        match self {
+            Operand::None => 0,
+            Operand::Port(i) => 0x100 | i as u16,
+            Operand::Reg(i) => 0x200 | i as u16,
+            Operand::Imm => 0x300,
+            Operand::SharedReg(i) => 0x400 | i as u16,
+        }
+    }
+
+    fn decode(x: u16) -> Option<Operand> {
+        let idx = (x & 0xFF) as u8;
+        Some(match x & 0xF00 {
+            0x000 => Operand::None,
+            0x100 => Operand::Port(idx),
+            0x200 => Operand::Reg(idx),
+            0x300 => Operand::Imm,
+            0x400 => Operand::SharedReg(idx),
+            _ => return None,
+        })
+    }
+}
+
+/// Output port selector bitmask (up to 8 neighbour ports) plus local
+/// register / shared register write enables.
+pub type PortSel = u8;
+
+/// One context-memory configuration word (128-bit encoded form).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfigWord {
+    pub op: Op,
+    pub src_a: Operand,
+    pub src_b: Operand,
+    /// Broadcast result to these neighbour output ports.
+    pub out_ports: PortSel,
+    /// Also latch result into local register `Some(idx)`.
+    pub write_reg: Option<u8>,
+    /// Also write result into shared register `Some(idx)`.
+    pub write_shared: Option<u8>,
+    /// Immediate (used by `Operand::Imm`, `Load`/`Store` offset, `Sel`).
+    pub imm: f32,
+    /// Iteration-control block: repeat this configuration for `iter_count`
+    /// data beats before the program counter advances (§IV-A.3).
+    pub iter_count: u16,
+}
+
+impl Default for ConfigWord {
+    fn default() -> Self {
+        ConfigWord {
+            op: Op::Nop,
+            src_a: Operand::None,
+            src_b: Operand::None,
+            out_ports: 0,
+            write_reg: None,
+            write_shared: None,
+            imm: 0.0,
+            iter_count: 1,
+        }
+    }
+}
+
+impl ConfigWord {
+    pub const ENCODED_BITS: u32 = 128;
+
+    /// Pack into the 128-bit context-memory layout.
+    pub fn encode(&self) -> [u32; 4] {
+        let w0 = (self.op as u8 as u32)
+            | ((self.src_a.encode() as u32) << 8)
+            | ((self.out_ports as u32) << 24);
+        let w1 = (self.src_b.encode() as u32)
+            | ((self.write_reg.map_or(0u32, |r| 0x100 | r as u32)) << 12)
+            | ((self.write_shared.map_or(0u32, |r| 0x100 | r as u32)) << 22);
+        let w2 = self.imm.to_bits();
+        let w3 = self.iter_count as u32;
+        [w0, w1, w2, w3]
+    }
+
+    /// Unpack; errors on malformed fields (fuzzed by property tests).
+    pub fn decode(words: [u32; 4]) -> Result<ConfigWord, DiagError> {
+        let bad = |m: &str| DiagError::InvalidParams(format!("config word: {m}"));
+        let op = Op::from_u8((words[0] & 0xFF) as u8).ok_or_else(|| bad("bad opcode"))?;
+        let src_a = Operand::decode(((words[0] >> 8) & 0xFFF) as u16)
+            .ok_or_else(|| bad("bad src_a"))?;
+        let out_ports = ((words[0] >> 24) & 0xFF) as u8;
+        let src_b =
+            Operand::decode((words[1] & 0xFFF) as u16).ok_or_else(|| bad("bad src_b"))?;
+        let wr = ((words[1] >> 12) & 0x3FF) as u32;
+        let write_reg = if wr & 0x100 != 0 { Some((wr & 0xFF) as u8) } else { None };
+        let ws = ((words[1] >> 22) & 0x3FF) as u32;
+        let write_shared = if ws & 0x100 != 0 { Some((ws & 0xFF) as u8) } else { None };
+        let imm = f32::from_bits(words[2]);
+        let iter_count = (words[3] & 0xFFFF) as u16;
+        Ok(ConfigWord {
+            op,
+            src_a,
+            src_b,
+            out_ports,
+            write_reg,
+            write_shared,
+            imm,
+            iter_count,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_arithmetic() {
+        assert_eq!(Op::Add.eval(2.0, 3.0, 0.0), 5.0);
+        assert_eq!(Op::Sub.eval(2.0, 3.0, 0.0), -1.0);
+        assert_eq!(Op::Mul.eval(2.0, 3.0, 0.0), 6.0);
+        assert_eq!(Op::Mac.eval(2.0, 3.0, 10.0), 16.0);
+        assert_eq!(Op::Max.eval(-1.0, 4.0, 0.0), 4.0);
+        assert_eq!(Op::Route.eval(7.5, 0.0, 0.0), 7.5);
+    }
+
+    #[test]
+    fn eval_compare_and_select() {
+        assert_eq!(Op::Lt.eval(1.0, 2.0, 0.0), 1.0);
+        assert_eq!(Op::Lt.eval(2.0, 1.0, 0.0), 0.0);
+        assert_eq!(Op::Sel.eval(1.0, 42.0, 7.0), 42.0);
+        assert_eq!(Op::Sel.eval(0.0, 42.0, 7.0), 7.0);
+    }
+
+    #[test]
+    fn eval_bitwise_on_bits() {
+        let a = f32::from_bits(0xF0F0_F0F0);
+        let b = f32::from_bits(0x0FF0_0FF0);
+        assert_eq!(Op::And.eval(a, b, 0.0).to_bits(), 0x00F0_00F0);
+        assert_eq!(Op::Xor.eval(a, b, 0.0).to_bits(), 0xFF00_FF00);
+    }
+
+    #[test]
+    fn eval_sfu() {
+        assert!((Op::Tanh.eval(0.5, 0.0, 0.0) - 0.5f32.tanh()).abs() < 1e-7);
+        assert!((Op::Exp.eval(1.0, 0.0, 0.0) - std::f32::consts::E).abs() < 1e-6);
+        assert_eq!(Op::Recip.eval(4.0, 0.0, 0.0), 0.25);
+        assert_eq!(Op::Div.eval(1.0, 8.0, 0.0), 0.125);
+    }
+
+    #[test]
+    fn classes_and_latencies() {
+        assert_eq!(Op::Add.class(), OpClass::Alu);
+        assert_eq!(Op::Mac.class(), OpClass::Mul);
+        assert_eq!(Op::Tanh.class(), OpClass::Sfu);
+        assert_eq!(Op::Load.class(), OpClass::Mem);
+        assert!(Op::Tanh.latency() > Op::Add.latency());
+    }
+
+    #[test]
+    fn config_word_roundtrip_exhaustive_ops() {
+        for (i, op) in Op::ALL.into_iter().enumerate() {
+            let cw = ConfigWord {
+                op,
+                src_a: Operand::Port((i % 8) as u8),
+                src_b: if i % 2 == 0 { Operand::Imm } else { Operand::Reg(3) },
+                out_ports: (i * 37 % 256) as u8,
+                write_reg: if i % 3 == 0 { Some(5) } else { None },
+                write_shared: if i % 4 == 0 { Some(2) } else { None },
+                imm: i as f32 * -1.5,
+                iter_count: (i * 991 % 65536) as u16,
+            };
+            let back = ConfigWord::decode(cw.encode()).unwrap();
+            assert_eq!(cw, back, "op {op:?}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        let mut w = ConfigWord::default().encode();
+        w[0] = (w[0] & !0xFF) | 0xFE;
+        assert!(ConfigWord::decode(w).is_err());
+    }
+
+    #[test]
+    fn operand_roundtrip() {
+        for o in [
+            Operand::None,
+            Operand::Port(7),
+            Operand::Reg(15),
+            Operand::Imm,
+            Operand::SharedReg(3),
+        ] {
+            assert_eq!(Operand::decode(o.encode()), Some(o));
+        }
+    }
+
+    #[test]
+    fn nan_imm_roundtrips_bitexact() {
+        let cw = ConfigWord { imm: f32::NAN, ..Default::default() };
+        let back = ConfigWord::decode(cw.encode()).unwrap();
+        assert_eq!(cw.imm.to_bits(), back.imm.to_bits());
+    }
+}

@@ -1,0 +1,22 @@
+//! WindMill architecture definition (paper §IV-A) — the Definition layer
+//! instantiated for the CGRA target.
+//!
+//! * [`params`] — the typed, mutable hardware settings ("Parameter" part of
+//!   the definition triple): PEA geometry, PE-type map, interconnect
+//!   topology, shared-memory shape, execution mode, RCA ring size.
+//! * [`isa`] — the coarse-grained PE operation set and the configuration
+//!   word format decoded by the PE's config-flow pipeline.
+//! * [`topology`] — 2D-mesh / 1-hop / torus interconnect descriptions used
+//!   by the router, the area model and the simulator alike.
+//! * [`presets`] — ready-made parameter sets, including the paper's
+//!   standard WindMill (8×8 PEA: 28 boundary LSUs around 35 GPEs + 1 CPE,
+//!   16 × 256 × 32-bit shared-memory banks, 4-RCA ring).
+
+pub mod isa;
+pub mod params;
+pub mod presets;
+pub mod topology;
+
+pub use isa::{ConfigWord, Op, Operand, PortSel};
+pub use params::{ExecMode, PeType, SharedRegMode, WindMillParams};
+pub use topology::Topology;

@@ -1,0 +1,259 @@
+//! `WindMillParams` — the mutable hardware settings of the WindMill CGRA.
+//!
+//! Everything Fig. 6 sweeps lives here: PEA geometry, PE-type mix,
+//! interconnect topology, shared-memory shape, shared-register mode,
+//! execution mode and RCA ring size. Plugins read these during elaboration
+//! and may adjust them in `create_config` (defaulting, legality clamps).
+
+use super::topology::Topology;
+use crate::diag::error::DiagError;
+
+/// Coarse-grained PE flavour at a grid position (paper §IV-A.2/3/5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeType {
+    /// General-purpose PE: full ALU data-path.
+    Gpe,
+    /// Load-store unit: boundary PE with shared-memory access (affine and
+    /// non-affine patterns) plus pass-through routing.
+    Lsu,
+    /// Controller PE: a GPE extended with RTT access that manages data and
+    /// configuration migration and launch timing (§IV-A.5).
+    Cpe,
+}
+
+/// Run-time execution mode (§IV-A.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Single-configuration-multiple-data: one configuration shared per PE
+    /// line, freeing context memory for 8× the configurations of MCMD.
+    Scmd,
+    /// Multi-configuration-multiple-data: private per-PE configurations.
+    Mcmd,
+}
+
+/// Shared-register data-delivery modes between schedules (§IV-A.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedRegMode {
+    LineShared,
+    RowShared,
+    QuadrantShared,
+    GlobalShared,
+}
+
+/// Shared-memory geometry (§IV-A.4): `banks × depth × width_bits` SRAM
+/// behind the parallel access interface.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SmemParams {
+    pub banks: usize,
+    pub depth: usize,
+    pub width_bits: u32,
+}
+
+impl SmemParams {
+    pub fn total_bits(&self) -> u64 {
+        self.banks as u64 * self.depth as u64 * self.width_bits as u64
+    }
+
+    pub fn words(&self) -> usize {
+        self.banks * self.depth
+    }
+}
+
+/// The full parameter set of one WindMill instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindMillParams {
+    /// PEA rows (including the LSU boundary ring when `lsu_ring`).
+    pub rows: usize,
+    /// PEA columns.
+    pub cols: usize,
+    /// Data-path width in bits (the paper's WindMill is 32-bit).
+    pub data_width: u32,
+    /// Interconnect topology between PEs.
+    pub topology: Topology,
+    /// Boundary ring of LSUs around inner GPEs (standard WindMill).
+    pub lsu_ring: bool,
+    /// Replace one inner GPE with the controller PE (§IV-A.5).
+    pub cpe_enabled: bool,
+    /// Include the special-function unit (tanh/exp/log/div) in GPEs —
+    /// an extension plugin; required by the RL workload.
+    pub sfu_enabled: bool,
+    /// Context-memory depth: configuration words per PE (MCMD mode).
+    pub context_depth: usize,
+    /// Execution mode.
+    pub exec_mode: ExecMode,
+    /// Shared-register delivery mode.
+    pub shared_reg_mode: SharedRegMode,
+    /// Shared registers per sharing group.
+    pub shared_regs_per_group: usize,
+    /// Shared memory geometry.
+    pub smem: SmemParams,
+    /// DMA bus width in bits (external storage <-> shared memory).
+    pub dma_width_bits: u32,
+    /// Ping-pong double buffering in shared memory (§IV-A.4 extension).
+    pub pingpong: bool,
+    /// Number of RCAs on the ring (§IV-A.1; standard is 4).
+    pub rca_count: usize,
+    /// Host register-transformation-table entries.
+    pub rtt_entries: usize,
+    /// Target clock frequency in MHz (the paper's instance: 750 MHz).
+    pub freq_mhz: f64,
+}
+
+impl WindMillParams {
+    /// PE type at grid position `(r, c)` under the current parameters.
+    pub fn pe_type_at(&self, r: usize, c: usize) -> PeType {
+        assert!(r < self.rows && c < self.cols, "({r},{c}) outside PEA");
+        let boundary =
+            r == 0 || c == 0 || r == self.rows - 1 || c == self.cols - 1;
+        if self.lsu_ring && boundary {
+            return PeType::Lsu;
+        }
+        if self.cpe_enabled && (r, c) == self.cpe_position() {
+            return PeType::Cpe;
+        }
+        PeType::Gpe
+    }
+
+    /// The CPE sits at the first inner position (top-left inner corner)
+    /// when enabled, or at (0,0) for ringless arrays.
+    pub fn cpe_position(&self) -> (usize, usize) {
+        if self.lsu_ring && self.rows > 2 && self.cols > 2 {
+            (1, 1)
+        } else {
+            (0, 0)
+        }
+    }
+
+    pub fn pe_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn count_of(&self, ty: PeType) -> usize {
+        (0..self.rows)
+            .flat_map(|r| (0..self.cols).map(move |c| (r, c)))
+            .filter(|&(r, c)| self.pe_type_at(r, c) == ty)
+            .count()
+    }
+
+    /// Configurations a PE can hold under the execution mode: SCMD shares
+    /// one configuration per line so the same context memory holds 8× more
+    /// (paper §IV-A.3).
+    pub fn effective_context_depth(&self) -> usize {
+        match self.exec_mode {
+            ExecMode::Mcmd => self.context_depth,
+            ExecMode::Scmd => self.context_depth * 8,
+        }
+    }
+
+    /// Structural legality checks (plugins call this in `create_config`).
+    pub fn validate(&self) -> Result<(), DiagError> {
+        let err = |m: String| Err(DiagError::InvalidParams(m));
+        if self.rows < 2 || self.cols < 2 {
+            return err(format!("PEA {}x{} too small (min 2x2)", self.rows, self.cols));
+        }
+        if self.lsu_ring && (self.rows < 3 || self.cols < 3) {
+            return err(format!(
+                "LSU ring needs at least 3x3 (got {}x{})",
+                self.rows, self.cols
+            ));
+        }
+        if self.smem.banks == 0 || !self.smem.banks.is_power_of_two() {
+            return err(format!("smem banks {} must be a nonzero power of two", self.smem.banks));
+        }
+        if self.smem.depth == 0 {
+            return err("smem depth must be nonzero".into());
+        }
+        if !matches!(self.data_width, 8 | 16 | 32 | 64) {
+            return err(format!("unsupported data width {}", self.data_width));
+        }
+        if self.context_depth == 0 {
+            return err("context depth must be nonzero".into());
+        }
+        if self.rca_count == 0 {
+            return err("need at least one RCA".into());
+        }
+        if self.freq_mhz <= 0.0 {
+            return err(format!("bad frequency {}", self.freq_mhz));
+        }
+        Ok(())
+    }
+
+    /// Number of LSUs with shared-memory ports (PAI requester count).
+    pub fn lsu_count(&self) -> usize {
+        self.count_of(PeType::Lsu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn standard_matches_paper_counts() {
+        let p = presets::standard();
+        // Paper §IV-A.4: 28 LSUs; 8x8 grid => perimeter 28.
+        assert_eq!(p.rows, 8);
+        assert_eq!(p.cols, 8);
+        assert_eq!(p.lsu_count(), 28);
+        assert_eq!(p.count_of(PeType::Cpe), 1);
+        assert_eq!(p.count_of(PeType::Gpe), 64 - 28 - 1);
+        // Paper §IV-A.4: 16 banks of 256 x 32 bits.
+        assert_eq!(p.smem.banks, 16);
+        assert_eq!(p.smem.depth, 256);
+        assert_eq!(p.smem.width_bits, 32);
+        assert_eq!(p.smem.total_bits(), 16 * 256 * 32);
+        assert_eq!(p.rca_count, 4);
+        assert_eq!(p.freq_mhz, 750.0);
+    }
+
+    #[test]
+    fn pe_type_map_boundary() {
+        let p = presets::standard();
+        assert_eq!(p.pe_type_at(0, 0), PeType::Lsu);
+        assert_eq!(p.pe_type_at(0, 5), PeType::Lsu);
+        assert_eq!(p.pe_type_at(7, 7), PeType::Lsu);
+        assert_eq!(p.pe_type_at(1, 1), PeType::Cpe);
+        assert_eq!(p.pe_type_at(3, 3), PeType::Gpe);
+    }
+
+    #[test]
+    fn no_ring_all_gpe_except_cpe() {
+        let mut p = presets::standard();
+        p.lsu_ring = false;
+        assert_eq!(p.count_of(PeType::Lsu), 0);
+        assert_eq!(p.count_of(PeType::Cpe), 1);
+    }
+
+    #[test]
+    fn scmd_multiplies_context() {
+        let mut p = presets::standard();
+        p.exec_mode = ExecMode::Mcmd;
+        let mcmd = p.effective_context_depth();
+        p.exec_mode = ExecMode::Scmd;
+        assert_eq!(p.effective_context_depth(), mcmd * 8);
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        let mut p = presets::standard();
+        p.rows = 1;
+        assert!(p.validate().is_err());
+
+        let mut p = presets::standard();
+        p.smem.banks = 12; // not a power of two
+        assert!(p.validate().is_err());
+
+        let mut p = presets::standard();
+        p.data_width = 24;
+        assert!(p.validate().is_err());
+
+        assert!(presets::standard().validate().is_ok());
+    }
+
+    #[test]
+    fn out_of_bounds_panics() {
+        let p = presets::standard();
+        assert!(std::panic::catch_unwind(|| p.pe_type_at(8, 0)).is_err());
+    }
+}

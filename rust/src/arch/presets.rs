@@ -1,0 +1,118 @@
+//! Ready-made WindMill parameter sets (paper §IV-B: "several WindMill CGRA
+//! presets are prepared").
+
+use super::params::{ExecMode, SharedRegMode, SmemParams, WindMillParams};
+use super::topology::Topology;
+
+/// The paper's standard WindMill instance: 8×8 PEA whose boundary ring is
+/// the 28 LSUs of §IV-A.4, one CPE, 2D-mesh, 16 × 256 × 32-bit shared
+/// memory behind the PAI, ping-pong DMA, 4-RCA ring, 750 MHz target.
+pub fn standard() -> WindMillParams {
+    WindMillParams {
+        rows: 8,
+        cols: 8,
+        data_width: 32,
+        topology: Topology::Mesh2D,
+        lsu_ring: true,
+        cpe_enabled: true,
+        sfu_enabled: true,
+        context_depth: 32,
+        exec_mode: ExecMode::Mcmd,
+        shared_reg_mode: SharedRegMode::RowShared,
+        shared_regs_per_group: 8,
+        smem: SmemParams { banks: 16, depth: 256, width_bits: 32 },
+        dma_width_bits: 128,
+        pingpong: true,
+        rca_count: 4,
+        rtt_entries: 16,
+        freq_mhz: 750.0,
+    }
+}
+
+/// Small 4×4 instance for fast tests: ring of 12 LSUs around 3 GPEs + CPE.
+pub fn small() -> WindMillParams {
+    WindMillParams {
+        rows: 4,
+        cols: 4,
+        context_depth: 16,
+        smem: SmemParams { banks: 8, depth: 128, width_bits: 32 },
+        rca_count: 1,
+        ..standard()
+    }
+}
+
+/// Large 16×16 instance for scalability sweeps.
+pub fn large() -> WindMillParams {
+    WindMillParams {
+        rows: 16,
+        cols: 16,
+        smem: SmemParams { banks: 32, depth: 512, width_bits: 32 },
+        ..standard()
+    }
+}
+
+/// A square PEA of the given edge with otherwise-standard settings
+/// (the Fig. 6a sweep generator).
+pub fn with_pea_size(edge: usize) -> WindMillParams {
+    WindMillParams { rows: edge, cols: edge, ..standard() }
+}
+
+/// Standard parameters with a different topology (Fig. 6c sweep).
+pub fn with_topology(t: Topology) -> WindMillParams {
+    WindMillParams { topology: t, ..standard() }
+}
+
+/// Standard parameters with a different shared-memory geometry.
+pub fn with_smem(banks: usize, depth: usize) -> WindMillParams {
+    WindMillParams {
+        smem: SmemParams { banks, depth, width_bits: 32 },
+        ..standard()
+    }
+}
+
+/// Look up a preset by name (CLI surface).
+pub fn by_name(name: &str) -> Option<WindMillParams> {
+    match name {
+        "standard" => Some(standard()),
+        "small" => Some(small()),
+        "large" => Some(large()),
+        _ => None,
+    }
+}
+
+pub const NAMES: [&str; 3] = ["standard", "small", "large"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for name in NAMES {
+            by_name(name).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sweep_generators_validate() {
+        for edge in [4, 8, 12, 16] {
+            with_pea_size(edge).validate().unwrap();
+        }
+        for t in Topology::ALL {
+            with_topology(t).validate().unwrap();
+        }
+        with_smem(8, 128).validate().unwrap();
+        with_smem(64, 1024).validate().unwrap();
+    }
+
+    #[test]
+    fn small_is_smaller_than_standard() {
+        assert!(small().pe_count() < standard().pe_count());
+        assert!(standard().pe_count() < large().pe_count());
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(by_name("gigantic").is_none());
+    }
+}

@@ -1,0 +1,219 @@
+//! PE interconnect topologies (§IV-A.2): 2D-mesh, 1-hop, torus.
+//!
+//! One enum serves three consumers with consistent semantics:
+//! the **router** (neighbour sets for path search), the **area model**
+//! (link counts), and the **simulator** (per-hop transfer latency).
+
+/// Interconnect topology of the PEA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// 4-neighbour mesh (N/E/S/W), no wraparound.
+    Mesh2D,
+    /// Mesh plus distance-2 express links along rows and columns.
+    OneHop,
+    /// Mesh with wraparound links in both dimensions.
+    Torus,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 3] = [Topology::Mesh2D, Topology::OneHop, Topology::Torus];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Mesh2D => "mesh2d",
+            Topology::OneHop => "1hop",
+            Topology::Torus => "torus",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "mesh2d" | "mesh" => Some(Topology::Mesh2D),
+            "1hop" | "onehop" => Some(Topology::OneHop),
+            "torus" => Some(Topology::Torus),
+            _ => None,
+        }
+    }
+
+    /// Reachable neighbours of `(r, c)` in a `rows × cols` grid, with the
+    /// hop cost of each link (express links still cost 1 cycle — that is
+    /// their point; the torus wrap likewise).
+    pub fn neighbors(
+        &self,
+        r: usize,
+        c: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Vec<((usize, usize), u32)> {
+        assert!(r < rows && c < cols);
+        let mut out: Vec<((usize, usize), u32)> = Vec::new();
+        let ri = r as isize;
+        let ci = c as isize;
+        let mesh: [(isize, isize); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
+        for (dr, dc) in mesh {
+            let (nr, nc) = (ri + dr, ci + dc);
+            if nr >= 0 && nr < rows as isize && nc >= 0 && nc < cols as isize {
+                out.push(((nr as usize, nc as usize), 1));
+            }
+        }
+        match self {
+            Topology::Mesh2D => {}
+            Topology::OneHop => {
+                let hop2: [(isize, isize); 4] = [(-2, 0), (2, 0), (0, -2), (0, 2)];
+                for (dr, dc) in hop2 {
+                    let (nr, nc) = (ri + dr, ci + dc);
+                    if nr >= 0 && nr < rows as isize && nc >= 0 && nc < cols as isize {
+                        out.push(((nr as usize, nc as usize), 1));
+                    }
+                }
+            }
+            Topology::Torus => {
+                if rows > 2 {
+                    if r == 0 {
+                        out.push(((rows - 1, c), 1));
+                    } else if r == rows - 1 {
+                        out.push(((0, c), 1));
+                    }
+                }
+                if cols > 2 {
+                    if c == 0 {
+                        out.push(((r, cols - 1), 1));
+                    } else if c == cols - 1 {
+                        out.push(((r, 0), 1));
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Maximum per-PE input degree (sizes the PE operand muxes — why the
+    /// paper finds topology a *weak* but nonzero area effect).
+    pub fn max_degree(&self) -> usize {
+        match self {
+            Topology::Mesh2D => 4,
+            Topology::OneHop => 8,
+            Topology::Torus => 4,
+        }
+    }
+
+    /// Total directed link count in a `rows × cols` grid — the interconnect
+    /// contribution to the area model.
+    pub fn link_count(&self, rows: usize, cols: usize) -> usize {
+        (0..rows)
+            .flat_map(|r| (0..cols).map(move |c| (r, c)))
+            .map(|(r, c)| self.neighbors(r, c, rows, cols).len())
+            .sum()
+    }
+
+    /// Minimum hop distance between two PEs (BFS; small grids only).
+    pub fn distance(
+        &self,
+        from: (usize, usize),
+        to: (usize, usize),
+        rows: usize,
+        cols: usize,
+    ) -> Option<u32> {
+        if from == to {
+            return Some(0);
+        }
+        let idx = |(r, c): (usize, usize)| r * cols + c;
+        let mut dist = vec![u32::MAX; rows * cols];
+        dist[idx(from)] = 0;
+        let mut queue = std::collections::VecDeque::from([from]);
+        while let Some(p) = queue.pop_front() {
+            let d = dist[idx(p)];
+            for (n, cost) in self.neighbors(p.0, p.1, rows, cols) {
+                if dist[idx(n)] == u32::MAX {
+                    dist[idx(n)] = d + cost;
+                    if n == to {
+                        return Some(d + cost);
+                    }
+                    queue.push_back(n);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_corner_has_two_neighbors() {
+        let n = Topology::Mesh2D.neighbors(0, 0, 4, 4);
+        assert_eq!(n.len(), 2);
+        assert!(n.contains(&((0, 1), 1)));
+        assert!(n.contains(&((1, 0), 1)));
+    }
+
+    #[test]
+    fn mesh_center_has_four() {
+        assert_eq!(Topology::Mesh2D.neighbors(2, 2, 5, 5).len(), 4);
+    }
+
+    #[test]
+    fn onehop_center_has_eight() {
+        assert_eq!(Topology::OneHop.neighbors(2, 2, 5, 5).len(), 8);
+    }
+
+    #[test]
+    fn torus_wraps_edges() {
+        let n = Topology::Torus.neighbors(0, 0, 4, 4);
+        assert!(n.contains(&((3, 0), 1)));
+        assert!(n.contains(&((0, 3), 1)));
+        assert_eq!(n.len(), 4);
+    }
+
+    #[test]
+    fn torus_no_double_link_on_2xn() {
+        // rows == 2: wrap would duplicate the existing mesh link.
+        let n = Topology::Torus.neighbors(0, 1, 2, 4);
+        let count_below = n.iter().filter(|((r, _), _)| *r == 1).count();
+        assert_eq!(count_below, 1);
+    }
+
+    #[test]
+    fn link_counts_ordered_by_richness() {
+        let mesh = Topology::Mesh2D.link_count(8, 8);
+        let onehop = Topology::OneHop.link_count(8, 8);
+        let torus = Topology::Torus.link_count(8, 8);
+        assert!(mesh < torus, "{mesh} vs {torus}");
+        assert!(torus < onehop, "{torus} vs {onehop}");
+        // Mesh 8x8: 2 * 2*8*7 directed links.
+        assert_eq!(mesh, 2 * 2 * 8 * 7);
+    }
+
+    #[test]
+    fn distance_mesh_is_manhattan() {
+        let t = Topology::Mesh2D;
+        assert_eq!(t.distance((0, 0), (3, 4), 8, 8), Some(7));
+        assert_eq!(t.distance((2, 2), (2, 2), 8, 8), Some(0));
+    }
+
+    #[test]
+    fn distance_onehop_shortens() {
+        let d_mesh = Topology::Mesh2D.distance((0, 0), (4, 0), 8, 8).unwrap();
+        let d_hop = Topology::OneHop.distance((0, 0), (4, 0), 8, 8).unwrap();
+        assert_eq!(d_mesh, 4);
+        assert_eq!(d_hop, 2);
+    }
+
+    #[test]
+    fn distance_torus_wraps() {
+        let d = Topology::Torus.distance((0, 0), (7, 0), 8, 8).unwrap();
+        assert_eq!(d, 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.name()), Some(t));
+        }
+        assert_eq!(Topology::parse("hypercube"), None);
+    }
+}

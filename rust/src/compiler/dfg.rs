@@ -1,0 +1,521 @@
+//! Dataflow-graph IR: what the WindMill mapper consumes.
+//!
+//! A [`Dfg`] describes **one loop nest** ("every possible computing pattern
+//! embedded in DFG" — §IV-A.2): a multi-dimensional iteration space plus a
+//! graph of per-iteration operations. Memory accesses are *affine*
+//! (base + Σ coef·idx, the LSU's affine mode) or *indirect* (address
+//! computed by another node, the non-affine mode). Loop-carried state is
+//! expressed with accumulator nodes that reset with a configurable period,
+//! which is how reductions (dot products, GEMM K-loops) map onto a spatial
+//! array.
+//!
+//! The module also contains the sequential **reference interpreter** — the
+//! golden model for the cycle-accurate simulator's numerics and the op
+//! stream for the CPU baseline model.
+
+use crate::arch::isa::Op;
+use crate::diag::error::DiagError;
+use crate::model::baseline::OpCounts;
+
+pub type NodeId = usize;
+
+/// Affine or indirect shared-memory access (LSU modes, §IV-A.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Access {
+    /// word address = `base + Σ coefs[d] · idx[d]` over the loop nest.
+    Affine { base: u32, coefs: Vec<i32> },
+    /// word address = value produced by `addr` (non-affine access).
+    Indirect { addr: NodeId },
+}
+
+/// What a node is.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// Constant (`imm`).
+    Const,
+    /// Current loop index of dimension `d`, as f32.
+    Index(usize),
+    /// Shared-memory load.
+    Load(Access),
+    /// Shared-memory store of `inputs[0]`; commits only on iterations where
+    /// `flat_i % period == period - 1` (period 1 = every iteration).
+    Store { access: Access, period: u32 },
+    /// Plain 2-input operation (`op`).
+    Compute,
+    /// Loop-carried accumulator: `state = op(state, input)` each iteration,
+    /// reset to `imm` every `reset_period` iterations. Emits the running
+    /// value every iteration.
+    Accum { reset_period: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub kind: NodeKind,
+    /// Data inputs (0–2 depending on op/kind).
+    pub inputs: Vec<NodeId>,
+    /// Immediate (constants, accumulator init, select fallback).
+    pub imm: f32,
+}
+
+/// One loop-nest dataflow kernel.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub name: String,
+    /// Iteration-space extents, innermost dimension last.
+    pub dims: Vec<u32>,
+    pub nodes: Vec<Node>,
+}
+
+impl Dfg {
+    pub fn new(name: &str, dims: Vec<u32>) -> Self {
+        Dfg { name: name.to_string(), dims, nodes: Vec::new() }
+    }
+
+    pub fn total_iters(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    // ---- builder helpers -------------------------------------------------
+
+    pub fn constant(&mut self, v: f32) -> NodeId {
+        self.push(Node { op: Op::Nop, kind: NodeKind::Const, inputs: vec![], imm: v })
+    }
+
+    pub fn index(&mut self, dim: usize) -> NodeId {
+        self.push(Node { op: Op::Nop, kind: NodeKind::Index(dim), inputs: vec![], imm: 0.0 })
+    }
+
+    pub fn load_affine(&mut self, base: u32, coefs: Vec<i32>) -> NodeId {
+        self.push(Node {
+            op: Op::Load,
+            kind: NodeKind::Load(Access::Affine { base, coefs }),
+            inputs: vec![],
+            imm: 0.0,
+        })
+    }
+
+    pub fn load_indirect(&mut self, addr: NodeId) -> NodeId {
+        self.push(Node {
+            op: Op::Load,
+            kind: NodeKind::Load(Access::Indirect { addr }),
+            inputs: vec![addr],
+            imm: 0.0,
+        })
+    }
+
+    pub fn compute(&mut self, op: Op, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Node { op, kind: NodeKind::Compute, inputs: vec![a, b], imm: 0.0 })
+    }
+
+    pub fn unary(&mut self, op: Op, a: NodeId) -> NodeId {
+        self.push(Node { op, kind: NodeKind::Compute, inputs: vec![a], imm: 0.0 })
+    }
+
+    /// `state = op(state, input)`, reset to `init` every `reset_period`.
+    pub fn accum(&mut self, op: Op, input: NodeId, init: f32, reset_period: u32) -> NodeId {
+        assert!(reset_period >= 1);
+        self.push(Node {
+            op,
+            kind: NodeKind::Accum { reset_period },
+            inputs: vec![input],
+            imm: init,
+        })
+    }
+
+    pub fn store_affine(&mut self, value: NodeId, base: u32, coefs: Vec<i32>, period: u32) -> NodeId {
+        self.push(Node {
+            op: Op::Store,
+            kind: NodeKind::Store { access: Access::Affine { base, coefs }, period },
+            inputs: vec![value],
+            imm: 0.0,
+        })
+    }
+
+    pub fn store_indirect(&mut self, value: NodeId, addr: NodeId, period: u32) -> NodeId {
+        self.push(Node {
+            op: Op::Store,
+            kind: NodeKind::Store { access: Access::Indirect { addr }, period },
+            inputs: vec![value, addr],
+            imm: 0.0,
+        })
+    }
+
+    // ---- queries ----------------------------------------------------------
+
+    pub fn stores(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i].kind, NodeKind::Store { .. }))
+            .collect()
+    }
+
+    pub fn loads(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i].kind, NodeKind::Load(_)))
+            .collect()
+    }
+
+    /// Nodes needing a memory-capable PE (LSU).
+    pub fn mem_nodes(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| {
+                matches!(self.nodes[i].kind, NodeKind::Load(_) | NodeKind::Store { .. })
+            })
+            .collect()
+    }
+
+    /// Consumers of each node (adjacency).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &src in &n.inputs {
+                out[src].push(i);
+            }
+        }
+        out
+    }
+
+    /// Structural validation: input ids in range and acyclic apart from
+    /// accumulator self-state (which is implicit, not an edge).
+    pub fn validate(&self) -> Result<(), DiagError> {
+        let err = |m: String| Err(DiagError::InvalidParams(format!("dfg `{}`: {m}", self.name)));
+        if self.dims.is_empty() || self.dims.iter().any(|&d| d == 0) {
+            return err(format!("bad dims {:?}", self.dims));
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &src in &n.inputs {
+                if src >= self.nodes.len() {
+                    return err(format!("node {i} reads out-of-range node {src}"));
+                }
+            }
+            match &n.kind {
+                NodeKind::Index(d) if *d >= self.dims.len() => {
+                    return err(format!("node {i} indexes dim {d} of {:?}", self.dims));
+                }
+                NodeKind::Load(Access::Affine { coefs, .. })
+                | NodeKind::Store { access: Access::Affine { coefs, .. }, .. }
+                    if coefs.len() != self.dims.len() =>
+                {
+                    return err(format!(
+                        "node {i} has {} affine coefs for {} dims",
+                        coefs.len(),
+                        self.dims.len()
+                    ));
+                }
+                NodeKind::Store { period, .. } if *period == 0 => {
+                    return err(format!("node {i} store period 0"));
+                }
+                _ => {}
+            }
+        }
+        if self.stores().is_empty() {
+            return err("no store nodes (kernel has no observable effect)".into());
+        }
+        // Cycle check over explicit edges (Kahn).
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for _ in &n.inputs {}
+        }
+        for n in &self.nodes {
+            for &s in &n.inputs {
+                let _ = s;
+            }
+        }
+        let cons = self.consumers();
+        for (i, n) in self.nodes.iter().enumerate() {
+            indeg[i] = n.inputs.len();
+        }
+        let mut q: Vec<NodeId> = (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = q.pop() {
+            seen += 1;
+            for &c in &cons[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    q.push(c);
+                }
+            }
+        }
+        if seen != self.nodes.len() {
+            return err("cycle through explicit data edges".into());
+        }
+        Ok(())
+    }
+
+    /// Dynamic op counts over the whole iteration space (CPU baseline).
+    pub fn op_counts(&self) -> OpCounts {
+        let iters = self.total_iters();
+        let mut c = OpCounts::default();
+        for n in &self.nodes {
+            match n.kind {
+                NodeKind::Const | NodeKind::Index(_) => {}
+                _ => c.add_op(n.op, iters),
+            }
+        }
+        c
+    }
+
+    /// Words of shared memory touched per full execution (DMA sizing):
+    /// (loads_per_iter · iters, stores committed).
+    pub fn traffic_words(&self) -> (u64, u64) {
+        let iters = self.total_iters();
+        let loads = self.loads().len() as u64 * iters;
+        let stores: u64 = self
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.kind {
+                NodeKind::Store { period, .. } => Some(iters / *period as u64),
+                _ => None,
+            })
+            .sum();
+        (loads, stores)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference interpreter (golden model)
+// ---------------------------------------------------------------------------
+
+/// Execute the DFG sequentially against a shared-memory image. Returns the
+/// final memory. This is the semantic definition the cycle-accurate
+/// simulator must match bit-for-bit (same f32 op order).
+pub fn interpret(dfg: &Dfg, mem: &mut Vec<f32>) -> Result<(), DiagError> {
+    dfg.validate()?;
+    let n = dfg.nodes.len();
+    // Topological order over explicit edges.
+    let cons = dfg.consumers();
+    let mut indeg: Vec<usize> = dfg.nodes.iter().map(|x| x.inputs.len()).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut q: std::collections::VecDeque<NodeId> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    while let Some(i) = q.pop_front() {
+        order.push(i);
+        for &c in &cons[i] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                q.push_back(c);
+            }
+        }
+    }
+
+    let mut acc_state: Vec<f32> = dfg.nodes.iter().map(|x| x.imm).collect();
+    let mut value = vec![0.0f32; n];
+    let dims = &dfg.dims;
+    let mut idx = vec![0u32; dims.len()];
+    let total = dfg.total_iters();
+
+    let addr_of = |access: &Access, idx: &[u32], value: &[f32]| -> usize {
+        match access {
+            Access::Affine { base, coefs } => {
+                let mut a = *base as i64;
+                for (d, &co) in coefs.iter().enumerate() {
+                    a += co as i64 * idx[d] as i64;
+                }
+                a as usize
+            }
+            Access::Indirect { addr } => value[*addr] as usize,
+        }
+    };
+
+    for flat in 0..total {
+        for &i in &order {
+            let node = &dfg.nodes[i];
+            let a = node.inputs.first().map(|&s| value[s]).unwrap_or(0.0);
+            let b = node.inputs.get(1).map(|&s| value[s]).unwrap_or(0.0);
+            value[i] = match &node.kind {
+                NodeKind::Const => node.imm,
+                NodeKind::Index(d) => idx[*d] as f32,
+                NodeKind::Load(access) => {
+                    let addr = addr_of(access, &idx, &value);
+                    *mem.get(addr).ok_or_else(|| {
+                        DiagError::InvalidParams(format!(
+                            "dfg `{}`: load OOB addr {addr} (mem {})",
+                            dfg.name,
+                            mem.len()
+                        ))
+                    })?
+                }
+                NodeKind::Compute => node.op.eval(a, b, node.imm),
+                NodeKind::Accum { reset_period } => {
+                    let phase = flat % *reset_period as u64;
+                    if phase == 0 {
+                        acc_state[i] = node.imm;
+                    }
+                    // state = op(input, state_as_acc) — Mac: a*b+acc needs
+                    // two inputs; Add-accum: state + a.
+                    let st = acc_state[i];
+                    let newv = match node.op {
+                        Op::Mac => node.op.eval(a, b, st),
+                        _ => node.op.eval(st, a, 0.0),
+                    };
+                    acc_state[i] = newv;
+                    newv
+                }
+                NodeKind::Store { access, period } => {
+                    let phase = flat % *period as u64;
+                    if phase == *period as u64 - 1 {
+                        let addr = addr_of(access, &idx, &value);
+                        if addr >= mem.len() {
+                            return Err(DiagError::InvalidParams(format!(
+                                "dfg `{}`: store OOB addr {addr} (mem {})",
+                                dfg.name,
+                                mem.len()
+                            )));
+                        }
+                        mem[addr] = a;
+                    }
+                    a
+                }
+            };
+        }
+        // Odometer advance (innermost last).
+        for d in (0..dims.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// out[i] = x[i] + y[i] over 8 elements.
+    fn vec_add() -> Dfg {
+        let mut d = Dfg::new("vadd", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(8, vec![1]);
+        let s = d.compute(Op::Add, x, y);
+        d.store_affine(s, 16, vec![1], 1);
+        d
+    }
+
+    /// dot = Σ x[i]·y[i] over 8 elements → mem[16].
+    fn dot8() -> Dfg {
+        let mut d = Dfg::new("dot8", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(8, vec![1]);
+        let m = d.compute(Op::Mul, x, y);
+        let acc = d.accum(Op::Add, m, 0.0, 8);
+        d.store_affine(acc, 16, vec![0], 8);
+        d
+    }
+
+    #[test]
+    fn vec_add_interprets() {
+        let d = vec_add();
+        d.validate().unwrap();
+        let mut mem: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        interpret(&d, &mut mem).unwrap();
+        for i in 0..8 {
+            assert_eq!(mem[16 + i], i as f32 + (8 + i) as f32);
+        }
+    }
+
+    #[test]
+    fn dot_product_accumulates_and_stores_once() {
+        let d = dot8();
+        let mut mem = vec![0.0f32; 17];
+        for i in 0..8 {
+            mem[i] = (i + 1) as f32;
+            mem[8 + i] = 2.0;
+        }
+        interpret(&d, &mut mem).unwrap();
+        assert_eq!(mem[16], 2.0 * (1..=8).sum::<u32>() as f32);
+    }
+
+    #[test]
+    fn gemm_2d_nest_with_reset() {
+        // C[m,n] = Σ_k A[m,k]·B[k,n] for 2x2x2, A@0 B@4 C@8.
+        let mut d = Dfg::new("gemm2", vec![2, 2, 2]);
+        let a = d.load_affine(0, vec![2, 0, 1]);
+        let b = d.load_affine(4, vec![0, 1, 2]);
+        let m = d.compute(Op::Mul, a, b);
+        let acc = d.accum(Op::Add, m, 0.0, 2);
+        d.store_affine(acc, 8, vec![2, 1, 0], 2);
+        let mut mem = vec![0.0f32; 12];
+        // A = [[1,2],[3,4]], B = [[5,6],[7,8]].
+        mem[..8].copy_from_slice(&[1., 2., 3., 4., 5., 6., 7., 8.]);
+        interpret(&d, &mut mem).unwrap();
+        assert_eq!(&mem[8..12], &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn indirect_load_gather() {
+        // out[i] = x[perm[i]]: perm@0 (as f32 addrs), x@4, out@8, 4 elems.
+        let mut d = Dfg::new("gather", vec![4]);
+        let pidx = d.load_affine(0, vec![1]);
+        let four = d.constant(4.0);
+        let addr = d.compute(Op::Add, pidx, four);
+        let x = d.load_indirect(addr);
+        d.store_affine(x, 8, vec![1], 1);
+        let mut mem = vec![0.0f32; 12];
+        mem[..4].copy_from_slice(&[3., 2., 1., 0.]);
+        mem[4..8].copy_from_slice(&[10., 11., 12., 13.]);
+        interpret(&d, &mut mem).unwrap();
+        assert_eq!(&mem[8..12], &[13., 12., 11., 10.]);
+    }
+
+    #[test]
+    fn index_node_and_unary() {
+        // out[i] = tanh(i).
+        let mut d = Dfg::new("tanh-ramp", vec![4]);
+        let i = d.index(0);
+        let t = d.unary(Op::Tanh, i);
+        d.store_affine(t, 0, vec![1], 1);
+        let mut mem = vec![0.0f32; 4];
+        interpret(&d, &mut mem).unwrap();
+        for k in 0..4 {
+            assert!((mem[k] - (k as f32).tanh()).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn validation_catches_problems() {
+        let mut d = Dfg::new("bad", vec![4]);
+        let x = d.load_affine(0, vec![1]);
+        d.store_affine(x, 0, vec![1, 1], 1); // wrong coef arity
+        assert!(d.validate().is_err());
+
+        let d2 = Dfg::new("empty", vec![4]);
+        assert!(d2.validate().is_err()); // no stores
+
+        let mut d3 = Dfg::new("badidx", vec![4]);
+        let i = d3.index(2); // dim out of range
+        d3.store_affine(i, 0, vec![1], 1);
+        assert!(d3.validate().is_err());
+    }
+
+    #[test]
+    fn oob_load_is_error_not_panic() {
+        let mut d = Dfg::new("oob", vec![4]);
+        let x = d.load_affine(100, vec![1]);
+        d.store_affine(x, 0, vec![1], 1);
+        let mut mem = vec![0.0f32; 8];
+        assert!(interpret(&d, &mut mem).is_err());
+    }
+
+    #[test]
+    fn op_counts_scale_with_iters() {
+        let c = dot8().op_counts();
+        assert_eq!(c.mul, 8); // Mul
+        assert_eq!(c.alu, 8); // Add accumulator
+        assert_eq!(c.mem, 24); // 2 loads + 1 store node x 8 iters
+    }
+
+    #[test]
+    fn traffic_accounts_store_period() {
+        let (loads, stores) = dot8().traffic_words();
+        assert_eq!(loads, 16);
+        assert_eq!(stores, 1);
+    }
+}

@@ -1,0 +1,301 @@
+//! Placement: assign DFG nodes to PEs.
+//!
+//! Two-phase: a greedy constructive pass (topological order, each node on
+//! the legal PE closest to its already-placed producers), then a
+//! simulated-annealing improvement pass over random swap/move proposals.
+//! Legality: memory nodes need `OpClass::Mem` PEs (the LSU ring), compute
+//! nodes need a PE whose capability set covers their op class, and every
+//! node gets a PE to itself (one live configuration per PE per schedule).
+
+use std::collections::HashMap;
+
+use crate::arch::isa::{Op, OpClass};
+use crate::diag::error::DiagError;
+use crate::sim::machine::MachineDesc;
+use crate::util::Rng;
+
+use super::dfg::{Dfg, NodeKind};
+
+pub type Coord = (usize, usize);
+
+/// Capability class a node requires from its PE.
+pub fn required_class(dfg: &Dfg, id: usize) -> OpClass {
+    let n = &dfg.nodes[id];
+    match &n.kind {
+        NodeKind::Load(_) | NodeKind::Store { .. } => OpClass::Mem,
+        NodeKind::Const | NodeKind::Index(_) => OpClass::Route,
+        NodeKind::Compute | NodeKind::Accum { .. } => match n.op {
+            Op::Nop => OpClass::Route,
+            op => op.class(),
+        },
+    }
+}
+
+fn distance(m: &MachineDesc, a: Coord, b: Coord) -> u32 {
+    m.topology
+        .expect("machine has topology")
+        .distance(a, b, m.rows, m.cols)
+        .unwrap_or(u32::MAX / 4)
+}
+
+/// Total routed-distance cost of a placement.
+pub fn cost(dfg: &Dfg, m: &MachineDesc, place: &[Coord]) -> u64 {
+    let mut total = 0u64;
+    for (i, n) in dfg.nodes.iter().enumerate() {
+        for &src in &n.inputs {
+            total += distance(m, place[src], place[i]) as u64;
+        }
+    }
+    total
+}
+
+/// Greedy + annealing placement. Deterministic for a given seed.
+pub fn place(dfg: &Dfg, m: &MachineDesc, rng: &mut Rng) -> Result<Vec<Coord>, DiagError> {
+    let n = dfg.nodes.len();
+    // Candidate PEs per class.
+    let mut class_pes: HashMap<OpClass, Vec<Coord>> = HashMap::new();
+    for class in [OpClass::Mem, OpClass::Alu, OpClass::Mul, OpClass::Sfu, OpClass::Route, OpClass::Control] {
+        class_pes.insert(class, m.pes_with(class));
+    }
+    // Feasibility: enough PEs per class (nodes are exclusive).
+    let mut demand: HashMap<OpClass, usize> = HashMap::new();
+    for i in 0..n {
+        *demand.entry(required_class(dfg, i)).or_insert(0) += 1;
+    }
+    if n > m.rows * m.cols {
+        return Err(DiagError::InvalidParams(format!(
+            "dfg `{}`: {} nodes exceed {} PEs — tile the workload",
+            dfg.name,
+            n,
+            m.rows * m.cols
+        )));
+    }
+    for (class, need) in &demand {
+        let have = class_pes.get(class).map_or(0, Vec::len);
+        if *need > have {
+            return Err(DiagError::InvalidParams(format!(
+                "dfg `{}`: needs {need} PEs with {class:?} but the machine has {have}",
+                dfg.name
+            )));
+        }
+    }
+
+    // Topological order (explicit edges are acyclic post-validate).
+    let cons = dfg.consumers();
+    let mut indeg: Vec<usize> = dfg.nodes.iter().map(|x| x.inputs.len()).collect();
+    let mut topo = Vec::with_capacity(n);
+    let mut q: std::collections::VecDeque<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    while let Some(i) = q.pop_front() {
+        topo.push(i);
+        for &c in &cons[i] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                q.push_back(c);
+            }
+        }
+    }
+
+    // Greedy constructive.
+    let mut place = vec![(usize::MAX, usize::MAX); n];
+    let mut occupied: HashMap<Coord, usize> = HashMap::new();
+    for &i in &topo {
+        let class = required_class(dfg, i);
+        let candidates = &class_pes[&class];
+        let best = candidates
+            .iter()
+            .filter(|c| !occupied.contains_key(c))
+            .min_by_key(|&&c| {
+                let mut d = 0u64;
+                for &src in &dfg.nodes[i].inputs {
+                    if place[src].0 != usize::MAX {
+                        d += distance(m, place[src], c) as u64;
+                    }
+                }
+                // Deterministic tiebreak by coordinate.
+                (d, c.0, c.1)
+            })
+            .copied()
+            .ok_or_else(|| {
+                DiagError::InvalidParams(format!(
+                    "dfg `{}`: ran out of {class:?}-capable PEs",
+                    dfg.name
+                ))
+            })?;
+        place[i] = best;
+        occupied.insert(best, i);
+    }
+
+    // Annealing improvement: swap two nodes of the same class, or move a
+    // node to a free legal PE. Budget scales with problem size.
+    let mut cur_cost = cost(dfg, m, &place);
+    let budget = 200 + 40 * n;
+    let mut temp = (cur_cost as f64 / n.max(1) as f64).max(1.0);
+    for step in 0..budget {
+        if n < 2 {
+            break;
+        }
+        let i = rng.range(0, n);
+        let class_i = required_class(dfg, i);
+        let proposal: Option<(usize, Option<usize>, Coord)> = if rng.bool(0.5) {
+            //
+
+            // Swap with another node of the same class.
+            let peers: Vec<usize> =
+                (0..n).filter(|&j| j != i && required_class(dfg, j) == class_i).collect();
+            if peers.is_empty() {
+                None
+            } else {
+                let j = *rng.choose(&peers);
+                Some((i, Some(j), place[j]))
+            }
+        } else {
+            // Move to a free legal PE.
+            let free: Vec<Coord> = class_pes[&class_i]
+                .iter()
+                .filter(|c| !occupied.contains_key(*c))
+                .copied()
+                .collect();
+            if free.is_empty() {
+                None
+            } else {
+                Some((i, None, *rng.choose(&free)))
+            }
+        };
+        let Some((i, j, target)) = proposal else { continue };
+        let old_i = place[i];
+        // Apply.
+        place[i] = target;
+        if let Some(j) = j {
+            place[j] = old_i;
+        }
+        let new_cost = cost(dfg, m, &place);
+        let accept = new_cost <= cur_cost
+            || rng.f64() < (-((new_cost - cur_cost) as f64) / temp).exp();
+        if accept {
+            // Commit occupancy.
+            occupied.remove(&old_i);
+            if let Some(j) = j {
+                occupied.insert(old_i, j);
+            }
+            occupied.insert(target, i);
+            cur_cost = new_cost;
+        } else {
+            // Revert.
+            place[i] = old_i;
+            if let Some(j) = j {
+                place[j] = target;
+            }
+        }
+        if step % 50 == 49 {
+            temp *= 0.7;
+        }
+    }
+    Ok(place)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::plugins::elaborate;
+
+    fn machine() -> MachineDesc {
+        elaborate(presets::standard()).unwrap().artifact
+    }
+
+    fn dot8() -> Dfg {
+        let mut d = Dfg::new("dot8", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(8, vec![1]);
+        let mu = d.compute(Op::Mul, x, y);
+        let acc = d.accum(Op::Add, mu, 0.0, 8);
+        d.store_affine(acc, 16, vec![0], 8);
+        d
+    }
+
+    #[test]
+    fn placement_is_legal() {
+        let m = machine();
+        let d = dot8();
+        let p = place(&d, &m, &mut Rng::new(1)).unwrap();
+        assert_eq!(p.len(), d.nodes.len());
+        // Exclusive PEs.
+        let mut seen = std::collections::HashSet::new();
+        for &c in &p {
+            assert!(seen.insert(c), "PE reused: {c:?}");
+        }
+        // Capability legality.
+        for (i, &c) in p.iter().enumerate() {
+            let class = required_class(&d, i);
+            assert!(m.pe(c.0, c.1).caps.contains(&class), "node {i} on {c:?}");
+        }
+    }
+
+    #[test]
+    fn mem_nodes_land_on_lsus() {
+        use crate::arch::params::PeType;
+        let m = machine();
+        let d = dot8();
+        let p = place(&d, &m, &mut Rng::new(2)).unwrap();
+        for id in d.mem_nodes() {
+            let (r, c) = p[id];
+            assert_eq!(m.pe(r, c).ty, PeType::Lsu);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let m = machine();
+        let d = dot8();
+        let a = place(&d, &m, &mut Rng::new(7)).unwrap();
+        let b = place(&d, &m, &mut Rng::new(7)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn too_many_nodes_rejected() {
+        let m = elaborate(presets::small()).unwrap().artifact; // 4x4
+        let mut d = Dfg::new("big", vec![4]);
+        let x = d.load_affine(0, vec![1]);
+        let mut cur = x;
+        for _ in 0..20 {
+            cur = d.unary(Op::Add, cur);
+        }
+        d.store_affine(cur, 4, vec![1], 1);
+        let err = place(&d, &m, &mut Rng::new(1)).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("exceed") || err.to_string().contains("needs"));
+    }
+
+    #[test]
+    fn sfu_node_requires_sfu_pe() {
+        let mut p = presets::standard();
+        p.sfu_enabled = false;
+        let m = elaborate(p).unwrap().artifact;
+        let mut d = Dfg::new("tanh", vec![4]);
+        let x = d.load_affine(0, vec![1]);
+        let t = d.unary(Op::Tanh, x);
+        d.store_affine(t, 4, vec![1], 1);
+        let err = place(&d, &m, &mut Rng::new(1)).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("Sfu"), "{err}");
+    }
+
+    #[test]
+    fn annealing_does_not_break_legality() {
+        // Larger graph to exercise swaps/moves.
+        let m = machine();
+        let mut d = Dfg::new("chain", vec![16]);
+        let mut cur = d.load_affine(0, vec![1]);
+        for k in 0..12 {
+            let c = d.constant(k as f32);
+            cur = d.compute(if k % 2 == 0 { Op::Add } else { Op::Mul }, cur, c);
+        }
+        d.store_affine(cur, 32, vec![1], 1);
+        let p = place(&d, &m, &mut Rng::new(3)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for (i, &c) in p.iter().enumerate() {
+            assert!(seen.insert(c));
+            assert!(m.pe(c.0, c.1).caps.contains(&required_class(&d, i)));
+        }
+    }
+}

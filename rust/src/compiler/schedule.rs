@@ -1,0 +1,351 @@
+//! Initiation-interval and context-memory analysis of a mapped kernel.
+//!
+//! The steady-state throughput of a spatially-mapped loop is one iteration
+//! per II cycles, where II is bound by:
+//!
+//! * **memory**: the PAI grants each bank one access per cycle, so the
+//!   busiest bank's accesses-per-iteration floor the II;
+//! * **recurrence**: a loop-carried accumulator cannot start iteration
+//!   i+1's update before iteration i's completes (its op latency);
+//! * **routing**: pass-through PEs forward at most
+//!   [`super::route::ROUTE_SLOTS_PER_PE`] words per cycle.
+//!
+//! The same pass checks the kernel against the context memory (does the
+//! per-PE configuration fit?) and against SCMD line-sharing legality
+//! (§IV-A.3): SCMD re-uses one configuration across a PE line, which is
+//! only legal if every mapped PE on a line carries an identical word.
+
+use std::collections::HashMap;
+
+use crate::arch::params::ExecMode;
+use crate::diag::error::DiagError;
+use crate::sim::machine::MachineDesc;
+
+use super::dfg::{Access, Dfg, NodeKind};
+use super::place::Coord;
+use super::route::Routes;
+
+/// Scheduling analysis result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub ii_mem: u32,
+    pub ii_rec: u32,
+    pub ii_route: u32,
+    /// Steady-state initiation interval (max of the components).
+    pub ii: u32,
+    /// Configuration words required on the busiest PE.
+    pub ctx_words_needed: usize,
+    /// Whether the kernel is legal under SCMD line sharing.
+    pub scmd_compatible: bool,
+    /// Pipeline fill depth (longest placed+routed dependence chain).
+    pub depth: u32,
+}
+
+/// Accesses per iteration against each bank, assuming word-interleaved
+/// banking (`addr % banks`). Affine accesses with innermost coefficient 1
+/// rotate across banks (conflict-free); coefficient 0 (scalars) or bank
+/// strides pin a bank.
+fn bank_pressure(dfg: &Dfg, banks: usize) -> u32 {
+    let mut per_bank: HashMap<usize, f64> = HashMap::new();
+    let mut rotating = 0.0f64;
+    for n in &dfg.nodes {
+        let access = match &n.kind {
+            NodeKind::Load(a) => Some(a),
+            NodeKind::Store { access, period } => {
+                // A store committing every `period` iterations costs 1/period.
+                let w = 1.0 / *period as f64;
+                match access {
+                    Access::Affine { base, coefs } => {
+                        let innermost = coefs.last().copied().unwrap_or(0);
+                        if innermost % banks as i32 != 0 {
+                            rotating += w;
+                        } else {
+                            *per_bank.entry(*base as usize % banks).or_insert(0.0) += w;
+                        }
+                    }
+                    Access::Indirect { .. } => rotating += w,
+                }
+                None
+            }
+            _ => None,
+        };
+        if let Some(a) = access {
+            match a {
+                Access::Affine { base, coefs } => {
+                    let innermost = coefs.last().copied().unwrap_or(0);
+                    if innermost % banks as i32 != 0 {
+                        rotating += 1.0;
+                    } else {
+                        *per_bank.entry(*base as usize % banks).or_insert(0.0) += 1.0;
+                    }
+                }
+                Access::Indirect { .. } => rotating += 1.0,
+            }
+        }
+    }
+    // Rotating streams spread evenly; pinned streams stack on their bank.
+    let spread = rotating / banks as f64;
+    let worst_pinned = per_bank.values().copied().fold(0.0f64, f64::max);
+    (worst_pinned + spread).ceil().max(1.0) as u32
+}
+
+/// Longest dependence chain in cycles (op latencies + route hops).
+fn pipeline_depth(dfg: &Dfg, routes: &Routes) -> u32 {
+    let n = dfg.nodes.len();
+    let mut depth = vec![0u32; n];
+    // Topological order (validate() guarantees acyclic explicit edges).
+    let cons = dfg.consumers();
+    let mut indeg: Vec<usize> = dfg.nodes.iter().map(|x| x.inputs.len()).collect();
+    let mut q: std::collections::VecDeque<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    while let Some(i) = q.pop_front() {
+        let lat = dfg.nodes[i].op.latency();
+        for &c in &cons[i] {
+            let hops = routes.for_edge(i, c).map(|r| r.hops()).unwrap_or(0);
+            depth[c] = depth[c].max(depth[i] + lat + hops);
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                q.push_back(c);
+            }
+        }
+    }
+    depth.iter().copied().max().unwrap_or(0)
+}
+
+/// Analyze a placed+routed kernel on a machine.
+pub fn analyze(
+    dfg: &Dfg,
+    place: &[Coord],
+    routes: &Routes,
+    m: &MachineDesc,
+) -> Result<Schedule, DiagError> {
+    let banks = m.smem.as_ref().map(|s| s.banks).unwrap_or(1);
+    let ii_mem = bank_pressure(dfg, banks);
+    let ii_rec = dfg
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.kind, NodeKind::Accum { .. }))
+        .map(|n| n.op.latency())
+        .max()
+        .unwrap_or(1);
+    let ii_route = routes.route_ii();
+    let ii = ii_mem.max(ii_rec).max(ii_route).max(1);
+
+    // Context usage: one steady-state word per mapped node PE, plus one
+    // route word per pass-through use.
+    let mut words: HashMap<Coord, usize> = HashMap::new();
+    for &c in place {
+        *words.entry(c).or_insert(0) += 1;
+    }
+    for (&c, &load) in &routes.through_load {
+        *words.entry(c).or_insert(0) += load as usize;
+    }
+    let ctx_words_needed = words.values().copied().max().unwrap_or(0);
+    if ctx_words_needed > m.context_depth {
+        return Err(DiagError::InvalidParams(format!(
+            "dfg `{}`: needs {ctx_words_needed} context words/PE but machine holds {}",
+            dfg.name, m.context_depth
+        )));
+    }
+
+    // SCMD legality: every occupied PE row must be op-homogeneous.
+    let mut row_ops: HashMap<usize, &'static str> = HashMap::new();
+    let mut scmd_compatible = true;
+    for (i, &(r, _)) in place.iter().enumerate() {
+        let tag = op_tag(dfg, i);
+        match row_ops.get(&r) {
+            None => {
+                row_ops.insert(r, tag);
+            }
+            Some(&prev) if prev == tag => {}
+            Some(_) => {
+                scmd_compatible = false;
+            }
+        }
+    }
+    if m.exec_mode == Some(ExecMode::Scmd) && !scmd_compatible {
+        return Err(DiagError::InvalidParams(format!(
+            "dfg `{}`: not SCMD-compatible (heterogeneous ops within a PE line); use MCMD",
+            dfg.name
+        )));
+    }
+
+    Ok(Schedule {
+        ii_mem,
+        ii_rec,
+        ii_route,
+        ii,
+        ctx_words_needed,
+        scmd_compatible,
+        depth: pipeline_depth(dfg, routes),
+    })
+}
+
+fn op_tag(dfg: &Dfg, i: usize) -> &'static str {
+    match &dfg.nodes[i].kind {
+        NodeKind::Const => "const",
+        NodeKind::Index(_) => "index",
+        NodeKind::Load(_) => "load",
+        NodeKind::Store { .. } => "store",
+        NodeKind::Compute | NodeKind::Accum { .. } => {
+            // Static str per op via match (Op is Copy).
+            op_name(dfg.nodes[i].op)
+        }
+    }
+}
+
+fn op_name(op: crate::arch::isa::Op) -> &'static str {
+    use crate::arch::isa::Op::*;
+    match op {
+        Nop => "nop",
+        Route => "route",
+        Add => "add",
+        Sub => "sub",
+        Mul => "mul",
+        Mac => "mac",
+        Neg => "neg",
+        Abs => "abs",
+        Min => "min",
+        Max => "max",
+        And => "and",
+        Or => "or",
+        Xor => "xor",
+        Not => "not",
+        Shl => "shl",
+        Shr => "shr",
+        Lt => "lt",
+        Le => "le",
+        Eq => "eq",
+        Sel => "sel",
+        Load => "load",
+        Store => "store",
+        Tanh => "tanh",
+        Exp => "exp",
+        Log => "log",
+        Recip => "recip",
+        Sqrt => "sqrt",
+        Div => "div",
+    }
+}
+
+/// Estimated cycles for the whole kernel: fill + II·(iters−1) + drain.
+pub fn estimated_cycles(sched: &Schedule, total_iters: u64) -> u64 {
+    sched.depth as u64 + sched.ii as u64 * total_iters.saturating_sub(1) + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::isa::Op;
+    use crate::arch::presets;
+    use crate::compiler::{place::place, route::route};
+    use crate::plugins::elaborate;
+    use crate::util::Rng;
+
+    fn analyzed(dfg: &Dfg) -> Schedule {
+        let m = elaborate(presets::standard()).unwrap().artifact;
+        let p = place(dfg, &m, &mut Rng::new(1)).unwrap();
+        let r = route(dfg, &p, &m).unwrap();
+        analyze(dfg, &p, &r, &m).unwrap()
+    }
+
+    fn dot(n: u32) -> Dfg {
+        let mut d = Dfg::new("dot", vec![n]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(n, vec![1]);
+        let mu = d.compute(Op::Mul, x, y);
+        let acc = d.accum(Op::Add, mu, 0.0, n);
+        d.store_affine(acc, 2 * n, vec![0], n);
+        d
+    }
+
+    #[test]
+    fn dot_ii_is_small() {
+        let s = analyzed(&dot(64));
+        assert!(s.ii <= 2, "{s:?}");
+        assert!(s.depth >= 3);
+        assert_eq!(s.ii_rec, 1); // Add accumulator: 1-cycle latency
+    }
+
+    #[test]
+    fn mac_recurrence_bounds_ii() {
+        let mut d = Dfg::new("macrec", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(16, vec![1]);
+        let acc = d.accum(Op::Mac, x, 0.0, 16);
+        // Mac needs two inputs: x and y.
+        d.nodes[acc].inputs = vec![x, y];
+        d.store_affine(acc, 32, vec![0], 16);
+        let s = analyzed(&d);
+        assert_eq!(s.ii_rec, 2); // Mul-class latency
+        assert!(s.ii >= 2);
+    }
+
+    #[test]
+    fn pinned_bank_raises_mem_ii() {
+        // 20 scalar loads all at base 0 (bank 0) → heavy pinned pressure.
+        let mut d = Dfg::new("pinned", vec![8]);
+        let mut acc = d.load_affine(0, vec![0]);
+        for _ in 0..9 {
+            let l = d.load_affine(0, vec![0]);
+            acc = d.compute(Op::Add, acc, l);
+        }
+        d.store_affine(acc, 1, vec![0], 1);
+        let s = analyzed(&d);
+        assert!(s.ii_mem >= 10, "{s:?}");
+    }
+
+    #[test]
+    fn rotating_streams_spread_banks() {
+        let s = analyzed(&dot(64));
+        assert_eq!(s.ii_mem, 1); // 2 unit-stride loads across 16 banks
+    }
+
+    #[test]
+    fn estimated_cycles_formula() {
+        let s = Schedule {
+            ii_mem: 1,
+            ii_rec: 1,
+            ii_route: 1,
+            ii: 2,
+            ctx_words_needed: 1,
+            scmd_compatible: false,
+            depth: 10,
+        };
+        assert_eq!(estimated_cycles(&s, 100), 10 + 2 * 99 + 4);
+    }
+
+    #[test]
+    fn scmd_rejects_heterogeneous_kernel() {
+        use crate::arch::params::ExecMode;
+        let mut params = presets::standard();
+        params.exec_mode = ExecMode::Scmd;
+        let m = elaborate(params).unwrap().artifact;
+        let d = dot(32);
+        let p = place(&d, &m, &mut Rng::new(1)).unwrap();
+        let r = route(&d, &p, &m).unwrap();
+        // dot places loads and mul/acc in a way that shares rows.
+        let res = analyze(&d, &p, &r, &m);
+        // Either legitimately line-homogeneous (rare) or an SCMD error.
+        if let Err(e) = res {
+            assert!(e.to_string().contains("SCMD"));
+        }
+    }
+
+    #[test]
+    fn context_overflow_rejected() {
+        let mut params = presets::standard();
+        params.context_depth = 1;
+        let m = elaborate(params).unwrap().artifact;
+        // A graph with heavy pass-through congestion on few PEs could
+        // exceed 1 word/PE only via routing; mapped nodes alone need 1.
+        let d = dot(16);
+        let p = place(&d, &m, &mut Rng::new(1)).unwrap();
+        let r = route(&d, &p, &m).unwrap();
+        let res = analyze(&d, &p, &r, &m);
+        // With depth 1 any through-routed PE overflows; accept either.
+        if let Err(e) = res {
+            assert!(e.to_string().contains("context"));
+        }
+    }
+}

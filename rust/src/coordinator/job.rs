@@ -1,0 +1,270 @@
+//! Job definitions: one job = one workload on one WindMill configuration,
+//! carried through generate → compile → simulate → baseline.
+
+use crate::arch::params::WindMillParams;
+use crate::compiler::{compile, Mapping};
+use crate::diag::error::DiagError;
+use crate::model::baseline::{CpuModel, GpuModel};
+use crate::plugins;
+use crate::sim::machine::MachineDesc;
+use crate::sim::task::{run_task, Phase, Task};
+use crate::util::Rng;
+use crate::workloads::{linalg, rl, signal, Layout};
+
+/// Workload selector (CLI surface + bench harnesses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    Saxpy { n: u32 },
+    Dot { n: u32 },
+    Gemm { m: u32, n: u32, k: u32 },
+    Fir { n: u32, taps: u32 },
+    Conv3x3 { h: u32, w: u32 },
+    RlStep,
+}
+
+impl Workload {
+    pub fn name(&self) -> String {
+        match self {
+            Workload::Saxpy { n } => format!("saxpy-{n}"),
+            Workload::Dot { n } => format!("dot-{n}"),
+            Workload::Gemm { m, n, k } => format!("gemm-{m}x{n}x{k}"),
+            Workload::Fir { n, taps } => format!("fir-{n}t{taps}"),
+            Workload::Conv3x3 { h, w } => format!("conv3x3-{h}x{w}"),
+            Workload::RlStep => "rl-step".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "saxpy" => Some(Workload::Saxpy { n: 256 }),
+            "dot" => Some(Workload::Dot { n: 256 }),
+            "gemm" => Some(Workload::Gemm { m: 32, n: 32, k: 32 }),
+            "fir" => Some(Workload::Fir { n: 256, taps: 16 }),
+            "conv" | "conv3x3" => Some(Workload::Conv3x3 { h: 32, w: 32 }),
+            "rl" | "rl-step" => Some(Workload::RlStep),
+            _ => None,
+        }
+    }
+
+    /// Build the phases + layout (RL is multi-phase; the rest single).
+    pub fn build(&self) -> (Vec<crate::compiler::Dfg>, Layout) {
+        match *self {
+            Workload::Saxpy { n } => {
+                let (d, l) = linalg::saxpy(n, 2.5);
+                (vec![d], l)
+            }
+            Workload::Dot { n } => {
+                let (d, l) = linalg::dot(n);
+                (vec![d], l)
+            }
+            Workload::Gemm { m, n, k } => {
+                let (d, l) = linalg::gemm_bias(m, n, k);
+                (vec![d], l)
+            }
+            Workload::Fir { n, taps } => {
+                let (d, l) = signal::fir(n, taps);
+                (vec![d], l)
+            }
+            Workload::Conv3x3 { h, w } => {
+                let (d, l) = signal::conv3x3(h, w);
+                (vec![d], l)
+            }
+            Workload::RlStep => {
+                let s = rl::policy_step();
+                (s.phases, s.layout)
+            }
+        }
+    }
+
+    /// Seeded input image for the workload's layout.
+    pub fn init_image(&self, layout: &Layout, seed: u64, mem_words: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut mem = vec![0.0f32; mem_words.max(layout.total_words() as usize)];
+        match self {
+            Workload::RlStep => {
+                let s = rl::policy_step();
+                return rl::init_image(&s, seed, mem_words);
+            }
+            _ => {
+                // Fill every *input* region with normals; outputs stay 0.
+                for r in &layout.regions {
+                    if r.name.starts_with("out") || r.name == "c" || r.name == "y_out" {
+                        continue;
+                    }
+                    for i in 0..r.len as usize {
+                        mem[r.base as usize + i] = rng.normal();
+                    }
+                }
+            }
+        }
+        mem
+    }
+}
+
+/// One unit of coordinator work.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub workload: Workload,
+    pub params: WindMillParams,
+    pub seed: u64,
+}
+
+/// Everything measured for one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub name: String,
+    pub pea: String,
+    /// WindMill cycles (whole task incl. host/DMA) and derived time.
+    pub cycles: u64,
+    pub wm_time_ns: f64,
+    /// Host-CPU baseline.
+    pub cpu_time_ns: f64,
+    pub speedup_vs_cpu: f64,
+    /// GPU-model baseline (meaningful for the RL job).
+    pub gpu_time_ns: f64,
+    pub speedup_vs_gpu: f64,
+    pub ii: u32,
+    pub measured_ii: f64,
+    pub mapped_nodes: usize,
+    /// Final memory image (for golden checks by the caller).
+    pub mem: Vec<f32>,
+}
+
+/// Adjust parameters so the workload fits — the Generation→Definition
+/// negative-feedback loop of §III-A.4 (PPA/capacity results feed back into
+/// the parameter set).
+pub fn calibrate_params(mut params: WindMillParams, layout: &Layout) -> WindMillParams {
+    let need = layout.total_words() as usize;
+    while params.smem.words() < need {
+        params.smem.depth *= 2;
+    }
+    params
+}
+
+/// Run one job end-to-end. Deterministic for (spec.seed).
+pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
+    let (dfgs, layout) = spec.workload.build();
+    let params = calibrate_params(spec.params.clone(), &layout);
+    let machine: MachineDesc = plugins::elaborate(params)?.artifact;
+    machine.validate()?;
+
+    // Compile every phase.
+    let mappings: Vec<Mapping> = dfgs
+        .iter()
+        .map(|d| compile(d.clone(), &machine, spec.seed))
+        .collect::<Result<_, _>>()?;
+
+    // Task: DMA in the inputs once, DMA out the outputs once.
+    let input_words: u64 = layout
+        .regions
+        .iter()
+        .filter(|r| !r.name.starts_with("out"))
+        .map(|r| r.len as u64)
+        .sum();
+    let output_words: u64 =
+        layout.regions.iter().filter(|r| r.name.starts_with("out")).map(|r| r.len as u64).sum();
+    let n_phases = mappings.len();
+    let phases: Vec<Phase> = mappings
+        .into_iter()
+        .enumerate()
+        .map(|(i, mapping)| Phase {
+            mapping,
+            dma_in_words: if i == 0 { input_words } else { 0 },
+            dma_out_words: if i + 1 == n_phases { output_words } else { 0 },
+        })
+        .collect();
+    let task = Task { name: spec.workload.name(), phases };
+
+    let mem0 = spec.workload.init_image(&layout, spec.seed, machine.smem.as_ref().unwrap().words());
+    let tr = run_task(&task, &machine, &mem0, 4_000_000)?;
+    let wm_time_ns = tr.time_ns(&machine);
+
+    // CPU baseline over the same DFGs (numerics identical by construction).
+    let cpu = CpuModel::default();
+    let mut cpu_time_ns = 0.0;
+    for p in &task.phases {
+        cpu_time_ns += cpu.time_ns(&p.mapping.dfg.op_counts());
+    }
+
+    // GPU baseline: RL step has a principled flop/kernels model; for the
+    // single-kernel workloads assume one fused kernel over the same flops.
+    let gpu = GpuModel::default();
+    let gpu_time_ns = match spec.workload {
+        Workload::RlStep => {
+            let s = rl::policy_step();
+            let xfer = (layout.total_words() as f64) * 4.0;
+            gpu.time_ns(s.flops(), (rl::BATCH * rl::ACT) as f64, s.gpu_kernels(), xfer)
+        }
+        _ => {
+            let ops = task.phases.iter().map(|p| p.mapping.dfg.op_counts().total()).sum::<u64>();
+            gpu.time_ns(ops as f64, layout.total_words() as f64, 1, layout.total_words() as f64 * 4.0)
+        }
+    };
+
+    let ii = task.phases.iter().map(|p| p.mapping.schedule.ii).max().unwrap_or(1);
+    Ok(JobResult {
+        name: spec.workload.name(),
+        pea: format!("{}x{}", spec.params.rows, spec.params.cols),
+        cycles: tr.total_cycles,
+        wm_time_ns,
+        cpu_time_ns,
+        speedup_vs_cpu: cpu_time_ns / wm_time_ns,
+        gpu_time_ns,
+        speedup_vs_gpu: gpu_time_ns / wm_time_ns,
+        ii,
+        measured_ii: 0.0,
+        mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
+        mem: tr.mem,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn saxpy_job_runs_and_beats_cpu() {
+        let spec = JobSpec {
+            workload: Workload::Saxpy { n: 256 },
+            params: presets::standard(),
+            seed: 1,
+        };
+        let r = run_job(&spec).unwrap();
+        assert!(r.cycles > 0);
+        assert!(r.speedup_vs_cpu > 1.0, "speedup {}", r.speedup_vs_cpu);
+    }
+
+    #[test]
+    fn gemm_job_numerics_match_interpreter() {
+        let spec = JobSpec {
+            workload: Workload::Gemm { m: 8, n: 8, k: 8 },
+            params: presets::standard(),
+            seed: 2,
+        };
+        let r = run_job(&spec).unwrap();
+        // Recompute golden with the interpreter.
+        let (dfgs, layout) = spec.workload.build();
+        let mut golden = spec.workload.init_image(&layout, 2, r.mem.len());
+        crate::compiler::dfg::interpret(&dfgs[0], &mut golden).unwrap();
+        for (i, (a, b)) in r.mem.iter().zip(golden.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-5, "mem[{i}] {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn calibration_grows_smem() {
+        let (_, layout) = Workload::Gemm { m: 64, n: 64, k: 64 }.build();
+        let p = calibrate_params(presets::standard(), &layout);
+        assert!(p.smem.words() >= layout.total_words() as usize);
+        assert!(p.smem.banks.is_power_of_two());
+    }
+
+    #[test]
+    fn workload_parse_roundtrip() {
+        for s in ["saxpy", "dot", "gemm", "fir", "conv", "rl"] {
+            assert!(Workload::parse(s).is_some(), "{s}");
+        }
+        assert!(Workload::parse("quantum").is_none());
+    }
+}

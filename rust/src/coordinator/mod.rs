@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: orchestrates generate → compile → simulate →
+//! baseline jobs and renders the experiment reports.
+//!
+//! The paper's system contribution lives at generation/architecture level,
+//! so L3 here is the *driver*: a job abstraction ([`job`]), a thread pool
+//! ([`pool`]) that fans independent jobs out (parameter sweeps compile and
+//! simulate in parallel), and report assembly ([`report`]) shared by the
+//! CLI and the benchmark harnesses.
+
+pub mod job;
+pub mod pool;
+pub mod report;
+
+pub use job::{calibrate_params, run_job, JobResult, JobSpec, Workload};
+pub use pool::run_all;
+pub use report::{ppa_report, PpaRow};

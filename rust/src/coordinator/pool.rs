@@ -1,0 +1,97 @@
+//! A small std-thread job pool (tokio is not vendored on this image; the
+//! coordinator's concurrency needs — fan out independent generate/compile/
+//! simulate jobs, collect results in order — fit plain threads + channels).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::diag::error::DiagError;
+
+use super::job::{run_job, JobResult, JobSpec};
+
+/// Run all jobs across `workers` threads; results return in input order.
+pub fn run_all(specs: Vec<JobSpec>, workers: usize) -> Vec<Result<JobResult, DiagError>> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let queue = Arc::new(Mutex::new(specs.into_iter().enumerate().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult, DiagError>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let item = queue.lock().unwrap().pop();
+            let Some((idx, spec)) = item else { break };
+            let res = run_job(&spec);
+            if tx.send((idx, res)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<Option<Result<JobResult, DiagError>>> = (0..n).map(|_| None).collect();
+    for (idx, res) in rx {
+        results[idx] = Some(res);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|| Err(DiagError::InvalidParams("job lost".into()))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::coordinator::job::Workload;
+
+    #[test]
+    fn pool_preserves_order_and_results() {
+        let specs: Vec<JobSpec> = [64u32, 128, 96]
+            .into_iter()
+            .map(|n| JobSpec {
+                workload: Workload::Saxpy { n },
+                params: presets::standard(),
+                seed: 9,
+            })
+            .collect();
+        let results = run_all(specs, 3);
+        assert_eq!(results.len(), 3);
+        let names: Vec<String> =
+            results.iter().map(|r| r.as_ref().unwrap().name.clone()).collect();
+        assert_eq!(names, vec!["saxpy-64", "saxpy-128", "saxpy-96"]);
+    }
+
+    #[test]
+    fn empty_queue_is_fine() {
+        assert!(run_all(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn failures_are_isolated() {
+        // An impossible workload (too many nodes for a tiny PEA) must fail
+        // without poisoning the healthy job.
+        let mut tiny = presets::small();
+        tiny.context_depth = 1;
+        let specs = vec![
+            JobSpec { workload: Workload::RlStep, params: tiny, seed: 1 },
+            JobSpec {
+                workload: Workload::Saxpy { n: 64 },
+                params: presets::standard(),
+                seed: 1,
+            },
+        ];
+        let results = run_all(specs, 2);
+        assert!(results[0].is_err());
+        assert!(results[1].is_ok());
+    }
+}

@@ -1,0 +1,78 @@
+//! PPA report assembly: one row per parameter set, shared by the CLI
+//! (`windmill report`) and the Fig. 6 bench harness.
+
+use crate::arch::params::WindMillParams;
+use crate::diag::error::DiagError;
+use crate::model::area::AreaReport;
+use crate::model::power::PowerReport;
+use crate::model::timing::TimingReport;
+use crate::netlist::NetlistStats;
+use crate::plugins;
+
+/// One generated variant's PPA summary.
+#[derive(Debug, Clone)]
+pub struct PpaRow {
+    pub label: String,
+    pub pea: String,
+    pub topology: &'static str,
+    pub gates: f64,
+    pub area_mm2: f64,
+    pub sram_kib: f64,
+    pub fmax_mhz: f64,
+    pub power_mw: f64,
+    pub modules: usize,
+    pub elaboration_us: f64,
+    pub plugin_count: usize,
+}
+
+/// Elaborate a parameter set and compute its PPA row.
+pub fn ppa_report(label: &str, params: WindMillParams) -> Result<PpaRow, DiagError> {
+    let mut gen = plugins::generator(params.clone());
+    let e = gen.elaborate()?;
+    let stats = NetlistStats::of(&e.netlist);
+    let area = AreaReport::of(&stats, &e.params);
+    let timing = TimingReport::of(&e.params);
+    let power = PowerReport::of(&stats, &e.params);
+    Ok(PpaRow {
+        label: label.to_string(),
+        pea: format!("{}x{}", params.rows, params.cols),
+        topology: params.topology.name(),
+        gates: stats.total_gates,
+        area_mm2: area.total_mm2,
+        sram_kib: area.sram_bits / 8.0 / 1024.0,
+        fmax_mhz: timing.fmax_mhz,
+        power_mw: power.total_mw,
+        modules: stats.module_defs,
+        elaboration_us: e.trace.total_nanos() as f64 / 1e3,
+        plugin_count: gen.plugin_count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn standard_row_hits_paper_anchors() {
+        let row = ppa_report("standard", presets::standard()).unwrap();
+        // §V: "operate at 750MHz and 16.15mW in 40nm process".
+        assert!(row.fmax_mhz >= 750.0, "fmax {:.0}", row.fmax_mhz);
+        assert!(
+            row.power_mw > 8.0 && row.power_mw < 33.0,
+            "power {:.2} mW should be in the 16 mW decade",
+            row.power_mw
+        );
+        assert!(row.gates > 1e5);
+        assert!(row.area_mm2 > 0.1);
+    }
+
+    #[test]
+    fn area_ordering_small_standard_large() {
+        let s = ppa_report("s", presets::small()).unwrap();
+        let m = ppa_report("m", presets::standard()).unwrap();
+        let l = ppa_report("l", presets::large()).unwrap();
+        assert!(s.area_mm2 < m.area_mm2);
+        assert!(m.area_mm2 < l.area_mm2);
+    }
+}

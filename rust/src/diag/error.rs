@@ -1,0 +1,82 @@
+//! Error taxonomy of the DIAG elaboration pipeline.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum DiagError {
+    /// `get_service::<T>()` found no provider for a required service.
+    #[error("no provider for service `{service}` (wanted by plugin `{wanted_by}` in stage {stage})")]
+    MissingService {
+        service: &'static str,
+        wanted_by: String,
+        stage: &'static str,
+    },
+
+    /// Two plugins with the same name were added to one generator.
+    #[error("duplicate plugin `{0}`")]
+    DuplicatePlugin(String),
+
+    /// A required function-tree fragment has no implementing plugin.
+    #[error("function `{path}` is part of the basic framework but no plugin implements it")]
+    MissingFunction { path: String },
+
+    /// A plugin names a function path that is not in the definition tree.
+    #[error("plugin `{plugin}` implements unknown function `{path}`")]
+    UnknownFunction { plugin: String, path: String },
+
+    /// A `Handle` was read before any stage loaded it.
+    #[error("handle `{0}` read before it was loaded")]
+    UnloadedHandle(String),
+
+    /// A plugin reported a config/elaboration problem.
+    #[error("plugin `{plugin}` failed in {stage}: {msg}")]
+    PluginFailed {
+        plugin: String,
+        stage: &'static str,
+        msg: String,
+    },
+
+    /// Netlist validation after create_late found structural problems.
+    #[error("generated netlist is malformed: {0}")]
+    MalformedNetlist(String),
+
+    /// Parameter validation failed during create_config.
+    #[error("invalid parameters: {0}")]
+    InvalidParams(String),
+}
+
+impl DiagError {
+    /// Convenience constructor used by plugins.
+    pub fn plugin(plugin: &str, stage: &'static str, msg: impl Into<String>) -> Self {
+        DiagError::PluginFailed {
+            plugin: plugin.to_string(),
+            stage,
+            msg: msg.into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_actionable() {
+        let e = DiagError::MissingService {
+            service: "windmill::MemPort",
+            wanted_by: "lsu".into(),
+            stage: "create_late",
+        };
+        let s = e.to_string();
+        assert!(s.contains("windmill::MemPort"));
+        assert!(s.contains("lsu"));
+        assert!(s.contains("create_late"));
+    }
+
+    #[test]
+    fn plugin_helper() {
+        let e = DiagError::plugin("gpe", "create_early", "bad width");
+        assert!(e.to_string().contains("gpe"));
+        assert!(e.to_string().contains("bad width"));
+    }
+}

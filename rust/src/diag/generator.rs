@@ -1,0 +1,447 @@
+//! Application layer: the `Generator` — "plugin everything" (§III-A.3).
+//!
+//! A generator owns a function tree (Definition), a typed parameter struct,
+//! and a set of plugins (Implementation). [`Generator::elaborate`] runs the
+//! three blocking stages across all plugins, validates function coverage
+//! and netlist structure, and produces an [`Elaborated`] artifact
+//! (Generation). Plugging/unplugging between elaborations is the paper's
+//! central agility claim, and [`StageTrace`] records per-plugin stage
+//! timings for the Fig. 6d productivity experiments.
+
+use std::time::Instant;
+
+use super::error::DiagError;
+use super::plugin::{ElabCtx, Plugin, Stage, Target};
+use super::service::ServiceRegistry;
+use super::spec::FunctionTree;
+use crate::netlist::Netlist;
+
+/// One timed plugin-stage execution.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub plugin: String,
+    pub stage: Stage,
+    pub nanos: u128,
+}
+
+/// Elaboration timing trace.
+#[derive(Debug, Clone, Default)]
+pub struct StageTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl StageTrace {
+    pub fn total_nanos(&self) -> u128 {
+        self.events.iter().map(|e| e.nanos).sum()
+    }
+
+    pub fn per_plugin_nanos(&self, plugin: &str) -> u128 {
+        self.events.iter().filter(|e| e.plugin == plugin).map(|e| e.nanos).sum()
+    }
+}
+
+/// The Generation-layer output.
+pub struct Elaborated<T: Target> {
+    /// Parameters after `create_config` adjustments.
+    pub params: T::Params,
+    /// Target-specific artifact (for WindMill: the machine description the
+    /// cycle-accurate simulator executes).
+    pub artifact: T::Artifact,
+    /// Structural netlist (render with `netlist::verilog::emit`).
+    pub netlist: Netlist,
+    /// Extension fragments left unimplemented (zero-residue by design).
+    pub skipped_extensions: Vec<String>,
+    /// Per-plugin stage timings.
+    pub trace: StageTrace,
+    /// Total service registrations during elaboration.
+    pub service_registrations: usize,
+}
+
+/// A pluggable, parameterized hardware generator.
+pub struct Generator<T: Target> {
+    tree: FunctionTree,
+    params: T::Params,
+    plugins: Vec<Box<dyn Plugin<T>>>,
+}
+
+impl<T: Target> Generator<T> {
+    pub fn new(tree: FunctionTree, params: T::Params) -> Self {
+        Generator { tree, params, plugins: Vec::new() }
+    }
+
+    /// Add a plugin; names must be unique within the generator.
+    pub fn plug(&mut self, plugin: Box<dyn Plugin<T>>) -> Result<&mut Self, DiagError> {
+        if self.has(plugin.name()) {
+            return Err(DiagError::DuplicatePlugin(plugin.name().to_string()));
+        }
+        self.plugins.push(plugin);
+        Ok(self)
+    }
+
+    /// Builder-style `plug` that panics on duplicates (preset assembly).
+    pub fn with(mut self, plugin: Box<dyn Plugin<T>>) -> Self {
+        self.plug(plugin).map(|_| ()).unwrap_or_else(|e| panic!("{e}"));
+        self
+    }
+
+    /// Remove a plugin by name; returns whether it was present. This is the
+    /// paper's "detach" operation — the next elaboration re-binds service
+    /// chains around the hole with no residual logic.
+    pub fn unplug(&mut self, name: &str) -> bool {
+        let before = self.plugins.len();
+        self.plugins.retain(|p| p.name() != name);
+        self.plugins.len() != before
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.plugins.iter().any(|p| p.name() == name)
+    }
+
+    pub fn plugin_names(&self) -> Vec<&'static str> {
+        self.plugins.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn plugin_count(&self) -> usize {
+        self.plugins.len()
+    }
+
+    pub fn params(&self) -> &T::Params {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut T::Params {
+        &mut self.params
+    }
+
+    pub fn tree(&self) -> &FunctionTree {
+        &self.tree
+    }
+
+    /// Run the three blocking elaboration stages and produce the artifact.
+    ///
+    /// Re-entrant: plugins recreate per-run state in `create_early`, so a
+    /// generator can be elaborated repeatedly (possibly with parameter or
+    /// plugin-set changes in between — the calibration feedback loop).
+    pub fn elaborate(&mut self) -> Result<Elaborated<T>, DiagError> {
+        let mut trace = StageTrace::default();
+
+        // Definition-layer validation: coverage of the function tree.
+        let implemented: Vec<(String, String)> = self
+            .plugins
+            .iter()
+            .map(|p| (p.name().to_string(), p.function().to_string()))
+            .collect();
+        let skipped_extensions = self.tree.validate(&implemented)?;
+
+        // Stage 1 (blocking): create_config over a params copy.
+        let mut params = self.params.clone();
+        for p in self.plugins.iter_mut() {
+            let t0 = Instant::now();
+            p.create_config(&mut params)?;
+            trace.events.push(TraceEvent {
+                plugin: p.name().to_string(),
+                stage: Stage::Config,
+                nanos: t0.elapsed().as_nanos(),
+            });
+        }
+
+        // Stages 2 and 3 (each blocking) share one registry/netlist/artifact.
+        let mut services = ServiceRegistry::new();
+        let mut netlist = Netlist::new();
+        let mut artifact = T::Artifact::default();
+
+        for stage in [Stage::Early, Stage::Late] {
+            for p in self.plugins.iter_mut() {
+                let t0 = Instant::now();
+                let mut ctx = ElabCtx::<T> {
+                    services: &mut services,
+                    netlist: &mut netlist,
+                    artifact: &mut artifact,
+                    current_plugin: p.name().to_string(),
+                    stage,
+                };
+                match stage {
+                    Stage::Early => p.create_early(&params, &mut ctx)?,
+                    Stage::Late => p.create_late(&params, &mut ctx)?,
+                    Stage::Config => unreachable!(),
+                }
+                trace.events.push(TraceEvent {
+                    plugin: p.name().to_string(),
+                    stage,
+                    nanos: t0.elapsed().as_nanos(),
+                });
+            }
+        }
+
+        netlist.validate()?;
+
+        Ok(Elaborated {
+            params,
+            artifact,
+            netlist,
+            skipped_extensions,
+            trace,
+            service_registrations: services.total_registrations(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diag::plugin::ElabCtx;
+    use crate::diag::spec::FunctionKind;
+    use crate::netlist::Module;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    // --- a toy target: a counter chain with an optional filter stage ----
+    struct Toy;
+    #[derive(Clone, Default)]
+    struct ToyParams {
+        width: u32,
+    }
+    #[derive(Default)]
+    struct ToyMachine {
+        stages: Vec<&'static str>,
+    }
+    impl Target for Toy {
+        type Params = ToyParams;
+        type Artifact = ToyMachine;
+    }
+
+    /// Service: a pipeline stage in the Fig. 3 chain.
+    struct PipeStage {
+        name: &'static str,
+    }
+
+    struct SourcePlugin;
+    impl Plugin<Toy> for SourcePlugin {
+        fn name(&self) -> &'static str {
+            "source"
+        }
+        fn function(&self) -> &'static str {
+            "chain/source"
+        }
+        fn create_config(&mut self, p: &mut ToyParams) -> Result<(), DiagError> {
+            if p.width == 0 {
+                p.width = 8; // defaulting during config stage
+            }
+            Ok(())
+        }
+        fn create_early(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+            ctx.provide(30, Rc::new(PipeStage { name: "source" }));
+            let mut m = Module::new("source", "");
+            m.output("o", 8);
+            ctx.add_module(m)
+        }
+    }
+
+    struct FilterPlugin;
+    impl Plugin<Toy> for FilterPlugin {
+        fn name(&self) -> &'static str {
+            "filter"
+        }
+        fn function(&self) -> &'static str {
+            "chain/filter"
+        }
+        fn create_early(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+            ctx.provide(20, Rc::new(PipeStage { name: "filter" }));
+            let mut m = Module::new("filter", "");
+            m.input("i", 8).output("o", 8);
+            ctx.add_module(m)
+        }
+    }
+
+    struct SinkPlugin;
+    impl Plugin<Toy> for SinkPlugin {
+        fn name(&self) -> &'static str {
+            "sink"
+        }
+        fn function(&self) -> &'static str {
+            "chain/sink"
+        }
+        fn create_early(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+            ctx.provide(10, Rc::new(PipeStage { name: "sink" }));
+            let mut m = Module::new("sink", "");
+            m.input("i", 8);
+            ctx.add_module(m)
+        }
+        fn create_late(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+            // Assemble the top by wiring through whatever stages exist —
+            // the Fig. 3 detach-rebind behaviour under test.
+            let chain = ctx.service_chain::<PipeStage>();
+            for s in &chain {
+                ctx.artifact.stages.push(s.name);
+            }
+            let mut top = Module::new("top", "");
+            top.input("clk", 1);
+            for (i, w) in chain.windows(2).enumerate() {
+                top.wire(&format!("n{i}"), 8);
+                let _ = w;
+            }
+            // Instantiate each stage connected to its neighbour nets.
+            for (i, s) in chain.iter().enumerate() {
+                let mut conns: Vec<(String, String)> = Vec::new();
+                if i > 0 {
+                    conns.push(("i".to_string(), format!("n{}", i - 1)));
+                }
+                if i + 1 < chain.len() {
+                    conns.push(("o".to_string(), format!("n{i}")));
+                }
+                let cs: Vec<(&str, &str)> =
+                    conns.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+                top.instance(&format!("u_{}", s.name), s.name, &cs);
+            }
+            ctx.add_module(top)?;
+            ctx.set_top("top");
+            Ok(())
+        }
+    }
+
+    fn toy_tree() -> FunctionTree {
+        let mut t = FunctionTree::new();
+        t.basic("chain/source").basic("chain/sink");
+        t.declare("chain/filter", FunctionKind::Extension);
+        t
+    }
+
+    fn full_gen() -> Generator<Toy> {
+        Generator::new(toy_tree(), ToyParams::default())
+            .with(Box::new(SourcePlugin))
+            .with(Box::new(FilterPlugin))
+            .with(Box::new(SinkPlugin))
+    }
+
+    #[test]
+    fn elaborates_full_chain() {
+        let e = full_gen().elaborate().unwrap();
+        assert_eq!(e.artifact.stages, vec!["source", "filter", "sink"]);
+        assert_eq!(e.params.width, 8); // config-stage defaulting ran
+        assert!(e.skipped_extensions.is_empty());
+        e.netlist.validate().unwrap();
+    }
+
+    #[test]
+    fn unplug_rebinds_chain_with_no_residue() {
+        let mut g = full_gen();
+        assert!(g.unplug("filter"));
+        let e = g.elaborate().unwrap();
+        // A -> C: the sink now connects straight to the source.
+        assert_eq!(e.artifact.stages, vec!["source", "sink"]);
+        // Zero residual logic from the filter plugin.
+        assert!(e.netlist.find("filter").is_none());
+        assert!(e.netlist.by_provenance("filter").is_empty());
+        assert_eq!(e.skipped_extensions, vec!["chain/filter"]);
+        e.netlist.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_plugin_rejected() {
+        let mut g = full_gen();
+        let err = g.plug(Box::new(SourcePlugin)).err().unwrap();
+        assert!(matches!(err, DiagError::DuplicatePlugin(_)));
+    }
+
+    #[test]
+    fn missing_basic_function_fails() {
+        let mut g = Generator::<Toy>::new(toy_tree(), ToyParams::default())
+            .with(Box::new(SourcePlugin));
+        let err = g.elaborate().map(|_| ()).unwrap_err();
+        assert!(matches!(err, DiagError::MissingFunction { .. }));
+    }
+
+    #[test]
+    fn trace_records_all_stages() {
+        let mut g = full_gen();
+        let e = g.elaborate().unwrap();
+        // 3 plugins x 3 stages.
+        assert_eq!(e.trace.events.len(), 9);
+        assert!(e.trace.total_nanos() > 0);
+        assert!(e.trace.per_plugin_nanos("sink") > 0);
+    }
+
+    #[test]
+    fn elaboration_is_reentrant() {
+        let mut g = full_gen();
+        let a = g.elaborate().unwrap();
+        let b = g.elaborate().unwrap();
+        assert_eq!(a.artifact.stages, b.artifact.stages);
+        assert_eq!(a.netlist.module_names(), b.netlist.module_names());
+    }
+
+    #[test]
+    fn service_registrations_counted() {
+        let e = full_gen().elaborate().unwrap();
+        assert_eq!(e.service_registrations, 3);
+    }
+
+    // A plugin whose late stage requires a service nobody provides.
+    struct NeedyPlugin;
+    struct GhostService;
+    impl Plugin<Toy> for NeedyPlugin {
+        fn name(&self) -> &'static str {
+            "needy"
+        }
+        fn function(&self) -> &'static str {
+            "chain/source"
+        }
+        fn create_late(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+            ctx.get_service::<GhostService>().map(|_| ())
+        }
+    }
+
+    #[test]
+    fn missing_service_is_attributed() {
+        let mut g = Generator::<Toy>::new(toy_tree(), ToyParams::default())
+            .with(Box::new(NeedyPlugin))
+            .with(Box::new(SinkPlugin));
+        let err = g.elaborate().map(|_| ()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("needy"), "{msg}");
+        assert!(msg.contains("create_late"), "{msg}");
+        assert!(msg.contains("GhostService"), "{msg}");
+    }
+
+    #[test]
+    fn shared_refcell_service_across_plugins() {
+        // Ensures the registry supports the mutable-shared-state pattern the
+        // WindMill plugins use for port aggregation.
+        struct Collector(RefCell<Vec<&'static str>>);
+        struct P1;
+        impl Plugin<Toy> for P1 {
+            fn name(&self) -> &'static str {
+                "p1"
+            }
+            fn function(&self) -> &'static str {
+                "chain/source"
+            }
+            fn create_early(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+                ctx.provide(0, Rc::new(Collector(RefCell::new(vec![]))));
+                let mut m = Module::new("top", "");
+                m.input("clk", 1);
+                ctx.add_module(m)?;
+                ctx.set_top("top");
+                Ok(())
+            }
+        }
+        struct P2;
+        impl Plugin<Toy> for P2 {
+            fn name(&self) -> &'static str {
+                "p2"
+            }
+            fn function(&self) -> &'static str {
+                "chain/sink"
+            }
+            fn create_late(&mut self, _p: &ToyParams, ctx: &mut ElabCtx<Toy>) -> Result<(), DiagError> {
+                let c = ctx.get_service::<Collector>()?;
+                c.0.borrow_mut().push("p2-was-here");
+                Ok(())
+            }
+        }
+        let mut g = Generator::<Toy>::new(toy_tree(), ToyParams::default())
+            .with(Box::new(P1))
+            .with(Box::new(P2));
+        g.elaborate().unwrap();
+    }
+}

@@ -1,0 +1,120 @@
+//! `Handle<T>` — SpinalHDL-style lazily-bound elaboration values.
+//!
+//! In the Definition layer every leaf of the function tree is *declared*
+//! before any hardware type exists; the Implementation layer's
+//! `create_early` stage later *loads* the concrete value, and `create_late`
+//! consumers read it (paper §IV-B: "leaves are initialized as Handle[Data]
+//! waiting for declaring required hardware types through create-early").
+//! Only loaded handles produce hardware — unloaded branches vanish with no
+//! residue.
+
+use std::cell::{Ref, RefCell};
+use std::rc::Rc;
+
+use super::error::DiagError;
+
+/// A named, lazily-loaded, shared elaboration value.
+#[derive(Debug)]
+pub struct Handle<T> {
+    name: String,
+    slot: Rc<RefCell<Option<T>>>,
+}
+
+impl<T> Clone for Handle<T> {
+    fn clone(&self) -> Self {
+        Handle { name: self.name.clone(), slot: Rc::clone(&self.slot) }
+    }
+}
+
+impl<T> Handle<T> {
+    pub fn new(name: impl Into<String>) -> Self {
+        Handle { name: name.into(), slot: Rc::new(RefCell::new(None)) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Load the value; loading twice is a plugin bug and panics.
+    pub fn load(&self, value: T) {
+        let mut slot = self.slot.borrow_mut();
+        assert!(slot.is_none(), "handle `{}` loaded twice", self.name);
+        *slot = Some(value);
+    }
+
+    /// Replace the value regardless of load state (used by calibration
+    /// feedback from the Generation layer back into Definition).
+    pub fn reload(&self, value: T) {
+        *self.slot.borrow_mut() = Some(value);
+    }
+
+    pub fn is_loaded(&self) -> bool {
+        self.slot.borrow().is_some()
+    }
+
+    /// Borrow the loaded value, or a `DiagError::UnloadedHandle`.
+    pub fn try_get(&self) -> Result<Ref<'_, T>, DiagError> {
+        let r = self.slot.borrow();
+        if r.is_none() {
+            return Err(DiagError::UnloadedHandle(self.name.clone()));
+        }
+        Ok(Ref::map(r, |o| o.as_ref().unwrap()))
+    }
+
+    /// Borrow the loaded value; panics with the handle name if unloaded.
+    pub fn get(&self) -> Ref<'_, T> {
+        self.try_get()
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+impl<T: Clone> Handle<T> {
+    pub fn cloned(&self) -> Result<T, DiagError> {
+        Ok(self.try_get()?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_then_get() {
+        let h: Handle<u32> = Handle::new("pe.width");
+        assert!(!h.is_loaded());
+        h.load(32);
+        assert!(h.is_loaded());
+        assert_eq!(*h.get(), 32);
+    }
+
+    #[test]
+    fn clones_share_the_slot() {
+        let h: Handle<String> = Handle::new("bus");
+        let h2 = h.clone();
+        h.load("axi".into());
+        assert_eq!(&*h2.get(), "axi");
+    }
+
+    #[test]
+    fn unloaded_get_is_error() {
+        let h: Handle<u8> = Handle::new("ghost");
+        let err = h.try_get().err().unwrap();
+        assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    #[should_panic(expected = "loaded twice")]
+    fn double_load_panics() {
+        let h: Handle<u8> = Handle::new("x");
+        h.load(1);
+        h.load(2);
+    }
+
+    #[test]
+    fn reload_overrides() {
+        let h: Handle<u8> = Handle::new("cal");
+        h.load(1);
+        h.reload(9);
+        assert_eq!(*h.get(), 9);
+    }
+}

@@ -1,0 +1,37 @@
+//! DIAG: the paper's agile hardware-generator design flow (§III).
+//!
+//! DIAG structures a hardware generator into four layers:
+//!
+//! * **D**efinition — a [`spec::FunctionTree`] of functional fragments:
+//!   the *basic framework* (required), *extensions* (optional) and the
+//!   *parameters* extracted from mutable hardware settings.
+//! * **I**mplementation — [`plugin::Plugin`]s carrying the physical
+//!   description. Each plugin elaborates in three blocking stages
+//!   (`create_config`, `create_early`, `create_late`) and communicates with
+//!   other plugins exclusively through typed [`service::ServiceRegistry`]
+//!   entries — the Function-Plugin-Service approach.
+//! * **A**pplication — a [`generator::Generator`] assembled bottom-up from
+//!   plugins ("plugin everything"); unplugging a plugin re-binds service
+//!   consumers to the remaining providers (Fig. 3's `A→B→C ⇒ A→C`) and
+//!   leaves **zero residual logic** in the generated netlist.
+//! * **G**eneration — the elaborated artifact: a structural netlist
+//!   (emitted as Verilog by [`crate::netlist`]), a machine description for
+//!   the cycle-accurate simulator, and an elaboration trace used by the
+//!   Fig. 6d productivity experiments.
+//!
+//! The framework is target-agnostic (the paper argues DIAG applies to any
+//! generator); the WindMill CGRA instantiates it in [`crate::plugins`].
+
+pub mod error;
+pub mod generator;
+pub mod handle;
+pub mod plugin;
+pub mod service;
+pub mod spec;
+
+pub use error::DiagError;
+pub use generator::{Elaborated, Generator, StageTrace};
+pub use handle::Handle;
+pub use plugin::{ElabCtx, Plugin, Stage, Target};
+pub use service::ServiceRegistry;
+pub use spec::{FunctionKind, FunctionTree};

@@ -1,0 +1,135 @@
+//! Implementation layer: the `Plugin` trait and its elaboration context.
+//!
+//! A plugin is the unit of physical description (paper §III-A.2). It
+//! implements exactly one function-tree fragment and elaborates in three
+//! *blocking* stages — all plugins finish `create_config` before any runs
+//! `create_early`, and so on (the paper's "blocking compilation approach"):
+//!
+//! 1. `create_config` — inspect/adjust the typed parameter struct
+//!    (parameter passing; negative-feedback calibration re-enters here);
+//! 2. `create_early` — declare hardware: allocate [`super::Handle`]s,
+//!    publish services, add netlist modules;
+//! 3. `create_late` — resolve `get_service`, read handles loaded by other
+//!    plugins, and wire the connections.
+//!
+//! Plugins must be **re-entrant**: `create_early` recreates any per-run
+//! state so a generator can be elaborated repeatedly (the Fig. 6d
+//! productivity bench relies on this).
+
+use std::any::Any;
+use std::rc::Rc;
+
+use super::error::DiagError;
+use super::service::ServiceRegistry;
+use crate::netlist::{Module, Netlist};
+
+/// A generator target binds the typed parameter struct and the elaboration
+/// artifact (e.g. the simulator-facing machine description) together.
+pub trait Target: 'static {
+    type Params: Clone;
+    type Artifact: Default;
+}
+
+/// Elaboration stage names (used in traces and error attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Config,
+    Early,
+    Late,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Config => "create_config",
+            Stage::Early => "create_early",
+            Stage::Late => "create_late",
+        }
+    }
+}
+
+/// Mutable view a plugin gets during `create_early` / `create_late`.
+pub struct ElabCtx<'a, T: Target> {
+    pub(crate) services: &'a mut ServiceRegistry,
+    pub(crate) netlist: &'a mut Netlist,
+    /// The target-specific artifact under construction (for WindMill: the
+    /// simulator machine description).
+    pub artifact: &'a mut T::Artifact,
+    pub(crate) current_plugin: String,
+    pub(crate) stage: Stage,
+}
+
+impl<'a, T: Target> ElabCtx<'a, T> {
+    /// `getService[S]` — highest-priority provider or a diagnostic error.
+    pub fn get_service<S: Any>(&self) -> Result<Rc<S>, DiagError> {
+        self.services.get::<S>(&self.current_plugin, self.stage.as_str())
+    }
+
+    /// Optional service lookup (extensions probe without failing).
+    pub fn find_service<S: Any>(&self) -> Option<Rc<S>> {
+        self.services.try_get::<S>()
+    }
+
+    /// The full provider chain of `S`, priority-descending (Fig. 3).
+    pub fn service_chain<S: Any>(&self) -> Vec<Rc<S>> {
+        self.services.chain::<S>()
+    }
+
+    /// Publish a service under the current plugin's name.
+    pub fn provide<S: Any>(&mut self, priority: i32, service: Rc<S>) {
+        let plugin = self.current_plugin.clone();
+        self.services.register::<S>(&plugin, priority, service);
+    }
+
+    /// Add a netlist module, stamping the current plugin as provenance.
+    pub fn add_module(&mut self, mut module: Module) -> Result<(), DiagError> {
+        module.provenance = self.current_plugin.clone();
+        self.netlist.add(module)
+    }
+
+    /// Mutable access to an existing module (e.g. the top, to add ports).
+    pub fn module_mut(&mut self, name: &str) -> Option<&mut Module> {
+        self.netlist.find_mut(name)
+    }
+
+    pub fn set_top(&mut self, name: &str) {
+        self.netlist.set_top(name);
+    }
+
+    pub fn plugin_name(&self) -> &str {
+        &self.current_plugin
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    /// Helper for plugin-attributed failures.
+    pub fn fail(&self, msg: impl Into<String>) -> DiagError {
+        DiagError::plugin(&self.current_plugin, self.stage.as_str(), msg)
+    }
+}
+
+/// The unit of implementation in the DIAG flow.
+pub trait Plugin<T: Target> {
+    /// Unique name within one generator.
+    fn name(&self) -> &'static str;
+
+    /// Function-tree fragment this plugin implements (Definition layer).
+    fn function(&self) -> &'static str;
+
+    /// Stage 1: validate/adjust parameters. Runs before any elaboration.
+    fn create_config(&mut self, _params: &mut T::Params) -> Result<(), DiagError> {
+        Ok(())
+    }
+
+    /// Stage 2: declare hardware — handles, services, modules.
+    fn create_early(&mut self, _params: &T::Params, _ctx: &mut ElabCtx<T>) -> Result<(), DiagError> {
+        Ok(())
+    }
+
+    /// Stage 3: resolve services and wire connections.
+    fn create_late(&mut self, _params: &T::Params, _ctx: &mut ElabCtx<T>) -> Result<(), DiagError> {
+        Ok(())
+    }
+}

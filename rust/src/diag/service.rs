@@ -1,0 +1,187 @@
+//! Typed service registry — the "Service" half of Function-Plugin-Service.
+//!
+//! Plugins never hold references to each other. A provider publishes a
+//! service object (usually `Rc<RefCell<...>>` shared state or a descriptor
+//! of netlist connection points); consumers look it up **by type** with
+//! [`ServiceRegistry::get`], mirroring SpinalHDL's `getService[...]`.
+//!
+//! Multiple providers of one service type form a *priority chain*
+//! ([`ServiceRegistry::chain`]). This is the mechanism behind the paper's
+//! Fig. 3 detachment semantics: a consumer that wires "through" the chain
+//! automatically connects `A → C` when the `B` plugin is unplugged, with no
+//! residual logic, because the binding is computed from whichever providers
+//! are actually present.
+
+use std::any::{type_name, Any, TypeId};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::error::DiagError;
+
+struct ProviderEntry {
+    plugin: String,
+    priority: i32,
+    /// Insertion order tiebreak for equal priorities (stable chains).
+    seq: usize,
+    service: Rc<dyn Any>,
+}
+
+/// Registry of service providers, keyed by service type.
+#[derive(Default)]
+pub struct ServiceRegistry {
+    by_type: HashMap<TypeId, Vec<ProviderEntry>>,
+    seq: usize,
+}
+
+impl ServiceRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a service. Higher `priority` sorts earlier in the chain;
+    /// the highest-priority provider is what `get` returns.
+    pub fn register<T: Any>(&mut self, plugin: &str, priority: i32, service: Rc<T>) {
+        let entry = ProviderEntry {
+            plugin: plugin.to_string(),
+            priority,
+            seq: self.seq,
+            service: service as Rc<dyn Any>,
+        };
+        self.seq += 1;
+        let v = self.by_type.entry(TypeId::of::<T>()).or_default();
+        v.push(entry);
+        v.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.seq.cmp(&b.seq)));
+    }
+
+    /// Highest-priority provider of `T`, if any.
+    pub fn try_get<T: Any>(&self) -> Option<Rc<T>> {
+        self.by_type
+            .get(&TypeId::of::<T>())?
+            .first()
+            .map(|e| Rc::downcast::<T>(Rc::clone(&e.service)).expect("typeid match"))
+    }
+
+    /// Highest-priority provider of `T`, or a `MissingService` error
+    /// attributed to `wanted_by`/`stage` (for actionable diagnostics).
+    pub fn get<T: Any>(&self, wanted_by: &str, stage: &'static str) -> Result<Rc<T>, DiagError> {
+        self.try_get::<T>().ok_or(DiagError::MissingService {
+            service: type_name::<T>(),
+            wanted_by: wanted_by.to_string(),
+            stage,
+        })
+    }
+
+    /// All providers of `T`, priority-descending — the Fig. 3 chain.
+    pub fn chain<T: Any>(&self) -> Vec<Rc<T>> {
+        self.by_type
+            .get(&TypeId::of::<T>())
+            .map(|v| {
+                v.iter()
+                    .map(|e| Rc::downcast::<T>(Rc::clone(&e.service)).expect("typeid match"))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Names of the plugins providing `T`, priority-descending.
+    pub fn providers<T: Any>(&self) -> Vec<String> {
+        self.by_type
+            .get(&TypeId::of::<T>())
+            .map(|v| v.iter().map(|e| e.plugin.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn count<T: Any>(&self) -> usize {
+        self.by_type.get(&TypeId::of::<T>()).map_or(0, Vec::len)
+    }
+
+    /// Total number of (type, provider) registrations — a productivity
+    /// metric surfaced by the Fig. 6d bench.
+    pub fn total_registrations(&self) -> usize {
+        self.by_type.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct MemPort(u32);
+    #[derive(Debug)]
+    struct CfgBus;
+
+    #[test]
+    fn register_and_get() {
+        let mut r = ServiceRegistry::new();
+        r.register("sm", 0, Rc::new(MemPort(16)));
+        let p = r.get::<MemPort>("lsu", "create_late").unwrap();
+        assert_eq!(*p, MemPort(16));
+    }
+
+    #[test]
+    fn missing_service_names_the_consumer() {
+        let r = ServiceRegistry::new();
+        let err = r.get::<CfgBus>("fetch", "create_late").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("CfgBus"), "{msg}");
+        assert!(msg.contains("fetch"), "{msg}");
+    }
+
+    #[test]
+    fn priority_selects_provider() {
+        let mut r = ServiceRegistry::new();
+        r.register("base", 0, Rc::new(MemPort(1)));
+        r.register("override", 10, Rc::new(MemPort(2)));
+        assert_eq!(*r.try_get::<MemPort>().unwrap(), MemPort(2));
+    }
+
+    #[test]
+    fn chain_orders_by_priority_then_insertion() {
+        let mut r = ServiceRegistry::new();
+        r.register("a", 5, Rc::new(MemPort(1)));
+        r.register("b", 9, Rc::new(MemPort(2)));
+        r.register("c", 5, Rc::new(MemPort(3)));
+        let ids: Vec<u32> = r.chain::<MemPort>().iter().map(|p| p.0).collect();
+        assert_eq!(ids, vec![2, 1, 3]);
+        assert_eq!(r.providers::<MemPort>(), vec!["b", "a", "c"]);
+    }
+
+    #[test]
+    fn unplugging_rebinds_the_chain() {
+        // Fig. 3: with B present the chain is A->B->C; without B it is A->C.
+        let build = |with_b: bool| {
+            let mut r = ServiceRegistry::new();
+            r.register("stage-a", 30, Rc::new(MemPort(0xA)));
+            if with_b {
+                r.register("stage-b", 20, Rc::new(MemPort(0xB)));
+            }
+            r.register("stage-c", 10, Rc::new(MemPort(0xC)));
+            r.chain::<MemPort>().iter().map(|p| p.0).collect::<Vec<_>>()
+        };
+        assert_eq!(build(true), vec![0xA, 0xB, 0xC]);
+        assert_eq!(build(false), vec![0xA, 0xC]);
+    }
+
+    #[test]
+    fn counts_and_registrations() {
+        let mut r = ServiceRegistry::new();
+        r.register("x", 0, Rc::new(MemPort(0)));
+        r.register("y", 0, Rc::new(CfgBus));
+        r.register("z", 0, Rc::new(CfgBus));
+        assert_eq!(r.count::<MemPort>(), 1);
+        assert_eq!(r.count::<CfgBus>(), 2);
+        assert_eq!(r.total_registrations(), 3);
+    }
+
+    #[test]
+    fn shared_mutable_service_state() {
+        use std::cell::RefCell;
+        let mut r = ServiceRegistry::new();
+        r.register("prod", 0, Rc::new(RefCell::new(Vec::<u32>::new())));
+        let a = r.try_get::<RefCell<Vec<u32>>>().unwrap();
+        a.borrow_mut().push(7);
+        let b = r.try_get::<RefCell<Vec<u32>>>().unwrap();
+        assert_eq!(*b.borrow(), vec![7]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Definition layer: the function tree (paper §III-A.1, Fig. 3a).
+//!
+//! The specification of a generator is a tree of *functional fragments*,
+//! split into the **basic framework** (required for any instance), and
+//! **extensions** (optional fragments for complex processing demands).
+//! Parameters — the third part of the paper's definition triple — live in
+//! the target's typed params struct, not in the tree.
+//!
+//! The generator validates coverage after elaboration: every required
+//! fragment must be implemented by at least one plugin, and every plugin
+//! must point at a fragment that exists. Fragment paths are
+//! `/`-separated, e.g. `"pe/execute/alu"`.
+
+use std::collections::BTreeMap;
+
+use super::error::DiagError;
+
+/// Whether a fragment belongs to the basic framework or is an extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionKind {
+    /// Required: elaboration fails if no plugin implements it.
+    Basic,
+    /// Optional: may be left unimplemented with zero residue.
+    Extension,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    kind: FunctionKind,
+    children: BTreeMap<String, Node>,
+}
+
+impl Node {
+    fn new(kind: FunctionKind) -> Self {
+        Node { kind, children: BTreeMap::new() }
+    }
+}
+
+/// The function tree of a generator definition.
+#[derive(Debug, Clone)]
+pub struct FunctionTree {
+    root: Node,
+}
+
+impl Default for FunctionTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FunctionTree {
+    pub fn new() -> Self {
+        FunctionTree { root: Node::new(FunctionKind::Basic) }
+    }
+
+    /// Declare a fragment. Intermediate nodes are created as the same kind;
+    /// re-declaring an existing node updates its kind.
+    pub fn declare(&mut self, path: &str, kind: FunctionKind) -> &mut Self {
+        let mut node = &mut self.root;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            node = node
+                .children
+                .entry(part.to_string())
+                .or_insert_with(|| Node::new(kind));
+        }
+        node.kind = kind;
+        self
+    }
+
+    /// Shorthand for `declare(path, FunctionKind::Basic)`.
+    pub fn basic(&mut self, path: &str) -> &mut Self {
+        self.declare(path, FunctionKind::Basic)
+    }
+
+    /// Shorthand for `declare(path, FunctionKind::Extension)`.
+    pub fn extension(&mut self, path: &str) -> &mut Self {
+        self.declare(path, FunctionKind::Extension)
+    }
+
+    pub fn contains(&self, path: &str) -> bool {
+        self.lookup(path).is_some()
+    }
+
+    pub fn kind(&self, path: &str) -> Option<FunctionKind> {
+        self.lookup(path).map(|n| n.kind)
+    }
+
+    fn lookup(&self, path: &str) -> Option<&Node> {
+        let mut node = &self.root;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            node = node.children.get(part)?;
+        }
+        Some(node)
+    }
+
+    /// All declared leaf paths with their kinds, depth-first.
+    pub fn leaves(&self) -> Vec<(String, FunctionKind)> {
+        fn walk(prefix: &str, node: &Node, out: &mut Vec<(String, FunctionKind)>) {
+            if node.children.is_empty() {
+                if !prefix.is_empty() {
+                    out.push((prefix.to_string(), node.kind));
+                }
+                return;
+            }
+            for (name, child) in &node.children {
+                let p = if prefix.is_empty() {
+                    name.clone()
+                } else {
+                    format!("{prefix}/{name}")
+                };
+                walk(&p, child, out);
+            }
+        }
+        let mut out = Vec::new();
+        walk("", &self.root, &mut out);
+        out
+    }
+
+    /// Validate plugin coverage: `implemented` is the set of fragment paths
+    /// plugins claim. Returns the unimplemented *extension* leaves (useful
+    /// for reports); errors on unimplemented *basic* leaves or unknown
+    /// claimed paths.
+    pub fn validate(
+        &self,
+        implemented: &[(String, String)], // (plugin, path)
+    ) -> Result<Vec<String>, DiagError> {
+        for (plugin, path) in implemented {
+            if !self.contains(path) {
+                return Err(DiagError::UnknownFunction {
+                    plugin: plugin.clone(),
+                    path: path.clone(),
+                });
+            }
+        }
+        let mut skipped = Vec::new();
+        for (leaf, kind) in self.leaves() {
+            let covered = implemented
+                .iter()
+                .any(|(_, p)| p == &leaf || leaf.starts_with(&format!("{p}/")));
+            if !covered {
+                match kind {
+                    FunctionKind::Basic => {
+                        return Err(DiagError::MissingFunction { path: leaf });
+                    }
+                    FunctionKind::Extension => skipped.push(leaf),
+                }
+            }
+        }
+        Ok(skipped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree() -> FunctionTree {
+        let mut t = FunctionTree::new();
+        t.basic("pe/fetch")
+            .basic("pe/execute/alu")
+            .extension("pe/execute/mul")
+            .basic("mem/sram")
+            .extension("mem/pingpong");
+        t
+    }
+
+    #[test]
+    fn declare_and_lookup() {
+        let t = tree();
+        assert!(t.contains("pe/execute/alu"));
+        assert_eq!(t.kind("pe/execute/mul"), Some(FunctionKind::Extension));
+        assert!(!t.contains("pe/nonexistent"));
+    }
+
+    #[test]
+    fn leaves_are_sorted_paths() {
+        let t = tree();
+        let leaves: Vec<String> = t.leaves().into_iter().map(|(p, _)| p).collect();
+        assert_eq!(
+            leaves,
+            vec!["mem/pingpong", "mem/sram", "pe/execute/alu", "pe/execute/mul", "pe/fetch"]
+        );
+    }
+
+    #[test]
+    fn validate_full_coverage() {
+        let t = tree();
+        let impls = vec![
+            ("f".to_string(), "pe/fetch".to_string()),
+            ("a".to_string(), "pe/execute/alu".to_string()),
+            ("m".to_string(), "pe/execute/mul".to_string()),
+            ("s".to_string(), "mem/sram".to_string()),
+            ("p".to_string(), "mem/pingpong".to_string()),
+        ];
+        assert!(t.validate(&impls).unwrap().is_empty());
+    }
+
+    #[test]
+    fn missing_extension_is_reported_not_fatal() {
+        let t = tree();
+        let impls = vec![
+            ("f".to_string(), "pe/fetch".to_string()),
+            ("a".to_string(), "pe/execute/alu".to_string()),
+            ("s".to_string(), "mem/sram".to_string()),
+        ];
+        let skipped = t.validate(&impls).unwrap();
+        assert_eq!(skipped, vec!["mem/pingpong", "pe/execute/mul"]);
+    }
+
+    #[test]
+    fn missing_basic_is_fatal() {
+        let t = tree();
+        let impls = vec![("a".to_string(), "pe/execute/alu".to_string())];
+        let err = t.validate(&impls).unwrap_err();
+        assert!(matches!(err, DiagError::MissingFunction { .. }));
+    }
+
+    #[test]
+    fn unknown_claim_is_fatal() {
+        let t = tree();
+        let impls = vec![("x".to_string(), "pe/quantum".to_string())];
+        assert!(matches!(
+            t.validate(&impls).unwrap_err(),
+            DiagError::UnknownFunction { .. }
+        ));
+    }
+
+    #[test]
+    fn parent_claim_covers_subtree() {
+        let t = tree();
+        let impls = vec![
+            ("pe-all".to_string(), "pe".to_string()),
+            ("s".to_string(), "mem/sram".to_string()),
+        ];
+        let skipped = t.validate(&impls).unwrap();
+        assert_eq!(skipped, vec!["mem/pingpong"]);
+    }
+}

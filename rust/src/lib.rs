@@ -1,0 +1,26 @@
+//! WindMill: a parameterized and pluggable CGRA generator, compiler and
+//! cycle-accurate simulator, built with the DIAG (Definition, Implementation,
+//! Application, Generation) design flow.
+//!
+//! This crate is the Layer-3 (Rust) half of a three-layer reproduction of
+//! "WindMill: A Parameterized and Pluggable CGRA Implemented by DIAG Design
+//! Flow" (2023). The compute workloads (Layer-2 JAX graphs, Layer-1 Pallas
+//! kernels) are AOT-lowered to HLO text in `python/compile/` and executed by
+//! [`runtime`] via the PJRT C API as the "GPU-analog" baseline; everything
+//! else — the DIAG plugin framework, the WindMill architecture definition,
+//! the netlist generator, PPA models, the DFG compiler, and the
+//! cycle-accurate CGRA simulator — lives here.
+
+pub mod arch;
+pub mod compiler;
+pub mod coordinator;
+pub mod diag;
+pub mod model;
+pub mod netlist;
+pub mod plugins;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub use anyhow::Result;

@@ -1,0 +1,209 @@
+//! WindMill CLI: generate hardware, inspect PPA, run workloads on the
+//! cycle-accurate simulator, and launch experiment suites.
+//!
+//! (clap is not vendored on this image; the argument grammar is small and
+//! hand-parsed — see `USAGE`.)
+
+use std::process::ExitCode;
+
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::{ppa_report, run_all, JobSpec, Workload};
+use windmill::netlist::{verilog, NetlistStats};
+use windmill::plugins;
+use windmill::util::{table, Table};
+
+const USAGE: &str = "\
+windmill — parameterized & pluggable CGRA generator (DIAG design flow)
+
+USAGE:
+    windmill generate [--preset P] [--pea N] [--topology T] [--out FILE]
+        Elaborate a WindMill variant and emit Verilog (stdout or FILE).
+    windmill report [--preset P | --sweep]
+        PPA report (area / fmax / power) for one preset or the Fig. 6 sweep.
+    windmill run <workload> [--preset P] [--seed S]
+        Compile + simulate a workload (saxpy|dot|gemm|fir|conv|rl)
+        against the CPU/GPU baseline models.
+    windmill suite [--workers W]
+        The cross-domain workload suite on the standard WindMill.
+    windmill plugins
+        List the plugin set and function tree of the standard generator.
+";
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn params_from_args(args: &[String]) -> Result<windmill::arch::WindMillParams, String> {
+    let mut p = match arg_value(args, "--preset") {
+        Some(name) => presets::by_name(&name).ok_or(format!("unknown preset `{name}`"))?,
+        None => presets::standard(),
+    };
+    if let Some(n) = arg_value(args, "--pea") {
+        let edge: usize = n.parse().map_err(|_| format!("bad --pea {n}"))?;
+        p.rows = edge;
+        p.cols = edge;
+    }
+    if let Some(t) = arg_value(args, "--topology") {
+        p.topology = Topology::parse(&t).ok_or(format!("unknown topology `{t}`"))?;
+    }
+    Ok(p)
+}
+
+fn cmd_generate(args: &[String]) -> Result<(), String> {
+    let params = params_from_args(args)?;
+    let e = plugins::elaborate(params).map_err(|e| e.to_string())?;
+    let v = verilog::emit(&e.netlist);
+    let stats = NetlistStats::of(&e.netlist);
+    eprintln!(
+        "elaborated {} modules, {:.0} gates, {} service registrations, {:.1} µs",
+        stats.module_defs,
+        stats.total_gates,
+        e.service_registrations,
+        e.trace.total_nanos() as f64 / 1e3
+    );
+    match arg_value(args, "--out") {
+        Some(path) => {
+            std::fs::write(&path, v).map_err(|e| e.to_string())?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{v}"),
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<(), String> {
+    let mut t = Table::new(
+        "WindMill PPA (analytic 40 nm models; anchors: 750 MHz / 16.15 mW)",
+        &["variant", "pea", "topo", "gates", "area mm2", "sram KiB", "fmax MHz", "power mW"],
+    );
+    let mut rows = Vec::new();
+    if args.iter().any(|a| a == "--sweep") {
+        for edge in [4usize, 6, 8, 12, 16] {
+            rows.push((format!("pea{edge}"), presets::with_pea_size(edge)));
+        }
+        for topo in Topology::ALL {
+            rows.push((format!("topo-{}", topo.name()), presets::with_topology(topo)));
+        }
+    } else {
+        let p = params_from_args(args)?;
+        rows.push(("selected".to_string(), p));
+    }
+    for (label, params) in rows {
+        let r = ppa_report(&label, params).map_err(|e| e.to_string())?;
+        t.row(&[
+            r.label,
+            r.pea,
+            r.topology.to_string(),
+            format!("{:.0}", r.gates),
+            table::f(r.area_mm2, 3),
+            table::f(r.sram_kib, 0),
+            table::f(r.fmax_mhz, 0),
+            table::f(r.power_mw, 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let wl_name = args.first().ok_or("missing workload")?;
+    let workload = Workload::parse(wl_name).ok_or(format!("unknown workload `{wl_name}`"))?;
+    let params = params_from_args(args)?;
+    let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let spec = JobSpec { workload, params, seed };
+    let r = windmill::coordinator::run_job(&spec).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        &format!("workload `{}` on WindMill {}", r.name, r.pea),
+        &["metric", "value"],
+    );
+    t.row(&["cycles".into(), r.cycles.to_string()]);
+    t.row(&["WindMill time".into(), windmill::util::stats::fmt_ns(r.wm_time_ns)]);
+    t.row(&["CPU (VexRiscv-class) time".into(), windmill::util::stats::fmt_ns(r.cpu_time_ns)]);
+    t.row(&["GPU-model time".into(), windmill::util::stats::fmt_ns(r.gpu_time_ns)]);
+    t.row(&["speedup vs CPU".into(), format!("{:.1}x", r.speedup_vs_cpu)]);
+    t.row(&["speedup vs GPU".into(), format!("{:.2}x", r.speedup_vs_gpu)]);
+    t.row(&["steady-state II".into(), r.ii.to_string()]);
+    t.row(&["mapped DFG nodes".into(), r.mapped_nodes.to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_suite(args: &[String]) -> Result<(), String> {
+    let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let specs: Vec<JobSpec> = [
+        Workload::Saxpy { n: 256 },
+        Workload::Dot { n: 256 },
+        Workload::Gemm { m: 32, n: 32, k: 32 },
+        Workload::Fir { n: 256, taps: 16 },
+        Workload::Conv3x3 { h: 32, w: 32 },
+        Workload::RlStep,
+    ]
+    .into_iter()
+    .map(|workload| JobSpec { workload, params: presets::standard(), seed: 42 })
+    .collect();
+    let results = run_all(specs, workers);
+    let mut t = Table::new(
+        "cross-domain suite on standard WindMill (three aspects, paper §V)",
+        &["workload", "cycles", "wm time", "cpu time", "vs CPU", "vs GPU"],
+    );
+    for r in results {
+        match r {
+            Ok(r) => {
+                t.row(&[
+                    r.name,
+                    r.cycles.to_string(),
+                    windmill::util::stats::fmt_ns(r.wm_time_ns),
+                    windmill::util::stats::fmt_ns(r.cpu_time_ns),
+                    format!("{:.1}x", r.speedup_vs_cpu),
+                    format!("{:.2}x", r.speedup_vs_gpu),
+                ]);
+            }
+            Err(e) => eprintln!("job failed: {e}"),
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_plugins() -> Result<(), String> {
+    let g = plugins::generator(presets::standard());
+    println!("plugins ({}):", g.plugin_count());
+    for name in g.plugin_names() {
+        println!("  - {name}");
+    }
+    println!("\nfunction tree:");
+    for (leaf, kind) in g.tree().leaves() {
+        println!("  {:9} {leaf}", format!("{kind:?}"));
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print!("{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "generate" => cmd_generate(&rest),
+        "report" => cmd_report(&rest),
+        "run" => cmd_run(&rest),
+        "suite" => cmd_suite(&rest),
+        "plugins" => cmd_plugins(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Gate-level area model, calibrated for a 40 nm-class process.
+//!
+//! Each architectural block gets a NAND2-equivalent gate count from
+//! standard digital-design estimates (ripple/carry-select adders, array
+//! multipliers, mux trees, regfiles). The WindMill plugins stamp these
+//! numbers into the netlist modules they create (`Module::own_gates`), and
+//! [`AreaReport::of`] turns aggregate netlist statistics into mm².
+//!
+//! Anchors: SMIC 40 nm NAND2 ≈ 0.9 µm²; 6T SRAM bit ≈ 0.55 µm² (macro,
+//! including periphery amortized); flip-flop ≈ 6 gate-equivalents.
+
+use crate::arch::params::WindMillParams;
+use crate::netlist::NetlistStats;
+
+/// µm² per NAND2-equivalent gate at 40 nm.
+pub const UM2_PER_GATE: f64 = 0.9;
+/// µm² per SRAM bit (macro-level, periphery amortized).
+pub const UM2_PER_SRAM_BIT: f64 = 0.55;
+/// Gate-equivalents per flip-flop bit.
+pub const GATES_PER_FF: f64 = 6.0;
+
+/// Gate-count estimates for the architectural blocks, parameterized by the
+/// data-path width `w` (bits). These are the single source the plugins use
+/// when stamping `own_gates` into their netlist modules.
+pub mod gates {
+    /// w-bit 2-input ALU (add/sub/logic/shift/compare/select data-path +
+    /// result mux tree).
+    pub fn alu(w: u32) -> f64 {
+        // adder ~9 g/bit, logic unit ~4 g/bit, barrel shifter ~8 g/bit,
+        // compare ~3 g/bit, select/mux tree ~6 g/bit.
+        30.0 * w as f64
+    }
+
+    /// w×w array multiplier with MAC accumulator.
+    pub fn multiplier(w: u32) -> f64 {
+        // ~9 gates per full-adder cell, w^2 cells, plus accumulator.
+        9.0 * (w as f64) * (w as f64) + 12.0 * w as f64
+    }
+
+    /// Special-function unit (tanh/exp/log/recip/sqrt/div): piecewise LUT
+    /// + two Newton iterations sharing the multiplier — dominated by the
+    /// LUT and control.
+    pub fn sfu(w: u32) -> f64 {
+        24.0 * (w as f64) * (w as f64) / 4.0 + 4096.0
+    }
+
+    /// Register file: `entries` × w bits, 2R1W.
+    pub fn regfile(entries: usize, w: u32) -> f64 {
+        entries as f64 * w as f64 * super::GATES_PER_FF * 1.3 // + decode
+    }
+
+    /// Instruction/config decode logic.
+    pub fn decoder(cfg_bits: u32) -> f64 {
+        40.0 * cfg_bits as f64 / 4.0
+    }
+
+    /// Iteration-control block (counters + compare + PC update).
+    pub fn iter_control() -> f64 {
+        900.0
+    }
+
+    /// n-requester round-robin arbiter for one grant port.
+    pub fn rr_arbiter(n: usize) -> f64 {
+        // priority rotate + grant mask ~ 14 gates/requester + mux tree.
+        14.0 * n as f64 + 6.0 * (n as f64) * (n as f64).log2().ceil()
+    }
+
+    /// AXI-lite slave bridge.
+    pub fn axi_bridge(w: u32) -> f64 {
+        2200.0 + 10.0 * w as f64
+    }
+
+    /// DMA engine (address generators + burst control), `w`-bit bus.
+    pub fn dma(w: u32) -> f64 {
+        3000.0 + 20.0 * w as f64
+    }
+
+    /// Register-transformation table with `entries` mapping registers.
+    pub fn rtt(entries: usize, w: u32) -> f64 {
+        entries as f64 * (w as f64 * super::GATES_PER_FF + 60.0)
+    }
+
+    /// Crossbar/mux for one PE's input ports (`ports` candidates, w bits).
+    pub fn port_mux(ports: usize, w: u32) -> f64 {
+        // mux2 ≈ 3 gates/bit; a `ports`-way mux is (ports-1) mux2 levels.
+        3.0 * w as f64 * (ports.saturating_sub(1)) as f64
+    }
+
+    /// Shared-register group (regs × w bits, multi-port).
+    pub fn shared_regs(regs: usize, w: u32) -> f64 {
+        regs as f64 * w as f64 * super::GATES_PER_FF * 1.8 // extra ports
+    }
+}
+
+/// Area report for one elaborated design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaReport {
+    pub logic_gates: f64,
+    pub ff_bits: f64,
+    pub sram_bits: f64,
+    pub logic_mm2: f64,
+    pub sram_mm2: f64,
+    pub total_mm2: f64,
+}
+
+impl AreaReport {
+    /// Compute area from netlist statistics plus the SRAM macros implied
+    /// by the parameters (SRAM is a hard macro, not synthesized gates).
+    pub fn of(stats: &NetlistStats, params: &WindMillParams) -> AreaReport {
+        let context_bits = params.pe_count() as f64
+            * params.context_depth as f64
+            * crate::arch::isa::ConfigWord::ENCODED_BITS as f64;
+        let smem_bits = params.smem.total_bits() as f64 * params.rca_count as f64;
+        // Context memories exist in every RCA's PEA.
+        let sram_bits = context_bits * params.rca_count as f64 + smem_bits;
+        let logic_gates = stats.total_gates + stats.total_ff_bits * GATES_PER_FF;
+        let logic_mm2 = logic_gates * UM2_PER_GATE / 1e6;
+        let sram_mm2 = sram_bits * UM2_PER_SRAM_BIT / 1e6;
+        AreaReport {
+            logic_gates,
+            ff_bits: stats.total_ff_bits,
+            sram_bits,
+            logic_mm2,
+            sram_mm2,
+            total_mm2: logic_mm2 + sram_mm2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_costs_scale_with_width() {
+        assert!(gates::alu(32) > gates::alu(16));
+        assert!(gates::multiplier(32) > 4.0 * gates::alu(32)); // mul >> alu
+        assert!(gates::sfu(32) > gates::multiplier(32) * 0.5);
+    }
+
+    #[test]
+    fn multiplier_is_quadratic() {
+        let m16 = gates::multiplier(16);
+        let m32 = gates::multiplier(32);
+        assert!(m32 / m16 > 3.0 && m32 / m16 < 4.5, "{}", m32 / m16);
+    }
+
+    #[test]
+    fn arbiter_grows_superlinearly() {
+        let a4 = gates::rr_arbiter(4);
+        let a28 = gates::rr_arbiter(28);
+        assert!(a28 > 7.0 * a4 * 0.5);
+        assert!(a28 < 28.0 * a4);
+    }
+
+    #[test]
+    fn port_mux_zero_for_single_port() {
+        assert_eq!(gates::port_mux(1, 32), 0.0);
+        assert!(gates::port_mux(8, 32) > gates::port_mux(4, 32));
+    }
+
+    #[test]
+    fn area_report_combines_logic_and_sram() {
+        use crate::arch::presets;
+        let stats = NetlistStats {
+            module_defs: 3,
+            total_instances: 10.0,
+            total_gates: 1_000_000.0,
+            total_ff_bits: 100_000.0,
+            total_wires: 5_000.0,
+            gates_by_plugin: Default::default(),
+        };
+        let r = AreaReport::of(&stats, &presets::standard());
+        assert!(r.total_mm2 > r.logic_mm2);
+        assert!(r.total_mm2 > r.sram_mm2);
+        assert!((r.logic_mm2 - (1_000_000.0 + 600_000.0) * 0.9 / 1e6).abs() < 1e-9);
+        // Standard: 16 banks*256*32 bits smem (x4 RCA) + context memories.
+        assert!(r.sram_bits > 4.0 * 16.0 * 256.0 * 32.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Baseline execution-cost models: the paper's CPU and GPU comparison
+//! points (§VI: "200× compared to CPU and 2.3× compared to GPU").
+//!
+//! * [`CpuModel`] — the host-side baseline: a VexRiscv-class in-order
+//!   RV32IMF core running the workload's scalar schedule. This matches the
+//!   paper's system model, where the CPU alternative to launching the RCA
+//!   is executing on the integrated host.
+//! * [`GpuModel`] — a discrete-GPU execution model with per-kernel launch
+//!   overhead, PCIe transfer cost, and SIMT under-utilisation on small
+//!   batches. The RL training step is exactly the regime (tiny tensors,
+//!   many dependent kernels) where a 750 MHz spatial array beats a GPU by
+//!   a small factor — the paper's 2.3×.
+//!
+//! Numeric *results* for the GPU baseline come from executing the AOT'd
+//! JAX/Pallas artifact through PJRT (`crate::runtime`); these models supply
+//! the *timing*, since the image has neither the authors' CPU nor any GPU.
+
+use crate::arch::isa::{Op, OpClass};
+
+/// Workload statement consumed by the baselines: dynamic op counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpCounts {
+    pub alu: u64,
+    pub mul: u64,
+    pub sfu: u64,
+    pub mem: u64,
+    /// Route/copy ops (free on CPU — register moves — but counted).
+    pub route: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.alu + self.mul + self.sfu + self.mem + self.route
+    }
+
+    pub fn add_op(&mut self, op: Op, times: u64) {
+        match op.class() {
+            OpClass::Alu => self.alu += times,
+            OpClass::Mul => self.mul += times,
+            OpClass::Sfu => self.sfu += times,
+            OpClass::Mem => self.mem += times,
+            OpClass::Route => self.route += times,
+            OpClass::Control => {}
+        }
+    }
+}
+
+/// In-order scalar host CPU (VexRiscv-class RV32IMF).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuModel {
+    pub freq_mhz: f64,
+    /// Cycles per simple integer/FP-add class op (issue + forward stalls).
+    pub cpi_alu: f64,
+    /// Cycles per FP multiply.
+    pub cpi_mul: f64,
+    /// Cycles per special function (tanh/exp via libm software sequence).
+    pub cpi_sfu: f64,
+    /// Cycles per load/store (D$ hit dominated).
+    pub cpi_mem: f64,
+    /// Loop/bookkeeping overhead factor on the op stream.
+    pub overhead: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        // VexRiscv "full" pipeline with FPU at a 40 nm-class SoC clock.
+        CpuModel {
+            freq_mhz: 150.0,
+            cpi_alu: 1.3,
+            cpi_mul: 4.0,
+            cpi_sfu: 60.0, // polynomial/libm sequence
+            cpi_mem: 2.0,
+            overhead: 1.35, // loop control, address arithmetic
+        }
+    }
+}
+
+impl CpuModel {
+    /// Execution time in nanoseconds for an op-count profile.
+    pub fn time_ns(&self, ops: &OpCounts) -> f64 {
+        let cycles = ops.alu as f64 * self.cpi_alu
+            + ops.mul as f64 * self.cpi_mul
+            + ops.sfu as f64 * self.cpi_sfu
+            + ops.mem as f64 * self.cpi_mem
+            + ops.route as f64 * self.cpi_alu * 0.5;
+        cycles * self.overhead * 1e3 / self.freq_mhz
+    }
+}
+
+/// Discrete GPU with launch/transfer overheads and small-batch SIMT
+/// under-utilisation (the regime of the paper's RL comparison).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuModel {
+    /// Host-side launch + driver overhead per kernel, ns.
+    pub launch_ns: f64,
+    /// Kernels per workload step that cannot fuse (dependent stages).
+    /// Computed by the caller from the workload's stage structure.
+    pub sustained_gflops_large: f64,
+    /// Effective utilisation on a tensor with `n` parallel elements:
+    /// `n / (n + n_half)` — half peak at `n_half` elements.
+    pub n_half: f64,
+    /// PCIe/staging bytes-per-ns (only charged when `transfer_bytes > 0`).
+    pub transfer_gbps: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            launch_ns: 5_000.0,          // ~5 µs per kernel launch
+            sustained_gflops_large: 4000.0, // mid-range accelerator
+            n_half: 4.0e5,               // needs ~400k elements for half peak
+            transfer_gbps: 12.0,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Execution time in nanoseconds.
+    ///
+    /// * `flops` — useful floating-point ops in the step.
+    /// * `parallel_elems` — elements available to fill the SIMT machine
+    ///   (smallest tensor on the critical path).
+    /// * `kernels` — unfusable dependent kernel launches in the step.
+    /// * `transfer_bytes` — host<->device traffic for the step.
+    pub fn time_ns(
+        &self,
+        flops: f64,
+        parallel_elems: f64,
+        kernels: u32,
+        transfer_bytes: f64,
+    ) -> f64 {
+        let util = parallel_elems / (parallel_elems + self.n_half);
+        let eff_gflops = (self.sustained_gflops_large * util).max(1e-3);
+        let compute_ns = flops / eff_gflops; // GFLOPs == flops/ns
+        let launch_ns = kernels as f64 * self.launch_ns;
+        let xfer_ns = transfer_bytes / self.transfer_gbps;
+        compute_ns + launch_ns + xfer_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_counts_classify() {
+        let mut c = OpCounts::default();
+        c.add_op(Op::Add, 10);
+        c.add_op(Op::Mac, 5);
+        c.add_op(Op::Tanh, 2);
+        c.add_op(Op::Load, 3);
+        c.add_op(Op::Route, 1);
+        c.add_op(Op::Nop, 100); // control: uncounted
+        assert_eq!(c.alu, 10);
+        assert_eq!(c.mul, 5);
+        assert_eq!(c.sfu, 2);
+        assert_eq!(c.mem, 3);
+        assert_eq!(c.route, 1);
+        assert_eq!(c.total(), 21);
+    }
+
+    #[test]
+    fn cpu_time_scales_with_ops() {
+        let cpu = CpuModel::default();
+        let small = OpCounts { mul: 1_000, ..Default::default() };
+        let big = OpCounts { mul: 10_000, ..Default::default() };
+        assert!((cpu.time_ns(&big) / cpu.time_ns(&small) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_sfu_is_expensive() {
+        let cpu = CpuModel::default();
+        let alu = OpCounts { alu: 100, ..Default::default() };
+        let sfu = OpCounts { sfu: 100, ..Default::default() };
+        assert!(cpu.time_ns(&sfu) > 20.0 * cpu.time_ns(&alu));
+    }
+
+    #[test]
+    fn gpu_small_batches_pay_launch_overhead() {
+        let gpu = GpuModel::default();
+        // RL-step-like: 100 kflops, tiny parallelism, 6 kernels.
+        let t = gpu.time_ns(1e5, 128.0, 6, 0.0);
+        assert!(t > 6.0 * gpu.launch_ns, "launch should dominate: {t}");
+    }
+
+    #[test]
+    fn gpu_large_batches_amortize() {
+        let gpu = GpuModel::default();
+        let t_large = gpu.time_ns(1e12, 1e8, 6, 0.0);
+        // Near-peak: within 2x of ideal compute time.
+        assert!(t_large < 2.0 * 1e12 / gpu.sustained_gflops_large);
+    }
+
+    #[test]
+    fn gpu_transfer_charged() {
+        let gpu = GpuModel::default();
+        let t0 = gpu.time_ns(1e5, 1e4, 1, 0.0);
+        let t1 = gpu.time_ns(1e5, 1e4, 1, 1e6);
+        assert!(t1 > t0);
+    }
+}

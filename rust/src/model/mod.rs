@@ -1,0 +1,27 @@
+//! Analytic PPA and baseline cost models.
+//!
+//! The paper's evaluation was synthesized at SMIC 40 nm (750 MHz, 16.15 mW)
+//! and compared against CPU and GPU executions. None of that hardware is
+//! available here, so this module substitutes calibrated analytic models
+//! (see DESIGN.md §2 for the substitution argument):
+//!
+//! * [`area`] — NAND2-equivalent gate counts per architectural block →
+//!   mm² at 40 nm. Fig. 6a–c report *relative* area scaling, which the
+//!   model preserves; the absolute scale is anchored to 40 nm library data.
+//! * [`timing`] — FO4-based critical-path estimate → achievable clock.
+//!   Anchored so the standard WindMill lands at the paper's 750 MHz.
+//! * [`power`] — activity-based dynamic + leakage power. Anchored so the
+//!   standard WindMill at 750 MHz lands at the paper's 16.15 mW.
+//! * [`baseline`] — cost models for the paper's comparison points: a
+//!   VexRiscv-class in-order host CPU and a discrete-GPU execution model
+//!   with kernel-launch overhead (the regime behind the 2.3× claim).
+
+pub mod area;
+pub mod baseline;
+pub mod power;
+pub mod timing;
+
+pub use area::AreaReport;
+pub use baseline::{CpuModel, GpuModel};
+pub use power::PowerReport;
+pub use timing::TimingReport;

@@ -1,0 +1,387 @@
+//! Structural netlist IR.
+//!
+//! Deliberately RTL-shaped but minimal: modules with typed ports, wires,
+//! continuous assigns (free-form expression text) and child instances.
+//! Enough structure for (a) deterministic Verilog emission, (b) structural
+//! validation (no dangling connections), (c) gate/area accounting, and
+//! (d) provenance-exact plugin-unplug diffing.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::diag::error::DiagError;
+
+/// Port direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    In,
+    Out,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Port {
+    pub name: String,
+    pub dir: Dir,
+    pub width: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wire {
+    pub name: String,
+    pub width: u32,
+}
+
+/// Continuous assignment `assign lhs = rhs;` — `rhs` is expression text.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assign {
+    pub lhs: String,
+    pub rhs: String,
+}
+
+/// Child module instantiation with named port connections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instance {
+    pub name: String,
+    pub module: String,
+    /// (child port, local net) pairs.
+    pub connections: Vec<(String, String)>,
+}
+
+/// One module definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Module {
+    pub name: String,
+    /// Plugin that created this module (provenance for unplug diffs).
+    pub provenance: String,
+    pub ports: Vec<Port>,
+    pub wires: Vec<Wire>,
+    pub assigns: Vec<Assign>,
+    pub instances: Vec<Instance>,
+    /// Estimated combinational+sequential gate count of the module's *own*
+    /// logic (children counted separately). Loaded by the owning plugin
+    /// from `model::area` block costs.
+    pub own_gates: f64,
+    /// Estimated own-logic flip-flop bit count (for power model).
+    pub own_ff_bits: f64,
+}
+
+impl Module {
+    pub fn new(name: impl Into<String>, provenance: impl Into<String>) -> Self {
+        Module {
+            name: name.into(),
+            provenance: provenance.into(),
+            ports: Vec::new(),
+            wires: Vec::new(),
+            assigns: Vec::new(),
+            instances: Vec::new(),
+            own_gates: 0.0,
+            own_ff_bits: 0.0,
+        }
+    }
+
+    pub fn port(&mut self, name: &str, dir: Dir, width: u32) -> &mut Self {
+        self.ports.push(Port { name: name.into(), dir, width });
+        self
+    }
+
+    pub fn input(&mut self, name: &str, width: u32) -> &mut Self {
+        self.port(name, Dir::In, width)
+    }
+
+    pub fn output(&mut self, name: &str, width: u32) -> &mut Self {
+        self.port(name, Dir::Out, width)
+    }
+
+    pub fn wire(&mut self, name: &str, width: u32) -> &mut Self {
+        self.wires.push(Wire { name: name.into(), width });
+        self
+    }
+
+    pub fn assign(&mut self, lhs: &str, rhs: &str) -> &mut Self {
+        self.assigns.push(Assign { lhs: lhs.into(), rhs: rhs.into() });
+        self
+    }
+
+    pub fn instance(&mut self, name: &str, module: &str, conns: &[(&str, &str)]) -> &mut Self {
+        self.instances.push(Instance {
+            name: name.into(),
+            module: module.into(),
+            connections: conns.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect(),
+        });
+        self
+    }
+
+    pub fn gates(&mut self, own_gates: f64, own_ff_bits: f64) -> &mut Self {
+        self.own_gates = own_gates;
+        self.own_ff_bits = own_ff_bits;
+        self
+    }
+
+    /// Names visible as connection targets inside this module.
+    fn local_nets(&self) -> BTreeSet<&str> {
+        self.ports
+            .iter()
+            .map(|p| p.name.as_str())
+            .chain(self.wires.iter().map(|w| w.name.as_str()))
+            .collect()
+    }
+}
+
+/// A whole design: a set of modules plus a designated top.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    modules: Vec<Module>,
+    top: Option<String>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a module; name must be unique.
+    pub fn add(&mut self, module: Module) -> Result<(), DiagError> {
+        if self.find(&module.name).is_some() {
+            return Err(DiagError::MalformedNetlist(format!(
+                "duplicate module `{}`",
+                module.name
+            )));
+        }
+        self.modules.push(module);
+        Ok(())
+    }
+
+    pub fn set_top(&mut self, name: &str) {
+        self.top = Some(name.to_string());
+    }
+
+    pub fn top(&self) -> Option<&Module> {
+        self.top.as_deref().and_then(|t| self.find(t))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Module> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    pub fn find_mut(&mut self, name: &str) -> Option<&mut Module> {
+        self.modules.iter_mut().find(|m| m.name == name)
+    }
+
+    pub fn modules(&self) -> &[Module] {
+        &self.modules
+    }
+
+    /// Module names sorted (deterministic iteration order for emission).
+    pub fn module_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.modules.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Modules created by a given plugin.
+    pub fn by_provenance(&self, plugin: &str) -> Vec<&Module> {
+        self.modules.iter().filter(|m| m.provenance == plugin).collect()
+    }
+
+    /// Structural validation:
+    /// * a top module is set and exists,
+    /// * every instance references an existing module,
+    /// * every instance connection targets an existing child port and an
+    ///   existing local net,
+    /// * every assign lhs is a local net,
+    /// * no module instantiates itself (directly) — cheap cycle guard.
+    pub fn validate(&self) -> Result<(), DiagError> {
+        let top = self
+            .top
+            .as_deref()
+            .ok_or_else(|| DiagError::MalformedNetlist("no top module set".into()))?;
+        if self.find(top).is_none() {
+            return Err(DiagError::MalformedNetlist(format!("top `{top}` not found")));
+        }
+        let by_name: BTreeMap<&str, &Module> =
+            self.modules.iter().map(|m| (m.name.as_str(), m)).collect();
+        for m in &self.modules {
+            let nets = m.local_nets();
+            for a in &m.assigns {
+                // lhs may be a bit-select like `w[3]`; validate the base.
+                let base = a.lhs.split('[').next().unwrap_or(&a.lhs);
+                if !nets.contains(base) {
+                    return Err(DiagError::MalformedNetlist(format!(
+                        "module `{}`: assign to undeclared net `{}`",
+                        m.name, a.lhs
+                    )));
+                }
+            }
+            for inst in &m.instances {
+                if inst.module == m.name {
+                    return Err(DiagError::MalformedNetlist(format!(
+                        "module `{}` instantiates itself",
+                        m.name
+                    )));
+                }
+                let child = by_name.get(inst.module.as_str()).ok_or_else(|| {
+                    DiagError::MalformedNetlist(format!(
+                        "module `{}`: instance `{}` of unknown module `{}`",
+                        m.name, inst.name, inst.module
+                    ))
+                })?;
+                let child_ports: BTreeSet<&str> =
+                    child.ports.iter().map(|p| p.name.as_str()).collect();
+                for (port, net) in &inst.connections {
+                    if !child_ports.contains(port.as_str()) {
+                        return Err(DiagError::MalformedNetlist(format!(
+                            "module `{}`: instance `{}` connects unknown port `{}.{}`",
+                            m.name, inst.name, inst.module, port
+                        )));
+                    }
+                    let base = net.split('[').next().unwrap_or(net);
+                    // Constant tie-offs (e.g. 1'b0) are allowed.
+                    let is_const = base.chars().next().is_some_and(|c| c.is_ascii_digit());
+                    if !is_const && !nets.contains(base) {
+                        return Err(DiagError::MalformedNetlist(format!(
+                            "module `{}`: instance `{}` uses undeclared net `{}`",
+                            m.name, inst.name, net
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiation counts of each module under the top (recursive).
+    pub fn instantiation_counts(&self) -> BTreeMap<String, f64> {
+        let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+        let Some(top) = self.top() else {
+            return counts;
+        };
+        fn walk(nl: &Netlist, m: &Module, mult: f64, counts: &mut BTreeMap<String, f64>) {
+            *counts.entry(m.name.clone()).or_insert(0.0) += mult;
+            for inst in &m.instances {
+                if let Some(child) = nl.find(&inst.module) {
+                    walk(nl, child, mult, counts);
+                }
+            }
+        }
+        walk(self, top, 1.0, &mut counts);
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Netlist {
+        let mut nl = Netlist::new();
+        let mut alu = Module::new("alu", "gpe");
+        alu.input("a", 32).input("b", 32).output("y", 32);
+        alu.assign("y", "a + b").gates(300.0, 0.0);
+        nl.add(alu).unwrap();
+
+        let mut top = Module::new("top", "system");
+        top.input("x", 32).output("z", 32).wire("t", 32);
+        top.assign("t", "x");
+        top.instance("u_alu", "alu", &[("a", "t"), ("b", "x"), ("y", "z")]);
+        nl.add(top).unwrap();
+        nl.set_top("top");
+        nl
+    }
+
+    #[test]
+    fn valid_netlist_passes() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_module_rejected() {
+        let mut nl = tiny();
+        let err = nl.add(Module::new("alu", "other")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn missing_top_rejected() {
+        let mut nl = Netlist::new();
+        nl.add(Module::new("m", "p")).unwrap();
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_child_module_rejected() {
+        let mut nl = tiny();
+        nl.find_mut("top").unwrap().instance("u2", "ghost", &[]);
+        let err = nl.validate().unwrap_err();
+        assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn unknown_child_port_rejected() {
+        let mut nl = tiny();
+        nl.find_mut("top").unwrap().instance("u2", "alu", &[("nope", "x")]);
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn undeclared_net_rejected() {
+        let mut nl = tiny();
+        nl.find_mut("top").unwrap().instance("u2", "alu", &[("a", "phantom")]);
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn const_tieoff_allowed() {
+        let mut nl = tiny();
+        nl.find_mut("top")
+            .unwrap()
+            .instance("u2", "alu", &[("a", "1'b0"), ("b", "x"), ("y", "t")]);
+        nl.validate().unwrap();
+    }
+
+    #[test]
+    fn self_instantiation_rejected() {
+        let mut nl = tiny();
+        nl.find_mut("alu").unwrap().instance("me", "alu", &[]);
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn assigned_bit_select_base_checked() {
+        let mut nl = tiny();
+        nl.find_mut("top").unwrap().assign("t[3]", "x[0]");
+        nl.validate().unwrap();
+        nl.find_mut("top").unwrap().assign("ghost[1]", "x[0]");
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn instantiation_counts_multiply() {
+        let mut nl = Netlist::new();
+        let mut leaf = Module::new("leaf", "p");
+        leaf.input("i", 1);
+        nl.add(leaf).unwrap();
+        let mut mid = Module::new("mid", "p");
+        mid.input("i", 1);
+        mid.instance("l0", "leaf", &[("i", "i")]);
+        mid.instance("l1", "leaf", &[("i", "i")]);
+        nl.add(mid).unwrap();
+        let mut top = Module::new("top", "p");
+        top.input("i", 1);
+        top.instance("m0", "mid", &[("i", "i")]);
+        top.instance("m1", "mid", &[("i", "i")]);
+        top.instance("m2", "mid", &[("i", "i")]);
+        nl.add(top).unwrap();
+        nl.set_top("top");
+        let c = nl.instantiation_counts();
+        assert_eq!(c["top"], 1.0);
+        assert_eq!(c["mid"], 3.0);
+        assert_eq!(c["leaf"], 6.0);
+    }
+
+    #[test]
+    fn provenance_filter() {
+        let nl = tiny();
+        assert_eq!(nl.by_provenance("gpe").len(), 1);
+        assert_eq!(nl.by_provenance("system").len(), 1);
+        assert!(nl.by_provenance("nobody").is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Generation-layer output: a structural netlist IR and its Verilog view.
+//!
+//! DIAG's Generation layer translates the elaborated plugin graph into
+//! "hardware circuit described in Verilog/VHDL" (paper §III-A.4). Here the
+//! plugins build this IR during `create_early`/`create_late`; the
+//! [`verilog`] emitter renders deterministic Verilog text, [`stats`]
+//! aggregates the structural counts the analytic PPA models consume, and
+//! every module records which plugin produced it so the unplug-residue
+//! experiments can diff provenance exactly.
+
+pub mod ir;
+pub mod stats;
+pub mod verilog;
+
+pub use ir::{Assign, Dir, Instance, Module, Netlist, Port, Wire};
+pub use stats::NetlistStats;

@@ -1,0 +1,101 @@
+//! Structural accounting over a netlist — the inputs to the PPA models.
+
+use std::collections::BTreeMap;
+
+use super::ir::Netlist;
+
+/// Aggregate structural statistics of an elaborated design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetlistStats {
+    /// Distinct module definitions.
+    pub module_defs: usize,
+    /// Total module instantiations under the top (recursive).
+    pub total_instances: f64,
+    /// Total estimated gates (own_gates × instantiation count, summed).
+    pub total_gates: f64,
+    /// Total estimated flip-flop bits.
+    pub total_ff_bits: f64,
+    /// Total declared wires weighted by instantiation count.
+    pub total_wires: f64,
+    /// Gates attributed to each plugin (provenance), for unplug diffs.
+    pub gates_by_plugin: BTreeMap<String, f64>,
+}
+
+impl NetlistStats {
+    pub fn of(netlist: &Netlist) -> NetlistStats {
+        let counts = netlist.instantiation_counts();
+        let mut total_gates = 0.0;
+        let mut total_ff_bits = 0.0;
+        let mut total_wires = 0.0;
+        let mut total_instances = 0.0;
+        let mut gates_by_plugin: BTreeMap<String, f64> = BTreeMap::new();
+        for m in netlist.modules() {
+            let n = counts.get(&m.name).copied().unwrap_or(0.0);
+            total_instances += n;
+            total_gates += m.own_gates * n;
+            total_ff_bits += m.own_ff_bits * n;
+            total_wires += m.wires.len() as f64 * n;
+            *gates_by_plugin.entry(m.provenance.clone()).or_insert(0.0) += m.own_gates * n;
+        }
+        NetlistStats {
+            module_defs: netlist.modules().len(),
+            total_instances,
+            total_gates,
+            total_ff_bits,
+            total_wires,
+            gates_by_plugin,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::ir::{Module, Netlist};
+
+    fn design() -> Netlist {
+        let mut nl = Netlist::new();
+        let mut pe = Module::new("pe", "gpe");
+        pe.input("i", 1).wire("w0", 8).wire("w1", 8);
+        pe.gates(1000.0, 128.0);
+        nl.add(pe).unwrap();
+        let mut top = Module::new("top", "system");
+        top.input("i", 1);
+        top.gates(50.0, 0.0);
+        for k in 0..4 {
+            top.instance(&format!("pe{k}"), "pe", &[("i", "i")]);
+        }
+        nl.add(top).unwrap();
+        nl.set_top("top");
+        nl
+    }
+
+    #[test]
+    fn totals_scale_with_instantiation() {
+        let s = NetlistStats::of(&design());
+        assert_eq!(s.module_defs, 2);
+        assert_eq!(s.total_instances, 5.0);
+        assert_eq!(s.total_gates, 4.0 * 1000.0 + 50.0);
+        assert_eq!(s.total_ff_bits, 512.0);
+        assert_eq!(s.total_wires, 8.0);
+    }
+
+    #[test]
+    fn per_plugin_attribution() {
+        let s = NetlistStats::of(&design());
+        assert_eq!(s.gates_by_plugin["gpe"], 4000.0);
+        assert_eq!(s.gates_by_plugin["system"], 50.0);
+    }
+
+    #[test]
+    fn unreferenced_module_counts_zero() {
+        let mut nl = design();
+        let mut orphan = Module::new("orphan", "ghost");
+        orphan.gates(1e9, 0.0);
+        nl.add(orphan).unwrap();
+        let s = NetlistStats::of(&nl);
+        // Defined but never instantiated under top: contributes nothing.
+        assert_eq!(s.total_gates, 4050.0);
+        assert_eq!(s.gates_by_plugin.get("ghost").copied().unwrap_or(0.0), 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Execute-stage functional-unit plugins: the Fig. 3 chain the GPE
+//! assembles. ALU and MUL are part of the basic framework; the SFU is an
+//! extension — unplugging it removes `OpClass::Sfu` from every PE's
+//! capability set and every trace of its logic from the netlist.
+
+use std::rc::Rc;
+
+use crate::arch::isa::OpClass;
+use crate::arch::params::WindMillParams;
+use crate::diag::{DiagError, ElabCtx, Plugin};
+use crate::model::area::gates;
+use crate::netlist::Module;
+
+use super::services::FuService;
+use super::WindMill;
+
+/// 32-bit ALU (add/sub/logic/shift/compare/select) + route path.
+pub struct AluFuPlugin;
+
+impl Plugin<WindMill> for AluFuPlugin {
+    fn name(&self) -> &'static str {
+        "fu-alu"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/fu/alu"
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let mut m = Module::new("fu_alu", "");
+        m.input("a", w)
+            .input("b", w)
+            .input("op", 5)
+            .output("y", w)
+            .assign("y", "a /* alu result mux */");
+        m.gates(gates::alu(w), 0.0);
+        ctx.add_module(m)?;
+        ctx.provide(
+            30,
+            Rc::new(FuService {
+                module: "fu_alu",
+                classes: vec![OpClass::Alu, OpClass::Route, OpClass::Control],
+                stages: 1,
+            }),
+        );
+        Ok(())
+    }
+}
+
+/// 32×32 array multiplier with MAC accumulator (2 execute stages).
+pub struct MulFuPlugin;
+
+impl Plugin<WindMill> for MulFuPlugin {
+    fn name(&self) -> &'static str {
+        "fu-mul"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/fu/mul"
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let mut m = Module::new("fu_mul", "");
+        m.input("a", w)
+            .input("b", w)
+            .input("acc", w)
+            .input("mac_en", 1)
+            .output("y", w)
+            .assign("y", "a /* mul/mac array */");
+        m.gates(gates::multiplier(w), 2.0 * w as f64); // pipeline regs
+        ctx.add_module(m)?;
+        ctx.provide(
+            20,
+            Rc::new(FuService { module: "fu_mul", classes: vec![OpClass::Mul], stages: 2 }),
+        );
+        Ok(())
+    }
+}
+
+/// Special-function unit: tanh/exp/log/recip/sqrt/div via LUT + Newton
+/// iterations. Extension plugin — the RL workload needs it; pure
+/// linear-algebra variants unplug it (Fig. 6b PE-type sweep).
+pub struct SfuFuPlugin;
+
+impl Plugin<WindMill> for SfuFuPlugin {
+    fn name(&self) -> &'static str {
+        "fu-sfu"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/fu/sfu"
+    }
+
+    fn create_config(&mut self, p: &mut WindMillParams) -> Result<(), DiagError> {
+        if !p.sfu_enabled {
+            return Err(DiagError::InvalidParams(
+                "SFU plugin plugged but params.sfu_enabled is false".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let mut m = Module::new("fu_sfu", "");
+        m.input("a", w)
+            .input("b", w)
+            .input("fn_sel", 3)
+            .output("y", w)
+            .assign("y", "a /* sfu lut+newton */");
+        m.gates(gates::sfu(w), 4.0 * w as f64);
+        ctx.add_module(m)?;
+        ctx.provide(
+            10,
+            Rc::new(FuService { module: "fu_sfu", classes: vec![OpClass::Sfu], stages: 4 }),
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::diag::Generator;
+    use crate::plugins::windmill_tree;
+
+    /// Minimal harness: elaborate just the FU plugins plus a stub top.
+    struct StubTop;
+    impl Plugin<WindMill> for StubTop {
+        fn name(&self) -> &'static str {
+            "stub-top"
+        }
+        fn function(&self) -> &'static str {
+            "system"
+        }
+        fn create_late(
+            &mut self,
+            _p: &WindMillParams,
+            ctx: &mut ElabCtx<WindMill>,
+        ) -> Result<(), DiagError> {
+            let mut m = Module::new("top", "");
+            m.input("clk", 1);
+            ctx.add_module(m)?;
+            ctx.set_top("top");
+            Ok(())
+        }
+    }
+
+    fn fu_tree() -> crate::diag::FunctionTree {
+        let mut t = crate::diag::FunctionTree::new();
+        t.basic("pe/fu/alu").basic("pe/fu/mul").extension("pe/fu/sfu").basic("system");
+        t
+    }
+
+    #[test]
+    fn fu_chain_orders_alu_mul_sfu() {
+        let mut g = Generator::<WindMill>::new(fu_tree(), presets::standard())
+            .with(Box::new(AluFuPlugin))
+            .with(Box::new(SfuFuPlugin))
+            .with(Box::new(MulFuPlugin))
+            .with(Box::new(StubTop));
+        let e = g.elaborate().unwrap();
+        // Chain order comes from priority, not insertion.
+        let mods: Vec<&str> = e.netlist.module_names();
+        assert!(mods.contains(&"fu_alu"));
+        assert!(mods.contains(&"fu_mul"));
+        assert!(mods.contains(&"fu_sfu"));
+    }
+
+    #[test]
+    fn sfu_requires_param_flag() {
+        let mut p = presets::standard();
+        p.sfu_enabled = false;
+        let mut g = Generator::<WindMill>::new(fu_tree(), p)
+            .with(Box::new(AluFuPlugin))
+            .with(Box::new(MulFuPlugin))
+            .with(Box::new(SfuFuPlugin))
+            .with(Box::new(StubTop));
+        let err = g.elaborate().map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("sfu_enabled"));
+    }
+
+    #[test]
+    fn sfu_costs_more_than_alu() {
+        let e = crate::plugins::elaborate(presets::standard()).unwrap();
+        let alu = e.netlist.find("fu_alu").unwrap().own_gates;
+        let sfu = e.netlist.find("fu_sfu").unwrap().own_gates;
+        let mul = e.netlist.find("fu_mul").unwrap().own_gates;
+        assert!(mul > alu);
+        assert!(sfu > alu);
+    }
+
+    #[test]
+    fn tree_accepts_full_set() {
+        // The real tree declares all three FU fragments.
+        let t = windmill_tree();
+        assert!(t.contains("pe/fu/alu"));
+        assert!(t.contains("pe/fu/sfu"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Host-side plugins: the register transformation table and the AXI
+//! bridge to the VexRiscv-class host processor (paper §IV-A.1).
+
+use std::rc::Rc;
+
+use crate::arch::params::WindMillParams;
+use crate::diag::{DiagError, ElabCtx, Plugin};
+use crate::model::area::gates;
+use crate::netlist::Module;
+use crate::sim::machine::HostDesc;
+
+use super::services::{HostService, RttService};
+use super::WindMill;
+
+/// The RTT decodes customized host instructions into PEA control signals;
+/// each of the four launch-protocol stages is controlled by one entry
+/// (§IV-A.1).
+pub struct RttPlugin;
+
+impl Plugin<WindMill> for RttPlugin {
+    fn name(&self) -> &'static str {
+        "rtt"
+    }
+
+    fn function(&self) -> &'static str {
+        "host/rtt"
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let mut m = Module::new("rtt", "");
+        m.input("clk", 1)
+            .input("instr", 32)
+            .input("instr_valid", 1)
+            .input("cpe_req", 1)
+            .input("cpe_entry", 8)
+            .output("ctrl", w)
+            .output("ctrl_valid", 1);
+        m.assign("ctrl", "instr /* entry-table decode */")
+            .assign("ctrl_valid", "instr_valid");
+        m.gates(gates::rtt(p.rtt_entries, w), (p.rtt_entries as u32 * w) as f64);
+        ctx.add_module(m)?;
+        ctx.provide(0, Rc::new(RttService { module: "rtt", entries: p.rtt_entries }));
+        Ok(())
+    }
+}
+
+/// AXI bridge: the communication path of the 4-step launch protocol
+/// (load configs → load data → launch → store results).
+pub struct HostAxiPlugin;
+
+impl Plugin<WindMill> for HostAxiPlugin {
+    fn name(&self) -> &'static str {
+        "host-axi"
+    }
+
+    fn function(&self) -> &'static str {
+        "host/axi"
+    }
+
+    fn create_late(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let rtt = ctx.get_service::<RttService>()?;
+        let w = p.data_width;
+        let mut m = Module::new("host_axi", "");
+        m.input("clk", 1)
+            .input("awvalid", 1)
+            .input("awaddr", 32)
+            .input("wvalid", 1)
+            .input("wdata", w)
+            .output("bvalid", 1)
+            .input("arvalid", 1)
+            .input("araddr", 32)
+            .output("rvalid", 1)
+            .output("rdata", w)
+            .output("instr", 32)
+            .output("instr_valid", 1);
+        m.assign("bvalid", "awvalid")
+            .assign("rvalid", "arvalid")
+            .assign("rdata", "wdata /* register readback */")
+            .assign("instr", "wdata /* command register */")
+            .assign("instr_valid", "wvalid");
+        m.gates(gates::axi_bridge(w), 180.0);
+        ctx.add_module(m)?;
+        ctx.provide(0, Rc::new(HostService { module: "host_axi" }));
+
+        ctx.artifact.host = Some(HostDesc {
+            rtt_entries: rtt.entries,
+            config_words_per_cycle: (p.dma_width_bits / 32).max(1),
+            rtt_decode_cycles: 6,
+            axi_latency_cycles: 24,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    
+    use crate::arch::presets;
+    use crate::plugins::elaborate;
+
+    #[test]
+    fn host_desc_populated() {
+        let e = elaborate(presets::standard()).unwrap();
+        let h = e.artifact.host.as_ref().unwrap();
+        assert_eq!(h.rtt_entries, 16);
+        assert_eq!(h.config_words_per_cycle, 4);
+        assert!(h.axi_latency_cycles > 0);
+    }
+
+    #[test]
+    fn rtt_area_scales_with_entries() {
+        let mut p = presets::standard();
+        p.rtt_entries = 64;
+        let big = elaborate(p).unwrap();
+        let small = elaborate(presets::standard()).unwrap();
+        assert!(
+            big.netlist.find("rtt").unwrap().own_gates
+                > small.netlist.find("rtt").unwrap().own_gates
+        );
+    }
+
+    #[test]
+    fn axi_requires_rtt() {
+        let mut g = crate::plugins::generator(presets::standard());
+        g.unplug("rtt");
+        assert!(g.elaborate().map(|_| ()).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! The WindMill CGRA instantiation of the DIAG flow (paper §IV-B).
+//!
+//! Every architectural block of Fig. 4/Fig. 5 is a plugin; the generator is
+//! assembled bottom-up by [`generator`] ("plugin everything"). The module
+//! split mirrors the paper's breakdown:
+//!
+//! * [`fu`] — execute-stage functional units (ALU basic; MUL basic; SFU
+//!   extension). These form the Fig. 3 service chain the GPE assembles.
+//! * [`pe`] — the PE config-flow/data-flow pipeline: context memory,
+//!   iteration control, the GPE itself, the boundary LSU, and the CPE
+//!   extension.
+//! * [`pea`] — the PE array: grid definition and the interconnect
+//!   (mesh/1-hop/torus), plus the shared-register extension.
+//! * [`mem`] — shared memory: banked SRAM, the round-robin PAI, and the
+//!   ping-pong DMA extension.
+//! * [`host`] — RTT and the AXI host bridge to the VexRiscv-class core.
+//! * [`top`] — system assembly: RCA ring and the top level.
+//!
+//! Elaborating the resulting [`crate::diag::Generator`] yields the
+//! structural netlist *and* the [`crate::sim::MachineDesc`] the
+//! cycle-accurate simulator executes.
+
+pub mod fu;
+pub mod host;
+pub mod mem;
+pub mod pe;
+pub mod pea;
+pub mod services;
+pub mod top;
+
+use crate::arch::params::WindMillParams;
+use crate::diag::{FunctionTree, Generator, Target};
+use crate::sim::MachineDesc;
+
+/// The DIAG target binding for WindMill.
+pub struct WindMill;
+
+impl Target for WindMill {
+    type Params = WindMillParams;
+    type Artifact = MachineDesc;
+}
+
+pub type WmGenerator = Generator<WindMill>;
+
+/// The WindMill function tree (Definition layer, Fig. 3a).
+pub fn windmill_tree() -> FunctionTree {
+    let mut t = FunctionTree::new();
+    // Basic framework.
+    t.basic("system/top")
+        .basic("pea/grid")
+        .basic("pea/interconnect")
+        .basic("pe/gpe")
+        .basic("pe/context")
+        .basic("pe/iteration")
+        .basic("pe/fu/alu")
+        .basic("pe/fu/mul")
+        .basic("pe/lsu")
+        .basic("mem/sram")
+        .basic("mem/pai")
+        .basic("host/rtt")
+        .basic("host/axi");
+    // Extensions.
+    t.extension("pe/fu/sfu")
+        .extension("pe/cpe")
+        .extension("mem/dma")
+        .extension("pea/sharedregs");
+    t
+}
+
+/// Assemble a WindMill generator whose plugin set matches the parameter
+/// flags (the Application layer's standard composition). The plug order
+/// follows the bottom-up strategy: leaves first, system top last.
+pub fn generator(params: WindMillParams) -> WmGenerator {
+    let mut g = Generator::new(windmill_tree(), params.clone())
+        .with(Box::new(fu::AluFuPlugin))
+        .with(Box::new(fu::MulFuPlugin))
+        .with(Box::new(pe::ContextMemPlugin))
+        .with(Box::new(pe::IterCtrlPlugin))
+        .with(Box::new(pe::GpePlugin))
+        .with(Box::new(pe::LsuPlugin))
+        .with(Box::new(pea::PeaGridPlugin))
+        .with(Box::new(pea::InterconnectPlugin))
+        .with(Box::new(mem::SmemPlugin))
+        .with(Box::new(mem::PaiPlugin))
+        .with(Box::new(host::RttPlugin))
+        .with(Box::new(host::HostAxiPlugin));
+    if params.sfu_enabled {
+        g.plug(Box::new(fu::SfuFuPlugin)).unwrap();
+    }
+    if params.cpe_enabled {
+        g.plug(Box::new(pe::CpePlugin)).unwrap();
+    }
+    if params.pingpong {
+        g.plug(Box::new(mem::DmaPlugin)).unwrap();
+    }
+    g.plug(Box::new(pea::SharedRegsPlugin)).unwrap();
+    g.plug(Box::new(top::TopPlugin)).unwrap();
+    g
+}
+
+/// Convenience: elaborate a parameter set straight to its artifacts.
+pub fn elaborate(
+    params: WindMillParams,
+) -> Result<crate::diag::Elaborated<WindMill>, crate::diag::DiagError> {
+    generator(params).elaborate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::netlist::NetlistStats;
+
+    #[test]
+    fn standard_elaborates() {
+        let e = elaborate(presets::standard()).unwrap();
+        e.netlist.validate().unwrap();
+        e.artifact.validate().unwrap();
+        assert_eq!(e.artifact.rows, 8);
+        assert_eq!(e.artifact.rca_count, 4);
+        assert!(e.artifact.smem.is_some());
+        assert!(e.artifact.dma.is_some());
+        assert!(e.artifact.cpe.is_some());
+        assert!(e.artifact.host.is_some());
+    }
+
+    #[test]
+    fn small_elaborates() {
+        let e = elaborate(presets::small()).unwrap();
+        e.artifact.validate().unwrap();
+        assert_eq!(e.artifact.rows, 4);
+    }
+
+    #[test]
+    fn no_sfu_variant_drops_capability() {
+        use crate::arch::isa::OpClass;
+        let mut p = presets::standard();
+        p.sfu_enabled = false;
+        let e = elaborate(p).unwrap();
+        e.artifact.validate().unwrap();
+        assert!(e.artifact.pes_with(OpClass::Sfu).is_empty());
+        // Zero residue: no SFU module, no gates attributed to the plugin.
+        assert!(e.netlist.find("fu_sfu").is_none());
+        assert!(e.netlist.by_provenance("fu-sfu").is_empty());
+    }
+
+    #[test]
+    fn no_cpe_variant() {
+        let mut p = presets::standard();
+        p.cpe_enabled = false;
+        let e = elaborate(p).unwrap();
+        e.artifact.validate().unwrap();
+        assert!(e.artifact.cpe.is_none());
+        assert!(e.netlist.find("pe_cpe").is_none());
+    }
+
+    #[test]
+    fn no_pingpong_variant_drops_dma() {
+        let mut p = presets::standard();
+        p.pingpong = false;
+        let e = elaborate(p).unwrap();
+        assert!(e.artifact.dma.is_none());
+        assert!(e.netlist.find("dma").is_none());
+        assert!(e.skipped_extensions.contains(&"mem/dma".to_string()));
+    }
+
+    #[test]
+    fn verilog_emits_for_standard() {
+        let e = elaborate(presets::standard()).unwrap();
+        let v = crate::netlist::verilog::emit(&e.netlist);
+        assert!(v.contains("module windmill_top"));
+        assert!(v.contains("module pe_gpe"));
+        assert!(v.contains("module pai"));
+        assert!(v.len() > 5_000, "suspiciously small: {}", v.len());
+    }
+
+    #[test]
+    fn gate_totals_scale_with_pea_size(){
+        let s4 = NetlistStats::of(&elaborate(presets::with_pea_size(4)).unwrap().netlist);
+        let s8 = NetlistStats::of(&elaborate(presets::with_pea_size(8)).unwrap().netlist);
+        let s16 = NetlistStats::of(&elaborate(presets::with_pea_size(16)).unwrap().netlist);
+        assert!(s4.total_gates < s8.total_gates);
+        assert!(s8.total_gates < s16.total_gates);
+        // Strong (≈quadratic in edge) scaling, paper Fig. 6a.
+        assert!(s16.total_gates / s4.total_gates > 8.0);
+    }
+}

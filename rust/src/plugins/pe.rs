@@ -1,0 +1,496 @@
+//! PE-level plugins: context memory, iteration control, the GPE pipeline,
+//! the boundary LSU and the CPE extension (paper §IV-A.2/3/5).
+//!
+//! The GPE is the canonical Fig. 3 consumer: its execute stage is
+//! assembled from whatever [`FuService`]s are plugged, so the PE's
+//! capability set — and the generated netlist — follow the plugin set
+//! exactly.
+
+use std::collections::BTreeSet;
+use std::rc::Rc;
+
+use crate::arch::isa::{ConfigWord, OpClass};
+use crate::arch::params::{PeType, WindMillParams};
+use crate::diag::{DiagError, ElabCtx, Plugin};
+use crate::model::area::gates;
+use crate::netlist::Module;
+use crate::sim::machine::CpeDesc;
+
+use super::services::{
+    CtxMemService, FuService, IterCtrlService, PeCellService, RequesterPort, SmemRequesters,
+};
+use super::WindMill;
+
+/// Input ports every PE cell exposes (max express-link degree).
+pub const PE_IN_PORTS: usize = 8;
+
+/// Local register-file entries in a GPE.
+pub const GPE_REGS: usize = 16;
+/// Local register-file entries in an LSU (address registers).
+pub const LSU_REGS: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Context memory
+// ---------------------------------------------------------------------------
+
+/// Per-PE configuration storage (the temporal half of the architecture).
+/// Bits are counted as SRAM macro by the area model; this module carries
+/// only the access periphery.
+pub struct ContextMemPlugin;
+
+impl Plugin<WindMill> for ContextMemPlugin {
+    fn name(&self) -> &'static str {
+        "ctx-mem"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/context"
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let cfg_bits = ConfigWord::ENCODED_BITS;
+        let mut m = Module::new("ctx_mem", "");
+        m.input("clk", 1)
+            .input("we", 1)
+            .input("waddr", 16)
+            .input("wdata", cfg_bits)
+            .input("raddr", 16)
+            .output("rdata", cfg_bits);
+        m.gates(gates::decoder(cfg_bits), 0.0);
+        ctx.add_module(m)?;
+        let depth = p.effective_context_depth();
+        ctx.provide(0, Rc::new(CtxMemService { module: "ctx_mem", depth }));
+        ctx.artifact.context_depth = depth;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Iteration control
+// ---------------------------------------------------------------------------
+
+/// The Iteration Control Block: switches control steps statically and
+/// gates invalid operands dynamically (§IV-A.3).
+pub struct IterCtrlPlugin;
+
+impl Plugin<WindMill> for IterCtrlPlugin {
+    fn name(&self) -> &'static str {
+        "iter-ctrl"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/iteration"
+    }
+
+    fn create_early(
+        &mut self,
+        _p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let mut m = Module::new("iter_ctrl", "");
+        m.input("clk", 1)
+            .input("iter_count", 16)
+            .input("beat_valid", 1)
+            .output("step_adv", 1)
+            .output("operand_valid", 1);
+        m.gates(gates::iter_control(), 40.0);
+        ctx.add_module(m)?;
+        ctx.provide(0, Rc::new(IterCtrlService { module: "iter_ctrl" }));
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPE
+// ---------------------------------------------------------------------------
+
+/// The general-purpose PE: 4-stage pipeline (config fetch, config decode,
+/// execute, write-back) with the config-flow / data-flow split of Fig. 4.
+pub struct GpePlugin;
+
+impl Plugin<WindMill> for GpePlugin {
+    fn name(&self) -> &'static str {
+        "gpe"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/gpe"
+    }
+
+    fn create_early(
+        &mut self,
+        _p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        ctx.provide(0, Rc::new(PeCellService { ty: PeType::Gpe, module: "pe_gpe".into() }));
+        Ok(())
+    }
+
+    fn create_late(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let cfg_bits = ConfigWord::ENCODED_BITS;
+        let fus = ctx.service_chain::<FuService>();
+        if fus.is_empty() {
+            return Err(ctx.fail("no functional units plugged (need at least pe/fu/alu)"));
+        }
+        let ctxmem = ctx.get_service::<CtxMemService>()?;
+        let iter = ctx.get_service::<IterCtrlService>()?;
+
+        let mut m = Module::new("pe_gpe", "");
+        m.input("clk", 1).input("cfg_we", 1).input("cfg_word", cfg_bits);
+        for i in 0..PE_IN_PORTS {
+            m.input(&format!("in{i}"), w);
+        }
+        m.output("out", w).input("shared_in", w).output("shared_out", w);
+        // config-flow: fetch -> decode.
+        m.wire("cfg_rdata", cfg_bits).wire("step_adv", 1).wire("op_valid", 1);
+        m.instance(
+            "u_ctx",
+            ctxmem.module,
+            &[
+                ("clk", "clk"),
+                ("we", "cfg_we"),
+                ("waddr", "1'b0"),
+                ("wdata", "cfg_word"),
+                ("raddr", "1'b0"),
+                ("rdata", "cfg_rdata"),
+            ],
+        );
+        m.instance(
+            "u_iter",
+            iter.module,
+            &[
+                ("clk", "clk"),
+                ("iter_count", "cfg_rdata[127:112]"),
+                ("beat_valid", "op_valid"),
+                ("step_adv", "step_adv"),
+                ("operand_valid", "op_valid"),
+            ],
+        );
+        // data-flow: operand select -> FU chain -> write-back mux.
+        m.wire("op_a", w).wire("op_b", w);
+        m.assign("op_a", "in0 /* operand mux */");
+        m.assign("op_b", "in1 /* operand mux */");
+        let mut caps: BTreeSet<OpClass> = BTreeSet::new();
+        for fu in &fus {
+            let y = format!("y_{}", fu.module);
+            m.wire(&y, w);
+            let conns_owned: Vec<(String, String)> = fu_conns(fu.module, &y);
+            let conns: Vec<(&str, &str)> =
+                conns_owned.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+            m.instance(&format!("u_{}", fu.module), fu.module, &conns);
+            caps.extend(fu.classes.iter().copied());
+        }
+        m.assign("out", "y_fu_alu /* writeback mux over FU results */");
+        m.assign("shared_out", "out");
+        // Own logic: decode, operand muxes (connected ports + reg + imm +
+        // shared — richer topologies widen the mux: the weak Fig. 6 effect),
+        // regfile, write-back mux over the FU chain.
+        let mux_inputs = p.topology.max_degree() + 3;
+        let own = gates::decoder(cfg_bits)
+            + 2.0 * gates::port_mux(mux_inputs, w)
+            + gates::regfile(GPE_REGS, w)
+            + gates::port_mux(fus.len().max(2), w);
+        m.gates(own, (GPE_REGS as u32 * w) as f64 + 3.0 * cfg_bits as f64);
+        ctx.add_module(m)?;
+
+        // Capability map: every GPE cell gets the FU-chain union.
+        caps.insert(OpClass::Route);
+        let machine = &mut ctx.artifact;
+        for i in 0..machine.pes.len() {
+            if machine.pes[i].ty == PeType::Gpe {
+                machine.pes[i].caps = caps.clone();
+                machine.pes[i].regs = GPE_REGS;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Port connections for one FU instance inside the GPE.
+fn fu_conns(module: &str, y: &str) -> Vec<(String, String)> {
+    let mut v = vec![
+        ("a".to_string(), "op_a".to_string()),
+        ("b".to_string(), "op_b".to_string()),
+        ("y".to_string(), y.to_string()),
+    ];
+    match module {
+        "fu_alu" => v.push(("op".to_string(), "cfg_rdata[4:0]".to_string())),
+        "fu_mul" => {
+            v.push(("acc".to_string(), "op_a".to_string()));
+            v.push(("mac_en".to_string(), "cfg_rdata[5]".to_string()));
+        }
+        "fu_sfu" => v.push(("fn_sel".to_string(), "cfg_rdata[7:5]".to_string())),
+        _ => {}
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// LSU
+// ---------------------------------------------------------------------------
+
+/// Boundary load-store unit: AGU supporting affine (base + stride·i) and
+/// non-affine (computed-address) access, plus a route path (§IV-A.2).
+pub struct LsuPlugin;
+
+impl Plugin<WindMill> for LsuPlugin {
+    fn name(&self) -> &'static str {
+        "lsu"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/lsu"
+    }
+
+    fn create_config(&mut self, p: &mut WindMillParams) -> Result<(), DiagError> {
+        if !p.lsu_ring {
+            return Err(DiagError::InvalidParams(
+                "LSU plugin plugged but params.lsu_ring is false".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let cfg_bits = ConfigWord::ENCODED_BITS;
+        let mut m = Module::new("pe_lsu", "");
+        m.input("clk", 1).input("cfg_we", 1).input("cfg_word", cfg_bits);
+        for i in 0..PE_IN_PORTS {
+            m.input(&format!("in{i}"), w);
+        }
+        m.output("out", w)
+            .output("mem_addr", w)
+            .output("mem_wdata", w)
+            .input("mem_rdata", w)
+            .output("mem_req", 1)
+            .output("mem_we", 1);
+        m.assign("mem_addr", "in0 /* AGU: base + stride*i or computed */")
+            .assign("mem_wdata", "in1")
+            .assign("mem_req", "1'b0 /* decode */")
+            .assign("mem_we", "1'b0 /* decode */")
+            .assign("out", "mem_rdata /* load path / route */");
+        // AGU (half an ALU), address regs, decode, port mux (topology-wide).
+        let own = gates::alu(w) * 0.5
+            + gates::regfile(LSU_REGS, w)
+            + gates::decoder(cfg_bits)
+            + gates::port_mux(p.topology.max_degree() + 2, w);
+        m.gates(own, (LSU_REGS as u32 * w) as f64 + 2.0 * cfg_bits as f64);
+        ctx.add_module(m)?;
+
+        ctx.provide(0, Rc::new(PeCellService { ty: PeType::Lsu, module: "pe_lsu".into() }));
+        // Announce PAI requester ports (consumed by the PAI in late).
+        let req = Rc::new(SmemRequesters::default());
+        req.ports
+            .borrow_mut()
+            .push(RequesterPort { owner: "lsu".into(), count: p.lsu_count() });
+        ctx.provide(0, req);
+        Ok(())
+    }
+
+    fn create_late(
+        &mut self,
+        _p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let machine = &mut ctx.artifact;
+        for i in 0..machine.pes.len() {
+            if machine.pes[i].ty == PeType::Lsu {
+                machine.pes[i].caps =
+                    BTreeSet::from([OpClass::Mem, OpClass::Route, OpClass::Control]);
+                machine.pes[i].regs = LSU_REGS;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CPE (extension)
+// ---------------------------------------------------------------------------
+
+/// Controller PE (§IV-A.5): a GPE with RTT access that relaunches the
+/// array without a host round trip — the key to multi-layer algorithms.
+pub struct CpePlugin;
+
+impl Plugin<WindMill> for CpePlugin {
+    fn name(&self) -> &'static str {
+        "cpe"
+    }
+
+    fn function(&self) -> &'static str {
+        "pe/cpe"
+    }
+
+    fn create_config(&mut self, p: &mut WindMillParams) -> Result<(), DiagError> {
+        if !p.cpe_enabled {
+            return Err(DiagError::InvalidParams(
+                "CPE plugin plugged but params.cpe_enabled is false".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn create_early(
+        &mut self,
+        _p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        ctx.provide(0, Rc::new(PeCellService { ty: PeType::Cpe, module: "pe_cpe".into() }));
+        Ok(())
+    }
+
+    fn create_late(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        // "Implementing the CPE within the basic framework of the GPE is
+        // straightforward" — wrap pe_gpe and add the RTT master port.
+        let rtt = ctx.get_service::<super::services::RttService>()?;
+        let w = p.data_width;
+        let cfg_bits = ConfigWord::ENCODED_BITS;
+        let mut m = Module::new("pe_cpe", "");
+        m.input("clk", 1).input("cfg_we", 1).input("cfg_word", cfg_bits);
+        for i in 0..PE_IN_PORTS {
+            m.input(&format!("in{i}"), w);
+        }
+        m.output("out", w)
+            .output("rtt_req", 1)
+            .output("rtt_entry", 8)
+            .wire("gpe_out", w);
+        let mut conns: Vec<(String, String)> = vec![
+            ("clk".into(), "clk".into()),
+            ("cfg_we".into(), "cfg_we".into()),
+            ("cfg_word".into(), "cfg_word".into()),
+            ("out".into(), "gpe_out".into()),
+            ("shared_in".into(), "in0".into()),
+            ("shared_out".into(), "gpe_out".into()),
+        ];
+        for i in 0..PE_IN_PORTS {
+            conns.push((format!("in{i}"), format!("in{i}")));
+        }
+        // shared_out is an output of pe_gpe; a real wrapper would expose it.
+        let conns: Vec<(&str, &str)> =
+            conns.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+        // Avoid double-driving gpe_out: drop the shared_out connection.
+        let conns: Vec<(&str, &str)> =
+            conns.into_iter().filter(|(a, _)| *a != "shared_out").collect();
+        m.instance("u_gpe", "pe_gpe", &conns);
+        m.assign("out", "gpe_out")
+            .assign("rtt_req", "1'b0 /* launch control */")
+            .assign("rtt_entry", "gpe_out[7:0]");
+        // Launch sequencer + RTT master interface.
+        m.gates(1400.0 + 8.0 * rtt.entries as f64, 96.0);
+        ctx.add_module(m)?;
+
+        let machine = &mut ctx.artifact;
+        let pos = p.cpe_position();
+        machine.cpe = Some(CpeDesc { position: pos, relaunch_cycles: 8 });
+        for i in 0..machine.pes.len() {
+            if machine.pes[i].ty == PeType::Cpe {
+                // GPE capabilities (filled by the GPE plugin's chain) plus
+                // control; the wrapper shares the same FU chain.
+                let gpe_caps = machine
+                    .pes
+                    .iter()
+                    .find(|pe| pe.ty == PeType::Gpe)
+                    .map(|pe| pe.caps.clone())
+                    .unwrap_or_default();
+                machine.pes[i].caps = gpe_caps;
+                machine.pes[i].caps.insert(OpClass::Control);
+                machine.pes[i].regs = GPE_REGS;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::plugins::elaborate;
+
+    #[test]
+    fn gpe_module_instantiates_fu_chain() {
+        let e = elaborate(presets::standard()).unwrap();
+        let gpe = e.netlist.find("pe_gpe").unwrap();
+        let inst: Vec<&str> = gpe.instances.iter().map(|i| i.module.as_str()).collect();
+        assert!(inst.contains(&"fu_alu"));
+        assert!(inst.contains(&"fu_mul"));
+        assert!(inst.contains(&"fu_sfu"));
+        assert!(inst.contains(&"ctx_mem"));
+        assert!(inst.contains(&"iter_ctrl"));
+    }
+
+    #[test]
+    fn gpe_caps_follow_plugin_set() {
+        let e = elaborate(presets::standard()).unwrap();
+        let gpe = e
+            .artifact
+            .pes
+            .iter()
+            .find(|pe| pe.ty == PeType::Gpe)
+            .unwrap();
+        assert!(gpe.caps.contains(&OpClass::Alu));
+        assert!(gpe.caps.contains(&OpClass::Mul));
+        assert!(gpe.caps.contains(&OpClass::Sfu));
+        assert!(gpe.caps.contains(&OpClass::Route));
+    }
+
+    #[test]
+    fn lsu_caps_are_memory() {
+        let e = elaborate(presets::standard()).unwrap();
+        let lsu = e.artifact.pes.iter().find(|pe| pe.ty == PeType::Lsu).unwrap();
+        assert!(lsu.caps.contains(&OpClass::Mem));
+        assert!(!lsu.caps.contains(&OpClass::Mul));
+    }
+
+    #[test]
+    fn cpe_wraps_gpe() {
+        let e = elaborate(presets::standard()).unwrap();
+        let cpe = e.netlist.find("pe_cpe").unwrap();
+        assert!(cpe.instances.iter().any(|i| i.module == "pe_gpe"));
+        let desc = e.artifact.cpe.as_ref().unwrap();
+        assert_eq!(desc.position, (1, 1));
+    }
+
+    #[test]
+    fn cpe_requires_rtt_service() {
+        // Unplugging the RTT makes the CPE fail with an attributed error.
+        let mut g = crate::plugins::generator(presets::standard());
+        assert!(g.unplug("rtt"));
+        let err = g.elaborate().map(|_| ()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("RttService") || msg.contains("rtt"), "{msg}");
+    }
+
+    #[test]
+    fn lsu_announces_requesters() {
+        let e = elaborate(presets::standard()).unwrap();
+        assert_eq!(e.artifact.smem.as_ref().unwrap().pai_requesters, 28);
+    }
+
+    #[test]
+    fn scmd_context_depth_reaches_machine() {
+        use crate::arch::params::ExecMode;
+        let mut p = presets::standard();
+        p.exec_mode = ExecMode::Scmd;
+        let e = elaborate(p).unwrap();
+        assert_eq!(e.artifact.context_depth, 32 * 8);
+    }
+}

@@ -1,0 +1,313 @@
+//! PE-array plugins: grid definition, interconnect, shared registers.
+
+use std::rc::Rc;
+
+use crate::arch::isa::ConfigWord;
+use crate::arch::params::{PeType, WindMillParams};
+use crate::diag::{DiagError, ElabCtx, Plugin};
+use crate::model::area::gates;
+use crate::netlist::Module;
+use crate::sim::machine::{PeDesc, SharedRegsDesc};
+
+use super::pe::PE_IN_PORTS;
+use super::services::{PeCellService, PeaService, SharedRegService};
+use super::WindMill;
+
+// ---------------------------------------------------------------------------
+// Grid
+// ---------------------------------------------------------------------------
+
+/// Defines the PE grid in the machine description: geometry, PE types,
+/// clock target, execution mode. Cells start with empty capability sets;
+/// the PE plugins fill them in during their late stages.
+pub struct PeaGridPlugin;
+
+impl Plugin<WindMill> for PeaGridPlugin {
+    fn name(&self) -> &'static str {
+        "pea-grid"
+    }
+
+    fn function(&self) -> &'static str {
+        "pea/grid"
+    }
+
+    fn create_config(&mut self, p: &mut WindMillParams) -> Result<(), DiagError> {
+        p.validate()
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let machine = &mut ctx.artifact;
+        machine.rows = p.rows;
+        machine.cols = p.cols;
+        machine.data_width = p.data_width;
+        machine.freq_mhz = p.freq_mhz;
+        machine.exec_mode = Some(p.exec_mode);
+        machine.pes = (0..p.rows)
+            .flat_map(|r| (0..p.cols).map(move |c| (r, c)))
+            .map(|(r, c)| PeDesc {
+                ty: p.pe_type_at(r, c),
+                caps: Default::default(),
+                regs: 0,
+                ports: Vec::new(),
+            })
+            .collect();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interconnect
+// ---------------------------------------------------------------------------
+
+/// Builds the `pea` netlist module — every PE cell instantiated and wired
+/// to its topology neighbours — and loads the port maps into the machine
+/// description. The PE input-mux cost already sits in the cell modules;
+/// richer topologies manifest as more connected input ports (and longer
+/// wires in the timing model), which is why Fig. 6 finds interconnect a
+/// *weak* area effect.
+pub struct InterconnectPlugin;
+
+impl Plugin<WindMill> for InterconnectPlugin {
+    fn name(&self) -> &'static str {
+        "interconnect"
+    }
+
+    fn function(&self) -> &'static str {
+        "pea/interconnect"
+    }
+
+    fn create_late(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let topo = p.topology;
+        let w = p.data_width;
+        let cfg_bits = ConfigWord::ENCODED_BITS;
+
+        // Resolve cell module names from whichever PE plugins are present.
+        let cells = ctx.service_chain::<PeCellService>();
+        let module_for = |ty: PeType| -> Option<String> {
+            cells.iter().find(|c| c.ty == ty).map(|c| c.module.clone())
+        };
+
+        // Machine: port maps (sorted neighbour lists) + topology.
+        {
+            let machine = &mut ctx.artifact;
+            machine.topology = Some(topo);
+            for r in 0..p.rows {
+                for c in 0..p.cols {
+                    let ports: Vec<(usize, usize)> =
+                        topo.neighbors(r, c, p.rows, p.cols).into_iter().map(|(n, _)| n).collect();
+                    if ports.len() > PE_IN_PORTS {
+                        return Err(DiagError::InvalidParams(format!(
+                            "PE ({r},{c}) has {} neighbours > {PE_IN_PORTS} ports",
+                            ports.len()
+                        )));
+                    }
+                    machine.pe_mut(r, c).ports = ports;
+                }
+            }
+        }
+
+        // Netlist: the pea module.
+        let lsu_count = if p.lsu_ring { p.lsu_count() } else { 0 };
+        let mut m = Module::new("pea", "");
+        m.input("clk", 1).input("cfg_we", 1).input("cfg_word", cfg_bits);
+        if lsu_count > 0 {
+            m.output("lsu_addr", w * lsu_count as u32)
+                .output("lsu_wdata", w * lsu_count as u32)
+                .input("lsu_rdata", w * lsu_count as u32)
+                .output("lsu_req", lsu_count as u32)
+                .output("lsu_we", lsu_count as u32);
+        }
+        m.output("done", 1);
+        // Per-PE output wires.
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                m.wire(&format!("o_{r}_{c}"), w);
+            }
+        }
+        m.assign("done", "1'b0 /* schedule completion */");
+
+        let mut lsu_idx = 0usize;
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                let ty = p.pe_type_at(r, c);
+                let module = module_for(ty).ok_or_else(|| {
+                    DiagError::InvalidParams(format!(
+                        "no cell plugin provides PE type {ty:?} at ({r},{c})"
+                    ))
+                })?;
+                let mut conns: Vec<(String, String)> = vec![
+                    ("clk".into(), "clk".into()),
+                    ("cfg_we".into(), "cfg_we".into()),
+                    ("cfg_word".into(), "cfg_word".into()),
+                    ("out".into(), format!("o_{r}_{c}")),
+                ];
+                let neigh = topo.neighbors(r, c, p.rows, p.cols);
+                for i in 0..PE_IN_PORTS {
+                    let net = neigh
+                        .get(i)
+                        .map(|((nr, nc), _)| format!("o_{nr}_{nc}"))
+                        .unwrap_or_else(|| "1'b0".into());
+                    conns.push((format!("in{i}"), net));
+                }
+                match ty {
+                    PeType::Lsu => {
+                        let k = lsu_idx;
+                        lsu_idx += 1;
+                        m.wire(&format!("lsu_addr_{k}"), w);
+                        m.wire(&format!("lsu_wdata_{k}"), w);
+                        m.wire(&format!("lsu_rdata_{k}"), w);
+                        m.wire(&format!("lsu_req_{k}"), 1);
+                        m.wire(&format!("lsu_we_{k}"), 1);
+                        conns.push(("mem_addr".into(), format!("lsu_addr_{k}")));
+                        conns.push(("mem_wdata".into(), format!("lsu_wdata_{k}")));
+                        conns.push(("mem_rdata".into(), format!("lsu_rdata_{k}")));
+                        conns.push(("mem_req".into(), format!("lsu_req_{k}")));
+                        conns.push(("mem_we".into(), format!("lsu_we_{k}")));
+                        let lo = k as u32 * w;
+                        let hi = lo + w - 1;
+                        m.assign(&format!("lsu_addr[{hi}:{lo}]"), &format!("lsu_addr_{k}"));
+                        m.assign(&format!("lsu_wdata[{hi}:{lo}]"), &format!("lsu_wdata_{k}"));
+                        m.assign(&format!("lsu_rdata_{k}"), &format!("lsu_rdata[{hi}:{lo}]"));
+                        m.assign(&format!("lsu_req[{k}]"), &format!("lsu_req_{k}"));
+                        m.assign(&format!("lsu_we[{k}]"), &format!("lsu_we_{k}"));
+                    }
+                    PeType::Gpe => {
+                        conns.push(("shared_in".into(), "1'b0".into()));
+                        let sw = format!("sh_{r}_{c}");
+                        m.wire(&sw, w);
+                        conns.push(("shared_out".into(), sw));
+                    }
+                    PeType::Cpe => {
+                        let rq = format!("rtt_req_{r}_{c}");
+                        let re = format!("rtt_entry_{r}_{c}");
+                        m.wire(&rq, 1);
+                        m.wire(&re, 8);
+                        conns.push(("rtt_req".into(), rq));
+                        conns.push(("rtt_entry".into(), re));
+                    }
+                }
+                let cs: Vec<(&str, &str)> =
+                    conns.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+                m.instance(&format!("pe_{r}_{c}"), &module, &cs);
+            }
+        }
+        ctx.add_module(m)?;
+        ctx.provide(0, Rc::new(PeaService { module: "pea", lsu_ports: lsu_count }));
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared registers (extension)
+// ---------------------------------------------------------------------------
+
+/// Shared-register delivery between schedules (§IV-A.2): line-, row-,
+/// quadrant- or global-shared register groups.
+pub struct SharedRegsPlugin;
+
+impl Plugin<WindMill> for SharedRegsPlugin {
+    fn name(&self) -> &'static str {
+        "shared-regs"
+    }
+
+    fn function(&self) -> &'static str {
+        "pea/sharedregs"
+    }
+
+    fn create_early(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let w = p.data_width;
+        let mut m = Module::new("shared_regs", "");
+        m.input("clk", 1)
+            .input("wdata", w)
+            .input("we", 1)
+            .input("wsel", 8)
+            .input("rsel", 8)
+            .output("rdata", w);
+        m.gates(
+            gates::shared_regs(p.shared_regs_per_group, w),
+            (p.shared_regs_per_group as u32 * w) as f64,
+        );
+        ctx.add_module(m)?;
+        ctx.provide(0, Rc::new(SharedRegService { module: "shared_regs" }));
+        ctx.artifact.shared_regs = Some(SharedRegsDesc {
+            mode: p.shared_reg_mode,
+            regs_per_group: p.shared_regs_per_group,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    
+    use crate::arch::presets;
+    use crate::arch::topology::Topology;
+    use crate::plugins::elaborate;
+
+    #[test]
+    fn pea_instantiates_full_grid() {
+        let e = elaborate(presets::standard()).unwrap();
+        let pea = e.netlist.find("pea").unwrap();
+        assert_eq!(pea.instances.len(), 64);
+        let lsus = pea.instances.iter().filter(|i| i.module == "pe_lsu").count();
+        let gpes = pea.instances.iter().filter(|i| i.module == "pe_gpe").count();
+        let cpes = pea.instances.iter().filter(|i| i.module == "pe_cpe").count();
+        assert_eq!(lsus, 28);
+        assert_eq!(cpes, 1);
+        assert_eq!(gpes, 35);
+    }
+
+    #[test]
+    fn machine_ports_match_topology() {
+        let e = elaborate(presets::standard()).unwrap();
+        // Corner LSU (0,0): two mesh neighbours.
+        assert_eq!(e.artifact.pe(0, 0).ports.len(), 2);
+        // Centre GPE: four.
+        assert_eq!(e.artifact.pe(4, 4).ports.len(), 4);
+    }
+
+    #[test]
+    fn onehop_increases_ports() {
+        let mut p = presets::standard();
+        p.topology = Topology::OneHop;
+        let e = elaborate(p).unwrap();
+        assert_eq!(e.artifact.pe(4, 4).ports.len(), 8);
+    }
+
+    #[test]
+    fn torus_wires_wraparound() {
+        let mut p = presets::standard();
+        p.topology = Topology::Torus;
+        let e = elaborate(p).unwrap();
+        let pe00 = e.artifact.pe(0, 0);
+        assert!(pe00.ports.contains(&(7, 0)));
+        assert!(pe00.ports.contains(&(0, 7)));
+    }
+
+    #[test]
+    fn shared_regs_in_machine() {
+        let e = elaborate(presets::standard()).unwrap();
+        let sr = e.artifact.shared_regs.as_ref().unwrap();
+        assert_eq!(sr.regs_per_group, 8);
+    }
+
+    #[test]
+    fn grid_validates_params_in_config() {
+        let mut p = presets::standard();
+        p.rows = 1; // illegal
+        let err = elaborate(p).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("too small"));
+    }
+}

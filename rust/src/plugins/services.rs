@@ -1,0 +1,103 @@
+//! Service types exchanged between the WindMill plugins.
+//!
+//! Convention (enforced by the plugin implementations): services are
+//! **published in `create_early`** and **consumed in `create_late`**, so
+//! visibility never depends on plugin insertion order. Aggregating services
+//! use interior mutability (`RefCell`) — pushers write during their own
+//! late stage *only if* the reader is the top plugin (which is always
+//! plugged last); otherwise they write during early.
+
+use std::cell::RefCell;
+
+use crate::arch::isa::OpClass;
+
+/// An execute-stage functional unit contributed to the GPE's FU chain
+/// (Fig. 3). Priority in the registry orders the chain; the GPE
+/// instantiates every FU present.
+pub struct FuService {
+    /// Netlist module implementing the unit.
+    pub module: &'static str,
+    /// Operation classes the unit adds to a PE's capability set.
+    pub classes: Vec<OpClass>,
+    /// Pipeline depth the unit occupies in execute.
+    pub stages: u32,
+}
+
+/// Context memory geometry, published by the context-mem plugin.
+pub struct CtxMemService {
+    pub module: &'static str,
+    /// Effective configuration words per PE (after the SCMD multiplier).
+    pub depth: usize,
+}
+
+/// Iteration-control block, consumed by the GPE's decode stage.
+pub struct IterCtrlService {
+    pub module: &'static str,
+}
+
+/// A PE cell implementation available to the array builder. The
+/// interconnect plugin instantiates cells by looking these up.
+pub struct PeCellService {
+    pub ty: crate::arch::params::PeType,
+    pub module: String,
+}
+
+/// Shared-memory requester registration: LSUs announce how many PAI ports
+/// they need; the PAI sizes its round-robin arbiter from the total.
+#[derive(Default)]
+pub struct SmemRequesters {
+    pub ports: RefCell<Vec<RequesterPort>>,
+}
+
+pub struct RequesterPort {
+    pub owner: String,
+    pub count: usize,
+}
+
+impl SmemRequesters {
+    pub fn total(&self) -> usize {
+        self.ports.borrow().iter().map(|p| p.count).sum()
+    }
+}
+
+/// Banked SRAM published by the shared-memory plugin.
+pub struct SmemService {
+    pub bank_module: &'static str,
+    pub banks: usize,
+    pub depth: usize,
+    pub width_bits: u32,
+}
+
+/// Parallel access interface (arbiter) published for the RCA assembly.
+pub struct PaiService {
+    pub module: &'static str,
+    pub requesters: usize,
+}
+
+/// DMA engine (ping-pong extension).
+pub struct DmaService {
+    pub module: &'static str,
+    pub pingpong: bool,
+}
+
+/// Shared-register file extension.
+pub struct SharedRegService {
+    pub module: &'static str,
+}
+
+/// Register transformation table (host-side instruction decode).
+pub struct RttService {
+    pub module: &'static str,
+    pub entries: usize,
+}
+
+/// Host AXI bridge published for the system top.
+pub struct HostService {
+    pub module: &'static str,
+}
+
+/// The assembled PE array published by the interconnect plugin.
+pub struct PeaService {
+    pub module: &'static str,
+    pub lsu_ports: usize,
+}

@@ -1,0 +1,271 @@
+//! System assembly: the RCA and the WindMill top (paper §IV-A.1, Fig. 4).
+//!
+//! One RCA = PEA + PAI + banked shared memory (+ DMA when plugged). Four
+//! RCAs sit on a ring with partial access to their neighbours, executing
+//! pipelined tasks; the host reaches everything through the AXI bridge and
+//! the RTT. The top plugin is always plugged **last**, so its late stage
+//! sees every service.
+
+use crate::arch::params::WindMillParams;
+use crate::diag::{DiagError, ElabCtx, Plugin};
+use crate::netlist::Module;
+
+use super::services::{DmaService, HostService, PaiService, PeaService, RttService, SmemService};
+use super::WindMill;
+
+pub struct TopPlugin;
+
+impl Plugin<WindMill> for TopPlugin {
+    fn name(&self) -> &'static str {
+        "top"
+    }
+
+    fn function(&self) -> &'static str {
+        "system/top"
+    }
+
+    fn create_late(
+        &mut self,
+        p: &WindMillParams,
+        ctx: &mut ElabCtx<WindMill>,
+    ) -> Result<(), DiagError> {
+        let pea = ctx.get_service::<PeaService>()?;
+        let pai = ctx.get_service::<PaiService>()?;
+        let sm = ctx.get_service::<SmemService>()?;
+        let host = ctx.get_service::<HostService>()?;
+        let rtt = ctx.get_service::<RttService>()?;
+        let dma = ctx.find_service::<DmaService>();
+        let w = p.data_width;
+        let lsu_w = (pea.lsu_ports as u32 * w).max(1);
+
+        // ---- RCA: pea + pai + banks (+ dma) ------------------------------
+        let mut rca = Module::new("rca", "");
+        rca.input("clk", 1)
+            .input("cfg_we", 1)
+            .input("cfg_word", crate::arch::isa::ConfigWord::ENCODED_BITS)
+            .input("neighbor_in", w)
+            .output("neighbor_out", w)
+            .output("done", 1);
+        rca.wire("lsu_addr", lsu_w)
+            .wire("lsu_wdata", lsu_w)
+            .wire("lsu_rdata", lsu_w)
+            .wire("lsu_req", pea.lsu_ports.max(1) as u32)
+            .wire("lsu_we", pea.lsu_ports.max(1) as u32);
+        let mut pea_conns: Vec<(String, String)> = vec![
+            ("clk".into(), "clk".into()),
+            ("cfg_we".into(), "cfg_we".into()),
+            ("cfg_word".into(), "cfg_word".into()),
+            ("done".into(), "done".into()),
+        ];
+        if pea.lsu_ports > 0 {
+            for sig in ["lsu_addr", "lsu_wdata", "lsu_rdata", "lsu_req", "lsu_we"] {
+                pea_conns.push((sig.into(), sig.into()));
+            }
+        }
+        let cs: Vec<(&str, &str)> =
+            pea_conns.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+        rca.instance("u_pea", pea.module, &cs);
+
+        let nreq = pai.requesters as u32;
+        rca.wire("pai_rdata", nreq * sm.width_bits)
+            .wire("pai_grant", nreq)
+            .wire("bank_en", sm.banks as u32)
+            .wire("bank_we", sm.banks as u32)
+            .wire("bank_addr", sm.banks as u32 * 16)
+            .wire("bank_wdata", sm.banks as u32 * sm.width_bits)
+            .wire("bank_rdata", sm.banks as u32 * sm.width_bits)
+            .wire("req_all", nreq)
+            .wire("we_all", nreq)
+            .wire("addr_all", nreq * 16)
+            .wire("wdata_all", nreq * sm.width_bits);
+        rca.assign("req_all", "lsu_req /* + host port */")
+            .assign("we_all", "lsu_we /* + host port */")
+            .assign("addr_all", "lsu_addr[15:0] /* packed */")
+            .assign("wdata_all", "lsu_wdata /* packed */")
+            .assign("lsu_rdata", "pai_rdata /* unpacked */")
+            .assign("neighbor_out", "neighbor_in /* ring pass-through + result tap */");
+        rca.instance(
+            "u_pai",
+            pai.module,
+            &[
+                ("clk", "clk"),
+                ("req", "req_all"),
+                ("we", "we_all"),
+                ("addr", "addr_all"),
+                ("wdata", "wdata_all"),
+                ("rdata", "pai_rdata"),
+                ("grant", "pai_grant"),
+                ("bank_en", "bank_en"),
+                ("bank_we", "bank_we"),
+                ("bank_addr", "bank_addr"),
+                ("bank_wdata", "bank_wdata"),
+                ("bank_rdata", "bank_rdata"),
+            ],
+        );
+        for b in 0..sm.banks {
+            let lo = b as u32 * sm.width_bits;
+            let hi = lo + sm.width_bits - 1;
+            let alo = b as u32 * 16;
+            let ahi = alo + 15;
+            let rd = format!("bank_rdata[{hi}:{lo}]");
+            rca.instance(
+                &format!("u_bank{b}"),
+                sm.bank_module,
+                &[
+                    ("clk", "clk"),
+                    ("en", &format!("bank_en[{b}]")),
+                    ("we", &format!("bank_we[{b}]")),
+                    ("addr", &format!("bank_addr[{ahi}:{alo}]")),
+                    ("wdata", &format!("bank_wdata[{hi}:{lo}]")),
+                    ("rdata", &rd),
+                ],
+            );
+        }
+        if let Some(d) = &dma {
+            rca.wire("pp_msb", 1).wire("dma_we", 1).wire("dma_addr", 16).wire(
+                "dma_wdata",
+                sm.width_bits,
+            );
+            rca.instance(
+                "u_dma",
+                d.module,
+                &[
+                    ("clk", "clk"),
+                    ("start", "cfg_we"),
+                    ("pea_finish", "done"),
+                    ("ext_rdata", "1'b0"),
+                    ("ext_addr", "dma_addr[15:0]"),
+                    ("sm_we", "dma_we"),
+                    ("sm_addr", "dma_addr"),
+                    ("sm_wdata", "dma_wdata"),
+                    ("pp_msb", "pp_msb"),
+                ],
+            );
+        }
+        // RCA glue: launch FSM + ring port.
+        rca.gates(2500.0, 300.0);
+        ctx.add_module(rca)?;
+
+        // ---- windmill_top: host + rtt + RCA ring --------------------------
+        let mut top = Module::new("windmill_top", "");
+        top.input("clk", 1)
+            .input("awvalid", 1)
+            .input("awaddr", 32)
+            .input("wvalid", 1)
+            .input("wdata", w)
+            .output("bvalid", 1)
+            .input("arvalid", 1)
+            .input("araddr", 32)
+            .output("rvalid", 1)
+            .output("rdata", w)
+            .output("all_done", 1);
+        top.wire("instr", 32).wire("instr_valid", 1).wire("ctrl", w).wire("ctrl_valid", 1);
+        top.instance(
+            "u_host",
+            host.module,
+            &[
+                ("clk", "clk"),
+                ("awvalid", "awvalid"),
+                ("awaddr", "awaddr"),
+                ("wvalid", "wvalid"),
+                ("wdata", "wdata"),
+                ("bvalid", "bvalid"),
+                ("arvalid", "arvalid"),
+                ("araddr", "araddr"),
+                ("rvalid", "rvalid"),
+                ("rdata", "rdata"),
+                ("instr", "instr"),
+                ("instr_valid", "instr_valid"),
+            ],
+        );
+        top.instance(
+            "u_rtt",
+            rtt.module,
+            &[
+                ("clk", "clk"),
+                ("instr", "instr"),
+                ("instr_valid", "instr_valid"),
+                ("cpe_req", "1'b0"),
+                ("cpe_entry", "1'b0"),
+                ("ctrl", "ctrl"),
+                ("ctrl_valid", "ctrl_valid"),
+            ],
+        );
+        for k in 0..p.rca_count {
+            top.wire(&format!("ring_{k}"), w);
+            top.wire(&format!("done_{k}"), 1);
+        }
+        for k in 0..p.rca_count {
+            let prev = (k + p.rca_count - 1) % p.rca_count;
+            let ring_in = format!("ring_{prev}");
+            let ring_out = format!("ring_{k}");
+            let done = format!("done_{k}");
+            top.instance(
+                &format!("u_rca{k}"),
+                "rca",
+                &[
+                    ("clk", "clk"),
+                    ("cfg_we", "ctrl_valid"),
+                    ("cfg_word", "ctrl"),
+                    ("neighbor_in", &ring_in),
+                    ("neighbor_out", &ring_out),
+                    ("done", &done),
+                ],
+            );
+        }
+        top.assign("all_done", "done_0 /* AND over RCAs */");
+        top.gates(1200.0, 64.0);
+        ctx.add_module(top)?;
+        ctx.set_top("windmill_top");
+
+        ctx.artifact.rca_count = p.rca_count;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::presets;
+    use crate::netlist::NetlistStats;
+    use crate::plugins::elaborate;
+
+    #[test]
+    fn top_instantiates_rca_ring() {
+        let e = elaborate(presets::standard()).unwrap();
+        let top = e.netlist.top().unwrap();
+        assert_eq!(top.name, "windmill_top");
+        let rcas = top.instances.iter().filter(|i| i.module == "rca").count();
+        assert_eq!(rcas, 4);
+    }
+
+    #[test]
+    fn rca_contains_pea_pai_banks_dma() {
+        let e = elaborate(presets::standard()).unwrap();
+        let rca = e.netlist.find("rca").unwrap();
+        let mods: Vec<&str> = rca.instances.iter().map(|i| i.module.as_str()).collect();
+        assert!(mods.contains(&"pea"));
+        assert!(mods.contains(&"pai"));
+        assert!(mods.contains(&"dma"));
+        assert_eq!(mods.iter().filter(|m| **m == "smem_bank").count(), 16);
+    }
+
+    #[test]
+    fn rca_count_scales_area() {
+        let mut p1 = presets::standard();
+        p1.rca_count = 1;
+        let s1 = NetlistStats::of(&elaborate(p1).unwrap().netlist);
+        let s4 = NetlistStats::of(&elaborate(presets::standard()).unwrap().netlist);
+        assert!(s4.total_gates > 3.0 * s1.total_gates);
+    }
+
+    #[test]
+    fn instantiation_counts_match_hierarchy() {
+        let e = elaborate(presets::standard()).unwrap();
+        let counts = e.netlist.instantiation_counts();
+        assert_eq!(counts["rca"], 4.0);
+        assert_eq!(counts["pea"], 4.0);
+        assert_eq!(counts["pe_gpe"], 4.0 * 35.0 + 4.0 /* inside each CPE */);
+        assert_eq!(counts["pe_lsu"], 4.0 * 28.0);
+        assert_eq!(counts["smem_bank"], 64.0);
+    }
+}

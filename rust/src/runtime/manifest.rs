@@ -1,0 +1,159 @@
+//! `artifacts/manifest.json` parsing (shapes the AOT path recorded).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One tensor's shape/dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT'd entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactSpec>,
+    /// Model shape constants recorded at AOT time (batch, hidden, lr…).
+    pub shapes: Json,
+}
+
+impl Manifest {
+    pub fn read(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = j.at(&["format"]).and_then(Json::as_str).unwrap_or("");
+        if format != "hlo-text/return-tuple" {
+            return Err(anyhow!("unsupported artifact format `{format}`"));
+        }
+        let entries_obj = j
+            .at(&["entries"])
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `entries`"))?;
+        let tensor = |t: &Json| -> Result<TensorSpec> {
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype =
+                t.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+            Ok(TensorSpec { shape, dtype })
+        };
+        let mut entries = Vec::new();
+        for (name, ent) in entries_obj {
+            let file = ent
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry `{name}` missing file"))?
+                .to_string();
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                ent.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry `{name}` missing {key}"))?
+                    .iter()
+                    .map(tensor)
+                    .collect()
+            };
+            entries.push(ArtifactSpec {
+                name: name.clone(),
+                file,
+                inputs: parse_list("inputs")?,
+                outputs: parse_list("outputs")?,
+            });
+        }
+        let shapes = j.at(&["shapes"]).cloned().unwrap_or(Json::Null);
+        Ok(Manifest { entries, shapes })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Shape constant recorded at AOT time (e.g. "batch", "hidden").
+    pub fn shape_const(&self, key: &str) -> Option<f64> {
+        self.shapes.get(key).and_then(Json::as_f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple",
+      "shapes": {"batch": 64, "hidden": 32, "lr": 0.05},
+      "entries": {
+        "gemm": {
+          "file": "gemm.hlo.txt",
+          "inputs": [
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"}
+          ],
+          "outputs": [{"shape": [64, 64], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = m.entry("gemm").unwrap();
+        assert_eq!(g.file, "gemm.hlo.txt");
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.inputs[0].shape, vec![64, 64]);
+        assert_eq!(g.inputs[0].elements(), 4096);
+        assert_eq!(g.outputs[0].shape, vec![64, 64]);
+        assert_eq!(m.shape_const("batch"), Some(64.0));
+        assert_eq!(m.shape_const("lr"), Some(0.05));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text/return-tuple", "protobuf");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_has_one_element() {
+        let t = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::read(path).unwrap();
+            assert!(m.entry("policy_step").is_some());
+            assert_eq!(m.entry("policy_step").unwrap().outputs.len(), 5);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: load and execute the AOT'd Layer-2 artifacts.
+//!
+//! The build path (`make artifacts`) lowers every JAX entry point to HLO
+//! *text* (`artifacts/<name>.hlo.txt` + `manifest.json`); this module loads
+//! them through the `xla` crate (`PjRtClient::cpu` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) so the Rust
+//! coordinator can run the Pallas-backed compute graphs with **no Python on
+//! the request path**. Executables are compiled once and cached.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that the bundled xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// A loaded PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::read(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("no artifact `{name}` in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 inputs; returns the f32 outputs.
+    ///
+    /// Inputs must match the manifest's shapes (flattened row-major).
+    pub fn execute(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let spec = self.manifest.entry(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "`{name}` expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want: usize = tspec.shape.iter().product::<usize>().max(1);
+            if data.len() != want {
+                return Err(anyhow!(
+                    "`{name}` input {i}: {} elements for shape {:?}",
+                    data.len(),
+                    tspec.shape
+                ));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+            let lit =
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape input {i} of `{name}`: {e}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of `{name}`: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple `{name}`: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| p.to_vec::<f32>().map_err(|e| anyhow!("output {i} of `{name}`: {e}")))
+            .collect()
+    }
+
+    /// Execute and measure wall-clock time (compile excluded; the first
+    /// call per artifact warms the cache).
+    pub fn execute_timed(
+        &mut self,
+        name: &str,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        self.prepare(name)?;
+        let t0 = Instant::now();
+        let out = self.execute(name, inputs)?;
+        Ok((out, t0.elapsed().as_nanos() as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    #[test]
+    fn loads_manifest_and_platform() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.platform().is_empty());
+        assert!(rt.manifest.entry("gemm").is_some());
+    }
+
+    #[test]
+    fn gemm_executes_and_matches_cpu_math() {
+        let Some(mut rt) = runtime() else { return };
+        let spec = rt.manifest.entry("gemm").unwrap().clone();
+        let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let n = spec.inputs[1].shape[1];
+        let x: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 * 0.25).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let b: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let out = rt.execute("gemm", &[x.clone(), w.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), m * n);
+        // Spot-check a few entries against naive math.
+        for &(mm, nn) in &[(0usize, 0usize), (1, 2), (m - 1, n - 1)] {
+            let mut want = b[nn];
+            for kk in 0..k {
+                want += x[mm * k + kk] * w[kk * n + nn];
+            }
+            let got = out[0][mm * n + nn];
+            assert!((got - want).abs() < 1e-2, "C[{mm},{nn}] {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn wrong_arity_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.execute("gemm", &[vec![0.0; 4]]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let bad = vec![vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]];
+        assert!(rt.execute("gemm", &bad).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+}

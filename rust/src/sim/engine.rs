@@ -1,0 +1,651 @@
+//! Cycle-accurate execution of one mapped kernel on one RCA.
+//!
+//! Token-dataflow semantics grounded in §IV-A.3: the Iteration Control
+//! Block lets each PE "switch control step statically and process valid
+//! operands dynamically", so PEs fire when all operands for their oldest
+//! pending iteration have arrived. Timing:
+//!
+//! * one fire per PE per cycle (the 4-stage pipeline is fully pipelined);
+//! * results reach consumers after `op.latency() + route hops` cycles;
+//! * loads/stores go through the banked shared memory and its per-bank
+//!   round-robin PAI ([`super::smem`]), so bank conflicts and arbitration
+//!   stalls emerge rather than being estimated;
+//! * source nodes run ahead at most [`Engine::WINDOW`] iterations
+//!   (bounded token queues = the PE input latch depth).
+//!
+//! Numerics use [`Op::eval`] in the same per-iteration order as the DFG
+//! reference interpreter, so simulated memory must match it bit-for-bit.
+
+use std::collections::VecDeque;
+
+use crate::arch::isa::Op;
+use crate::compiler::dfg::{Access, NodeKind};
+use crate::compiler::Mapping;
+use crate::diag::error::DiagError;
+use crate::sim::machine::MachineDesc;
+use crate::sim::smem::{MemReq, SmemSim, SmemStats};
+
+/// Result of simulating one kernel.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub cycles: u64,
+    /// Final shared-memory image.
+    pub mem: Vec<f32>,
+    /// Total PE fire events (utilisation = fires / (PEs × cycles)).
+    pub fires: u64,
+    pub smem: SmemStats,
+    /// Average in-flight iterations (spatial pipelining depth achieved).
+    pub avg_parallelism: f64,
+    /// Measured II: cycles per iteration in steady state.
+    pub measured_ii: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    iter: u64,
+    value: f32,
+}
+
+#[derive(Debug)]
+struct NodeState {
+    /// One queue per DFG input edge.
+    inq: Vec<VecDeque<Token>>,
+    /// Next iteration a source node will emit.
+    next_iter: u64,
+    /// Accumulator state.
+    acc: f32,
+    /// Outstanding memory requests (LSU MSHRs).
+    outstanding: u32,
+    /// Stores committed.
+    commits: u64,
+    fires: u64,
+    /// Incremental affine address generator (loads/stores/index nodes):
+    /// odometer index vector + running address. Avoids re-deriving the
+    /// multi-dimensional index (and allocating) every iteration (perf pass,
+    /// see EXPERIMENTS.md §Perf).
+    idx: Vec<u32>,
+    addr: i64,
+    /// Affine coefficients for the generator (empty when unused).
+    coefs: Vec<i32>,
+}
+
+impl NodeState {
+    /// Advance the odometer one iteration, updating the running address.
+    fn advance_addr(&mut self, dims: &[u32]) {
+        for d in (0..dims.len()).rev() {
+            self.idx[d] += 1;
+            if d < self.coefs.len() {
+                self.addr += self.coefs[d] as i64;
+            }
+            if self.idx[d] < dims[d] {
+                return;
+            }
+            self.idx[d] = 0;
+            if d < self.coefs.len() {
+                self.addr -= dims[d] as i64 * self.coefs[d] as i64;
+            }
+        }
+    }
+}
+
+pub struct Engine<'a> {
+    mapping: &'a Mapping,
+    #[allow(dead_code)]
+    machine: &'a MachineDesc,
+    smem: SmemSim,
+    nodes: Vec<NodeState>,
+    /// In-flight deliveries bucketed by due cycle (perf: replaces a linear
+    /// scan of a flat event list every cycle — see EXPERIMENTS.md §Perf).
+    event_buckets: std::collections::BTreeMap<u64, Vec<(usize, usize, Token)>>,
+    /// Precomputed consumer adjacency: node -> [(dst, slot, hops)].
+    consumers: Vec<Vec<(usize, usize, u64)>>,
+    cycle: u64,
+    /// Completed iterations per store node (min over stores = frontier).
+    expected_commits: Vec<(usize, u64)>,
+}
+
+impl<'a> Engine<'a> {
+    /// Max iterations a source may run ahead of the slowest store.
+    pub const WINDOW: u64 = 64;
+    /// Max outstanding memory requests per LSU node.
+    pub const MSHRS: u32 = 4;
+
+    pub fn new(
+        mapping: &'a Mapping,
+        machine: &'a MachineDesc,
+        mem_image: &[f32],
+    ) -> Result<Self, DiagError> {
+        let sm_desc = machine
+            .smem
+            .as_ref()
+            .ok_or_else(|| DiagError::InvalidParams("machine has no shared memory".into()))?;
+        let mut smem = SmemSim::new(
+            sm_desc.banks,
+            sm_desc.depth,
+            mapping.dfg.nodes.len().max(sm_desc.pai_requesters),
+        );
+        smem.load_image(0, mem_image)?;
+        let ndims = mapping.dfg.dims.len();
+        let nodes = mapping
+            .dfg
+            .nodes
+            .iter()
+            .map(|n| {
+                let (addr, coefs, idx) = match &n.kind {
+                    NodeKind::Load(Access::Affine { base, coefs })
+                    | NodeKind::Store { access: Access::Affine { base, coefs }, .. } => {
+                        (*base as i64, coefs.clone(), vec![0u32; ndims])
+                    }
+                    NodeKind::Index(_) => (0, Vec::new(), vec![0u32; ndims]),
+                    _ => (0, Vec::new(), Vec::new()),
+                };
+                NodeState {
+                    inq: n.inputs.iter().map(|_| VecDeque::new()).collect(),
+                    next_iter: 0,
+                    acc: n.imm,
+                    outstanding: 0,
+                    commits: 0,
+                    fires: 0,
+                    idx,
+                    addr,
+                    coefs,
+                }
+            })
+            .collect();
+        let expected_commits = mapping
+            .dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match &n.kind {
+                NodeKind::Store { period, .. } => {
+                    Some((i, mapping.dfg.total_iters() / *period as u64))
+                }
+                _ => None,
+            })
+            .collect();
+        // Precompute consumer adjacency with per-edge route hop latency.
+        let mut consumers: Vec<Vec<(usize, usize, u64)>> =
+            vec![Vec::new(); mapping.dfg.nodes.len()];
+        for (dst, n) in mapping.dfg.nodes.iter().enumerate() {
+            for (slot, &src) in n.inputs.iter().enumerate() {
+                let hops =
+                    mapping.routes.for_edge(src, dst).map(|r| r.hops() as u64).unwrap_or(0);
+                consumers[src].push((dst, slot, hops));
+            }
+        }
+        Ok(Engine {
+            mapping,
+            machine,
+            smem,
+            nodes,
+            event_buckets: Default::default(),
+            consumers,
+            cycle: 0,
+            expected_commits,
+        })
+    }
+
+    /// True when every input queue of `node` holds iteration `expect` at
+    /// its head (queues are kept iteration-sorted each cycle).
+    fn heads_at(&self, node: usize, expect: u64) -> bool {
+        !self.nodes[node].inq.is_empty()
+            && self.nodes[node]
+                .inq
+                .iter()
+                .all(|q| q.front().is_some_and(|t| t.iter == expect))
+    }
+
+    /// Deliver a node's result for iteration `iter` to all consumers.
+    fn broadcast(&mut self, node: usize, iter: u64, value: f32) {
+        let lat = self.mapping.dfg.nodes[node].op.latency() as u64;
+        for k in 0..self.consumers[node].len() {
+            let (dst, slot, hops) = self.consumers[node][k];
+            self.event_buckets
+                .entry(self.cycle + lat + hops)
+                .or_default()
+                .push((dst, slot, Token { iter, value }));
+        }
+    }
+
+    /// Retired-iteration frontier: stores consume one token per iteration
+    /// (committing only on period boundaries), so the slowest store's
+    /// consumed-iteration count bounds how far the sources may run ahead.
+    fn commit_frontier(&self) -> u64 {
+        self.expected_commits
+            .iter()
+            .map(|&(i, _)| self.nodes[i].next_iter)
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn done(&self) -> bool {
+        self.expected_commits.iter().all(|&(i, want)| self.nodes[i].commits >= want)
+    }
+
+    /// Run to completion. `max_cycles` guards against deadlock bugs.
+    pub fn run(mut self, max_cycles: u64) -> Result<SimResult, DiagError> {
+        let total_iters = self.mapping.dfg.total_iters();
+        let n = self.mapping.dfg.nodes.len();
+        let mut inflight_sum = 0.0f64;
+        let mut steady_start_cycle = None;
+        let mut steady_start_frontier = 0;
+
+        while !self.done() {
+            if self.cycle >= max_cycles {
+                return Err(DiagError::InvalidParams(format!(
+                    "sim `{}`: exceeded {max_cycles} cycles (deadlock or window too small)",
+                    self.mapping.dfg.name
+                )));
+            }
+
+            // 1. Memory completes.
+            for resp in self.smem.tick() {
+                if resp.write {
+                    continue; // store committed at grant time (counted then)
+                }
+                let node = (resp.tag >> 32) as usize;
+                let iter = resp.tag & 0xFFFF_FFFF;
+                self.nodes[node].outstanding -= 1;
+                self.broadcast(node, iter, resp.value);
+            }
+
+            // 2. Deliver due route events, keeping each queue iteration-
+            // sorted by insertion (queues are short; memory responses are
+            // the only out-of-order producers).
+            while let Some((&due, _)) = self.event_buckets.first_key_value() {
+                if due > self.cycle {
+                    break;
+                }
+                let (_, batch) = self.event_buckets.pop_first().unwrap();
+                for (dst, slot, tok) in batch {
+                    let q = &mut self.nodes[dst].inq[slot];
+                    if q.back().is_none_or(|t| t.iter < tok.iter) {
+                        q.push_back(tok);
+                    } else {
+                        let pos = q.partition_point(|t| t.iter < tok.iter);
+                        q.insert(pos, tok);
+                    }
+                }
+            }
+
+            // 3. Fire PEs (deterministic node order; one fire per node).
+            let frontier = self.commit_frontier();
+            for node in 0..n {
+                self.step_node(node, total_iters, frontier)?;
+            }
+
+            inflight_sum += (self
+                .nodes
+                .iter()
+                .map(|s| s.next_iter)
+                .max()
+                .unwrap_or(0)
+                .saturating_sub(frontier)) as f64;
+
+            // Steady-state II measurement: between 25% and 100% of commits.
+            if steady_start_cycle.is_none() && frontier >= total_iters / 4 {
+                steady_start_cycle = Some(self.cycle);
+                steady_start_frontier = frontier;
+            }
+
+            self.cycle += 1;
+        }
+
+        // Drain the bank pipeline: commits were counted at submit time but
+        // the writes land one grant + one completion cycle later.
+        while !self.smem.idle() {
+            self.smem.tick();
+            self.cycle += 1;
+        }
+
+        let fires = self.nodes.iter().map(|s| s.fires).sum();
+        let measured_ii = match steady_start_cycle {
+            Some(c0) => {
+                let di = self.commit_frontier().saturating_sub(steady_start_frontier);
+                if di > 0 {
+                    (self.cycle - c0) as f64 / di as f64
+                } else {
+                    self.cycle as f64
+                }
+            }
+            None => self.cycle as f64 / total_iters as f64,
+        };
+        Ok(SimResult {
+            cycles: self.cycle,
+            mem: self.smem.image().to_vec(),
+            fires,
+            smem: self.smem.stats.clone(),
+            avg_parallelism: inflight_sum / self.cycle.max(1) as f64,
+            measured_ii,
+        })
+    }
+
+    fn step_node(&mut self, node: usize, total_iters: u64, frontier: u64) -> Result<(), DiagError> {
+        // `mapping` is a shared borrow independent of `&mut self` (perf:
+        // avoids cloning NodeKind — and its coef Vec — per node per cycle).
+        let mapping: &'a Mapping = self.mapping;
+        let op = mapping.dfg.nodes[node].op;
+        match &mapping.dfg.nodes[node].kind {
+            NodeKind::Const | NodeKind::Index(_) => {
+                let iter = self.nodes[node].next_iter;
+                if iter < total_iters && iter < frontier + Self::WINDOW {
+                    let value = match mapping.dfg.nodes[node].kind {
+                        NodeKind::Const => mapping.dfg.nodes[node].imm,
+                        NodeKind::Index(d) => self.nodes[node].idx[d] as f32,
+                        _ => unreachable!(),
+                    };
+                    if matches!(mapping.dfg.nodes[node].kind, NodeKind::Index(_)) {
+                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    }
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, iter, value);
+                }
+            }
+            NodeKind::Load(Access::Affine { base, coefs }) => {
+                let iter = self.nodes[node].next_iter;
+                if iter < total_iters
+                    && iter < frontier + Self::WINDOW
+                    && self.nodes[node].outstanding < Self::MSHRS
+                {
+                    let _ = (base, coefs);
+                    let addr = self.nodes[node].addr as usize;
+                    self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    self.smem.submit(MemReq {
+                        requester: node,
+                        addr,
+                        write: false,
+                        wdata: 0.0,
+                        tag: ((node as u64) << 32) | iter,
+                    })?;
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].outstanding += 1;
+                    self.nodes[node].fires += 1;
+                }
+            }
+            NodeKind::Load(Access::Indirect { .. }) => {
+                // Address arrives as input 0; issue strictly in order.
+                if self.nodes[node].outstanding < Self::MSHRS
+                    && self.heads_at(node, self.nodes[node].next_iter)
+                {
+                    let tok = self.nodes[node].inq[0].pop_front().unwrap();
+                    self.smem.submit(MemReq {
+                        requester: node,
+                        addr: tok.value as usize,
+                        write: false,
+                        wdata: 0.0,
+                        tag: ((node as u64) << 32) | tok.iter,
+                    })?;
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].outstanding += 1;
+                    self.nodes[node].fires += 1;
+                }
+            }
+            NodeKind::Compute => {
+                // Memory responses can return out of iteration order (bank
+                // arbitration), so consumers fire strictly in order: all
+                // operand queues must hold the *expected* iteration at head.
+                let expect = self.nodes[node].next_iter;
+                if self.heads_at(node, expect) {
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let a = toks.first().map(|t| t.value).unwrap_or(0.0);
+                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
+                    let v = op.eval(a, b, self.mapping.dfg.nodes[node].imm);
+                    self.nodes[node].next_iter = expect + 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, expect, v);
+                }
+            }
+            NodeKind::Accum { reset_period } => {
+                // Accumulators must consume iterations in order.
+                if self.heads_at(node, self.nodes[node].next_iter) {
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let iter = toks[0].iter;
+                    if iter % *reset_period as u64 == 0 {
+                        self.nodes[node].acc = self.mapping.dfg.nodes[node].imm;
+                    }
+                    let a = toks[0].value;
+                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
+                    let st = self.nodes[node].acc;
+                    let v = match op {
+                        Op::Mac => op.eval(a, b, st),
+                        _ => op.eval(st, a, 0.0),
+                    };
+                    self.nodes[node].acc = v;
+                    self.nodes[node].next_iter = iter + 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, iter, v);
+                }
+            }
+            NodeKind::Store { access, period } => {
+                if self.nodes[node].outstanding < Self::MSHRS
+                    && self.heads_at(node, self.nodes[node].next_iter)
+                {
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let iter = toks[0].iter;
+                    self.nodes[node].next_iter = iter + 1;
+                    let phase = iter % *period as u64;
+                    let gen_addr = self.nodes[node].addr as usize;
+                    if matches!(access, Access::Affine { .. }) {
+                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    }
+                    if phase == *period as u64 - 1 {
+                        let addr = match &access {
+                            Access::Affine { .. } => gen_addr,
+                            Access::Indirect { .. } => toks[1].value as usize,
+                        };
+                        self.smem.submit(MemReq {
+                            requester: node,
+                            addr,
+                            write: true,
+                            wdata: toks[0].value,
+                            tag: ((node as u64) << 32) | iter,
+                        })?;
+                        // Commit counted at grant; simple model: count now,
+                        // the write lands within two cycles and the run only
+                        // ends once the smem is drained below.
+                        self.nodes[node].commits += 1;
+                    }
+                    self.nodes[node].fires += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience wrapper: simulate a mapping against an initial memory image.
+pub fn simulate(
+    mapping: &Mapping,
+    machine: &MachineDesc,
+    mem_image: &[f32],
+    max_cycles: u64,
+) -> Result<SimResult, DiagError> {
+    let engine = Engine::new(mapping, machine, mem_image)?;
+    engine.run(max_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::compiler::{compile, dfg::interpret, Dfg};
+    use crate::plugins::elaborate;
+
+    fn machine() -> MachineDesc {
+        elaborate(presets::standard()).unwrap().artifact
+    }
+
+    fn check_against_interpreter(dfg: Dfg, mem_init: Vec<f32>) -> SimResult {
+        let m = machine();
+        let mut golden = mem_init.clone();
+        golden.resize(m.smem.as_ref().unwrap().words(), 0.0);
+        interpret(&dfg, &mut golden).unwrap();
+        let mapping = compile(dfg, &m, 11).unwrap();
+        let res = simulate(&mapping, &m, &mem_init, 2_000_000).unwrap();
+        assert_eq!(res.mem.len(), golden.len());
+        for (i, (a, b)) in res.mem.iter().zip(golden.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-6 || (a.is_nan() && b.is_nan()),
+                "mem[{i}]: sim {a} vs golden {b}"
+            );
+        }
+        res
+    }
+
+    #[test]
+    fn vec_add_matches_golden() {
+        let mut d = Dfg::new("vadd", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(16, vec![1]);
+        let s = d.compute(Op::Add, x, y);
+        d.store_affine(s, 32, vec![1], 1);
+        let mut mem = vec![0.0f32; 48];
+        for i in 0..16 {
+            mem[i] = i as f32;
+            mem[16 + i] = 100.0 + i as f32;
+        }
+        let res = check_against_interpreter(d, mem);
+        assert!(res.cycles > 16);
+        assert!(res.fires > 0);
+    }
+
+    #[test]
+    fn dot_product_matches_golden() {
+        let mut d = Dfg::new("dot", vec![32]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(32, vec![1]);
+        let mu = d.compute(Op::Mul, x, y);
+        let acc = d.accum(Op::Add, mu, 0.0, 32);
+        d.store_affine(acc, 64, vec![0], 32);
+        let mut mem = vec![0.0f32; 65];
+        for i in 0..32 {
+            mem[i] = (i % 7) as f32 * 0.5;
+            mem[32 + i] = (i % 5) as f32 - 2.0;
+        }
+        check_against_interpreter(d, mem);
+    }
+
+    #[test]
+    fn gemm_nest_matches_golden() {
+        // 4x4x4 GEMM: A@0, B@16, C@32.
+        let mut d = Dfg::new("gemm4", vec![4, 4, 4]);
+        let a = d.load_affine(0, vec![4, 0, 1]);
+        let b = d.load_affine(16, vec![0, 1, 4]);
+        let mu = d.compute(Op::Mul, a, b);
+        let acc = d.accum(Op::Add, mu, 0.0, 4);
+        d.store_affine(acc, 32, vec![4, 1, 0], 4);
+        let mut mem = vec![0.0f32; 48];
+        for i in 0..16 {
+            mem[i] = (i as f32) * 0.25;
+            mem[16 + i] = ((i * 3 % 8) as f32) - 4.0;
+        }
+        let res = check_against_interpreter(d, mem);
+        // 64 iterations; spatially pipelined so cycles ≪ scalar 64*ops.
+        assert!(res.cycles < 1000, "{}", res.cycles);
+    }
+
+    #[test]
+    fn tanh_pipeline_matches_golden() {
+        let mut d = Dfg::new("acts", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let t = d.unary(Op::Tanh, x);
+        let e = d.unary(Op::Exp, t);
+        d.store_affine(e, 16, vec![1], 1);
+        let mut mem = vec![0.0f32; 32];
+        for i in 0..16 {
+            mem[i] = (i as f32 - 8.0) * 0.3;
+        }
+        check_against_interpreter(d, mem);
+    }
+
+    #[test]
+    fn indirect_gather_matches_golden() {
+        let mut d = Dfg::new("gather", vec![8]);
+        let pidx = d.load_affine(0, vec![1]);
+        let base = d.constant(8.0);
+        let addr = d.compute(Op::Add, pidx, base);
+        let x = d.load_indirect(addr);
+        d.store_affine(x, 16, vec![1], 1);
+        let mut mem = vec![0.0f32; 24];
+        for i in 0..8 {
+            mem[i] = (7 - i) as f32;
+            mem[8 + i] = 50.0 + i as f32;
+        }
+        check_against_interpreter(d, mem);
+    }
+
+    #[test]
+    fn bank_conflicts_slow_execution() {
+        // All loads pinned to bank 0 vs striding: pinned must be slower.
+        let build = |stride: i32, name: &str| {
+            let mut d = Dfg::new(name, vec![64]);
+            let x = d.load_affine(0, vec![stride]);
+            let y = d.load_affine(1, vec![stride]);
+            let s = d.compute(Op::Add, x, y);
+            d.store_affine(s, 128, vec![1], 1);
+            d
+        };
+        let m = machine();
+        let mem = vec![1.0f32; 256];
+        // stride 16 = bank-pinned (16 banks); stride 1 = rotating.
+        let pinned = compile(build(16, "pinned"), &m, 3).unwrap();
+        let rotating = compile(build(1, "rot"), &m, 3).unwrap();
+        // Note: stride-16 over 64 iters walks addr 0..1024 — keep in range:
+        // use a bigger image.
+        let mem_big = vec![1.0f32; 2048];
+        let t_pinned = simulate(&pinned, &m, &mem_big, 1_000_000).unwrap();
+        let t_rot = simulate(&rotating, &m, &mem, 1_000_000).unwrap();
+        assert!(
+            t_pinned.cycles > t_rot.cycles,
+            "pinned {} vs rotating {}",
+            t_pinned.cycles,
+            t_rot.cycles
+        );
+        assert!(t_pinned.smem.conflicts > t_rot.smem.conflicts);
+    }
+
+    #[test]
+    fn deadlock_guard_fires() {
+        let mut d = Dfg::new("big", vec![1000]);
+        let x = d.load_affine(0, vec![1]);
+        d.store_affine(x, 2000, vec![1], 1);
+        let m = machine();
+        let mapping = compile(d, &m, 1).unwrap();
+        let mem = vec![0.0f32; 4];
+        // OOB image: the load itself errors first; use tiny max_cycles on a
+        // valid image to trigger the guard instead.
+        let mem_ok = vec![0.0f32; 4096];
+        let err = simulate(&mapping, &m, &mem_ok, 10).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("exceeded"));
+        let _ = mem;
+    }
+
+    #[test]
+    fn parallelism_exceeds_one() {
+        let mut d = Dfg::new("pipe", vec![128]);
+        let x = d.load_affine(0, vec![1]);
+        let a = d.unary(Op::Add, x);
+        let b = d.unary(Op::Mul, a);
+        let c = d.unary(Op::Add, b);
+        d.store_affine(c, 128, vec![1], 1);
+        let m = machine();
+        let mapping = compile(d, &m, 9).unwrap();
+        let res = simulate(&mapping, &m, &vec![1.0f32; 256], 1_000_000).unwrap();
+        assert!(res.avg_parallelism > 1.0, "{}", res.avg_parallelism);
+        assert!(res.measured_ii < 4.0, "{}", res.measured_ii);
+    }
+}

@@ -1,0 +1,279 @@
+//! `MachineDesc` — the simulator-facing architecture description.
+//!
+//! This is the Generation-layer artifact the WindMill plugins assemble
+//! during elaboration (the `Target::Artifact` of the DIAG generator):
+//! everything the cycle-accurate simulator, the DFG mapper and the PPA
+//! models need to know about one generated WindMill instance, decoupled
+//! from the structural netlist.
+
+use std::collections::BTreeSet;
+
+use crate::arch::isa::OpClass;
+use crate::arch::params::{ExecMode, PeType, SharedRegMode};
+use crate::arch::topology::Topology;
+use crate::diag::error::DiagError;
+
+/// One PE cell in the array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeDesc {
+    pub ty: PeType,
+    /// Operation classes this PE can execute (assembled from the FU plugin
+    /// chain; Fig. 3 — unplugging the SFU removes `OpClass::Sfu` here).
+    pub caps: BTreeSet<OpClass>,
+    /// Local register-file entries.
+    pub regs: usize,
+    /// Neighbour coordinates reachable in one transfer, sorted — the port
+    /// index used by `Operand::Port` is the position in this list.
+    pub ports: Vec<(usize, usize)>,
+}
+
+/// Shared-memory + parallel-access-interface description (§IV-A.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmemDesc {
+    pub banks: usize,
+    pub depth: usize,
+    pub width_bits: u32,
+    /// Number of LSU requesters arbitrated round-robin by the PAI.
+    pub pai_requesters: usize,
+}
+
+impl SmemDesc {
+    pub fn words(&self) -> usize {
+        self.banks * self.depth
+    }
+}
+
+/// DMA controller description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmaDesc {
+    /// Ping-pong double buffering: computation overlaps migration by
+    /// flipping the reserved address MSB on PEA finish (§IV-A.4).
+    pub pingpong: bool,
+    /// Transfer throughput, 32-bit words per cycle.
+    pub words_per_cycle: u32,
+}
+
+/// Shared-register file description (§IV-A.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedRegsDesc {
+    pub mode: SharedRegMode,
+    pub regs_per_group: usize,
+}
+
+/// Host processor + RTT description (§IV-A.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostDesc {
+    pub rtt_entries: usize,
+    /// Configuration words deliverable to the PEA per cycle over AXI.
+    pub config_words_per_cycle: u32,
+    /// Host-side cycles to issue one customized instruction through RTT.
+    pub rtt_decode_cycles: u32,
+    /// AXI round-trip latency in PEA cycles.
+    pub axi_latency_cycles: u32,
+}
+
+/// Controller-PE description (§IV-A.5): present only when the CPE plugin
+/// is plugged; enables array-autonomous multi-layer launches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpeDesc {
+    pub position: (usize, usize),
+    /// Cycles for the CPE to issue a relaunch (vs a full host round trip).
+    pub relaunch_cycles: u32,
+}
+
+/// The complete machine description of one elaborated WindMill.
+#[derive(Debug, Clone, Default)]
+pub struct MachineDesc {
+    pub rows: usize,
+    pub cols: usize,
+    pub topology: Option<Topology>,
+    pub data_width: u32,
+    /// Row-major PE grid; filled by the PEA plugin, refined by FU plugins.
+    pub pes: Vec<PeDesc>,
+    pub smem: Option<SmemDesc>,
+    pub dma: Option<DmaDesc>,
+    pub shared_regs: Option<SharedRegsDesc>,
+    pub host: Option<HostDesc>,
+    pub cpe: Option<CpeDesc>,
+    pub exec_mode: Option<ExecMode>,
+    /// Effective context-memory depth (after the SCMD 8× multiplier).
+    pub context_depth: usize,
+    pub rca_count: usize,
+    pub freq_mhz: f64,
+}
+
+impl MachineDesc {
+    pub fn pe(&self, r: usize, c: usize) -> &PeDesc {
+        &self.pes[r * self.cols + c]
+    }
+
+    pub fn pe_mut(&mut self, r: usize, c: usize) -> &mut PeDesc {
+        let cols = self.cols;
+        &mut self.pes[r * cols + c]
+    }
+
+    pub fn positions(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let cols = self.cols;
+        (0..self.rows).flat_map(move |r| (0..cols).map(move |c| (r, c)))
+    }
+
+    /// Port index on PE `(r,c)` that receives data from neighbour `from`.
+    pub fn port_from(&self, r: usize, c: usize, from: (usize, usize)) -> Option<u8> {
+        self.pe(r, c).ports.iter().position(|&p| p == from).map(|i| i as u8)
+    }
+
+    /// Cycle time in nanoseconds at the target frequency.
+    pub fn cycle_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+
+    /// PEs (positions) capable of executing the given op class.
+    pub fn pes_with(&self, class: OpClass) -> Vec<(usize, usize)> {
+        self.positions()
+            .filter(|&(r, c)| self.pe(r, c).caps.contains(&class))
+            .collect()
+    }
+
+    /// Consistency checks run after elaboration and before simulation.
+    pub fn validate(&self) -> Result<(), DiagError> {
+        let err = |m: String| Err(DiagError::InvalidParams(format!("machine: {m}")));
+        if self.rows * self.cols == 0 {
+            return err("empty PEA".into());
+        }
+        if self.pes.len() != self.rows * self.cols {
+            return err(format!(
+                "PE grid has {} cells for {}x{}",
+                self.pes.len(),
+                self.rows,
+                self.cols
+            ));
+        }
+        if self.topology.is_none() {
+            return err("no interconnect plugged".into());
+        }
+        if self.freq_mhz <= 0.0 {
+            return err("no clock target".into());
+        }
+        for (i, pe) in self.pes.iter().enumerate() {
+            if pe.caps.is_empty() {
+                return err(format!(
+                    "PE {} ({:?}) has no functional capabilities (no FU plugin?)",
+                    i, pe.ty
+                ));
+            }
+            if pe.ports.len() > 8 {
+                return err(format!("PE {i} has {} ports (max 8)", pe.ports.len()));
+            }
+            for &(r, c) in &pe.ports {
+                if r >= self.rows || c >= self.cols {
+                    return err(format!("PE {i} port to out-of-grid ({r},{c})"));
+                }
+            }
+        }
+        if let Some(sm) = &self.smem {
+            if sm.pai_requesters == 0 {
+                return err("PAI with zero requesters".into());
+            }
+        }
+        if let Some(cpe) = &self.cpe {
+            let (r, c) = cpe.position;
+            if r >= self.rows || c >= self.cols {
+                return err("CPE outside grid".into());
+            }
+            if self.pe(r, c).ty != PeType::Cpe {
+                return err(format!("CPE descriptor at ({r},{c}) but grid cell is {:?}", self.pe(r, c).ty));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_machine() -> MachineDesc {
+        let topo = Topology::Mesh2D;
+        let (rows, cols) = (2, 2);
+        let mut pes = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let ports: Vec<(usize, usize)> = topo
+                    .neighbors(r, c, rows, cols)
+                    .into_iter()
+                    .map(|(p, _)| p)
+                    .collect();
+                pes.push(PeDesc {
+                    ty: PeType::Gpe,
+                    caps: BTreeSet::from([OpClass::Alu, OpClass::Route]),
+                    regs: 8,
+                    ports,
+                });
+            }
+        }
+        MachineDesc {
+            rows,
+            cols,
+            topology: Some(topo),
+            data_width: 32,
+            pes,
+            smem: Some(SmemDesc { banks: 4, depth: 64, width_bits: 32, pai_requesters: 2 }),
+            dma: None,
+            shared_regs: None,
+            host: None,
+            cpe: None,
+            exec_mode: Some(ExecMode::Mcmd),
+            context_depth: 16,
+            rca_count: 1,
+            freq_mhz: 750.0,
+        }
+    }
+
+    #[test]
+    fn valid_machine_passes() {
+        tiny_machine().validate().unwrap();
+    }
+
+    #[test]
+    fn port_indices_match_sorted_neighbors() {
+        let m = tiny_machine();
+        // PE (0,0) neighbours sorted: (0,1), (1,0).
+        assert_eq!(m.port_from(0, 0, (0, 1)), Some(0));
+        assert_eq!(m.port_from(0, 0, (1, 0)), Some(1));
+        assert_eq!(m.port_from(0, 0, (1, 1)), None);
+    }
+
+    #[test]
+    fn caps_query() {
+        let m = tiny_machine();
+        assert_eq!(m.pes_with(OpClass::Alu).len(), 4);
+        assert!(m.pes_with(OpClass::Sfu).is_empty());
+    }
+
+    #[test]
+    fn empty_caps_rejected() {
+        let mut m = tiny_machine();
+        m.pe_mut(0, 1).caps.clear();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_grid_size_rejected() {
+        let mut m = tiny_machine();
+        m.pes.pop();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_topology_rejected() {
+        let mut m = tiny_machine();
+        m.topology = None;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn cycle_time() {
+        let m = tiny_machine();
+        assert!((m.cycle_ns() - 1.333).abs() < 0.01);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-accurate WindMill simulation.
+//!
+//! * [`machine`] — the elaborated architecture description (DIAG artifact).
+//! * [`smem`] — banked shared memory behind the round-robin PAI.
+//! * [`engine`] — token-dataflow cycle simulation of one mapped kernel.
+//! * [`task`] — multi-phase task execution: host launch protocol, DMA
+//!   (ping-pong overlap), CPE relaunch, RCA-ring pipelining.
+//! * [`scalar`] — the in-order host-CPU baseline executor.
+
+pub mod engine;
+pub mod machine;
+pub mod scalar;
+pub mod smem;
+pub mod task;
+
+pub use engine::{simulate, SimResult};
+pub use machine::MachineDesc;

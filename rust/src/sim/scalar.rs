@@ -1,0 +1,68 @@
+//! The host-CPU baseline executor (the paper's "CPU" comparison point).
+//!
+//! Runs the same DFG sequentially — the exact computation the VexRiscv-
+//! class host would perform without the RCA — and prices it with
+//! [`CpuModel`]. Numerics come from the shared reference interpreter, so
+//! baseline outputs always agree with the array's.
+
+use crate::compiler::dfg::{interpret, Dfg};
+use crate::diag::error::DiagError;
+use crate::model::baseline::CpuModel;
+
+/// Scalar execution result.
+#[derive(Debug, Clone)]
+pub struct ScalarResult {
+    pub mem: Vec<f32>,
+    pub time_ns: f64,
+    pub ops: crate::model::baseline::OpCounts,
+}
+
+/// Execute `dfg` on the CPU model against `mem_image`.
+pub fn run(
+    dfg: &Dfg,
+    cpu: &CpuModel,
+    mem_image: &[f32],
+    mem_words: usize,
+) -> Result<ScalarResult, DiagError> {
+    let mut mem = mem_image.to_vec();
+    mem.resize(mem_words.max(mem_image.len()), 0.0);
+    interpret(dfg, &mut mem)?;
+    let ops = dfg.op_counts();
+    Ok(ScalarResult { time_ns: cpu.time_ns(&ops), mem, ops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::isa::Op;
+
+    #[test]
+    fn scalar_time_scales_with_iterations() {
+        let build = |n: u32| {
+            let mut d = Dfg::new("v", vec![n]);
+            let x = d.load_affine(0, vec![1]);
+            let s = d.unary(Op::Add, x);
+            d.store_affine(s, n, vec![1], 1);
+            d
+        };
+        let cpu = CpuModel::default();
+        let mem = vec![1.0f32; 4096];
+        let t1 = run(&build(100), &cpu, &mem, 4096).unwrap().time_ns;
+        let t2 = run(&build(1000), &cpu, &mem, 4096).unwrap().time_ns;
+        assert!((t2 / t1 - 10.0).abs() < 0.5, "{}", t2 / t1);
+    }
+
+    #[test]
+    fn numerics_match_interpreter_by_construction() {
+        let mut d = Dfg::new("t", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        let t = d.unary(Op::Tanh, x);
+        d.store_affine(t, 8, vec![1], 1);
+        let cpu = CpuModel::default();
+        let mem: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let r = run(&d, &cpu, &mem, 16).unwrap();
+        for i in 0..8 {
+            assert!((r.mem[8 + i] - (i as f32 * 0.1).tanh()).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Shared-memory + PAI simulation (paper §IV-A.4).
+//!
+//! Word-interleaved banked SRAM (`bank = addr % banks`) behind a parallel
+//! access interface with one **round-robin arbiter per bank**: each cycle
+//! each bank grants at most one pending request, rotating priority across
+//! requesters so no LSU starves. Granted requests complete with one cycle
+//! of bank latency.
+
+use crate::diag::error::DiagError;
+
+/// One memory request from an LSU (or the host staging port).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemReq {
+    pub requester: usize,
+    pub addr: usize,
+    pub write: bool,
+    pub wdata: f32,
+    /// Opaque tag returned with the response (node id + iteration).
+    pub tag: u64,
+}
+
+/// A completed access.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemResp {
+    pub requester: usize,
+    pub value: f32,
+    pub tag: u64,
+    pub write: bool,
+}
+
+/// Contention statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SmemStats {
+    pub requests: u64,
+    pub grants: u64,
+    /// Cycles × banks where >1 request contended for the same bank.
+    pub conflicts: u64,
+    /// Peak queued requests across all banks.
+    pub peak_queue: usize,
+}
+
+/// Cycle-accurate banked shared memory with per-bank round-robin PAI.
+#[derive(Debug, Clone)]
+pub struct SmemSim {
+    banks: usize,
+    data: Vec<f32>,
+    /// Pending queues per bank.
+    queues: Vec<Vec<MemReq>>,
+    /// Round-robin pointer per bank (next requester with priority).
+    rr: Vec<usize>,
+    /// Requests granted last cycle, completing this cycle.
+    in_flight: Vec<MemResp>,
+    requesters: usize,
+    pub stats: SmemStats,
+}
+
+impl SmemSim {
+    pub fn new(banks: usize, depth: usize, requesters: usize) -> Self {
+        SmemSim {
+            banks,
+            data: vec![0.0; banks * depth],
+            queues: vec![Vec::new(); banks],
+            rr: vec![0; banks],
+            in_flight: Vec::new(),
+            requesters: requesters.max(1),
+            stats: SmemStats::default(),
+        }
+    }
+
+    pub fn words(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bulk image access (DMA / test setup).
+    pub fn load_image(&mut self, base: usize, words: &[f32]) -> Result<(), DiagError> {
+        if base + words.len() > self.data.len() {
+            return Err(DiagError::InvalidParams(format!(
+                "image {}..{} exceeds smem {}",
+                base,
+                base + words.len(),
+                self.data.len()
+            )));
+        }
+        self.data[base..base + words.len()].copy_from_slice(words);
+        Ok(())
+    }
+
+    pub fn image(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Queue a request (called during the issue phase of a cycle).
+    pub fn submit(&mut self, req: MemReq) -> Result<(), DiagError> {
+        if req.addr >= self.data.len() {
+            return Err(DiagError::InvalidParams(format!(
+                "smem access OOB: addr {} (smem {} words)",
+                req.addr,
+                self.data.len()
+            )));
+        }
+        debug_assert!(req.requester < self.requesters);
+        self.stats.requests += 1;
+        self.queues[req.addr % self.banks].push(req);
+        Ok(())
+    }
+
+    /// Advance one cycle: complete last cycle's grants, then arbitrate.
+    /// Returns the responses that complete *this* cycle.
+    pub fn tick(&mut self) -> Vec<MemResp> {
+        let done = std::mem::take(&mut self.in_flight);
+
+        let peak: usize = self.queues.iter().map(Vec::len).sum();
+        self.stats.peak_queue = self.stats.peak_queue.max(peak);
+
+        for b in 0..self.banks {
+            if self.queues[b].is_empty() {
+                continue;
+            }
+            if self.queues[b].len() > 1 {
+                self.stats.conflicts += 1;
+            }
+            // Round-robin: pick the queued request whose requester id is
+            // the first at-or-after the pointer (wrapping).
+            let ptr = self.rr[b];
+            let pick = (0..self.queues[b].len())
+                .min_by_key(|&qi| {
+                    let r = self.queues[b][qi].requester;
+                    ((r + self.requesters - ptr) % self.requesters, qi)
+                })
+                .unwrap();
+            let req = self.queues[b].remove(pick);
+            self.rr[b] = (req.requester + 1) % self.requesters;
+            self.stats.grants += 1;
+            let value = if req.write {
+                self.data[req.addr] = req.wdata;
+                req.wdata
+            } else {
+                self.data[req.addr]
+            };
+            self.in_flight.push(MemResp {
+                requester: req.requester,
+                value,
+                tag: req.tag,
+                write: req.write,
+            });
+        }
+        done
+    }
+
+    pub fn idle(&self) -> bool {
+        self.in_flight.is_empty() && self.queues.iter().all(Vec::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(requester: usize, addr: usize, tag: u64) -> MemReq {
+        MemReq { requester, addr, write: false, wdata: 0.0, tag }
+    }
+
+    #[test]
+    fn read_completes_one_cycle_after_grant() {
+        let mut sm = SmemSim::new(4, 16, 2);
+        sm.load_image(5, &[42.0]).unwrap();
+        sm.submit(req(0, 5, 7)).unwrap();
+        assert!(sm.tick().is_empty()); // grant cycle
+        let resp = sm.tick(); // completion cycle
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].value, 42.0);
+        assert_eq!(resp[0].tag, 7);
+    }
+
+    #[test]
+    fn writes_are_visible() {
+        let mut sm = SmemSim::new(4, 16, 1);
+        sm.submit(MemReq { requester: 0, addr: 3, write: true, wdata: 9.0, tag: 0 }).unwrap();
+        sm.tick();
+        sm.tick();
+        assert_eq!(sm.image()[3], 9.0);
+    }
+
+    #[test]
+    fn same_bank_serializes_different_banks_parallel() {
+        let mut sm = SmemSim::new(4, 16, 4);
+        // addrs 0,4,8 hit bank 0; addr 1 hits bank 1.
+        for (i, a) in [0usize, 4, 8, 1].into_iter().enumerate() {
+            sm.submit(req(i, a, i as u64)).unwrap();
+        }
+        sm.tick();
+        let c1 = sm.tick().len(); // bank0 first grant + bank1 grant
+        assert_eq!(c1, 2);
+        let c2 = sm.tick().len();
+        assert_eq!(c2, 1);
+        let c3 = sm.tick().len();
+        assert_eq!(c3, 1);
+        assert!(sm.stats.conflicts >= 2);
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        // Two requesters hammering one bank must alternate grants.
+        let mut sm = SmemSim::new(1, 16, 2);
+        let mut grant_order = Vec::new();
+        for cycle in 0..20 {
+            sm.submit(req(0, 0, 100 + cycle)).unwrap();
+            sm.submit(req(1, 0, 200 + cycle)).unwrap();
+            for r in sm.tick() {
+                grant_order.push(r.requester);
+            }
+        }
+        // Drain.
+        for _ in 0..50 {
+            for r in sm.tick() {
+                grant_order.push(r.requester);
+            }
+        }
+        let zeros = grant_order.iter().filter(|&&r| r == 0).count();
+        let ones = grant_order.iter().filter(|&&r| r == 1).count();
+        assert_eq!(zeros, 20);
+        assert_eq!(ones, 20);
+        // No requester gets two grants in a row while both are pending.
+        for w in grant_order[..10].windows(2) {
+            assert_ne!(w[0], w[1], "{grant_order:?}");
+        }
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let mut sm = SmemSim::new(4, 4, 1);
+        assert!(sm.submit(req(0, 999, 0)).is_err());
+    }
+
+    #[test]
+    fn idle_tracking() {
+        let mut sm = SmemSim::new(2, 8, 1);
+        assert!(sm.idle());
+        sm.submit(req(0, 0, 0)).unwrap();
+        assert!(!sm.idle());
+        sm.tick();
+        assert!(!sm.idle()); // in flight
+        sm.tick();
+        assert!(sm.idle());
+    }
+}

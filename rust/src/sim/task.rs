@@ -1,0 +1,278 @@
+//! Multi-phase task execution: the system-level timing of §IV-A.1/4/5.
+//!
+//! A [`Task`] is a sequence of dependent kernel phases sharing the RCA's
+//! memory (e.g. the RL step's forward → backward → update). Per phase the
+//! timeline charges:
+//!
+//! * **host protocol** — the 4-step sequence (load configurations, load
+//!   data, launch, store results) over AXI + RTT decode; with a **CPE**
+//!   plugged, phases after the first relaunch from inside the array
+//!   (`relaunch_cycles`) instead of paying a host round trip;
+//! * **DMA** — input/output migration; with **ping-pong** the migration of
+//!   phase *k+1* overlaps the computation of phase *k* (reserved-MSB
+//!   flip), otherwise it serializes;
+//! * **compute** — measured by the cycle-accurate engine.
+//!
+//! [`ring_makespan`] models the RCA ring: independent tasks round-robin
+//! over `rca_count` arrays and overlap their execution.
+
+use crate::compiler::Mapping;
+use crate::diag::error::DiagError;
+use crate::sim::engine::simulate;
+use crate::sim::machine::MachineDesc;
+
+/// One kernel phase plus its data movement.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub mapping: Mapping,
+    /// Words DMA'd from external storage into shared memory beforehand.
+    pub dma_in_words: u64,
+    /// Words DMA'd back out afterwards.
+    pub dma_out_words: u64,
+}
+
+/// A dependent multi-phase workload on one RCA.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub phases: Vec<Phase>,
+}
+
+/// Cycle breakdown of one task execution.
+#[derive(Debug, Clone, Default)]
+pub struct TaskResult {
+    pub compute_cycles: u64,
+    pub dma_cycles_total: u64,
+    /// DMA cycles actually exposed on the critical path (after ping-pong
+    /// overlap).
+    pub dma_cycles_exposed: u64,
+    pub config_cycles: u64,
+    pub host_cycles: u64,
+    pub total_cycles: u64,
+    /// Final shared-memory image.
+    pub mem: Vec<f32>,
+    /// Per-phase compute cycles (for overlap analysis).
+    pub phase_compute: Vec<u64>,
+}
+
+impl TaskResult {
+    pub fn time_ns(&self, machine: &MachineDesc) -> f64 {
+        self.total_cycles as f64 * machine.cycle_ns()
+    }
+}
+
+/// Execute a task on one RCA of the machine.
+pub fn run_task(
+    task: &Task,
+    machine: &MachineDesc,
+    mem_init: &[f32],
+    max_cycles_per_phase: u64,
+) -> Result<TaskResult, DiagError> {
+    let host = machine
+        .host
+        .as_ref()
+        .ok_or_else(|| DiagError::InvalidParams("machine has no host bridge".into()))?;
+    let dma_wpc = machine.dma.as_ref().map(|d| d.words_per_cycle as u64);
+    let pingpong = machine.dma.as_ref().map(|d| d.pingpong).unwrap_or(false);
+
+    let mut res = TaskResult::default();
+    let mut mem = mem_init.to_vec();
+
+    // Config loading: if the whole task's context images fit the context
+    // memory simultaneously, configurations are loaded once and the CPE can
+    // relaunch phases; otherwise each phase pays a host config load.
+    let ctx_words_total: usize =
+        task.phases.iter().map(|p| p.mapping.config.max_words_per_pe()).sum();
+    let preloadable = ctx_words_total <= machine.context_depth;
+    let config_beats: u64 = task.phases.iter().map(|p| p.mapping.config.load_beats()).sum();
+    let cfg_rate = host.config_words_per_cycle as u64;
+
+    if preloadable {
+        res.config_cycles += config_beats.div_ceil(cfg_rate) + host.axi_latency_cycles as u64;
+        res.host_cycles += (host.rtt_decode_cycles + host.axi_latency_cycles) as u64;
+    }
+
+    let mut prev_compute: u64 = 0;
+    for (k, phase) in task.phases.iter().enumerate() {
+        // Per-phase config + launch cost.
+        if !preloadable {
+            res.config_cycles +=
+                phase.mapping.config.load_beats().div_ceil(cfg_rate) + host.axi_latency_cycles as u64;
+        }
+        let launch = if k == 0 || machine.cpe.is_none() || !preloadable {
+            (host.rtt_decode_cycles + host.axi_latency_cycles) as u64
+        } else {
+            machine.cpe.as_ref().unwrap().relaunch_cycles as u64
+        };
+        res.host_cycles += launch;
+
+        // DMA in (overlappable with the previous phase's compute).
+        if let Some(wpc) = dma_wpc {
+            let cyc = phase.dma_in_words.div_ceil(wpc);
+            res.dma_cycles_total += cyc;
+            let exposed = if pingpong { cyc.saturating_sub(prev_compute) } else { cyc };
+            res.dma_cycles_exposed += exposed;
+        } else if phase.dma_in_words > 0 {
+            // No DMA plugin: the host moves data one word per AXI beat.
+            let cyc = phase.dma_in_words * 2 + host.axi_latency_cycles as u64;
+            res.dma_cycles_total += cyc;
+            res.dma_cycles_exposed += cyc;
+        }
+
+        // Compute.
+        let sim = simulate(&phase.mapping, machine, &mem, max_cycles_per_phase)?;
+        mem = sim.mem;
+        res.compute_cycles += sim.cycles;
+        res.phase_compute.push(sim.cycles);
+        prev_compute = sim.cycles;
+
+        // DMA out (the next phase's ping-pong overlaps it; charge half
+        // exposed under ping-pong as the tail write-back).
+        if let Some(wpc) = dma_wpc {
+            let cyc = phase.dma_out_words.div_ceil(wpc);
+            res.dma_cycles_total += cyc;
+            let exposed = if pingpong && k + 1 < task.phases.len() { 0 } else { cyc };
+            res.dma_cycles_exposed += exposed;
+        } else if phase.dma_out_words > 0 {
+            let cyc = phase.dma_out_words * 2 + host.axi_latency_cycles as u64;
+            res.dma_cycles_total += cyc;
+            res.dma_cycles_exposed += cyc;
+        }
+    }
+
+    res.total_cycles =
+        res.compute_cycles + res.dma_cycles_exposed + res.config_cycles + res.host_cycles;
+    res.mem = mem;
+    Ok(res)
+}
+
+/// Makespan (cycles) of `n_tasks` identical independent tasks pipelined
+/// over the RCA ring: each RCA runs tasks back-to-back; the ring's partial
+/// neighbour access lets loads/results stream while neighbours compute, so
+/// the steady state is `ceil(n / rcas)` task slots plus one fill.
+pub fn ring_makespan(task_cycles: u64, rca_count: usize, n_tasks: u64) -> u64 {
+    if n_tasks == 0 {
+        return 0;
+    }
+    let rcas = rca_count.max(1) as u64;
+    let rounds = n_tasks.div_ceil(rcas);
+    // Fill: the ring staggers task starts by 1/rcas of a task.
+    rounds * task_cycles + (rcas.min(n_tasks) - 1) * (task_cycles / rcas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::isa::Op;
+    use crate::arch::presets;
+    use crate::compiler::{compile, Dfg};
+    use crate::plugins::elaborate;
+
+    fn machine() -> MachineDesc {
+        elaborate(presets::standard()).unwrap().artifact
+    }
+
+    fn vadd_phase(m: &MachineDesc, n: u32, in_base: u32, out_base: u32) -> Phase {
+        let mut d = Dfg::new("vadd", vec![n]);
+        let x = d.load_affine(in_base, vec![1]);
+        let y = d.load_affine(in_base + n, vec![1]);
+        let s = d.compute(Op::Add, x, y);
+        d.store_affine(s, out_base, vec![1], 1);
+        Phase {
+            mapping: compile(d, m, 5).unwrap(),
+            dma_in_words: 2 * n as u64,
+            dma_out_words: n as u64,
+        }
+    }
+
+    #[test]
+    fn two_phase_task_chains_memory() {
+        let m = machine();
+        // Phase 1: c = a + b; phase 2: e = c + c (reads phase-1 output).
+        let p1 = vadd_phase(&m, 16, 0, 32);
+        let mut d2 = Dfg::new("double", vec![16]);
+        let c1 = d2.load_affine(32, vec![1]);
+        let c2 = d2.load_affine(32, vec![1]);
+        let s = d2.compute(Op::Add, c1, c2);
+        d2.store_affine(s, 64, vec![1], 1);
+        let p2 = Phase { mapping: compile(d2, &m, 6).unwrap(), dma_in_words: 0, dma_out_words: 16 };
+        let task = Task { name: "chain".into(), phases: vec![p1, p2] };
+        let mut mem = vec![0.0f32; 80];
+        for i in 0..16 {
+            mem[i] = i as f32;
+            mem[16 + i] = 2.0 * i as f32;
+        }
+        let r = run_task(&task, &m, &mem, 1_000_000).unwrap();
+        for i in 0..16 {
+            assert_eq!(r.mem[64 + i], 6.0 * i as f32);
+        }
+        assert_eq!(r.phase_compute.len(), 2);
+        assert!(r.total_cycles > r.compute_cycles);
+    }
+
+    #[test]
+    fn pingpong_hides_dma() {
+        let m = machine();
+        let task = Task {
+            name: "t".into(),
+            phases: vec![vadd_phase(&m, 32, 0, 128), vadd_phase(&m, 32, 64, 160)],
+        };
+        let mem = vec![1.0f32; 256];
+        let with_pp = run_task(&task, &m, &mem, 1_000_000).unwrap();
+
+        let mut p_no = presets::standard();
+        p_no.pingpong = false;
+        let m_no = elaborate(p_no).unwrap().artifact;
+        let task_no = Task {
+            name: "t".into(),
+            phases: vec![vadd_phase(&m_no, 32, 0, 128), vadd_phase(&m_no, 64 / 2, 64, 160)],
+        };
+        let without = run_task(&task_no, &m_no, &mem, 1_000_000).unwrap();
+        assert!(
+            with_pp.dma_cycles_exposed < without.dma_cycles_exposed,
+            "pp {} vs none {}",
+            with_pp.dma_cycles_exposed,
+            without.dma_cycles_exposed
+        );
+    }
+
+    #[test]
+    fn cpe_cuts_relaunch_cost() {
+        let m = machine();
+        let phases =
+            vec![vadd_phase(&m, 16, 0, 128), vadd_phase(&m, 16, 32, 160), vadd_phase(&m, 16, 64, 192)];
+        let task = Task { name: "multi".into(), phases: phases.clone() };
+        let mem = vec![1.0f32; 256];
+        let with_cpe = run_task(&task, &m, &mem, 1_000_000).unwrap();
+
+        let mut p_no = presets::standard();
+        p_no.cpe_enabled = false;
+        let m_no = elaborate(p_no).unwrap().artifact;
+        let task_no = Task {
+            name: "multi".into(),
+            phases: vec![
+                vadd_phase(&m_no, 16, 0, 128),
+                vadd_phase(&m_no, 16, 32, 160),
+                vadd_phase(&m_no, 16, 64, 192),
+            ],
+        };
+        let without = run_task(&task_no, &m_no, &mem, 1_000_000).unwrap();
+        assert!(
+            with_cpe.host_cycles < without.host_cycles,
+            "cpe {} vs host {}",
+            with_cpe.host_cycles,
+            without.host_cycles
+        );
+    }
+
+    #[test]
+    fn ring_makespan_scales() {
+        let one = ring_makespan(1000, 4, 1);
+        let four = ring_makespan(1000, 4, 4);
+        let eight = ring_makespan(1000, 4, 8);
+        assert_eq!(one, 1000);
+        assert!(four < 4 * 1000);
+        assert!(eight < 2 * four + 1000);
+        assert_eq!(ring_makespan(1000, 4, 0), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! The image has no network access and only the crates vendored for the
+//! `xla` dependency, so the usual suspects (serde_json, rand, prettytable)
+//! are replaced by the minimal in-tree implementations in this module.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,117 @@
+//! Aligned plain-text tables for bench/report output.
+//!
+//! Every benchmark harness prints its paper-figure reproduction through this
+//! (one `Table` per table/figure), so EXPERIMENTS.md rows can be pasted
+//! straight from bench output.
+
+/// Column-aligned table with a title and header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("| ");
+            for i in 0..ncols {
+                let w = widths[i];
+                let c = &cells[i];
+                s.push_str(c);
+                s.push_str(&" ".repeat(w - c.chars().count()));
+                s.push_str(" | ");
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|\n",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Shorthand cell formatting helpers.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+pub fn n(x: usize) -> String {
+    x.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        // All data lines equal width.
+        let lens: Vec<usize> =
+            r.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn cell_helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(n(42), "42");
+    }
+}

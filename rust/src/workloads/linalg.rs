@@ -1,0 +1,143 @@
+//! Dense linear-algebra workloads: SAXPY, dot product, GEMM.
+
+use crate::arch::isa::Op;
+use crate::compiler::Dfg;
+
+use super::Layout;
+
+/// `y = a·x + y` over `n` elements. Regions: `x`, `y_in`, `y_out`.
+pub fn saxpy(n: u32, a: f32) -> (Dfg, Layout) {
+    let mut l = Layout::new();
+    let x = l.alloc("x", n);
+    let yi = l.alloc("y_in", n);
+    let yo = l.alloc("y_out", n);
+    let mut d = Dfg::new("saxpy", vec![n]);
+    let ca = d.constant(a);
+    let lx = d.load_affine(x, vec![1]);
+    let ly = d.load_affine(yi, vec![1]);
+    let ax = d.compute(Op::Mul, ca, lx);
+    let s = d.compute(Op::Add, ax, ly);
+    d.store_affine(s, yo, vec![1], 1);
+    (d, l)
+}
+
+/// `out = Σ x[i]·y[i]`. Regions: `x`, `y`, `out` (1 word).
+pub fn dot(n: u32) -> (Dfg, Layout) {
+    let mut l = Layout::new();
+    let x = l.alloc("x", n);
+    let y = l.alloc("y", n);
+    let o = l.alloc("out", 1);
+    let mut d = Dfg::new("dot", vec![n]);
+    let lx = d.load_affine(x, vec![1]);
+    let ly = d.load_affine(y, vec![1]);
+    let m = d.compute(Op::Mul, lx, ly);
+    let acc = d.accum(Op::Add, m, 0.0, n);
+    d.store_affine(acc, o, vec![0], n);
+    (d, l)
+}
+
+/// Row-major `C[m,n] = Σ_k A[m,k]·B[k,n] + bias[n]`.
+/// Regions: `a` (m×k), `b` (k×n), `bias` (n), `c` (m×n).
+/// Loop nest: `[m, n, k]` with the K-reduction innermost.
+pub fn gemm_bias(m: u32, n: u32, k: u32) -> (Dfg, Layout) {
+    let mut l = Layout::new();
+    let a = l.alloc("a", m * k);
+    let b = l.alloc("b", k * n);
+    let bias = l.alloc("bias", n);
+    let c = l.alloc("c", m * n);
+    let mut d = Dfg::new("gemm", vec![m, n, k]);
+    let la = d.load_affine(a, vec![k as i32, 0, 1]);
+    let lb = d.load_affine(b, vec![0, 1, n as i32]);
+    let mu = d.compute(Op::Mul, la, lb);
+    let acc = d.accum(Op::Add, mu, 0.0, k);
+    let lbias = d.load_affine(bias, vec![0, 1, 0]);
+    let sum = d.compute(Op::Add, acc, lbias);
+    d.store_affine(sum, c, vec![n as i32, 1, 0], k);
+    (d, l)
+}
+
+/// GEMM with a fused activation on the epilogue (tanh/relu via `act_op`).
+pub fn gemm_bias_act(m: u32, n: u32, k: u32, act_op: Op) -> (Dfg, Layout) {
+    let (mut d, l) = gemm_bias(m, n, k);
+    // Rewire: insert activation between `sum` (node 5) and the store.
+    let store_id = d.stores()[0];
+    let sum_id = d.nodes[store_id].inputs[0];
+    let act = d.unary(act_op, sum_id);
+    d.nodes[store_id].inputs[0] = act;
+    d.name = format!("gemm_{:?}", act_op).to_lowercase();
+    (d, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::dfg::interpret;
+
+    #[test]
+    fn saxpy_reference() {
+        let (d, l) = saxpy(8, 2.0);
+        let mut mem = vec![0.0f32; l.total_words() as usize];
+        for i in 0..8 {
+            mem[l.base("x") as usize + i] = i as f32;
+            mem[l.base("y_in") as usize + i] = 1.0;
+        }
+        interpret(&d, &mut mem).unwrap();
+        for i in 0..8 {
+            assert_eq!(l.read(&mem, "y_out")[i], 2.0 * i as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let (m, n, k) = (5, 4, 6);
+        let (d, l) = gemm_bias(m, n, k);
+        let mut mem = vec![0.0f32; l.total_words() as usize];
+        let mut av = vec![0.0f32; (m * k) as usize];
+        let mut bv = vec![0.0f32; (k * n) as usize];
+        let mut biasv = vec![0.0f32; n as usize];
+        for (i, x) in av.iter_mut().enumerate() {
+            *x = (i as f32 * 0.7).sin();
+        }
+        for (i, x) in bv.iter_mut().enumerate() {
+            *x = (i as f32 * 1.3).cos();
+        }
+        for (i, x) in biasv.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        l.fill(&mut mem, "a", &av);
+        l.fill(&mut mem, "b", &bv);
+        l.fill(&mut mem, "bias", &biasv);
+        interpret(&d, &mut mem).unwrap();
+        for mm in 0..m {
+            for nn in 0..n {
+                let mut want = biasv[nn as usize];
+                for kk in 0..k {
+                    want += av[(mm * k + kk) as usize] * bv[(kk * n + nn) as usize];
+                }
+                let got = l.read(&mem, "c")[(mm * n + nn) as usize];
+                assert!((got - want).abs() < 1e-4, "C[{mm},{nn}] {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_act_applies_tanh() {
+        let (d, l) = gemm_bias_act(2, 2, 2, Op::Tanh);
+        let mut mem = vec![0.0f32; l.total_words() as usize];
+        l.fill(&mut mem, "a", &[1.0, 0.0, 0.0, 1.0]);
+        l.fill(&mut mem, "b", &[0.5, -0.5, 1.0, 2.0]);
+        l.fill(&mut mem, "bias", &[0.0, 0.0]);
+        interpret(&d, &mut mem).unwrap();
+        assert!((l.read(&mem, "c")[0] - 0.5f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_reference() {
+        let (d, l) = dot(16);
+        let mut mem = vec![0.0f32; l.total_words() as usize];
+        l.fill(&mut mem, "x", &[1.0; 16]);
+        l.fill(&mut mem, "y", &[3.0; 16]);
+        interpret(&d, &mut mem).unwrap();
+        assert_eq!(l.read(&mem, "out")[0], 48.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Workload library: the paper's "applications and algorithm tasks from
+//! three aspects" as WindMill DFGs.
+//!
+//! * [`linalg`] — dense linear algebra: SAXPY, dot, GEMM.
+//! * [`signal`] — signal processing: FIR filter, 3×3 convolution.
+//! * [`rl`] — the reinforcement-learning training step (REINFORCE over a
+//!   2-layer tanh policy), the paper's headline workload, built to match
+//!   the Layer-2 JAX graph in `python/compile/model.py` shape-for-shape.
+//!
+//! Every builder returns the DFG(s) plus a memory-layout description, so
+//! the simulator, the CPU baseline and the PJRT golden reference all
+//! address the same words.
+
+pub mod linalg;
+pub mod rl;
+pub mod signal;
+
+/// A named region in the shared-memory image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Region {
+    pub name: &'static str,
+    pub base: u32,
+    pub len: u32,
+}
+
+/// Memory layout helper: sequential allocation of named regions.
+#[derive(Debug, Clone, Default)]
+pub struct Layout {
+    pub regions: Vec<Region>,
+    next: u32,
+}
+
+impl Layout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, name: &'static str, len: u32) -> u32 {
+        let base = self.next;
+        self.regions.push(Region { name, base, len });
+        self.next += len;
+        base
+    }
+
+    pub fn total_words(&self) -> u32 {
+        self.next
+    }
+
+    pub fn base(&self, name: &str) -> u32 {
+        self.regions
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no region `{name}`"))
+            .base
+    }
+
+    pub fn region(&self, name: &str) -> &Region {
+        self.regions.iter().find(|r| r.name == name).unwrap()
+    }
+
+    /// Write `data` into `image` at the region's base.
+    pub fn fill(&self, image: &mut [f32], name: &str, data: &[f32]) {
+        let r = self.region(name);
+        assert!(data.len() <= r.len as usize, "{name}: {} > {}", data.len(), r.len);
+        image[r.base as usize..r.base as usize + data.len()].copy_from_slice(data);
+    }
+
+    /// Read a region back out of an image.
+    pub fn read<'a>(&self, image: &'a [f32], name: &str) -> &'a [f32] {
+        let r = self.region(name);
+        &image[r.base as usize..(r.base + r.len) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_allocates_sequentially() {
+        let mut l = Layout::new();
+        let a = l.alloc("a", 10);
+        let b = l.alloc("b", 6);
+        assert_eq!(a, 0);
+        assert_eq!(b, 10);
+        assert_eq!(l.total_words(), 16);
+        assert_eq!(l.base("b"), 10);
+    }
+
+    #[test]
+    fn fill_and_read_roundtrip() {
+        let mut l = Layout::new();
+        l.alloc("x", 4);
+        l.alloc("y", 4);
+        let mut img = vec![0.0f32; 8];
+        l.fill(&mut img, "y", &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.read(&img, "y"), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.read(&img, "x"), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no region")]
+    fn unknown_region_panics() {
+        Layout::new().base("ghost");
+    }
+}

@@ -1,0 +1,392 @@
+//! The reinforcement-learning training step — the paper's headline
+//! workload ("in the case of reinforcement learning algorithm, a
+//! significant performance improvement of 2.3× compared to GPU").
+//!
+//! REINFORCE over a 2-layer tanh policy, matching `python/compile/model.py`
+//! shape-for-shape (obs 4 → hidden 32 → 2 actions, batch 64, lr 0.05):
+//!
+//! ```text
+//! phase 1  h      = tanh(obs @ W1 + b1)                 [B,H,O] nest
+//! phase 2  logits = h @ W2 + b2                         [B,A,H]
+//! phase 3  p      = softmax(logits); gL = (p−onehot)·ret/B; loss  [B]
+//! phase 4  W2    -= lr · hᵀ @ gL                        [H,A,B]
+//! phase 5  b2    -= lr · Σ_m gL                         [A,B]
+//! phase 6  gpre   = (gL @ W2ᵀ) · (1−h²)                 [B,H,A]
+//! phase 7  W1    -= lr · obsᵀ @ gpre                    [O,H,B]
+//! phase 8  b1    -= lr · Σ_m gpre                       [H,B]
+//! ```
+//!
+//! The eight dependent phases are exactly the regime where the CPE's
+//! array-side relaunch and the ping-pong DMA pay off. Phase 6 reads W2
+//! *before* phase 4's update in the math — so the schedule runs 4/5 after
+//! 6 (order below: 1,2,3,6,4,5,7,8), preserving REINFORCE semantics.
+
+use crate::arch::isa::Op;
+use crate::compiler::Dfg;
+
+use super::Layout;
+
+pub const OBS: u32 = 4;
+pub const HIDDEN: u32 = 32;
+pub const ACT: u32 = 2;
+pub const BATCH: u32 = 64;
+pub const LR: f32 = 0.05;
+
+/// The RL step: phases (in execution order) + the shared-memory layout.
+#[derive(Debug, Clone)]
+pub struct RlStep {
+    pub phases: Vec<Dfg>,
+    pub layout: Layout,
+}
+
+/// Build the RL training step for the standard shapes.
+pub fn policy_step() -> RlStep {
+    policy_step_shaped(OBS, HIDDEN, ACT, BATCH)
+}
+
+/// Build the RL step for arbitrary (small) shapes.
+pub fn policy_step_shaped(o: u32, h: u32, a: u32, b: u32) -> RlStep {
+    let mut l = Layout::new();
+    let obs = l.alloc("obs", b * o);
+    let w1 = l.alloc("w1", o * h);
+    let b1 = l.alloc("b1", h);
+    let w2 = l.alloc("w2", h * a);
+    let b2 = l.alloc("b2", a);
+    let onehot = l.alloc("onehot", b * a);
+    let returns = l.alloc("returns", b);
+    let hbuf = l.alloc("h", b * h);
+    let logits = l.alloc("logits", b * a);
+    let glog = l.alloc("glogits", b * a);
+    let gpre = l.alloc("gpre", b * h);
+    let loss = l.alloc("loss", 1);
+
+    let mut phases = Vec::new();
+
+    // ---- phase 1: h = tanh(obs @ W1 + b1), nest [m=b, n=h, k=o] ----------
+    {
+        let mut d = Dfg::new("rl-fwd1", vec![b, h, o]);
+        let lo = d.load_affine(obs, vec![o as i32, 0, 1]);
+        let lw = d.load_affine(w1, vec![0, 1, h as i32]);
+        let mu = d.compute(Op::Mul, lo, lw);
+        let acc = d.accum(Op::Add, mu, 0.0, o);
+        let lb = d.load_affine(b1, vec![0, 1, 0]);
+        let s = d.compute(Op::Add, acc, lb);
+        let t = d.unary(Op::Tanh, s);
+        d.store_affine(t, hbuf, vec![h as i32, 1, 0], o);
+        phases.push(d);
+    }
+
+    // ---- phase 2: logits = h @ W2 + b2, nest [m=b, n=a, k=h] -------------
+    {
+        let mut d = Dfg::new("rl-fwd2", vec![b, a, h]);
+        let lh = d.load_affine(hbuf, vec![h as i32, 0, 1]);
+        let lw = d.load_affine(w2, vec![0, 1, a as i32]);
+        let mu = d.compute(Op::Mul, lh, lw);
+        let acc = d.accum(Op::Add, mu, 0.0, h);
+        let lb = d.load_affine(b2, vec![0, 1, 0]);
+        let s = d.compute(Op::Add, acc, lb);
+        d.store_affine(s, logits, vec![a as i32, 1, 0], h);
+        phases.push(d);
+    }
+
+    // ---- phase 3: softmax + policy-gradient + loss, nest [m=b] -----------
+    // Assumes a == 2 (binary action space, as in the paper-scale example).
+    {
+        assert_eq!(a, 2, "phase 3 is specialized to two actions");
+        let mut d = Dfg::new("rl-grad", vec![b]);
+        let l0 = d.load_affine(logits, vec![2]);
+        let l1 = d.load_affine(logits + 1, vec![2]);
+        let mx = d.compute(Op::Max, l0, l1);
+        let d0 = d.compute(Op::Sub, l0, mx);
+        let d1 = d.compute(Op::Sub, l1, mx);
+        let e0 = d.unary(Op::Exp, d0);
+        let e1 = d.unary(Op::Exp, d1);
+        let s = d.compute(Op::Add, e0, e1);
+        let p0 = d.compute(Op::Div, e0, s);
+        let p1 = d.compute(Op::Div, e1, s);
+        let oh0 = d.load_affine(onehot, vec![2]);
+        let oh1 = d.load_affine(onehot + 1, vec![2]);
+        let ret = d.load_affine(returns, vec![1]);
+        let lse = d.unary(Op::Log, s);
+        let lp0 = d.compute(Op::Sub, d0, lse);
+        let lp1 = d.compute(Op::Sub, d1, lse);
+        let c0 = d.compute(Op::Mul, oh0, lp0);
+        let c1 = d.compute(Op::Mul, oh1, lp1);
+        let lp = d.compute(Op::Add, c0, c1);
+        let rl = d.compute(Op::Mul, ret, lp);
+        let neg_inv_b = d.constant(-1.0 / b as f32);
+        let contrib = d.compute(Op::Mul, rl, neg_inv_b);
+        let acc = d.accum(Op::Add, contrib, 0.0, b);
+        d.store_affine(acc, loss, vec![0], b);
+        // gL = (p − onehot) · ret / B
+        let inv_b = d.constant(1.0 / b as f32);
+        let s0 = d.compute(Op::Sub, p0, oh0);
+        let s0r = d.compute(Op::Mul, s0, ret);
+        let g0 = d.compute(Op::Mul, s0r, inv_b);
+        d.store_affine(g0, glog, vec![2], 1);
+        let s1 = d.compute(Op::Sub, p1, oh1);
+        let s1r = d.compute(Op::Mul, s1, ret);
+        let g1 = d.compute(Op::Mul, s1r, inv_b);
+        d.store_affine(g1, glog + 1, vec![2], 1);
+        phases.push(d);
+    }
+
+    // ---- phase 6 (runs 4th): gpre = (gL @ W2ᵀ)·(1−h²), nest [m=b,k=h,n=a]
+    {
+        let mut d = Dfg::new("rl-bwd-hidden", vec![b, h, a]);
+        let lg = d.load_affine(glog, vec![a as i32, 0, 1]);
+        let lw = d.load_affine(w2, vec![0, a as i32, 1]);
+        let mu = d.compute(Op::Mul, lg, lw);
+        let acc = d.accum(Op::Add, mu, 0.0, a);
+        let lh = d.load_affine(hbuf, vec![h as i32, 1, 0]);
+        let hh = d.compute(Op::Mul, lh, lh);
+        let one = d.constant(1.0);
+        let omh = d.compute(Op::Sub, one, hh);
+        let g = d.compute(Op::Mul, acc, omh);
+        d.store_affine(g, gpre, vec![h as i32, 1, 0], a);
+        phases.push(d);
+    }
+
+    // ---- phase 4 (runs 5th): W2 -= lr·hᵀ@gL, nest [k=h, n=a, m=b] --------
+    {
+        let mut d = Dfg::new("rl-upd-w2", vec![h, a, b]);
+        let lh = d.load_affine(hbuf, vec![1, 0, h as i32]);
+        let lg = d.load_affine(glog, vec![0, 1, a as i32]);
+        let mu = d.compute(Op::Mul, lh, lg);
+        let acc = d.accum(Op::Add, mu, 0.0, b);
+        let lw = d.load_affine(w2, vec![a as i32, 1, 0]);
+        let lr = d.constant(LR);
+        let step = d.compute(Op::Mul, acc, lr);
+        let nw = d.compute(Op::Sub, lw, step);
+        d.store_affine(nw, w2, vec![a as i32, 1, 0], b);
+        phases.push(d);
+    }
+
+    // ---- phase 5 (runs 6th): b2 -= lr·Σ_m gL, nest [n=a, m=b] ------------
+    {
+        let mut d = Dfg::new("rl-upd-b2", vec![a, b]);
+        let lg = d.load_affine(glog, vec![1, a as i32]);
+        let acc = d.accum(Op::Add, lg, 0.0, b);
+        let lb = d.load_affine(b2, vec![1, 0]);
+        let lr = d.constant(LR);
+        let step = d.compute(Op::Mul, acc, lr);
+        let nb = d.compute(Op::Sub, lb, step);
+        d.store_affine(nb, b2, vec![1, 0], b);
+        phases.push(d);
+    }
+
+    // ---- phase 7: W1 -= lr·obsᵀ@gpre, nest [k=o, n=h, m=b] ---------------
+    {
+        let mut d = Dfg::new("rl-upd-w1", vec![o, h, b]);
+        let lo = d.load_affine(obs, vec![1, 0, o as i32]);
+        let lg = d.load_affine(gpre, vec![0, 1, h as i32]);
+        let mu = d.compute(Op::Mul, lo, lg);
+        let acc = d.accum(Op::Add, mu, 0.0, b);
+        let lw = d.load_affine(w1, vec![h as i32, 1, 0]);
+        let lr = d.constant(LR);
+        let step = d.compute(Op::Mul, acc, lr);
+        let nw = d.compute(Op::Sub, lw, step);
+        d.store_affine(nw, w1, vec![h as i32, 1, 0], b);
+        phases.push(d);
+    }
+
+    // ---- phase 8: b1 -= lr·Σ_m gpre, nest [n=h, m=b] ---------------------
+    {
+        let mut d = Dfg::new("rl-upd-b1", vec![h, b]);
+        let lg = d.load_affine(gpre, vec![1, h as i32]);
+        let acc = d.accum(Op::Add, lg, 0.0, b);
+        let lb = d.load_affine(b1, vec![1, 0]);
+        let lr = d.constant(LR);
+        let step = d.compute(Op::Mul, acc, lr);
+        let nb = d.compute(Op::Sub, lb, step);
+        d.store_affine(nb, b1, vec![1, 0], b);
+        phases.push(d);
+    }
+
+    RlStep { phases, layout: l }
+}
+
+impl RlStep {
+    /// Total dynamic op counts across all phases (CPU baseline input).
+    pub fn op_counts(&self) -> crate::model::baseline::OpCounts {
+        let mut total = crate::model::baseline::OpCounts::default();
+        for p in &self.phases {
+            let c = p.op_counts();
+            total.alu += c.alu;
+            total.mul += c.mul;
+            total.sfu += c.sfu;
+            total.mem += c.mem;
+            total.route += c.route;
+        }
+        total
+    }
+
+    /// Useful FLOPs of one step (GPU-model input): fwd + bwd matmuls.
+    pub fn flops(&self) -> f64 {
+        let (o, h, a, b) = (OBS as f64, HIDDEN as f64, ACT as f64, BATCH as f64);
+        // fwd: 2·B(OH + HA); bwd: gL@W2ᵀ 2·B·H·A, hᵀ@gL 2·H·A·B,
+        // obsᵀ@gpre 2·O·H·B; plus elementwise ~ 15·B·(H+A).
+        2.0 * b * (o * h + h * a) + 6.0 * b * h * a + 2.0 * o * h * b + 15.0 * b * (h + a)
+    }
+
+    /// Dependent kernel launches a GPU would need (unfusable stages).
+    pub fn gpu_kernels(&self) -> u32 {
+        self.phases.len() as u32
+    }
+
+    /// Execute all phases through the sequential reference interpreter.
+    pub fn interpret(&self, mem: &mut Vec<f32>) -> Result<(), crate::diag::DiagError> {
+        for p in &self.phases {
+            crate::compiler::dfg::interpret(p, mem)?;
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic parameter/batch initialization for tests and examples.
+pub fn init_image(step: &RlStep, seed: u64, mem_words: usize) -> Vec<f32> {
+    use crate::util::Rng;
+    let mut rng = Rng::new(seed);
+    let l = &step.layout;
+    let mut mem = vec![0.0f32; mem_words.max(l.total_words() as usize)];
+    let mut fill_normal = |name: &str, scale: f32| {
+        let r = l.region(name);
+        for i in 0..r.len as usize {
+            mem[r.base as usize + i] = rng.normal() * scale;
+        }
+    };
+    fill_normal("obs", 1.0);
+    fill_normal("w1", 0.3);
+    fill_normal("w2", 0.3);
+    // b1, b2 zero.
+    let r = l.region("onehot");
+    for m in 0..(r.len / 2) as usize {
+        let a = rng.range(0, 2);
+        mem[r.base as usize + 2 * m + a] = 1.0;
+        mem[r.base as usize + 2 * m + (1 - a)] = 0.0;
+    }
+    let r = l.region("returns");
+    for i in 0..r.len as usize {
+        mem[r.base as usize + i] = rng.normal();
+    }
+    mem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_validate() {
+        let step = policy_step();
+        assert_eq!(step.phases.len(), 8);
+        for p in &step.phases {
+            p.validate().unwrap();
+        }
+        // Fits in a 16×512 shared memory.
+        assert!(step.layout.total_words() <= 8192);
+    }
+
+    #[test]
+    fn loss_matches_hand_softmax() {
+        // Tiny shapes: o=2,h=2,a=2,b=1 — compute by hand.
+        let step = policy_step_shaped(2, 2, 2, 1);
+        let l = &step.layout;
+        let mut mem = vec![0.0f32; l.total_words() as usize];
+        l.fill(&mut mem, "obs", &[1.0, 0.0]);
+        l.fill(&mut mem, "w1", &[0.5, -0.5, 0.0, 0.0]);
+        l.fill(&mut mem, "b1", &[0.0, 0.0]);
+        l.fill(&mut mem, "w2", &[1.0, 0.0, 0.0, 1.0]);
+        l.fill(&mut mem, "b2", &[0.0, 0.0]);
+        l.fill(&mut mem, "onehot", &[1.0, 0.0]);
+        l.fill(&mut mem, "returns", &[2.0]);
+        step.interpret(&mut mem).unwrap();
+        // h = tanh([0.5, -0.5]); logits = h (identity W2).
+        let h0 = 0.5f32.tanh();
+        let h1 = (-0.5f32).tanh();
+        let (e0, e1) = ((h0 - h0).exp(), (h1 - h0).exp());
+        let p0 = e0 / (e0 + e1);
+        let want_loss = -2.0 * p0.ln();
+        let got = l.read(&mem, "loss")[0];
+        assert!((got - want_loss).abs() < 1e-5, "{got} vs {want_loss}");
+    }
+
+    #[test]
+    fn rewarded_action_probability_increases() {
+        let step = policy_step();
+        let l = step.layout.clone();
+        let mut mem = init_image(&step, 3, 0);
+        // Force: always action 0, always positive return.
+        let r = l.region("onehot");
+        for m in 0..BATCH as usize {
+            mem[r.base as usize + 2 * m] = 1.0;
+            mem[r.base as usize + 2 * m + 1] = 0.0;
+        }
+        let r = l.region("returns");
+        for i in 0..BATCH as usize {
+            mem[r.base as usize + i] = 1.0;
+        }
+
+        let mean_p0 = |mem: &Vec<f32>, step: &RlStep| -> f32 {
+            // Run fwd phases only on a copy to read logits.
+            let mut m2 = mem.clone();
+            crate::compiler::dfg::interpret(&step.phases[0], &mut m2).unwrap();
+            crate::compiler::dfg::interpret(&step.phases[1], &mut m2).unwrap();
+            let lg = step.layout.read(&m2, "logits");
+            let mut acc = 0.0;
+            for m in 0..BATCH as usize {
+                let (l0, l1) = (lg[2 * m], lg[2 * m + 1]);
+                let mx = l0.max(l1);
+                let (e0, e1) = ((l0 - mx).exp(), (l1 - mx).exp());
+                acc += e0 / (e0 + e1);
+            }
+            acc / BATCH as f32
+        };
+
+        let before = mean_p0(&mem, &step);
+        step.interpret(&mut mem).unwrap();
+        let after = mean_p0(&mem, &step);
+        assert!(after > before, "p0 {before} -> {after}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // dLoss/dW1[0,0] via the DFG vs central differences.
+        let step = policy_step_shaped(2, 4, 2, 8);
+        let l = step.layout.clone();
+        let base_mem = init_image(&step, 11, 0);
+
+        let loss_of = |mem0: &Vec<f32>| -> f32 {
+            let mut m = mem0.clone();
+            step.interpret(&mut m).unwrap();
+            l.read(&m, "loss")[0]
+        };
+        // Analytic gradient: (w1_old - w1_new) / lr.
+        let mut m = base_mem.clone();
+        step.interpret(&mut m).unwrap();
+        let w1_new = l.read(&m, "w1")[0];
+        let w1_old = base_mem[l.base("w1") as usize];
+        let analytic = (w1_old - w1_new) / LR;
+
+        let eps = 1e-3;
+        let mut mp = base_mem.clone();
+        mp[l.base("w1") as usize] += eps;
+        let mut mm = base_mem.clone();
+        mm[l.base("w1") as usize] -= eps;
+        let numeric = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+        assert!(
+            (analytic - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+            "analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    #[test]
+    fn op_counts_and_flops_sane() {
+        let step = policy_step();
+        let c = step.op_counts();
+        assert!(c.mul > 10_000); // B*H*O + B*A*H + ... multiplications
+        assert!(c.sfu >= (BATCH * 3) as u64); // tanh in fwd is per [B,H,O]
+        assert!(step.flops() > 30_000.0);
+        assert_eq!(step.gpu_kernels(), 8);
+    }
+}

@@ -1,0 +1,168 @@
+//! Full-stack integration tests: AOT artifacts (PJRT) ↔ cycle-accurate
+//! simulator ↔ analytic models, plus the paper's §V anchors.
+
+use windmill::arch::presets;
+use windmill::compiler::compile;
+use windmill::coordinator::{calibrate_params, ppa_report, run_job, JobSpec, Workload};
+use windmill::netlist::verilog;
+use windmill::plugins;
+use windmill::runtime::Runtime;
+use windmill::sim::task::{run_task, Phase, Task};
+use windmill::workloads::rl;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// The headline cross-layer check: one REINFORCE step executed (a) by the
+/// AOT'd JAX/Pallas graph through PJRT and (b) by the cycle-accurate
+/// simulator on the generated WindMill — same parameters, same batch —
+/// must agree on every updated weight and the loss.
+#[test]
+fn rl_step_simulator_matches_pjrt_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+
+    let step = rl::policy_step();
+    let params = calibrate_params(presets::standard(), &step.layout);
+    let machine = plugins::elaborate(params).unwrap().artifact;
+    let mem = rl::init_image(&step, 99, machine.smem.as_ref().unwrap().words());
+    let l = &step.layout;
+
+    // PJRT side.
+    let inputs: Vec<Vec<f32>> = ["w1", "b1", "w2", "b2", "obs", "onehot", "returns"]
+        .iter()
+        .map(|name| l.read(&mem, name).to_vec())
+        .collect();
+    let golden = rt.execute("policy_step", &inputs).unwrap();
+
+    // Simulator side.
+    let n = step.phases.len();
+    let task = Task {
+        name: "rl".into(),
+        phases: step
+            .phases
+            .iter()
+            .enumerate()
+            .map(|(i, d)| Phase {
+                mapping: compile(d.clone(), &machine, 42).unwrap(),
+                dma_in_words: if i == 0 { 500 } else { 0 },
+                dma_out_words: if i + 1 == n { 1 } else { 0 },
+            })
+            .collect(),
+    };
+    let tr = run_task(&task, &machine, &mem, 8_000_000).unwrap();
+
+    for (idx, name) in ["w1", "b1", "w2", "b2"].iter().enumerate() {
+        let sim = l.read(&tr.mem, name);
+        let gold = &golden[idx];
+        assert_eq!(sim.len(), gold.len(), "{name}");
+        for (i, (a, b)) in sim.iter().zip(gold.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-4, "{name}[{i}]: sim {a} vs pjrt {b}");
+        }
+    }
+    let sim_loss = l.read(&tr.mem, "loss")[0];
+    assert!((sim_loss - golden[4][0]).abs() < 1e-4, "loss {sim_loss} vs {}", golden[4][0]);
+    assert!(tr.total_cycles > 1000);
+}
+
+/// All five artifacts execute through PJRT with manifest-consistent shapes.
+#[test]
+fn all_artifacts_execute() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let names: Vec<String> = rt.manifest.entries.iter().map(|e| e.name.clone()).collect();
+    assert_eq!(names.len(), 5);
+    for name in names {
+        let spec = rt.manifest.entry(&name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|t| (0..t.elements()).map(|i| (i % 13) as f32 * 0.1 - 0.5).collect())
+            .collect();
+        let out = rt.execute(&name, &inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), spec.outputs.len(), "{name}");
+        for (o, t) in out.iter().zip(&spec.outputs) {
+            assert_eq!(o.len(), t.elements(), "{name}");
+            assert!(o.iter().all(|x| x.is_finite()), "{name} produced non-finite values");
+        }
+    }
+}
+
+/// Paper §V anchor: the standard instance runs at 750 MHz and ~16.15 mW.
+#[test]
+fn ppa_anchors_hold() {
+    let r = ppa_report("standard", presets::standard()).unwrap();
+    assert!(r.fmax_mhz >= 750.0, "timing does not close at 750 MHz: {:.0}", r.fmax_mhz);
+    assert!(
+        (r.power_mw - 16.15).abs() < 4.0,
+        "power {:.2} mW drifted from the 16.15 mW anchor",
+        r.power_mw
+    );
+}
+
+/// The paper's headline ratios, end to end through the coordinator.
+#[test]
+fn rl_speedups_are_paper_shaped() {
+    let r = run_job(&JobSpec {
+        workload: Workload::RlStep,
+        params: presets::standard(),
+        seed: 42,
+    })
+    .unwrap();
+    // "average 200x compared to CPU" — same decade, spatial win.
+    assert!(
+        r.speedup_vs_cpu > 100.0 && r.speedup_vs_cpu < 400.0,
+        "vs CPU: {:.0}x",
+        r.speedup_vs_cpu
+    );
+    // "2.3x compared to GPU" — a small-factor win.
+    assert!(
+        r.speedup_vs_gpu > 1.5 && r.speedup_vs_gpu < 4.0,
+        "vs GPU: {:.2}x",
+        r.speedup_vs_gpu
+    );
+}
+
+/// Unplug → elaborate → re-plug regenerates byte-identical Verilog, with
+/// zero residue while detached (the Fig. 3 / Fig. 6d agility claim).
+#[test]
+fn unplug_replug_verilog_stability() {
+    let mut gen = plugins::generator(presets::standard());
+    let base = verilog::emit(&gen.elaborate().unwrap().netlist);
+
+    gen.unplug("fu-sfu");
+    gen.params_mut().sfu_enabled = false;
+    let without = gen.elaborate().unwrap();
+    assert!(without.netlist.find("fu_sfu").is_none());
+    assert!(verilog::emit(&without.netlist).len() < base.len());
+
+    gen.params_mut().sfu_enabled = true;
+    gen.plug(Box::new(plugins::fu::SfuFuPlugin)).unwrap();
+    let restored = verilog::emit(&gen.elaborate().unwrap().netlist);
+    assert_eq!(restored, base);
+}
+
+/// Cross-domain suite: every workload domain runs and beats the host CPU.
+#[test]
+fn cross_domain_suite_beats_host_cpu() {
+    for workload in [
+        Workload::Saxpy { n: 128 },
+        Workload::Fir { n: 128, taps: 8 },
+        Workload::Conv3x3 { h: 16, w: 16 },
+    ] {
+        let r = run_job(&JobSpec { workload, params: presets::standard(), seed: 5 })
+            .unwrap();
+        assert!(r.speedup_vs_cpu > 1.0, "{}: {:.2}x", r.name, r.speedup_vs_cpu);
+    }
+}
