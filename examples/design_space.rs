@@ -1,96 +1,67 @@
-//! Design-space exploration: the Fig. 6 parameter sweeps as one runnable
-//! study — PEA size, PE-type mix, interconnect topology and shared-memory
-//! size against area / fmax / power, plus the performance effect on a
-//! fixed workload. Demonstrates the "quantitative parameterized
-//! architecture" side of the generator.
+//! Design-space exploration through the cache-backed sweep engine: the
+//! Fig. 6 parameter sweeps as one batched study — PEA size, PE-type mix,
+//! interconnect topology and shared-memory size, each point priced for
+//! area / fmax / power *and* measured on a fixed GEMM workload — plus the
+//! best-PPA Pareto frontier and the cache economics that make iterating on
+//! the grid cheap.
 //!
 //! `cargo run --release --example design_space`
 
+use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
-use windmill::coordinator::{ppa_report, run_job, JobSpec, Workload};
-use windmill::util::{table, Table};
+use windmill::coordinator::{SweepEngine, Workload};
 
-fn main() -> anyhow::Result<()> {
-    // --- Fig. 6a: area vs PEA size ----------------------------------------
-    let mut t = Table::new(
-        "Fig. 6a analog: PEA size sweep (strong area effect)",
-        &["pea", "gates", "area mm2", "fmax MHz", "power mW", "gemm cycles"],
-    );
-    for edge in [4usize, 6, 8, 12, 16] {
-        let p = presets::with_pea_size(edge);
-        let r = ppa_report(&format!("{edge}x{edge}"), p.clone())?;
-        let job = run_job(&JobSpec {
-            workload: Workload::Gemm { m: 16, n: 16, k: 16 },
-            params: p,
-            seed: 3,
-        })?;
-        t.row(&[
-            r.pea,
-            format!("{:.2e}", r.gates),
-            table::f(r.area_mm2, 3),
-            table::f(r.fmax_mhz, 0),
-            table::f(r.power_mw, 2),
-            job.cycles.to_string(),
-        ]);
-    }
-    t.print();
+fn main() -> windmill::Result<()> {
+    let engine = SweepEngine::new(4);
+    let workload = Workload::Gemm { m: 16, n: 16, k: 16 };
 
-    // --- Fig. 6b: PE-type mix (SFU / CPE / LSU-ring ablations) ------------
-    let mut t = Table::new(
-        "Fig. 6b analog: PE-type mix (strong area effect)",
-        &["variant", "gates", "area mm2", "note"],
-    );
-    let mut base = presets::standard();
-    let full = ppa_report("full", base.clone())?;
-    t.row(&[
-        "GPE+LSU+CPE+SFU".into(),
-        format!("{:.2e}", full.gates),
-        table::f(full.area_mm2, 3),
-        "standard".into(),
-    ]);
-    base.sfu_enabled = false;
-    let nosfu = ppa_report("nosfu", base.clone())?;
-    t.row(&[
-        "no SFU".into(),
-        format!("{:.2e}", nosfu.gates),
-        table::f(nosfu.area_mm2, 3),
-        format!("-{:.1}% area", 100.0 * (1.0 - nosfu.area_mm2 / full.area_mm2)),
-    ]);
-    base.sfu_enabled = true;
-    base.cpe_enabled = false;
-    let nocpe = ppa_report("nocpe", base.clone())?;
-    t.row(&[
-        "no CPE".into(),
-        format!("{:.2e}", nocpe.gates),
-        table::f(nocpe.area_mm2, 3),
-        format!("-{:.1}% area", 100.0 * (1.0 - nocpe.area_mm2 / full.area_mm2)),
-    ]);
-    t.print();
+    // --- Fig. 6a: PEA size (strong area effect) ---------------------------
+    let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 6, 8, 12, 16]);
+    let report = engine.sweep(&grid, &workload);
+    report.table("Fig. 6a analog: PEA size sweep (strong area effect)").print();
+    println!("  {}\n", report.summary());
 
-    // --- Fig. 6c: interconnect (weak) + memory size (moderate) ------------
-    let mut t = Table::new(
-        "Fig. 6c analog: interconnect topology (weak area effect) & memory",
-        &["variant", "gates", "area mm2", "fmax MHz"],
+    // --- Fig. 6b: PE-type mix (SFU x CPE ablations) -----------------------
+    // GEMM needs no SFU/CPE, so all four points map; the area deltas of
+    // unplugging each extension are the paper's Fig. 6b reading.
+    let grid = ParamGrid::new(presets::standard()).sfu(&[true, false]).cpe(&[true, false]);
+    let report = engine.sweep(&grid, &workload);
+    report.table("Fig. 6b analog: PE-type mix (strong area effect)").print();
+    println!("  {}\n", report.summary());
+
+    // --- Fig. 6c: interconnect (weak) × memory size (moderate) ------------
+    let grid = ParamGrid::new(presets::standard())
+        .topologies(&Topology::ALL)
+        .smem_geoms(&[(8, 128), (16, 256), (32, 512)]);
+    let report = engine.sweep(&grid, &workload);
+    report
+        .table("Fig. 6c analog: topology (weak area effect) x shared memory")
+        .print();
+    println!("  {}", report.summary());
+
+    // The topology×smem grid shares every architecture dimension pairwise
+    // with the earlier sweeps' standard point, and the workload is fixed —
+    // the cache turns the combined study into incremental work.
+    println!("\nbest-PPA Pareto frontier of the topology x memory sweep:");
+    for p in report.frontier_points() {
+        println!(
+            "  * {:<24} {:>7.3} mm2  {:>6.2} mW  {:>9} cycles",
+            p.label, p.area_mm2, p.power_mw, p.cycles
+        );
+    }
+    if let Some(best) = report.best_performance() {
+        println!("fastest point on GEMM: {} ({} cycles)", best.label, best.cycles);
+    }
+
+    // --- iterating is where the engine earns its keep ---------------------
+    // Re-running the full Fig. 6c grid (e.g. after editing the analysis)
+    // answers from the artifact cache.
+    let again = engine.sweep(&grid, &workload);
+    println!(
+        "\nre-run of the Fig. 6c grid: {:.1} ms wall, cache hit rate {:.0}%",
+        again.wall_ns as f64 / 1e6,
+        100.0 * again.cache_hit_rate()
     );
-    for topo in Topology::ALL {
-        let r = ppa_report(topo.name(), presets::with_topology(topo))?;
-        t.row(&[
-            format!("topology {}", r.topology),
-            format!("{:.2e}", r.gates),
-            table::f(r.area_mm2, 3),
-            table::f(r.fmax_mhz, 0),
-        ]);
-    }
-    for (banks, depth) in [(8usize, 128usize), (16, 256), (32, 512)] {
-        let r = ppa_report(&format!("sm{banks}x{depth}"), presets::with_smem(banks, depth))?;
-        t.row(&[
-            format!("smem {banks}x{depth}x32b"),
-            format!("{:.2e}", r.gates),
-            table::f(r.area_mm2, 3),
-            table::f(r.fmax_mhz, 0),
-        ]);
-    }
-    t.print();
 
     println!(
         "\nReading: PEA size and PE mix dominate area; topology moves area by <2%\n\

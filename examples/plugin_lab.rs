@@ -13,7 +13,7 @@ use windmill::arch::presets;
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins::{self, fu::SfuFuPlugin, mem::DmaPlugin};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> windmill::Result<()> {
     // Baseline.
     let mut gen = plugins::generator(presets::standard());
     println!("standard plugin set ({}): {:?}\n", gen.plugin_count(), gen.plugin_names());

@@ -7,7 +7,7 @@ use windmill::coordinator::{ppa_report, run_job, JobSpec, Workload};
 use windmill::netlist::verilog;
 use windmill::plugins;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> windmill::Result<()> {
     // 1. Elaborate the paper's standard WindMill through the DIAG flow.
     let elaborated = plugins::elaborate(presets::standard())?;
     println!(

@@ -88,7 +88,7 @@ fn softmax2(l0: f32, l1: f32) -> (f32, f32) {
     (e0 / s, e1 / s)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> windmill::Result<()> {
     println!("== WindMill RL end-to-end (REINFORCE on synthetic pole balancing) ==");
     let mut rt = Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
     println!("PJRT platform: {}", rt.platform());

@@ -7,6 +7,7 @@
 
 use super::topology::Topology;
 use crate::diag::error::DiagError;
+use crate::util::StableHasher;
 
 /// Coarse-grained PE flavour at a grid position (paper §IV-A.2/3/5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -182,6 +183,212 @@ impl WindMillParams {
     pub fn lsu_count(&self) -> usize {
         self.count_of(PeType::Lsu)
     }
+
+    /// Stable content hash of the full parameter set.
+    ///
+    /// This is the `ArchParams` half of the coordinator's artifact-cache
+    /// key (`crate::coordinator::cache`): two parameter sets hash equal iff
+    /// every field is equal, and the digest is reproducible across runs and
+    /// threads (FNV-1a over an explicit field encoding, not `DefaultHasher`).
+    pub fn stable_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.usize(self.rows)
+            .usize(self.cols)
+            .u32(self.data_width)
+            .u8(self.topology as u8)
+            .bool(self.lsu_ring)
+            .bool(self.cpe_enabled)
+            .bool(self.sfu_enabled)
+            .usize(self.context_depth)
+            .u8(self.exec_mode as u8)
+            .u8(self.shared_reg_mode as u8)
+            .usize(self.shared_regs_per_group)
+            .usize(self.smem.banks)
+            .usize(self.smem.depth)
+            .u32(self.smem.width_bits)
+            .u32(self.dma_width_bits)
+            .bool(self.pingpong)
+            .usize(self.rca_count)
+            .usize(self.rtt_entries)
+            .f64_bits(self.freq_mhz);
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design-space grids
+// ---------------------------------------------------------------------------
+
+/// A cartesian design-space grid over the Fig. 6 sweep axes.
+///
+/// Every axis left empty pins the corresponding field to the `base` value,
+/// so a grid is built by naming only the dimensions under study:
+///
+/// ```
+/// use windmill::arch::params::ParamGrid;
+/// use windmill::arch::{presets, Topology};
+///
+/// let grid = ParamGrid::new(presets::standard())
+///     .pea_edges(&[4, 8, 16])
+///     .topologies(&Topology::ALL);
+/// assert_eq!(grid.len(), 9);
+/// ```
+///
+/// [`ParamGrid::points`] yields `(label, params)` pairs; points that fail
+/// [`WindMillParams::validate`] are skipped (e.g. a 2×2 edge under an LSU
+/// ring), so sweeps never abort on an illegal corner of the grid.
+#[derive(Debug, Clone)]
+pub struct ParamGrid {
+    base: WindMillParams,
+    pea_edges: Vec<usize>,
+    topologies: Vec<Topology>,
+    smem_geoms: Vec<(usize, usize)>,
+    sfu: Vec<bool>,
+    cpe: Vec<bool>,
+    pingpong: Vec<bool>,
+}
+
+impl ParamGrid {
+    pub fn new(base: WindMillParams) -> Self {
+        ParamGrid {
+            base,
+            pea_edges: Vec::new(),
+            topologies: Vec::new(),
+            smem_geoms: Vec::new(),
+            sfu: Vec::new(),
+            cpe: Vec::new(),
+            pingpong: Vec::new(),
+        }
+    }
+
+    /// Sweep the PEA edge (square arrays, Fig. 6a).
+    pub fn pea_edges(mut self, edges: &[usize]) -> Self {
+        self.pea_edges = edges.to_vec();
+        self
+    }
+
+    /// Sweep the interconnect topology (Fig. 6c).
+    pub fn topologies(mut self, topos: &[Topology]) -> Self {
+        self.topologies = topos.to_vec();
+        self
+    }
+
+    /// Sweep the shared-memory geometry as (banks, depth) pairs (Fig. 6c).
+    pub fn smem_geoms(mut self, geoms: &[(usize, usize)]) -> Self {
+        self.smem_geoms = geoms.to_vec();
+        self
+    }
+
+    /// Sweep the SFU extension on/off (Fig. 6b PE-type mix).
+    pub fn sfu(mut self, flags: &[bool]) -> Self {
+        self.sfu = flags.to_vec();
+        self
+    }
+
+    /// Sweep the controller-PE extension on/off (Fig. 6b PE-type mix).
+    pub fn cpe(mut self, flags: &[bool]) -> Self {
+        self.cpe = flags.to_vec();
+        self
+    }
+
+    /// Sweep the ping-pong DMA extension on/off.
+    pub fn pingpong(mut self, flags: &[bool]) -> Self {
+        self.pingpong = flags.to_vec();
+        self
+    }
+
+    pub fn base(&self) -> &WindMillParams {
+        &self.base
+    }
+
+    /// Number of raw axis combinations, before legality filtering.
+    pub fn combinations(&self) -> usize {
+        self.pea_edges.len().max(1)
+            * self.topologies.len().max(1)
+            * self.smem_geoms.len().max(1)
+            * self.sfu.len().max(1)
+            * self.cpe.len().max(1)
+            * self.pingpong.len().max(1)
+    }
+
+    /// Number of runnable (legality-filtered) grid points, matching what
+    /// [`ParamGrid::points`] yields — so `len() == 0 ⇔ is_empty()`.
+    pub fn len(&self) -> usize {
+        self.points().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the grid as labeled, *validated* parameter sets.
+    pub fn points(&self) -> Vec<(String, WindMillParams)> {
+        /// An unset axis contributes one `None` (pin to base); a set axis
+        /// contributes its values.
+        fn axis<T: Copy>(v: &[T]) -> Vec<Option<T>> {
+            if v.is_empty() {
+                vec![None]
+            } else {
+                v.iter().copied().map(Some).collect()
+            }
+        }
+        let edges = axis(&self.pea_edges);
+        let topos = axis(&self.topologies);
+        let smems = axis(&self.smem_geoms);
+        let sfus = axis(&self.sfu);
+        let cpes = axis(&self.cpe);
+        let pps = axis(&self.pingpong);
+
+        let mut out = Vec::new();
+        for &edge in &edges {
+            for &topo in &topos {
+                for &smem in &smems {
+                    for &sfu in &sfus {
+                        for &cpe in &cpes {
+                            for &pp in &pps {
+                                let mut p = self.base.clone();
+                                let mut label = String::new();
+                                if let Some(e) = edge {
+                                    p.rows = e;
+                                    p.cols = e;
+                                    label.push_str(&format!("pea{e}-"));
+                                }
+                                if let Some(t) = topo {
+                                    p.topology = t;
+                                    label.push_str(&format!("{}-", t.name()));
+                                }
+                                if let Some((banks, depth)) = smem {
+                                    p.smem.banks = banks;
+                                    p.smem.depth = depth;
+                                    label.push_str(&format!("sm{banks}x{depth}-"));
+                                }
+                                if let Some(s) = sfu {
+                                    p.sfu_enabled = s;
+                                    label.push_str(if s { "sfu-" } else { "nosfu-" });
+                                }
+                                if let Some(c) = cpe {
+                                    p.cpe_enabled = c;
+                                    label.push_str(if c { "cpe-" } else { "nocpe-" });
+                                }
+                                if let Some(d) = pp {
+                                    p.pingpong = d;
+                                    label.push_str(if d { "pp-" } else { "nopp-" });
+                                }
+                                if label.is_empty() {
+                                    label.push_str("base-");
+                                }
+                                label.pop(); // trailing '-'
+                                if p.validate().is_ok() {
+                                    out.push((label, p));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -255,5 +462,76 @@ mod tests {
     fn out_of_bounds_panics() {
         let p = presets::standard();
         assert!(std::panic::catch_unwind(|| p.pe_type_at(8, 0)).is_err());
+    }
+
+    #[test]
+    fn stable_hash_is_deterministic_and_field_sensitive() {
+        let a = presets::standard();
+        let b = presets::standard();
+        assert_eq!(a.stable_hash(), b.stable_hash());
+        let mut c = presets::standard();
+        c.context_depth += 1;
+        assert_ne!(a.stable_hash(), c.stable_hash());
+        let mut d = presets::standard();
+        d.topology = Topology::Torus;
+        assert_ne!(a.stable_hash(), d.stable_hash());
+        let mut e = presets::standard();
+        e.smem.depth *= 2;
+        assert_ne!(a.stable_hash(), e.stable_hash());
+    }
+
+    #[test]
+    fn param_grid_cartesian_product() {
+        let grid = ParamGrid::new(presets::standard())
+            .pea_edges(&[4, 8])
+            .topologies(&Topology::ALL);
+        assert_eq!(grid.len(), 6);
+        let points = grid.points();
+        assert_eq!(points.len(), 6);
+        // Labels unique, params all valid.
+        let mut labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 6);
+        for (_, p) in &points {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn param_grid_skips_illegal_points() {
+        // Edge 2 under the LSU ring is illegal (needs ≥ 3x3) and must be
+        // filtered, not abort the sweep.
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[2, 4]);
+        let points = grid.points();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].1.rows, 4);
+    }
+
+    #[test]
+    fn param_grid_empty_axes_yield_base() {
+        let grid = ParamGrid::new(presets::standard());
+        let points = grid.points();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].0, "base");
+        assert_eq!(points[0].1, presets::standard());
+    }
+
+    #[test]
+    fn param_grid_extension_axes_and_emptiness() {
+        // Fig. 6b PE-type mix: SFU x CPE ablation grid.
+        let grid = ParamGrid::new(presets::standard())
+            .sfu(&[true, false])
+            .cpe(&[true, false]);
+        let points = grid.points();
+        assert_eq!(points.len(), 4);
+        assert!(!grid.is_empty());
+        assert!(points.iter().any(|(l, p)| l == "nosfu-nocpe" && !p.sfu_enabled && !p.cpe_enabled));
+        // A grid whose only configured edge is illegal filters to nothing:
+        // len()/is_empty() agree post-filter, combinations() is pre-filter.
+        let degenerate = ParamGrid::new(presets::standard()).pea_edges(&[2]);
+        assert!(degenerate.is_empty());
+        assert_eq!(degenerate.len(), 0);
+        assert_eq!(degenerate.combinations(), 1);
     }
 }

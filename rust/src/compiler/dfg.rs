@@ -260,6 +260,63 @@ impl Dfg {
         c
     }
 
+    /// Stable content hash of the kernel (name, iteration space, graph).
+    ///
+    /// The `DFG` half of the coordinator's artifact-cache key: equal for
+    /// structurally identical kernels, reproducible across runs/threads.
+    pub fn stable_hash(&self) -> u64 {
+        use crate::util::StableHasher;
+        let hash_access = |h: &mut StableHasher, a: &Access| match a {
+            Access::Affine { base, coefs } => {
+                h.u8(0).u32(*base).usize(coefs.len());
+                for &c in coefs {
+                    h.i32(c);
+                }
+            }
+            Access::Indirect { addr } => {
+                h.u8(1).usize(*addr);
+            }
+        };
+        let mut h = StableHasher::new();
+        h.str(&self.name);
+        h.usize(self.dims.len());
+        for &d in &self.dims {
+            h.u32(d);
+        }
+        h.usize(self.nodes.len());
+        for n in &self.nodes {
+            h.u8(n.op as u8);
+            match &n.kind {
+                NodeKind::Const => {
+                    h.u8(0);
+                }
+                NodeKind::Index(d) => {
+                    h.u8(1).usize(*d);
+                }
+                NodeKind::Load(a) => {
+                    h.u8(2);
+                    hash_access(&mut h, a);
+                }
+                NodeKind::Store { access, period } => {
+                    h.u8(3).u32(*period);
+                    hash_access(&mut h, access);
+                }
+                NodeKind::Compute => {
+                    h.u8(4);
+                }
+                NodeKind::Accum { reset_period } => {
+                    h.u8(5).u32(*reset_period);
+                }
+            }
+            h.usize(n.inputs.len());
+            for &src in &n.inputs {
+                h.usize(src);
+            }
+            h.f32_bits(n.imm);
+        }
+        h.finish()
+    }
+
     /// Words of shared memory touched per full execution (DMA sizing):
     /// (loads_per_iter · iters, stores committed).
     pub fn traffic_words(&self) -> (u64, u64) {
@@ -517,5 +574,18 @@ mod tests {
         let (loads, stores) = dot8().traffic_words();
         assert_eq!(loads, 16);
         assert_eq!(stores, 1);
+    }
+
+    #[test]
+    fn stable_hash_identifies_structure() {
+        assert_eq!(dot8().stable_hash(), dot8().stable_hash());
+        assert_ne!(dot8().stable_hash(), vec_add().stable_hash());
+        // Any structural delta moves the digest.
+        let mut d = dot8();
+        d.nodes[0].imm = 1.0;
+        assert_ne!(d.stable_hash(), dot8().stable_hash());
+        let mut d2 = dot8();
+        d2.dims = vec![16];
+        assert_ne!(d2.stable_hash(), dot8().stable_hash());
     }
 }

@@ -4,7 +4,13 @@
 //! (congestion-aware Dijkstra over the topology) → [`schedule`] (II and
 //! context analysis) → [`config_gen`] (context-memory image). The
 //! [`compile`] driver runs all of it and returns a [`Mapping`] the
-//! cycle-accurate simulator executes.
+//! cycle-accurate simulator executes; [`compile_timed`] additionally
+//! reports per-stage wall time for the sweep engine's timing breakdown.
+//!
+//! Every stage is a pure function of `(dfg, machine, seed)`, so compiler
+//! artifacts are content-addressable: [`CompileKey`] names one stage output
+//! from the stable hashes of the architecture parameters and the DFG, and
+//! the coordinator's `ArtifactCache` memoizes on it across sweep points.
 
 pub mod config_gen;
 pub mod dfg;
@@ -12,15 +18,93 @@ pub mod place;
 pub mod route;
 pub mod schedule;
 
+use std::time::Instant;
+
 use crate::diag::error::DiagError;
 use crate::sim::machine::MachineDesc;
-use crate::util::Rng;
 
 pub use config_gen::ConfigImage;
 pub use dfg::{Access, Dfg, Node, NodeId, NodeKind};
 pub use place::Coord;
 pub use route::Routes;
 pub use schedule::Schedule;
+
+/// Which compiler/generator artifact a cache entry holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompilePass {
+    /// DIAG elaboration: netlist + machine description + PPA row.
+    Elaborate,
+    /// Full mapper output (place + route + schedule + config image).
+    Mapping,
+    /// Individual mapper stages (reserved for finer-grained memoization).
+    Place,
+    Route,
+    Schedule,
+    ConfigGen,
+}
+
+impl CompilePass {
+    pub fn name(self) -> &'static str {
+        match self {
+            CompilePass::Elaborate => "elaborate",
+            CompilePass::Mapping => "mapping",
+            CompilePass::Place => "place",
+            CompilePass::Route => "route",
+            CompilePass::Schedule => "schedule",
+            CompilePass::ConfigGen => "config_gen",
+        }
+    }
+}
+
+/// Content address of one compiler/generator artifact:
+/// `(ArchParams hash, DFG hash, seed, pass)`.
+///
+/// Architecture-only artifacts (elaboration) use `dfg: 0, seed: 0`, so two
+/// sweep points that share the architecture dimension share the entry even
+/// when their workloads differ — and vice versa for shared workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CompileKey {
+    /// [`crate::arch::WindMillParams::stable_hash`] of the (calibrated)
+    /// parameter set the machine was elaborated from.
+    pub arch: u64,
+    /// [`Dfg::stable_hash`] of the kernel (0 for architecture-only passes).
+    pub dfg: u64,
+    /// Mapper seed (0 for architecture-only passes).
+    pub seed: u64,
+    pub pass: CompilePass,
+}
+
+impl CompileKey {
+    pub fn elaborate(arch: u64) -> Self {
+        CompileKey { arch, dfg: 0, seed: 0, pass: CompilePass::Elaborate }
+    }
+
+    pub fn mapping(arch: u64, dfg: &Dfg, seed: u64) -> Self {
+        CompileKey { arch, dfg: dfg.stable_hash(), seed, pass: CompilePass::Mapping }
+    }
+}
+
+/// Per-stage wall time of one [`compile_timed`] run, nanoseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageNanos {
+    pub place: u64,
+    pub route: u64,
+    pub schedule: u64,
+    pub config: u64,
+}
+
+impl StageNanos {
+    pub fn total(&self) -> u64 {
+        self.place + self.route + self.schedule + self.config
+    }
+
+    pub fn add(&mut self, other: &StageNanos) {
+        self.place += other.place;
+        self.route += other.route;
+        self.schedule += other.schedule;
+        self.config += other.config;
+    }
+}
 
 /// A fully compiled kernel.
 #[derive(Debug, Clone)]
@@ -41,14 +125,39 @@ impl Mapping {
 
 /// Compile a DFG onto a machine. Deterministic for a given seed.
 pub fn compile(dfg: Dfg, machine: &MachineDesc, seed: u64) -> Result<Mapping, DiagError> {
+    compile_timed(dfg, machine, seed).map(|(m, _)| m)
+}
+
+/// [`compile`], additionally reporting per-stage wall time. The sweep
+/// engine records these in its `SweepReport` timing breakdown; on a cache
+/// hit the whole block is skipped, which is where the DSE speedup comes
+/// from.
+pub fn compile_timed(
+    dfg: Dfg,
+    machine: &MachineDesc,
+    seed: u64,
+) -> Result<(Mapping, StageNanos), DiagError> {
     dfg.validate()?;
     machine.validate()?;
-    let mut rng = Rng::new(seed);
-    let place = place::place(&dfg, machine, &mut rng)?;
+    let mut ns = StageNanos::default();
+
+    let t0 = Instant::now();
+    let place = place::place_seeded(&dfg, machine, seed)?;
+    ns.place = t0.elapsed().as_nanos() as u64;
+
+    let t0 = Instant::now();
     let routes = route::route(&dfg, &place, machine)?;
+    ns.route = t0.elapsed().as_nanos() as u64;
+
+    let t0 = Instant::now();
     let schedule = schedule::analyze(&dfg, &place, &routes, machine)?;
+    ns.schedule = t0.elapsed().as_nanos() as u64;
+
+    let t0 = Instant::now();
     let config = config_gen::generate(&dfg, &place, &routes, machine)?;
-    Ok(Mapping { dfg, place, routes, schedule, config })
+    ns.config = t0.elapsed().as_nanos() as u64;
+
+    Ok((Mapping { dfg, place, routes, schedule, config }, ns))
 }
 
 #[cfg(test)]
@@ -95,5 +204,38 @@ mod tests {
         let m = elaborate(presets::standard()).unwrap().artifact;
         let d = Dfg::new("empty", vec![4]); // no stores
         assert!(compile(d, &m, 1).is_err());
+    }
+
+    #[test]
+    fn compile_timed_reports_every_stage() {
+        let m = elaborate(presets::standard()).unwrap().artifact;
+        let mut d = Dfg::new("t", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.unary(Op::Add, x);
+        d.store_affine(y, 16, vec![1], 1);
+        let (mapping, ns) = compile_timed(d, &m, 4).unwrap();
+        assert!(mapping.schedule.ii >= 1);
+        // Wall clocks are nonzero for place (annealing loop) and the total
+        // is the sum of the parts.
+        assert!(ns.place > 0);
+        assert_eq!(ns.total(), ns.place + ns.route + ns.schedule + ns.config);
+    }
+
+    #[test]
+    fn compile_keys_are_content_addressed() {
+        use crate::arch::presets;
+        let params = presets::standard();
+        let h = params.stable_hash();
+        let mut d = Dfg::new("k", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        d.store_affine(x, 8, vec![1], 1);
+        let a = CompileKey::mapping(h, &d, 42);
+        let b = CompileKey::mapping(h, &d, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, CompileKey::mapping(h, &d, 43)); // seed differs
+        let mut p2 = presets::standard();
+        p2.topology = crate::arch::Topology::Torus;
+        assert_ne!(a, CompileKey::mapping(p2.stable_hash(), &d, 42));
+        assert_ne!(a.pass, CompileKey::elaborate(h).pass);
     }
 }

@@ -49,6 +49,14 @@ pub fn cost(dfg: &Dfg, m: &MachineDesc, place: &[Coord]) -> u64 {
     total
 }
 
+/// Stage-level entry point for the sweep engine's cache: identical to
+/// [`place`] but seeded directly, matching how the placement artifact is
+/// keyed (`CompileKey { seed, pass: Place, .. }` — the stage is a pure
+/// function of `(dfg, machine, seed)`).
+pub fn place_seeded(dfg: &Dfg, m: &MachineDesc, seed: u64) -> Result<Vec<Coord>, DiagError> {
+    place(dfg, m, &mut Rng::new(seed))
+}
+
 /// Greedy + annealing placement. Deterministic for a given seed.
 pub fn place(dfg: &Dfg, m: &MachineDesc, rng: &mut Rng) -> Result<Vec<Coord>, DiagError> {
     let n = dfg.nodes.len();
@@ -104,7 +112,7 @@ pub fn place(dfg: &Dfg, m: &MachineDesc, rng: &mut Rng) -> Result<Vec<Coord>, Di
         let candidates = &class_pes[&class];
         let best = candidates
             .iter()
-            .filter(|c| !occupied.contains_key(c))
+            .filter(|c| !occupied.contains_key(*c))
             .min_by_key(|&&c| {
                 let mut d = 0u64;
                 for &src in &dfg.nodes[i].inputs {

@@ -51,6 +51,12 @@ impl Routes {
         self.edges.iter().map(Route::hops).max().unwrap_or(0)
     }
 
+    /// Number of distinct PEs carrying pass-through traffic (sweep-table
+    /// congestion metric: how much of the array routing eats into).
+    pub fn through_pes(&self) -> usize {
+        self.through_load.len()
+    }
+
     /// The route-constrained II component: how oversubscribed the busiest
     /// pass-through PE is.
     pub fn route_ii(&self) -> u32 {

@@ -228,6 +228,14 @@ fn op_name(op: crate::arch::isa::Op) -> &'static str {
     }
 }
 
+impl Schedule {
+    /// Compact one-line rendering for sweep tables and benches:
+    /// `II (mem/rec/route)`.
+    pub fn brief(&self) -> String {
+        format!("{} ({}/{}/{})", self.ii, self.ii_mem, self.ii_rec, self.ii_route)
+    }
+}
+
 /// Estimated cycles for the whole kernel: fill + II·(iters−1) + drain.
 pub fn estimated_cycles(sched: &Schedule, total_iters: u64) -> u64 {
     sched.depth as u64 + sched.ii as u64 * total_iters.saturating_sub(1) + 4

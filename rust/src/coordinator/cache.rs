@@ -1,0 +1,331 @@
+//! Content-addressed artifact cache for the design-space sweep engine.
+//!
+//! DSE throughput — not single-point quality — is the bottleneck for agile
+//! CGRA work: a Fig. 6-style sweep re-elaborates and re-compiles hundreds
+//! of points that differ in only one dimension. Every cacheable artifact in
+//! the flow is a pure function of `(ArchParams, DFG, seed)`, so the cache
+//! keys on [`CompileKey`] — the stable hashes of the calibrated parameter
+//! set and the kernel plus the pass — and memoizes:
+//!
+//! * **elaboration** (`pass: Elaborate`, arch hash only): the DIAG
+//!   generator's machine description *and* the PPA row computed from its
+//!   netlist, shared by every sweep point and workload on that
+//!   architecture;
+//! * **mapping** (`pass: Mapping`): the full place→route→schedule→config
+//!   output, shared by every sweep point that repeats a
+//!   `(architecture, kernel, seed)` triple.
+//!
+//! The cache is shared across the worker pool (`Mutex`-guarded map,
+//! `Arc`-shared values). Misses compute *outside* the lock, so a slow
+//! elaboration never blocks unrelated lookups; concurrent misses on the
+//! same key may duplicate work, and the first insert wins — correctness is
+//! unaffected because artifacts are deterministic. Failures are never
+//! cached: a failing point re-reports its error on every run.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::params::WindMillParams;
+use crate::compiler::{compile_timed, CompileKey, CompilePass, Dfg, Mapping, StageNanos};
+use crate::diag::error::DiagError;
+use crate::plugins;
+use crate::sim::machine::MachineDesc;
+
+use super::report::{ppa_row, PpaRow};
+
+/// Everything one elaboration yields that sweeps consume downstream.
+#[derive(Debug, Clone)]
+pub struct ElabArtifacts {
+    pub machine: MachineDesc,
+    /// PPA row with an empty label; [`ArtifactCache::ppa`] relabels per
+    /// sweep point.
+    pub ppa: PpaRow,
+    /// Elaboration wall time (the cost a hit avoids), nanoseconds.
+    pub elaborate_ns: u64,
+}
+
+#[derive(Clone)]
+enum Entry {
+    Elab(Arc<ElabArtifacts>),
+    Mapping(Arc<Mapping>, StageNanos),
+}
+
+/// Hit/miss counters, total and per pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// pass name → (hits, misses).
+    pub by_pass: BTreeMap<&'static str, (u64, u64)>,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Counters accumulated since an earlier snapshot (per-sweep stats on a
+    /// long-lived engine).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        let mut by_pass = BTreeMap::new();
+        for (&pass, &(h, m)) in &self.by_pass {
+            let (eh, em) = earlier.by_pass.get(pass).copied().unwrap_or((0, 0));
+            by_pass.insert(pass, (h - eh, m - em));
+        }
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            by_pass,
+        }
+    }
+}
+
+/// The shared artifact store. See the module docs for the design.
+#[derive(Default)]
+pub struct ArtifactCache {
+    entries: Mutex<HashMap<CompileKey, Entry>>,
+    stats: Mutex<CacheStats>,
+}
+
+impl ArtifactCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every stored artifact (counters are kept).
+    pub fn clear(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn record(&self, pass: CompilePass, hit: bool) {
+        let mut s = self.stats.lock().unwrap();
+        let slot = s.by_pass.entry(pass.name()).or_insert((0, 0));
+        if hit {
+            slot.0 += 1;
+            s.hits += 1;
+        } else {
+            slot.1 += 1;
+            s.misses += 1;
+        }
+    }
+
+    /// Elaborate `params` through the DIAG generator, or return the cached
+    /// artifacts. The boolean reports whether this lookup was a hit.
+    pub fn elaborated(
+        &self,
+        params: &WindMillParams,
+    ) -> Result<(Arc<ElabArtifacts>, bool), DiagError> {
+        let key = CompileKey::elaborate(params.stable_hash());
+        if let Some(Entry::Elab(e)) = self.entries.lock().unwrap().get(&key).cloned() {
+            self.record(CompilePass::Elaborate, true);
+            return Ok((e, true));
+        }
+        self.record(CompilePass::Elaborate, false);
+        // Compute outside the lock; first insert wins under a race.
+        let t0 = std::time::Instant::now();
+        let mut gen = plugins::generator(params.clone());
+        let e = gen.elaborate()?;
+        let row = ppa_row("", params, &e, gen.plugin_count());
+        let artifacts = Arc::new(ElabArtifacts {
+            machine: e.artifact,
+            ppa: row,
+            elaborate_ns: t0.elapsed().as_nanos() as u64,
+        });
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(key).or_insert_with(|| Entry::Elab(Arc::clone(&artifacts)));
+        match entry {
+            Entry::Elab(stored) => Ok((Arc::clone(stored), false)),
+            _ => unreachable!("elaborate key holds non-elab entry"),
+        }
+    }
+
+    /// Cached machine description for `params`.
+    pub fn machine(&self, params: &WindMillParams) -> Result<Arc<ElabArtifacts>, DiagError> {
+        self.elaborated(params).map(|(e, _)| e)
+    }
+
+    /// Cached PPA row for `params`, relabeled for the requesting point.
+    pub fn ppa(&self, label: &str, params: &WindMillParams) -> Result<PpaRow, DiagError> {
+        let (e, _) = self.elaborated(params)?;
+        let mut row = e.ppa.clone();
+        row.label = label.to_string();
+        Ok(row)
+    }
+
+    /// Relabel the PPA row of an elaboration already in the cache, by its
+    /// architecture hash. Returns `None` when the entry is absent.
+    /// Deliberately **not counted** in the hit/miss statistics: this is a
+    /// relabel of work some job already paid for, not avoided recompute —
+    /// counting it would inflate sweep hit rates.
+    pub fn ppa_by_hash(&self, label: &str, arch_hash: u64) -> Option<PpaRow> {
+        let key = CompileKey::elaborate(arch_hash);
+        if let Some(Entry::Elab(e)) = self.entries.lock().unwrap().get(&key) {
+            let mut row = e.ppa.clone();
+            row.label = label.to_string();
+            return Some(row);
+        }
+        None
+    }
+
+    /// Compile `dfg` onto `machine` (which must be the elaboration of the
+    /// params hashing to `arch_hash`), or return the cached mapping. The
+    /// boolean reports whether this lookup was a hit; [`StageNanos`] is the
+    /// per-stage cost of the miss that populated the entry (zero-cost to a
+    /// hit, but kept so reports can show what the cache is saving).
+    pub fn mapping(
+        &self,
+        arch_hash: u64,
+        dfg: &Dfg,
+        machine: &MachineDesc,
+        seed: u64,
+    ) -> Result<(Arc<Mapping>, StageNanos, bool), DiagError> {
+        let key = CompileKey::mapping(arch_hash, dfg, seed);
+        if let Some(Entry::Mapping(m, ns)) = self.entries.lock().unwrap().get(&key).cloned() {
+            self.record(CompilePass::Mapping, true);
+            return Ok((m, ns, true));
+        }
+        self.record(CompilePass::Mapping, false);
+        let (mapping, ns) = compile_timed(dfg.clone(), machine, seed)?;
+        let mapping = Arc::new(mapping);
+        let mut entries = self.entries.lock().unwrap();
+        let entry =
+            entries.entry(key).or_insert_with(|| Entry::Mapping(Arc::clone(&mapping), ns));
+        match entry {
+            Entry::Mapping(stored, stored_ns) => Ok((Arc::clone(stored), *stored_ns, false)),
+            _ => unreachable!("mapping key holds non-mapping entry"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::compiler::compile;
+
+    fn saxpy_dfg() -> Dfg {
+        crate::workloads::linalg::saxpy(64, 2.0).0
+    }
+
+    #[test]
+    fn elaboration_is_cached_by_params_hash() {
+        let cache = ArtifactCache::new();
+        let (a, hit_a) = cache.elaborated(&presets::standard()).unwrap();
+        let (b, hit_b) = cache.elaborated(&presets::standard()).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+        // A different parameter set occupies its own slot.
+        let (c, hit_c) = cache.elaborated(&presets::small()).unwrap();
+        assert!(!hit_c);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn mapping_is_cached_and_identical_to_direct_compile() {
+        let cache = ArtifactCache::new();
+        let params = presets::standard();
+        let arch = params.stable_hash();
+        let (e, _) = cache.elaborated(&params).unwrap();
+        let d = saxpy_dfg();
+
+        let (m1, ns1, hit1) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m2, _ns2, hit2) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        assert!(!hit1);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert!(ns1.total() > 0);
+
+        // Cached artifact equals a direct compile bit-for-bit.
+        let direct = compile(d.clone(), &e.machine, 7).unwrap();
+        assert_eq!(m1.place, direct.place);
+        assert_eq!(m1.schedule, direct.schedule);
+        assert_eq!(m1.config.total_words(), direct.config.total_words());
+
+        // Different seed misses.
+        let (_, _, hit3) = cache.mapping(arch, &d, &e.machine, 8).unwrap();
+        assert!(!hit3);
+    }
+
+    #[test]
+    fn ppa_relabels_without_recomputing() {
+        let cache = ArtifactCache::new();
+        let p = presets::standard();
+        let a = cache.ppa("first", &p).unwrap();
+        let b = cache.ppa("second", &p).unwrap();
+        assert_eq!(a.label, "first");
+        assert_eq!(b.label, "second");
+        assert_eq!(a.gates, b.gates);
+        assert_eq!(a.area_mm2, b.area_mm2);
+        // One miss (first elaboration) + one hit (relabel).
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn stats_since_computes_deltas() {
+        let cache = ArtifactCache::new();
+        cache.elaborated(&presets::standard()).unwrap();
+        let snap = cache.stats();
+        cache.elaborated(&presets::standard()).unwrap();
+        cache.elaborated(&presets::standard()).unwrap();
+        let d = cache.stats().since(&snap);
+        assert_eq!(d.hits, 2);
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn failures_are_not_cached() {
+        let cache = ArtifactCache::new();
+        let mut p = presets::standard();
+        p.rows = 1; // illegal
+        assert!(cache.elaborated(&p).is_err());
+        assert!(cache.is_empty());
+        // Both attempts count as misses.
+        assert!(cache.elaborated(&p).is_err());
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn cache_is_shareable_across_threads() {
+        let cache = Arc::new(ArtifactCache::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cache = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                let (e, _) = cache.elaborated(&presets::small()).unwrap();
+                e.machine.rows
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 4);
+        }
+        // One entry even under concurrent misses.
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,5 +1,14 @@
 //! Job definitions: one job = one workload on one WindMill configuration,
 //! carried through generate → compile → simulate → baseline.
+//!
+//! [`run_job`] executes the whole pipeline from scratch; [`run_job_cached`]
+//! is the sweep engine's path, sourcing elaboration and mapper artifacts
+//! from a shared [`ArtifactCache`] and reporting per-stage wall time plus
+//! cache traffic in a [`JobTiming`]. Both produce bit-identical
+//! [`JobResult`]s — artifacts are pure functions of their cache key.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::arch::params::WindMillParams;
 use crate::compiler::{compile, Mapping};
@@ -10,6 +19,8 @@ use crate::sim::machine::MachineDesc;
 use crate::sim::task::{run_task, Phase, Task};
 use crate::util::Rng;
 use crate::workloads::{linalg, rl, signal, Layout};
+
+use super::cache::{ArtifactCache, ElabArtifacts};
 
 /// Workload selector (CLI surface + bench harnesses).
 #[derive(Debug, Clone, PartialEq)]
@@ -114,6 +125,9 @@ pub struct JobSpec {
 pub struct JobResult {
     pub name: String,
     pub pea: String,
+    /// Stable hash of the *calibrated* parameter set the job ran on — the
+    /// architecture's artifact-cache identity (see `coordinator::cache`).
+    pub arch_hash: u64,
     /// WindMill cycles (whole task incl. host/DMA) and derived time.
     pub cycles: u64,
     pub wm_time_ns: f64,
@@ -141,18 +155,91 @@ pub fn calibrate_params(mut params: WindMillParams, layout: &Layout) -> WindMill
     params
 }
 
+/// Per-stage wall time and cache traffic of one [`run_job_cached`] call,
+/// nanoseconds. Aggregated into the sweep engine's `SweepReport`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct JobTiming {
+    pub elaborate_ns: u64,
+    pub compile_ns: u64,
+    pub simulate_ns: u64,
+    pub baseline_ns: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl JobTiming {
+    pub fn total_ns(&self) -> u64 {
+        self.elaborate_ns + self.compile_ns + self.simulate_ns + self.baseline_ns
+    }
+
+    pub fn add(&mut self, other: &JobTiming) {
+        self.elaborate_ns += other.elaborate_ns;
+        self.compile_ns += other.compile_ns;
+        self.simulate_ns += other.simulate_ns;
+        self.baseline_ns += other.baseline_ns;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+}
+
 /// Run one job end-to-end. Deterministic for (spec.seed).
 pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
+    run_job_cached(spec, None).map(|(r, _)| r)
+}
+
+/// Run one job, sourcing elaboration/mapper artifacts from `cache` when
+/// given. Produces the same [`JobResult`] as [`run_job`] (the cache only
+/// memoizes deterministic artifacts); the [`JobTiming`] reports where the
+/// wall time went and how often the cache answered.
+pub fn run_job_cached(
+    spec: &JobSpec,
+    cache: Option<&ArtifactCache>,
+) -> Result<(JobResult, JobTiming), DiagError> {
+    let mut timing = JobTiming::default();
     let (dfgs, layout) = spec.workload.build();
     let params = calibrate_params(spec.params.clone(), &layout);
-    let machine: MachineDesc = plugins::elaborate(params)?.artifact;
+    let arch_hash = params.stable_hash();
+
+    let t0 = Instant::now();
+    let cached_elab: Arc<ElabArtifacts>;
+    let owned_machine: MachineDesc;
+    let machine: &MachineDesc = match cache {
+        Some(c) => {
+            let (elab, hit) = c.elaborated(&params)?;
+            if hit {
+                timing.cache_hits += 1;
+            } else {
+                timing.cache_misses += 1;
+            }
+            cached_elab = elab;
+            &cached_elab.machine
+        }
+        None => {
+            owned_machine = plugins::elaborate(params)?.artifact;
+            &owned_machine
+        }
+    };
+    timing.elaborate_ns = t0.elapsed().as_nanos() as u64;
     machine.validate()?;
 
-    // Compile every phase.
-    let mappings: Vec<Mapping> = dfgs
-        .iter()
-        .map(|d| compile(d.clone(), &machine, spec.seed))
-        .collect::<Result<_, _>>()?;
+    // Compile every phase (cache key: arch hash × DFG hash × seed).
+    let t0 = Instant::now();
+    let mut mappings: Vec<Mapping> = Vec::with_capacity(dfgs.len());
+    for d in &dfgs {
+        match cache {
+            Some(c) => {
+                let (m, _stage_ns, hit) = c.mapping(arch_hash, d, machine, spec.seed)?;
+                if hit {
+                    timing.cache_hits += 1;
+                } else {
+                    timing.cache_misses += 1;
+                }
+                mappings.push((*m).clone());
+            }
+            None => mappings.push(compile(d.clone(), machine, spec.seed)?),
+        }
+    }
+    timing.compile_ns = t0.elapsed().as_nanos() as u64;
 
     // Task: DMA in the inputs once, DMA out the outputs once.
     let input_words: u64 = layout
@@ -175,11 +262,14 @@ pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
         .collect();
     let task = Task { name: spec.workload.name(), phases };
 
+    let t0 = Instant::now();
     let mem0 = spec.workload.init_image(&layout, spec.seed, machine.smem.as_ref().unwrap().words());
-    let tr = run_task(&task, &machine, &mem0, 4_000_000)?;
-    let wm_time_ns = tr.time_ns(&machine);
+    let tr = run_task(&task, machine, &mem0, 4_000_000)?;
+    let wm_time_ns = tr.time_ns(machine);
+    timing.simulate_ns = t0.elapsed().as_nanos() as u64;
 
     // CPU baseline over the same DFGs (numerics identical by construction).
+    let t0 = Instant::now();
     let cpu = CpuModel::default();
     let mut cpu_time_ns = 0.0;
     for p in &task.phases {
@@ -201,21 +291,27 @@ pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
         }
     };
 
+    timing.baseline_ns = t0.elapsed().as_nanos() as u64;
+
     let ii = task.phases.iter().map(|p| p.mapping.schedule.ii).max().unwrap_or(1);
-    Ok(JobResult {
-        name: spec.workload.name(),
-        pea: format!("{}x{}", spec.params.rows, spec.params.cols),
-        cycles: tr.total_cycles,
-        wm_time_ns,
-        cpu_time_ns,
-        speedup_vs_cpu: cpu_time_ns / wm_time_ns,
-        gpu_time_ns,
-        speedup_vs_gpu: gpu_time_ns / wm_time_ns,
-        ii,
-        measured_ii: 0.0,
-        mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
-        mem: tr.mem,
-    })
+    Ok((
+        JobResult {
+            name: spec.workload.name(),
+            pea: format!("{}x{}", spec.params.rows, spec.params.cols),
+            arch_hash,
+            cycles: tr.total_cycles,
+            wm_time_ns,
+            cpu_time_ns,
+            speedup_vs_cpu: cpu_time_ns / wm_time_ns,
+            gpu_time_ns,
+            speedup_vs_gpu: gpu_time_ns / wm_time_ns,
+            ii,
+            measured_ii: 0.0,
+            mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
+            mem: tr.mem,
+        },
+        timing,
+    ))
 }
 
 #[cfg(test)]

@@ -1,16 +1,70 @@
-//! Layer-3 coordinator: orchestrates generate → compile → simulate →
-//! baseline jobs and renders the experiment reports.
+//! Layer-3 coordinator: the design-space sweep engine that drives
+//! generate → compile → simulate → baseline pipelines at DSE scale.
 //!
-//! The paper's system contribution lives at generation/architecture level,
-//! so L3 here is the *driver*: a job abstraction ([`job`]), a thread pool
-//! ([`pool`]) that fans independent jobs out (parameter sweeps compile and
-//! simulate in parallel), and report assembly ([`report`]) shared by the
-//! CLI and the benchmark harnesses.
+//! The paper's system contribution lives at generation/architecture level;
+//! L3 here is the *driver*, and for agile CGRA work the driver's job is
+//! throughput over the design space — sweeping hundreds of parameter
+//! points, not polishing one. The module is organized around that:
+//!
+//! * [`job`] — one unit of work ([`JobSpec`]: workload × parameters ×
+//!   seed) carried end-to-end to a [`JobResult`], with a cache-aware entry
+//!   point ([`run_job_cached`]) that reports per-stage timing.
+//! * [`cache`] — the content-addressed [`ArtifactCache`]: elaborations and
+//!   mapper outputs keyed by `(ArchParams hash, DFG hash, seed, pass)`
+//!   ([`crate::compiler::CompileKey`]), shared across worker threads so
+//!   sweep points that share a dimension pay for it once.
+//! * [`pool`] — a FIFO work queue over per-worker channels ([`run_fifo`]):
+//!   jobs start *and* return in submission order (the previous
+//!   `Mutex<Vec>` pool popped LIFO; the pool tests pin the fix).
+//! * [`sweep`] — the [`SweepEngine`]: batched submission
+//!   (`engine.sweep(&grid, &workload)`) over a
+//!   [`crate::arch::params::ParamGrid`], publishing its capability as a
+//!   DIAG [`crate::diag::service::SweepService`].
+//! * [`report`] — [`PpaRow`] pricing per variant plus incremental
+//!   [`SweepReport`] aggregation: best-PPA Pareto frontier, cache
+//!   hit-rate, per-stage timing.
+//!
+//! # Using the sweep engine
+//!
+//! ```no_run
+//! use windmill::arch::params::ParamGrid;
+//! use windmill::arch::{presets, Topology};
+//! use windmill::coordinator::{SweepEngine, Workload};
+//!
+//! // One engine, one shared artifact cache, four workers.
+//! let engine = SweepEngine::new(4);
+//!
+//! // Fig. 6-style grid: PEA size × topology (axes left unset stay at the
+//! // base preset's value; illegal corners are skipped, not fatal).
+//! let grid = ParamGrid::new(presets::standard())
+//!     .pea_edges(&[4, 8, 16])
+//!     .topologies(&Topology::ALL);
+//!
+//! let report = engine.sweep(&grid, &Workload::Gemm { m: 16, n: 16, k: 16 });
+//! report.table("Fig. 6 sweep").print();
+//! for best in report.frontier_points() {
+//!     println!("pareto: {} ({} mm², {} ns)", best.label, best.area_mm2, best.wm_time_ns);
+//! }
+//! println!("cache hit rate {:.0}%", 100.0 * report.cache_hit_rate());
+//! ```
+//!
+//! Sweeps on a long-lived engine get faster as the cache warms: a repeated
+//! grid, a refined grid sharing axes, or a different workload on the same
+//! architectures all reuse elaborations and mappings. `run_job`/`run_all`
+//! remain as the uncached single-shot paths (CLI, tests) and produce
+//! bit-identical results — every cached artifact is a pure function of its
+//! key, which the cache tests assert.
 
+pub mod cache;
 pub mod job;
 pub mod pool;
 pub mod report;
+pub mod sweep;
 
-pub use job::{calibrate_params, run_job, JobResult, JobSpec, Workload};
-pub use pool::run_all;
-pub use report::{ppa_report, PpaRow};
+pub use cache::{ArtifactCache, CacheStats, ElabArtifacts};
+pub use job::{
+    calibrate_params, run_job, run_job_cached, JobResult, JobSpec, JobTiming, Workload,
+};
+pub use pool::{run_all, run_all_with, run_fifo, FifoRun};
+pub use report::{ppa_report, ppa_row, PpaRow, SweepAccumulator, SweepPoint, SweepReport};
+pub use sweep::SweepEngine;

@@ -1,51 +1,148 @@
-//! A small std-thread job pool (tokio is not vendored on this image; the
-//! coordinator's concurrency needs — fan out independent generate/compile/
-//! simulate jobs, collect results in order — fit plain threads + channels).
+//! FIFO work queue over per-worker channels (std threads; tokio is not
+//! vendored on this image).
+//!
+//! The previous pool popped jobs off the back of a `Mutex<Vec>`, which (a)
+//! inverted submission order under contention (LIFO) and (b) serialized
+//! every dequeue through one global lock. This version keeps a dispatcher
+//! on the calling thread that owns the queue outright — no shared lock —
+//! and hands the **front** job to whichever worker announces readiness over
+//! its private channel:
+//!
+//! ```text
+//!   submit ─► VecDeque (dispatcher-owned, FIFO)
+//!                 │ pop_front on a ready token
+//!                 ▼
+//!   ready ◄── worker 0 ◄── job channel 0
+//!   ready ◄── worker 1 ◄── job channel 1     results ─► (idx, R) channel
+//!   ...
+//! ```
+//!
+//! Guarantees: jobs are *started* in submission order (the dispatcher is a
+//! sequential loop over the deque) and results are returned in submission
+//! order regardless of completion order. The tests pin both properties —
+//! the LIFO inversion is a regression this module must never reintroduce.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
 use std::thread;
 
 use crate::diag::error::DiagError;
 
-use super::job::{run_job, JobResult, JobSpec};
+use super::cache::ArtifactCache;
+use super::job::{run_job_cached, JobResult, JobSpec};
 
-/// Run all jobs across `workers` threads; results return in input order.
-pub fn run_all(specs: Vec<JobSpec>, workers: usize) -> Vec<Result<JobResult, DiagError>> {
-    let n = specs.len();
+/// Outcome of one [`run_fifo`] execution.
+pub struct FifoRun<R> {
+    /// Per-item results, in submission order.
+    pub results: Vec<R>,
+    /// Item indices in the order the dispatcher handed them to workers
+    /// (always ascending — asserted by the regression tests).
+    pub dispatch_order: Vec<usize>,
+    /// Item indices in the order their results arrived (equals the
+    /// dispatch order when `workers == 1`; interleaved otherwise).
+    pub finish_order: Vec<usize>,
+}
+
+/// Run `f` over `items` on `workers` threads with FIFO dispatch.
+///
+/// `f` must not panic: a panicking worker abandons its in-flight item and
+/// the run panics with a diagnostic once the channels drain (job-level
+/// fallibility belongs in `R = Result<..>`, as [`run_all`] does).
+pub fn run_fifo<T, R, F>(items: Vec<T>, workers: usize, f: F) -> FifoRun<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return FifoRun { results: Vec::new(), dispatch_order: Vec::new(), finish_order: Vec::new() };
     }
     let workers = workers.clamp(1, n);
-    let queue = Arc::new(Mutex::new(specs.into_iter().enumerate().collect::<Vec<_>>()));
-    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult, DiagError>)>();
+    let f = Arc::new(f);
 
-    let mut handles = Vec::new();
-    for _ in 0..workers {
-        let queue = Arc::clone(&queue);
-        let tx = tx.clone();
-        handles.push(thread::spawn(move || loop {
-            let item = queue.lock().unwrap().pop();
-            let Some((idx, spec)) = item else { break };
-            let res = run_job(&spec);
-            if tx.send((idx, res)).is_err() {
-                break;
+    let (ready_tx, ready_rx) = mpsc::channel::<usize>();
+    let (done_tx, done_rx) = mpsc::channel::<(usize, R)>();
+    let mut job_txs = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let (job_tx, job_rx) = mpsc::channel::<(usize, T)>();
+        job_txs.push(job_tx);
+        let ready = ready_tx.clone();
+        let done = done_tx.clone();
+        let f = Arc::clone(&f);
+        handles.push(thread::spawn(move || {
+            // Announce readiness, then serve until the job channel closes.
+            if ready.send(w).is_err() {
+                return;
+            }
+            while let Ok((idx, item)) = job_rx.recv() {
+                let r = f(item);
+                if done.send((idx, r)).is_err() {
+                    return;
+                }
+                if ready.send(w).is_err() {
+                    return;
+                }
             }
         }));
     }
-    drop(tx);
+    drop(ready_tx);
+    drop(done_tx);
 
-    let mut results: Vec<Option<Result<JobResult, DiagError>>> = (0..n).map(|_| None).collect();
-    for (idx, res) in rx {
-        results[idx] = Some(res);
+    // Dispatch strictly in submission order: the next ready worker gets the
+    // front of the queue.
+    let mut queue: VecDeque<(usize, T)> = items.into_iter().enumerate().collect();
+    let mut dispatch_order = Vec::with_capacity(n);
+    while let Some((idx, item)) = queue.pop_front() {
+        let Ok(w) = ready_rx.recv() else { break };
+        dispatch_order.push(idx);
+        if job_txs[w].send((idx, item)).is_err() {
+            break;
+        }
+    }
+    drop(job_txs); // close the job channels; workers exit after draining
+
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut finish_order = Vec::with_capacity(n);
+    for (idx, r) in done_rx {
+        finish_order.push(idx);
+        slots[idx] = Some(r);
     }
     for h in handles {
         let _ = h.join();
     }
-    results
+    let results = slots
         .into_iter()
-        .map(|r| r.unwrap_or_else(|| Err(DiagError::InvalidParams("job lost".into()))))
-        .collect()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("worker lost job {i} (did `f` panic?)")))
+        .collect();
+    FifoRun { results, dispatch_order, finish_order }
+}
+
+/// Run all jobs across `workers` threads; results return in input order.
+pub fn run_all(specs: Vec<JobSpec>, workers: usize) -> Vec<Result<JobResult, DiagError>> {
+    run_all_with(specs, workers, None)
+}
+
+/// [`run_all`] with an optional shared artifact cache (the sweep engine's
+/// job path). Worker panics are converted into per-job errors so one bad
+/// job cannot take down a sweep.
+pub fn run_all_with(
+    specs: Vec<JobSpec>,
+    workers: usize,
+    cache: Option<Arc<ArtifactCache>>,
+) -> Vec<Result<JobResult, DiagError>> {
+    run_fifo(specs, workers, move |spec| {
+        let name = spec.workload.name();
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job_cached(&spec, cache.as_deref()).map(|(r, _)| r)
+        }));
+        out.unwrap_or_else(|_| {
+            Err(DiagError::InvalidParams(format!("job `{name}` panicked in a worker")))
+        })
+    })
+    .results
 }
 
 #[cfg(test)]
@@ -93,5 +190,49 @@ mod tests {
         let results = run_all(specs, 2);
         assert!(results[0].is_err());
         assert!(results[1].is_ok());
+    }
+
+    /// Regression for the old `Mutex<Vec>` pool, which `pop()`ed the *back*
+    /// of the queue: execution must start jobs in submission order, and
+    /// results must come back in submission order.
+    #[test]
+    fn fifo_dispatch_follows_submission_order() {
+        let items: Vec<usize> = (0..32).collect();
+        let run = run_fifo(items, 4, |x| x * 2);
+        assert_eq!(run.results, (0..32).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(run.dispatch_order, (0..32).collect::<Vec<_>>());
+        // Every item finished exactly once.
+        let mut fin = run.finish_order.clone();
+        fin.sort_unstable();
+        assert_eq!(fin, (0..32).collect::<Vec<_>>());
+    }
+
+    /// With one worker the completion order *is* the submission order —
+    /// under the old LIFO pool this came back reversed.
+    #[test]
+    fn single_worker_executes_in_submission_order() {
+        let items: Vec<usize> = (0..16).collect();
+        let run = run_fifo(items, 1, |x| x + 1);
+        assert_eq!(run.dispatch_order, (0..16).collect::<Vec<_>>());
+        assert_eq!(run.finish_order, (0..16).collect::<Vec<_>>());
+        assert_eq!(run.results, (1..17).collect::<Vec<_>>());
+    }
+
+    /// Slow early jobs must not let later jobs start first.
+    #[test]
+    fn staggered_durations_keep_fifo_start_order() {
+        let items: Vec<u64> = vec![30, 1, 25, 1, 20, 1, 15, 1];
+        let run = run_fifo(items, 2, |ms| {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            ms
+        });
+        assert_eq!(run.dispatch_order, (0..8).collect::<Vec<_>>());
+        assert_eq!(run.results, vec![30, 1, 25, 1, 20, 1, 15, 1]);
+    }
+
+    #[test]
+    fn worker_count_exceeding_jobs_is_clamped() {
+        let run = run_fifo(vec![1u32, 2], 64, |x| x);
+        assert_eq!(run.results, vec![1, 2]);
     }
 }

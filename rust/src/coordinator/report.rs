@@ -1,13 +1,27 @@
-//! PPA report assembly: one row per parameter set, shared by the CLI
-//! (`windmill report`) and the Fig. 6 bench harness.
+//! Report assembly: per-variant PPA rows and incremental design-space
+//! sweep aggregation.
+//!
+//! [`PpaRow`]/[`ppa_report`] price one generated variant (shared by the
+//! CLI and the Fig. 6 bench harnesses). [`SweepReport`] aggregates a whole
+//! [`super::SweepEngine`] run: per-point results, the best-PPA Pareto
+//! frontier, cache hit rates and the per-stage timing breakdown. The
+//! aggregation is **incremental** ([`SweepAccumulator`]) — points stream in
+//! from the worker pool in completion order and the frontier is maintained
+//! online, so a partial sweep (interrupted grid, failing corners) still
+//! yields a coherent report.
 
 use crate::arch::params::WindMillParams;
 use crate::diag::error::DiagError;
+use crate::diag::Elaborated;
 use crate::model::area::AreaReport;
 use crate::model::power::PowerReport;
 use crate::model::timing::TimingReport;
 use crate::netlist::NetlistStats;
-use crate::plugins;
+use crate::plugins::{self, WindMill};
+use crate::util::{table, Table};
+
+use super::cache::CacheStats;
+use super::job::JobTiming;
 
 /// One generated variant's PPA summary.
 #[derive(Debug, Clone)]
@@ -25,15 +39,19 @@ pub struct PpaRow {
     pub plugin_count: usize,
 }
 
-/// Elaborate a parameter set and compute its PPA row.
-pub fn ppa_report(label: &str, params: WindMillParams) -> Result<PpaRow, DiagError> {
-    let mut gen = plugins::generator(params.clone());
-    let e = gen.elaborate()?;
+/// Price an already-elaborated design (the artifact-cache path: one
+/// elaboration feeds both the machine description and this row).
+pub fn ppa_row(
+    label: &str,
+    params: &WindMillParams,
+    e: &Elaborated<WindMill>,
+    plugin_count: usize,
+) -> PpaRow {
     let stats = NetlistStats::of(&e.netlist);
     let area = AreaReport::of(&stats, &e.params);
     let timing = TimingReport::of(&e.params);
     let power = PowerReport::of(&stats, &e.params);
-    Ok(PpaRow {
+    PpaRow {
         label: label.to_string(),
         pea: format!("{}x{}", params.rows, params.cols),
         topology: params.topology.name(),
@@ -44,8 +62,183 @@ pub fn ppa_report(label: &str, params: WindMillParams) -> Result<PpaRow, DiagErr
         power_mw: power.total_mw,
         modules: stats.module_defs,
         elaboration_us: e.trace.total_nanos() as f64 / 1e3,
-        plugin_count: gen.plugin_count(),
-    })
+        plugin_count,
+    }
+}
+
+/// Elaborate a parameter set and compute its PPA row.
+pub fn ppa_report(label: &str, params: WindMillParams) -> Result<PpaRow, DiagError> {
+    let mut gen = plugins::generator(params.clone());
+    let e = gen.elaborate()?;
+    Ok(ppa_row(label, &params, &e, gen.plugin_count()))
+}
+
+// ---------------------------------------------------------------------------
+// Sweep aggregation
+// ---------------------------------------------------------------------------
+
+/// One evaluated design-space point: architecture PPA + workload
+/// performance on that architecture (no memory image — sweeps keep only
+/// the numbers).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    /// Stable hash of the *calibrated* parameter set (the cache identity).
+    pub arch_hash: u64,
+    pub pea: String,
+    pub topology: &'static str,
+    pub gates: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub fmax_mhz: f64,
+    pub cycles: u64,
+    pub wm_time_ns: f64,
+    pub speedup_vs_cpu: f64,
+    pub speedup_vs_gpu: f64,
+    pub ii: u32,
+    pub timing: JobTiming,
+}
+
+impl SweepPoint {
+    /// Pareto dominance over the PPA-performance objectives (all minimized:
+    /// area, power, workload time). `self` dominates `other` when it is no
+    /// worse everywhere and strictly better somewhere.
+    pub fn dominates(&self, other: &SweepPoint) -> bool {
+        let no_worse = self.area_mm2 <= other.area_mm2
+            && self.power_mw <= other.power_mw
+            && self.wm_time_ns <= other.wm_time_ns;
+        let strictly_better = self.area_mm2 < other.area_mm2
+            || self.power_mw < other.power_mw
+            || self.wm_time_ns < other.wm_time_ns;
+        no_worse && strictly_better
+    }
+}
+
+/// Aggregated outcome of one sweep.
+#[derive(Debug, Clone, Default)]
+pub struct SweepReport {
+    /// Successful points in completion order.
+    pub points: Vec<SweepPoint>,
+    /// `(label, error)` for grid points that failed.
+    pub failures: Vec<(String, String)>,
+    /// Indices into `points` forming the best-PPA Pareto frontier
+    /// (area/power/workload-time minimized), ascending by area.
+    pub frontier: Vec<usize>,
+    /// Cache traffic attributable to this sweep.
+    pub cache: CacheStats,
+    /// Summed per-stage timing across all points.
+    pub timing: JobTiming,
+    /// Wall-clock of the whole sweep, nanoseconds.
+    pub wall_ns: u64,
+}
+
+impl SweepReport {
+    pub fn frontier_points(&self) -> Vec<&SweepPoint> {
+        self.frontier.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Fastest point on the workload (min `wm_time_ns`).
+    pub fn best_performance(&self) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.wm_time_ns.partial_cmp(&b.wm_time_ns).unwrap())
+    }
+
+    /// Render the sweep as an aligned table (frontier members marked `*`).
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["point", "pea", "topo", "area mm2", "power mW", "fmax MHz", "cycles", "vs CPU", "vs GPU", "pareto"],
+        );
+        let on_frontier: std::collections::HashSet<usize> =
+            self.frontier.iter().copied().collect();
+        for (i, p) in self.points.iter().enumerate() {
+            t.row(&[
+                p.label.clone(),
+                p.pea.clone(),
+                p.topology.to_string(),
+                table::f(p.area_mm2, 3),
+                table::f(p.power_mw, 2),
+                table::f(p.fmax_mhz, 0),
+                p.cycles.to_string(),
+                format!("{:.1}x", p.speedup_vs_cpu),
+                format!("{:.2}x", p.speedup_vs_gpu),
+                if on_frontier.contains(&i) { "*".to_string() } else { String::new() },
+            ]);
+        }
+        t
+    }
+
+    /// One-line cache/timing summary for logs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%) | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
+            self.points.len(),
+            self.failures.len(),
+            self.wall_ns as f64 / 1e6,
+            self.cache.hits,
+            self.cache.lookups(),
+            100.0 * self.cache.hit_rate(),
+            self.timing.elaborate_ns as f64 / 1e6,
+            self.timing.compile_ns as f64 / 1e6,
+            self.timing.simulate_ns as f64 / 1e6,
+        )
+    }
+}
+
+/// Streaming builder for [`SweepReport`]: push results as workers finish;
+/// the Pareto frontier is maintained incrementally (insert candidate,
+/// evict newly-dominated members), so the report is valid after every push.
+#[derive(Debug, Default)]
+pub struct SweepAccumulator {
+    report: SweepReport,
+}
+
+impl SweepAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, point: SweepPoint) {
+        self.report.timing.add(&point.timing);
+        let idx = self.report.points.len();
+        // Dominated by an existing frontier member → not on the frontier.
+        let dominated = self
+            .report
+            .frontier
+            .iter()
+            .any(|&i| self.report.points[i].dominates(&point));
+        if !dominated {
+            let points = &self.report.points;
+            self.report.frontier.retain(|&i| !point.dominates(&points[i]));
+            self.report.frontier.push(idx);
+        }
+        self.report.points.push(point);
+        // Keep the frontier readable: ascending by area.
+        let points = &self.report.points;
+        self.report
+            .frontier
+            .sort_by(|&a, &b| points[a].area_mm2.partial_cmp(&points[b].area_mm2).unwrap());
+    }
+
+    pub fn push_failure(&mut self, label: String, error: String) {
+        self.report.failures.push((label, error));
+    }
+
+    /// Points accumulated so far (frontier is valid mid-stream too).
+    pub fn partial(&self) -> &SweepReport {
+        &self.report
+    }
+
+    pub fn finish(mut self, cache: CacheStats, wall_ns: u64) -> SweepReport {
+        self.report.cache = cache;
+        self.report.wall_ns = wall_ns;
+        self.report
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +267,80 @@ mod tests {
         let l = ppa_report("l", presets::large()).unwrap();
         assert!(s.area_mm2 < m.area_mm2);
         assert!(m.area_mm2 < l.area_mm2);
+    }
+
+    fn point(label: &str, area: f64, power: f64, time: f64) -> SweepPoint {
+        SweepPoint {
+            label: label.to_string(),
+            arch_hash: 0,
+            pea: "8x8".into(),
+            topology: "mesh2d",
+            gates: 0.0,
+            area_mm2: area,
+            power_mw: power,
+            fmax_mhz: 750.0,
+            cycles: time as u64,
+            wm_time_ns: time,
+            speedup_vs_cpu: 1.0,
+            speedup_vs_gpu: 1.0,
+            ii: 1,
+            timing: JobTiming::default(),
+        }
+    }
+
+    #[test]
+    fn frontier_is_maintained_incrementally() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(point("a", 1.0, 10.0, 100.0));
+        assert_eq!(acc.partial().frontier, vec![0]);
+        // Strictly worse everywhere: rejected from the frontier.
+        acc.push(point("b", 2.0, 20.0, 200.0));
+        assert_eq!(acc.partial().frontier, vec![0]);
+        // Trades area for speed: joins the frontier.
+        acc.push(point("c", 3.0, 10.0, 50.0));
+        assert_eq!(acc.partial().frontier, vec![0, 2]);
+        // Dominates `c`: evicts it.
+        acc.push(point("d", 2.5, 9.0, 40.0));
+        let r = acc.finish(CacheStats::default(), 1);
+        assert_eq!(r.frontier, vec![0, 3]);
+        let labels: Vec<&str> =
+            r.frontier_points().iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["a", "d"]);
+        assert_eq!(r.best_performance().unwrap().label, "d");
+    }
+
+    #[test]
+    fn equal_points_do_not_dominate_each_other() {
+        let a = point("a", 1.0, 1.0, 1.0);
+        let b = point("b", 1.0, 1.0, 1.0);
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+        let mut acc = SweepAccumulator::new();
+        acc.push(a);
+        acc.push(b);
+        // Both survive: neither dominates.
+        assert_eq!(acc.partial().frontier.len(), 2);
+    }
+
+    #[test]
+    fn failures_and_timing_aggregate() {
+        let mut acc = SweepAccumulator::new();
+        let mut p = point("a", 1.0, 1.0, 1.0);
+        p.timing.compile_ns = 5;
+        p.timing.cache_hits = 2;
+        acc.push(p);
+        let mut q = point("b", 2.0, 2.0, 2.0);
+        q.timing.compile_ns = 7;
+        q.timing.cache_misses = 1;
+        acc.push(q);
+        acc.push_failure("bad".into(), "boom".into());
+        let r = acc.finish(CacheStats::default(), 9);
+        assert_eq!(r.timing.compile_ns, 12);
+        assert_eq!(r.timing.cache_hits, 2);
+        assert_eq!(r.timing.cache_misses, 1);
+        assert_eq!(r.failures, vec![("bad".to_string(), "boom".to_string())]);
+        assert_eq!(r.wall_ns, 9);
+        assert_eq!(r.table("t").num_rows(), 2);
+        assert!(r.summary().contains("2 points (1 failed)"));
     }
 }

@@ -1,0 +1,291 @@
+//! The design-space sweep engine: batched, cached, parallel DSE.
+//!
+//! [`SweepEngine`] is the long-lived front door for design-space
+//! exploration. One engine owns a shared [`ArtifactCache`] and a worker
+//! count; every submission — a [`ParamGrid`] sweep or a plain job batch —
+//! fans out over the FIFO pool ([`super::pool`]) and memoizes elaboration
+//! and mapper artifacts across points, so sweep points that share a
+//! dimension (same architecture, same kernel, same seed) pay for it once.
+//!
+//! ```no_run
+//! use windmill::arch::params::ParamGrid;
+//! use windmill::arch::presets;
+//! use windmill::coordinator::{SweepEngine, Workload};
+//!
+//! let engine = SweepEngine::new(4);
+//! let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8, 16]);
+//! let report = engine.sweep(&grid, &Workload::Gemm { m: 16, n: 16, k: 16 });
+//! report.table("PEA-size sweep").print();
+//! println!("{}", report.summary());
+//! // A second sweep on the same engine is nearly free: the cache answers.
+//! let again = engine.sweep(&grid, &Workload::Gemm { m: 16, n: 16, k: 16 });
+//! assert!(again.cache_hit_rate() > 0.9);
+//! ```
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::arch::params::ParamGrid;
+use crate::diag::error::DiagError;
+use crate::diag::service::{ServiceRegistry, SweepService};
+
+use super::cache::{ArtifactCache, CacheStats};
+use super::job::{calibrate_params, run_job_cached, JobResult, JobSpec, Workload};
+use super::pool::{run_all_with, run_fifo};
+use super::report::{SweepAccumulator, SweepPoint, SweepReport};
+
+/// Default mapper seed for sweeps submitted without an explicit one.
+pub const DEFAULT_SWEEP_SEED: u64 = 42;
+
+/// A long-lived, cache-backed parallel design-space sweep engine.
+pub struct SweepEngine {
+    workers: usize,
+    cache: Arc<ArtifactCache>,
+}
+
+impl SweepEngine {
+    /// Engine with `workers` threads and a fresh artifact cache.
+    pub fn new(workers: usize) -> Self {
+        Self::with_cache(workers, Arc::new(ArtifactCache::new()))
+    }
+
+    /// Engine sharing an existing cache (e.g. across several engines or a
+    /// surrounding benchmark harness).
+    pub fn with_cache(workers: usize, cache: Arc<ArtifactCache>) -> Self {
+        SweepEngine { workers: workers.max(1), cache }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn cache(&self) -> &Arc<ArtifactCache> {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Publish this engine's capability as a DIAG [`SweepService`], so
+    /// Application-layer tooling discovers DSE through the typed service
+    /// registry like any other provider.
+    pub fn register_service(&self, registry: &mut ServiceRegistry) {
+        registry.register(
+            "sweep-engine",
+            0,
+            Rc::new(SweepService {
+                provider: "coordinator::SweepEngine",
+                workers: self.workers,
+                cached: true,
+            }),
+        );
+    }
+
+    /// Run a batch of jobs through the cache-backed FIFO pool; results
+    /// return in submission order.
+    pub fn run_jobs(&self, specs: Vec<JobSpec>) -> Vec<Result<JobResult, DiagError>> {
+        run_all_with(specs, self.workers, Some(Arc::clone(&self.cache)))
+    }
+
+    /// Sweep `workload` over every point of `grid` with the default seed.
+    pub fn sweep(&self, grid: &ParamGrid, workload: &Workload) -> SweepReport {
+        self.sweep_seeded(grid, workload, DEFAULT_SWEEP_SEED)
+    }
+
+    /// Sweep with an explicit mapper seed. Failing grid points land in
+    /// [`SweepReport::failures`]; the frontier/timing/cache aggregation is
+    /// incremental, so partial sweeps still report coherently.
+    pub fn sweep_seeded(&self, grid: &ParamGrid, workload: &Workload, seed: u64) -> SweepReport {
+        let t0 = Instant::now();
+        let stats_before = self.cache.stats();
+        let points = grid.points();
+        let cache = Arc::clone(&self.cache);
+        let wl = workload.clone();
+        let run = run_fifo(points, self.workers, move |(label, params)| {
+            // A panicking point must land in `failures`, not take down the
+            // sweep (same containment as `run_all_with`).
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                evaluate_point(&cache, label.clone(), params, &wl, seed)
+            }));
+            out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
+        });
+        let mut acc = SweepAccumulator::new();
+        for r in run.results {
+            match r {
+                Ok(p) => acc.push(p),
+                Err((label, e)) => acc.push_failure(label, e),
+            }
+        }
+        acc.finish(
+            self.cache.stats().since(&stats_before),
+            t0.elapsed().as_nanos() as u64,
+        )
+    }
+}
+
+/// Evaluate one grid point: cached elaboration + cached per-phase compile +
+/// simulation + baselines + PPA, folded into a [`SweepPoint`].
+fn evaluate_point(
+    cache: &ArtifactCache,
+    label: String,
+    params: crate::arch::WindMillParams,
+    workload: &Workload,
+    seed: u64,
+) -> Result<SweepPoint, (String, String)> {
+    let inner = || -> Result<SweepPoint, DiagError> {
+        let spec = JobSpec { workload: workload.clone(), params, seed };
+        let (job, timing) = run_job_cached(&spec, Some(cache))?;
+        // PPA of the *calibrated* architecture — the machine the job
+        // actually ran on. The job just populated that elaboration entry,
+        // so the relabel-by-hash lookup is guaranteed to resolve; the
+        // fallback recomputes only if the cache was cleared mid-sweep.
+        let ppa = match cache.ppa_by_hash(&label, job.arch_hash) {
+            Some(row) => row,
+            None => {
+                let (_, layout) = spec.workload.build();
+                let calibrated = calibrate_params(spec.params.clone(), &layout);
+                cache.ppa(&label, &calibrated)?
+            }
+        };
+        Ok(SweepPoint {
+            label: label.clone(),
+            arch_hash: job.arch_hash,
+            pea: ppa.pea,
+            topology: ppa.topology,
+            gates: ppa.gates,
+            area_mm2: ppa.area_mm2,
+            power_mw: ppa.power_mw,
+            fmax_mhz: ppa.fmax_mhz,
+            cycles: job.cycles,
+            wm_time_ns: job.wm_time_ns,
+            speedup_vs_cpu: job.speedup_vs_cpu,
+            speedup_vs_gpu: job.speedup_vs_gpu,
+            ii: job.ii,
+            timing,
+        })
+    };
+    inner().map_err(|e| (label.clone(), e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::coordinator::job::run_job;
+
+    /// Satellite requirement: two sweep points sharing an `ArchParams`
+    /// dimension produce identical results with and without the cache, and
+    /// the second compile reports a cache hit.
+    #[test]
+    fn cache_preserves_results_and_reports_hits() {
+        let spec = JobSpec {
+            workload: Workload::Saxpy { n: 64 },
+            params: presets::standard(),
+            seed: 3,
+        };
+        let plain = run_job(&spec).unwrap();
+
+        let cache = ArtifactCache::new();
+        let (first, t1) = run_job_cached(&spec, Some(&cache)).unwrap();
+        assert_eq!(plain.cycles, first.cycles);
+        assert_eq!(plain.mem, first.mem, "cached pipeline must be bit-identical");
+        assert_eq!(t1.cache_hits, 0, "cold run: no hits");
+        assert!(t1.cache_misses >= 2, "cold run populates elaboration + mapping");
+
+        // Identical point again: the second compile is a cache hit and the
+        // simulation result is unchanged.
+        let (second, t2) = run_job_cached(&spec, Some(&cache)).unwrap();
+        assert_eq!(second.cycles, plain.cycles);
+        assert_eq!(second.mem, plain.mem);
+        assert!(t2.cache_hits >= 2, "warm run: elaboration + mapping hit ({t2:?})");
+        assert_eq!(t2.cache_misses, 0, "warm run recomputes nothing ({t2:?})");
+
+        // A different workload sharing the ArchParams dimension reuses the
+        // elaboration but must compile its own kernel.
+        let spec2 = JobSpec {
+            workload: Workload::Dot { n: 64 },
+            params: presets::standard(),
+            seed: 3,
+        };
+        let (_, t3) = run_job_cached(&spec2, Some(&cache)).unwrap();
+        assert!(t3.cache_hits >= 1, "shared architecture dimension hits ({t3:?})");
+        assert!(t3.cache_misses >= 1, "new kernel misses ({t3:?})");
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_warm_rerun_hits() {
+        let engine = SweepEngine::new(2);
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8]);
+        let wl = Workload::Saxpy { n: 64 };
+
+        let r1 = engine.sweep(&grid, &wl);
+        assert_eq!(r1.points.len(), 2, "failures: {:?}", r1.failures);
+        assert!(r1.failures.is_empty());
+        assert!(!r1.frontier.is_empty());
+        assert!(r1.wall_ns > 0);
+        // A cold sweep over distinct architectures is all misses — the PPA
+        // relabel is deliberately not counted, so hit rates stay honest.
+        assert_eq!(r1.cache.hits, 0, "{:?}", r1.cache);
+        assert!(r1.cache.misses >= 4, "{:?}", r1.cache);
+
+        // Warm re-run: everything cacheable answers from the cache and the
+        // numbers are bit-identical.
+        let r2 = engine.sweep(&grid, &wl);
+        assert!(r2.cache_hit_rate() > 0.99, "{:?}", r2.cache);
+        let key = |r: &SweepReport| -> Vec<(String, u64)> {
+            r.points.iter().map(|p| (p.label.clone(), p.cycles)).collect()
+        };
+        let mut a = key(&r1);
+        let mut b = key(&r2);
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_isolates_failing_points() {
+        // context_depth 1 cannot hold the RL kernels on any PEA size, so
+        // every point fails — but the sweep still returns a report.
+        let mut bad = presets::standard();
+        bad.context_depth = 1;
+        let engine = SweepEngine::new(2);
+        let grid = ParamGrid::new(bad).pea_edges(&[4, 8]);
+        let r = engine.sweep(&grid, &Workload::RlStep);
+        assert_eq!(r.points.len() + r.failures.len(), 2);
+        assert!(!r.failures.is_empty());
+    }
+
+    #[test]
+    fn batched_jobs_share_the_engine_cache() {
+        let engine = SweepEngine::new(2);
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| JobSpec {
+                workload: Workload::Saxpy { n: 64 },
+                params: presets::standard(),
+                seed: 3 + (i % 2), // two distinct mapper seeds
+            })
+            .collect();
+        let results = engine.run_jobs(specs);
+        assert!(results.iter().all(Result::is_ok));
+        let stats = engine.cache_stats();
+        // Every job performs one elaboration lookup and one mapping lookup.
+        assert_eq!(stats.lookups(), 8, "{stats:?}");
+        // The two late jobs run after at least one early job fully
+        // finished, so ≥3 lookups must be hits even under worst-case races
+        // (concurrent cold misses may duplicate work but never corrupt it).
+        assert!(stats.hits >= 3, "{stats:?}");
+    }
+
+    #[test]
+    fn sweep_service_is_discoverable() {
+        let engine = SweepEngine::new(3);
+        let mut registry = ServiceRegistry::new();
+        engine.register_service(&mut registry);
+        let svc = registry.get::<SweepService>("dse-tool", "create_late").unwrap();
+        assert_eq!(svc.workers, 3);
+        assert!(svc.cached);
+        assert_eq!(svc.provider, "coordinator::SweepEngine");
+    }
+}

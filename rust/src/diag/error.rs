@@ -1,11 +1,14 @@
 //! Error taxonomy of the DIAG elaboration pipeline.
+//!
+//! `Display`/`Error` are implemented by hand: thiserror is not vendored on
+//! this image (see `util/mod.rs`), and the coordinator ships these errors
+//! across worker threads, so the type stays plain data (`Send + Sync`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum DiagError {
     /// `get_service::<T>()` found no provider for a required service.
-    #[error("no provider for service `{service}` (wanted by plugin `{wanted_by}` in stage {stage})")]
     MissingService {
         service: &'static str,
         wanted_by: String,
@@ -13,23 +16,18 @@ pub enum DiagError {
     },
 
     /// Two plugins with the same name were added to one generator.
-    #[error("duplicate plugin `{0}`")]
     DuplicatePlugin(String),
 
     /// A required function-tree fragment has no implementing plugin.
-    #[error("function `{path}` is part of the basic framework but no plugin implements it")]
     MissingFunction { path: String },
 
     /// A plugin names a function path that is not in the definition tree.
-    #[error("plugin `{plugin}` implements unknown function `{path}`")]
     UnknownFunction { plugin: String, path: String },
 
     /// A `Handle` was read before any stage loaded it.
-    #[error("handle `{0}` read before it was loaded")]
     UnloadedHandle(String),
 
     /// A plugin reported a config/elaboration problem.
-    #[error("plugin `{plugin}` failed in {stage}: {msg}")]
     PluginFailed {
         plugin: String,
         stage: &'static str,
@@ -37,13 +35,42 @@ pub enum DiagError {
     },
 
     /// Netlist validation after create_late found structural problems.
-    #[error("generated netlist is malformed: {0}")]
     MalformedNetlist(String),
 
     /// Parameter validation failed during create_config.
-    #[error("invalid parameters: {0}")]
     InvalidParams(String),
 }
+
+impl fmt::Display for DiagError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DiagError::MissingService { service, wanted_by, stage } => write!(
+                f,
+                "no provider for service `{service}` (wanted by plugin `{wanted_by}` in stage {stage})"
+            ),
+            DiagError::DuplicatePlugin(name) => write!(f, "duplicate plugin `{name}`"),
+            DiagError::MissingFunction { path } => write!(
+                f,
+                "function `{path}` is part of the basic framework but no plugin implements it"
+            ),
+            DiagError::UnknownFunction { plugin, path } => {
+                write!(f, "plugin `{plugin}` implements unknown function `{path}`")
+            }
+            DiagError::UnloadedHandle(name) => {
+                write!(f, "handle `{name}` read before it was loaded")
+            }
+            DiagError::PluginFailed { plugin, stage, msg } => {
+                write!(f, "plugin `{plugin}` failed in {stage}: {msg}")
+            }
+            DiagError::MalformedNetlist(msg) => {
+                write!(f, "generated netlist is malformed: {msg}")
+            }
+            DiagError::InvalidParams(msg) => write!(f, "invalid parameters: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DiagError {}
 
 impl DiagError {
     /// Convenience constructor used by plugins.

@@ -102,6 +102,25 @@ impl ServiceRegistry {
     }
 }
 
+/// Design-space-exploration capability descriptor.
+///
+/// The coordinator's `SweepEngine` publishes one of these
+/// (`SweepEngine::register_service`) so Application-layer tooling can
+/// discover sweep capability through the same typed-service mechanism
+/// plugins use for hardware — `registry.get::<SweepService>(...)` — instead
+/// of hard-wiring a coordinator dependency. Living in the DIAG layer keeps
+/// the descriptor target-agnostic: any generator flow can advertise a DSE
+/// backend under this type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepService {
+    /// Implementation identifier (e.g. `"coordinator::SweepEngine"`).
+    pub provider: &'static str,
+    /// Worker threads backing the engine.
+    pub workers: usize,
+    /// Whether evaluations are memoized across sweep points.
+    pub cached: bool,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,4 +23,9 @@ pub mod sim;
 pub mod util;
 pub mod workloads;
 
-pub use anyhow::Result;
+/// Crate-wide boxed error (the image vendors no crates, so this stands in
+/// for `anyhow::Error`; `DiagError` and every std error convert via `?`).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias used by the binaries, examples and runtime.
+pub type Result<T, E = Error> = std::result::Result<T, E>;

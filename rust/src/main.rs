@@ -6,8 +6,9 @@
 
 use std::process::ExitCode;
 
+use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
-use windmill::coordinator::{ppa_report, run_all, JobSpec, Workload};
+use windmill::coordinator::{ppa_report, run_all, JobSpec, SweepEngine, Workload};
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
 use windmill::util::{table, Table};
@@ -23,6 +24,9 @@ USAGE:
     windmill run <workload> [--preset P] [--seed S]
         Compile + simulate a workload (saxpy|dot|gemm|fir|conv|rl)
         against the CPU/GPU baseline models.
+    windmill sweep <workload> [--preset P] [--workers W] [--seed S]
+        Design-space sweep (PEA size x topology grid) of a workload through
+        the cache-backed sweep engine; prints the best-PPA frontier.
     windmill suite [--workers W]
         The cross-domain workload suite on the standard WindMill.
     windmill plugins
@@ -128,6 +132,33 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_sweep(args: &[String]) -> Result<(), String> {
+    let wl_name = args.first().ok_or("missing workload")?;
+    let workload = Workload::parse(wl_name).ok_or(format!("unknown workload `{wl_name}`"))?;
+    let base = params_from_args(&args[1..])?;
+    let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+
+    let engine = SweepEngine::new(workers);
+    let grid = ParamGrid::new(base).pea_edges(&[4, 8, 12, 16]).topologies(&Topology::ALL);
+    let report = engine.sweep_seeded(&grid, &workload, seed);
+    report
+        .table(&format!("design-space sweep of `{}` (PEA size x topology)", workload.name()))
+        .print();
+    for (label, err) in &report.failures {
+        eprintln!("point `{label}` failed: {err}");
+    }
+    println!("{}", report.summary());
+    println!("best-PPA frontier:");
+    for p in report.frontier_points() {
+        println!(
+            "  * {:<20} {:>7.3} mm2  {:>6.2} mW  {:>9} cycles",
+            p.label, p.area_mm2, p.power_mw, p.cycles
+        );
+    }
+    Ok(())
+}
+
 fn cmd_suite(args: &[String]) -> Result<(), String> {
     let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
     let specs: Vec<JobSpec> = [
@@ -191,6 +222,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(&rest),
         "report" => cmd_report(&rest),
         "run" => cmd_run(&rest),
+        "sweep" => cmd_sweep(&rest),
         "suite" => cmd_suite(&rest),
         "plugins" => cmd_plugins(),
         "help" | "--help" | "-h" => {

@@ -175,7 +175,7 @@ mod tests {
     }
 
     #[test]
-    fn gate_totals_scale_with_pea_size(){
+    fn gate_totals_scale_with_pea_size() {
         let s4 = NetlistStats::of(&elaborate(presets::with_pea_size(4)).unwrap().netlist);
         let s8 = NetlistStats::of(&elaborate(presets::with_pea_size(8)).unwrap().netlist);
         let s16 = NetlistStats::of(&elaborate(presets::with_pea_size(16)).unwrap().netlist);

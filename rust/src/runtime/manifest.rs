@@ -2,9 +2,12 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::util::Json;
+use crate::Result;
+
+fn err(msg: impl Into<String>) -> crate::Error {
+    crate::Error::from(msg.into())
+}
 
 /// One tensor's shape/dtype.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,27 +42,27 @@ pub struct Manifest {
 impl Manifest {
     pub fn read(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+            .map_err(|e| err(format!("reading {}: {e}", path.as_ref().display())))?;
         Manifest::parse(&text)
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err(format!("manifest: {e}")))?;
         let format = j.at(&["format"]).and_then(Json::as_str).unwrap_or("");
         if format != "hlo-text/return-tuple" {
-            return Err(anyhow!("unsupported artifact format `{format}`"));
+            return Err(err(format!("unsupported artifact format `{format}`")));
         }
         let entries_obj = j
             .at(&["entries"])
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing `entries`"))?;
+            .ok_or_else(|| err("manifest missing `entries`"))?;
         let tensor = |t: &Json| -> Result<TensorSpec> {
             let shape = t
                 .get("shape")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .ok_or_else(|| err("tensor missing shape"))?
                 .iter()
-                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .map(|x| x.as_usize().ok_or_else(|| err("bad dim")))
                 .collect::<Result<Vec<_>>>()?;
             let dtype =
                 t.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
@@ -70,12 +73,12 @@ impl Manifest {
             let file = ent
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entry `{name}` missing file"))?
+                .ok_or_else(|| err(format!("entry `{name}` missing file")))?
                 .to_string();
             let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
                 ent.get(key)
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("entry `{name}` missing {key}"))?
+                    .ok_or_else(|| err(format!("entry `{name}` missing {key}")))?
                     .iter()
                     .map(tensor)
                     .collect()

@@ -10,129 +10,198 @@
 //! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
 //! instruction ids that the bundled xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+//!
+//! The `xla` crate is only present on images that vendor it, so the real
+//! client lives behind the `pjrt` cargo feature. Without the feature the
+//! same `Runtime` API exists as a stub whose `load` fails with a clear
+//! message — callers (examples, integration tests) degrade gracefully and
+//! the default build stays dependency-free.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
-
-use anyhow::{anyhow, Context, Result};
-
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
-/// A loaded PJRT runtime with an executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_client {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
 
-impl Runtime {
-    /// Create a CPU PJRT client and read the artifact manifest.
-    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::read(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client, dir, manifest, executables: HashMap::new() })
+    use super::Manifest;
+    use crate::Result;
+
+    fn err(msg: impl Into<String>) -> crate::Error {
+        crate::Error::from(msg.into())
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A loaded PJRT runtime with an executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: Manifest,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Compile (or fetch from cache) the named artifact.
-    pub fn prepare(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
+    impl Runtime {
+        /// Create a CPU PJRT client and read the artifact manifest.
+        pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = artifact_dir.as_ref().to_path_buf();
+            let manifest = Manifest::read(dir.join("manifest.json"))
+                .map_err(|e| err(format!("reading manifest in {}: {e}", dir.display())))?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e}")))?;
+            Ok(Runtime { client, dir, manifest, executables: HashMap::new() })
         }
-        let spec = self
-            .manifest
-            .entry(name)
-            .ok_or_else(|| anyhow!("no artifact `{name}` in manifest"))?;
-        let path = self.dir.join(&spec.file);
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute an artifact on f32 inputs; returns the f32 outputs.
-    ///
-    /// Inputs must match the manifest's shapes (flattened row-major).
-    pub fn execute(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.prepare(name)?;
-        let spec = self.manifest.entry(name).unwrap().clone();
-        if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
-                "`{name}` expects {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            ));
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            let want: usize = tspec.shape.iter().product::<usize>().max(1);
-            if data.len() != want {
-                return Err(anyhow!(
-                    "`{name}` input {i}: {} elements for shape {:?}",
-                    data.len(),
-                    tspec.shape
-                ));
+
+        /// Compile (or fetch from cache) the named artifact.
+        pub fn prepare(&mut self, name: &str) -> Result<()> {
+            if self.executables.contains_key(name) {
+                return Ok(());
             }
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
-            let lit =
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape input {i} of `{name}`: {e}"))?;
-            literals.push(lit);
+            let spec = self
+                .manifest
+                .entry(name)
+                .ok_or_else(|| err(format!("no artifact `{name}` in manifest")))?;
+            let path = self.dir.join(&spec.file);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| err(format!("non-utf8 path {}", path.display())))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| err(format!("parsing {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| err(format!("compiling {name}: {e}")))?;
+            self.executables.insert(name.to_string(), exe);
+            Ok(())
         }
-        let exe = self.executables.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing `{name}`: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result of `{name}`: {e}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple `{name}`: {e}"))?;
-        if parts.len() != spec.outputs.len() {
-            return Err(anyhow!(
-                "`{name}` returned {} outputs, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            ));
-        }
-        parts
-            .into_iter()
-            .enumerate()
-            .map(|(i, p)| p.to_vec::<f32>().map_err(|e| anyhow!("output {i} of `{name}`: {e}")))
-            .collect()
-    }
 
-    /// Execute and measure wall-clock time (compile excluded; the first
-    /// call per artifact warms the cache).
-    pub fn execute_timed(
-        &mut self,
-        name: &str,
-        inputs: &[Vec<f32>],
-    ) -> Result<(Vec<Vec<f32>>, f64)> {
-        self.prepare(name)?;
-        let t0 = Instant::now();
-        let out = self.execute(name, inputs)?;
-        Ok((out, t0.elapsed().as_nanos() as f64))
+        /// Execute an artifact on f32 inputs; returns the f32 outputs.
+        ///
+        /// Inputs must match the manifest's shapes (flattened row-major).
+        pub fn execute(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            self.prepare(name)?;
+            let spec = self.manifest.entry(name).unwrap().clone();
+            if inputs.len() != spec.inputs.len() {
+                return Err(err(format!(
+                    "`{name}` expects {} inputs, got {}",
+                    spec.inputs.len(),
+                    inputs.len()
+                )));
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+                let want: usize = tspec.shape.iter().product::<usize>().max(1);
+                if data.len() != want {
+                    return Err(err(format!(
+                        "`{name}` input {i}: {} elements for shape {:?}",
+                        data.len(),
+                        tspec.shape
+                    )));
+                }
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+                let lit = lit
+                    .reshape(&dims)
+                    .map_err(|e| err(format!("reshape input {i} of `{name}`: {e}")))?;
+                literals.push(lit);
+            }
+            let exe = self.executables.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| err(format!("executing `{name}`: {e}")))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("fetch result of `{name}`: {e}")))?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            let parts = tuple.to_tuple().map_err(|e| err(format!("untuple `{name}`: {e}")))?;
+            if parts.len() != spec.outputs.len() {
+                return Err(err(format!(
+                    "`{name}` returned {} outputs, manifest says {}",
+                    parts.len(),
+                    spec.outputs.len()
+                )));
+            }
+            parts
+                .into_iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    p.to_vec::<f32>().map_err(|e| err(format!("output {i} of `{name}`: {e}")))
+                })
+                .collect()
+        }
+
+        /// Execute and measure wall-clock time (compile excluded; the first
+        /// call per artifact warms the cache).
+        pub fn execute_timed(
+            &mut self,
+            name: &str,
+            inputs: &[Vec<f32>],
+        ) -> Result<(Vec<Vec<f32>>, f64)> {
+            self.prepare(name)?;
+            let t0 = Instant::now();
+            let out = self.execute(name, inputs)?;
+            Ok((out, t0.elapsed().as_nanos() as f64))
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_client {
+    use std::path::Path;
+
+    use super::Manifest;
+    use crate::Result;
+
+    const DISABLED: &str = "windmill was built without the `pjrt` feature; \
+         the PJRT runtime needs the vendored `xla` crate (enable with \
+         `--features pjrt` on an image that carries it)";
+
+    /// Stub runtime: the API of the PJRT client without the `xla` crate.
+    /// `load` always fails, so feature-gated callers degrade at run time
+    /// with an actionable message instead of failing to link.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn load(_artifact_dir: impl AsRef<Path>) -> Result<Self> {
+            Err(crate::Error::from(DISABLED.to_string()))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (pjrt feature disabled)".to_string()
+        }
+
+        pub fn prepare(&mut self, _name: &str) -> Result<()> {
+            Err(crate::Error::from(DISABLED.to_string()))
+        }
+
+        pub fn execute(&mut self, _name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(crate::Error::from(DISABLED.to_string()))
+        }
+
+        pub fn execute_timed(
+            &mut self,
+            _name: &str,
+            _inputs: &[Vec<f32>],
+        ) -> Result<(Vec<Vec<f32>>, f64)> {
+            Err(crate::Error::from(DISABLED.to_string()))
+        }
+    }
+}
+
+pub use pjrt_client::Runtime;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -194,5 +263,16 @@ mod tests {
     fn unknown_artifact_is_error() {
         let Some(mut rt) = runtime() else { return };
         assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::Runtime;
+
+    #[test]
+    fn stub_load_fails_with_actionable_message() {
+        let e = Runtime::load("/nonexistent").map(|_| ()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

@@ -260,7 +260,7 @@ impl<'a> Engine<'a> {
                 let (_, batch) = self.event_buckets.pop_first().unwrap();
                 for (dst, slot, tok) in batch {
                     let q = &mut self.nodes[dst].inq[slot];
-                    if q.back().is_none_or(|t| t.iter < tok.iter) {
+                    if q.back().map_or(true, |t| t.iter < tok.iter) {
                         q.push_back(tok);
                     } else {
                         let pos = q.partition_point(|t| t.iter < tok.iter);

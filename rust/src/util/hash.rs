@@ -1,0 +1,121 @@
+//! Stable content hashing for cache keys.
+//!
+//! FNV-1a 64-bit over an explicit, field-by-field byte encoding. The point
+//! is *stability*: unlike `std::hash::Hash` + `DefaultHasher` (whose output
+//! may change across std releases and is randomly keyed in HashMaps), these
+//! digests identify artifacts in the coordinator's [`ArtifactCache`]
+//! (`crate::coordinator::cache`) and must be reproducible across runs,
+//! threads and builds.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 hasher with typed feed helpers.
+#[derive(Debug, Clone)]
+pub struct StableHasher {
+    h: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> Self {
+        StableHasher { h: FNV_OFFSET }
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        for &b in bs {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u8(&mut self, x: u8) -> &mut Self {
+        self.bytes(&[x])
+    }
+
+    pub fn u32(&mut self, x: u32) -> &mut Self {
+        self.bytes(&x.to_le_bytes())
+    }
+
+    pub fn i32(&mut self, x: i32) -> &mut Self {
+        self.bytes(&x.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, x: u64) -> &mut Self {
+        self.bytes(&x.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, x: usize) -> &mut Self {
+        self.u64(x as u64)
+    }
+
+    pub fn bool(&mut self, x: bool) -> &mut Self {
+        self.u8(x as u8)
+    }
+
+    /// Hash the bit pattern (NaN-stable, -0.0 ≠ 0.0 — fine for identity).
+    pub fn f64_bits(&mut self, x: f64) -> &mut Self {
+        self.u64(x.to_bits())
+    }
+
+    pub fn f32_bits(&mut self, x: f32) -> &mut Self {
+        self.u32(x.to_bits())
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        // Length prefix keeps ("ab","c") distinct from ("a","bc").
+        self.usize(s.len());
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// One-shot convenience for plain byte slices.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = StableHasher::new();
+    h.bytes(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a 64 of empty input is the offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // Classic test vector: "a".
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let mut a = StableHasher::new();
+        a.u32(1).str("pea").bool(true);
+        let mut b = StableHasher::new();
+        b.u32(1).str("pea").bool(true);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = StableHasher::new();
+        c.u32(1).str("pea").bool(false);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_strings() {
+        let mut a = StableHasher::new();
+        a.str("ab").str("c");
+        let mut b = StableHasher::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -4,11 +4,13 @@
 //! `xla` dependency, so the usual suspects (serde_json, rand, prettytable)
 //! are replaced by the minimal in-tree implementations in this module.
 
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use hash::StableHasher;
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::Summary;
