@@ -28,7 +28,7 @@ fn rl_task(machine: &windmill::sim::MachineDesc) -> (Task, rl::RlStep) {
         .iter()
         .enumerate()
         .map(|(i, d)| Phase {
-            mapping: compile(d.clone(), machine, 42).unwrap(),
+            mapping: std::sync::Arc::new(compile(d.clone(), machine, 42).unwrap()),
             dma_in_words: if i == 0 { (rl::BATCH * (rl::OBS + rl::ACT + 1)) as u64 } else { 0 },
             dma_out_words: if i + 1 == n { 1 } else { 0 },
         })

@@ -1,0 +1,134 @@
+//! Simulator hot-loop throughput: the optimized engine
+//! (`windmill::sim::engine`) vs the frozen pre-refactor baseline
+//! (`windmill::sim::reference`) on a GEMM-style loop nest.
+//!
+//! Both engines execute the *same* mapping against the *same* image and —
+//! by construction, pinned by `tests/engine_equivalence.rs` — produce the
+//! same cycle count, so the ratio of wall times is a pure measure of the
+//! hot-loop overhaul (calendar queue, CSR consumers, fixed operand reads,
+//! active worklist, reusable response buffer). Acceptance bar: ≥ 3×
+//! simulated-cycles/sec on the GEMM nest.
+//!
+//! Prints EXPERIMENTS.md §Perf-ready rows. `cargo bench --bench sim_throughput`
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::Table;
+use windmill::arch::presets;
+use windmill::compiler::{compile, Mapping};
+use windmill::plugins;
+use windmill::sim::engine::simulate;
+use windmill::sim::reference::simulate_reference;
+use windmill::sim::{MachineDesc, SimResult};
+use windmill::util::Rng;
+use windmill::workloads::linalg;
+
+struct Measured {
+    cycles: u64,
+    fires: u64,
+    /// Median wall nanoseconds per full simulation.
+    wall_ns: f64,
+}
+
+fn measure(
+    name: &str,
+    reps: usize,
+    mapping: &Mapping,
+    machine: &MachineDesc,
+    image: &[f32],
+    run: impl Fn(&Mapping, &MachineDesc, &[f32]) -> SimResult,
+) -> Measured {
+    // Warmup.
+    let first = std::hint::black_box(run(mapping, machine, image));
+    let mut walls: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = std::hint::black_box(run(mapping, machine, image));
+        walls.push(t0.elapsed().as_nanos() as f64);
+        assert_eq!(r.cycles, first.cycles, "{name}: nondeterministic sim");
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measured { cycles: first.cycles, fires: first.fires, wall_ns: walls[reps / 2] }
+}
+
+fn rate(per_run: f64, wall_ns: f64) -> f64 {
+    per_run / (wall_ns / 1e9)
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else {
+        format!("{:.1} k/s", r / 1e3)
+    }
+}
+
+fn main() {
+    let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+    let words = machine.smem.as_ref().unwrap().words();
+    let mut rng = Rng::new(11);
+
+    // The workloads: the Fig.6-style GEMM nest (acceptance kernel) plus a
+    // long 1-D SFU pipeline (latency/calendar stress).
+    let (gemm, gl) = linalg::gemm_bias(16, 16, 16);
+    let gemm_map = compile(gemm, &machine, 42).unwrap();
+    let mut gemm_img = vec![0.0f32; words];
+    for w in gemm_img.iter_mut().take(gl.total_words() as usize) {
+        *w = rng.normal();
+    }
+
+    let (fir, fl) = windmill::workloads::signal::fir(256, 16);
+    let fir_map = compile(fir, &machine, 42).unwrap();
+    let mut fir_img = vec![0.0f32; words];
+    for w in fir_img.iter_mut().take(fl.total_words() as usize) {
+        *w = rng.normal();
+    }
+
+    let reps = 15;
+    let mut t = Table::new(
+        "cycle-accurate engine throughput: optimized vs pre-refactor reference",
+        &["kernel", "engine", "sim cycles", "cycles/s", "PE fires/s", "wall/run"],
+    );
+    let mut gemm_speedup = 0.0;
+    for (name, mapping, image) in
+        [("gemm-16^3", &gemm_map, &gemm_img), ("fir-256t16", &fir_map, &fir_img)]
+    {
+        let fast = measure(name, reps, mapping, &machine, image, |m, mc, img| {
+            simulate(m, mc, img, 8_000_000).unwrap()
+        });
+        let slow = measure(name, reps, mapping, &machine, image, |m, mc, img| {
+            simulate_reference(m, mc, img, 8_000_000).unwrap()
+        });
+        assert_eq!(fast.cycles, slow.cycles, "{name}: engines disagree on cycles");
+        assert_eq!(fast.fires, slow.fires, "{name}: engines disagree on fires");
+        for (engine, m) in [("optimized", &fast), ("reference", &slow)] {
+            t.row(&[
+                name.to_string(),
+                engine.to_string(),
+                m.cycles.to_string(),
+                fmt_rate(rate(m.cycles as f64, m.wall_ns)),
+                fmt_rate(rate(m.fires as f64, m.wall_ns)),
+                format!("{:.2} ms", m.wall_ns / 1e6),
+            ]);
+        }
+        let speedup = slow.wall_ns / fast.wall_ns;
+        println!(
+            "| {name} | {} | {} | {speedup:.2}x |   <- EXPERIMENTS.md §Perf row",
+            fmt_rate(rate(slow.cycles as f64, slow.wall_ns)),
+            fmt_rate(rate(fast.cycles as f64, fast.wall_ns)),
+        );
+        if name == "gemm-16^3" {
+            gemm_speedup = speedup;
+        }
+    }
+    t.print();
+
+    assert!(
+        gemm_speedup >= 3.0,
+        "acceptance: optimized engine must deliver >= 3x simulated-cycles/sec \
+         over the pre-refactor engine on the GEMM nest (got {gemm_speedup:.2}x)"
+    );
+    println!("simulator hot-loop speedup >= 3x confirmed ({gemm_speedup:.2}x on gemm-16^3)");
+}

@@ -64,7 +64,7 @@ fn main() {
                 let y = d.unary(windmill::arch::isa::Op::Mul, x);
                 d.store_affine(y, 4096 + i * 256, vec![1], 1);
                 Phase {
-                    mapping: compile(d, machine, 9).unwrap(),
+                    mapping: std::sync::Arc::new(compile(d, machine, 9).unwrap()),
                     dma_in_words: 2048,
                     dma_out_words: 256,
                 }

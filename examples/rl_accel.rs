@@ -119,7 +119,7 @@ fn main() -> windmill::Result<()> {
             .into_iter()
             .enumerate()
             .map(|(i, mapping)| Phase {
-                mapping,
+                mapping: std::sync::Arc::new(mapping),
                 dma_in_words: if i == 0 {
                     (ENVS * (OBS + ACTS + 1)) as u64 // obs+onehot+returns per step
                 } else {

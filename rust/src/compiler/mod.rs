@@ -41,6 +41,9 @@ pub enum CompilePass {
     Route,
     Schedule,
     ConfigGen,
+    /// Cycle-accurate simulation of one mapped kernel against one memory
+    /// image (the sweep-level `SimResult` cache; keys carry the image hash).
+    Simulate,
 }
 
 impl CompilePass {
@@ -52,16 +55,19 @@ impl CompilePass {
             CompilePass::Route => "route",
             CompilePass::Schedule => "schedule",
             CompilePass::ConfigGen => "config_gen",
+            CompilePass::Simulate => "simulate",
         }
     }
 }
 
 /// Content address of one compiler/generator artifact:
-/// `(ArchParams hash, DFG hash, seed, pass)`.
+/// `(ArchParams hash, DFG hash, seed, image hash, pass)`.
 ///
 /// Architecture-only artifacts (elaboration) use `dfg: 0, seed: 0`, so two
 /// sweep points that share the architecture dimension share the entry even
 /// when their workloads differ — and vice versa for shared workloads.
+/// Only simulation artifacts carry a nonzero `image` (the stable hash of
+/// the input memory image): compiler artifacts are image-independent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CompileKey {
     /// [`crate::arch::WindMillParams::stable_hash`] of the (calibrated)
@@ -71,16 +77,25 @@ pub struct CompileKey {
     pub dfg: u64,
     /// Mapper seed (0 for architecture-only passes).
     pub seed: u64,
+    /// [`crate::util::stable_hash_f32`] of the input memory image
+    /// (0 for every pass except [`CompilePass::Simulate`]).
+    pub image: u64,
     pub pass: CompilePass,
 }
 
 impl CompileKey {
     pub fn elaborate(arch: u64) -> Self {
-        CompileKey { arch, dfg: 0, seed: 0, pass: CompilePass::Elaborate }
+        CompileKey { arch, dfg: 0, seed: 0, image: 0, pass: CompilePass::Elaborate }
     }
 
     pub fn mapping(arch: u64, dfg: &Dfg, seed: u64) -> Self {
-        CompileKey { arch, dfg: dfg.stable_hash(), seed, pass: CompilePass::Mapping }
+        CompileKey { arch, dfg: dfg.stable_hash(), seed, image: 0, pass: CompilePass::Mapping }
+    }
+
+    /// Key of one cycle-accurate simulation: the mapping identity
+    /// `(arch, dfg, seed)` plus the stable hash of the input memory image.
+    pub fn simulate(arch: u64, dfg_hash: u64, seed: u64, image: u64) -> Self {
+        CompileKey { arch, dfg: dfg_hash, seed, image, pass: CompilePass::Simulate }
     }
 }
 
@@ -237,5 +252,11 @@ mod tests {
         p2.topology = crate::arch::Topology::Torus;
         assert_ne!(a, CompileKey::mapping(p2.stable_hash(), &d, 42));
         assert_ne!(a.pass, CompileKey::elaborate(h).pass);
+        // Simulation keys separate by image hash; compiler keys carry none.
+        let s1 = CompileKey::simulate(h, d.stable_hash(), 42, 0xABCD);
+        let s2 = CompileKey::simulate(h, d.stable_hash(), 42, 0xABCE);
+        assert_ne!(s1, s2);
+        assert_eq!(a.image, 0);
+        assert_ne!(s1.pass, a.pass);
     }
 }

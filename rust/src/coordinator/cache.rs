@@ -13,7 +13,14 @@
 //!   architecture;
 //! * **mapping** (`pass: Mapping`): the full place→route→schedule→config
 //!   output, shared by every sweep point that repeats a
-//!   `(architecture, kernel, seed)` triple.
+//!   `(architecture, kernel, seed)` triple — handed out as `Arc<Mapping>`
+//!   so a warm hit is a pointer clone, not a deep copy;
+//! * **simulation** (`pass: Simulate`, key additionally carries
+//!   [`crate::util::stable_hash_f32`] of the input memory image): the full
+//!   cycle-accurate [`SimResult`] of one kernel phase, so a re-run sweep
+//!   point skips `simulate()` entirely. Simulation *is* a pure function of
+//!   `(arch, dfg, seed, image)`: the mapping is determined by the first
+//!   three and the engine is deterministic in the image.
 //!
 //! The cache is shared across the worker pool (`Mutex`-guarded map,
 //! `Arc`-shared values). Misses compute *outside* the lock, so a slow
@@ -29,7 +36,9 @@ use crate::arch::params::WindMillParams;
 use crate::compiler::{compile_timed, CompileKey, CompilePass, Dfg, Mapping, StageNanos};
 use crate::diag::error::DiagError;
 use crate::plugins;
+use crate::sim::engine::SimResult;
 use crate::sim::machine::MachineDesc;
+use crate::util::stable_hash_f32;
 
 use super::report::{ppa_row, PpaRow};
 
@@ -48,6 +57,7 @@ pub struct ElabArtifacts {
 enum Entry {
     Elab(Arc<ElabArtifacts>),
     Mapping(Arc<Mapping>, StageNanos),
+    Sim(Arc<SimResult>),
 }
 
 /// Hit/miss counters, total and per pass.
@@ -69,6 +79,22 @@ impl CacheStats {
             0.0
         } else {
             self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// `(hits, misses)` of one pass by its [`CompilePass::name`]
+    /// (`(0, 0)` when the pass was never looked up).
+    pub fn pass_counts(&self, pass: &str) -> (u64, u64) {
+        self.by_pass.get(pass).copied().unwrap_or((0, 0))
+    }
+
+    /// Hit rate of one pass by name (0.0 when never looked up).
+    pub fn pass_hit_rate(&self, pass: &str) -> f64 {
+        let (h, m) = self.pass_counts(pass);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
         }
     }
 
@@ -216,6 +242,34 @@ impl ArtifactCache {
             _ => unreachable!("mapping key holds non-mapping entry"),
         }
     }
+
+    /// Cycle-accurate simulation of one mapped kernel phase, or the cached
+    /// [`SimResult`]. The key is `(arch, dfg, seed, stable image hash)`;
+    /// `compute` runs only on a miss (outside the lock), so a warm sweep
+    /// performs **zero** `simulate()` calls. The boolean reports whether
+    /// this lookup was a hit.
+    pub fn sim_result(
+        &self,
+        arch_hash: u64,
+        dfg_hash: u64,
+        seed: u64,
+        image: &[f32],
+        compute: impl FnOnce() -> Result<SimResult, DiagError>,
+    ) -> Result<(Arc<SimResult>, bool), DiagError> {
+        let key = CompileKey::simulate(arch_hash, dfg_hash, seed, stable_hash_f32(image));
+        if let Some(Entry::Sim(r)) = self.entries.lock().unwrap().get(&key).cloned() {
+            self.record(CompilePass::Simulate, true);
+            return Ok((r, true));
+        }
+        self.record(CompilePass::Simulate, false);
+        let r = Arc::new(compute()?);
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(key).or_insert_with(|| Entry::Sim(Arc::clone(&r)));
+        match entry {
+            Entry::Sim(stored) => Ok((Arc::clone(stored), false)),
+            _ => unreachable!("simulate key holds non-sim entry"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +323,49 @@ mod tests {
         // Different seed misses.
         let (_, _, hit3) = cache.mapping(arch, &d, &e.machine, 8).unwrap();
         assert!(!hit3);
+    }
+
+    #[test]
+    fn sim_results_are_cached_by_image_hash() {
+        use crate::sim::engine::simulate;
+        let cache = ArtifactCache::new();
+        let params = presets::standard();
+        let arch = params.stable_hash();
+        let (e, _) = cache.elaborated(&params).unwrap();
+        let d = saxpy_dfg();
+        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+
+        let words = e.machine.smem.as_ref().unwrap().words();
+        let image = vec![0.5f32; words];
+        let mut calls = 0u32;
+        let mut run = |img: &[f32], calls: &mut u32| {
+            cache
+                .sim_result(arch, d.stable_hash(), 7, img, || {
+                    *calls += 1;
+                    simulate(&m, &e.machine, img, 2_000_000)
+                })
+                .unwrap()
+        };
+        let (r1, hit1) = run(&image, &mut calls);
+        assert!(!hit1);
+        assert_eq!(calls, 1);
+        let (r2, hit2) = run(&image, &mut calls);
+        assert!(hit2, "same (arch, dfg, seed, image) must hit");
+        assert_eq!(calls, 1, "simulate() must not be re-entered on a hit");
+        assert!(Arc::ptr_eq(&r1, &r2));
+        assert_eq!(r1.cycles, r2.cycles);
+
+        // A different image misses (and actually simulates).
+        let mut image2 = image.clone();
+        image2[3] = -1.25;
+        let (_, hit3) = run(&image2, &mut calls);
+        assert!(!hit3);
+        assert_eq!(calls, 2);
+
+        let s = cache.stats();
+        assert_eq!(s.pass_counts("simulate"), (1, 2));
+        assert!((s.pass_hit_rate("simulate") - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.pass_hit_rate("nonexistent"), 0.0);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! carried through generate → compile → simulate → baseline.
 //!
 //! [`run_job`] executes the whole pipeline from scratch; [`run_job_cached`]
-//! is the sweep engine's path, sourcing elaboration and mapper artifacts
-//! from a shared [`ArtifactCache`] and reporting per-stage wall time plus
-//! cache traffic in a [`JobTiming`]. Both produce bit-identical
-//! [`JobResult`]s — artifacts are pure functions of their cache key.
+//! is the sweep engine's path, sourcing elaboration artifacts, mapper
+//! artifacts (shared as `Arc<Mapping>` — warm hits clone a pointer, not a
+//! mapping) and per-phase cycle-accurate [`crate::sim::SimResult`]s from a
+//! shared [`ArtifactCache`], reporting per-stage wall time plus cache
+//! traffic in a [`JobTiming`]. Both produce bit-identical [`JobResult`]s —
+//! artifacts are pure functions of their cache key.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,8 +17,9 @@ use crate::compiler::{compile, Mapping};
 use crate::diag::error::DiagError;
 use crate::model::baseline::{CpuModel, GpuModel};
 use crate::plugins;
+use crate::sim::engine::simulate;
 use crate::sim::machine::MachineDesc;
-use crate::sim::task::{run_task, Phase, Task};
+use crate::sim::task::{run_task, run_task_with, Phase, Task};
 use crate::util::Rng;
 use crate::workloads::{linalg, rl, signal, Layout};
 
@@ -187,10 +190,12 @@ pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
     run_job_cached(spec, None).map(|(r, _)| r)
 }
 
-/// Run one job, sourcing elaboration/mapper artifacts from `cache` when
-/// given. Produces the same [`JobResult`] as [`run_job`] (the cache only
-/// memoizes deterministic artifacts); the [`JobTiming`] reports where the
-/// wall time went and how often the cache answered.
+/// Run one job, sourcing elaboration/mapper artifacts *and per-phase
+/// simulation results* from `cache` when given. Produces the same
+/// [`JobResult`] as [`run_job`] (the cache only memoizes deterministic
+/// artifacts); the [`JobTiming`] reports where the wall time went and how
+/// often the cache answered. On a fully warm cache the job performs no
+/// elaboration, no compilation and no simulation.
 pub fn run_job_cached(
     spec: &JobSpec,
     cache: Option<&ArtifactCache>,
@@ -222,9 +227,10 @@ pub fn run_job_cached(
     timing.elaborate_ns = t0.elapsed().as_nanos() as u64;
     machine.validate()?;
 
-    // Compile every phase (cache key: arch hash × DFG hash × seed).
+    // Compile every phase (cache key: arch hash × DFG hash × seed). Hits
+    // alias the cached `Arc<Mapping>` — no deep clone on the warm path.
     let t0 = Instant::now();
-    let mut mappings: Vec<Mapping> = Vec::with_capacity(dfgs.len());
+    let mut mappings: Vec<Arc<Mapping>> = Vec::with_capacity(dfgs.len());
     for d in &dfgs {
         match cache {
             Some(c) => {
@@ -234,9 +240,9 @@ pub fn run_job_cached(
                 } else {
                     timing.cache_misses += 1;
                 }
-                mappings.push((*m).clone());
+                mappings.push(m);
             }
-            None => mappings.push(compile(d.clone(), machine, spec.seed)?),
+            None => mappings.push(Arc::new(compile(d.clone(), machine, spec.seed)?)),
         }
     }
     timing.compile_ns = t0.elapsed().as_nanos() as u64;
@@ -264,7 +270,32 @@ pub fn run_job_cached(
 
     let t0 = Instant::now();
     let mem0 = spec.workload.init_image(&layout, spec.seed, machine.smem.as_ref().unwrap().words());
-    let tr = run_task(&task, machine, &mem0, 4_000_000)?;
+    let tr = match cache {
+        Some(c) => {
+            // Per-phase SimResult memoization: key = (arch, DFG, seed,
+            // input-image hash). A warm sweep point never re-enters
+            // `simulate()` — each phase's result (including the output
+            // image the next phase chains from) answers from the cache.
+            let seed = spec.seed;
+            let mut sim_hits = 0u64;
+            let mut sim_misses = 0u64;
+            let tr = run_task_with(&task, machine, &mem0, 4_000_000, &mut |m, mc, img, maxc| {
+                let (r, hit) = c.sim_result(arch_hash, m.dfg.stable_hash(), seed, img, || {
+                    simulate(m, mc, img, maxc)
+                })?;
+                if hit {
+                    sim_hits += 1;
+                } else {
+                    sim_misses += 1;
+                }
+                Ok(r)
+            })?;
+            timing.cache_hits += sim_hits;
+            timing.cache_misses += sim_misses;
+            tr
+        }
+        None => run_task(&task, machine, &mem0, 4_000_000)?,
+    };
     let wm_time_ns = tr.time_ns(machine);
     timing.simulate_ns = t0.elapsed().as_nanos() as u64;
 

@@ -141,6 +141,13 @@ impl SweepReport {
         self.cache.hit_rate()
     }
 
+    /// Hit rate of the sweep-level simulation-result cache alone (the
+    /// `simulate` pass): 1.0 on a warm re-run means the sweep performed
+    /// zero `simulate()` calls.
+    pub fn sim_hit_rate(&self) -> f64 {
+        self.cache.pass_hit_rate(crate::compiler::CompilePass::Simulate.name())
+    }
+
     /// Fastest point on the workload (min `wm_time_ns`).
     pub fn best_performance(&self) -> Option<&SweepPoint> {
         self.points
@@ -175,14 +182,18 @@ impl SweepReport {
 
     /// One-line cache/timing summary for logs and benches.
     pub fn summary(&self) -> String {
+        let (sim_h, sim_m) = self.cache.pass_counts("simulate");
         format!(
-            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%) | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
+            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%) | sim cache {}/{} hits ({:.0}%) | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
             self.points.len(),
             self.failures.len(),
             self.wall_ns as f64 / 1e6,
             self.cache.hits,
             self.cache.lookups(),
             100.0 * self.cache.hit_rate(),
+            sim_h,
+            sim_h + sim_m,
+            100.0 * self.sim_hit_rate(),
             self.timing.elaborate_ns as f64 / 1e6,
             self.timing.compile_ns as f64 / 1e6,
             self.timing.simulate_ns as f64 / 1e6,

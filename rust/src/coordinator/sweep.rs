@@ -3,9 +3,12 @@
 //! [`SweepEngine`] is the long-lived front door for design-space
 //! exploration. One engine owns a shared [`ArtifactCache`] and a worker
 //! count; every submission — a [`ParamGrid`] sweep or a plain job batch —
-//! fans out over the FIFO pool ([`super::pool`]) and memoizes elaboration
-//! and mapper artifacts across points, so sweep points that share a
-//! dimension (same architecture, same kernel, same seed) pay for it once.
+//! fans out over the FIFO pool ([`super::pool`]) and memoizes elaboration,
+//! mapper artifacts *and per-phase simulation results* across points, so
+//! sweep points that share a dimension (same architecture, same kernel,
+//! same seed, same input image) pay for it once. A fully warm re-run
+//! recomputes nothing: mappings come back as shared `Arc`s and
+//! `simulate()` is never entered (`SweepReport::sim_hit_rate` = 1.0).
 //!
 //! ```no_run
 //! use windmill::arch::params::ParamGrid;
@@ -228,12 +231,16 @@ mod tests {
         // A cold sweep over distinct architectures is all misses — the PPA
         // relabel is deliberately not counted, so hit rates stay honest.
         assert_eq!(r1.cache.hits, 0, "{:?}", r1.cache);
-        assert!(r1.cache.misses >= 4, "{:?}", r1.cache);
+        assert!(r1.cache.misses >= 6, "elab+mapping+sim per point: {:?}", r1.cache);
+        assert_eq!(r1.sim_hit_rate(), 0.0, "{:?}", r1.cache);
 
         // Warm re-run: everything cacheable answers from the cache and the
-        // numbers are bit-identical.
+        // numbers are bit-identical. The simulate pass in particular has
+        // zero misses — `simulate()` is never re-entered.
         let r2 = engine.sweep(&grid, &wl);
         assert!(r2.cache_hit_rate() > 0.99, "{:?}", r2.cache);
+        assert_eq!(r2.sim_hit_rate(), 1.0, "{:?}", r2.cache);
+        assert_eq!(r2.cache.pass_counts("simulate").1, 0, "{:?}", r2.cache);
         let key = |r: &SweepReport| -> Vec<(String, u64)> {
             r.points.iter().map(|p| (p.label.clone(), p.cycles)).collect()
         };
@@ -270,8 +277,9 @@ mod tests {
         let results = engine.run_jobs(specs);
         assert!(results.iter().all(Result::is_ok));
         let stats = engine.cache_stats();
-        // Every job performs one elaboration lookup and one mapping lookup.
-        assert_eq!(stats.lookups(), 8, "{stats:?}");
+        // Every job performs one elaboration, one mapping and one
+        // simulation lookup.
+        assert_eq!(stats.lookups(), 12, "{stats:?}");
         // The two late jobs run after at least one early job fully
         // finished, so ≥3 lookups must be hits even under worst-case races
         // (concurrent cold misses may duplicate work but never corrupt it).

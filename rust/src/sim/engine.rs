@@ -10,11 +10,24 @@
 //! * loads/stores go through the banked shared memory and its per-bank
 //!   round-robin PAI ([`super::smem`]), so bank conflicts and arbitration
 //!   stalls emerge rather than being estimated;
-//! * source nodes run ahead at most [`Engine::WINDOW`] iterations
-//!   (bounded token queues = the PE input latch depth).
+//! * source nodes run ahead at most [`iteration_window`] iterations
+//!   (bounded token queues = the PE input latch depth, sized from the
+//!   elaborated machine).
 //!
 //! Numerics use [`Op::eval`] in the same per-iteration order as the DFG
 //! reference interpreter, so simulated memory must match it bit-for-bit.
+//!
+//! This is the **fast path** of every design-space sweep (EXPERIMENTS.md
+//! §Perf): the steady-state cycle loop performs no heap allocation —
+//! in-flight deliveries live in a fixed-horizon calendar queue of reusable
+//! slot Vecs, consumer adjacency is a CSR layout with the per-edge delay
+//! (op latency + route hops) precomputed, operand reads are fixed
+//! two-slot pops instead of collected Vecs, finished nodes leave the
+//! active worklist so long tails do not rescan them, and memory responses
+//! drain into one reusable buffer ([`super::smem::SmemSim::tick_into`]).
+//! The pre-optimization implementation is frozen in [`super::reference`]
+//! as the executable semantic specification; `tests/engine_equivalence.rs`
+//! pins this engine to it cycle-for-cycle.
 
 use std::collections::VecDeque;
 
@@ -23,7 +36,7 @@ use crate::compiler::dfg::{Access, NodeKind};
 use crate::compiler::Mapping;
 use crate::diag::error::DiagError;
 use crate::sim::machine::MachineDesc;
-use crate::sim::smem::{MemReq, SmemSim, SmemStats};
+use crate::sim::smem::{MemReq, MemResp, SmemSim, SmemStats};
 
 /// Result of simulating one kernel.
 #[derive(Debug, Clone)]
@@ -40,17 +53,58 @@ pub struct SimResult {
     pub measured_ii: f64,
 }
 
-#[derive(Debug, Clone)]
+/// Iterations a source node may run ahead of the slowest store on this
+/// machine: twice the effective context-memory depth (the ICB's
+/// iteration-credit bound — a PE can latch operands for as many pending
+/// control steps as its context holds, double-buffered). The standard
+/// preset elaborates to the historical window of 64.
+pub fn iteration_window(machine: &MachineDesc) -> u64 {
+    (2 * machine.context_depth as u64).max(8)
+}
+
+/// Max outstanding memory requests per LSU node on this machine: one MSHR
+/// per four shared-memory banks keeps the per-bank PAI queues bounded
+/// (the standard 16-bank preset elaborates to the historical 4).
+pub fn lsu_mshrs(machine: &MachineDesc) -> u32 {
+    match &machine.smem {
+        Some(sm) => ((sm.banks as u32) / 4).clamp(1, 8),
+        None => 1,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
 struct Token {
     iter: u64,
     value: f32,
 }
 
+/// One in-flight operand delivery, parked in the calendar queue until its
+/// due cycle.
+#[derive(Debug, Clone, Copy)]
+struct Delivery {
+    dst: u32,
+    slot: u8,
+    iter: u64,
+    value: f32,
+}
+
+/// One CSR consumer edge: destination node, operand slot, and the total
+/// delivery delay (producer op latency + route hops) precomputed so the
+/// hot loop never touches the route table or the latency table.
+#[derive(Debug, Clone, Copy)]
+struct ConsEdge {
+    dst: u32,
+    slot: u8,
+    delay: u32,
+}
+
 #[derive(Debug)]
 struct NodeState {
-    /// One queue per DFG input edge.
-    inq: Vec<VecDeque<Token>>,
-    /// Next iteration a source node will emit.
+    /// Fixed two-operand input queues (DFG nodes have ≤ 2 data inputs;
+    /// enforced in [`Engine::new`]). Only the first `n_inputs` are live.
+    inq: [VecDeque<Token>; 2],
+    n_inputs: u8,
+    /// Next iteration a source node will emit / a consumer will accept.
     next_iter: u64,
     /// Accumulator state.
     acc: f32,
@@ -90,31 +144,49 @@ impl NodeState {
 
 pub struct Engine<'a> {
     mapping: &'a Mapping,
-    #[allow(dead_code)]
-    machine: &'a MachineDesc,
     smem: SmemSim,
     nodes: Vec<NodeState>,
-    /// In-flight deliveries bucketed by due cycle (perf: replaces a linear
-    /// scan of a flat event list every cycle — see EXPERIMENTS.md §Perf).
-    event_buckets: std::collections::BTreeMap<u64, Vec<(usize, usize, Token)>>,
-    /// Precomputed consumer adjacency: node -> [(dst, slot, hops)].
-    consumers: Vec<Vec<(usize, usize, u64)>>,
+    /// Fixed-horizon calendar queue: deliveries due at cycle `c` live in
+    /// `calendar[c % horizon]`. The horizon exceeds the largest possible
+    /// delivery delay, so a slot never holds two distinct due cycles and
+    /// every slot Vec is drained (and its allocation reused) once per
+    /// `horizon` cycles — this replaces the `BTreeMap<u64, Vec<..>>`
+    /// bucket map whose nodes were allocated and freed every cycle.
+    calendar: Vec<Vec<Delivery>>,
+    horizon: u64,
+    /// CSR consumer adjacency: node `i`'s consumers are
+    /// `cons[cons_idx[i] .. cons_idx[i+1]]`.
+    cons_idx: Vec<u32>,
+    cons: Vec<ConsEdge>,
+    /// Nodes still producing/consuming iterations, ascending id order.
+    /// Finished nodes retire so the per-cycle fire scan skips them.
+    active: Vec<u32>,
     cycle: u64,
     /// Completed iterations per store node (min over stores = frontier).
     expected_commits: Vec<(usize, u64)>,
+    /// [`iteration_window`] of the machine this engine was built for.
+    window: u64,
+    /// [`lsu_mshrs`] of the machine this engine was built for.
+    mshrs: u32,
+    total_iters: u64,
 }
 
 impl<'a> Engine<'a> {
-    /// Max iterations a source may run ahead of the slowest store.
-    pub const WINDOW: u64 = 64;
-    /// Max outstanding memory requests per LSU node.
-    pub const MSHRS: u32 = 4;
-
     pub fn new(
         mapping: &'a Mapping,
-        machine: &'a MachineDesc,
+        machine: &MachineDesc,
         mem_image: &[f32],
     ) -> Result<Self, DiagError> {
+        let total_iters = mapping.dfg.total_iters();
+        // The memory tag packs (node, iteration) as 32+32 bits; iteration
+        // ids at or beyond 2^32 would silently alias, so such nests are
+        // rejected up front instead of corrupting load/store matching.
+        if total_iters >= (1u64 << 32) {
+            return Err(DiagError::InvalidParams(format!(
+                "sim `{}`: {} iterations exceed the 32-bit iteration tag",
+                mapping.dfg.name, total_iters
+            )));
+        }
         let sm_desc = machine
             .smem
             .as_ref()
@@ -126,85 +198,113 @@ impl<'a> Engine<'a> {
         );
         smem.load_image(0, mem_image)?;
         let ndims = mapping.dfg.dims.len();
-        let nodes = mapping
-            .dfg
-            .nodes
-            .iter()
-            .map(|n| {
-                let (addr, coefs, idx) = match &n.kind {
-                    NodeKind::Load(Access::Affine { base, coefs })
-                    | NodeKind::Store { access: Access::Affine { base, coefs }, .. } => {
-                        (*base as i64, coefs.clone(), vec![0u32; ndims])
-                    }
-                    NodeKind::Index(_) => (0, Vec::new(), vec![0u32; ndims]),
-                    _ => (0, Vec::new(), Vec::new()),
-                };
-                NodeState {
-                    inq: n.inputs.iter().map(|_| VecDeque::new()).collect(),
-                    next_iter: 0,
-                    acc: n.imm,
-                    outstanding: 0,
-                    commits: 0,
-                    fires: 0,
-                    idx,
-                    addr,
-                    coefs,
+        let n = mapping.dfg.nodes.len();
+        let mut nodes = Vec::with_capacity(n);
+        for (i, nd) in mapping.dfg.nodes.iter().enumerate() {
+            if nd.inputs.len() > 2 {
+                return Err(DiagError::InvalidParams(format!(
+                    "sim `{}`: node {i} has {} operands (PEs latch at most 2)",
+                    mapping.dfg.name,
+                    nd.inputs.len()
+                )));
+            }
+            let (addr, coefs, idx) = match &nd.kind {
+                NodeKind::Load(Access::Affine { base, coefs })
+                | NodeKind::Store { access: Access::Affine { base, coefs }, .. } => {
+                    (*base as i64, coefs.clone(), vec![0u32; ndims])
                 }
-            })
-            .collect();
+                NodeKind::Index(_) => (0, Vec::new(), vec![0u32; ndims]),
+                _ => (0, Vec::new(), Vec::new()),
+            };
+            nodes.push(NodeState {
+                inq: [VecDeque::new(), VecDeque::new()],
+                n_inputs: nd.inputs.len() as u8,
+                next_iter: 0,
+                acc: nd.imm,
+                outstanding: 0,
+                commits: 0,
+                fires: 0,
+                idx,
+                addr,
+                coefs,
+            });
+        }
         let expected_commits = mapping
             .dfg
             .nodes
             .iter()
             .enumerate()
-            .filter_map(|(i, n)| match &n.kind {
-                NodeKind::Store { period, .. } => {
-                    Some((i, mapping.dfg.total_iters() / *period as u64))
-                }
+            .filter_map(|(i, nd)| match &nd.kind {
+                NodeKind::Store { period, .. } => Some((i, total_iters / *period as u64)),
                 _ => None,
             })
             .collect();
-        // Precompute consumer adjacency with per-edge route hop latency.
-        let mut consumers: Vec<Vec<(usize, usize, u64)>> =
-            vec![Vec::new(); mapping.dfg.nodes.len()];
-        for (dst, n) in mapping.dfg.nodes.iter().enumerate() {
-            for (slot, &src) in n.inputs.iter().enumerate() {
-                let hops =
-                    mapping.routes.for_edge(src, dst).map(|r| r.hops() as u64).unwrap_or(0);
-                consumers[src].push((dst, slot, hops));
+        // CSR consumer adjacency with per-edge total delay. Entries for one
+        // producer appear in ascending consumer-node order — the same
+        // delivery order the reference engine's Vec-of-Vecs produces.
+        let mut cons_idx = vec![0u32; n + 1];
+        for nd in &mapping.dfg.nodes {
+            for &src in &nd.inputs {
+                cons_idx[src + 1] += 1;
             }
         }
+        for i in 0..n {
+            cons_idx[i + 1] += cons_idx[i];
+        }
+        let mut cons = vec![ConsEdge { dst: 0, slot: 0, delay: 0 }; cons_idx[n] as usize];
+        let mut fill = cons_idx.clone();
+        for (dst, nd) in mapping.dfg.nodes.iter().enumerate() {
+            for (slot, &src) in nd.inputs.iter().enumerate() {
+                let hops =
+                    mapping.routes.for_edge(src, dst).map(|r| r.hops()).unwrap_or(0);
+                let delay = mapping.dfg.nodes[src].op.latency() + hops;
+                cons[fill[src] as usize] =
+                    ConsEdge { dst: dst as u32, slot: slot as u8, delay };
+                fill[src] += 1;
+            }
+        }
+        // Horizon: strictly above the largest delivery delay, so slot
+        // `c % horizon` can only ever hold cycle-`c` deliveries.
+        let horizon = cons.iter().map(|e| e.delay).max().unwrap_or(1).max(1) as u64 + 1;
         Ok(Engine {
             mapping,
-            machine,
             smem,
             nodes,
-            event_buckets: Default::default(),
-            consumers,
+            calendar: (0..horizon).map(|_| Vec::new()).collect(),
+            horizon,
+            cons_idx,
+            cons,
+            active: (0..n as u32).collect(),
             cycle: 0,
             expected_commits,
+            window: iteration_window(machine),
+            mshrs: lsu_mshrs(machine),
+            total_iters,
         })
     }
 
     /// True when every input queue of `node` holds iteration `expect` at
     /// its head (queues are kept iteration-sorted each cycle).
     fn heads_at(&self, node: usize, expect: u64) -> bool {
-        !self.nodes[node].inq.is_empty()
-            && self.nodes[node]
-                .inq
+        let ns = &self.nodes[node];
+        ns.n_inputs > 0
+            && ns.inq[..ns.n_inputs as usize]
                 .iter()
                 .all(|q| q.front().is_some_and(|t| t.iter == expect))
     }
 
     /// Deliver a node's result for iteration `iter` to all consumers.
     fn broadcast(&mut self, node: usize, iter: u64, value: f32) {
-        let lat = self.mapping.dfg.nodes[node].op.latency() as u64;
-        for k in 0..self.consumers[node].len() {
-            let (dst, slot, hops) = self.consumers[node][k];
-            self.event_buckets
-                .entry(self.cycle + lat + hops)
-                .or_default()
-                .push((dst, slot, Token { iter, value }));
+        let (s, e) = (self.cons_idx[node] as usize, self.cons_idx[node + 1] as usize);
+        for k in s..e {
+            let edge = self.cons[k];
+            let due_slot = ((self.cycle + edge.delay as u64) % self.horizon) as usize;
+            self.calendar[due_slot].push(Delivery {
+                dst: edge.dst,
+                slot: edge.slot,
+                iter,
+                value,
+            });
         }
     }
 
@@ -225,11 +325,14 @@ impl<'a> Engine<'a> {
 
     /// Run to completion. `max_cycles` guards against deadlock bugs.
     pub fn run(mut self, max_cycles: u64) -> Result<SimResult, DiagError> {
-        let total_iters = self.mapping.dfg.total_iters();
+        let total_iters = self.total_iters;
         let n = self.mapping.dfg.nodes.len();
         let mut inflight_sum = 0.0f64;
         let mut steady_start_cycle = None;
         let mut steady_start_frontier = 0;
+        // One response buffer for the whole run (the old API returned a
+        // fresh Vec per cycle).
+        let mut resp_buf: Vec<MemResp> = Vec::new();
 
         while !self.done() {
             if self.cycle >= max_cycles {
@@ -240,7 +343,9 @@ impl<'a> Engine<'a> {
             }
 
             // 1. Memory completes.
-            for resp in self.smem.tick() {
+            resp_buf.clear();
+            self.smem.tick_into(&mut resp_buf);
+            for resp in &resp_buf {
                 if resp.write {
                     continue; // store committed at grant time (counted then)
                 }
@@ -250,38 +355,53 @@ impl<'a> Engine<'a> {
                 self.broadcast(node, iter, resp.value);
             }
 
-            // 2. Deliver due route events, keeping each queue iteration-
-            // sorted by insertion (queues are short; memory responses are
-            // the only out-of-order producers).
-            while let Some((&due, _)) = self.event_buckets.first_key_value() {
-                if due > self.cycle {
-                    break;
-                }
-                let (_, batch) = self.event_buckets.pop_first().unwrap();
-                for (dst, slot, tok) in batch {
-                    let q = &mut self.nodes[dst].inq[slot];
-                    if q.back().map_or(true, |t| t.iter < tok.iter) {
-                        q.push_back(tok);
-                    } else {
-                        let pos = q.partition_point(|t| t.iter < tok.iter);
-                        q.insert(pos, tok);
-                    }
+            // 2. Deliver this cycle's calendar slot, keeping each queue
+            // iteration-sorted by insertion (queues are short; memory
+            // responses are the only out-of-order producers). The slot Vec
+            // is taken out and put back so its allocation is reused; no
+            // delivery ever lands in the current slot (delay ≥ 1 and
+            // < horizon), so pushes during step 1/3 cannot race this drain.
+            let slot = (self.cycle % self.horizon) as usize;
+            let mut batch = std::mem::take(&mut self.calendar[slot]);
+            for d in batch.drain(..) {
+                let q = &mut self.nodes[d.dst as usize].inq[d.slot as usize];
+                let tok = Token { iter: d.iter, value: d.value };
+                if q.back().map_or(true, |t| t.iter < tok.iter) {
+                    q.push_back(tok);
+                } else {
+                    let pos = q.partition_point(|t| t.iter < tok.iter);
+                    q.insert(pos, tok);
                 }
             }
+            debug_assert!(self.calendar[slot].is_empty());
+            self.calendar[slot] = batch;
 
-            // 3. Fire PEs (deterministic node order; one fire per node).
+            // 3. Fire PEs (deterministic ascending node order; one fire per
+            // node) — only nodes that still have iterations to process.
             let frontier = self.commit_frontier();
-            for node in 0..n {
+            for i in 0..self.active.len() {
+                let node = self.active[i] as usize;
                 self.step_node(node, total_iters, frontier)?;
             }
+            {
+                let nodes = &self.nodes;
+                self.active.retain(|&a| nodes[a as usize].next_iter < total_iters);
+            }
 
-            inflight_sum += (self
-                .nodes
-                .iter()
-                .map(|s| s.next_iter)
-                .max()
-                .unwrap_or(0)
-                .saturating_sub(frontier)) as f64;
+            // Furthest-ahead iteration: once any node has finished, the
+            // lead is the full iteration count (a finished node's
+            // `next_iter` equals `total_iters` — what the max over all
+            // nodes used to report).
+            let lead = if self.active.len() < n {
+                total_iters
+            } else {
+                self.active
+                    .iter()
+                    .map(|&a| self.nodes[a as usize].next_iter)
+                    .max()
+                    .unwrap_or(0)
+            };
+            inflight_sum += lead.saturating_sub(frontier) as f64;
 
             // Steady-state II measurement: between 25% and 100% of commits.
             if steady_start_cycle.is_none() && frontier >= total_iters / 4 {
@@ -295,7 +415,8 @@ impl<'a> Engine<'a> {
         // Drain the bank pipeline: commits were counted at submit time but
         // the writes land one grant + one completion cycle later.
         while !self.smem.idle() {
-            self.smem.tick();
+            resp_buf.clear();
+            self.smem.tick_into(&mut resp_buf);
             self.cycle += 1;
         }
 
@@ -329,7 +450,7 @@ impl<'a> Engine<'a> {
         match &mapping.dfg.nodes[node].kind {
             NodeKind::Const | NodeKind::Index(_) => {
                 let iter = self.nodes[node].next_iter;
-                if iter < total_iters && iter < frontier + Self::WINDOW {
+                if iter < total_iters && iter < frontier + self.window {
                     let value = match mapping.dfg.nodes[node].kind {
                         NodeKind::Const => mapping.dfg.nodes[node].imm,
                         NodeKind::Index(d) => self.nodes[node].idx[d] as f32,
@@ -343,13 +464,12 @@ impl<'a> Engine<'a> {
                     self.broadcast(node, iter, value);
                 }
             }
-            NodeKind::Load(Access::Affine { base, coefs }) => {
+            NodeKind::Load(Access::Affine { .. }) => {
                 let iter = self.nodes[node].next_iter;
                 if iter < total_iters
-                    && iter < frontier + Self::WINDOW
-                    && self.nodes[node].outstanding < Self::MSHRS
+                    && iter < frontier + self.window
+                    && self.nodes[node].outstanding < self.mshrs
                 {
-                    let _ = (base, coefs);
                     let addr = self.nodes[node].addr as usize;
                     self.nodes[node].advance_addr(&mapping.dfg.dims);
                     self.smem.submit(MemReq {
@@ -366,7 +486,7 @@ impl<'a> Engine<'a> {
             }
             NodeKind::Load(Access::Indirect { .. }) => {
                 // Address arrives as input 0; issue strictly in order.
-                if self.nodes[node].outstanding < Self::MSHRS
+                if self.nodes[node].outstanding < self.mshrs
                     && self.heads_at(node, self.nodes[node].next_iter)
                 {
                     let tok = self.nodes[node].inq[0].pop_front().unwrap();
@@ -388,14 +508,13 @@ impl<'a> Engine<'a> {
                 // operand queues must hold the *expected* iteration at head.
                 let expect = self.nodes[node].next_iter;
                 if self.heads_at(node, expect) {
-                    let toks: Vec<Token> = self.nodes[node]
-                        .inq
-                        .iter_mut()
-                        .map(|q| q.pop_front().unwrap())
-                        .collect();
-                    let a = toks.first().map(|t| t.value).unwrap_or(0.0);
-                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
-                    let v = op.eval(a, b, self.mapping.dfg.nodes[node].imm);
+                    let a = self.nodes[node].inq[0].pop_front().unwrap().value;
+                    let b = if self.nodes[node].n_inputs > 1 {
+                        self.nodes[node].inq[1].pop_front().unwrap().value
+                    } else {
+                        0.0
+                    };
+                    let v = op.eval(a, b, mapping.dfg.nodes[node].imm);
                     self.nodes[node].next_iter = expect + 1;
                     self.nodes[node].fires += 1;
                     self.broadcast(node, expect, v);
@@ -404,17 +523,17 @@ impl<'a> Engine<'a> {
             NodeKind::Accum { reset_period } => {
                 // Accumulators must consume iterations in order.
                 if self.heads_at(node, self.nodes[node].next_iter) {
-                    let toks: Vec<Token> = self.nodes[node]
-                        .inq
-                        .iter_mut()
-                        .map(|q| q.pop_front().unwrap())
-                        .collect();
-                    let iter = toks[0].iter;
+                    let t0 = self.nodes[node].inq[0].pop_front().unwrap();
+                    let b = if self.nodes[node].n_inputs > 1 {
+                        self.nodes[node].inq[1].pop_front().unwrap().value
+                    } else {
+                        0.0
+                    };
+                    let iter = t0.iter;
                     if iter % *reset_period as u64 == 0 {
-                        self.nodes[node].acc = self.mapping.dfg.nodes[node].imm;
+                        self.nodes[node].acc = mapping.dfg.nodes[node].imm;
                     }
-                    let a = toks[0].value;
-                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
+                    let a = t0.value;
                     let st = self.nodes[node].acc;
                     let v = match op {
                         Op::Mac => op.eval(a, b, st),
@@ -427,15 +546,16 @@ impl<'a> Engine<'a> {
                 }
             }
             NodeKind::Store { access, period } => {
-                if self.nodes[node].outstanding < Self::MSHRS
+                if self.nodes[node].outstanding < self.mshrs
                     && self.heads_at(node, self.nodes[node].next_iter)
                 {
-                    let toks: Vec<Token> = self.nodes[node]
-                        .inq
-                        .iter_mut()
-                        .map(|q| q.pop_front().unwrap())
-                        .collect();
-                    let iter = toks[0].iter;
+                    let t0 = self.nodes[node].inq[0].pop_front().unwrap();
+                    let addr_in = if self.nodes[node].n_inputs > 1 {
+                        Some(self.nodes[node].inq[1].pop_front().unwrap().value)
+                    } else {
+                        None
+                    };
+                    let iter = t0.iter;
                     self.nodes[node].next_iter = iter + 1;
                     let phase = iter % *period as u64;
                     let gen_addr = self.nodes[node].addr as usize;
@@ -445,13 +565,13 @@ impl<'a> Engine<'a> {
                     if phase == *period as u64 - 1 {
                         let addr = match &access {
                             Access::Affine { .. } => gen_addr,
-                            Access::Indirect { .. } => toks[1].value as usize,
+                            Access::Indirect { .. } => addr_in.unwrap() as usize,
                         };
                         self.smem.submit(MemReq {
                             requester: node,
                             addr,
                             write: true,
-                            wdata: toks[0].value,
+                            wdata: t0.value,
                             tag: ((node as u64) << 32) | iter,
                         })?;
                         // Commit counted at grant; simple model: count now,
@@ -647,5 +767,60 @@ mod tests {
         let res = simulate(&mapping, &m, &vec![1.0f32; 256], 1_000_000).unwrap();
         assert!(res.avg_parallelism > 1.0, "{}", res.avg_parallelism);
         assert!(res.measured_ii < 4.0, "{}", res.measured_ii);
+    }
+
+    #[test]
+    fn window_and_mshrs_are_sized_from_the_machine() {
+        // Standard preset: context depth 32 (MCMD) → window 64; 16 banks →
+        // 4 MSHRs — exactly the historical hard-coded constants, so cycle
+        // counts are unchanged on the reference architecture.
+        let m = machine();
+        assert_eq!(iteration_window(&m), 64);
+        assert_eq!(lsu_mshrs(&m), 4);
+        // Degenerate machines stay simulable.
+        let mut tiny = m.clone();
+        tiny.context_depth = 1;
+        tiny.smem.as_mut().unwrap().banks = 1;
+        assert_eq!(iteration_window(&tiny), 8);
+        assert_eq!(lsu_mshrs(&tiny), 1);
+    }
+
+    #[test]
+    fn iteration_tag_overflow_is_rejected() {
+        // 2^32 iterations would alias the 32-bit iteration tag.
+        let m = machine();
+        let mut d = Dfg::new("huge", vec![1 << 16, 1 << 16]);
+        let x = d.load_affine(0, vec![0, 0]);
+        d.store_affine(x, 1, vec![0, 0], 1);
+        let mapping = compile(d, &m, 1).unwrap();
+        let err = simulate(&mapping, &m, &[0.0f32; 16], 10).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("iteration tag"), "{err}");
+        // One iteration fewer than the cap is accepted (construction only;
+        // running it would take forever).
+        let mut ok = Dfg::new("under", vec![1 << 16, 1 << 15]);
+        let x = ok.load_affine(0, vec![0, 0]);
+        ok.store_affine(x, 1, vec![0, 0], 1);
+        let mapping_ok = compile(ok, &m, 1).unwrap();
+        assert!(Engine::new(&mapping_ok, &m, &[0.0f32; 16]).is_ok());
+    }
+
+    #[test]
+    fn calendar_horizon_covers_every_edge_delay() {
+        let m = machine();
+        let mut d = Dfg::new("sfu-chain", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        let t = d.unary(Op::Tanh, x); // SFU latency 4
+        let e = d.unary(Op::Exp, t);
+        d.store_affine(e, 8, vec![1], 1);
+        let mapping = compile(d, &m, 2).unwrap();
+        let engine = Engine::new(&mapping, &m, &[0.5f32; 64]).unwrap();
+        let max_delay = engine.cons.iter().map(|c| c.delay as u64).max().unwrap();
+        assert!(engine.horizon > max_delay, "{} vs {}", engine.horizon, max_delay);
+        assert_eq!(engine.calendar.len() as u64, engine.horizon);
+        // CSR covers every DFG edge exactly once.
+        let n_edges: usize =
+            mapping.dfg.nodes.iter().map(|nd| nd.inputs.len()).sum();
+        assert_eq!(engine.cons.len(), n_edges);
+        assert_eq!(engine.cons_idx[engine.cons_idx.len() - 1] as usize, n_edges);
     }
 }

@@ -2,13 +2,17 @@
 //!
 //! * [`machine`] — the elaborated architecture description (DIAG artifact).
 //! * [`smem`] — banked shared memory behind the round-robin PAI.
-//! * [`engine`] — token-dataflow cycle simulation of one mapped kernel.
+//! * [`engine`] — token-dataflow cycle simulation of one mapped kernel
+//!   (the allocation-free fast path of every sweep).
+//! * [`reference`] — the frozen pre-optimization engine: executable
+//!   semantic specification + throughput-bench baseline.
 //! * [`task`] — multi-phase task execution: host launch protocol, DMA
 //!   (ping-pong overlap), CPE relaunch, RCA-ring pipelining.
 //! * [`scalar`] — the in-order host-CPU baseline executor.
 
 pub mod engine;
 pub mod machine;
+pub mod reference;
 pub mod scalar;
 pub mod smem;
 pub mod task;

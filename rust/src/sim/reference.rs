@@ -1,0 +1,489 @@
+//! The frozen **pre-optimization** cycle-accurate engine.
+//!
+//! This module preserves the *data structures and control flow* of
+//! [`super::engine`] as it stood before the hot-loop perf pass
+//! (EXPERIMENTS.md §Perf): `BTreeMap` event buckets, Vec-of-Vecs consumer
+//! adjacency, per-fire `Vec<Token>` operand collection, a full node scan
+//! every cycle and a fresh `Vec<MemResp>` per memory tick. It is
+//! deliberately kept *slow* and *simple* — it serves as
+//!
+//! 1. the **executable semantic specification**: the optimized engine must
+//!    produce identical results *and identical cycle counts* (pinned by
+//!    `tests/engine_equivalence.rs` over randomized kernels), and
+//! 2. the **baseline** for `benches/sim_throughput.rs`, which measures the
+//!    optimized engine's simulated-cycles/sec against this one.
+//!
+//! Two behavioural deltas vs the literal pre-refactor code were applied
+//! to *both* engines so they stay comparable on any machine (not a
+//! byte-level freeze):
+//!
+//! * the iteration window / LSU MSHR count come from the shared
+//!   [`iteration_window`]/[`lsu_mshrs`] derivation instead of the old
+//!   hard-coded `WINDOW = 64`/`MSHRS = 4` consts — on the standard
+//!   preset these evaluate to exactly 64/4, so standard-machine cycle
+//!   counts equal the true pre-refactor engine's; on other machines both
+//!   engines move together;
+//! * the ≥ 2^32-iteration tag-overflow guard (previously silent
+//!   corruption) rejects up front.
+//!
+//! Do not optimize this file; fix semantic bugs in both engines.
+
+use std::collections::VecDeque;
+
+use crate::arch::isa::Op;
+use crate::compiler::dfg::{Access, NodeKind};
+use crate::compiler::Mapping;
+use crate::diag::error::DiagError;
+use crate::sim::engine::{iteration_window, lsu_mshrs, SimResult};
+use crate::sim::machine::MachineDesc;
+use crate::sim::smem::{MemReq, SmemSim};
+
+#[derive(Debug, Clone)]
+struct Token {
+    iter: u64,
+    value: f32,
+}
+
+#[derive(Debug)]
+struct NodeState {
+    /// One queue per DFG input edge.
+    inq: Vec<VecDeque<Token>>,
+    /// Next iteration a source node will emit.
+    next_iter: u64,
+    /// Accumulator state.
+    acc: f32,
+    /// Outstanding memory requests (LSU MSHRs).
+    outstanding: u32,
+    /// Stores committed.
+    commits: u64,
+    fires: u64,
+    /// Incremental affine address generator state.
+    idx: Vec<u32>,
+    addr: i64,
+    coefs: Vec<i32>,
+}
+
+impl NodeState {
+    fn advance_addr(&mut self, dims: &[u32]) {
+        for d in (0..dims.len()).rev() {
+            self.idx[d] += 1;
+            if d < self.coefs.len() {
+                self.addr += self.coefs[d] as i64;
+            }
+            if self.idx[d] < dims[d] {
+                return;
+            }
+            self.idx[d] = 0;
+            if d < self.coefs.len() {
+                self.addr -= dims[d] as i64 * self.coefs[d] as i64;
+            }
+        }
+    }
+}
+
+pub struct ReferenceEngine<'a> {
+    mapping: &'a Mapping,
+    smem: SmemSim,
+    nodes: Vec<NodeState>,
+    /// In-flight deliveries bucketed by due cycle — the pre-refactor
+    /// structure the optimized engine's calendar queue replaced.
+    event_buckets: std::collections::BTreeMap<u64, Vec<(usize, usize, Token)>>,
+    /// Precomputed consumer adjacency: node -> [(dst, slot, hops)].
+    consumers: Vec<Vec<(usize, usize, u64)>>,
+    cycle: u64,
+    /// Completed iterations per store node (min over stores = frontier).
+    expected_commits: Vec<(usize, u64)>,
+    window: u64,
+    mshrs: u32,
+}
+
+impl<'a> ReferenceEngine<'a> {
+    pub fn new(
+        mapping: &'a Mapping,
+        machine: &MachineDesc,
+        mem_image: &[f32],
+    ) -> Result<Self, DiagError> {
+        // Same iteration-tag guard as the optimized engine.
+        if mapping.dfg.total_iters() >= (1u64 << 32) {
+            return Err(DiagError::InvalidParams(format!(
+                "sim `{}`: {} iterations exceed the 32-bit iteration tag",
+                mapping.dfg.name,
+                mapping.dfg.total_iters()
+            )));
+        }
+        let sm_desc = machine
+            .smem
+            .as_ref()
+            .ok_or_else(|| DiagError::InvalidParams("machine has no shared memory".into()))?;
+        let mut smem = SmemSim::new(
+            sm_desc.banks,
+            sm_desc.depth,
+            mapping.dfg.nodes.len().max(sm_desc.pai_requesters),
+        );
+        smem.load_image(0, mem_image)?;
+        let ndims = mapping.dfg.dims.len();
+        let nodes = mapping
+            .dfg
+            .nodes
+            .iter()
+            .map(|n| {
+                let (addr, coefs, idx) = match &n.kind {
+                    NodeKind::Load(Access::Affine { base, coefs })
+                    | NodeKind::Store { access: Access::Affine { base, coefs }, .. } => {
+                        (*base as i64, coefs.clone(), vec![0u32; ndims])
+                    }
+                    NodeKind::Index(_) => (0, Vec::new(), vec![0u32; ndims]),
+                    _ => (0, Vec::new(), Vec::new()),
+                };
+                NodeState {
+                    inq: n.inputs.iter().map(|_| VecDeque::new()).collect(),
+                    next_iter: 0,
+                    acc: n.imm,
+                    outstanding: 0,
+                    commits: 0,
+                    fires: 0,
+                    idx,
+                    addr,
+                    coefs,
+                }
+            })
+            .collect();
+        let expected_commits = mapping
+            .dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match &n.kind {
+                NodeKind::Store { period, .. } => {
+                    Some((i, mapping.dfg.total_iters() / *period as u64))
+                }
+                _ => None,
+            })
+            .collect();
+        let mut consumers: Vec<Vec<(usize, usize, u64)>> =
+            vec![Vec::new(); mapping.dfg.nodes.len()];
+        for (dst, n) in mapping.dfg.nodes.iter().enumerate() {
+            for (slot, &src) in n.inputs.iter().enumerate() {
+                let hops =
+                    mapping.routes.for_edge(src, dst).map(|r| r.hops() as u64).unwrap_or(0);
+                consumers[src].push((dst, slot, hops));
+            }
+        }
+        Ok(ReferenceEngine {
+            mapping,
+            smem,
+            nodes,
+            event_buckets: Default::default(),
+            consumers,
+            cycle: 0,
+            expected_commits,
+            window: iteration_window(machine),
+            mshrs: lsu_mshrs(machine),
+        })
+    }
+
+    fn heads_at(&self, node: usize, expect: u64) -> bool {
+        !self.nodes[node].inq.is_empty()
+            && self.nodes[node]
+                .inq
+                .iter()
+                .all(|q| q.front().is_some_and(|t| t.iter == expect))
+    }
+
+    fn broadcast(&mut self, node: usize, iter: u64, value: f32) {
+        let lat = self.mapping.dfg.nodes[node].op.latency() as u64;
+        for k in 0..self.consumers[node].len() {
+            let (dst, slot, hops) = self.consumers[node][k];
+            self.event_buckets
+                .entry(self.cycle + lat + hops)
+                .or_default()
+                .push((dst, slot, Token { iter, value }));
+        }
+    }
+
+    fn commit_frontier(&self) -> u64 {
+        self.expected_commits
+            .iter()
+            .map(|&(i, _)| self.nodes[i].next_iter)
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn done(&self) -> bool {
+        self.expected_commits.iter().all(|&(i, want)| self.nodes[i].commits >= want)
+    }
+
+    /// Run to completion. `max_cycles` guards against deadlock bugs.
+    pub fn run(mut self, max_cycles: u64) -> Result<SimResult, DiagError> {
+        let total_iters = self.mapping.dfg.total_iters();
+        let n = self.mapping.dfg.nodes.len();
+        let mut inflight_sum = 0.0f64;
+        let mut steady_start_cycle = None;
+        let mut steady_start_frontier = 0;
+
+        while !self.done() {
+            if self.cycle >= max_cycles {
+                return Err(DiagError::InvalidParams(format!(
+                    "sim `{}`: exceeded {max_cycles} cycles (deadlock or window too small)",
+                    self.mapping.dfg.name
+                )));
+            }
+
+            // 1. Memory completes (fresh Vec per cycle, as pre-refactor).
+            for resp in self.smem.tick() {
+                if resp.write {
+                    continue;
+                }
+                let node = (resp.tag >> 32) as usize;
+                let iter = resp.tag & 0xFFFF_FFFF;
+                self.nodes[node].outstanding -= 1;
+                self.broadcast(node, iter, resp.value);
+            }
+
+            // 2. Deliver due route events.
+            while let Some((&due, _)) = self.event_buckets.first_key_value() {
+                if due > self.cycle {
+                    break;
+                }
+                let (_, batch) = self.event_buckets.pop_first().unwrap();
+                for (dst, slot, tok) in batch {
+                    let q = &mut self.nodes[dst].inq[slot];
+                    if q.back().map_or(true, |t| t.iter < tok.iter) {
+                        q.push_back(tok);
+                    } else {
+                        let pos = q.partition_point(|t| t.iter < tok.iter);
+                        q.insert(pos, tok);
+                    }
+                }
+            }
+
+            // 3. Fire PEs (full scan every cycle, as pre-refactor).
+            let frontier = self.commit_frontier();
+            for node in 0..n {
+                self.step_node(node, total_iters, frontier)?;
+            }
+
+            inflight_sum += (self
+                .nodes
+                .iter()
+                .map(|s| s.next_iter)
+                .max()
+                .unwrap_or(0)
+                .saturating_sub(frontier)) as f64;
+
+            if steady_start_cycle.is_none() && frontier >= total_iters / 4 {
+                steady_start_cycle = Some(self.cycle);
+                steady_start_frontier = frontier;
+            }
+
+            self.cycle += 1;
+        }
+
+        while !self.smem.idle() {
+            self.smem.tick();
+            self.cycle += 1;
+        }
+
+        let fires = self.nodes.iter().map(|s| s.fires).sum();
+        let measured_ii = match steady_start_cycle {
+            Some(c0) => {
+                let di = self.commit_frontier().saturating_sub(steady_start_frontier);
+                if di > 0 {
+                    (self.cycle - c0) as f64 / di as f64
+                } else {
+                    self.cycle as f64
+                }
+            }
+            None => self.cycle as f64 / total_iters as f64,
+        };
+        Ok(SimResult {
+            cycles: self.cycle,
+            mem: self.smem.image().to_vec(),
+            fires,
+            smem: self.smem.stats.clone(),
+            avg_parallelism: inflight_sum / self.cycle.max(1) as f64,
+            measured_ii,
+        })
+    }
+
+    fn step_node(&mut self, node: usize, total_iters: u64, frontier: u64) -> Result<(), DiagError> {
+        let mapping: &'a Mapping = self.mapping;
+        let op = mapping.dfg.nodes[node].op;
+        match &mapping.dfg.nodes[node].kind {
+            NodeKind::Const | NodeKind::Index(_) => {
+                let iter = self.nodes[node].next_iter;
+                if iter < total_iters && iter < frontier + self.window {
+                    let value = match mapping.dfg.nodes[node].kind {
+                        NodeKind::Const => mapping.dfg.nodes[node].imm,
+                        NodeKind::Index(d) => self.nodes[node].idx[d] as f32,
+                        _ => unreachable!(),
+                    };
+                    if matches!(mapping.dfg.nodes[node].kind, NodeKind::Index(_)) {
+                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    }
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, iter, value);
+                }
+            }
+            NodeKind::Load(Access::Affine { .. }) => {
+                let iter = self.nodes[node].next_iter;
+                if iter < total_iters
+                    && iter < frontier + self.window
+                    && self.nodes[node].outstanding < self.mshrs
+                {
+                    let addr = self.nodes[node].addr as usize;
+                    self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    self.smem.submit(MemReq {
+                        requester: node,
+                        addr,
+                        write: false,
+                        wdata: 0.0,
+                        tag: ((node as u64) << 32) | iter,
+                    })?;
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].outstanding += 1;
+                    self.nodes[node].fires += 1;
+                }
+            }
+            NodeKind::Load(Access::Indirect { .. }) => {
+                if self.nodes[node].outstanding < self.mshrs
+                    && self.heads_at(node, self.nodes[node].next_iter)
+                {
+                    let tok = self.nodes[node].inq[0].pop_front().unwrap();
+                    self.smem.submit(MemReq {
+                        requester: node,
+                        addr: tok.value as usize,
+                        write: false,
+                        wdata: 0.0,
+                        tag: ((node as u64) << 32) | tok.iter,
+                    })?;
+                    self.nodes[node].next_iter += 1;
+                    self.nodes[node].outstanding += 1;
+                    self.nodes[node].fires += 1;
+                }
+            }
+            NodeKind::Compute => {
+                let expect = self.nodes[node].next_iter;
+                if self.heads_at(node, expect) {
+                    // Per-fire Vec collection, as pre-refactor.
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let a = toks.first().map(|t| t.value).unwrap_or(0.0);
+                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
+                    let v = op.eval(a, b, self.mapping.dfg.nodes[node].imm);
+                    self.nodes[node].next_iter = expect + 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, expect, v);
+                }
+            }
+            NodeKind::Accum { reset_period } => {
+                if self.heads_at(node, self.nodes[node].next_iter) {
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let iter = toks[0].iter;
+                    if iter % *reset_period as u64 == 0 {
+                        self.nodes[node].acc = self.mapping.dfg.nodes[node].imm;
+                    }
+                    let a = toks[0].value;
+                    let b = toks.get(1).map(|t| t.value).unwrap_or(0.0);
+                    let st = self.nodes[node].acc;
+                    let v = match op {
+                        Op::Mac => op.eval(a, b, st),
+                        _ => op.eval(st, a, 0.0),
+                    };
+                    self.nodes[node].acc = v;
+                    self.nodes[node].next_iter = iter + 1;
+                    self.nodes[node].fires += 1;
+                    self.broadcast(node, iter, v);
+                }
+            }
+            NodeKind::Store { access, period } => {
+                if self.nodes[node].outstanding < self.mshrs
+                    && self.heads_at(node, self.nodes[node].next_iter)
+                {
+                    let toks: Vec<Token> = self.nodes[node]
+                        .inq
+                        .iter_mut()
+                        .map(|q| q.pop_front().unwrap())
+                        .collect();
+                    let iter = toks[0].iter;
+                    self.nodes[node].next_iter = iter + 1;
+                    let phase = iter % *period as u64;
+                    let gen_addr = self.nodes[node].addr as usize;
+                    if matches!(access, Access::Affine { .. }) {
+                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    }
+                    if phase == *period as u64 - 1 {
+                        let addr = match &access {
+                            Access::Affine { .. } => gen_addr,
+                            Access::Indirect { .. } => toks[1].value as usize,
+                        };
+                        self.smem.submit(MemReq {
+                            requester: node,
+                            addr,
+                            write: true,
+                            wdata: toks[0].value,
+                            tag: ((node as u64) << 32) | iter,
+                        })?;
+                        self.nodes[node].commits += 1;
+                    }
+                    self.nodes[node].fires += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Simulate a mapping on the frozen reference engine.
+pub fn simulate_reference(
+    mapping: &Mapping,
+    machine: &MachineDesc,
+    mem_image: &[f32],
+    max_cycles: u64,
+) -> Result<SimResult, DiagError> {
+    let engine = ReferenceEngine::new(mapping, machine, mem_image)?;
+    engine.run(max_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::compiler::{compile, Dfg};
+    use crate::plugins::elaborate;
+    use crate::sim::engine::simulate;
+
+    /// The reference and optimized engines agree on a small smoke kernel
+    /// (the exhaustive randomized batch lives in tests/engine_equivalence).
+    #[test]
+    fn reference_matches_optimized_on_gemm_nest() {
+        let m = elaborate(presets::standard()).unwrap().artifact;
+        let mut d = Dfg::new("gemm4", vec![4, 4, 4]);
+        let a = d.load_affine(0, vec![4, 0, 1]);
+        let b = d.load_affine(16, vec![0, 1, 4]);
+        let mu = d.compute(crate::arch::isa::Op::Mul, a, b);
+        let acc = d.accum(crate::arch::isa::Op::Add, mu, 0.0, 4);
+        d.store_affine(acc, 32, vec![4, 1, 0], 4);
+        let mapping = compile(d, &m, 11).unwrap();
+        let mut mem = vec![0.0f32; 48];
+        for (i, w) in mem.iter_mut().enumerate().take(32) {
+            *w = (i as f32) * 0.5 - 3.0;
+        }
+        let fast = simulate(&mapping, &m, &mem, 1_000_000).unwrap();
+        let reference = simulate_reference(&mapping, &m, &mem, 1_000_000).unwrap();
+        assert_eq!(fast.cycles, reference.cycles, "cycle-identical");
+        assert_eq!(fast.fires, reference.fires);
+        assert_eq!(fast.smem, reference.smem);
+        assert_eq!(fast.mem, reference.mem, "bit-identical images");
+        assert!((fast.avg_parallelism - reference.avg_parallelism).abs() < 1e-12);
+        assert!((fast.measured_ii - reference.measured_ii).abs() < 1e-12);
+    }
+}

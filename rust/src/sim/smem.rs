@@ -105,9 +105,14 @@ impl SmemSim {
     }
 
     /// Advance one cycle: complete last cycle's grants, then arbitrate.
-    /// Returns the responses that complete *this* cycle.
-    pub fn tick(&mut self) -> Vec<MemResp> {
-        let done = std::mem::take(&mut self.in_flight);
+    ///
+    /// Responses completing *this* cycle are appended to `out` in grant
+    /// order. The buffer is caller-owned so the simulation hot loop reuses
+    /// one allocation across all cycles instead of receiving a fresh `Vec`
+    /// per tick (perf pass, see EXPERIMENTS.md §Perf); `out` is *not*
+    /// cleared here — callers clear between cycles.
+    pub fn tick_into(&mut self, out: &mut Vec<MemResp>) {
+        out.append(&mut self.in_flight);
 
         let peak: usize = self.queues.iter().map(Vec::len).sum();
         self.stats.peak_queue = self.stats.peak_queue.max(peak);
@@ -144,7 +149,15 @@ impl SmemSim {
                 write: req.write,
             });
         }
-        done
+    }
+
+    /// [`Self::tick_into`] returning a freshly allocated response Vec.
+    /// Convenience for tests and the frozen reference engine
+    /// ([`super::reference`]); the optimized engine uses `tick_into`.
+    pub fn tick(&mut self) -> Vec<MemResp> {
+        let mut out = Vec::new();
+        self.tick_into(&mut out);
+        out
     }
 
     pub fn idle(&self) -> bool {
@@ -224,6 +237,27 @@ mod tests {
         for w in grant_order[..10].windows(2) {
             assert_ne!(w[0], w[1], "{grant_order:?}");
         }
+    }
+
+    #[test]
+    fn tick_into_reuses_the_callers_buffer() {
+        let mut sm = SmemSim::new(2, 16, 2);
+        sm.load_image(1, &[3.5]).unwrap();
+        let mut buf: Vec<MemResp> = Vec::with_capacity(8);
+        sm.submit(req(0, 1, 11)).unwrap();
+        sm.tick_into(&mut buf); // grant cycle: nothing completes
+        assert!(buf.is_empty());
+        sm.tick_into(&mut buf); // completion cycle
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf[0].value, 3.5);
+        assert_eq!(buf[0].tag, 11);
+        // Not cleared by the callee: a second idle tick appends nothing.
+        sm.tick_into(&mut buf);
+        assert_eq!(buf.len(), 1);
+        // The wrapper agrees with the buffer API.
+        sm.submit(req(1, 1, 12)).unwrap();
+        sm.tick();
+        assert_eq!(sm.tick()[0].tag, 12);
     }
 
     #[test]

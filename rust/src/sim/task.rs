@@ -16,15 +16,21 @@
 //! [`ring_makespan`] models the RCA ring: independent tasks round-robin
 //! over `rca_count` arrays and overlap their execution.
 
+use std::sync::Arc;
+
 use crate::compiler::Mapping;
 use crate::diag::error::DiagError;
-use crate::sim::engine::simulate;
+use crate::sim::engine::{simulate, SimResult};
 use crate::sim::machine::MachineDesc;
 
 /// One kernel phase plus its data movement.
+///
+/// The mapping is shared (`Arc`): phases built from the coordinator's
+/// artifact cache alias the cached compile output instead of deep-cloning
+/// a `Mapping` (DFG + routes + config image) per warm sweep point.
 #[derive(Debug, Clone)]
 pub struct Phase {
-    pub mapping: Mapping,
+    pub mapping: Arc<Mapping>,
     /// Words DMA'd from external storage into shared memory beforehand.
     pub dma_in_words: u64,
     /// Words DMA'd back out afterwards.
@@ -61,12 +67,35 @@ impl TaskResult {
     }
 }
 
+/// Pluggable per-phase simulator for [`run_task_with`]: given the phase's
+/// mapping, the machine, the phase's *input* memory image and the cycle
+/// guard, produce the phase's [`SimResult`]. The coordinator passes a
+/// closure that consults the sweep-level SimResult cache; the default
+/// ([`run_task`]) simulates unconditionally.
+pub type PhaseSim<'c> =
+    dyn FnMut(&Mapping, &MachineDesc, &[f32], u64) -> Result<Arc<SimResult>, DiagError> + 'c;
+
 /// Execute a task on one RCA of the machine.
 pub fn run_task(
     task: &Task,
     machine: &MachineDesc,
     mem_init: &[f32],
     max_cycles_per_phase: u64,
+) -> Result<TaskResult, DiagError> {
+    run_task_with(task, machine, mem_init, max_cycles_per_phase, &mut |mapping, m, mem, max| {
+        simulate(mapping, m, mem, max).map(Arc::new)
+    })
+}
+
+/// [`run_task`] with a pluggable compute step (see [`PhaseSim`]). Host
+/// protocol, config loading and DMA accounting are identical; only the
+/// per-phase cycle-accurate simulation is delegated.
+pub fn run_task_with(
+    task: &Task,
+    machine: &MachineDesc,
+    mem_init: &[f32],
+    max_cycles_per_phase: u64,
+    sim: &mut PhaseSim<'_>,
 ) -> Result<TaskResult, DiagError> {
     let host = machine
         .host
@@ -119,12 +148,13 @@ pub fn run_task(
             res.dma_cycles_exposed += cyc;
         }
 
-        // Compute.
-        let sim = simulate(&phase.mapping, machine, &mem, max_cycles_per_phase)?;
-        mem = sim.mem;
-        res.compute_cycles += sim.cycles;
-        res.phase_compute.push(sim.cycles);
-        prev_compute = sim.cycles;
+        // Compute (possibly answered by the coordinator's SimResult cache;
+        // the image buffer is reused across phases either way).
+        let sres = sim(&phase.mapping, machine, &mem, max_cycles_per_phase)?;
+        mem.clone_from(&sres.mem);
+        res.compute_cycles += sres.cycles;
+        res.phase_compute.push(sres.cycles);
+        prev_compute = sres.cycles;
 
         // DMA out (the next phase's ping-pong overlaps it; charge half
         // exposed under ping-pong as the tail write-back).
@@ -179,7 +209,7 @@ mod tests {
         let s = d.compute(Op::Add, x, y);
         d.store_affine(s, out_base, vec![1], 1);
         Phase {
-            mapping: compile(d, m, 5).unwrap(),
+            mapping: Arc::new(compile(d, m, 5).unwrap()),
             dma_in_words: 2 * n as u64,
             dma_out_words: n as u64,
         }
@@ -195,7 +225,11 @@ mod tests {
         let c2 = d2.load_affine(32, vec![1]);
         let s = d2.compute(Op::Add, c1, c2);
         d2.store_affine(s, 64, vec![1], 1);
-        let p2 = Phase { mapping: compile(d2, &m, 6).unwrap(), dma_in_words: 0, dma_out_words: 16 };
+        let p2 = Phase {
+            mapping: Arc::new(compile(d2, &m, 6).unwrap()),
+            dma_in_words: 0,
+            dma_out_words: 16,
+        };
         let task = Task { name: "chain".into(), phases: vec![p1, p2] };
         let mut mem = vec![0.0f32; 80];
         for i in 0..16 {

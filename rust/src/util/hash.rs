@@ -86,6 +86,26 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+/// Stable 64-bit digest of an `f32` slice — the memory-image half of the
+/// coordinator's `SimResult` cache key.
+///
+/// Hashes bit patterns (NaN-stable; `-0.0` ≠ `0.0`, which is fine for
+/// identity) with the length folded in first, so a zero image of one size
+/// never collides with a zero image of another. Uses a word-at-a-time
+/// FNV-1a variant (one XOR-multiply per word instead of per byte) because
+/// sweep images run to hundreds of KiB and this digest sits on the warm
+/// sweep hot path.
+pub fn stable_hash_f32(xs: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    h ^= xs.len() as u64;
+    h = h.wrapping_mul(FNV_PRIME);
+    for &x in xs {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +128,20 @@ mod tests {
         let mut c = StableHasher::new();
         c.u32(1).str("pea").bool(false);
         assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn f32_slice_hash_is_stable_and_sensitive() {
+        let a = vec![0.0f32, 1.5, -2.25, f32::NAN];
+        assert_eq!(stable_hash_f32(&a), stable_hash_f32(&a), "deterministic incl. NaN");
+        let mut b = a.clone();
+        b[1] = 1.5000001;
+        assert_ne!(stable_hash_f32(&a), stable_hash_f32(&b), "value-sensitive");
+        // Same content, different length: distinct (length prefix).
+        assert_ne!(stable_hash_f32(&[0.0; 4]), stable_hash_f32(&[0.0; 5]));
+        // Bit-pattern identity: -0.0 and 0.0 are distinct images.
+        assert_ne!(stable_hash_f32(&[0.0]), stable_hash_f32(&[-0.0]));
+        assert_ne!(stable_hash_f32(&[]), 0);
     }
 
     #[test]

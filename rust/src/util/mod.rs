@@ -10,7 +10,7 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
-pub use hash::StableHasher;
+pub use hash::{stable_hash_f32, StableHasher};
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::Summary;

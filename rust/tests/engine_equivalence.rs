@@ -1,0 +1,229 @@
+//! Equivalence suite for the optimized cycle-accurate engine.
+//!
+//! The simulator hot-loop perf pass (EXPERIMENTS.md §Perf) must be
+//! *observationally invisible*: for every kernel the optimized engine has
+//! to produce
+//!
+//! 1. a memory image **bit-identical** to the sequential reference
+//!    interpreter ([`windmill::compiler::dfg::interpret`]), and
+//! 2. cycle counts, fire counts, smem statistics and derived metrics
+//!    **identical** to the frozen pre-refactor engine
+//!    ([`windmill::sim::reference`]). The reference shares the
+//!    machine-derived window/MSHR sizing and the tag-overflow guard with
+//!    the optimized engine (see its module docs); on the standard machine
+//!    used here those equal the historical constants, so this pins the
+//!    true pre-refactor timing semantics.
+//!
+//! The batch below sweeps randomized kernels mixing affine loads/stores,
+//! indirect (gather/scatter) accesses, accumulators with varying reset
+//! periods, 1-D and 2-D nests, and ALU/MUL/SFU op chains.
+//!
+//! The suite also pins the sweep-level SimResult cache: a warm
+//! [`SweepEngine`] re-run must never re-enter `simulate()`.
+
+use windmill::arch::isa::Op;
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::compiler::{compile, dfg::interpret, Dfg};
+use windmill::coordinator::{SweepEngine, Workload};
+use windmill::plugins;
+use windmill::sim::engine::simulate;
+use windmill::sim::reference::simulate_reference;
+use windmill::sim::MachineDesc;
+use windmill::util::Rng;
+
+fn machine() -> MachineDesc {
+    plugins::elaborate(presets::standard()).unwrap().artifact
+}
+
+/// Ops that keep values finite for any finite input (no NaN/Inf blowups:
+/// bitwise image comparison would treat NaN != NaN as a mismatch).
+const BINOPS: [Op; 5] = [Op::Add, Op::Sub, Op::Mul, Op::Min, Op::Max];
+const UNOPS: [Op; 4] = [Op::Abs, Op::Neg, Op::Tanh, Op::Add];
+
+/// Random kernel generator, cycling through four shapes:
+///  * case % 4 == 0 — 1-D affine load/op pipeline;
+///  * case % 4 == 1 — 2-D nest with an accumulator (reset per row) and a
+///    periodic store, GEMM-style;
+///  * case % 4 == 2 — indirect **gather**: address = index + table base;
+///  * case % 4 == 3 — indirect **scatter**: store address computed on the
+///    array.
+///
+/// All addresses stay inside [0, 4096) for the standard machine's smem.
+fn random_kernel(rng: &mut Rng, case: usize) -> Dfg {
+    match case % 4 {
+        0 => {
+            let iters = *rng.choose(&[8u32, 16, 32, 64]);
+            let mut d = Dfg::new(&format!("affine-{case}"), vec![iters]);
+            let n_loads = rng.range(1, 4);
+            let mut vals = Vec::new();
+            for i in 0..n_loads {
+                vals.push(d.load_affine((i as u32) * 64, vec![1]));
+            }
+            for _ in 0..rng.range(1, 6) {
+                let v = if rng.bool(0.6) && vals.len() >= 2 {
+                    let a = *rng.choose(&vals);
+                    let b = *rng.choose(&vals);
+                    d.compute(*rng.choose(&BINOPS), a, b)
+                } else {
+                    let a = *rng.choose(&vals);
+                    d.unary(*rng.choose(&UNOPS), a)
+                };
+                vals.push(v);
+            }
+            let last = *vals.last().unwrap();
+            d.store_affine(last, 2048, vec![1], 1);
+            d
+        }
+        1 => {
+            let outer = *rng.choose(&[2u32, 4, 8]);
+            let inner = *rng.choose(&[4u32, 8]);
+            let mut d = Dfg::new(&format!("accum-{case}"), vec![outer, inner]);
+            let a = d.load_affine(0, vec![inner as i32, 1]);
+            let b = d.load_affine(64, vec![0, 1]);
+            let mut v = d.compute(*rng.choose(&[Op::Mul, Op::Add]), a, b);
+            if rng.bool(0.5) {
+                v = d.unary(*rng.choose(&UNOPS), v);
+            }
+            let acc_op = *rng.choose(&[Op::Add, Op::Max, Op::Min]);
+            let init = if acc_op == Op::Add { 0.0 } else { rng.normal() };
+            let acc = d.accum(acc_op, v, init, inner);
+            d.store_affine(acc, 2048, vec![1, 0], inner);
+            d
+        }
+        2 => {
+            let iters = *rng.choose(&[8u32, 16, 32]);
+            let mut d = Dfg::new(&format!("gather-{case}"), vec![iters]);
+            let idx = d.index(0);
+            let base = d.constant(1024.0);
+            let addr = d.compute(Op::Add, idx, base);
+            let x = d.load_indirect(addr);
+            let y = if rng.bool(0.6) { d.unary(*rng.choose(&UNOPS), x) } else { x };
+            d.store_affine(y, 2048, vec![1], 1);
+            d
+        }
+        _ => {
+            let iters = *rng.choose(&[8u32, 16]);
+            let mut d = Dfg::new(&format!("scatter-{case}"), vec![iters]);
+            let x = d.load_affine(0, vec![1]);
+            let y = d.unary(*rng.choose(&UNOPS), x);
+            let sidx = d.index(0);
+            let sbase = d.constant(2048.0);
+            let saddr = d.compute(Op::Add, sidx, sbase);
+            d.store_indirect(y, saddr, 1);
+            d
+        }
+    }
+}
+
+/// Satellite requirement: ≥ 20 randomized kernels, bit-identical memory vs
+/// the interpreter AND cycle-identical behaviour vs the pre-refactor
+/// engine.
+#[test]
+fn optimized_engine_is_bit_and_cycle_identical() {
+    let m = machine();
+    let words = m.smem.as_ref().unwrap().words();
+    for case in 0..24usize {
+        let mut rng = Rng::new(7_000 + case as u64);
+        let d = random_kernel(&mut rng, case);
+        d.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let mut image = vec![0.0f32; words];
+        for w in image.iter_mut().take(1280) {
+            *w = rng.normal();
+        }
+        let mut golden = image.clone();
+        interpret(&d, &mut golden).unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let mapping = compile(d, &m, 100 + case as u64)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let fast = simulate(&mapping, &m, &image, 2_000_000)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let reference = simulate_reference(&mapping, &m, &image, 2_000_000)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        // (1) Bit-identical to the sequential interpreter.
+        assert_eq!(fast.mem.len(), golden.len(), "case {case}");
+        for (i, (a, b)) in fast.mem.iter().zip(golden.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case} mem[{i}]: sim {a} vs interpreter {b}"
+            );
+        }
+
+        // (2) Cycle-identical to the pre-refactor semantics.
+        assert_eq!(fast.cycles, reference.cycles, "case {case}: cycle count");
+        assert_eq!(fast.fires, reference.fires, "case {case}: fire count");
+        assert_eq!(fast.smem, reference.smem, "case {case}: smem stats");
+        for (i, (a, b)) in fast.mem.iter().zip(reference.mem.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} mem[{i}] vs reference");
+        }
+        assert!(
+            (fast.avg_parallelism - reference.avg_parallelism).abs() < 1e-12,
+            "case {case}: {} vs {}",
+            fast.avg_parallelism,
+            reference.avg_parallelism
+        );
+        assert!(
+            (fast.measured_ii - reference.measured_ii).abs() < 1e-12,
+            "case {case}: {} vs {}",
+            fast.measured_ii,
+            reference.measured_ii
+        );
+    }
+}
+
+/// Regression (satellite): iteration tags pack `(node << 32) | iter`; a
+/// nest with ≥ 2^32 iterations must be rejected by both engines instead of
+/// silently corrupting iteration ids.
+#[test]
+fn huge_iteration_spaces_are_rejected_not_truncated() {
+    let m = machine();
+    let mut d = Dfg::new("huge", vec![1 << 16, 1 << 16]); // 2^32 iterations
+    let x = d.load_affine(0, vec![0, 0]);
+    d.store_affine(x, 1, vec![0, 0], 1);
+    let mapping = compile(d, &m, 1).unwrap();
+    let image = vec![0.0f32; 16];
+    let err = simulate(&mapping, &m, &image, 100).map(|_| ()).unwrap_err();
+    assert!(err.to_string().contains("iteration tag"), "{err}");
+    let err_ref =
+        simulate_reference(&mapping, &m, &image, 100).map(|_| ()).unwrap_err();
+    assert!(err_ref.to_string().contains("iteration tag"), "{err_ref}");
+}
+
+/// Satellite requirement: on a warm [`SweepEngine`] run, `simulate()` is
+/// never re-entered — every phase answers from the SimResult cache (the
+/// cache records a `simulate` miss exactly when it invokes the engine, so
+/// zero warm misses ⇔ zero warm `simulate()` entries).
+#[test]
+fn warm_sweep_never_reenters_the_simulator() {
+    let engine = SweepEngine::new(2);
+    let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8]);
+    let wl = Workload::Saxpy { n: 64 };
+
+    let cold = engine.sweep(&grid, &wl);
+    assert!(cold.failures.is_empty(), "{:?}", cold.failures);
+    let (cold_hits, cold_misses) = cold.cache.pass_counts("simulate");
+    assert_eq!(cold_hits, 0, "cold sweep cannot hit");
+    assert!(cold_misses >= 2, "one simulation per grid point: {:?}", cold.cache);
+
+    let warm = engine.sweep(&grid, &wl);
+    let (warm_hits, warm_misses) = warm.cache.pass_counts("simulate");
+    assert_eq!(warm_misses, 0, "warm sweep must never re-enter simulate()");
+    assert!(warm_hits >= 2);
+    assert_eq!(warm.sim_hit_rate(), 1.0, "{:?}", warm.cache);
+    assert!(warm.summary().contains("sim cache"));
+
+    // And the warm numbers are the cold numbers, bit for bit.
+    let key = |r: &windmill::coordinator::SweepReport| {
+        let mut v: Vec<(String, u64, f64)> = r
+            .points
+            .iter()
+            .map(|p| (p.label.clone(), p.cycles, p.wm_time_ns))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    assert_eq!(key(&cold), key(&warm));
+}

@@ -60,7 +60,7 @@ fn rl_step_simulator_matches_pjrt_golden() {
             .iter()
             .enumerate()
             .map(|(i, d)| Phase {
-                mapping: compile(d.clone(), &machine, 42).unwrap(),
+                mapping: std::sync::Arc::new(compile(d.clone(), &machine, 42).unwrap()),
                 dma_in_words: if i == 0 { 500 } else { 0 },
                 dma_out_words: if i + 1 == n { 1 } else { 0 },
             })

@@ -237,12 +237,12 @@ fn random_two_phase_tasks_chain_memory_like_the_interpreter() {
             name: format!("chain-{case}"),
             phases: vec![
                 Phase {
-                    mapping: compile(d1, &m, 3).unwrap(),
+                    mapping: std::sync::Arc::new(compile(d1, &m, 3).unwrap()),
                     dma_in_words: 64,
                     dma_out_words: 0,
                 },
                 Phase {
-                    mapping: compile(d2, &m, 3).unwrap(),
+                    mapping: std::sync::Arc::new(compile(d2, &m, 3).unwrap()),
                     dma_in_words: 0,
                     dma_out_words: iters as u64,
                 },
