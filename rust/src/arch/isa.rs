@@ -166,7 +166,10 @@ impl Op {
         }
     }
 
-    fn from_u8(x: u8) -> Option<Op> {
+    /// Decode an opcode byte (inverse of `op as u8`); `None` for values
+    /// outside the ISA. Used by `ConfigWord::decode` and the artifact
+    /// store's binary codec.
+    pub fn from_u8(x: u8) -> Option<Op> {
         use Op::*;
         Some(match x {
             0 => Nop,

@@ -22,6 +22,25 @@
 //!   `(arch, dfg, seed, image)`: the mapping is determined by the first
 //!   three and the engine is deterministic in the image.
 //!
+//! # Tiers
+//!
+//! The in-memory map is tier one. [`ArtifactCache::with_store`] attaches a
+//! persistent [`DiskStore`] tier behind it: memory misses **read through**
+//! to disk (a disk hit is promoted into memory and costs a decode, not a
+//! recompute) and computed artifacts **write through** (atomic tmp+rename,
+//! so concurrent processes sharing the directory race benignly). A cold
+//! process pointed at a warm store therefore performs zero elaborations,
+//! zero compiles and zero `simulate()` calls. [`CacheStats`] counts the
+//! three outcomes separately — [`PassCounts`]`{mem, disk, miss}` per pass —
+//! so warm-start claims are observable, not inferred.
+//!
+//! The `SimResult` tier is additionally bounded:
+//! [`ArtifactCache::with_sim_budget`] caps the bytes of cached final
+//! memory images, evicting least-recently-used entries
+//! ([`CacheStats::evictions`]). With a store attached an evicted entry
+//! re-loads from disk; without one it recomputes — either way correctness
+//! is untouched, only warm-start cost moves.
+//!
 //! The cache is shared across the worker pool (`Mutex`-guarded map,
 //! `Arc`-shared values). Misses compute *outside* the lock, so a slow
 //! elaboration never blocks unrelated lookups; concurrent misses on the
@@ -38,6 +57,7 @@ use crate::diag::error::DiagError;
 use crate::plugins;
 use crate::sim::engine::SimResult;
 use crate::sim::machine::MachineDesc;
+use crate::store::DiskStore;
 use crate::util::stable_hash_f32;
 
 use super::report::{ppa_row, PpaRow};
@@ -60,13 +80,47 @@ enum Entry {
     Sim(Arc<SimResult>),
 }
 
-/// Hit/miss counters, total and per pass.
+/// Where a lookup was answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Mem,
+    Disk,
+    Miss,
+}
+
+/// Per-pass lookup outcomes: memory hits, disk-store hits, misses.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PassCounts {
+    pub mem: u64,
+    pub disk: u64,
+    pub miss: u64,
+}
+
+impl PassCounts {
+    /// Hits of either tier (a disk hit still avoids the recompute).
+    pub fn hits(&self) -> u64 {
+        self.mem + self.disk
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.miss
+    }
+}
+
+/// Hit/miss counters, total and per pass. Hits are split by tier —
+/// `hits` counts both, `disk_hits` the disk-store subset — so reports can
+/// distinguish "warm process" (memory) from "warm store" (disk).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheStats {
+    /// Lookups answered without recompute (memory + disk tiers).
     pub hits: u64,
+    /// The subset of `hits` answered by the persistent store.
+    pub disk_hits: u64,
     pub misses: u64,
-    /// pass name → (hits, misses).
-    pub by_pass: BTreeMap<&'static str, (u64, u64)>,
+    /// `SimResult` entries evicted by the LRU byte budget.
+    pub evictions: u64,
+    /// pass name → per-tier counts.
+    pub by_pass: BTreeMap<&'static str, PassCounts>,
 }
 
 impl CacheStats {
@@ -83,18 +137,25 @@ impl CacheStats {
     }
 
     /// `(hits, misses)` of one pass by its [`CompilePass::name`]
-    /// (`(0, 0)` when the pass was never looked up).
+    /// (`(0, 0)` when the pass was never looked up). Hits include disk
+    /// hits; use [`CacheStats::pass_counts_full`] for the tier split.
     pub fn pass_counts(&self, pass: &str) -> (u64, u64) {
-        self.by_pass.get(pass).copied().unwrap_or((0, 0))
+        let c = self.pass_counts_full(pass);
+        (c.hits(), c.miss)
+    }
+
+    /// Full `{mem, disk, miss}` counts of one pass.
+    pub fn pass_counts_full(&self, pass: &str) -> PassCounts {
+        self.by_pass.get(pass).copied().unwrap_or_default()
     }
 
     /// Hit rate of one pass by name (0.0 when never looked up).
     pub fn pass_hit_rate(&self, pass: &str) -> f64 {
-        let (h, m) = self.pass_counts(pass);
-        if h + m == 0 {
+        let c = self.pass_counts_full(pass);
+        if c.lookups() == 0 {
             0.0
         } else {
-            h as f64 / (h + m) as f64
+            c.hits() as f64 / c.lookups() as f64
         }
     }
 
@@ -102,23 +163,92 @@ impl CacheStats {
     /// long-lived engine).
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
         let mut by_pass = BTreeMap::new();
-        for (&pass, &(h, m)) in &self.by_pass {
-            let (eh, em) = earlier.by_pass.get(pass).copied().unwrap_or((0, 0));
-            by_pass.insert(pass, (h - eh, m - em));
+        for (&pass, c) in &self.by_pass {
+            let e = earlier.by_pass.get(pass).copied().unwrap_or_default();
+            by_pass.insert(
+                pass,
+                PassCounts { mem: c.mem - e.mem, disk: c.disk - e.disk, miss: c.miss - e.miss },
+            );
         }
         CacheStats {
             hits: self.hits - earlier.hits,
+            disk_hits: self.disk_hits - earlier.disk_hits,
             misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
             by_pass,
+        }
+    }
+
+    /// Fold another counter set into this one (sweep-session merges).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.disk_hits += other.disk_hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        for (&pass, c) in &other.by_pass {
+            let slot = self.by_pass.entry(pass).or_default();
+            slot.mem += c.mem;
+            slot.disk += c.disk;
+            slot.miss += c.miss;
         }
     }
 }
 
-/// The shared artifact store. See the module docs for the design.
+/// LRU bookkeeping for the byte-bounded `SimResult` tier.
+#[derive(Default)]
+struct SimLru {
+    bytes: usize,
+    tick: u64,
+    by_stamp: BTreeMap<u64, CompileKey>,
+    info: HashMap<CompileKey, (u64, usize)>,
+}
+
+impl SimLru {
+    fn add(&mut self, key: CompileKey, bytes: usize) {
+        debug_assert!(!self.info.contains_key(&key));
+        self.tick += 1;
+        self.by_stamp.insert(self.tick, key);
+        self.info.insert(key, (self.tick, bytes));
+        self.bytes += bytes;
+    }
+
+    fn touch(&mut self, key: &CompileKey) {
+        if let Some(&(stamp, bytes)) = self.info.get(key) {
+            self.by_stamp.remove(&stamp);
+            self.tick += 1;
+            self.by_stamp.insert(self.tick, *key);
+            self.info.insert(*key, (self.tick, bytes));
+        }
+    }
+
+    fn pop_oldest(&mut self) -> Option<CompileKey> {
+        let (&stamp, &key) = self.by_stamp.iter().next()?;
+        self.by_stamp.remove(&stamp);
+        let (_, bytes) = self.info.remove(&key).unwrap();
+        self.bytes -= bytes;
+        Some(key)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<CompileKey, Entry>,
+    sim_lru: SimLru,
+}
+
+/// Cached-image footprint of one `SimResult` (the full final memory image
+/// dominates; the fixed part is an estimate, not an accounting claim).
+fn sim_bytes(r: &SimResult) -> usize {
+    std::mem::size_of::<SimResult>() + r.mem.len() * std::mem::size_of::<f32>()
+}
+
+/// The shared artifact cache. See the module docs for the design.
 #[derive(Default)]
 pub struct ArtifactCache {
-    entries: Mutex<HashMap<CompileKey, Entry>>,
+    inner: Mutex<Inner>,
     stats: Mutex<CacheStats>,
+    store: Option<Arc<DiskStore>>,
+    sim_budget: Option<usize>,
 }
 
 impl ArtifactCache {
@@ -126,48 +256,130 @@ impl ArtifactCache {
         Self::default()
     }
 
-    /// Number of stored artifacts.
+    /// Attach a persistent [`DiskStore`] tier: memory misses read through
+    /// to it, computed artifacts write through (see the module docs).
+    pub fn with_store(mut self, store: Arc<DiskStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Bound the in-memory `SimResult` tier to ~`bytes` of cached final
+    /// memory images (LRU eviction, counted in [`CacheStats::evictions`]).
+    /// With a store attached, evicted entries re-load from disk.
+    pub fn with_sim_budget(mut self, bytes: usize) -> Self {
+        self.sim_budget = Some(bytes);
+        self
+    }
+
+    pub fn store(&self) -> Option<&Arc<DiskStore>> {
+        self.store.as_ref()
+    }
+
+    pub fn has_store(&self) -> bool {
+        self.store.is_some()
+    }
+
+    pub fn sim_budget(&self) -> Option<usize> {
+        self.sim_budget
+    }
+
+    /// Bytes of `SimResult` images currently held in memory.
+    pub fn sim_bytes_cached(&self) -> usize {
+        self.inner.lock().unwrap().sim_lru.bytes
+    }
+
+    /// Number of stored in-memory artifacts.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.inner.lock().unwrap().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drop every stored artifact (counters are kept).
+    /// Drop every in-memory artifact (counters and the disk tier are kept).
     pub fn clear(&self) {
-        self.entries.lock().unwrap().clear();
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.clear();
+        inner.sim_lru = SimLru::default();
     }
 
     pub fn stats(&self) -> CacheStats {
         self.stats.lock().unwrap().clone()
     }
 
-    fn record(&self, pass: CompilePass, hit: bool) {
+    fn record(&self, pass: CompilePass, tier: Tier) {
         let mut s = self.stats.lock().unwrap();
-        let slot = s.by_pass.entry(pass.name()).or_insert((0, 0));
-        if hit {
-            slot.0 += 1;
-            s.hits += 1;
-        } else {
-            slot.1 += 1;
-            s.misses += 1;
+        let slot = s.by_pass.entry(pass.name()).or_default();
+        match tier {
+            Tier::Mem => {
+                slot.mem += 1;
+                s.hits += 1;
+            }
+            Tier::Disk => {
+                slot.disk += 1;
+                s.hits += 1;
+                s.disk_hits += 1;
+            }
+            Tier::Miss => {
+                slot.miss += 1;
+                s.misses += 1;
+            }
+        }
+    }
+
+    /// Insert a sim entry under the LRU budget, evicting as needed.
+    fn insert_sim(&self, key: CompileKey, r: &Arc<SimResult>) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if let std::collections::hash_map::Entry::Vacant(slot) = inner.entries.entry(key) {
+            slot.insert(Entry::Sim(Arc::clone(r)));
+            inner.sim_lru.add(key, sim_bytes(r));
+        }
+        let mut evicted = 0;
+        if let Some(budget) = self.sim_budget {
+            while inner.sim_lru.bytes > budget {
+                let Some(victim) = inner.sim_lru.pop_oldest() else { break };
+                inner.entries.remove(&victim);
+                evicted += 1;
+            }
+        }
+        drop(guard);
+        if evicted > 0 {
+            self.stats.lock().unwrap().evictions += evicted;
         }
     }
 
     /// Elaborate `params` through the DIAG generator, or return the cached
-    /// artifacts. The boolean reports whether this lookup was a hit.
+    /// artifacts. The boolean reports whether this lookup was a hit
+    /// (either tier — a `true` never re-elaborated).
     pub fn elaborated(
         &self,
         params: &WindMillParams,
     ) -> Result<(Arc<ElabArtifacts>, bool), DiagError> {
         let key = CompileKey::elaborate(params.stable_hash());
-        if let Some(Entry::Elab(e)) = self.entries.lock().unwrap().get(&key).cloned() {
-            self.record(CompilePass::Elaborate, true);
+        if let Some(Entry::Elab(e)) = self.inner.lock().unwrap().entries.get(&key).cloned() {
+            self.record(CompilePass::Elaborate, Tier::Mem);
             return Ok((e, true));
         }
-        self.record(CompilePass::Elaborate, false);
+        // Read through to the persistent tier: a disk hit is promoted into
+        // memory and costs a decode, not an elaboration.
+        if let Some(store) = &self.store {
+            if let Some(artifacts) = store.load_elab(&key) {
+                self.record(CompilePass::Elaborate, Tier::Disk);
+                let artifacts = Arc::new(artifacts);
+                let mut inner = self.inner.lock().unwrap();
+                let entry = inner
+                    .entries
+                    .entry(key)
+                    .or_insert_with(|| Entry::Elab(Arc::clone(&artifacts)));
+                match entry {
+                    Entry::Elab(stored) => return Ok((Arc::clone(stored), true)),
+                    _ => unreachable!("elaborate key holds non-elab entry"),
+                }
+            }
+        }
+        self.record(CompilePass::Elaborate, Tier::Miss);
         // Compute outside the lock; first insert wins under a race.
         let t0 = std::time::Instant::now();
         let mut gen = plugins::generator(params.clone());
@@ -178,8 +390,12 @@ impl ArtifactCache {
             ppa: row,
             elaborate_ns: t0.elapsed().as_nanos() as u64,
         });
-        let mut entries = self.entries.lock().unwrap();
-        let entry = entries.entry(key).or_insert_with(|| Entry::Elab(Arc::clone(&artifacts)));
+        if let Some(store) = &self.store {
+            store.store_elab(&key, &artifacts);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let entry =
+            inner.entries.entry(key).or_insert_with(|| Entry::Elab(Arc::clone(&artifacts)));
         match entry {
             Entry::Elab(stored) => Ok((Arc::clone(stored), false)),
             _ => unreachable!("elaborate key holds non-elab entry"),
@@ -206,7 +422,7 @@ impl ArtifactCache {
     /// counting it would inflate sweep hit rates.
     pub fn ppa_by_hash(&self, label: &str, arch_hash: u64) -> Option<PpaRow> {
         let key = CompileKey::elaborate(arch_hash);
-        if let Some(Entry::Elab(e)) = self.entries.lock().unwrap().get(&key) {
+        if let Some(Entry::Elab(e)) = self.inner.lock().unwrap().entries.get(&key) {
             let mut row = e.ppa.clone();
             row.label = label.to_string();
             return Some(row);
@@ -227,16 +443,40 @@ impl ArtifactCache {
         seed: u64,
     ) -> Result<(Arc<Mapping>, StageNanos, bool), DiagError> {
         let key = CompileKey::mapping(arch_hash, dfg, seed);
-        if let Some(Entry::Mapping(m, ns)) = self.entries.lock().unwrap().get(&key).cloned() {
-            self.record(CompilePass::Mapping, true);
+        if let Some(Entry::Mapping(m, ns)) =
+            self.inner.lock().unwrap().entries.get(&key).cloned()
+        {
+            self.record(CompilePass::Mapping, Tier::Mem);
             return Ok((m, ns, true));
         }
-        self.record(CompilePass::Mapping, false);
+        if let Some(store) = &self.store {
+            if let Some((mapping, ns)) = store.load_mapping(&key) {
+                self.record(CompilePass::Mapping, Tier::Disk);
+                let mapping = Arc::new(mapping);
+                let mut inner = self.inner.lock().unwrap();
+                let entry = inner
+                    .entries
+                    .entry(key)
+                    .or_insert_with(|| Entry::Mapping(Arc::clone(&mapping), ns));
+                match entry {
+                    Entry::Mapping(stored, stored_ns) => {
+                        return Ok((Arc::clone(stored), *stored_ns, true))
+                    }
+                    _ => unreachable!("mapping key holds non-mapping entry"),
+                }
+            }
+        }
+        self.record(CompilePass::Mapping, Tier::Miss);
         let (mapping, ns) = compile_timed(dfg.clone(), machine, seed)?;
         let mapping = Arc::new(mapping);
-        let mut entries = self.entries.lock().unwrap();
-        let entry =
-            entries.entry(key).or_insert_with(|| Entry::Mapping(Arc::clone(&mapping), ns));
+        if let Some(store) = &self.store {
+            store.store_mapping(&key, &mapping, &ns);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .entries
+            .entry(key)
+            .or_insert_with(|| Entry::Mapping(Arc::clone(&mapping), ns));
         match entry {
             Entry::Mapping(stored, stored_ns) => Ok((Arc::clone(stored), *stored_ns, false)),
             _ => unreachable!("mapping key holds non-mapping entry"),
@@ -245,9 +485,9 @@ impl ArtifactCache {
 
     /// Cycle-accurate simulation of one mapped kernel phase, or the cached
     /// [`SimResult`]. The key is `(arch, dfg, seed, stable image hash)`;
-    /// `compute` runs only on a miss (outside the lock), so a warm sweep
-    /// performs **zero** `simulate()` calls. The boolean reports whether
-    /// this lookup was a hit.
+    /// `compute` runs only on a full miss (outside the lock), so a warm
+    /// sweep — warm memory *or* warm store — performs **zero** `simulate()`
+    /// calls. The boolean reports whether this lookup was a hit.
     pub fn sim_result(
         &self,
         arch_hash: u64,
@@ -257,18 +497,30 @@ impl ArtifactCache {
         compute: impl FnOnce() -> Result<SimResult, DiagError>,
     ) -> Result<(Arc<SimResult>, bool), DiagError> {
         let key = CompileKey::simulate(arch_hash, dfg_hash, seed, stable_hash_f32(image));
-        if let Some(Entry::Sim(r)) = self.entries.lock().unwrap().get(&key).cloned() {
-            self.record(CompilePass::Simulate, true);
-            return Ok((r, true));
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(Entry::Sim(r)) = inner.entries.get(&key).cloned() {
+                inner.sim_lru.touch(&key);
+                drop(inner);
+                self.record(CompilePass::Simulate, Tier::Mem);
+                return Ok((r, true));
+            }
         }
-        self.record(CompilePass::Simulate, false);
+        if let Some(store) = &self.store {
+            if let Some(result) = store.load_sim(&key) {
+                self.record(CompilePass::Simulate, Tier::Disk);
+                let r = Arc::new(result);
+                self.insert_sim(key, &r);
+                return Ok((r, true));
+            }
+        }
+        self.record(CompilePass::Simulate, Tier::Miss);
         let r = Arc::new(compute()?);
-        let mut entries = self.entries.lock().unwrap();
-        let entry = entries.entry(key).or_insert_with(|| Entry::Sim(Arc::clone(&r)));
-        match entry {
-            Entry::Sim(stored) => Ok((Arc::clone(stored), false)),
-            _ => unreachable!("simulate key holds non-sim entry"),
+        if let Some(store) = &self.store {
+            store.store_sim(&key, &r);
         }
+        self.insert_sim(key, &r);
+        Ok((r, false))
     }
 }
 
@@ -292,6 +544,7 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(cache.stats().hits, 1);
         assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().disk_hits, 0, "no store attached");
         // A different parameter set occupies its own slot.
         let (c, hit_c) = cache.elaborated(&presets::small()).unwrap();
         assert!(!hit_c);
@@ -364,8 +617,80 @@ mod tests {
 
         let s = cache.stats();
         assert_eq!(s.pass_counts("simulate"), (1, 2));
+        let full = s.pass_counts_full("simulate");
+        assert_eq!((full.mem, full.disk, full.miss), (1, 0, 2));
         assert!((s.pass_hit_rate("simulate") - 1.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.pass_hit_rate("nonexistent"), 0.0);
+        assert!(cache.sim_bytes_cached() >= 2 * words * 4, "two images resident");
+    }
+
+    #[test]
+    fn sim_budget_evicts_lru_and_recomputes_correctly() {
+        use crate::sim::engine::simulate;
+        let params = presets::standard();
+        let arch = params.stable_hash();
+        let d = saxpy_dfg();
+        // Budget below one image: every insert immediately evicts the
+        // oldest entry, so the tier holds at most the newest result.
+        let cache = ArtifactCache::new().with_sim_budget(1);
+        let (e, _) = cache.elaborated(&params).unwrap();
+        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let words = e.machine.smem.as_ref().unwrap().words();
+        let image = vec![0.25f32; words];
+        let mut calls = 0u32;
+        let mut run = |img: &[f32], calls: &mut u32| {
+            cache
+                .sim_result(arch, d.stable_hash(), 7, img, || {
+                    *calls += 1;
+                    simulate(&m, &e.machine, img, 2_000_000)
+                })
+                .unwrap()
+        };
+        let (r1, _) = run(&image, &mut calls);
+        assert_eq!(cache.stats().evictions, 1, "over-budget insert evicts itself");
+        assert_eq!(cache.sim_bytes_cached(), 0);
+        // Without a store the evicted entry recomputes — bit-identically.
+        let (r2, hit) = run(&image, &mut calls);
+        assert!(!hit);
+        assert_eq!(calls, 2);
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(r1.mem, r2.mem);
+        assert!(cache.stats().evictions >= 2);
+    }
+
+    #[test]
+    fn sim_budget_keeps_recently_used_entries() {
+        use crate::sim::engine::simulate;
+        let params = presets::standard();
+        let arch = params.stable_hash();
+        let d = saxpy_dfg();
+        let cache = ArtifactCache::new();
+        let (e, _) = cache.elaborated(&params).unwrap();
+        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let words = e.machine.smem.as_ref().unwrap().words();
+        let one = sim_bytes(&simulate(&m, &e.machine, &vec![0.0f32; words], 2_000_000).unwrap());
+
+        // Budget for exactly two images.
+        let cache = ArtifactCache::new().with_sim_budget(2 * one + 64);
+        let (e, _) = cache.elaborated(&params).unwrap();
+        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let mk = |v: f32| vec![v; words];
+        let run = |img: &[f32]| {
+            cache
+                .sim_result(arch, d.stable_hash(), 7, img, || {
+                    simulate(&m, &e.machine, img, 2_000_000)
+                })
+                .unwrap()
+        };
+        run(&mk(1.0)); // A
+        run(&mk(2.0)); // B
+        run(&mk(1.0)); // touch A: A newer than B
+        run(&mk(3.0)); // C evicts B (LRU), not A
+        assert_eq!(cache.stats().evictions, 1);
+        let (_, hit_a) = run(&mk(1.0));
+        assert!(hit_a, "recently-used entry survived eviction");
+        let (_, hit_b) = run(&mk(2.0));
+        assert!(!hit_b, "least-recently-used entry was evicted");
     }
 
     #[test]
@@ -393,7 +718,32 @@ mod tests {
         let d = cache.stats().since(&snap);
         assert_eq!(d.hits, 2);
         assert_eq!(d.misses, 0);
+        assert_eq!(d.disk_hits, 0);
         assert_eq!(d.hit_rate(), 1.0);
+        assert_eq!(d.pass_counts_full("elaborate").mem, 2);
+    }
+
+    #[test]
+    fn stats_absorb_sums_every_tier() {
+        let mut a = CacheStats::default();
+        a.by_pass.insert("simulate", PassCounts { mem: 1, disk: 2, miss: 3 });
+        a.hits = 3;
+        a.disk_hits = 2;
+        a.misses = 3;
+        a.evictions = 1;
+        let mut b = CacheStats::default();
+        b.by_pass.insert("simulate", PassCounts { mem: 10, disk: 0, miss: 1 });
+        b.by_pass.insert("mapping", PassCounts { mem: 0, disk: 5, miss: 0 });
+        b.hits = 15;
+        b.disk_hits = 5;
+        b.misses = 1;
+        a.absorb(&b);
+        assert_eq!(a.hits, 18);
+        assert_eq!(a.disk_hits, 7);
+        assert_eq!(a.misses, 4);
+        assert_eq!(a.evictions, 1);
+        assert_eq!(a.pass_counts_full("simulate"), PassCounts { mem: 11, disk: 2, miss: 4 });
+        assert_eq!(a.pass_counts_full("mapping").disk, 5);
     }
 
     #[test]
@@ -424,5 +774,33 @@ mod tests {
         }
         // One entry even under concurrent misses.
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn disk_tier_promotes_and_counts_separately() {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-cache-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(DiskStore::open(&dir).unwrap());
+        let params = presets::standard();
+
+        // Process 1 (simulated): populate the store.
+        let warmup = ArtifactCache::new().with_store(Arc::clone(&store));
+        warmup.elaborated(&params).unwrap();
+        assert_eq!(warmup.stats().pass_counts_full("elaborate").miss, 1);
+
+        // Cold cache, warm store: the lookup is a *disk* hit — no
+        // elaboration, and the tier split records it.
+        let cold = ArtifactCache::new().with_store(Arc::clone(&store));
+        let (e, hit) = cold.elaborated(&params).unwrap();
+        assert!(hit);
+        e.machine.validate().unwrap();
+        let s = cold.stats();
+        assert_eq!(s.pass_counts_full("elaborate"), PassCounts { mem: 0, disk: 1, miss: 0 });
+        assert_eq!((s.hits, s.disk_hits, s.misses), (1, 1, 0));
+        // Second lookup is a memory hit (promoted).
+        cold.elaborated(&params).unwrap();
+        assert_eq!(cold.stats().pass_counts_full("elaborate").mem, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

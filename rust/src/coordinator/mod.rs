@@ -12,7 +12,11 @@
 //! * [`cache`] — the content-addressed [`ArtifactCache`]: elaborations and
 //!   mapper outputs keyed by `(ArchParams hash, DFG hash, seed, pass)`
 //!   ([`crate::compiler::CompileKey`]), shared across worker threads so
-//!   sweep points that share a dimension pay for it once.
+//!   sweep points that share a dimension pay for it once. With a
+//!   persistent [`crate::store::DiskStore`] attached
+//!   ([`ArtifactCache::with_store`]) the memo also survives the process —
+//!   warm starts cross process and CI-run boundaries, and sweeps shard
+//!   across processes via [`crate::store::SweepSession`].
 //! * [`pool`] — a FIFO work queue over per-worker channels ([`run_fifo`]):
 //!   jobs start *and* return in submission order (the previous
 //!   `Mutex<Vec>` pool popped LIFO; the pool tests pin the fix).
@@ -61,7 +65,7 @@ pub mod pool;
 pub mod report;
 pub mod sweep;
 
-pub use cache::{ArtifactCache, CacheStats, ElabArtifacts};
+pub use cache::{ArtifactCache, CacheStats, ElabArtifacts, PassCounts};
 pub use job::{
     calibrate_params, run_job, run_job_cached, JobResult, JobSpec, JobTiming, Workload,
 };

@@ -180,17 +180,32 @@ impl SweepReport {
         t
     }
 
-    /// One-line cache/timing summary for logs and benches.
+    /// One-line cache/timing summary for logs and benches. Each looked-up
+    /// pass reports its tier split as `mem/disk/miss`, so "warm process"
+    /// (memory) is distinguishable from "warm store" (disk) at a glance.
     pub fn summary(&self) -> String {
         let (sim_h, sim_m) = self.cache.pass_counts("simulate");
+        let per_pass = self
+            .cache
+            .by_pass
+            .iter()
+            .map(|(pass, c)| format!("{pass} {}m/{}d/{}x", c.mem, c.disk, c.miss))
+            .collect::<Vec<_>>()
+            .join(" · ");
+        let evicted = if self.cache.evictions > 0 {
+            format!(" | evicted {}", self.cache.evictions)
+        } else {
+            String::new()
+        };
         format!(
-            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%) | sim cache {}/{} hits ({:.0}%) | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
+            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%, {} from disk) | sim cache {}/{} hits ({:.0}%) | {per_pass}{evicted} | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
             self.points.len(),
             self.failures.len(),
             self.wall_ns as f64 / 1e6,
             self.cache.hits,
             self.cache.lookups(),
             100.0 * self.cache.hit_rate(),
+            self.cache.disk_hits,
             sim_h,
             sim_h + sim_m,
             100.0 * self.sim_hit_rate(),

@@ -29,9 +29,10 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::arch::params::ParamGrid;
+use crate::arch::params::{ParamGrid, WindMillParams};
 use crate::diag::error::DiagError;
 use crate::diag::service::{ServiceRegistry, SweepService};
+use crate::store::DiskStore;
 
 use super::cache::{ArtifactCache, CacheStats};
 use super::job::{calibrate_params, run_job_cached, JobResult, JobSpec, Workload};
@@ -59,6 +60,18 @@ impl SweepEngine {
         SweepEngine { workers: workers.max(1), cache }
     }
 
+    /// Engine whose cache reads/writes through a persistent [`DiskStore`]:
+    /// a cold process pointed at a warm store performs zero elaborations,
+    /// zero compiles and zero `simulate()` calls (see `store::disk`).
+    pub fn with_store(workers: usize, store: Arc<DiskStore>) -> Self {
+        Self::with_cache(workers, Arc::new(ArtifactCache::new().with_store(store)))
+    }
+
+    /// The persistent tier, when one is attached.
+    pub fn store(&self) -> Option<&Arc<DiskStore>> {
+        self.cache.store()
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -82,6 +95,7 @@ impl SweepEngine {
                 provider: "coordinator::SweepEngine",
                 workers: self.workers,
                 cached: true,
+                persistent: self.cache.has_store(),
             }),
         );
     }
@@ -101,9 +115,21 @@ impl SweepEngine {
     /// [`SweepReport::failures`]; the frontier/timing/cache aggregation is
     /// incremental, so partial sweeps still report coherently.
     pub fn sweep_seeded(&self, grid: &ParamGrid, workload: &Workload, seed: u64) -> SweepReport {
+        self.sweep_points(grid.points(), workload, seed)
+    }
+
+    /// Sweep an explicit point list (the sweep-session shard path:
+    /// `store::SweepSession::shard` hands each process a contiguous chunk
+    /// of `ParamGrid::points()`). Results return in submission order, so a
+    /// shard's report replays deterministically into a merged one.
+    pub fn sweep_points(
+        &self,
+        points: Vec<(String, WindMillParams)>,
+        workload: &Workload,
+        seed: u64,
+    ) -> SweepReport {
         let t0 = Instant::now();
         let stats_before = self.cache.stats();
-        let points = grid.points();
         let cache = Arc::clone(&self.cache);
         let wl = workload.clone();
         let run = run_fifo(points, self.workers, move |(label, params)| {
@@ -294,6 +320,7 @@ mod tests {
         let svc = registry.get::<SweepService>("dse-tool", "create_late").unwrap();
         assert_eq!(svc.workers, 3);
         assert!(svc.cached);
+        assert!(!svc.persistent, "no disk store attached");
         assert_eq!(svc.provider, "coordinator::SweepEngine");
     }
 }

@@ -39,6 +39,10 @@ pub enum DiagError {
 
     /// Parameter validation failed during create_config.
     InvalidParams(String),
+
+    /// Persistent artifact store problem (I/O, codec corruption, or a
+    /// sweep-session shard/merge inconsistency).
+    Store(String),
 }
 
 impl fmt::Display for DiagError {
@@ -66,6 +70,7 @@ impl fmt::Display for DiagError {
                 write!(f, "generated netlist is malformed: {msg}")
             }
             DiagError::InvalidParams(msg) => write!(f, "invalid parameters: {msg}"),
+            DiagError::Store(msg) => write!(f, "artifact store: {msg}"),
         }
     }
 }

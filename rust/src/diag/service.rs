@@ -119,6 +119,9 @@ pub struct SweepService {
     pub workers: usize,
     /// Whether evaluations are memoized across sweep points.
     pub cached: bool,
+    /// Whether the memo survives the process (a persistent artifact store
+    /// is attached, so warm starts cross process/CI-run boundaries).
+    pub persistent: bool,
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@ pub mod netlist;
 pub mod plugins;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod util;
 pub mod workloads;
 

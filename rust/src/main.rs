@@ -4,13 +4,16 @@
 //! (clap is not vendored on this image; the argument grammar is small and
 //! hand-parsed — see `USAGE`.)
 
+use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
-use windmill::coordinator::{ppa_report, run_all, JobSpec, SweepEngine, Workload};
+use windmill::coordinator::{ppa_report, run_all, JobSpec, SweepEngine, SweepReport, Workload};
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
+use windmill::store::{DiskStore, SweepSession};
 use windmill::util::{table, Table};
 
 const USAGE: &str = "\
@@ -22,11 +25,22 @@ USAGE:
     windmill report [--preset P | --sweep]
         PPA report (area / fmax / power) for one preset or the Fig. 6 sweep.
     windmill run <workload> [--preset P] [--seed S]
-        Compile + simulate a workload (saxpy|dot|gemm|fir|conv|rl)
+        Compile + simulate a workload (saxpy|dot|gemm|spmv|fir|conv|rl)
         against the CPU/GPU baseline models.
     windmill sweep <workload> [--preset P] [--workers W] [--seed S]
+                   [--store DIR] [--shard I/N] [--expect-warm]
         Design-space sweep (PEA size x topology grid) of a workload through
         the cache-backed sweep engine; prints the best-PPA frontier.
+        --store DIR   read/write artifacts through a persistent store, so a
+                      re-run in a fresh process recomputes nothing
+        --shard I/N   evaluate the I-th of N contiguous grid shards and
+                      save the partial report under DIR/partials/
+        --expect-warm exit nonzero unless the sweep re-entered simulate()
+                      zero times (CI warm-start assertion)
+    windmill sweep-merge [<workload>] --store DIR [--seed S]
+        Merge one complete shard session under DIR/partials/ into a report
+        bit-identical to the unsharded sweep (a store may hold partials of
+        several sessions; narrow by workload and/or seed).
     windmill suite [--workers W]
         The cross-domain workload suite on the standard WindMill.
     windmill plugins
@@ -132,19 +146,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_sweep(args: &[String]) -> Result<(), String> {
-    let wl_name = args.first().ok_or("missing workload")?;
-    let workload = Workload::parse(wl_name).ok_or(format!("unknown workload `{wl_name}`"))?;
-    let base = params_from_args(&args[1..])?;
-    let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
-    let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
-
-    let engine = SweepEngine::new(workers);
-    let grid = ParamGrid::new(base).pea_edges(&[4, 8, 12, 16]).topologies(&Topology::ALL);
-    let report = engine.sweep_seeded(&grid, &workload, seed);
-    report
-        .table(&format!("design-space sweep of `{}` (PEA size x topology)", workload.name()))
-        .print();
+fn print_sweep_report(report: &SweepReport, title: &str) {
+    report.table(title).print();
     for (label, err) in &report.failures {
         eprintln!("point `{label}` failed: {err}");
     }
@@ -156,7 +159,145 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             p.label, p.area_mm2, p.power_mw, p.cycles
         );
     }
+}
+
+/// The Fig. 6-style CLI sweep grid (shared by `sweep` and the shard path
+/// so shards of the same invocation always partition the same grid).
+fn sweep_grid(base: windmill::arch::WindMillParams) -> ParamGrid {
+    ParamGrid::new(base).pea_edges(&[4, 8, 12, 16]).topologies(&Topology::ALL)
+}
+
+fn cmd_sweep(args: &[String]) -> Result<(), String> {
+    let wl_name = args.first().ok_or("missing workload")?;
+    let workload = Workload::parse(wl_name).ok_or(format!("unknown workload `{wl_name}`"))?;
+    let base = params_from_args(&args[1..])?;
+    let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let store_dir = arg_value(args, "--store");
+    let shard = match arg_value(args, "--shard") {
+        Some(s) => {
+            let (i, n) = s
+                .split_once('/')
+                .and_then(|(i, n)| Some((i.parse::<usize>().ok()?, n.parse::<usize>().ok()?)))
+                .ok_or(format!("bad --shard `{s}` (want I/N)"))?;
+            if n == 0 || i >= n {
+                return Err(format!("--shard {i}/{n} out of range"));
+            }
+            Some((i, n))
+        }
+        None => None,
+    };
+    if shard.is_some() && store_dir.is_none() {
+        return Err("--shard needs --store (partials are saved under the store)".into());
+    }
+
+    let store = match &store_dir {
+        Some(dir) => Some(Arc::new(DiskStore::open(dir).map_err(|e| e.to_string())?)),
+        None => None,
+    };
+    let engine = match &store {
+        Some(s) => SweepEngine::with_store(workers, Arc::clone(s)),
+        None => SweepEngine::new(workers),
+    };
+    let grid = sweep_grid(base);
+
+    let report = match shard {
+        Some((i, n)) => {
+            let partial = SweepSession::run_shard(&engine, &grid, &workload, seed, i, n)
+                .map_err(|e| e.to_string())?;
+            let path = SweepSession::save_partial(
+                Path::new(store_dir.as_ref().unwrap()),
+                &partial,
+            )
+            .map_err(|e| e.to_string())?;
+            eprintln!("shard {i}/{n}: {} points -> {}", partial.report.points.len(), path.display());
+            print_sweep_report(
+                &partial.report,
+                &format!("sweep shard {i}/{n} of `{}`", workload.name()),
+            );
+            partial.report
+        }
+        None => {
+            let report = engine.sweep_seeded(&grid, &workload, seed);
+            print_sweep_report(
+                &report,
+                &format!("design-space sweep of `{}` (PEA size x topology)", workload.name()),
+            );
+            report
+        }
+    };
+    if let Some(s) = &store {
+        let ds = s.stats();
+        eprintln!(
+            "store {}: {} hits, {} writes, {} corrupt, {} write errors",
+            s.root().display(),
+            ds.hits,
+            ds.writes,
+            ds.corrupt,
+            ds.write_errors
+        );
+    }
+    if args.iter().any(|a| a == "--expect-warm") {
+        let sim = report.cache.pass_counts_full("simulate");
+        if sim.miss > 0 || report.sim_hit_rate() < 1.0 {
+            return Err(format!(
+                "--expect-warm: simulate() re-entered {} times (sim hit rate {:.3})",
+                sim.miss,
+                report.sim_hit_rate()
+            ));
+        }
+        eprintln!("--expect-warm: ok (sim cache {}m/{}d/0x)", sim.mem, sim.disk);
+    }
     Ok(())
+}
+
+fn cmd_sweep_merge(args: &[String]) -> Result<(), String> {
+    let dir = arg_value(args, "--store").ok_or("sweep-merge needs --store DIR")?;
+    let wl_filter = args.first().filter(|a| !a.starts_with("--")).cloned();
+    let seed_filter: Option<u64> = arg_value(args, "--seed").and_then(|s| s.parse().ok());
+    let (partials, skipped) =
+        SweepSession::load_partials(Path::new(&dir)).map_err(|e| e.to_string())?;
+    if skipped > 0 {
+        eprintln!("warning: skipped {skipped} corrupt partial file(s)");
+    }
+    // A store accumulates partials from many sessions (other workloads,
+    // re-shardings with a different N); merge exactly one complete one.
+    let groups = SweepSession::group_sessions(partials);
+    let matches = |g: &[windmill::store::SweepPartial]| {
+        let wl_ok = wl_filter.as_ref().map_or(true, |w| {
+            g[0].workload == *w || g[0].workload.starts_with(&format!("{w}-"))
+        });
+        wl_ok && seed_filter.map_or(true, |s| g[0].seed == s)
+    };
+    let (complete, incomplete): (Vec<_>, Vec<_>) = groups
+        .into_iter()
+        .filter(|g| matches(g))
+        .partition(|g| SweepSession::is_complete(g));
+    match complete.len() {
+        0 => {
+            let mut msg = format!("no complete shard session under {dir}/partials");
+            for g in &incomplete {
+                msg.push_str(&format!("\n  incomplete: {}", SweepSession::describe(g)));
+            }
+            Err(msg)
+        }
+        1 => {
+            let group = complete.into_iter().next().unwrap();
+            let desc = SweepSession::describe(&group);
+            let merged = SweepSession::merge(group).map_err(|e| e.to_string())?;
+            eprintln!("merged session {desc} from {dir}");
+            print_sweep_report(&merged, "merged design-space sweep");
+            Ok(())
+        }
+        _ => {
+            let mut msg =
+                "multiple complete sessions; narrow with <workload> and/or --seed:".to_string();
+            for g in &complete {
+                msg.push_str(&format!("\n  {}", SweepSession::describe(g)));
+            }
+            Err(msg)
+        }
+    }
 }
 
 fn cmd_suite(args: &[String]) -> Result<(), String> {
@@ -165,6 +306,7 @@ fn cmd_suite(args: &[String]) -> Result<(), String> {
         Workload::Saxpy { n: 256 },
         Workload::Dot { n: 256 },
         Workload::Gemm { m: 32, n: 32, k: 32 },
+        Workload::Spmv { rows: 64, cols: 64, k: 8 },
         Workload::Fir { n: 256, taps: 16 },
         Workload::Conv3x3 { h: 32, w: 32 },
         Workload::RlStep,
@@ -223,6 +365,7 @@ fn main() -> ExitCode {
         "report" => cmd_report(&rest),
         "run" => cmd_run(&rest),
         "sweep" => cmd_sweep(&rest),
+        "sweep-merge" => cmd_sweep_merge(&rest),
         "suite" => cmd_suite(&rest),
         "plugins" => cmd_plugins(),
         "help" | "--help" | "-h" => {

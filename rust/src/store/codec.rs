@@ -1,0 +1,1116 @@
+//! Versioned, zero-dependency binary codec for persisted sweep artifacts.
+//!
+//! Every on-disk entry is `MAGIC ∥ VERSION ∥ KIND ∥ payload`, where the
+//! payload is built from length-prefixed records: strings and sequences
+//! carry a `u64` element count, scalars are little-endian fixed width, and
+//! floats are written as their IEEE-754 bit patterns (round-trips NaN and
+//! `-0.0` exactly). `u64` hashes — `CompileKey` components,
+//! `SweepPoint::arch_hash` — are written **verbatim**: this codec
+//! deliberately does not route through [`crate::util::json`], whose
+//! `Num(f64)` representation silently truncates integers above 2^53, which
+//! would alias distinct cache identities on disk.
+//!
+//! Decoding is defensive end to end: every entry ends with an FNV-1a
+//! digest of everything before it, so a truncated file, *any* flipped
+//! byte, a bad enum discriminant or a stale `VERSION` yields a
+//! [`DiagError::Store`] — never a panic, never silently-wrong data, and
+//! never an over-allocation (sequence counts are validated against the
+//! remaining bytes before any `Vec` is reserved). [`super::disk::DiskStore`]
+//! maps every decode error to "entry absent", so corruption degrades a
+//! warm start into a recompute, not a failure.
+//!
+//! `HashMap`-backed structures ([`crate::compiler::Routes`]'
+//! `through_load`, [`crate::compiler::ConfigImage`]) are serialized in
+//! sorted key order, so encoding is deterministic: `encode(decode(bytes))
+//! == bytes` for every well-formed entry, which the store property tests
+//! assert.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::arch::isa::{ConfigWord, Op};
+use crate::arch::params::{ExecMode, PeType, SharedRegMode};
+use crate::arch::topology::Topology;
+use crate::compiler::dfg::{Access, Node, NodeKind};
+use crate::compiler::{
+    CompilePass, ConfigImage, Dfg, Mapping, Routes, Schedule, StageNanos,
+};
+use crate::coordinator::cache::{CacheStats, ElabArtifacts, PassCounts};
+use crate::coordinator::report::{PpaRow, SweepPoint, SweepReport};
+use crate::coordinator::JobTiming;
+use crate::diag::error::DiagError;
+use crate::sim::engine::SimResult;
+use crate::sim::machine::{
+    CpeDesc, DmaDesc, HostDesc, MachineDesc, PeDesc, SharedRegsDesc, SmemDesc,
+};
+use crate::sim::smem::SmemStats;
+
+/// File magic of every store entry ("WindMill ARtifact").
+pub const MAGIC: [u8; 4] = *b"WMAR";
+
+/// Codec version. Bump on any layout change: entries with a different
+/// version are skipped by the disk store (stale, not fatal).
+pub const VERSION: u16 = 1;
+
+/// What a store entry holds (the on-disk counterpart of
+/// [`crate::compiler::CompilePass`] plus the sweep-session partial).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Full elaboration entry: machine description + PPA row + wall time.
+    Elab = 1,
+    Mapping = 2,
+    Sim = 3,
+    SweepPartial = 4,
+    /// A bare [`PpaRow`] (no machine description) — distinct from
+    /// [`Kind::Elab`] so the header check catches type confusion between
+    /// the two row-bearing record types.
+    Ppa = 5,
+}
+
+fn corrupt(msg: impl Into<String>) -> DiagError {
+    DiagError::Store(format!("codec: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive writer / reader
+// ---------------------------------------------------------------------------
+
+/// Append-only encoder. `new` writes the header; `finish` hands back the
+/// buffer.
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new(kind: Kind) -> Self {
+        let mut buf = Vec::with_capacity(256);
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(kind as u8);
+        Enc { buf }
+    }
+
+    /// Seal the entry: append the FNV-1a digest of everything written so
+    /// far. [`Dec::open`] refuses entries whose digest does not match.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = crate::util::hash::fnv1a(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+
+    pub fn u8(&mut self, x: u8) -> &mut Self {
+        self.buf.push(x);
+        self
+    }
+
+    pub fn bool(&mut self, x: bool) -> &mut Self {
+        self.u8(x as u8)
+    }
+
+    pub fn u16(&mut self, x: u16) -> &mut Self {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, x: u32) -> &mut Self {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+        self
+    }
+
+    pub fn i32(&mut self, x: i32) -> &mut Self {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+        self
+    }
+
+    /// Verbatim 8-byte little-endian — the hash-safe path (no f64 detour).
+    pub fn u64(&mut self, x: u64) -> &mut Self {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+        self
+    }
+
+    pub fn usize(&mut self, x: usize) -> &mut Self {
+        self.u64(x as u64)
+    }
+
+    pub fn f32(&mut self, x: f32) -> &mut Self {
+        self.u32(x.to_bits())
+    }
+
+    pub fn f64(&mut self, x: f64) -> &mut Self {
+        self.u64(x.to_bits())
+    }
+
+    /// Length-prefixed UTF-8.
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    /// Sequence record header (element count; elements follow).
+    pub fn seq(&mut self, len: usize) -> &mut Self {
+        self.usize(len)
+    }
+}
+
+/// Bounds-checked decoder over one entry's bytes.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Validate the `MAGIC ∥ VERSION ∥ KIND` header and the trailing
+    /// FNV-1a digest, and position the cursor on the payload.
+    pub fn open(bytes: &'a [u8], expect: Kind) -> Result<Dec<'a>, DiagError> {
+        // magic(4) + version(2) + kind(1) + digest(8).
+        if bytes.len() < 15 {
+            return Err(corrupt(format!("{} bytes is shorter than any entry", bytes.len())));
+        }
+        if bytes[..4] != MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        let got = crate::util::hash::fnv1a(body);
+        if got != want {
+            return Err(corrupt(format!("digest mismatch ({got:016x} != {want:016x})")));
+        }
+        let mut d = Dec { b: body, pos: 4 };
+        let version = d.u16()?;
+        if version != VERSION {
+            return Err(corrupt(format!("stale version {version} (want {VERSION})")));
+        }
+        let kind = d.u8()?;
+        if kind != expect as u8 {
+            return Err(corrupt(format!("kind {kind} where {:?} expected", expect)));
+        }
+        Ok(d)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DiagError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| corrupt("length overflow"))?;
+        if end > self.b.len() {
+            return Err(corrupt(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DiagError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, DiagError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u16(&mut self) -> Result<u16, DiagError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DiagError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32, DiagError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DiagError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, DiagError> {
+        let x = self.u64()?;
+        usize::try_from(x).map_err(|_| corrupt(format!("usize {x} out of range")))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, DiagError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, DiagError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String, DiagError> {
+        let n = self.seq(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| corrupt("non-UTF-8 string"))
+    }
+
+    /// Sequence element count, validated against the remaining bytes
+    /// (`min_item_bytes` ≥ 1 per element) so a corrupted count can never
+    /// drive a huge allocation.
+    pub fn seq(&mut self, min_item_bytes: usize) -> Result<usize, DiagError> {
+        let n = self.usize()?;
+        let remaining = self.b.len() - self.pos;
+        if n.saturating_mul(min_item_bytes.max(1)) > remaining {
+            return Err(corrupt(format!(
+                "sequence of {n} x ≥{min_item_bytes}B exceeds {remaining} remaining bytes"
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Whole payload consumed (trailing garbage is corruption too).
+    pub fn close(self) -> Result<(), DiagError> {
+        if self.pos != self.b.len() {
+            return Err(corrupt(format!("{} trailing bytes", self.b.len() - self.pos)));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enum discriminants
+// ---------------------------------------------------------------------------
+
+fn dec_topology(x: u8) -> Result<Topology, DiagError> {
+    match x {
+        0 => Ok(Topology::Mesh2D),
+        1 => Ok(Topology::OneHop),
+        2 => Ok(Topology::Torus),
+        _ => Err(corrupt(format!("topology {x}"))),
+    }
+}
+
+fn dec_pe_type(x: u8) -> Result<PeType, DiagError> {
+    match x {
+        0 => Ok(PeType::Gpe),
+        1 => Ok(PeType::Lsu),
+        2 => Ok(PeType::Cpe),
+        _ => Err(corrupt(format!("pe type {x}"))),
+    }
+}
+
+fn dec_op_class(x: u8) -> Result<crate::arch::isa::OpClass, DiagError> {
+    use crate::arch::isa::OpClass::*;
+    match x {
+        0 => Ok(Control),
+        1 => Ok(Route),
+        2 => Ok(Alu),
+        3 => Ok(Mul),
+        4 => Ok(Sfu),
+        5 => Ok(Mem),
+        _ => Err(corrupt(format!("op class {x}"))),
+    }
+}
+
+fn dec_exec_mode(x: u8) -> Result<ExecMode, DiagError> {
+    match x {
+        0 => Ok(ExecMode::Scmd),
+        1 => Ok(ExecMode::Mcmd),
+        _ => Err(corrupt(format!("exec mode {x}"))),
+    }
+}
+
+fn dec_shared_reg_mode(x: u8) -> Result<SharedRegMode, DiagError> {
+    match x {
+        0 => Ok(SharedRegMode::LineShared),
+        1 => Ok(SharedRegMode::RowShared),
+        2 => Ok(SharedRegMode::QuadrantShared),
+        3 => Ok(SharedRegMode::GlobalShared),
+        _ => Err(corrupt(format!("shared-reg mode {x}"))),
+    }
+}
+
+fn dec_op(x: u8) -> Result<Op, DiagError> {
+    Op::from_u8(x).ok_or_else(|| corrupt(format!("opcode {x}")))
+}
+
+/// Resolve a serialized topology *name* back to its `&'static str`
+/// (`PpaRow::topology` / `SweepPoint::topology` hold statics).
+fn topology_label(s: &str) -> Result<&'static str, DiagError> {
+    Topology::parse(s)
+        .map(|t| t.name())
+        .ok_or_else(|| corrupt(format!("topology name `{s}`")))
+}
+
+/// Resolve a serialized pass name back to `CompilePass::name`'s static.
+fn pass_label(s: &str) -> Result<&'static str, DiagError> {
+    use CompilePass::*;
+    [Elaborate, Mapping, Place, Route, Schedule, ConfigGen, Simulate]
+        .into_iter()
+        .map(|p| p.name())
+        .find(|n| *n == s)
+        .ok_or_else(|| corrupt(format!("pass name `{s}`")))
+}
+
+// ---------------------------------------------------------------------------
+// PpaRow
+// ---------------------------------------------------------------------------
+
+fn enc_ppa_row(e: &mut Enc, r: &PpaRow) {
+    e.str(&r.label);
+    e.str(&r.pea);
+    e.str(r.topology);
+    e.f64(r.gates);
+    e.f64(r.area_mm2);
+    e.f64(r.sram_kib);
+    e.f64(r.fmax_mhz);
+    e.f64(r.power_mw);
+    e.usize(r.modules);
+    e.f64(r.elaboration_us);
+    e.usize(r.plugin_count);
+}
+
+fn dec_ppa_row(d: &mut Dec) -> Result<PpaRow, DiagError> {
+    Ok(PpaRow {
+        label: d.str()?,
+        pea: d.str()?,
+        topology: topology_label(&d.str()?)?,
+        gates: d.f64()?,
+        area_mm2: d.f64()?,
+        sram_kib: d.f64()?,
+        fmax_mhz: d.f64()?,
+        power_mw: d.f64()?,
+        modules: d.usize()?,
+        elaboration_us: d.f64()?,
+        plugin_count: d.usize()?,
+    })
+}
+
+/// Standalone `PpaRow` round-trip (its own [`Kind::Ppa`], so a bare row
+/// can never be mistaken for a full elaboration entry at the header).
+pub fn encode_ppa_row(r: &PpaRow) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Ppa);
+    enc_ppa_row(&mut e, r);
+    e.finish()
+}
+
+pub fn decode_ppa_row(bytes: &[u8]) -> Result<PpaRow, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Ppa)?;
+    let r = dec_ppa_row(&mut d)?;
+    d.close()?;
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// MachineDesc (inside the elaboration entry)
+// ---------------------------------------------------------------------------
+
+fn enc_machine(e: &mut Enc, m: &MachineDesc) {
+    e.usize(m.rows);
+    e.usize(m.cols);
+    match m.topology {
+        Some(t) => e.u8(1).u8(t as u8),
+        None => e.u8(0),
+    };
+    e.u32(m.data_width);
+    e.seq(m.pes.len());
+    for pe in &m.pes {
+        e.u8(pe.ty as u8);
+        e.seq(pe.caps.len());
+        for &c in &pe.caps {
+            e.u8(c as u8);
+        }
+        e.usize(pe.regs);
+        e.seq(pe.ports.len());
+        for &(r, c) in &pe.ports {
+            e.usize(r).usize(c);
+        }
+    }
+    match &m.smem {
+        Some(s) => {
+            e.u8(1).usize(s.banks).usize(s.depth).u32(s.width_bits).usize(s.pai_requesters)
+        }
+        None => e.u8(0),
+    };
+    match &m.dma {
+        Some(d) => e.u8(1).bool(d.pingpong).u32(d.words_per_cycle),
+        None => e.u8(0),
+    };
+    match &m.shared_regs {
+        Some(s) => e.u8(1).u8(s.mode as u8).usize(s.regs_per_group),
+        None => e.u8(0),
+    };
+    match &m.host {
+        Some(h) => e
+            .u8(1)
+            .usize(h.rtt_entries)
+            .u32(h.config_words_per_cycle)
+            .u32(h.rtt_decode_cycles)
+            .u32(h.axi_latency_cycles),
+        None => e.u8(0),
+    };
+    match &m.cpe {
+        Some(c) => e.u8(1).usize(c.position.0).usize(c.position.1).u32(c.relaunch_cycles),
+        None => e.u8(0),
+    };
+    match m.exec_mode {
+        Some(x) => e.u8(1).u8(x as u8),
+        None => e.u8(0),
+    };
+    e.usize(m.context_depth);
+    e.usize(m.rca_count);
+    e.f64(m.freq_mhz);
+}
+
+fn dec_machine(d: &mut Dec) -> Result<MachineDesc, DiagError> {
+    let rows = d.usize()?;
+    let cols = d.usize()?;
+    let topology = if d.bool()? { Some(dec_topology(d.u8()?)?) } else { None };
+    let data_width = d.u32()?;
+    let n_pes = d.seq(2)?;
+    let mut pes = Vec::with_capacity(n_pes);
+    for _ in 0..n_pes {
+        let ty = dec_pe_type(d.u8()?)?;
+        let n_caps = d.seq(1)?;
+        let mut caps = std::collections::BTreeSet::new();
+        for _ in 0..n_caps {
+            caps.insert(dec_op_class(d.u8()?)?);
+        }
+        let regs = d.usize()?;
+        let n_ports = d.seq(16)?;
+        let mut ports = Vec::with_capacity(n_ports);
+        for _ in 0..n_ports {
+            ports.push((d.usize()?, d.usize()?));
+        }
+        pes.push(PeDesc { ty, caps, regs, ports });
+    }
+    let smem = if d.bool()? {
+        Some(SmemDesc {
+            banks: d.usize()?,
+            depth: d.usize()?,
+            width_bits: d.u32()?,
+            pai_requesters: d.usize()?,
+        })
+    } else {
+        None
+    };
+    let dma = if d.bool()? {
+        Some(DmaDesc { pingpong: d.bool()?, words_per_cycle: d.u32()? })
+    } else {
+        None
+    };
+    let shared_regs = if d.bool()? {
+        Some(SharedRegsDesc { mode: dec_shared_reg_mode(d.u8()?)?, regs_per_group: d.usize()? })
+    } else {
+        None
+    };
+    let host = if d.bool()? {
+        Some(HostDesc {
+            rtt_entries: d.usize()?,
+            config_words_per_cycle: d.u32()?,
+            rtt_decode_cycles: d.u32()?,
+            axi_latency_cycles: d.u32()?,
+        })
+    } else {
+        None
+    };
+    let cpe = if d.bool()? {
+        Some(CpeDesc { position: (d.usize()?, d.usize()?), relaunch_cycles: d.u32()? })
+    } else {
+        None
+    };
+    let exec_mode = if d.bool()? { Some(dec_exec_mode(d.u8()?)?) } else { None };
+    Ok(MachineDesc {
+        rows,
+        cols,
+        topology,
+        data_width,
+        pes,
+        smem,
+        dma,
+        shared_regs,
+        host,
+        cpe,
+        exec_mode,
+        context_depth: d.usize()?,
+        rca_count: d.usize()?,
+        freq_mhz: d.f64()?,
+    })
+}
+
+/// Full elaboration entry: machine description + unlabeled PPA row + the
+/// elaboration wall time a hit avoids.
+pub fn encode_elab(a: &ElabArtifacts) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Elab);
+    enc_machine(&mut e, &a.machine);
+    enc_ppa_row(&mut e, &a.ppa);
+    e.u64(a.elaborate_ns);
+    e.finish()
+}
+
+pub fn decode_elab(bytes: &[u8]) -> Result<ElabArtifacts, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Elab)?;
+    let machine = dec_machine(&mut d)?;
+    let ppa = dec_ppa_row(&mut d)?;
+    let elaborate_ns = d.u64()?;
+    d.close()?;
+    Ok(ElabArtifacts { machine, ppa, elaborate_ns })
+}
+
+// ---------------------------------------------------------------------------
+// Mapping
+// ---------------------------------------------------------------------------
+
+fn enc_access(e: &mut Enc, a: &Access) {
+    match a {
+        Access::Affine { base, coefs } => {
+            e.u8(0).u32(*base).seq(coefs.len());
+            for &c in coefs {
+                e.i32(c);
+            }
+        }
+        Access::Indirect { addr } => {
+            e.u8(1).usize(*addr);
+        }
+    }
+}
+
+fn dec_access(d: &mut Dec) -> Result<Access, DiagError> {
+    match d.u8()? {
+        0 => {
+            let base = d.u32()?;
+            let n = d.seq(4)?;
+            let mut coefs = Vec::with_capacity(n);
+            for _ in 0..n {
+                coefs.push(d.i32()?);
+            }
+            Ok(Access::Affine { base, coefs })
+        }
+        1 => Ok(Access::Indirect { addr: d.usize()? }),
+        x => Err(corrupt(format!("access tag {x}"))),
+    }
+}
+
+fn enc_dfg(e: &mut Enc, dfg: &Dfg) {
+    e.str(&dfg.name);
+    e.seq(dfg.dims.len());
+    for &dim in &dfg.dims {
+        e.u32(dim);
+    }
+    e.seq(dfg.nodes.len());
+    for n in &dfg.nodes {
+        e.u8(n.op as u8);
+        match &n.kind {
+            NodeKind::Const => {
+                e.u8(0);
+            }
+            NodeKind::Index(dim) => {
+                e.u8(1).usize(*dim);
+            }
+            NodeKind::Load(a) => {
+                e.u8(2);
+                enc_access(e, a);
+            }
+            NodeKind::Store { access, period } => {
+                e.u8(3).u32(*period);
+                enc_access(e, access);
+            }
+            NodeKind::Compute => {
+                e.u8(4);
+            }
+            NodeKind::Accum { reset_period } => {
+                e.u8(5).u32(*reset_period);
+            }
+        }
+        e.seq(n.inputs.len());
+        for &src in &n.inputs {
+            e.usize(src);
+        }
+        e.f32(n.imm);
+    }
+}
+
+fn dec_dfg(d: &mut Dec) -> Result<Dfg, DiagError> {
+    let name = d.str()?;
+    let n_dims = d.seq(4)?;
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        dims.push(d.u32()?);
+    }
+    let n_nodes = d.seq(2)?;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let op = dec_op(d.u8()?)?;
+        let kind = match d.u8()? {
+            0 => NodeKind::Const,
+            1 => NodeKind::Index(d.usize()?),
+            2 => NodeKind::Load(dec_access(d)?),
+            3 => {
+                let period = d.u32()?;
+                NodeKind::Store { access: dec_access(d)?, period }
+            }
+            4 => NodeKind::Compute,
+            5 => NodeKind::Accum { reset_period: d.u32()? },
+            x => return Err(corrupt(format!("node kind {x}"))),
+        };
+        let n_inputs = d.seq(8)?;
+        let mut inputs = Vec::with_capacity(n_inputs);
+        for _ in 0..n_inputs {
+            inputs.push(d.usize()?);
+        }
+        let imm = d.f32()?;
+        nodes.push(Node { op, kind, inputs, imm });
+    }
+    Ok(Dfg { name, dims, nodes })
+}
+
+/// Mapping entry: the compiled kernel plus the per-stage wall time of the
+/// miss that produced it (so warm reports can show what the store saves).
+pub fn encode_mapping(m: &Mapping, ns: &StageNanos) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Mapping);
+    enc_dfg(&mut e, &m.dfg);
+    e.seq(m.place.len());
+    for &(r, c) in &m.place {
+        e.usize(r).usize(c);
+    }
+    e.seq(m.routes.edges.len());
+    for edge in &m.routes.edges {
+        e.usize(edge.src_node).usize(edge.dst_node);
+        e.seq(edge.path.len());
+        for &(r, c) in &edge.path {
+            e.usize(r).usize(c);
+        }
+    }
+    // HashMap: sorted for a deterministic image.
+    let mut through: Vec<(&(usize, usize), &u32)> = m.routes.through_load.iter().collect();
+    through.sort();
+    e.seq(through.len());
+    for (&(r, c), &load) in through {
+        e.usize(r).usize(c).u32(load);
+    }
+    e.u32(m.schedule.ii_mem)
+        .u32(m.schedule.ii_rec)
+        .u32(m.schedule.ii_route)
+        .u32(m.schedule.ii)
+        .usize(m.schedule.ctx_words_needed)
+        .bool(m.schedule.scmd_compatible)
+        .u32(m.schedule.depth);
+    let mut pes: Vec<(&(usize, usize), &Vec<ConfigWord>)> = m.config.words.iter().collect();
+    pes.sort_by_key(|(coord, _)| **coord);
+    e.seq(pes.len());
+    for (&(r, c), words) in pes {
+        e.usize(r).usize(c);
+        e.seq(words.len());
+        for w in words {
+            for half in w.encode() {
+                e.u32(half);
+            }
+        }
+    }
+    e.u64(ns.place).u64(ns.route).u64(ns.schedule).u64(ns.config);
+    e.finish()
+}
+
+pub fn decode_mapping(bytes: &[u8]) -> Result<(Mapping, StageNanos), DiagError> {
+    let mut d = Dec::open(bytes, Kind::Mapping)?;
+    let dfg = dec_dfg(&mut d)?;
+    let n_place = d.seq(16)?;
+    let mut place = Vec::with_capacity(n_place);
+    for _ in 0..n_place {
+        place.push((d.usize()?, d.usize()?));
+    }
+    let n_edges = d.seq(8)?;
+    let mut edges = Vec::with_capacity(n_edges);
+    for _ in 0..n_edges {
+        let src_node = d.usize()?;
+        let dst_node = d.usize()?;
+        let n_path = d.seq(16)?;
+        let mut path = Vec::with_capacity(n_path);
+        for _ in 0..n_path {
+            path.push((d.usize()?, d.usize()?));
+        }
+        edges.push(crate::compiler::route::Route { src_node, dst_node, path });
+    }
+    let n_through = d.seq(20)?;
+    let mut through_load = HashMap::with_capacity(n_through);
+    for _ in 0..n_through {
+        let coord = (d.usize()?, d.usize()?);
+        through_load.insert(coord, d.u32()?);
+    }
+    let schedule = Schedule {
+        ii_mem: d.u32()?,
+        ii_rec: d.u32()?,
+        ii_route: d.u32()?,
+        ii: d.u32()?,
+        ctx_words_needed: d.usize()?,
+        scmd_compatible: d.bool()?,
+        depth: d.u32()?,
+    };
+    let n_pes = d.seq(16)?;
+    let mut words = HashMap::with_capacity(n_pes);
+    for _ in 0..n_pes {
+        let coord = (d.usize()?, d.usize()?);
+        let n_words = d.seq(16)?;
+        let mut ws = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            let enc = [d.u32()?, d.u32()?, d.u32()?, d.u32()?];
+            ws.push(ConfigWord::decode(enc).map_err(|e| corrupt(e.to_string()))?);
+        }
+        words.insert(coord, ws);
+    }
+    let ns = StageNanos {
+        place: d.u64()?,
+        route: d.u64()?,
+        schedule: d.u64()?,
+        config: d.u64()?,
+    };
+    d.close()?;
+    Ok((
+        Mapping {
+            dfg,
+            place,
+            routes: Routes { edges, through_load },
+            schedule,
+            config: ConfigImage { words },
+        },
+        ns,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// SimResult
+// ---------------------------------------------------------------------------
+
+pub fn encode_sim(r: &SimResult) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Sim);
+    e.u64(r.cycles);
+    e.seq(r.mem.len());
+    for &x in &r.mem {
+        e.f32(x);
+    }
+    e.u64(r.fires);
+    e.u64(r.smem.requests).u64(r.smem.grants).u64(r.smem.conflicts).usize(r.smem.peak_queue);
+    e.f64(r.avg_parallelism);
+    e.f64(r.measured_ii);
+    e.finish()
+}
+
+pub fn decode_sim(bytes: &[u8]) -> Result<SimResult, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Sim)?;
+    let cycles = d.u64()?;
+    let n_mem = d.seq(4)?;
+    let mut mem = Vec::with_capacity(n_mem);
+    for _ in 0..n_mem {
+        mem.push(d.f32()?);
+    }
+    let fires = d.u64()?;
+    let smem = SmemStats {
+        requests: d.u64()?,
+        grants: d.u64()?,
+        conflicts: d.u64()?,
+        peak_queue: d.usize()?,
+    };
+    let avg_parallelism = d.f64()?;
+    let measured_ii = d.f64()?;
+    d.close()?;
+    Ok(SimResult { cycles, mem, fires, smem, avg_parallelism, measured_ii })
+}
+
+// ---------------------------------------------------------------------------
+// Sweep partials (sharded sessions)
+// ---------------------------------------------------------------------------
+
+fn enc_timing(e: &mut Enc, t: &JobTiming) {
+    e.u64(t.elaborate_ns)
+        .u64(t.compile_ns)
+        .u64(t.simulate_ns)
+        .u64(t.baseline_ns)
+        .u64(t.cache_hits)
+        .u64(t.cache_misses);
+}
+
+fn dec_timing(d: &mut Dec) -> Result<JobTiming, DiagError> {
+    Ok(JobTiming {
+        elaborate_ns: d.u64()?,
+        compile_ns: d.u64()?,
+        simulate_ns: d.u64()?,
+        baseline_ns: d.u64()?,
+        cache_hits: d.u64()?,
+        cache_misses: d.u64()?,
+    })
+}
+
+fn enc_cache_stats(e: &mut Enc, s: &CacheStats) {
+    e.u64(s.hits).u64(s.disk_hits).u64(s.misses).u64(s.evictions);
+    e.seq(s.by_pass.len());
+    for (&pass, c) in &s.by_pass {
+        e.str(pass);
+        e.u64(c.mem).u64(c.disk).u64(c.miss);
+    }
+}
+
+fn dec_cache_stats(d: &mut Dec) -> Result<CacheStats, DiagError> {
+    let hits = d.u64()?;
+    let disk_hits = d.u64()?;
+    let misses = d.u64()?;
+    let evictions = d.u64()?;
+    let n = d.seq(32)?;
+    let mut by_pass = BTreeMap::new();
+    for _ in 0..n {
+        let pass = pass_label(&d.str()?)?;
+        by_pass.insert(pass, PassCounts { mem: d.u64()?, disk: d.u64()?, miss: d.u64()? });
+    }
+    Ok(CacheStats { hits, disk_hits, misses, evictions, by_pass })
+}
+
+fn enc_point(e: &mut Enc, p: &SweepPoint) {
+    e.str(&p.label);
+    e.u64(p.arch_hash); // verbatim: hashes exceed 2^53 routinely
+    e.str(&p.pea);
+    e.str(p.topology);
+    e.f64(p.gates).f64(p.area_mm2).f64(p.power_mw).f64(p.fmax_mhz);
+    e.u64(p.cycles);
+    e.f64(p.wm_time_ns).f64(p.speedup_vs_cpu).f64(p.speedup_vs_gpu);
+    e.u32(p.ii);
+    enc_timing(e, &p.timing);
+}
+
+fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
+    Ok(SweepPoint {
+        label: d.str()?,
+        arch_hash: d.u64()?,
+        pea: d.str()?,
+        topology: topology_label(&d.str()?)?,
+        gates: d.f64()?,
+        area_mm2: d.f64()?,
+        power_mw: d.f64()?,
+        fmax_mhz: d.f64()?,
+        cycles: d.u64()?,
+        wm_time_ns: d.f64()?,
+        speedup_vs_cpu: d.f64()?,
+        speedup_vs_gpu: d.f64()?,
+        ii: d.u32()?,
+        timing: dec_timing(d)?,
+    })
+}
+
+/// One shard's serialized accumulator state plus the session coordinates
+/// that make merging safe (shard index/count, grid fingerprint, workload,
+/// seed).
+#[derive(Debug, Clone)]
+pub struct SweepPartial {
+    pub shard: u32,
+    pub of: u32,
+    /// [`crate::store::session::SweepSession::grid_hash`] of the *full*
+    /// grid — shards of different grids refuse to merge.
+    pub grid_hash: u64,
+    pub workload: String,
+    pub seed: u64,
+    pub report: SweepReport,
+}
+
+pub fn encode_sweep_partial(p: &SweepPartial) -> Vec<u8> {
+    let mut e = Enc::new(Kind::SweepPartial);
+    e.u32(p.shard).u32(p.of).u64(p.grid_hash);
+    e.str(&p.workload);
+    e.u64(p.seed);
+    let r = &p.report;
+    e.seq(r.points.len());
+    for pt in &r.points {
+        enc_point(&mut e, pt);
+    }
+    e.seq(r.failures.len());
+    for (label, err) in &r.failures {
+        e.str(label).str(err);
+    }
+    e.seq(r.frontier.len());
+    for &i in &r.frontier {
+        e.usize(i);
+    }
+    enc_cache_stats(&mut e, &r.cache);
+    enc_timing(&mut e, &r.timing);
+    e.u64(r.wall_ns);
+    e.finish()
+}
+
+pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
+    let mut d = Dec::open(bytes, Kind::SweepPartial)?;
+    let shard = d.u32()?;
+    let of = d.u32()?;
+    let grid_hash = d.u64()?;
+    let workload = d.str()?;
+    let seed = d.u64()?;
+    let n_points = d.seq(64)?;
+    let mut points = Vec::with_capacity(n_points);
+    for _ in 0..n_points {
+        points.push(dec_point(&mut d)?);
+    }
+    let n_failures = d.seq(16)?;
+    let mut failures = Vec::with_capacity(n_failures);
+    for _ in 0..n_failures {
+        failures.push((d.str()?, d.str()?));
+    }
+    let n_frontier = d.seq(8)?;
+    let mut frontier = Vec::with_capacity(n_frontier);
+    for _ in 0..n_frontier {
+        frontier.push(d.usize()?);
+    }
+    let cache = dec_cache_stats(&mut d)?;
+    let timing = dec_timing(&mut d)?;
+    let wall_ns = d.u64()?;
+    d.close()?;
+    Ok(SweepPartial {
+        shard,
+        of,
+        grid_hash,
+        workload,
+        seed,
+        report: SweepReport { points, failures, frontier, cache, timing, wall_ns },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::compiler::compile_timed;
+    use crate::plugins;
+
+    fn sample_row() -> PpaRow {
+        PpaRow {
+            label: "pea8-torus".into(),
+            pea: "8x8".into(),
+            topology: Topology::Torus.name(),
+            gates: 123456.75,
+            area_mm2: 0.4375,
+            sram_kib: 16.0,
+            fmax_mhz: 750.0,
+            power_mw: 16.15,
+            modules: 77,
+            elaboration_us: 1234.5,
+            plugin_count: 9,
+        }
+    }
+
+    #[test]
+    fn ppa_row_roundtrips_and_is_canonical() {
+        let row = sample_row();
+        let bytes = encode_ppa_row(&row);
+        let back = decode_ppa_row(&bytes).unwrap();
+        assert_eq!(back.label, row.label);
+        assert_eq!(back.topology, "torus");
+        assert_eq!(back.gates.to_bits(), row.gates.to_bits());
+        assert_eq!(encode_ppa_row(&back), bytes, "canonical re-encode");
+        // A bare row is not an elaboration entry: the header kind says so.
+        assert!(
+            matches!(decode_elab(&bytes), Err(DiagError::Store(m)) if m.contains("kind")),
+            "cross-kind decode must be caught at the header"
+        );
+    }
+
+    #[test]
+    fn elab_roundtrip_preserves_machine() {
+        let params = presets::standard();
+        let machine = plugins::elaborate(params.clone()).unwrap().artifact;
+        let art = ElabArtifacts { machine, ppa: sample_row(), elaborate_ns: u64::MAX - 3 };
+        let bytes = encode_elab(&art);
+        let back = decode_elab(&bytes).unwrap();
+        assert_eq!(back.machine.rows, art.machine.rows);
+        assert_eq!(back.machine.pes.len(), art.machine.pes.len());
+        assert_eq!(back.machine.pes[0], art.machine.pes[0]);
+        assert_eq!(back.machine.smem, art.machine.smem);
+        assert_eq!(back.machine.host, art.machine.host);
+        assert_eq!(back.machine.cpe, art.machine.cpe);
+        assert_eq!(back.elaborate_ns, art.elaborate_ns);
+        back.machine.validate().unwrap();
+        assert_eq!(encode_elab(&back), bytes, "canonical re-encode");
+    }
+
+    #[test]
+    fn mapping_roundtrip_is_exact() {
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::gemm_bias(4, 4, 4);
+        let (mapping, ns) = compile_timed(dfg, &machine, 7).unwrap();
+        let bytes = encode_mapping(&mapping, &ns);
+        let (back, back_ns) = decode_mapping(&bytes).unwrap();
+        assert_eq!(back.dfg.stable_hash(), mapping.dfg.stable_hash());
+        assert_eq!(back.place, mapping.place);
+        assert_eq!(back.schedule, mapping.schedule);
+        assert_eq!(back.routes.edges, mapping.routes.edges);
+        assert_eq!(back.routes.through_load, mapping.routes.through_load);
+        assert_eq!(back.config.total_words(), mapping.config.total_words());
+        assert_eq!(back_ns, ns);
+        assert_eq!(encode_mapping(&back, &back_ns), bytes, "canonical re-encode");
+    }
+
+    #[test]
+    fn sim_result_roundtrips_bit_patterns() {
+        let r = SimResult {
+            cycles: u64::MAX - 1,
+            mem: vec![0.0, -0.0, 1.5e-42, f32::MAX, -7.25],
+            fires: 1 << 62,
+            smem: SmemStats { requests: 10, grants: 9, conflicts: 1, peak_queue: 3 },
+            avg_parallelism: 12.75,
+            measured_ii: 1.0625,
+        };
+        let back = decode_sim(&encode_sim(&r)).unwrap();
+        assert_eq!(back.cycles, r.cycles);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.mem), bits(&r.mem), "-0.0 and denormals survive");
+        assert_eq!(back.smem, r.smem);
+        assert_eq!(back.fires, r.fires);
+    }
+
+    #[test]
+    fn hashes_above_2_53_survive_verbatim() {
+        // The values util::json::Num(f64) would corrupt: 2^53 + 1 is the
+        // first unrepresentable integer; full-width FNV digests live here.
+        for h in [(1u64 << 53) + 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            let mut e = Enc::new(Kind::Sim);
+            e.u64(h);
+            let buf = e.finish();
+            let mut d = Dec::open(&buf, Kind::Sim).unwrap();
+            assert_eq!(d.u64().unwrap(), h);
+            assert!((h as f64) as u64 != h || h == u64::MAX, "sanity: f64 would truncate");
+        }
+    }
+
+    /// Patch a header byte and recompute the trailing digest, so the check
+    /// under test (version / kind) is reached rather than the digest check.
+    fn patched(bytes: &[u8], offset: usize, value: u8) -> Vec<u8> {
+        let mut b = bytes.to_vec();
+        b[offset] = value;
+        let n = b.len();
+        let sum = crate::util::hash::fnv1a(&b[..n - 8]);
+        b[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_errors_not_panics() {
+        let bytes = encode_ppa_row(&sample_row());
+        for cut in [0, 3, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_ppa_row(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(decode_ppa_row(&bad_magic).is_err());
+        // Any payload bit flip trips the digest.
+        for offset in [8, bytes.len() / 2, bytes.len() - 9] {
+            let mut flipped = bytes.clone();
+            flipped[offset] ^= 0x10;
+            assert!(
+                matches!(decode_ppa_row(&flipped), Err(DiagError::Store(m)) if m.contains("digest")),
+                "flip at {offset}"
+            );
+        }
+        // Stale version / wrong kind (with a *valid* digest) are named.
+        let stale = patched(&bytes, 4, 0xFF);
+        assert!(matches!(decode_ppa_row(&stale), Err(DiagError::Store(m)) if m.contains("version")));
+        let wrong_kind = patched(&bytes, 6, Kind::Sim as u8);
+        assert!(matches!(decode_ppa_row(&wrong_kind), Err(DiagError::Store(m)) if m.contains("kind")));
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(decode_ppa_row(&trailing).is_err(), "trailing bytes rejected");
+    }
+
+    #[test]
+    fn huge_sequence_counts_cannot_allocate() {
+        // Claim 2^60 mem words in a 40-byte file: must error before reserving.
+        let mut e = Enc::new(Kind::Sim);
+        e.u64(1); // cycles
+        e.u64(1 << 60); // absurd mem length
+        let buf = e.finish();
+        assert!(decode_sim(&buf).is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Persistent, content-addressed artifact store backed by a directory.
+//!
+//! [`DiskStore`] is the durable tier behind the coordinator's in-memory
+//! [`crate::coordinator::ArtifactCache`]: entries are laid out as
+//!
+//! ```text
+//! <dir>/<pass>/<compile-key-hex>.bin      e.g. store/simulate/8f3a…c1.bin
+//! <dir>/partials/…                        sharded sweep-session partials
+//! ```
+//!
+//! where `<pass>` is [`crate::compiler::CompilePass::name`] and the file
+//! stem is the four `CompileKey` hash components (`arch ∥ dfg ∥ seed ∥
+//! image`) as fixed-width hex — the same content address the in-memory
+//! cache uses, so any process that recomputes an artifact lands on the
+//! same file.
+//!
+//! Durability/concurrency model:
+//!
+//! * **Writes are atomic**: encode → write to a same-directory temp file →
+//!   `rename`. Readers (including other processes sharing the directory)
+//!   never observe a half-written entry; concurrent writers of one key
+//!   race benignly because artifacts are deterministic functions of the
+//!   key, so last-rename-wins replaces identical bytes.
+//! * **Reads are defensive**: a missing file is a miss; a truncated,
+//!   corrupted or stale-version file is *skipped* (counted in
+//!   [`DiskStats::corrupt`]) and the caller recomputes — corruption can
+//!   cost a warm start, never a sweep.
+//! * Failures to persist are recorded ([`DiskStats::write_errors`]) and
+//!   otherwise ignored: the store is an accelerator, not a dependency.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::compiler::{CompileKey, Mapping, StageNanos};
+use crate::coordinator::cache::ElabArtifacts;
+use crate::diag::error::DiagError;
+use crate::sim::engine::SimResult;
+
+use super::codec;
+
+/// Traffic counters of one [`DiskStore`] handle (per-instance, not global
+/// to the directory).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DiskStats {
+    /// Entries successfully loaded and decoded.
+    pub hits: u64,
+    /// Lookups with no file present.
+    pub misses: u64,
+    /// Entries persisted.
+    pub writes: u64,
+    /// Entries present but skipped (truncated / corrupted / stale version).
+    pub corrupt: u64,
+    /// Persist attempts that failed at the filesystem level.
+    pub write_errors: u64,
+}
+
+/// Process-wide temp-file sequence. Shared by *every* store handle (and
+/// the sweep-session partial writer) so two handles on one directory can
+/// never collide on a temp name — with per-handle counters, handle A's
+/// rename could capture handle B's half-written bytes for a different key.
+/// Cross-process uniqueness comes from the pid in the temp name.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A directory of persisted artifacts. Cheap to open; share via `Arc`.
+#[derive(Debug)]
+pub struct DiskStore {
+    root: PathBuf,
+    stats: Mutex<DiskStats>,
+}
+
+impl DiskStore {
+    /// Open (creating if absent) an artifact store rooted at `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<DiskStore, DiagError> {
+        let root = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root).map_err(|e| {
+            DiagError::Store(format!("cannot create store dir {}: {e}", root.display()))
+        })?;
+        Ok(DiskStore { root, stats: Mutex::new(DiskStats::default()) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn stats(&self) -> DiskStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// On-disk path of one compile key:
+    /// `<root>/<pass>/<arch><dfg><seed><image>.bin` (hex, fixed width).
+    pub fn entry_path(&self, key: &CompileKey) -> PathBuf {
+        self.root.join(key.pass.name()).join(format!(
+            "{:016x}{:016x}{:016x}{:016x}.bin",
+            key.arch, key.dfg, key.seed, key.image
+        ))
+    }
+
+    /// Number of persisted artifact entries (walks the pass directories;
+    /// diagnostics and tests, not a hot path).
+    pub fn entry_count(&self) -> usize {
+        let mut n = 0;
+        if let Ok(passes) = std::fs::read_dir(&self.root) {
+            for pass in passes.flatten() {
+                if !pass.path().is_dir() || pass.file_name() == "partials" {
+                    continue;
+                }
+                if let Ok(entries) = std::fs::read_dir(pass.path()) {
+                    n += entries
+                        .flatten()
+                        .filter(|e| e.path().extension().is_some_and(|x| x == "bin"))
+                        .count();
+                }
+            }
+        }
+        n
+    }
+
+    fn read(&self, key: &CompileKey) -> Option<Vec<u8>> {
+        match std::fs::read(self.entry_path(key)) {
+            Ok(bytes) => Some(bytes),
+            Err(_) => {
+                self.stats.lock().unwrap().misses += 1;
+                None
+            }
+        }
+    }
+
+    fn decoded<T>(&self, r: Result<T, DiagError>) -> Option<T> {
+        let mut s = self.stats.lock().unwrap();
+        match r {
+            Ok(v) => {
+                s.hits += 1;
+                Some(v)
+            }
+            Err(_) => {
+                // Truncated / corrupted / stale — skip, never fail.
+                s.corrupt += 1;
+                None
+            }
+        }
+    }
+
+    /// Atomically write `bytes` at `path` (same-directory temp + rename,
+    /// temp name unique per process *and* per call). Shared with the
+    /// sweep-session partial writer.
+    pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        let dir = path.parent().ok_or(std::io::ErrorKind::InvalidInput)?;
+        std::fs::create_dir_all(dir)?;
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!(".tmp-{}-{seq}", std::process::id()));
+        std::fs::write(&tmp, bytes)?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    fn put(&self, key: &CompileKey, bytes: Vec<u8>) {
+        // I/O outside the stats lock: workers persist concurrently.
+        let wrote = Self::write_atomic(&self.entry_path(key), &bytes).is_ok();
+        let mut s = self.stats.lock().unwrap();
+        if wrote {
+            s.writes += 1;
+        } else {
+            s.write_errors += 1;
+        }
+    }
+
+    // ---- typed entries ----------------------------------------------------
+
+    pub fn load_elab(&self, key: &CompileKey) -> Option<ElabArtifacts> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_elab(&bytes))
+    }
+
+    pub fn store_elab(&self, key: &CompileKey, artifacts: &ElabArtifacts) {
+        self.put(key, codec::encode_elab(artifacts));
+    }
+
+    pub fn load_mapping(&self, key: &CompileKey) -> Option<(Mapping, StageNanos)> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_mapping(&bytes))
+    }
+
+    pub fn store_mapping(&self, key: &CompileKey, mapping: &Mapping, ns: &StageNanos) {
+        self.put(key, codec::encode_mapping(mapping, ns));
+    }
+
+    pub fn load_sim(&self, key: &CompileKey) -> Option<SimResult> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_sim(&bytes))
+    }
+
+    pub fn store_sim(&self, key: &CompileKey, result: &SimResult) {
+        self.put(key, codec::encode_sim(result));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::compiler::{compile_timed, CompilePass};
+    use crate::plugins;
+
+    fn tmp_store(tag: &str) -> (PathBuf, DiskStore) {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-diskstore-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DiskStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn mapping_entries_roundtrip_through_the_directory() {
+        let (dir, store) = tmp_store("mapping");
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(32, 2.0);
+        let key = CompileKey::mapping(presets::standard().stable_hash(), &dfg, 7);
+        assert!(store.load_mapping(&key).is_none(), "empty store misses");
+        let (mapping, ns) = compile_timed(dfg, &machine, 7).unwrap();
+        store.store_mapping(&key, &mapping, &ns);
+        let (back, back_ns) = store.load_mapping(&key).unwrap();
+        assert_eq!(back.place, mapping.place);
+        assert_eq!(back_ns, ns);
+        assert_eq!(store.entry_count(), 1);
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 1, 1));
+        // A second handle on the same directory sees the entry (the
+        // cross-process layout contract).
+        let other = DiskStore::open(&dir).unwrap();
+        assert!(other.load_mapping(&key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_entries_are_skipped_not_fatal() {
+        let (dir, store) = tmp_store("corrupt");
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(16, 1.0);
+        let key = CompileKey::mapping(1234, &dfg, 1);
+        let (mapping, ns) = compile_timed(dfg, &machine, 1).unwrap();
+        store.store_mapping(&key, &mapping, &ns);
+
+        // Truncate the file mid-record.
+        let path = store.entry_path(&key);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load_mapping(&key).is_none());
+        assert_eq!(store.stats().corrupt, 1);
+
+        // Flip the version: stale entries are skipped too.
+        let mut stale = bytes.clone();
+        stale[4] = 0xEE;
+        std::fs::write(&path, &stale).unwrap();
+        assert!(store.load_mapping(&key).is_none());
+        assert_eq!(store.stats().corrupt, 2);
+
+        // Rewriting repairs the slot.
+        store.store_mapping(&key, &mapping, &ns);
+        assert!(store.load_mapping(&key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_components_map_to_distinct_files() {
+        let (dir, store) = tmp_store("paths");
+        let a = CompileKey::simulate(1, 2, 3, 4);
+        let b = CompileKey::simulate(1, 2, 3, 5);
+        assert_ne!(store.entry_path(&a), store.entry_path(&b));
+        assert!(store.entry_path(&a).starts_with(dir.join(CompilePass::Simulate.name())));
+        // 4 × 16 hex chars + ".bin".
+        let name = store.entry_path(&a).file_name().unwrap().to_str().unwrap().to_string();
+        assert_eq!(name.len(), 64 + 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

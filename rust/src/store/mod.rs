@@ -1,0 +1,30 @@
+//! Persistent artifact store + sharded sweep sessions.
+//!
+//! PR 1/2 made a *single process* nearly free on re-runs; this module makes
+//! the savings durable and distributable, which is what agile DIAG
+//! generation actually needs — the same candidate grid is re-explored every
+//! time the application demand shifts, usually by a fresh process (CI job,
+//! another machine, a colleague's checkout):
+//!
+//! * [`codec`] — versioned, zero-dependency binary serialization of every
+//!   cacheable artifact (`PpaRow` + machine description, `Mapping`,
+//!   `SimResult`, sweep partials). `u64` hashes are written verbatim — not
+//!   through `util::json`, whose `f64` numbers truncate above 2^53.
+//! * [`disk`] — [`DiskStore`]: `<dir>/<pass>/<compile-key-hex>.bin` with
+//!   atomic tmp+rename writes; corrupted or stale entries are skipped, not
+//!   fatal. The coordinator's `ArtifactCache` reads/writes through it
+//!   (`ArtifactCache::with_store`), so a **cold process on a warm store
+//!   performs zero elaborations, zero compiles and zero `simulate()`
+//!   calls**.
+//! * [`session`] — [`SweepSession`]: deterministic contiguous sharding of
+//!   `ParamGrid::points()` across processes plus a merge that is
+//!   bit-identical to the unsharded sweep (CLI: `windmill sweep --store DIR
+//!   --shard I/N`, then `windmill sweep-merge --store DIR`).
+
+pub mod codec;
+pub mod disk;
+pub mod session;
+
+pub use codec::SweepPartial;
+pub use disk::{DiskStats, DiskStore};
+pub use session::SweepSession;

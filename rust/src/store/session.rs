@@ -1,0 +1,319 @@
+//! Sharded sweep sessions: split one grid across processes, merge the
+//! partial reports back into a single frontier.
+//!
+//! The FIFO worker pool parallelizes one process; a [`SweepSession`]
+//! parallelizes *processes* (or machines sharing a filesystem): each shard
+//! runs `windmill sweep --store DIR --shard I/N` independently against the
+//! shared [`super::disk::DiskStore`], writes its serialized
+//! [`SweepPartial`] under `DIR/partials/`, and `windmill sweep-merge`
+//! folds them into one [`SweepReport`].
+//!
+//! **Determinism contract** (pinned by `tests/store_persistence.rs`):
+//! [`SweepSession::shard`] partitions [`ParamGrid::points`] into
+//! *contiguous* chunks, and the pool returns results in submission order,
+//! so concatenating shard partials in shard order reproduces the exact
+//! point order of the unsharded sweep — the merged report's points,
+//! frontier indices and every `f64` in them are bit-identical to a
+//! single-process run. Merging validates the session coordinates (shard
+//! count, grid fingerprint, workload, seed) and refuses mixed or
+//! incomplete shard sets.
+
+use std::path::{Path, PathBuf};
+
+use crate::arch::params::{ParamGrid, WindMillParams};
+use crate::coordinator::report::{SweepAccumulator, SweepReport};
+use crate::coordinator::{SweepEngine, Workload};
+use crate::diag::error::DiagError;
+use crate::util::StableHasher;
+
+use super::codec::{decode_sweep_partial, encode_sweep_partial};
+use super::disk::DiskStore;
+
+pub use super::codec::SweepPartial;
+
+/// Namespace for shard/merge operations of one design-space sweep.
+pub struct SweepSession;
+
+impl SweepSession {
+    /// Stable fingerprint of a grid: the ordered labels and parameter
+    /// hashes of every (validated) point. Two shards merge only if their
+    /// full grids fingerprint equal.
+    pub fn grid_hash(grid: &ParamGrid) -> u64 {
+        let mut h = StableHasher::new();
+        let points = grid.points();
+        h.usize(points.len());
+        for (label, params) in &points {
+            h.str(label);
+            h.u64(params.stable_hash());
+        }
+        h.finish()
+    }
+
+    /// Deterministically partition `points` into the `index`-th of `of`
+    /// contiguous chunks (balanced to within one point). Concatenating the
+    /// chunks for `index = 0..of` reproduces `points` exactly.
+    pub fn shard_points(
+        points: Vec<(String, WindMillParams)>,
+        index: usize,
+        of: usize,
+    ) -> Vec<(String, WindMillParams)> {
+        assert!(of > 0 && index < of, "shard {index}/{of} out of range");
+        let n = points.len();
+        let lo = index * n / of;
+        let hi = (index + 1) * n / of;
+        points.into_iter().skip(lo).take(hi - lo).collect()
+    }
+
+    /// The `index`-th of `of` shards of the grid's validated points.
+    pub fn shard(grid: &ParamGrid, index: usize, of: usize) -> Vec<(String, WindMillParams)> {
+        Self::shard_points(grid.points(), index, of)
+    }
+
+    /// Run one shard of `grid` on `engine` and package the result for
+    /// [`SweepSession::merge`].
+    pub fn run_shard(
+        engine: &SweepEngine,
+        grid: &ParamGrid,
+        workload: &Workload,
+        seed: u64,
+        index: usize,
+        of: usize,
+    ) -> Result<SweepPartial, DiagError> {
+        if of == 0 || index >= of {
+            return Err(DiagError::Store(format!("shard {index}/{of} out of range")));
+        }
+        let points = Self::shard(grid, index, of);
+        let report = engine.sweep_points(points, workload, seed);
+        Ok(SweepPartial {
+            shard: index as u32,
+            of: of as u32,
+            grid_hash: Self::grid_hash(grid),
+            workload: workload.name(),
+            seed,
+            report,
+        })
+    }
+
+    /// Where partials live under a store root.
+    pub fn partials_dir(store_root: &Path) -> PathBuf {
+        store_root.join("partials")
+    }
+
+    /// Persist one shard's partial under `store_root/partials/` (atomic
+    /// temp+rename, same discipline as artifact entries). Returns the path.
+    pub fn save_partial(store_root: &Path, partial: &SweepPartial) -> Result<PathBuf, DiagError> {
+        let path = Self::partials_dir(store_root).join(format!(
+            "{}-s{}-{:016x}-{}of{}.bin",
+            partial.workload, partial.seed, partial.grid_hash, partial.shard, partial.of
+        ));
+        let bytes = encode_sweep_partial(partial);
+        DiskStore::write_atomic(&path, &bytes)
+            .map_err(|e| DiagError::Store(format!("cannot write {}: {e}", path.display())))?;
+        Ok(path)
+    }
+
+    /// Load every decodable partial under `store_root/partials/`. Returns
+    /// the partials plus the number of files skipped as corrupt (same
+    /// skip-not-fail policy as artifact entries).
+    pub fn load_partials(store_root: &Path) -> Result<(Vec<SweepPartial>, usize), DiagError> {
+        let dir = Self::partials_dir(store_root);
+        let entries = std::fs::read_dir(&dir).map_err(|e| {
+            DiagError::Store(format!("cannot read partials dir {}: {e}", dir.display()))
+        })?;
+        let mut partials = Vec::new();
+        let mut skipped = 0;
+        let mut paths: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+            .collect();
+        paths.sort(); // deterministic load order
+        for p in paths {
+            match std::fs::read(&p).ok().and_then(|b| decode_sweep_partial(&b).ok()) {
+                Some(partial) => partials.push(partial),
+                None => skipped += 1,
+            }
+        }
+        Ok((partials, skipped))
+    }
+
+    /// Group partials by their session coordinates `(workload, seed, grid
+    /// fingerprint, shard count)`, deterministically ordered. A store
+    /// directory accumulates partials from many sessions over time (second
+    /// workloads, re-shardings with a different N); each group is a merge
+    /// candidate on its own, so old sessions never poison new merges.
+    pub fn group_sessions(partials: Vec<SweepPartial>) -> Vec<Vec<SweepPartial>> {
+        let mut groups: std::collections::BTreeMap<(String, u64, u64, u32), Vec<SweepPartial>> =
+            std::collections::BTreeMap::new();
+        for p in partials {
+            groups
+                .entry((p.workload.clone(), p.seed, p.grid_hash, p.of))
+                .or_default()
+                .push(p);
+        }
+        groups.into_values().collect()
+    }
+
+    /// Whether one session's partials cover every shard `0..of`.
+    pub fn is_complete(group: &[SweepPartial]) -> bool {
+        let Some(first) = group.first() else { return false };
+        let mut shards: Vec<u32> = group.iter().map(|p| p.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        shards == (0..first.of).collect::<Vec<u32>>()
+    }
+
+    /// One-line description of a session group (CLI disambiguation).
+    pub fn describe(group: &[SweepPartial]) -> String {
+        match group.first() {
+            Some(p) => {
+                let mut shards: Vec<u32> = group.iter().map(|g| g.shard).collect();
+                shards.sort_unstable();
+                shards.dedup();
+                format!(
+                    "`{}` seed {} grid {:016x}: {}/{} shards",
+                    p.workload,
+                    p.seed,
+                    p.grid_hash,
+                    shards.len(),
+                    p.of
+                )
+            }
+            None => "empty session".to_string(),
+        }
+    }
+
+    /// Fold shard partials into the single-process report: validates the
+    /// session coordinates, orders by shard index, replays every point
+    /// through a fresh [`SweepAccumulator`] (bit-identical frontier) and
+    /// sums cache/timing/wall counters.
+    pub fn merge(mut partials: Vec<SweepPartial>) -> Result<SweepReport, DiagError> {
+        let err = |m: String| Err(DiagError::Store(format!("merge: {m}")));
+        let Some(first) = partials.first() else {
+            return err("no partials to merge".into());
+        };
+        let (of, grid_hash, workload, seed) =
+            (first.of, first.grid_hash, first.workload.clone(), first.seed);
+        for p in &partials {
+            if p.of != of || p.grid_hash != grid_hash || p.workload != workload || p.seed != seed
+            {
+                return err(format!(
+                    "mixed sessions: shard {}/{} of `{}` (seed {}, grid {:016x}) vs {}/{} of `{}` (seed {}, grid {:016x})",
+                    p.shard, p.of, p.workload, p.seed, p.grid_hash,
+                    first.shard, of, workload, seed, grid_hash
+                ));
+            }
+        }
+        partials.sort_by_key(|p| p.shard);
+        partials.dedup_by_key(|p| p.shard); // identical re-runs collapse
+        let present: Vec<u32> = partials.iter().map(|p| p.shard).collect();
+        let expect: Vec<u32> = (0..of).collect();
+        if present != expect {
+            return err(format!("have shards {present:?}, need 0..{of}"));
+        }
+
+        let mut acc = SweepAccumulator::new();
+        let mut cache = crate::coordinator::CacheStats::default();
+        let mut wall_ns = 0u64;
+        for p in partials {
+            for point in p.report.points {
+                acc.push(point);
+            }
+            for (label, e) in p.report.failures {
+                acc.push_failure(label, e);
+            }
+            cache.absorb(&p.report.cache);
+            wall_ns += p.report.wall_ns;
+        }
+        Ok(acc.finish(cache, wall_ns))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::arch::Topology;
+
+    fn grid() -> ParamGrid {
+        ParamGrid::new(presets::standard()).pea_edges(&[4, 8]).topologies(&Topology::ALL)
+    }
+
+    #[test]
+    fn shards_are_contiguous_and_cover_the_grid() {
+        let g = grid();
+        let full = g.points();
+        for of in 1..=full.len() + 1 {
+            let mut rebuilt = Vec::new();
+            for i in 0..of {
+                rebuilt.extend(SweepSession::shard(&g, i, of));
+            }
+            assert_eq!(rebuilt.len(), full.len(), "of={of}");
+            for (a, b) in rebuilt.iter().zip(full.iter()) {
+                assert_eq!(a.0, b.0, "of={of}");
+                assert_eq!(a.1.stable_hash(), b.1.stable_hash());
+            }
+        }
+    }
+
+    #[test]
+    fn grid_hash_tracks_grid_identity() {
+        assert_eq!(SweepSession::grid_hash(&grid()), SweepSession::grid_hash(&grid()));
+        let other = ParamGrid::new(presets::standard()).pea_edges(&[4, 8, 16]);
+        assert_ne!(SweepSession::grid_hash(&grid()), SweepSession::grid_hash(&other));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shard_index_must_be_in_range() {
+        SweepSession::shard(&grid(), 2, 2);
+    }
+
+    #[test]
+    fn sessions_group_and_report_completeness() {
+        let engine = SweepEngine::new(2);
+        let wl = Workload::Saxpy { n: 64 };
+        // Session A: 2 shards, complete. Session B: same grid re-sharded
+        // as 3, only one shard present. Session C: different seed.
+        let a0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 2).unwrap();
+        let a1 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 1, 2).unwrap();
+        let b0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 3).unwrap();
+        let c0 = SweepSession::run_shard(&engine, &grid(), &wl, 7, 0, 1).unwrap();
+        let groups =
+            SweepSession::group_sessions(vec![b0, a1.clone(), c0, a0.clone(), a1.clone()]);
+        assert_eq!(groups.len(), 3, "three distinct sessions");
+        let complete: Vec<_> =
+            groups.iter().filter(|g| SweepSession::is_complete(g)).collect();
+        // A (duplicated shard deduped) and C are complete; B is not.
+        assert_eq!(complete.len(), 2);
+        assert!(complete.iter().all(|g| SweepSession::describe(g).contains("saxpy")));
+        // The complete 2-shard group still merges to the full grid.
+        let a_group = groups
+            .iter()
+            .find(|g| g[0].of == 2)
+            .expect("session A present")
+            .clone();
+        let merged = SweepSession::merge(a_group).unwrap();
+        assert_eq!(merged.points.len(), grid().len());
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_and_mixed_sessions() {
+        let engine = SweepEngine::new(2);
+        let wl = Workload::Saxpy { n: 64 };
+        let p0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 2).unwrap();
+        let p1 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 1, 2).unwrap();
+
+        assert!(SweepSession::merge(vec![]).is_err());
+        assert!(SweepSession::merge(vec![p0.clone()]).is_err(), "missing shard 1");
+        let mut wrong_seed = p1.clone();
+        wrong_seed.seed = 7;
+        assert!(SweepSession::merge(vec![p0.clone(), wrong_seed]).is_err());
+        let mut wrong_grid = p1.clone();
+        wrong_grid.grid_hash ^= 1;
+        assert!(SweepSession::merge(vec![p0.clone(), wrong_grid]).is_err());
+
+        let merged = SweepSession::merge(vec![p1, p0]).unwrap(); // order-insensitive
+        assert_eq!(merged.points.len(), grid().len());
+    }
+}

@@ -1,0 +1,427 @@
+//! Persistent-store system tests: codec round-trips under randomization,
+//! corruption recovery, same-directory concurrency, the cross-process
+//! warm-start guarantee (a cold process on a warm store performs zero
+//! elaborations, zero mapper invocations and zero `simulate()` calls), and
+//! shard-merge bit-identity with the unsharded sweep.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use windmill::arch::params::ParamGrid;
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::{
+    run_job_cached, ArtifactCache, JobSpec, SweepEngine, SweepReport, Workload,
+};
+use windmill::store::codec::{
+    decode_mapping, decode_sim, decode_sweep_partial, encode_mapping, encode_sim,
+    encode_sweep_partial, SweepPartial,
+};
+use windmill::store::{DiskStore, SweepSession};
+use windmill::util::Rng;
+
+/// Unique per-test scratch directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-storetest-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The grid the CLI `sweep` verb runs (mirrored here so the cross-process
+/// test drives the exact same points through the binary).
+fn cli_grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).pea_edges(&[4, 8, 12, 16]).topologies(&Topology::ALL)
+}
+
+fn small_grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).pea_edges(&[4, 8]).topologies(&Topology::ALL)
+}
+
+// ---------------------------------------------------------------------------
+// Codec property tests
+// ---------------------------------------------------------------------------
+
+/// Round-trip randomized *real* mappings and simulation results: compile
+/// and simulate randomized kernels, then require decode(encode(x)) to
+/// reproduce every field and encode(decode(bytes)) == bytes (canonical
+/// form — HashMap-backed structures serialize sorted).
+#[test]
+fn codec_roundtrips_randomized_real_artifacts() {
+    let machine = windmill::plugins::elaborate(presets::standard()).unwrap().artifact;
+    let mut rng = Rng::new(0xC0DEC);
+    for round in 0..6 {
+        let (dfg, layout) = match rng.range(0, 4) {
+            0 => windmill::workloads::linalg::saxpy(16 << rng.range(0, 3), 2.5),
+            1 => windmill::workloads::linalg::dot(32 << rng.range(0, 2)),
+            2 => windmill::workloads::linalg::gemm_bias(4, 4, 1 << rng.range(1, 4)),
+            _ => windmill::workloads::linalg::spmv_csr(8, 16, 2 + rng.range(0, 3) as u32),
+        };
+        let seed = rng.next_u64();
+        let (mapping, ns) =
+            windmill::compiler::compile_timed(dfg, &machine, seed).unwrap();
+        let bytes = encode_mapping(&mapping, &ns);
+        let (back, back_ns) = decode_mapping(&bytes).unwrap();
+        assert_eq!(back.dfg.stable_hash(), mapping.dfg.stable_hash(), "round {round}");
+        assert_eq!(back.place, mapping.place);
+        assert_eq!(back.schedule, mapping.schedule);
+        assert_eq!(back.routes.edges, mapping.routes.edges);
+        assert_eq!(back.routes.through_load, mapping.routes.through_load);
+        assert_eq!(back_ns, ns);
+        assert_eq!(encode_mapping(&back, &back_ns), bytes, "canonical re-encode");
+
+        // Simulate on a NaN-free random image and round-trip the result.
+        let words = machine.smem.as_ref().unwrap().words().max(layout.total_words() as usize);
+        let image: Vec<f32> = (0..words).map(|_| rng.normal()).collect();
+        if let Ok(sim) = windmill::sim::engine::simulate(&mapping, &machine, &image, 4_000_000)
+        {
+            let sbytes = encode_sim(&sim);
+            let sback = decode_sim(&sbytes).unwrap();
+            assert_eq!(sback.cycles, sim.cycles);
+            assert_eq!(
+                sback.mem.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sim.mem.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "image bits survive"
+            );
+            assert_eq!(sback.smem, sim.smem);
+            assert_eq!(encode_sim(&sback), sbytes);
+        }
+    }
+}
+
+/// Sweep partials carry full-width `u64` hashes (arch hashes are FNV
+/// digests that routinely exceed 2^53 — the range `util::json`'s `f64`
+/// numbers silently truncate). Fuzz partials with such hashes and extreme
+/// floats; every bit must survive.
+#[test]
+fn codec_roundtrips_partials_with_hashes_above_2_53() {
+    let mut rng = Rng::new(0xFEED);
+    for round in 0..16 {
+        let engine = SweepEngine::new(1);
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[4]);
+        let mut partial = SweepSession::run_shard(
+            &engine,
+            &grid,
+            &Workload::Saxpy { n: 32 },
+            rng.next_u64(),
+            0,
+            1,
+        )
+        .unwrap();
+        // Force the hash ranges JSON would corrupt.
+        partial.grid_hash = rng.next_u64() | (1 << 63);
+        for p in &mut partial.report.points {
+            p.arch_hash = (1u64 << 53) + 1 + rng.next_u64() % (1u64 << 20);
+            p.wm_time_ns = f64::from_bits(0x7FEF_FFFF_FFFF_FFFF); // f64::MAX
+        }
+        let bytes = encode_sweep_partial(&partial);
+        let back: SweepPartial = decode_sweep_partial(&bytes).unwrap();
+        assert_eq!(back.grid_hash, partial.grid_hash, "round {round}");
+        for (a, b) in back.report.points.iter().zip(partial.report.points.iter()) {
+            assert_eq!(a.arch_hash, b.arch_hash, "hash above 2^53 must be verbatim");
+            assert!((1u64 << 53) < a.arch_hash);
+            assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+            assert_eq!(a.label, b.label);
+        }
+        assert_eq!(back.report.frontier, partial.report.frontier);
+        assert_eq!(encode_sweep_partial(&back), bytes);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corruption recovery
+// ---------------------------------------------------------------------------
+
+/// Truncated or corrupted entries must degrade into recomputes: the cache
+/// skips them, repopulates the slot, and the job result is unaffected.
+#[test]
+fn corrupted_store_entries_recover_by_recompute() {
+    let tmp = TempDir::new("corrupt-recover");
+    let store = Arc::new(DiskStore::open(tmp.path()).unwrap());
+    let spec = JobSpec {
+        workload: Workload::Saxpy { n: 64 },
+        params: presets::standard(),
+        seed: 3,
+    };
+
+    let warm = ArtifactCache::new().with_store(Arc::clone(&store));
+    let (baseline, _) = run_job_cached(&spec, Some(&warm)).unwrap();
+    assert!(store.entry_count() >= 3, "elab + mapping + sim persisted");
+
+    // Vandalize every persisted entry: truncate half, bit-flip the rest.
+    let mut n_files = 0;
+    for pass in std::fs::read_dir(tmp.path()).unwrap().flatten() {
+        if !pass.path().is_dir() {
+            continue;
+        }
+        for f in std::fs::read_dir(pass.path()).unwrap().flatten() {
+            let bytes = std::fs::read(f.path()).unwrap();
+            let mangled = if n_files % 2 == 0 {
+                bytes[..bytes.len() / 3].to_vec()
+            } else {
+                let mut b = bytes.clone();
+                let mid = b.len() / 2;
+                b[mid] ^= 0xA5;
+                b
+            };
+            std::fs::write(f.path(), mangled).unwrap();
+            n_files += 1;
+        }
+    }
+    assert!(n_files >= 3);
+
+    // A cold cache on the vandalized store must recompute — and succeed.
+    let cold = ArtifactCache::new().with_store(Arc::clone(&store));
+    let (recovered, timing) = run_job_cached(&spec, Some(&cold)).unwrap();
+    assert_eq!(recovered.cycles, baseline.cycles);
+    assert_eq!(recovered.mem, baseline.mem, "recompute is bit-identical");
+    // Every entry carries a trailing FNV digest, so truncations *and*
+    // mid-payload bit flips are all unreadable — nothing decodes, nothing
+    // is silently wrong, every lookup recomputes.
+    assert!(timing.cache_misses >= 3, "nothing decodable => misses ({timing:?})");
+    assert_eq!(timing.cache_hits, 0, "vandalized entries must not hit ({timing:?})");
+    assert!(store.stats().corrupt >= 3, "{:?}", store.stats());
+
+    // The recompute rewrote the slots: a third cold cache is fully warm.
+    let final_check = ArtifactCache::new().with_store(Arc::clone(&store));
+    let (again, t3) = run_job_cached(&spec, Some(&final_check)).unwrap();
+    assert_eq!(again.mem, baseline.mem);
+    assert_eq!(t3.cache_misses, 0, "repaired store warm-starts ({t3:?})");
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency: two store handles, one directory
+// ---------------------------------------------------------------------------
+
+/// Two independent `DiskStore` handles (as two processes would hold) sweep
+/// the same grid into one directory concurrently. Atomic tmp+rename writes
+/// mean no torn entries: afterwards a third cold cache warm-starts with
+/// zero recomputes.
+#[test]
+fn concurrent_stores_share_one_directory_safely() {
+    let tmp = TempDir::new("concurrent");
+    let dir = tmp.path().to_path_buf();
+    let wl = Workload::Dot { n: 128 };
+
+    let mut handles = Vec::new();
+    for worker in 0..2 {
+        let dir = dir.clone();
+        let wl = wl.clone();
+        handles.push(std::thread::spawn(move || {
+            let store = Arc::new(DiskStore::open(&dir).unwrap());
+            let engine = SweepEngine::with_store(2, store);
+            let r = engine.sweep_seeded(&small_grid(), &wl, 42);
+            assert!(r.failures.is_empty(), "worker {worker}: {:?}", r.failures);
+            r.points.len()
+        }));
+    }
+    let counts: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(counts[0], counts[1]);
+
+    // No temp-file litter, and a cold third process is fully warm.
+    for pass in std::fs::read_dir(&dir).unwrap().flatten() {
+        if pass.path().is_dir() {
+            for f in std::fs::read_dir(pass.path()).unwrap().flatten() {
+                let name = f.file_name().to_string_lossy().to_string();
+                assert!(!name.starts_with(".tmp"), "leftover temp file {name}");
+            }
+        }
+    }
+    let store = Arc::new(DiskStore::open(&dir).unwrap());
+    let engine = SweepEngine::with_store(2, store);
+    let warm = engine.sweep_seeded(&small_grid(), &wl, 42);
+    assert_eq!(warm.cache.misses, 0, "third process recomputes nothing: {:?}", warm.cache);
+    assert_eq!(warm.sim_hit_rate(), 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance bar: cross-process warm start via the real binary
+// ---------------------------------------------------------------------------
+
+/// Process 1 is the actual `windmill` CLI populating a store; process 2 is
+/// this test with a cold in-memory cache on the same directory. The cold
+/// process must complete the CLI's Fig. 6 grid with zero elaborations,
+/// zero mapper invocations and zero `simulate()` calls.
+#[test]
+fn cold_process_on_warm_store_recomputes_nothing() {
+    let tmp = TempDir::new("cross-process");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"))
+        .args(["sweep", "saxpy", "--workers", "2", "--store"])
+        .arg(tmp.path())
+        .output()
+        .expect("spawn windmill sweep");
+    assert!(
+        out.status.success(),
+        "CLI sweep failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let store = Arc::new(DiskStore::open(tmp.path()).unwrap());
+    assert!(store.entry_count() > 0, "process 1 persisted artifacts");
+
+    // Process 2: cold memory, warm store — the CLI's exact grid/seed.
+    let engine = SweepEngine::with_store(2, Arc::clone(&store));
+    let report = engine.sweep_seeded(&cli_grid(), &Workload::Saxpy { n: 256 }, 42);
+    assert!(report.failures.is_empty(), "{:?}", report.failures);
+    for pass in ["elaborate", "mapping", "simulate"] {
+        let c = report.cache.pass_counts_full(pass);
+        assert_eq!(c.miss, 0, "cold process re-ran `{pass}`: {:?}", report.cache);
+        assert!(c.disk > 0, "`{pass}` must warm-start from disk: {:?}", report.cache);
+    }
+    assert_eq!(report.sim_hit_rate(), 1.0);
+    assert_eq!(report.cache.misses, 0);
+
+    // And the disk-warmed numbers equal a from-scratch sweep bit-for-bit.
+    let fresh = SweepEngine::new(2).sweep_seeded(&cli_grid(), &Workload::Saxpy { n: 256 }, 42);
+    let key = |r: &SweepReport| {
+        let mut v: Vec<(String, u64, u64)> = r
+            .points
+            .iter()
+            .map(|p| (p.label.clone(), p.cycles, p.wm_time_ns.to_bits()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(key(&report), key(&fresh));
+}
+
+/// The `--expect-warm` CI verb: a second CLI process on the same store
+/// must see a 100% sim hit rate (and fail loudly when pointed at nothing).
+#[test]
+fn cli_expect_warm_gates_on_sim_hit_rate() {
+    let tmp = TempDir::new("expect-warm");
+    let run = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"));
+        cmd.args(["sweep", "dot", "--workers", "2", "--store"]).arg(tmp.path());
+        cmd.args(extra);
+        cmd.output().expect("spawn windmill sweep")
+    };
+    let cold = run(&["--expect-warm"]);
+    assert!(!cold.status.success(), "cold sweep cannot claim warmth");
+    let populate = run(&[]);
+    assert!(populate.status.success());
+    let warm = run(&["--expect-warm"]);
+    assert!(
+        warm.status.success(),
+        "warm store must pass --expect-warm:\n{}",
+        String::from_utf8_lossy(&warm.stderr)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shard / merge equivalence
+// ---------------------------------------------------------------------------
+
+/// `SweepSession::merge` of N shards is bit-identical to the unsharded
+/// report: same point order, same values to the bit, same frontier
+/// indices — for every shard count that divides the grid or doesn't.
+#[test]
+fn shard_merge_is_bit_identical_to_unsharded_sweep() {
+    let wl = Workload::Saxpy { n: 64 };
+    let grid = small_grid();
+    let full = SweepEngine::new(2).sweep_seeded(&grid, &wl, 42);
+    assert!(!full.points.is_empty());
+
+    for shards in [1usize, 2, 3, full.points.len()] {
+        let partials: Vec<_> = (0..shards)
+            .map(|i| {
+                // Each shard in its own engine = its own process image.
+                let engine = SweepEngine::new(2);
+                SweepSession::run_shard(&engine, &grid, &wl, 42, i, shards).unwrap()
+            })
+            .collect();
+        let merged = SweepSession::merge(partials).unwrap();
+        assert_eq!(merged.points.len(), full.points.len(), "shards={shards}");
+        for (a, b) in merged.points.iter().zip(full.points.iter()) {
+            assert_eq!(a.label, b.label, "point order preserved (shards={shards})");
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.arch_hash, b.arch_hash);
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.power_mw.to_bits(), b.power_mw.to_bits());
+            assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+        }
+        assert_eq!(merged.frontier, full.frontier, "frontier indices (shards={shards})");
+        assert_eq!(merged.failures, full.failures);
+    }
+}
+
+/// End-to-end sharding through the CLI: two shard processes + a merge
+/// process, against one store directory.
+#[test]
+fn cli_shard_processes_merge_to_the_full_frontier() {
+    let tmp = TempDir::new("cli-shards");
+    let run = |args: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"));
+        cmd.args(args).arg("--store").arg(tmp.path());
+        cmd.output().expect("spawn windmill")
+    };
+    for shard in ["0/2", "1/2"] {
+        let out = run(&["sweep", "dot", "--workers", "2", "--shard", shard]);
+        assert!(
+            out.status.success(),
+            "shard {shard} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    // An unrelated half-finished session in the same store (a different
+    // shard count) must not poison the merge of the complete one.
+    let stale = run(&["sweep", "dot", "--workers", "2", "--shard", "0/3"]);
+    assert!(stale.status.success());
+    let merged = run(&["sweep-merge"]);
+    assert!(merged.status.success(), "{}", String::from_utf8_lossy(&merged.stderr));
+    let merged_out = String::from_utf8_lossy(&merged.stdout).to_string();
+
+    // The merged frontier lines must be byte-identical to the unsharded
+    // sweep's (same format as the CLI prints).
+    let full = SweepEngine::new(2).sweep_seeded(&cli_grid(), &Workload::Dot { n: 256 }, 42);
+    for p in full.frontier_points() {
+        let line = format!(
+            "  * {:<20} {:>7.3} mm2  {:>6.2} mW  {:>9} cycles",
+            p.label, p.area_mm2, p.power_mw, p.cycles
+        );
+        assert!(merged_out.contains(&line), "missing frontier line `{line}` in:\n{merged_out}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eviction + store interplay
+// ---------------------------------------------------------------------------
+
+/// With a byte budget, evicted `SimResult`s re-load from disk: the warm
+/// re-run still performs zero `simulate()` calls even though memory only
+/// ever holds one image.
+#[test]
+fn evicted_sim_results_reload_from_disk_not_recompute() {
+    let tmp = TempDir::new("evict-reload");
+    let store = Arc::new(DiskStore::open(tmp.path()).unwrap());
+    let cache = Arc::new(
+        ArtifactCache::new().with_store(Arc::clone(&store)).with_sim_budget(1),
+    );
+    let engine = SweepEngine::with_cache(2, Arc::clone(&cache));
+    let wl = Workload::Saxpy { n: 64 };
+
+    let cold = engine.sweep_seeded(&small_grid(), &wl, 42);
+    assert!(cold.failures.is_empty());
+    assert!(cold.cache.evictions > 0, "budget of 1 byte must evict: {:?}", cold.cache);
+    assert_eq!(cache.sim_bytes_cached(), 0, "nothing stays resident");
+
+    let warm = engine.sweep_seeded(&small_grid(), &wl, 42);
+    let sim = warm.cache.pass_counts_full("simulate");
+    assert_eq!(sim.miss, 0, "evictions must not cost recomputes: {:?}", warm.cache);
+    assert!(sim.disk > 0, "warm path is the disk tier: {:?}", warm.cache);
+    assert_eq!(warm.sim_hit_rate(), 1.0);
+}
