@@ -1,0 +1,119 @@
+//! Cold-sweep bench (PR 4): stage-granular compile memoization on a
+//! context-depth grid, and the engine's event-driven cycle-skip counter.
+//!
+//! The warm path has been free since PR 2/3; this bench pins the **cold**
+//! path — the first sweep over a fresh grid, which is what the paper's
+//! Fig. 6 scalability experiment and every new application demand actually
+//! exercise. Two headline numbers:
+//!
+//! 1. A cold sweep over a grid varying only context depth performs exactly
+//!    one place and one route per `(kernel, seed)` — `(N-1)/N` of the
+//!    place+route work vanishes — and its summed compile wall time beats
+//!    the monolithic (stage-memoization-off) baseline (asserted).
+//! 2. On a stall-heavy SFU chain the engine reports >0 skipped cycles
+//!    (asserted) while staying cycle-identical to the reference engine
+//!    (pinned separately in `tests/engine_equivalence.rs`).
+//!
+//! `cargo bench --bench cold_sweep`
+
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::{fmt_ns, Table};
+use windmill::arch::isa::Op;
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::compiler::{compile, Dfg};
+use windmill::coordinator::{ArtifactCache, SweepEngine, Workload};
+use windmill::plugins;
+use windmill::sim::engine::simulate_counting;
+
+fn ctx_grid() -> ParamGrid {
+    // All depths at or above the standard 32: every point is mappable, so
+    // the two paths run the identical point set.
+    ParamGrid::new(presets::standard()).context_depths(&[32, 48, 64, 96, 128, 256])
+}
+
+fn main() {
+    let wl = Workload::Fir { n: 128, taps: 12 };
+
+    // Single worker on both sides: the comparison is work done, not
+    // scheduling luck, and with one worker the stage-miss counts are exact.
+    let staged = SweepEngine::new(1).sweep(&ctx_grid(), &wl);
+    assert!(staged.failures.is_empty(), "{:?}", staged.failures);
+    let mono_cache = Arc::new(ArtifactCache::new().with_stage_memo(false));
+    let mono = SweepEngine::with_cache(1, mono_cache).sweep(&ctx_grid(), &wl);
+    assert!(mono.failures.is_empty(), "{:?}", mono.failures);
+
+    let n = staged.points.len() as u64;
+    let place = staged.cache.pass_counts_full("place");
+    let route = staged.cache.pass_counts_full("route");
+    assert_eq!(place.miss, 1, "cold context-depth sweep must place exactly once");
+    assert_eq!(route.miss, 1, "cold context-depth sweep must route exactly once");
+    assert_eq!(place.mem, n - 1, "every other point reuses the placement");
+    assert_eq!(staged.cache.pass_counts_full("schedule").miss, n);
+
+    let mut t = Table::new(
+        "cold context-depth sweep: stage-memoized vs monolithic compile",
+        &["path", "points", "compile wall", "place lookups (m/d/x)", "reuse"],
+    );
+    t.row(&[
+        "stage-memoized".into(),
+        staged.points.len().to_string(),
+        fmt_ns(staged.timing.compile_ns as f64),
+        format!("{}m/{}d/{}x", place.mem, place.disk, place.miss),
+        format!("{:.0}%", 100.0 * staged.place_route_reuse()),
+    ]);
+    let mono_place = mono.cache.pass_counts_full("place");
+    t.row(&[
+        "monolithic".into(),
+        mono.points.len().to_string(),
+        fmt_ns(mono.timing.compile_ns as f64),
+        format!("{}m/{}d/{}x", mono_place.mem, mono_place.disk, mono_place.miss),
+        "-".into(),
+    ]);
+    t.print();
+    println!("staged summary: {}", staged.summary());
+
+    let speedup = mono.timing.compile_ns as f64 / staged.timing.compile_ns.max(1) as f64;
+    println!(
+        "cold compile wall: monolithic {} vs staged {} ({speedup:.2}x)",
+        fmt_ns(mono.timing.compile_ns as f64),
+        fmt_ns(staged.timing.compile_ns as f64),
+    );
+    assert!(
+        staged.timing.compile_ns < mono.timing.compile_ns,
+        "stage-memoized cold sweep must beat the monolithic path: {} vs {} ns",
+        staged.timing.compile_ns,
+        mono.timing.compile_ns
+    );
+
+    // Results are bit-identical either way (also pinned by
+    // tests/stage_memoization.rs; cheap to re-assert here).
+    for (a, b) in staged.points.iter().zip(mono.points.iter()) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles, "{}", a.label);
+        assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits(), "{}", a.label);
+    }
+
+    // ---- engine cycle skipping on a stall-heavy SFU chain ------------------
+    let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+    let mut d = Dfg::new("sfu-stall", vec![2]);
+    let mut v = d.load_affine(0, vec![1]);
+    for i in 0..8 {
+        v = d.unary(if i % 2 == 0 { Op::Tanh } else { Op::Exp }, v);
+    }
+    d.store_affine(v, 64, vec![1], 1);
+    let mapping = compile(d, &machine, 42).unwrap();
+    let image = vec![0.2f32; 128];
+    let (res, skipped) = simulate_counting(&mapping, &machine, &image, 1_000_000).unwrap();
+    println!(
+        "sfu-stall chain: {} cycles, {} skipped ({:.0}% never ticked)",
+        res.cycles,
+        skipped,
+        100.0 * skipped as f64 / res.cycles as f64
+    );
+    assert!(skipped > 0, "stall-heavy chain must skip cycles");
+    println!("cold-sweep acceptance: staged beats monolithic, cycle skip engaged");
+}

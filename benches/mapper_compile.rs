@@ -96,7 +96,6 @@ fn main() {
     // this repo is a ≥2x cache-hit speedup, which the assert pins.
     let cache = ArtifactCache::new();
     let params = presets::standard();
-    let arch = params.stable_hash();
     let elab = cache.machine(&params).unwrap();
     let kernels: Vec<(&str, windmill::compiler::Dfg)> = vec![
         ("saxpy-256", linalg::saxpy(256, 2.0).0),
@@ -110,13 +109,13 @@ fn main() {
     let mut worst_speedup = f64::INFINITY;
     for (name, dfg) in &kernels {
         let t0 = Instant::now();
-        let (_, _, hit0) = cache.mapping(arch, dfg, &elab.machine, 42).unwrap();
+        let (_, _, hit0) = cache.mapping(&params, dfg, &elab.machine, 42).unwrap();
         let cold_ns = t0.elapsed().as_nanos() as f64;
         assert!(!hit0, "{name}: first compile must be a miss");
 
         // Median of several warm lookups (they are sub-microsecond).
         let mut warm = bench(2, 20, || {
-            let (_, _, hit) = cache.mapping(arch, dfg, &elab.machine, 42).unwrap();
+            let (_, _, hit) = cache.mapping(&params, dfg, &elab.machine, 42).unwrap();
             assert!(hit, "{name}: second compile must report a cache hit");
         });
         let warm_ns = warm.p50();

@@ -213,6 +213,55 @@ impl WindMillParams {
             .f64_bits(self.freq_mhz);
         h.finish()
     }
+
+    /// Stable sub-hash of the parameters the mapper's **place and route**
+    /// stages observe: PEA geometry, interconnect topology, data width and
+    /// the PE-type mix (LSU ring / CPE / SFU — these decide every PE's
+    /// capability set and port list in the elaborated machine). Parameters
+    /// that only affect scheduling or simulation — context depth, execution
+    /// mode, shared-memory geometry, shared registers, DMA, clocking — are
+    /// deliberately excluded, so two sweep points that differ only in those
+    /// dimensions share one `topology_hash` and therefore share cached
+    /// `Place`/`Route` artifacts (`crate::coordinator::cache`), in memory
+    /// and on disk. Domain-tagged so the digest can never collide with
+    /// [`WindMillParams::stable_hash`] or [`WindMillParams::schedule_hash`].
+    pub fn topology_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.u8(0xF1) // domain tag: fabric (place/route) sub-hash
+            .usize(self.rows)
+            .usize(self.cols)
+            .u32(self.data_width)
+            .u8(self.topology as u8)
+            .bool(self.lsu_ring)
+            .bool(self.cpe_enabled)
+            .bool(self.sfu_enabled);
+        h.finish()
+    }
+
+    /// Stable sub-hash of the parameters only the **schedule** stage and
+    /// the simulator observe: context depth and execution mode (context
+    /// capacity, SCMD legality), shared-memory geometry (bank-pressure II),
+    /// shared registers, DMA, RCA ring, host RTT and clocking. Together
+    /// with [`WindMillParams::topology_hash`] this covers every field of
+    /// [`WindMillParams::stable_hash`] — two parameter sets are equal iff
+    /// both sub-hash inputs are (asserted in tests).
+    pub fn schedule_hash(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.u8(0xF2) // domain tag: schedule-only sub-hash
+            .usize(self.context_depth)
+            .u8(self.exec_mode as u8)
+            .u8(self.shared_reg_mode as u8)
+            .usize(self.shared_regs_per_group)
+            .usize(self.smem.banks)
+            .usize(self.smem.depth)
+            .u32(self.smem.width_bits)
+            .u32(self.dma_width_bits)
+            .bool(self.pingpong)
+            .usize(self.rca_count)
+            .usize(self.rtt_entries)
+            .f64_bits(self.freq_mhz);
+        h.finish()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -246,6 +295,7 @@ pub struct ParamGrid {
     sfu: Vec<bool>,
     cpe: Vec<bool>,
     pingpong: Vec<bool>,
+    ctx_depths: Vec<usize>,
 }
 
 impl ParamGrid {
@@ -258,6 +308,7 @@ impl ParamGrid {
             sfu: Vec::new(),
             cpe: Vec::new(),
             pingpong: Vec::new(),
+            ctx_depths: Vec::new(),
         }
     }
 
@@ -297,6 +348,16 @@ impl ParamGrid {
         self
     }
 
+    /// Sweep the context-memory depth (configurations per PE). Points on
+    /// this axis share every fabric parameter — under the stage-granular
+    /// artifact cache they reuse one place/route artifact per
+    /// `(kernel, seed)` and recompute only schedule analysis, config
+    /// generation and simulation (see `coordinator::cache`).
+    pub fn context_depths(mut self, depths: &[usize]) -> Self {
+        self.ctx_depths = depths.to_vec();
+        self
+    }
+
     pub fn base(&self) -> &WindMillParams {
         &self.base
     }
@@ -309,6 +370,7 @@ impl ParamGrid {
             * self.sfu.len().max(1)
             * self.cpe.len().max(1)
             * self.pingpong.len().max(1)
+            * self.ctx_depths.len().max(1)
     }
 
     /// Number of runnable (legality-filtered) grid points, matching what
@@ -338,6 +400,7 @@ impl ParamGrid {
         let sfus = axis(&self.sfu);
         let cpes = axis(&self.cpe);
         let pps = axis(&self.pingpong);
+        let ctxs = axis(&self.ctx_depths);
 
         let mut out = Vec::new();
         for &edge in &edges {
@@ -346,40 +409,46 @@ impl ParamGrid {
                     for &sfu in &sfus {
                         for &cpe in &cpes {
                             for &pp in &pps {
-                                let mut p = self.base.clone();
-                                let mut label = String::new();
-                                if let Some(e) = edge {
-                                    p.rows = e;
-                                    p.cols = e;
-                                    label.push_str(&format!("pea{e}-"));
-                                }
-                                if let Some(t) = topo {
-                                    p.topology = t;
-                                    label.push_str(&format!("{}-", t.name()));
-                                }
-                                if let Some((banks, depth)) = smem {
-                                    p.smem.banks = banks;
-                                    p.smem.depth = depth;
-                                    label.push_str(&format!("sm{banks}x{depth}-"));
-                                }
-                                if let Some(s) = sfu {
-                                    p.sfu_enabled = s;
-                                    label.push_str(if s { "sfu-" } else { "nosfu-" });
-                                }
-                                if let Some(c) = cpe {
-                                    p.cpe_enabled = c;
-                                    label.push_str(if c { "cpe-" } else { "nocpe-" });
-                                }
-                                if let Some(d) = pp {
-                                    p.pingpong = d;
-                                    label.push_str(if d { "pp-" } else { "nopp-" });
-                                }
-                                if label.is_empty() {
-                                    label.push_str("base-");
-                                }
-                                label.pop(); // trailing '-'
-                                if p.validate().is_ok() {
-                                    out.push((label, p));
+                                for &ctx in &ctxs {
+                                    let mut p = self.base.clone();
+                                    let mut label = String::new();
+                                    if let Some(e) = edge {
+                                        p.rows = e;
+                                        p.cols = e;
+                                        label.push_str(&format!("pea{e}-"));
+                                    }
+                                    if let Some(t) = topo {
+                                        p.topology = t;
+                                        label.push_str(&format!("{}-", t.name()));
+                                    }
+                                    if let Some((banks, depth)) = smem {
+                                        p.smem.banks = banks;
+                                        p.smem.depth = depth;
+                                        label.push_str(&format!("sm{banks}x{depth}-"));
+                                    }
+                                    if let Some(s) = sfu {
+                                        p.sfu_enabled = s;
+                                        label.push_str(if s { "sfu-" } else { "nosfu-" });
+                                    }
+                                    if let Some(c) = cpe {
+                                        p.cpe_enabled = c;
+                                        label.push_str(if c { "cpe-" } else { "nocpe-" });
+                                    }
+                                    if let Some(d) = pp {
+                                        p.pingpong = d;
+                                        label.push_str(if d { "pp-" } else { "nopp-" });
+                                    }
+                                    if let Some(cd) = ctx {
+                                        p.context_depth = cd;
+                                        label.push_str(&format!("ctx{cd}-"));
+                                    }
+                                    if label.is_empty() {
+                                        label.push_str("base-");
+                                    }
+                                    label.pop(); // trailing '-'
+                                    if p.validate().is_ok() {
+                                        out.push((label, p));
+                                    }
                                 }
                             }
                         }
@@ -478,6 +547,132 @@ mod tests {
         let mut e = presets::standard();
         e.smem.depth *= 2;
         assert_ne!(a.stable_hash(), e.stable_hash());
+    }
+
+    #[test]
+    fn topology_hash_ignores_schedule_only_fields() {
+        let a = presets::standard();
+        // Schedule-only edits leave the fabric sub-hash untouched…
+        let mut b = presets::standard();
+        b.context_depth *= 2;
+        b.exec_mode = ExecMode::Scmd;
+        b.smem.depth *= 4;
+        b.freq_mhz = 500.0;
+        b.pingpong = !b.pingpong;
+        assert_eq!(a.topology_hash(), b.topology_hash());
+        assert_ne!(a.schedule_hash(), b.schedule_hash());
+        assert_ne!(a.stable_hash(), b.stable_hash());
+        // …while fabric edits change it.
+        let edits: [fn(&mut WindMillParams); 5] = [
+            |p| p.rows = 12,
+            |p| p.topology = Topology::Torus,
+            |p| p.sfu_enabled = false,
+            |p| p.cpe_enabled = false,
+            |p| p.lsu_ring = false,
+        ];
+        for edit in edits {
+            let mut c = presets::standard();
+            edit(&mut c);
+            assert_ne!(a.topology_hash(), c.topology_hash(), "{c:?}");
+            assert_eq!(a.schedule_hash(), c.schedule_hash(), "{c:?}");
+        }
+        // The three digests are domain-separated even on equal params.
+        assert_ne!(a.topology_hash(), a.schedule_hash());
+        assert_ne!(a.topology_hash(), a.stable_hash());
+        assert_ne!(a.schedule_hash(), a.stable_hash());
+    }
+
+    /// The invariant the stage-granular cache keys rest on: every field of
+    /// [`WindMillParams::stable_hash`] is covered by **exactly one** of
+    /// `topology_hash` / `schedule_hash`. Each field is mutated in turn
+    /// and the digests checked; the no-rest-pattern destructure below
+    /// makes this test fail to *compile* when a field is added, forcing
+    /// whoever adds it to place it in a sub-hash here.
+    #[test]
+    fn sub_hashes_partition_every_stable_hash_field() {
+        // Compile-time exhaustiveness guard: adding a field to
+        // `WindMillParams` (or `SmemParams`) breaks this destructure.
+        let WindMillParams {
+            rows: _,
+            cols: _,
+            data_width: _,
+            topology: _,
+            lsu_ring: _,
+            cpe_enabled: _,
+            sfu_enabled: _,
+            context_depth: _,
+            exec_mode: _,
+            shared_reg_mode: _,
+            shared_regs_per_group: _,
+            smem: SmemParams { banks: _, depth: _, width_bits: _ },
+            dma_width_bits: _,
+            pingpong: _,
+            rca_count: _,
+            rtt_entries: _,
+            freq_mhz: _,
+        } = presets::standard();
+
+        // (name, edit, belongs-to-topology-sub-hash)
+        type Edit = fn(&mut WindMillParams);
+        let fields: [(&str, Edit, bool); 19] = [
+            ("rows", |p| p.rows += 1, true),
+            ("cols", |p| p.cols += 1, true),
+            ("data_width", |p| p.data_width = 64, true),
+            ("topology", |p| p.topology = Topology::Torus, true),
+            ("lsu_ring", |p| p.lsu_ring = !p.lsu_ring, true),
+            ("cpe_enabled", |p| p.cpe_enabled = !p.cpe_enabled, true),
+            ("sfu_enabled", |p| p.sfu_enabled = !p.sfu_enabled, true),
+            ("context_depth", |p| p.context_depth *= 2, false),
+            ("exec_mode", |p| p.exec_mode = ExecMode::Scmd, false),
+            ("shared_reg_mode", |p| p.shared_reg_mode = SharedRegMode::GlobalShared, false),
+            ("shared_regs_per_group", |p| p.shared_regs_per_group += 1, false),
+            ("smem.banks", |p| p.smem.banks *= 2, false),
+            ("smem.depth", |p| p.smem.depth *= 2, false),
+            ("smem.width_bits", |p| p.smem.width_bits = 64, false),
+            ("dma_width_bits", |p| p.dma_width_bits *= 2, false),
+            ("pingpong", |p| p.pingpong = !p.pingpong, false),
+            ("rca_count", |p| p.rca_count += 1, false),
+            ("rtt_entries", |p| p.rtt_entries += 1, false),
+            ("freq_mhz", |p| p.freq_mhz = 500.0, false),
+        ];
+        let base = presets::standard();
+        for (name, edit, in_topology) in fields {
+            let mut p = presets::standard();
+            edit(&mut p);
+            assert_ne!(base.stable_hash(), p.stable_hash(), "{name}: full hash must move");
+            let topo_moved = base.topology_hash() != p.topology_hash();
+            let sched_moved = base.schedule_hash() != p.schedule_hash();
+            assert_eq!(
+                topo_moved, in_topology,
+                "{name}: expected in the {} sub-hash",
+                if in_topology { "fabric" } else { "schedule" }
+            );
+            assert_ne!(
+                topo_moved, sched_moved,
+                "{name}: must be covered by exactly one sub-hash"
+            );
+        }
+    }
+
+    #[test]
+    fn context_depth_axis_shares_the_fabric() {
+        let grid = ParamGrid::new(presets::standard()).context_depths(&[16, 32, 64]);
+        let points = grid.points();
+        assert_eq!(points.len(), 3);
+        assert_eq!(grid.combinations(), 3);
+        let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["ctx16", "ctx32", "ctx64"]);
+        // All points share one topology_hash but have distinct arch hashes:
+        // the precondition for stage-granular place/route reuse.
+        let topo0 = points[0].1.topology_hash();
+        let mut arch_hashes: Vec<u64> = Vec::new();
+        for (_, p) in &points {
+            assert_eq!(p.topology_hash(), topo0);
+            arch_hashes.push(p.stable_hash());
+        }
+        arch_hashes.sort_unstable();
+        arch_hashes.dedup();
+        assert_eq!(arch_hashes.len(), 3);
     }
 
     #[test]

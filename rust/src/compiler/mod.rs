@@ -11,6 +11,11 @@
 //! artifacts are content-addressable: [`CompileKey`] names one stage output
 //! from the stable hashes of the architecture parameters and the DFG, and
 //! the coordinator's `ArtifactCache` memoizes on it across sweep points.
+//! Memoization is **stage-granular**: place and route read only the fabric
+//! (geometry, topology, PE-type mix), so their keys use
+//! [`crate::arch::WindMillParams::topology_hash`] and sweep points that
+//! differ only in schedule-visible parameters (context depth, exec mode,
+//! smem geometry) reuse one place/route artifact per `(kernel, seed)`.
 
 pub mod config_gen;
 pub mod dfg;
@@ -36,10 +41,19 @@ pub enum CompilePass {
     Elaborate,
     /// Full mapper output (place + route + schedule + config image).
     Mapping,
-    /// Individual mapper stages (reserved for finer-grained memoization).
+    /// Placement artifact (`Vec<Coord>`), keyed by the **fabric** sub-hash
+    /// [`crate::arch::WindMillParams::topology_hash`] — sweep points that
+    /// differ only in schedule-visible parameters (context depth, exec
+    /// mode, smem geometry, clocking) share the entry.
     Place,
+    /// Routing artifact ([`Routes`]) over the place artifact; same fabric
+    /// sub-hash key as [`CompilePass::Place`].
     Route,
+    /// Schedule analysis ([`Schedule`]), keyed by the **full** arch hash —
+    /// it reads context depth, exec mode and smem banking.
     Schedule,
+    /// Reserved (config generation is recomputed; it is a cheap pure
+    /// function of the cached place/route artifacts).
     ConfigGen,
     /// Cycle-accurate simulation of one mapped kernel against one memory
     /// image (the sweep-level `SimResult` cache; keys carry the image hash).
@@ -90,6 +104,27 @@ impl CompileKey {
 
     pub fn mapping(arch: u64, dfg: &Dfg, seed: u64) -> Self {
         CompileKey { arch, dfg: dfg.stable_hash(), seed, image: 0, pass: CompilePass::Mapping }
+    }
+
+    /// Key of one placement artifact. `topology_hash` is the fabric
+    /// sub-hash ([`crate::arch::WindMillParams::topology_hash`]), **not**
+    /// the full parameter hash: placement reads only the fabric, so keying
+    /// on the sub-hash is what lets context-depth-only sweep points share
+    /// the artifact.
+    pub fn place(topology_hash: u64, dfg_hash: u64, seed: u64) -> Self {
+        CompileKey { arch: topology_hash, dfg: dfg_hash, seed, image: 0, pass: CompilePass::Place }
+    }
+
+    /// Key of one routing artifact, over the place artifact of the same
+    /// `(topology_hash, dfg, seed)` triple.
+    pub fn route(topology_hash: u64, dfg_hash: u64, seed: u64) -> Self {
+        CompileKey { arch: topology_hash, dfg: dfg_hash, seed, image: 0, pass: CompilePass::Route }
+    }
+
+    /// Key of one schedule analysis — the **full** arch hash, because the
+    /// schedule reads context depth, execution mode and smem banking.
+    pub fn schedule(arch: u64, dfg_hash: u64, seed: u64) -> Self {
+        CompileKey { arch, dfg: dfg_hash, seed, image: 0, pass: CompilePass::Schedule }
     }
 
     /// Key of one cycle-accurate simulation: the mapping identity
@@ -258,5 +293,36 @@ mod tests {
         assert_ne!(s1, s2);
         assert_eq!(a.image, 0);
         assert_ne!(s1.pass, a.pass);
+    }
+
+    #[test]
+    fn stage_keys_split_on_the_right_sub_hash() {
+        use crate::arch::presets;
+        let base = presets::standard();
+        let mut deeper = presets::standard();
+        deeper.context_depth *= 2;
+        let mut d = Dfg::new("k", vec![8]);
+        let x = d.load_affine(0, vec![1]);
+        d.store_affine(x, 8, vec![1], 1);
+        let dh = d.stable_hash();
+        // Context depth is schedule-only: place/route keys collide (that is
+        // the reuse), schedule keys split.
+        assert_eq!(
+            CompileKey::place(base.topology_hash(), dh, 7),
+            CompileKey::place(deeper.topology_hash(), dh, 7)
+        );
+        assert_eq!(
+            CompileKey::route(base.topology_hash(), dh, 7),
+            CompileKey::route(deeper.topology_hash(), dh, 7)
+        );
+        assert_ne!(
+            CompileKey::schedule(base.stable_hash(), dh, 7),
+            CompileKey::schedule(deeper.stable_hash(), dh, 7)
+        );
+        // Same hashes, different pass: distinct entries.
+        let p = CompileKey::place(base.topology_hash(), dh, 7);
+        let r = CompileKey::route(base.topology_hash(), dh, 7);
+        assert_ne!(p, r);
+        assert_ne!(p.pass, CompileKey::schedule(base.stable_hash(), dh, 7).pass);
     }
 }

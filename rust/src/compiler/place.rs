@@ -51,8 +51,12 @@ pub fn cost(dfg: &Dfg, m: &MachineDesc, place: &[Coord]) -> u64 {
 
 /// Stage-level entry point for the sweep engine's cache: identical to
 /// [`place`] but seeded directly, matching how the placement artifact is
-/// keyed (`CompileKey { seed, pass: Place, .. }` — the stage is a pure
-/// function of `(dfg, machine, seed)`).
+/// keyed (`CompileKey::place(topology_hash, dfg_hash, seed)`). The stage
+/// is a pure function of `(dfg, fabric, seed)`: of the machine it reads
+/// only rows/cols, the topology (distances) and per-PE capability sets —
+/// exactly the fields [`crate::arch::WindMillParams::topology_hash`]
+/// covers — so two machines with equal fabric sub-hashes yield identical
+/// placements and may share the cached artifact.
 pub fn place_seeded(dfg: &Dfg, m: &MachineDesc, seed: u64) -> Result<Vec<Coord>, DiagError> {
     place(dfg, m, &mut Rng::new(seed))
 }

@@ -87,6 +87,12 @@ impl PartialOrd for QItem {
 }
 
 /// Route every explicit DFG edge over the machine's topology.
+///
+/// Of the machine this reads only rows/cols and the topology's neighbour
+/// function — fabric fields covered by
+/// [`crate::arch::WindMillParams::topology_hash`] — so the artifact is
+/// cacheable per `(topology_hash, dfg, seed)` over the equally-keyed place
+/// artifact (`coordinator::cache`).
 pub fn route(dfg: &Dfg, place: &[Coord], m: &MachineDesc) -> Result<Routes, DiagError> {
     let topo = m
         .topology

@@ -113,6 +113,11 @@ fn pipeline_depth(dfg: &Dfg, routes: &Routes) -> u32 {
 }
 
 /// Analyze a placed+routed kernel on a machine.
+///
+/// Unlike place/route, this stage reads schedule-visible parameters (smem
+/// banking, context depth, execution mode), so its cache tier is keyed by
+/// the **full** arch hash (`CompileKey::schedule`), never the fabric
+/// sub-hash.
 pub fn analyze(
     dfg: &Dfg,
     place: &[Coord],

@@ -15,6 +15,17 @@
 //!   output, shared by every sweep point that repeats a
 //!   `(architecture, kernel, seed)` triple — handed out as `Arc<Mapping>`
 //!   so a warm hit is a pointer clone, not a deep copy;
+//! * **stage artifacts** (`pass: Place | Route | Schedule`): a mapping-tier
+//!   miss does not recompile monolithically — placement and routing are
+//!   memoized under the **fabric sub-hash**
+//!   ([`WindMillParams::topology_hash`]: geometry, topology, PE-type mix),
+//!   and schedule analysis under the full arch hash. Sweep points that
+//!   differ only in schedule-visible parameters (context depth, exec mode,
+//!   smem geometry, clocking — [`WindMillParams::schedule_hash`]) therefore
+//!   reuse one place/route artifact per `(kernel, seed)`, in memory and on
+//!   disk, and pay only schedule analysis + config generation. Every stage
+//!   is the same pure function the monolithic compile runs, so the
+//!   assembled mapping is bit-identical (`tests/stage_memoization.rs`);
 //! * **simulation** (`pass: Simulate`, key additionally carries
 //!   [`crate::util::stable_hash_f32`] of the input memory image): the full
 //!   cycle-accurate [`SimResult`] of one kernel phase, so a re-run sweep
@@ -52,7 +63,10 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::arch::params::WindMillParams;
-use crate::compiler::{compile_timed, CompileKey, CompilePass, Dfg, Mapping, StageNanos};
+use crate::compiler::{
+    compile_timed, config_gen, place, route, schedule, CompileKey, CompilePass, Coord, Dfg,
+    Mapping, Routes, Schedule, StageNanos,
+};
 use crate::diag::error::DiagError;
 use crate::plugins;
 use crate::sim::engine::SimResult;
@@ -77,6 +91,12 @@ pub struct ElabArtifacts {
 enum Entry {
     Elab(Arc<ElabArtifacts>),
     Mapping(Arc<Mapping>, StageNanos),
+    /// Stage-granular mapper artifacts (see the module docs): a placement
+    /// and a routing table keyed by the fabric sub-hash, and a schedule
+    /// analysis keyed by the full arch hash.
+    Place(Arc<Vec<Coord>>),
+    Route(Arc<Routes>),
+    Sched(Arc<Schedule>),
     Sim(Arc<SimResult>),
 }
 
@@ -249,6 +269,11 @@ pub struct ArtifactCache {
     stats: Mutex<CacheStats>,
     store: Option<Arc<DiskStore>>,
     sim_budget: Option<usize>,
+    /// Inverted so `Default` (= `ArtifactCache::new()`) keeps stage
+    /// memoization **on**; `with_stage_memo(false)` restores the monolithic
+    /// `compile_timed` miss path (benchmark baseline and bit-identity
+    /// tests).
+    stage_memo_disabled: bool,
 }
 
 impl ArtifactCache {
@@ -269,6 +294,19 @@ impl ArtifactCache {
     pub fn with_sim_budget(mut self, bytes: usize) -> Self {
         self.sim_budget = Some(bytes);
         self
+    }
+
+    /// Toggle stage-granular compile memoization (default **on**). When
+    /// off, a mapping miss recompiles monolithically via `compile_timed` —
+    /// the pre-PR-4 behaviour, kept as the benchmark baseline and to prove
+    /// staged assembly bit-identical.
+    pub fn with_stage_memo(mut self, enabled: bool) -> Self {
+        self.stage_memo_disabled = !enabled;
+        self
+    }
+
+    pub fn stage_memo(&self) -> bool {
+        !self.stage_memo_disabled
     }
 
     pub fn store(&self) -> Option<&Arc<DiskStore>> {
@@ -430,18 +468,27 @@ impl ArtifactCache {
         None
     }
 
-    /// Compile `dfg` onto `machine` (which must be the elaboration of the
-    /// params hashing to `arch_hash`), or return the cached mapping. The
-    /// boolean reports whether this lookup was a hit; [`StageNanos`] is the
-    /// per-stage cost of the miss that populated the entry (zero-cost to a
-    /// hit, but kept so reports can show what the cache is saving).
+    /// Compile `dfg` onto `machine` (which must be the elaboration of
+    /// `params`), or return the cached mapping. The boolean reports whether
+    /// this lookup was a hit at the **mapping** tier; [`StageNanos`] is the
+    /// per-stage cost of the build that populated the entry (on a staged
+    /// build, stages answered by their own tiers report lookup cost, not
+    /// recompute cost — that is the saving).
+    ///
+    /// A mapping-tier miss does not mean a full recompile: the staged path
+    /// sources placement and routing from tiers keyed by
+    /// [`WindMillParams::topology_hash`] and the schedule from a tier keyed
+    /// by the full arch hash, so a sweep point that differs from a cached
+    /// one only in schedule-visible parameters recomputes schedule analysis
+    /// and config generation alone.
     pub fn mapping(
         &self,
-        arch_hash: u64,
+        params: &WindMillParams,
         dfg: &Dfg,
         machine: &MachineDesc,
         seed: u64,
     ) -> Result<(Arc<Mapping>, StageNanos, bool), DiagError> {
+        let arch_hash = params.stable_hash();
         let key = CompileKey::mapping(arch_hash, dfg, seed);
         if let Some(Entry::Mapping(m, ns)) =
             self.inner.lock().unwrap().entries.get(&key).cloned()
@@ -467,7 +514,11 @@ impl ArtifactCache {
             }
         }
         self.record(CompilePass::Mapping, Tier::Miss);
-        let (mapping, ns) = compile_timed(dfg.clone(), machine, seed)?;
+        let (mapping, ns) = if self.stage_memo_disabled {
+            compile_timed(dfg.clone(), machine, seed)?
+        } else {
+            self.staged_compile(arch_hash, params.topology_hash(), dfg, machine, seed)?
+        };
         let mapping = Arc::new(mapping);
         if let Some(store) = &self.store {
             store.store_mapping(&key, &mapping, &ns);
@@ -481,6 +532,123 @@ impl ArtifactCache {
             Entry::Mapping(stored, stored_ns) => Ok((Arc::clone(stored), *stored_ns, false)),
             _ => unreachable!("mapping key holds non-mapping entry"),
         }
+    }
+
+    /// One stage tier's three-level lookup: memory → disk (promote) →
+    /// compute (write through). Identical control flow to the monolithic
+    /// tiers; the closures adapt it to each artifact type.
+    fn stage_lookup<T>(
+        &self,
+        key: CompileKey,
+        get: impl Fn(&Entry) -> Option<Arc<T>>,
+        wrap: impl Fn(Arc<T>) -> Entry,
+        load_disk: impl FnOnce(&DiskStore) -> Option<T>,
+        store_disk: impl FnOnce(&DiskStore, &T),
+        compute: impl FnOnce() -> Result<T, DiagError>,
+    ) -> Result<Arc<T>, DiagError> {
+        if let Some(v) = self.inner.lock().unwrap().entries.get(&key).and_then(&get) {
+            self.record(key.pass, Tier::Mem);
+            return Ok(v);
+        }
+        if let Some(store) = &self.store {
+            if let Some(v) = load_disk(store) {
+                self.record(key.pass, Tier::Disk);
+                let v = Arc::new(v);
+                let mut inner = self.inner.lock().unwrap();
+                let entry = inner.entries.entry(key).or_insert_with(|| wrap(Arc::clone(&v)));
+                return Ok(get(entry).expect("stage key holds mismatched entry kind"));
+            }
+        }
+        self.record(key.pass, Tier::Miss);
+        let v = compute()?;
+        if let Some(store) = &self.store {
+            store_disk(store, &v);
+        }
+        let v = Arc::new(v);
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.entries.entry(key).or_insert_with(|| wrap(Arc::clone(&v)));
+        Ok(get(entry).expect("stage key holds mismatched entry kind"))
+    }
+
+    /// Stage-granular compile: place and route answer from tiers keyed by
+    /// the fabric sub-hash (`topo_hash`), the schedule from a tier keyed by
+    /// the full arch hash; config generation is always recomputed (a cheap
+    /// pure function of the cached artifacts). Every stage is the same
+    /// pure function [`compile_timed`] runs, only sourced differently, so
+    /// the assembled [`Mapping`] is bit-identical to a monolithic compile —
+    /// pinned by `tests/stage_memoization.rs`.
+    fn staged_compile(
+        &self,
+        arch_hash: u64,
+        topo_hash: u64,
+        dfg: &Dfg,
+        machine: &MachineDesc,
+        seed: u64,
+    ) -> Result<(Mapping, StageNanos), DiagError> {
+        dfg.validate()?;
+        machine.validate()?;
+        let dfg_hash = dfg.stable_hash();
+        let mut ns = StageNanos::default();
+
+        let t0 = std::time::Instant::now();
+        let pk = CompileKey::place(topo_hash, dfg_hash, seed);
+        let placed = self.stage_lookup(
+            pk,
+            |e| match e {
+                Entry::Place(p) => Some(Arc::clone(p)),
+                _ => None,
+            },
+            Entry::Place,
+            |s| s.load_place(&pk),
+            |s, v| s.store_place(&pk, v),
+            || place::place_seeded(dfg, machine, seed),
+        )?;
+        ns.place = t0.elapsed().as_nanos() as u64;
+
+        let t0 = std::time::Instant::now();
+        let rk = CompileKey::route(topo_hash, dfg_hash, seed);
+        let routes = self.stage_lookup(
+            rk,
+            |e| match e {
+                Entry::Route(r) => Some(Arc::clone(r)),
+                _ => None,
+            },
+            Entry::Route,
+            |s| s.load_routes(&rk),
+            |s, v| s.store_routes(&rk, v),
+            || route::route(dfg, &placed, machine),
+        )?;
+        ns.route = t0.elapsed().as_nanos() as u64;
+
+        let t0 = std::time::Instant::now();
+        let sk = CompileKey::schedule(arch_hash, dfg_hash, seed);
+        let sched = self.stage_lookup(
+            sk,
+            |e| match e {
+                Entry::Sched(s) => Some(Arc::clone(s)),
+                _ => None,
+            },
+            Entry::Sched,
+            |s| s.load_schedule(&sk),
+            |s, v| s.store_schedule(&sk, v),
+            || schedule::analyze(dfg, &placed, &routes, machine),
+        )?;
+        ns.schedule = t0.elapsed().as_nanos() as u64;
+
+        let t0 = std::time::Instant::now();
+        let config = config_gen::generate(dfg, &placed, &routes, machine)?;
+        ns.config = t0.elapsed().as_nanos() as u64;
+
+        Ok((
+            Mapping {
+                dfg: dfg.clone(),
+                place: (*placed).clone(),
+                routes: (*routes).clone(),
+                schedule: (*sched).clone(),
+                config,
+            },
+            ns,
+        ))
     }
 
     /// Cycle-accurate simulation of one mapped kernel phase, or the cached
@@ -556,26 +724,93 @@ mod tests {
     fn mapping_is_cached_and_identical_to_direct_compile() {
         let cache = ArtifactCache::new();
         let params = presets::standard();
-        let arch = params.stable_hash();
         let (e, _) = cache.elaborated(&params).unwrap();
         let d = saxpy_dfg();
 
-        let (m1, ns1, hit1) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
-        let (m2, _ns2, hit2) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m1, ns1, hit1) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
+        let (m2, _ns2, hit2) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
         assert!(!hit1);
         assert!(hit2);
         assert!(Arc::ptr_eq(&m1, &m2));
         assert!(ns1.total() > 0);
 
-        // Cached artifact equals a direct compile bit-for-bit.
+        // Cached artifact equals a direct compile bit-for-bit (the staged
+        // build runs the same pure stage functions).
         let direct = compile(d.clone(), &e.machine, 7).unwrap();
         assert_eq!(m1.place, direct.place);
+        assert_eq!(m1.routes.edges, direct.routes.edges);
+        assert_eq!(m1.routes.through_load, direct.routes.through_load);
         assert_eq!(m1.schedule, direct.schedule);
         assert_eq!(m1.config.total_words(), direct.config.total_words());
 
-        // Different seed misses.
-        let (_, _, hit3) = cache.mapping(arch, &d, &e.machine, 8).unwrap();
+        // Different seed misses (and cannot reuse the seed-keyed stages).
+        let (_, _, hit3) = cache.mapping(&params, &d, &e.machine, 8).unwrap();
         assert!(!hit3);
+        let s = cache.stats();
+        assert_eq!(s.pass_counts_full("place").miss, 2, "{s:?}");
+        assert_eq!(s.pass_counts_full("route").miss, 2, "{s:?}");
+        assert_eq!(s.pass_counts_full("schedule").miss, 2, "{s:?}");
+    }
+
+    /// The tentpole property: sweep points that differ only in context
+    /// depth share place/route artifacts; only schedule (full-arch keyed)
+    /// and the mapping assembly recompute.
+    #[test]
+    fn stage_tiers_reuse_place_route_across_context_depths() {
+        let cache = ArtifactCache::new();
+        let d = saxpy_dfg();
+        let depths = [16usize, 32, 64, 128];
+        for &ctx in &depths {
+            let mut params = presets::standard();
+            params.context_depth = ctx;
+            let (e, _) = cache.elaborated(&params).unwrap();
+            let (m, _, hit) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
+            assert!(!hit, "ctx {ctx}: distinct arch hash must miss the mapping tier");
+            // Staged output equals the monolithic compile on this machine.
+            let direct = compile(d.clone(), &e.machine, 7).unwrap();
+            assert_eq!(m.place, direct.place, "ctx {ctx}");
+            assert_eq!(m.routes.edges, direct.routes.edges, "ctx {ctx}");
+            assert_eq!(m.schedule, direct.schedule, "ctx {ctx}");
+        }
+        let s = cache.stats();
+        let n = depths.len() as u64;
+        assert_eq!(
+            s.pass_counts_full("place"),
+            PassCounts { mem: n - 1, disk: 0, miss: 1 },
+            "{s:?}"
+        );
+        assert_eq!(
+            s.pass_counts_full("route"),
+            PassCounts { mem: n - 1, disk: 0, miss: 1 },
+            "{s:?}"
+        );
+        assert_eq!(s.pass_counts_full("schedule").miss, n, "{s:?}");
+        assert_eq!(s.pass_counts_full("mapping").miss, n, "{s:?}");
+    }
+
+    /// `with_stage_memo(false)` restores the monolithic miss path: no
+    /// stage tiers are consulted and the result is identical.
+    #[test]
+    fn stage_memo_can_be_disabled_for_a_monolithic_baseline() {
+        let staged = ArtifactCache::new();
+        let mono = ArtifactCache::new().with_stage_memo(false);
+        assert!(staged.stage_memo());
+        assert!(!mono.stage_memo());
+        let params = presets::standard();
+        let d = saxpy_dfg();
+        let (es, _) = staged.elaborated(&params).unwrap();
+        let (em, _) = mono.elaborated(&params).unwrap();
+        let (a, _, _) = staged.mapping(&params, &d, &es.machine, 7).unwrap();
+        let (b, _, _) = mono.mapping(&params, &d, &em.machine, 7).unwrap();
+        assert_eq!(a.place, b.place);
+        assert_eq!(a.routes.edges, b.routes.edges);
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.config.total_words(), b.config.total_words());
+        let s = mono.stats();
+        for pass in ["place", "route", "schedule"] {
+            assert_eq!(s.pass_counts_full(pass).lookups(), 0, "{pass}: {s:?}");
+        }
+        assert_eq!(staged.stats().pass_counts_full("place").lookups(), 1);
     }
 
     #[test]
@@ -586,7 +821,7 @@ mod tests {
         let arch = params.stable_hash();
         let (e, _) = cache.elaborated(&params).unwrap();
         let d = saxpy_dfg();
-        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m, _, _) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
 
         let words = e.machine.smem.as_ref().unwrap().words();
         let image = vec![0.5f32; words];
@@ -634,7 +869,7 @@ mod tests {
         // oldest entry, so the tier holds at most the newest result.
         let cache = ArtifactCache::new().with_sim_budget(1);
         let (e, _) = cache.elaborated(&params).unwrap();
-        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m, _, _) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
         let words = e.machine.smem.as_ref().unwrap().words();
         let image = vec![0.25f32; words];
         let mut calls = 0u32;
@@ -666,14 +901,14 @@ mod tests {
         let d = saxpy_dfg();
         let cache = ArtifactCache::new();
         let (e, _) = cache.elaborated(&params).unwrap();
-        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m, _, _) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
         let words = e.machine.smem.as_ref().unwrap().words();
         let one = sim_bytes(&simulate(&m, &e.machine, &vec![0.0f32; words], 2_000_000).unwrap());
 
         // Budget for exactly two images.
         let cache = ArtifactCache::new().with_sim_budget(2 * one + 64);
         let (e, _) = cache.elaborated(&params).unwrap();
-        let (m, _, _) = cache.mapping(arch, &d, &e.machine, 7).unwrap();
+        let (m, _, _) = cache.mapping(&params, &d, &e.machine, 7).unwrap();
         let mk = |v: f32| vec![v; words];
         let run = |img: &[f32]| {
             cache

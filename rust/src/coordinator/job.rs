@@ -252,7 +252,7 @@ pub fn run_job_cached(
             &cached_elab.machine
         }
         None => {
-            owned_machine = plugins::elaborate(params)?.artifact;
+            owned_machine = plugins::elaborate(params.clone())?.artifact;
             &owned_machine
         }
     };
@@ -260,13 +260,15 @@ pub fn run_job_cached(
     machine.validate()?;
 
     // Compile every phase (cache key: arch hash × DFG hash × seed). Hits
-    // alias the cached `Arc<Mapping>` — no deep clone on the warm path.
+    // alias the cached `Arc<Mapping>` — no deep clone on the warm path —
+    // and mapping-tier misses still reuse stage artifacts (place/route by
+    // fabric sub-hash) from sweep points compiled earlier.
     let t0 = Instant::now();
     let mut mappings: Vec<Arc<Mapping>> = Vec::with_capacity(dfgs.len());
     for d in &dfgs {
         match cache {
             Some(c) => {
-                let (m, _stage_ns, hit) = c.mapping(arch_hash, d, machine, spec.seed)?;
+                let (m, _stage_ns, hit) = c.mapping(&params, d, machine, spec.seed)?;
                 if hit {
                     timing.cache_hits += 1;
                 } else {

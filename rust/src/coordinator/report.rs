@@ -148,6 +148,24 @@ impl SweepReport {
         self.cache.pass_hit_rate(crate::compiler::CompilePass::Simulate.name())
     }
 
+    /// Fraction of place+route stage lookups answered without recompute
+    /// (either tier). On a cold sweep over a grid varying only
+    /// schedule-visible parameters this approaches `(N-1)/N`: the
+    /// stage-granular cache places and routes once per `(kernel, seed)`
+    /// and every other point reuses the artifacts. 0.0 when the mapping
+    /// tier answered everything (warm sweep — the stage tiers are never
+    /// consulted) or stage memoization is disabled.
+    pub fn place_route_reuse(&self) -> f64 {
+        let p = self.cache.pass_counts_full(crate::compiler::CompilePass::Place.name());
+        let r = self.cache.pass_counts_full(crate::compiler::CompilePass::Route.name());
+        let lookups = p.lookups() + r.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            (p.hits() + r.hits()) as f64 / lookups as f64
+        }
+    }
+
     /// Fastest point on the workload (min `wm_time_ns`).
     pub fn best_performance(&self) -> Option<&SweepPoint> {
         self.points
@@ -182,7 +200,10 @@ impl SweepReport {
 
     /// One-line cache/timing summary for logs and benches. Each looked-up
     /// pass reports its tier split as `mem/disk/miss`, so "warm process"
-    /// (memory) is distinguishable from "warm store" (disk) at a glance.
+    /// (memory) is distinguishable from "warm store" (disk) at a glance —
+    /// including the stage-granular `place`/`route`/`schedule` tiers, whose
+    /// rows make fabric-level reuse on a cold sweep observable (e.g.
+    /// `place 3m/0d/1x` on a four-point context-depth grid).
     pub fn summary(&self) -> String {
         let (sim_h, sim_m) = self.cache.pass_counts("simulate");
         let per_pass = self

@@ -304,8 +304,22 @@ mod tests {
         assert!(results.iter().all(Result::is_ok));
         let stats = engine.cache_stats();
         // Every job performs one elaboration, one mapping and one
-        // simulation lookup.
-        assert_eq!(stats.lookups(), 12, "{stats:?}");
+        // simulation lookup — the job-level tiers are exact. Stage tiers
+        // (place/route/schedule) are consulted only on mapping misses,
+        // whose count varies under concurrent-miss races, so those rows
+        // are pinned relative to the observed miss count instead.
+        for pass in ["elaborate", "mapping", "simulate"] {
+            assert_eq!(stats.pass_counts_full(pass).lookups(), 4, "{pass}: {stats:?}");
+        }
+        let mapping_misses = stats.pass_counts_full("mapping").miss;
+        assert!((2..=4).contains(&mapping_misses), "two seeds: {stats:?}");
+        for pass in ["place", "route", "schedule"] {
+            assert_eq!(
+                stats.pass_counts_full(pass).lookups(),
+                mapping_misses,
+                "{pass}: one stage lookup per mapping miss ({stats:?})"
+            );
+        }
         // The two late jobs run after at least one early job fully
         // finished, so ≥3 lookups must be hits even under worst-case races
         // (concurrent cold misses may duplicate work but never corrupt it).

@@ -41,6 +41,12 @@ USAGE:
         Merge one complete shard session under DIR/partials/ into a report
         bit-identical to the unsharded sweep (a store may hold partials of
         several sessions; narrow by workload and/or seed).
+    windmill store gc --store DIR [--max-bytes N]
+        Garbage-collect a persistent artifact store: drop entries with a
+        stale codec version (and temp-file litter), then — with
+        --max-bytes — evict valid entries oldest-first until the pass
+        directories fit the cap. Prints a per-pass reclaim summary;
+        partials/ is never touched.
     windmill suite [--workers W]
         The cross-domain workload suite on the standard WindMill.
     windmill plugins
@@ -300,6 +306,52 @@ fn cmd_sweep_merge(args: &[String]) -> Result<(), String> {
     }
 }
 
+fn cmd_store(args: &[String]) -> Result<(), String> {
+    match args.first().map(String::as_str) {
+        Some("gc") => cmd_store_gc(&args[1..]),
+        Some(other) => Err(format!("unknown store subcommand `{other}` (expected `gc`)")),
+        None => Err("store: missing subcommand (expected `gc`)".into()),
+    }
+}
+
+fn cmd_store_gc(args: &[String]) -> Result<(), String> {
+    let dir = arg_value(args, "--store").ok_or("store gc needs --store DIR")?;
+    let max_bytes: Option<u64> = match arg_value(args, "--max-bytes") {
+        Some(s) => Some(s.parse().map_err(|_| format!("bad --max-bytes `{s}`"))?),
+        None => None,
+    };
+    let store = DiskStore::open(&dir).map_err(|e| e.to_string())?;
+    let report = store.gc(max_bytes).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        &format!("store gc: {dir}"),
+        &["pass", "kept", "kept bytes", "stale", "stale bytes", "evicted", "evicted bytes"],
+    );
+    for p in &report.passes {
+        t.row(&[
+            p.pass.clone(),
+            p.kept.to_string(),
+            p.kept_bytes.to_string(),
+            p.stale.to_string(),
+            p.stale_bytes.to_string(),
+            p.evicted.to_string(),
+            p.evicted_bytes.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "kept {} entries ({} bytes) | dropped {} stale, evicted {} by cap | reclaimed {} bytes",
+        report.kept(),
+        report.kept_bytes(),
+        report.stale(),
+        report.evicted(),
+        report.reclaimed_bytes()
+    );
+    if let Some(cap) = max_bytes {
+        eprintln!("byte cap: {} / {cap} bytes in use after gc", report.kept_bytes());
+    }
+    Ok(())
+}
+
 fn cmd_suite(args: &[String]) -> Result<(), String> {
     let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
     let specs: Vec<JobSpec> = [
@@ -366,6 +418,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&rest),
         "sweep" => cmd_sweep(&rest),
         "sweep-merge" => cmd_sweep_merge(&rest),
+        "store" => cmd_store(&rest),
         "suite" => cmd_suite(&rest),
         "plugins" => cmd_plugins(),
         "help" | "--help" | "-h" => {

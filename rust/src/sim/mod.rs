@@ -17,5 +17,5 @@ pub mod scalar;
 pub mod smem;
 pub mod task;
 
-pub use engine::{simulate, SimResult};
+pub use engine::{simulate, simulate_counting, SimResult};
 pub use machine::MachineDesc;

@@ -32,7 +32,7 @@ use crate::arch::params::{ExecMode, PeType, SharedRegMode};
 use crate::arch::topology::Topology;
 use crate::compiler::dfg::{Access, Node, NodeKind};
 use crate::compiler::{
-    CompilePass, ConfigImage, Dfg, Mapping, Routes, Schedule, StageNanos,
+    CompilePass, ConfigImage, Coord, Dfg, Mapping, Routes, Schedule, StageNanos,
 };
 use crate::coordinator::cache::{CacheStats, ElabArtifacts, PassCounts};
 use crate::coordinator::report::{PpaRow, SweepPoint, SweepReport};
@@ -64,6 +64,14 @@ pub enum Kind {
     /// [`Kind::Elab`] so the header check catches type confusion between
     /// the two row-bearing record types.
     Ppa = 5,
+    /// Stage-granular mapper artifacts (PR 4): a placement (`Vec<Coord>`),
+    /// a routing table ([`Routes`]) and a schedule analysis
+    /// ([`Schedule`]), persisted under the per-pass directories so sweep
+    /// points that share the fabric sub-hash warm-start place/route from
+    /// disk even when their full mapping entry misses.
+    Place = 6,
+    Route = 7,
+    Schedule = 8,
 }
 
 fn corrupt(msg: impl Into<String>) -> DiagError {
@@ -654,37 +662,139 @@ fn dec_dfg(d: &mut Dec) -> Result<Dfg, DiagError> {
     Ok(Dfg { name, dims, nodes })
 }
 
-/// Mapping entry: the compiled kernel plus the per-stage wall time of the
-/// miss that produced it (so warm reports can show what the store saves).
-pub fn encode_mapping(m: &Mapping, ns: &StageNanos) -> Vec<u8> {
-    let mut e = Enc::new(Kind::Mapping);
-    enc_dfg(&mut e, &m.dfg);
-    e.seq(m.place.len());
-    for &(r, c) in &m.place {
+/// Placement record body, shared by the standalone [`Kind::Place`] entry
+/// and the full mapping entry (identical byte layout in both).
+fn enc_place(e: &mut Enc, place: &[Coord]) {
+    e.seq(place.len());
+    for &(r, c) in place {
         e.usize(r).usize(c);
     }
-    e.seq(m.routes.edges.len());
-    for edge in &m.routes.edges {
+}
+
+fn dec_place(d: &mut Dec) -> Result<Vec<Coord>, DiagError> {
+    let n = d.seq(16)?;
+    let mut place = Vec::with_capacity(n);
+    for _ in 0..n {
+        place.push((d.usize()?, d.usize()?));
+    }
+    Ok(place)
+}
+
+/// Routing record body ([`Kind::Route`] entries and the mapping entry).
+/// The `through_load` HashMap is serialized in sorted key order so
+/// encoding stays canonical.
+fn enc_routes(e: &mut Enc, routes: &Routes) {
+    e.seq(routes.edges.len());
+    for edge in &routes.edges {
         e.usize(edge.src_node).usize(edge.dst_node);
         e.seq(edge.path.len());
         for &(r, c) in &edge.path {
             e.usize(r).usize(c);
         }
     }
-    // HashMap: sorted for a deterministic image.
-    let mut through: Vec<(&(usize, usize), &u32)> = m.routes.through_load.iter().collect();
+    let mut through: Vec<(&(usize, usize), &u32)> = routes.through_load.iter().collect();
     through.sort();
     e.seq(through.len());
     for (&(r, c), &load) in through {
         e.usize(r).usize(c).u32(load);
     }
-    e.u32(m.schedule.ii_mem)
-        .u32(m.schedule.ii_rec)
-        .u32(m.schedule.ii_route)
-        .u32(m.schedule.ii)
-        .usize(m.schedule.ctx_words_needed)
-        .bool(m.schedule.scmd_compatible)
-        .u32(m.schedule.depth);
+}
+
+fn dec_routes(d: &mut Dec) -> Result<Routes, DiagError> {
+    let n_edges = d.seq(8)?;
+    let mut edges = Vec::with_capacity(n_edges);
+    for _ in 0..n_edges {
+        let src_node = d.usize()?;
+        let dst_node = d.usize()?;
+        let n_path = d.seq(16)?;
+        let mut path = Vec::with_capacity(n_path);
+        for _ in 0..n_path {
+            path.push((d.usize()?, d.usize()?));
+        }
+        edges.push(crate::compiler::route::Route { src_node, dst_node, path });
+    }
+    let n_through = d.seq(20)?;
+    let mut through_load = HashMap::with_capacity(n_through);
+    for _ in 0..n_through {
+        let coord = (d.usize()?, d.usize()?);
+        through_load.insert(coord, d.u32()?);
+    }
+    Ok(Routes { edges, through_load })
+}
+
+/// Schedule record body ([`Kind::Schedule`] entries and the mapping entry).
+fn enc_schedule(e: &mut Enc, s: &Schedule) {
+    e.u32(s.ii_mem)
+        .u32(s.ii_rec)
+        .u32(s.ii_route)
+        .u32(s.ii)
+        .usize(s.ctx_words_needed)
+        .bool(s.scmd_compatible)
+        .u32(s.depth);
+}
+
+fn dec_schedule(d: &mut Dec) -> Result<Schedule, DiagError> {
+    Ok(Schedule {
+        ii_mem: d.u32()?,
+        ii_rec: d.u32()?,
+        ii_route: d.u32()?,
+        ii: d.u32()?,
+        ctx_words_needed: d.usize()?,
+        scmd_compatible: d.bool()?,
+        depth: d.u32()?,
+    })
+}
+
+/// Standalone placement entry (the `place` pass directory).
+pub fn encode_place(place: &[Coord]) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Place);
+    enc_place(&mut e, place);
+    e.finish()
+}
+
+pub fn decode_place(bytes: &[u8]) -> Result<Vec<Coord>, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Place)?;
+    let place = dec_place(&mut d)?;
+    d.close()?;
+    Ok(place)
+}
+
+/// Standalone routing entry (the `route` pass directory).
+pub fn encode_routes(routes: &Routes) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Route);
+    enc_routes(&mut e, routes);
+    e.finish()
+}
+
+pub fn decode_routes(bytes: &[u8]) -> Result<Routes, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Route)?;
+    let routes = dec_routes(&mut d)?;
+    d.close()?;
+    Ok(routes)
+}
+
+/// Standalone schedule entry (the `schedule` pass directory).
+pub fn encode_schedule(s: &Schedule) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Schedule);
+    enc_schedule(&mut e, s);
+    e.finish()
+}
+
+pub fn decode_schedule(bytes: &[u8]) -> Result<Schedule, DiagError> {
+    let mut d = Dec::open(bytes, Kind::Schedule)?;
+    let s = dec_schedule(&mut d)?;
+    d.close()?;
+    Ok(s)
+}
+
+/// Mapping entry: the compiled kernel plus the per-stage wall time of the
+/// miss that produced it (so warm reports can show what the store saves).
+pub fn encode_mapping(m: &Mapping, ns: &StageNanos) -> Vec<u8> {
+    let mut e = Enc::new(Kind::Mapping);
+    enc_dfg(&mut e, &m.dfg);
+    enc_place(&mut e, &m.place);
+    enc_routes(&mut e, &m.routes);
+    enc_schedule(&mut e, &m.schedule);
     let mut pes: Vec<(&(usize, usize), &Vec<ConfigWord>)> = m.config.words.iter().collect();
     pes.sort_by_key(|(coord, _)| **coord);
     e.seq(pes.len());
@@ -704,38 +814,9 @@ pub fn encode_mapping(m: &Mapping, ns: &StageNanos) -> Vec<u8> {
 pub fn decode_mapping(bytes: &[u8]) -> Result<(Mapping, StageNanos), DiagError> {
     let mut d = Dec::open(bytes, Kind::Mapping)?;
     let dfg = dec_dfg(&mut d)?;
-    let n_place = d.seq(16)?;
-    let mut place = Vec::with_capacity(n_place);
-    for _ in 0..n_place {
-        place.push((d.usize()?, d.usize()?));
-    }
-    let n_edges = d.seq(8)?;
-    let mut edges = Vec::with_capacity(n_edges);
-    for _ in 0..n_edges {
-        let src_node = d.usize()?;
-        let dst_node = d.usize()?;
-        let n_path = d.seq(16)?;
-        let mut path = Vec::with_capacity(n_path);
-        for _ in 0..n_path {
-            path.push((d.usize()?, d.usize()?));
-        }
-        edges.push(crate::compiler::route::Route { src_node, dst_node, path });
-    }
-    let n_through = d.seq(20)?;
-    let mut through_load = HashMap::with_capacity(n_through);
-    for _ in 0..n_through {
-        let coord = (d.usize()?, d.usize()?);
-        through_load.insert(coord, d.u32()?);
-    }
-    let schedule = Schedule {
-        ii_mem: d.u32()?,
-        ii_rec: d.u32()?,
-        ii_route: d.u32()?,
-        ii: d.u32()?,
-        ctx_words_needed: d.usize()?,
-        scmd_compatible: d.bool()?,
-        depth: d.u32()?,
-    };
+    let place = dec_place(&mut d)?;
+    let routes = dec_routes(&mut d)?;
+    let schedule = dec_schedule(&mut d)?;
     let n_pes = d.seq(16)?;
     let mut words = HashMap::with_capacity(n_pes);
     for _ in 0..n_pes {
@@ -755,16 +836,7 @@ pub fn decode_mapping(bytes: &[u8]) -> Result<(Mapping, StageNanos), DiagError> 
         config: d.u64()?,
     };
     d.close()?;
-    Ok((
-        Mapping {
-            dfg,
-            place,
-            routes: Routes { edges, through_load },
-            schedule,
-            config: ConfigImage { words },
-        },
-        ns,
-    ))
+    Ok((Mapping { dfg, place, routes, schedule, config: ConfigImage { words } }, ns))
 }
 
 // ---------------------------------------------------------------------------
@@ -1031,6 +1103,39 @@ mod tests {
         assert_eq!(back.config.total_words(), mapping.config.total_words());
         assert_eq!(back_ns, ns);
         assert_eq!(encode_mapping(&back, &back_ns), bytes, "canonical re-encode");
+    }
+
+    #[test]
+    fn stage_artifacts_roundtrip_and_are_canonical() {
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::gemm_bias(4, 4, 4);
+        let (mapping, _) = compile_timed(dfg, &machine, 7).unwrap();
+
+        let pb = encode_place(&mapping.place);
+        let place = decode_place(&pb).unwrap();
+        assert_eq!(place, mapping.place);
+        assert_eq!(encode_place(&place), pb, "canonical re-encode");
+
+        let rb = encode_routes(&mapping.routes);
+        let routes = decode_routes(&rb).unwrap();
+        assert_eq!(routes.edges, mapping.routes.edges);
+        assert_eq!(routes.through_load, mapping.routes.through_load);
+        assert_eq!(encode_routes(&routes), rb, "canonical re-encode");
+
+        let sb = encode_schedule(&mapping.schedule);
+        let sched = decode_schedule(&sb).unwrap();
+        assert_eq!(sched, mapping.schedule);
+        assert_eq!(encode_schedule(&sched), sb, "canonical re-encode");
+
+        // The three kinds are mutually exclusive at the header.
+        assert!(decode_routes(&pb).is_err());
+        assert!(decode_place(&rb).is_err());
+        assert!(decode_schedule(&rb).is_err());
+        // Truncation and bit flips are detected like any other entry.
+        assert!(decode_place(&pb[..pb.len() - 1]).is_err());
+        let mut flipped = rb.clone();
+        flipped[rb.len() / 2] ^= 0x40;
+        assert!(decode_routes(&flipped).is_err());
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::compiler::{CompileKey, Mapping, StageNanos};
+use crate::compiler::{CompileKey, Coord, Mapping, Routes, Schedule, StageNanos};
 use crate::coordinator::cache::ElabArtifacts;
 use crate::diag::error::DiagError;
 use crate::sim::engine::SimResult;
@@ -54,6 +54,13 @@ pub struct DiskStats {
     /// Persist attempts that failed at the filesystem level.
     pub write_errors: u64,
 }
+
+/// Minimum age before [`DiskStore::gc`] treats a `.tmp-*` file as a dead
+/// writer's litter. A live writer holds a temp file only for the instant
+/// between `fs::write` and `rename`; anything this old is from a killed
+/// process and safe to collect without racing writers in other processes
+/// sharing the directory.
+const TMP_LITTER_AGE: std::time::Duration = std::time::Duration::from_secs(60);
 
 /// Process-wide temp-file sequence. Shared by *every* store handle (and
 /// the sweep-session partial writer) so two handles on one directory can
@@ -198,6 +205,200 @@ impl DiskStore {
     pub fn store_sim(&self, key: &CompileKey, result: &SimResult) {
         self.put(key, codec::encode_sim(result));
     }
+
+    // ---- stage-granular mapper artifacts (PR 4) ---------------------------
+
+    pub fn load_place(&self, key: &CompileKey) -> Option<Vec<Coord>> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_place(&bytes))
+    }
+
+    pub fn store_place(&self, key: &CompileKey, place: &[Coord]) {
+        self.put(key, codec::encode_place(place));
+    }
+
+    pub fn load_routes(&self, key: &CompileKey) -> Option<Routes> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_routes(&bytes))
+    }
+
+    pub fn store_routes(&self, key: &CompileKey, routes: &Routes) {
+        self.put(key, codec::encode_routes(routes));
+    }
+
+    pub fn load_schedule(&self, key: &CompileKey) -> Option<Schedule> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_schedule(&bytes))
+    }
+
+    pub fn store_schedule(&self, key: &CompileKey, schedule: &Schedule) {
+        self.put(key, codec::encode_schedule(schedule));
+    }
+
+    // ---- maintenance ------------------------------------------------------
+
+    /// Garbage-collect the store: drop every entry whose codec header is
+    /// unreadable or carries a stale [`codec::VERSION`] (plus `.tmp-*`
+    /// litter older than [`TMP_LITTER_AGE`] — younger temps may belong to
+    /// a live writer in another process and are left untouched), then —
+    /// when `max_bytes` is given — evict valid entries oldest-mtime-first
+    /// until the pass directories fit the cap. `partials/` is never
+    /// touched: sweep-session partials belong to `sweep-merge`, not the
+    /// artifact tiers.
+    ///
+    /// Only the fixed 7-byte header is inspected per entry (not the
+    /// trailing digest), so gc cost scales with entry *count*, not bytes;
+    /// payload corruption keeps being handled lazily by the read path.
+    pub fn gc(&self, max_bytes: Option<u64>) -> Result<GcReport, DiagError> {
+        use std::io::Read;
+
+        struct Kept {
+            pass: usize,
+            path: PathBuf,
+            bytes: u64,
+            mtime: std::time::SystemTime,
+        }
+
+        let mut passes: Vec<GcPassReport> = Vec::new();
+        let mut kept: Vec<Kept> = Vec::new();
+        let dirs = std::fs::read_dir(&self.root).map_err(|e| {
+            DiagError::Store(format!("cannot list store dir {}: {e}", self.root.display()))
+        })?;
+        let mut pass_dirs: Vec<PathBuf> = dirs
+            .flatten()
+            .map(|d| d.path())
+            .filter(|p| p.is_dir() && p.file_name().is_some_and(|n| n != "partials"))
+            .collect();
+        pass_dirs.sort();
+
+        for dir in pass_dirs {
+            let mut report = GcPassReport {
+                pass: dir.file_name().unwrap().to_string_lossy().into_owned(),
+                ..GcPassReport::default()
+            };
+            let pass_idx = passes.len();
+            let Ok(entries) = std::fs::read_dir(&dir) else {
+                passes.push(report);
+                continue;
+            };
+            let mut files: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+            files.sort();
+            for path in files {
+                let Ok(meta) = std::fs::metadata(&path) else { continue };
+                if !meta.is_file() {
+                    continue;
+                }
+                let bytes = meta.len();
+                let name = path.file_name().unwrap().to_string_lossy().into_owned();
+                // Temp files: a writer in *another live process* may be
+                // between its `fs::write` and `rename` right now — deleting
+                // its temp would fail that rename and silently lose the
+                // artifact's persistence. Only litter demonstrably old
+                // (a killed writer's leftovers) is collected; young temps
+                // are left alone and not counted at all.
+                if name.starts_with(".tmp") {
+                    let old = meta
+                        .modified()
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age >= TMP_LITTER_AGE);
+                    if old && std::fs::remove_file(&path).is_ok() {
+                        report.stale += 1;
+                        report.stale_bytes += bytes;
+                    }
+                    continue;
+                }
+                // Header: MAGIC(4) + VERSION(2) + KIND(1); an entry also
+                // carries ≥ 8 digest bytes, so anything under 15 is torn.
+                let mut header = [0u8; 7];
+                let fresh = bytes >= 15
+                    && std::fs::File::open(&path)
+                        .and_then(|mut f| f.read_exact(&mut header))
+                        .is_ok()
+                    && header[..4] == codec::MAGIC
+                    && u16::from_le_bytes([header[4], header[5]]) == codec::VERSION;
+                if fresh {
+                    report.kept += 1;
+                    report.kept_bytes += bytes;
+                    let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                    kept.push(Kept { pass: pass_idx, path, bytes, mtime });
+                } else if std::fs::remove_file(&path).is_ok() {
+                    report.stale += 1;
+                    report.stale_bytes += bytes;
+                }
+            }
+            passes.push(report);
+        }
+
+        // Enforce the byte cap across all pass directories, evicting the
+        // oldest entries first (mtime, then path for determinism on
+        // filesystems with coarse timestamps).
+        if let Some(cap) = max_bytes {
+            let mut total: u64 = kept.iter().map(|k| k.bytes).sum();
+            kept.sort_by(|a, b| a.mtime.cmp(&b.mtime).then_with(|| a.path.cmp(&b.path)));
+            for k in &kept {
+                if total <= cap {
+                    break;
+                }
+                if std::fs::remove_file(&k.path).is_ok() {
+                    total -= k.bytes;
+                    let p = &mut passes[k.pass];
+                    p.kept -= 1;
+                    p.kept_bytes -= k.bytes;
+                    p.evicted += 1;
+                    p.evicted_bytes += k.bytes;
+                }
+            }
+        }
+
+        Ok(GcReport { passes })
+    }
+}
+
+/// Per-pass outcome of one [`DiskStore::gc`] run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GcPassReport {
+    pub pass: String,
+    /// Entries (and bytes) surviving the collection.
+    pub kept: usize,
+    pub kept_bytes: u64,
+    /// Entries dropped for a stale codec version, an unreadable header, or
+    /// a leftover temp file.
+    pub stale: usize,
+    pub stale_bytes: u64,
+    /// Valid entries evicted by the byte cap, oldest mtime first.
+    pub evicted: usize,
+    pub evicted_bytes: u64,
+}
+
+/// Aggregate outcome of one [`DiskStore::gc`] run, per pass directory.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GcReport {
+    /// One row per pass directory, sorted by pass name.
+    pub passes: Vec<GcPassReport>,
+}
+
+impl GcReport {
+    pub fn kept(&self) -> usize {
+        self.passes.iter().map(|p| p.kept).sum()
+    }
+
+    pub fn kept_bytes(&self) -> u64 {
+        self.passes.iter().map(|p| p.kept_bytes).sum()
+    }
+
+    pub fn stale(&self) -> usize {
+        self.passes.iter().map(|p| p.stale).sum()
+    }
+
+    pub fn evicted(&self) -> usize {
+        self.passes.iter().map(|p| p.evicted).sum()
+    }
+
+    /// Bytes returned to the filesystem (stale + evicted).
+    pub fn reclaimed_bytes(&self) -> u64 {
+        self.passes.iter().map(|p| p.stale_bytes + p.evicted_bytes).sum()
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +464,115 @@ mod tests {
         // Rewriting repairs the slot.
         store.store_mapping(&key, &mapping, &ns);
         assert!(store.load_mapping(&key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stage_entries_roundtrip_under_their_pass_directories() {
+        let (dir, store) = tmp_store("stages");
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(32, 2.0);
+        let params = presets::standard();
+        let dh = dfg.stable_hash();
+        let pk = CompileKey::place(params.topology_hash(), dh, 7);
+        let rk = CompileKey::route(params.topology_hash(), dh, 7);
+        let sk = CompileKey::schedule(params.stable_hash(), dh, 7);
+        assert!(store.load_place(&pk).is_none());
+
+        let (mapping, _) = compile_timed(dfg, &machine, 7).unwrap();
+        store.store_place(&pk, &mapping.place);
+        store.store_routes(&rk, &mapping.routes);
+        store.store_schedule(&sk, &mapping.schedule);
+
+        assert_eq!(store.load_place(&pk).unwrap(), mapping.place);
+        let routes = store.load_routes(&rk).unwrap();
+        assert_eq!(routes.edges, mapping.routes.edges);
+        assert_eq!(routes.through_load, mapping.routes.through_load);
+        assert_eq!(store.load_schedule(&sk).unwrap(), mapping.schedule);
+
+        // Each lands in its own pass directory.
+        assert!(store.entry_path(&pk).starts_with(dir.join("place")));
+        assert!(store.entry_path(&rk).starts_with(dir.join("route")));
+        assert!(store.entry_path(&sk).starts_with(dir.join("schedule")));
+        assert_eq!(store.entry_count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_drops_stale_versions_and_temp_litter() {
+        let (dir, store) = tmp_store("gc-stale");
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(16, 1.0);
+        let fresh_key = CompileKey::mapping(1, &dfg, 1);
+        let stale_key = CompileKey::mapping(2, &dfg, 1);
+        let (mapping, ns) = compile_timed(dfg, &machine, 1).unwrap();
+        store.store_mapping(&fresh_key, &mapping, &ns);
+        store.store_mapping(&stale_key, &mapping, &ns);
+
+        // Flip the stale entry's version byte and plant temp-file litter:
+        // one fresh (a concurrent writer could be mid-rename — must be
+        // left alone) and one backdated past `TMP_LITTER_AGE` (a killed
+        // writer's leftover — collected).
+        let stale_path = store.entry_path(&stale_key);
+        let mut bytes = std::fs::read(&stale_path).unwrap();
+        bytes[4] = 0xEE;
+        std::fs::write(&stale_path, &bytes).unwrap();
+        let young_litter = dir.join("mapping").join(".tmp-999-0");
+        std::fs::write(&young_litter, b"half-written").unwrap();
+        let old_litter = dir.join("mapping").join(".tmp-999-1");
+        std::fs::write(&old_litter, b"dead-writer").unwrap();
+        let long_ago = std::time::SystemTime::now() - 2 * TMP_LITTER_AGE;
+        std::fs::File::options()
+            .write(true)
+            .open(&old_litter)
+            .unwrap()
+            .set_modified(long_ago)
+            .unwrap();
+
+        let report = store.gc(None).unwrap();
+        assert_eq!(report.kept(), 1);
+        assert_eq!(report.stale(), 2, "{report:?}");
+        assert_eq!(report.evicted(), 0);
+        assert!(report.reclaimed_bytes() > 0);
+        assert!(!stale_path.exists());
+        assert!(!old_litter.exists(), "dead writer's temp collected");
+        assert!(young_litter.exists(), "live writer's temp must survive gc");
+        // The fresh entry survived and still decodes.
+        assert!(store.load_mapping(&fresh_key).is_some());
+        let row = report.passes.iter().find(|p| p.pass == "mapping").unwrap();
+        assert_eq!((row.kept, row.stale), (1, 2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_enforces_the_byte_cap() {
+        let (dir, store) = tmp_store("gc-cap");
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(16, 1.0);
+        let (mapping, ns) = compile_timed(dfg.clone(), &machine, 1).unwrap();
+        for arch in 0..4u64 {
+            store.store_mapping(&CompileKey::mapping(arch, &dfg, 1), &mapping, &ns);
+        }
+        let before = store.gc(None).unwrap();
+        assert_eq!(before.kept(), 4);
+        let one = before.kept_bytes() / 4;
+
+        // Cap to roughly two entries: the rest are evicted, and what
+        // remains fits the cap.
+        let cap = 2 * one + one / 2;
+        let report = store.gc(Some(cap)).unwrap();
+        assert_eq!(report.kept() + report.evicted(), 4, "{report:?}");
+        assert!(report.evicted() >= 2, "{report:?}");
+        assert!(report.kept_bytes() <= cap, "{report:?}");
+        assert_eq!(store.entry_count(), report.kept());
+
+        // A zero cap clears the store entirely; partials would survive
+        // (none here) and the directory stays usable.
+        let wiped = store.gc(Some(0)).unwrap();
+        assert_eq!(wiped.kept(), 0, "{wiped:?}");
+        assert_eq!(store.entry_count(), 0);
+        store.store_mapping(&CompileKey::mapping(9, &dfg, 1), &mapping, &ns);
+        assert!(store.load_mapping(&CompileKey::mapping(9, &dfg, 1)).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -26,5 +26,5 @@ pub mod disk;
 pub mod session;
 
 pub use codec::SweepPartial;
-pub use disk::{DiskStats, DiskStore};
+pub use disk::{DiskStats, DiskStore, GcPassReport, GcReport};
 pub use session::SweepSession;

@@ -27,9 +27,9 @@ use windmill::arch::presets;
 use windmill::compiler::{compile, dfg::interpret, Dfg};
 use windmill::coordinator::{SweepEngine, Workload};
 use windmill::plugins;
-use windmill::sim::engine::simulate;
+use windmill::sim::engine::{simulate, simulate_counting};
 use windmill::sim::reference::simulate_reference;
-use windmill::sim::MachineDesc;
+use windmill::sim::{MachineDesc, SimResult};
 use windmill::util::Rng;
 
 fn machine() -> MachineDesc {
@@ -171,6 +171,94 @@ fn optimized_engine_is_bit_and_cycle_identical() {
             fast.measured_ii,
             reference.measured_ii
         );
+    }
+}
+
+/// Field-by-field equivalence of two engine results (bitwise on memory).
+fn assert_cycle_identical(case: &str, fast: &SimResult, reference: &SimResult) {
+    assert_eq!(fast.cycles, reference.cycles, "{case}: cycle count");
+    assert_eq!(fast.fires, reference.fires, "{case}: fire count");
+    assert_eq!(fast.smem, reference.smem, "{case}: smem stats");
+    assert_eq!(fast.mem.len(), reference.mem.len(), "{case}");
+    for (i, (a, b)) in fast.mem.iter().zip(reference.mem.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{case} mem[{i}]: {a} vs {b}");
+    }
+    assert!(
+        (fast.avg_parallelism - reference.avg_parallelism).abs() < 1e-12,
+        "{case}: {} vs {}",
+        fast.avg_parallelism,
+        reference.avg_parallelism
+    );
+    assert!(
+        (fast.measured_ii - reference.measured_ii).abs() < 1e-12,
+        "{case}: {} vs {}",
+        fast.measured_ii,
+        reference.measured_ii
+    );
+}
+
+/// Satellite requirement (PR 4): the event-driven cycle skip is
+/// observationally invisible on *stall-heavy* kernels — long-latency SFU
+/// chains over shallow iteration spaces, where whole delivery latencies
+/// pass with every node stalled — and it actually engages (>0 skipped
+/// cycles), which the tick-everything reference engine never does.
+#[test]
+fn stall_heavy_sfu_chains_are_cycle_identical_and_skip() {
+    let m = machine();
+    let words = m.smem.as_ref().unwrap().words();
+    let mut total_skipped = 0u64;
+    for case in 0..12usize {
+        let mut rng = Rng::new(9_000 + case as u64);
+        // 1-4 iterations × 3-8 chained SFU/ALU ops: the shallow cases are
+        // guaranteed to stall on every inter-stage delivery.
+        let iters = *rng.choose(&[1u32, 2, 2, 4]);
+        let depth = rng.range(3, 9);
+        let mut d = Dfg::new(&format!("sfu-stall-{case}"), vec![iters]);
+        let mut v = d.load_affine(0, vec![1]);
+        for _ in 0..depth {
+            v = d.unary(*rng.choose(&[Op::Tanh, Op::Exp, Op::Tanh, Op::Abs]), v);
+        }
+        d.store_affine(v, 2048, vec![1], 1);
+
+        let mut image = vec![0.0f32; words];
+        for w in image.iter_mut().take(64) {
+            // Keep exp chains finite-ish; infinities would still compare
+            // bitwise, but finite values exercise more of the datapath.
+            *w = rng.normal() * 0.25 - 0.5;
+        }
+        let mut golden = image.clone();
+        interpret(&d, &mut golden).unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let mapping = compile(d, &m, 300 + case as u64)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let (fast, skipped) = simulate_counting(&mapping, &m, &image, 2_000_000)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let reference = simulate_reference(&mapping, &m, &image, 2_000_000)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_cycle_identical(&format!("case {case}"), &fast, &reference);
+        for (i, (a, b)) in fast.mem.iter().zip(golden.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} mem[{i}] vs interpreter");
+        }
+        total_skipped += skipped;
+    }
+    assert!(total_skipped > 0, "stall-heavy suite never engaged the calendar jump");
+}
+
+/// Satellite requirement (PR 4): the cycle skip is equally invisible on
+/// the non-affine gather path (`spmv` — indirect loads through the LSU),
+/// where memory stalls must *inhibit* skipping rather than corrupt it.
+#[test]
+fn spmv_gather_is_cycle_identical_under_the_skipping_engine() {
+    let m = machine();
+    for (seed, rows, cols, k) in [(11u64, 16u32, 24u32, 4u32), (12, 8, 40, 8)] {
+        let wl = Workload::Spmv { rows, cols, k };
+        let (dfgs, layout) = wl.build();
+        let image = wl.init_image(&layout, seed, m.smem.as_ref().unwrap().words());
+        let mapping = compile(dfgs[0].clone(), &m, seed).unwrap();
+        let (fast, skipped) = simulate_counting(&mapping, &m, &image, 2_000_000).unwrap();
+        let reference = simulate_reference(&mapping, &m, &image, 2_000_000).unwrap();
+        assert_cycle_identical(&format!("spmv seed {seed}"), &fast, &reference);
+        assert!(skipped < fast.cycles, "spmv seed {seed}");
     }
 }
 

@@ -1,0 +1,223 @@
+//! Stage-granular compile memoization (PR 4): correctness of the
+//! place/route/schedule cache tiers across the full sweep stack.
+//!
+//! The claims under test, end to end:
+//!
+//! 1. A cold sweep over a `ParamGrid` varying **only context depth**
+//!    performs exactly one place and one route per `(kernel, seed)`
+//!    (asserted via `CacheStats`), because placement and routing read only
+//!    the fabric ([`windmill::arch::WindMillParams::topology_hash`]).
+//! 2. The resulting `SweepReport` is **bit-identical** to a run with stage
+//!    memoization disabled (the monolithic `compile_timed` path) *and* to
+//!    the cache-free single-job pipeline — staged assembly is the same
+//!    pure function, only sourced differently.
+//! 3. Stage artifacts persist: a cold cache on a warm store reuses
+//!    place/route from **disk** for a context depth the store has never
+//!    seen, recomputing only schedule analysis and config generation.
+
+use std::sync::Arc;
+
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::compiler::compile;
+use windmill::coordinator::sweep::DEFAULT_SWEEP_SEED;
+use windmill::coordinator::{
+    run_job, ArtifactCache, JobSpec, PassCounts, SweepEngine, SweepReport, Workload,
+};
+use windmill::store::DiskStore;
+use windmill::workloads::linalg;
+
+fn ctx_grid() -> ParamGrid {
+    // All depths at or above the standard 32, so every kernel that maps on
+    // the standard preset maps at every grid point (the context-capacity
+    // check only relaxes as depth grows).
+    ParamGrid::new(presets::standard()).context_depths(&[32, 48, 64, 128])
+}
+
+/// Acceptance criterion: one place + one route per `(dfg, seed)` on a
+/// context-depth-only grid, observable through the per-stage cache rows.
+#[test]
+fn context_depth_sweep_places_and_routes_exactly_once() {
+    // Single worker: stage lookups are sequential, so the miss counts are
+    // exact (concurrent cold misses could legitimately duplicate work).
+    let engine = SweepEngine::new(1);
+    let wl = Workload::Saxpy { n: 64 };
+    let r = engine.sweep(&ctx_grid(), &wl);
+    assert!(r.failures.is_empty(), "{:?}", r.failures);
+    assert_eq!(r.points.len(), 4);
+
+    let n = r.points.len() as u64;
+    assert_eq!(
+        r.cache.pass_counts_full("place"),
+        PassCounts { mem: n - 1, disk: 0, miss: 1 },
+        "{:?}",
+        r.cache
+    );
+    assert_eq!(
+        r.cache.pass_counts_full("route"),
+        PassCounts { mem: n - 1, disk: 0, miss: 1 },
+        "{:?}",
+        r.cache
+    );
+    // Schedule reads context depth: keyed by the full arch hash, it must
+    // recompute at every point — as must the mapping assembly.
+    assert_eq!(r.cache.pass_counts_full("schedule").miss, n, "{:?}", r.cache);
+    assert_eq!(r.cache.pass_counts_full("mapping").miss, n, "{:?}", r.cache);
+    assert!(r.place_route_reuse() >= (n - 1) as f64 / n as f64 - 1e-9, "{:?}", r.cache);
+    // The summary surfaces the stage rows (satellite: observability).
+    let s = r.summary();
+    assert!(s.contains("place"), "{s}");
+    assert!(s.contains("route"), "{s}");
+    assert!(s.contains("schedule"), "{s}");
+}
+
+/// Acceptance criterion: the staged report is bit-identical to the
+/// monolithic one and to the cache-free pipeline.
+#[test]
+fn staged_sweep_is_bit_identical_to_monolithic_and_uncached() {
+    let wl = Workload::Fir { n: 64, taps: 8 };
+    let staged = SweepEngine::new(1).sweep(&ctx_grid(), &wl);
+    let mono = SweepEngine::with_cache(1, Arc::new(ArtifactCache::new().with_stage_memo(false)))
+        .sweep(&ctx_grid(), &wl);
+    assert!(staged.failures.is_empty(), "{:?}", staged.failures);
+    assert!(mono.failures.is_empty(), "{:?}", mono.failures);
+
+    // Monolithic baseline never consulted a stage tier.
+    for pass in ["place", "route", "schedule"] {
+        assert_eq!(mono.cache.pass_counts_full(pass).lookups(), 0, "{pass}");
+    }
+
+    let key = |r: &SweepReport| -> Vec<(String, u64, u64, u64, u64, u32)> {
+        r.points
+            .iter()
+            .map(|p| {
+                (
+                    p.label.clone(),
+                    p.cycles,
+                    p.wm_time_ns.to_bits(),
+                    p.speedup_vs_cpu.to_bits(),
+                    p.area_mm2.to_bits(),
+                    p.ii,
+                )
+            })
+            .collect()
+    };
+    assert_eq!(key(&staged), key(&mono), "staged vs monolithic");
+    assert_eq!(staged.frontier, mono.frontier);
+
+    // And against the cache-free single-job pipeline, point by point.
+    for (label, params) in ctx_grid().points() {
+        let single =
+            run_job(&JobSpec { workload: wl.clone(), params, seed: DEFAULT_SWEEP_SEED }).unwrap();
+        let p = staged
+            .points
+            .iter()
+            .find(|p| p.label == label)
+            .unwrap_or_else(|| panic!("missing point `{label}`"));
+        assert_eq!(p.cycles, single.cycles, "{label}");
+        assert_eq!(p.wm_time_ns.to_bits(), single.wm_time_ns.to_bits(), "{label}");
+        assert_eq!(p.ii, single.ii, "{label}");
+    }
+}
+
+/// Stage artifacts are persistent: a fresh cache on a warm store
+/// warm-starts place/route from **disk** for a context depth whose full
+/// mapping entry the store has never seen.
+#[test]
+fn stage_artifacts_warm_start_from_disk_for_new_context_depths() {
+    let dir = std::env::temp_dir()
+        .join(format!("windmill-stage-disk-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(DiskStore::open(&dir).unwrap());
+    let (dfg, _) = linalg::saxpy(64, 2.0);
+
+    // "Process 1": compile at the standard context depth, populating the
+    // place/route/schedule/mapping entries on disk.
+    let a = presets::standard();
+    let c1 = ArtifactCache::new().with_store(Arc::clone(&store));
+    let e1 = c1.machine(&a).unwrap();
+    c1.mapping(&a, &dfg, &e1.machine, 7).unwrap();
+    assert_eq!(c1.stats().pass_counts_full("place").miss, 1);
+
+    // "Process 2": cold memory, warm store, *different* context depth —
+    // the mapping tier misses (new arch hash) but place/route answer from
+    // the disk tier; only schedule + config generation recompute.
+    let mut b = presets::standard();
+    b.context_depth = 64;
+    let c2 = ArtifactCache::new().with_store(Arc::clone(&store));
+    let e2 = c2.machine(&b).unwrap();
+    let (m, _, hit) = c2.mapping(&b, &dfg, &e2.machine, 7).unwrap();
+    assert!(!hit, "new context depth cannot hit the mapping tier");
+    let s = c2.stats();
+    assert_eq!(
+        s.pass_counts_full("place"),
+        PassCounts { mem: 0, disk: 1, miss: 0 },
+        "{s:?}"
+    );
+    assert_eq!(
+        s.pass_counts_full("route"),
+        PassCounts { mem: 0, disk: 1, miss: 0 },
+        "{s:?}"
+    );
+    assert_eq!(s.pass_counts_full("schedule").miss, 1, "{s:?}");
+    assert_eq!(s.pass_counts_full("mapping").miss, 1, "{s:?}");
+
+    // The disk-assembled mapping equals a from-scratch compile bit for bit.
+    let direct = compile(dfg.clone(), &e2.machine, 7).unwrap();
+    assert_eq!(m.place, direct.place);
+    assert_eq!(m.routes.edges, direct.routes.edges);
+    assert_eq!(m.routes.through_load, direct.routes.through_load);
+    assert_eq!(m.schedule, direct.schedule);
+    assert_eq!(m.config.total_words(), direct.config.total_words());
+
+    // A third cache at depth 64 is now fully warm at the mapping tier.
+    let c3 = ArtifactCache::new().with_store(Arc::clone(&store));
+    let e3 = c3.machine(&b).unwrap();
+    let (_, _, hit3) = c3.mapping(&b, &dfg, &e3.machine, 7).unwrap();
+    assert!(hit3, "the staged build was persisted as a full mapping too");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `windmill store gc` smoke at the library level: after a persistent
+/// sweep, gc keeps every fresh entry; with a zero byte cap it clears the
+/// artifact tiers and the next sweep recomputes and re-persists.
+#[test]
+fn store_gc_keeps_fresh_entries_and_enforces_caps_between_sweeps() {
+    let dir = std::env::temp_dir()
+        .join(format!("windmill-stage-gc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(DiskStore::open(&dir).unwrap());
+    let wl = Workload::Saxpy { n: 64 };
+    let grid = ParamGrid::new(presets::standard()).context_depths(&[16, 32]);
+
+    let engine = SweepEngine::with_store(1, Arc::clone(&store));
+    let cold = engine.sweep(&grid, &wl);
+    assert!(cold.failures.is_empty());
+
+    let report = store.gc(None).unwrap();
+    assert_eq!(report.stale(), 0, "{report:?}");
+    assert!(report.kept() > 0);
+    // Per-pass rows exist for the stage directories too.
+    for pass in ["place", "route", "schedule", "mapping", "simulate", "elaborate"] {
+        assert!(
+            report.passes.iter().any(|p| p.pass == pass && p.kept > 0),
+            "missing gc row for `{pass}`: {report:?}"
+        );
+    }
+
+    let wiped = store.gc(Some(0)).unwrap();
+    assert_eq!(wiped.kept(), 0, "{wiped:?}");
+    assert!(wiped.evicted() > 0);
+
+    // A fresh engine on the emptied store recomputes — and the results
+    // match the pre-gc sweep exactly.
+    let engine2 = SweepEngine::with_store(1, Arc::clone(&store));
+    let again = engine2.sweep(&grid, &wl);
+    assert!(again.failures.is_empty());
+    assert_eq!(again.cache.misses, cold.cache.misses, "fully cold again");
+    let key = |r: &SweepReport| -> Vec<(String, u64)> {
+        r.points.iter().map(|p| (p.label.clone(), p.cycles)).collect()
+    };
+    assert_eq!(key(&cold), key(&again));
+    let _ = std::fs::remove_dir_all(&dir);
+}
