@@ -1,0 +1,109 @@
+//! Suite-sweep bench (PR 5): the paper's three workload aspects evaluated
+//! per grid point through one engine, with the compile reuse the suite
+//! path is supposed to buy made observable.
+//!
+//! Headline numbers:
+//!
+//! 1. A cold **suite** sweep ({gemm, spmv, rl-step} — linear algebra,
+//!    non-affine signal-style gather, RL) over a context-depth grid
+//!    performs place/route exactly **once per kernel** across the whole
+//!    suite (10 kernels: 1 + 1 + 8 RL phases), and one elaboration per
+//!    grid point regardless of suite size (asserted).
+//! 2. A warm re-run of the whole suite performs zero `simulate()` calls
+//!    (asserted), i.e. suite evaluation composes with every cache tier.
+//! 3. The per-workload columns and the (area, power, per-workload times)
+//!    frontier come out of the same run — the cross-scenario comparison
+//!    the ROADMAP's multi-workload item asked for, in one report.
+//!
+//! `cargo bench --bench suite_sweep`
+
+mod bench_util;
+
+use bench_util::{fmt_ns, Table};
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::coordinator::{SweepEngine, Workload, WorkloadSuite};
+
+fn ctx_grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).context_depths(&[32, 48, 64, 128])
+}
+
+fn main() {
+    let suite = WorkloadSuite::new(vec![
+        Workload::Gemm { m: 16, n: 16, k: 16 },
+        Workload::Spmv { rows: 32, cols: 48, k: 4 },
+        Workload::RlStep,
+    ])
+    .unwrap();
+    let n_kernels: u64 = suite.workloads().iter().map(|w| w.build().0.len() as u64).sum();
+
+    // Single worker: stage lookups are sequential, so the counts are exact.
+    let engine = SweepEngine::new(1);
+    let t0 = std::time::Instant::now();
+    let cold = engine.sweep_suite(&ctx_grid(), &suite, 42);
+    let cold_wall = t0.elapsed().as_nanos() as f64;
+    assert!(cold.failures.is_empty(), "{:?}", cold.failures);
+    let points = cold.points.len() as u64;
+
+    let place = cold.cache.pass_counts_full("place");
+    let route = cold.cache.pass_counts_full("route");
+    assert_eq!(place.miss, n_kernels, "one placement per kernel, suite-wide");
+    assert_eq!(route.miss, n_kernels, "one routing per kernel, suite-wide");
+    assert_eq!(place.mem, n_kernels * (points - 1), "every other point reuses");
+    let elab = cold.cache.pass_counts_full("elaborate");
+    assert_eq!(elab.miss, points, "one elaboration per point, not per member");
+    assert_eq!(elab.mem, points * (suite.len() as u64 - 1));
+
+    let t0 = std::time::Instant::now();
+    let warm = engine.sweep_suite(&ctx_grid(), &suite, 42);
+    let warm_wall = t0.elapsed().as_nanos() as f64;
+    assert_eq!(warm.cache.pass_counts_full("simulate").miss, 0, "warm suite re-simulated");
+    assert_eq!(warm.sim_hit_rate(), 1.0);
+
+    let mut t = Table::new(
+        "suite sweep {gemm, spmv, rl-step} on the context-depth grid",
+        &["run", "points", "wall", "place (m/d/x)", "p/r reuse", "sim hit"],
+    );
+    for (name, r, wall) in [("cold", &cold, cold_wall), ("warm", &warm, warm_wall)] {
+        let p = r.cache.pass_counts_full("place");
+        t.row(&[
+            name.into(),
+            r.points.len().to_string(),
+            fmt_ns(wall),
+            format!("{}m/{}d/{}x", p.mem, p.disk, p.miss),
+            format!("{:.0}%", 100.0 * r.place_route_reuse()),
+            format!("{:.0}%", 100.0 * r.sim_hit_rate()),
+        ]);
+    }
+    t.print();
+
+    // The suite columns: every point carries one row per member, and the
+    // frontier is computed over the per-workload time vector.
+    let names = cold.workload_names();
+    assert_eq!(names.len(), 3);
+    let mut cols = Table::new(
+        "per-workload time columns (geomean over grid points)",
+        &["workload", "geomean time", "best point"],
+    );
+    for (i, name) in names.iter().enumerate() {
+        let best = cold
+            .points
+            .iter()
+            .min_by(|a, b| {
+                a.per_workload[i].wm_time_ns.total_cmp(&b.per_workload[i].wm_time_ns)
+            })
+            .unwrap();
+        cols.row(&[
+            name.clone(),
+            fmt_ns(cold.geomean_time(i)),
+            best.label.clone(),
+        ]);
+    }
+    cols.print();
+    println!("{}", cold.summary());
+    assert!(!cold.frontier.is_empty());
+    assert_eq!(cold.rejected_nonfinite, 0);
+    println!(
+        "suite-sweep acceptance: {n_kernels} kernels placed/routed once, warm suite free"
+    );
+}

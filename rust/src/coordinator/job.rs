@@ -21,7 +21,8 @@ use crate::sim::engine::simulate;
 use crate::sim::machine::MachineDesc;
 use crate::sim::task::{run_task, run_task_with, Phase, Task};
 use crate::util::Rng;
-use crate::workloads::{linalg, rl, signal, Layout};
+use crate::util::StableHasher;
+use crate::workloads::{graph, linalg, rl, signal, Layout};
 
 use super::cache::{ArtifactCache, ElabArtifacts};
 
@@ -34,6 +35,12 @@ pub enum Workload {
     /// Padded-CSR sparse matrix-vector product — the non-affine gather
     /// workload (`x[colidx[..]]` goes through the LSU's indirect mode).
     Spmv { rows: u32, cols: u32, k: u32 },
+    /// Frontier-based BFS over a variable-degree CSR graph: `levels`
+    /// level-expansion phases, each walking the row-pointer array and
+    /// chaining two indirect gathers (`colidx[rowptr[v]+j]`, then
+    /// `frontier[·]`) with data-dependent trip counts predicated onto the
+    /// static `[n, deg]` nest (see [`crate::workloads::graph`]).
+    Bfs { n: u32, deg: u32, levels: u32 },
     Fir { n: u32, taps: u32 },
     Conv3x3 { h: u32, w: u32 },
     RlStep,
@@ -46,6 +53,7 @@ impl Workload {
             Workload::Dot { n } => format!("dot-{n}"),
             Workload::Gemm { m, n, k } => format!("gemm-{m}x{n}x{k}"),
             Workload::Spmv { rows, cols, k } => format!("spmv-{rows}x{cols}k{k}"),
+            Workload::Bfs { n, deg, levels } => format!("bfs-{n}d{deg}l{levels}"),
             Workload::Fir { n, taps } => format!("fir-{n}t{taps}"),
             Workload::Conv3x3 { h, w } => format!("conv3x3-{h}x{w}"),
             Workload::RlStep => "rl-step".to_string(),
@@ -58,6 +66,7 @@ impl Workload {
             "dot" => Some(Workload::Dot { n: 256 }),
             "gemm" => Some(Workload::Gemm { m: 32, n: 32, k: 32 }),
             "spmv" => Some(Workload::Spmv { rows: 64, cols: 64, k: 8 }),
+            "bfs" => Some(Workload::Bfs { n: 64, deg: 4, levels: 4 }),
             "fir" => Some(Workload::Fir { n: 256, taps: 16 }),
             "conv" | "conv3x3" => Some(Workload::Conv3x3 { h: 32, w: 32 }),
             "rl" | "rl-step" => Some(Workload::RlStep),
@@ -84,6 +93,7 @@ impl Workload {
                 let (d, l) = linalg::spmv_csr(rows, cols, k);
                 (vec![d], l)
             }
+            Workload::Bfs { n, deg, levels } => graph::bfs(n, deg, levels),
             Workload::Fir { n, taps } => {
                 let (d, l) = signal::fir(n, taps);
                 (vec![d], l)
@@ -107,6 +117,9 @@ impl Workload {
             Workload::RlStep => {
                 let s = rl::policy_step();
                 return rl::init_image(&s, seed, mem_words);
+            }
+            Workload::Bfs { n, deg, .. } => {
+                return graph::init_image(*n, *deg, layout, seed, mem_words);
             }
             Workload::Spmv { rows, cols, k } => {
                 // The gather stream must be *valid addresses*, not noise:
@@ -147,6 +160,106 @@ impl Workload {
     }
 }
 
+/// A named, ordered list of workloads evaluated together at every sweep
+/// point — the paper's "applications and algorithm tasks from three
+/// aspects" as one co-design unit. A suite sweep prices each grid point
+/// against *all* members, so the Pareto frontier cannot crown a point
+/// that only wins on a single kernel (see `SweepEngine::sweep_suite`).
+///
+/// The suite's identity is its [`WorkloadSuite::fingerprint`]: a stable
+/// hash over the ordered member names (which encode every shape
+/// parameter), used by the sweep-session persistence layer to refuse
+/// merging shards of different suites.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSuite {
+    workloads: Vec<Workload>,
+}
+
+impl WorkloadSuite {
+    /// A suite from an ordered, non-empty workload list.
+    pub fn new(workloads: Vec<Workload>) -> Result<WorkloadSuite, DiagError> {
+        if workloads.is_empty() {
+            return Err(DiagError::InvalidParams("a workload suite cannot be empty".into()));
+        }
+        Ok(WorkloadSuite { workloads })
+    }
+
+    /// The single-workload suite (every plain sweep is one of these).
+    pub fn single(workload: Workload) -> WorkloadSuite {
+        WorkloadSuite { workloads: vec![workload] }
+    }
+
+    /// Parse a comma-separated workload list (`"gemm,spmv,rl"`); each
+    /// token goes through [`Workload::parse`]. `None` if any token is
+    /// unknown or the list is empty.
+    pub fn parse(csv: &str) -> Option<WorkloadSuite> {
+        let workloads: Option<Vec<Workload>> =
+            csv.split(',').filter(|t| !t.is_empty()).map(Workload::parse).collect();
+        let workloads = workloads?;
+        if workloads.is_empty() {
+            None
+        } else {
+            Some(WorkloadSuite { workloads })
+        }
+    }
+
+    /// The members, in evaluation order.
+    pub fn workloads(&self) -> &[Workload] {
+        &self.workloads
+    }
+
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+    }
+
+    /// Always false — the constructors refuse empty suites.
+    pub fn is_empty(&self) -> bool {
+        self.workloads.is_empty()
+    }
+
+    /// Display name: the member names joined with `+`
+    /// (`gemm-32x32x32+spmv-64x64k8+rl-step`). Also what the CLI filters
+    /// merge sessions by.
+    pub fn name(&self) -> String {
+        self.workloads.iter().map(Workload::name).collect::<Vec<_>>().join("+")
+    }
+
+    /// Stable identity of the suite: order-sensitive hash of the member
+    /// names (each name encodes its full shape, so two suites fingerprint
+    /// equal iff they evaluate the same kernels in the same order).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = StableHasher::new();
+        h.usize(self.workloads.len());
+        for w in &self.workloads {
+            h.str(&w.name());
+        }
+        h.finish()
+    }
+
+    /// Largest shared-memory footprint over the members' layouts. Layouts
+    /// are grid-invariant (they depend only on workload shapes), so the
+    /// sweep engine computes this **once** per sweep and calibrates each
+    /// grid point from the cached word count instead of rebuilding every
+    /// member's DFGs at every point.
+    pub fn required_smem_words(&self) -> usize {
+        self.workloads
+            .iter()
+            .map(|w| w.build().1.total_words() as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Grow `params` until the shared memory holds **every** member's
+    /// layout, so one grid point elaborates a single machine the whole
+    /// suite runs on (and the per-point PPA row is well-defined). Growth
+    /// is monotone, so the per-job re-calibration inside
+    /// [`run_job_cached`] becomes a no-op and all members share one
+    /// arch hash — one elaboration per point, suite-wide.
+    pub fn calibrate(&self, params: WindMillParams) -> WindMillParams {
+        calibrate_params_words(params, self.required_smem_words())
+    }
+}
+
 /// One unit of coordinator work.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -182,8 +295,15 @@ pub struct JobResult {
 /// Adjust parameters so the workload fits — the Generation→Definition
 /// negative-feedback loop of §III-A.4 (PPA/capacity results feed back into
 /// the parameter set).
-pub fn calibrate_params(mut params: WindMillParams, layout: &Layout) -> WindMillParams {
-    let need = layout.total_words() as usize;
+pub fn calibrate_params(params: WindMillParams, layout: &Layout) -> WindMillParams {
+    calibrate_params_words(params, layout.total_words() as usize)
+}
+
+/// The layout-free core of [`calibrate_params`]: grow shared memory
+/// (doubling depth) until it holds `need` words. Growing to the maximum
+/// of several layouts' needs in one call is identical to calibrating for
+/// each in turn — depth doubles monotonically from the same start.
+pub fn calibrate_params_words(mut params: WindMillParams, need: usize) -> WindMillParams {
     while params.smem.words() < need {
         params.smem.depth *= 2;
     }
@@ -423,10 +543,66 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrip() {
-        for s in ["saxpy", "dot", "gemm", "spmv", "fir", "conv", "rl"] {
+        for s in ["saxpy", "dot", "gemm", "spmv", "bfs", "fir", "conv", "rl"] {
             assert!(Workload::parse(s).is_some(), "{s}");
         }
         assert!(Workload::parse("quantum").is_none());
+    }
+
+    #[test]
+    fn suite_parse_name_and_fingerprint() {
+        let s = WorkloadSuite::parse("gemm,spmv,rl").unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.name(), "gemm-32x32x32+spmv-64x64k8+rl-step");
+        assert!(WorkloadSuite::parse("gemm,quantum").is_none());
+        assert!(WorkloadSuite::parse("").is_none());
+        assert!(WorkloadSuite::new(vec![]).is_err());
+        // Identity is order-sensitive and shape-sensitive.
+        let t = WorkloadSuite::parse("spmv,gemm,rl").unwrap();
+        assert_ne!(s.fingerprint(), t.fingerprint());
+        assert_eq!(s.fingerprint(), WorkloadSuite::parse("gemm,spmv,rl").unwrap().fingerprint());
+        let single = WorkloadSuite::single(Workload::Gemm { m: 8, n: 8, k: 8 });
+        assert_ne!(single.fingerprint(), s.fingerprint());
+        assert!(!single.is_empty());
+    }
+
+    /// Suite calibration grows shared memory to the *largest* member and
+    /// is a fixed point thereafter: every member job then re-calibrates to
+    /// the same parameter set (one arch hash per grid point, suite-wide).
+    #[test]
+    fn suite_calibration_is_shared_and_idempotent() {
+        let suite = WorkloadSuite::parse("saxpy,gemm,rl").unwrap();
+        let cal = suite.calibrate(presets::standard());
+        for w in suite.workloads() {
+            let (_, layout) = w.build();
+            assert!(cal.smem.words() >= layout.total_words() as usize, "{}", w.name());
+            let again = calibrate_params(cal.clone(), &layout);
+            assert_eq!(again.stable_hash(), cal.stable_hash(), "{}: no-op recal", w.name());
+        }
+        assert_eq!(suite.calibrate(cal.clone()).stable_hash(), cal.stable_hash());
+    }
+
+    /// The BFS workload runs end-to-end on the cycle-accurate simulator
+    /// (all levels as chained task phases) and matches the DFG-interpreter
+    /// golden bit-for-bit — the chained-indirect, predicated path.
+    #[test]
+    fn bfs_job_numerics_match_interpreter() {
+        let wl = Workload::Bfs { n: 24, deg: 3, levels: 3 };
+        let spec = JobSpec { workload: wl.clone(), params: presets::standard(), seed: 11 };
+        let r = run_job(&spec).unwrap();
+        assert!(r.cycles > 0);
+        let (dfgs, layout) = wl.build();
+        assert_eq!(dfgs.len(), 3, "one phase per BFS level");
+        let mut golden = wl.init_image(&layout, 11, r.mem.len());
+        for d in &dfgs {
+            crate::compiler::dfg::interpret(d, &mut golden).unwrap();
+        }
+        for (i, (a, b)) in r.mem.iter().zip(golden.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "mem[{i}] {a} vs {b}");
+        }
+        let dist = layout.read(&r.mem, crate::workloads::graph::dist_region(3));
+        assert_eq!(dist[0], 0.0);
+        assert!(dist.iter().all(|d| d.is_finite()));
     }
 
     /// The non-affine gather workload runs end-to-end on the

@@ -67,8 +67,11 @@ pub mod sweep;
 
 pub use cache::{ArtifactCache, CacheStats, ElabArtifacts, PassCounts};
 pub use job::{
-    calibrate_params, run_job, run_job_cached, JobResult, JobSpec, JobTiming, Workload,
+    calibrate_params, calibrate_params_words, run_job, run_job_cached, JobResult, JobSpec,
+    JobTiming, Workload, WorkloadSuite,
 };
 pub use pool::{run_all, run_all_with, run_fifo, FifoRun};
-pub use report::{ppa_report, ppa_row, PpaRow, SweepAccumulator, SweepPoint, SweepReport};
+pub use report::{
+    ppa_report, ppa_row, PpaRow, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf,
+};
 pub use sweep::SweepEngine;

@@ -77,9 +77,38 @@ pub fn ppa_report(label: &str, params: WindMillParams) -> Result<PpaRow, DiagErr
 // Sweep aggregation
 // ---------------------------------------------------------------------------
 
+/// Per-workload performance of one sweep point — the suite columns. A
+/// single-workload sweep carries exactly one of these; a suite sweep one
+/// per member, in suite order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadPerf {
+    /// [`super::Workload::name`] of the member.
+    pub workload: String,
+    pub cycles: u64,
+    pub wm_time_ns: f64,
+    pub speedup_vs_cpu: f64,
+    pub speedup_vs_gpu: f64,
+    pub ii: u32,
+}
+
+/// Geometric mean. Empty input pins to 0.0 (rate-guard convention across
+/// the report layer); a single value returns **exactly** that value — no
+/// `exp(ln(x))` round-trip — so single-workload sweeps stay bit-identical
+/// to the pre-suite pipeline.
+pub fn geomean(xs: &[f64]) -> f64 {
+    match xs {
+        [] => 0.0,
+        [x] => *x,
+        _ => (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp(),
+    }
+}
+
 /// One evaluated design-space point: architecture PPA + workload
 /// performance on that architecture (no memory image — sweeps keep only
-/// the numbers).
+/// the numbers). Suite sweeps fan `per_workload` out to one row per
+/// member; the scalar `cycles`/`wm_time_ns`/speedups are the suite
+/// aggregate (summed cycles, geomean time and speedups — equal to the
+/// member's own numbers when the suite has one member).
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub label: String,
@@ -96,21 +125,52 @@ pub struct SweepPoint {
     pub speedup_vs_cpu: f64,
     pub speedup_vs_gpu: f64,
     pub ii: u32,
+    /// Suite columns, one per workload in suite order (len 1 for a plain
+    /// sweep). The Pareto frontier minimizes **each** entry's time
+    /// independently, not just the aggregate.
+    pub per_workload: Vec<WorkloadPerf>,
     pub timing: JobTiming,
 }
 
 impl SweepPoint {
-    /// Pareto dominance over the PPA-performance objectives (all minimized:
-    /// area, power, workload time). `self` dominates `other` when it is no
-    /// worse everywhere and strictly better somewhere.
+    /// Pareto dominance over the PPA-performance objectives, all
+    /// minimized: area, power, and the **per-workload** time vector (two
+    /// suite points compare kernel-by-kernel, so a point must be no slower
+    /// on every member to dominate — matching the co-design story of
+    /// MACO-style suite optimization). Points without per-workload columns
+    /// fall back to the aggregate time.
+    ///
+    /// Comparisons are raw IEEE (`<=`/`<`), which is only a partial order
+    /// under NaN — the frontier accumulator therefore quarantines
+    /// non-finite points ([`SweepPoint::is_finite`],
+    /// [`SweepReport::rejected_nonfinite`]) before they ever reach a
+    /// dominance test.
     pub fn dominates(&self, other: &SweepPoint) -> bool {
-        let no_worse = self.area_mm2 <= other.area_mm2
-            && self.power_mw <= other.power_mw
-            && self.wm_time_ns <= other.wm_time_ns;
-        let strictly_better = self.area_mm2 < other.area_mm2
-            || self.power_mw < other.power_mw
-            || self.wm_time_ns < other.wm_time_ns;
-        no_worse && strictly_better
+        let mut no_worse = self.area_mm2 <= other.area_mm2 && self.power_mw <= other.power_mw;
+        let mut strictly = self.area_mm2 < other.area_mm2 || self.power_mw < other.power_mw;
+        if !self.per_workload.is_empty() && self.per_workload.len() == other.per_workload.len()
+        {
+            for (a, b) in self.per_workload.iter().zip(other.per_workload.iter()) {
+                no_worse &= a.wm_time_ns <= b.wm_time_ns;
+                strictly |= a.wm_time_ns < b.wm_time_ns;
+            }
+        } else {
+            no_worse &= self.wm_time_ns <= other.wm_time_ns;
+            strictly |= self.wm_time_ns < other.wm_time_ns;
+        }
+        no_worse && strictly
+    }
+
+    /// Every frontier objective is finite (no NaN, no ±∞). A failed corner
+    /// upstream (0-cycle division, overflowed model) produces non-finite
+    /// metrics; such a point would be incomparable under IEEE `<`/`<=` —
+    /// never dominated, never dominating — and lodge on the frontier
+    /// forever, so the accumulator rejects it instead.
+    pub fn is_finite(&self) -> bool {
+        self.area_mm2.is_finite()
+            && self.power_mw.is_finite()
+            && self.wm_time_ns.is_finite()
+            && self.per_workload.iter().all(|w| w.wm_time_ns.is_finite())
     }
 }
 
@@ -122,8 +182,11 @@ pub struct SweepReport {
     /// `(label, error)` for grid points that failed.
     pub failures: Vec<(String, String)>,
     /// Indices into `points` forming the best-PPA Pareto frontier
-    /// (area/power/workload-time minimized), ascending by area.
+    /// (area/power/per-workload-time minimized), ascending by area.
     pub frontier: Vec<usize>,
+    /// Points whose objectives contained NaN/∞ — recorded in `points` for
+    /// audit but barred from the frontier (see [`SweepPoint::is_finite`]).
+    pub rejected_nonfinite: u64,
     /// Cache traffic attributable to this sweep.
     pub cache: CacheStats,
     /// Summed per-stage timing across all points.
@@ -166,11 +229,38 @@ impl SweepReport {
         }
     }
 
-    /// Fastest point on the workload (min `wm_time_ns`).
+    /// Fastest point on the workload aggregate (min `wm_time_ns` over
+    /// fully-finite points; a quarantined NaN/∞ corner can never be
+    /// "best", even when the non-finite metric is a *different* column).
     pub fn best_performance(&self) -> Option<&SweepPoint> {
         self.points
             .iter()
-            .min_by(|a, b| a.wm_time_ns.partial_cmp(&b.wm_time_ns).unwrap())
+            .filter(|p| p.is_finite())
+            .min_by(|a, b| a.wm_time_ns.total_cmp(&b.wm_time_ns))
+    }
+
+    /// The suite's workload names, in column order (empty on an empty
+    /// report).
+    pub fn workload_names(&self) -> Vec<String> {
+        self.points
+            .first()
+            .map(|p| p.per_workload.iter().map(|w| w.workload.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Geomean of one workload column's time over the finite *values* in
+    /// that column (0.0 when the column is absent or holds no finite
+    /// value — the rate-guard convention). A quarantined point's finite
+    /// columns still contribute: this is a measurement statistic, unlike
+    /// the "best point" selections, which require the whole point finite.
+    pub fn geomean_time(&self, workload_idx: usize) -> f64 {
+        let times: Vec<f64> = self
+            .points
+            .iter()
+            .filter_map(|p| p.per_workload.get(workload_idx).map(|w| w.wm_time_ns))
+            .filter(|t| t.is_finite())
+            .collect();
+        geomean(&times)
     }
 
     /// Render the sweep as an aligned table (frontier members marked `*`).
@@ -218,8 +308,13 @@ impl SweepReport {
         } else {
             String::new()
         };
-        format!(
-            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%, {} from disk) | sim cache {}/{} hits ({:.0}%) | {per_pass}{evicted} | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
+        let rejected = if self.rejected_nonfinite > 0 {
+            format!(" | rejected {} non-finite", self.rejected_nonfinite)
+        } else {
+            String::new()
+        };
+        let mut s = format!(
+            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%, {} from disk) | sim cache {}/{} hits ({:.0}%) | {per_pass}{evicted}{rejected} | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
             self.points.len(),
             self.failures.len(),
             self.wall_ns as f64 / 1e6,
@@ -233,7 +328,29 @@ impl SweepReport {
             self.timing.elaborate_ns as f64 / 1e6,
             self.timing.compile_ns as f64 / 1e6,
             self.timing.simulate_ns as f64 / 1e6,
-        )
+        );
+        // Per-workload rows (suite sweeps only — a single-member suite
+        // keeps the historical one-line format).
+        let names = self.workload_names();
+        if names.len() > 1 {
+            for (i, name) in names.iter().enumerate() {
+                let best = self
+                    .points
+                    .iter()
+                    .filter(|p| p.is_finite())
+                    .filter_map(|p| p.per_workload.get(i).map(|w| (p, w)))
+                    .min_by(|a, b| a.1.wm_time_ns.total_cmp(&b.1.wm_time_ns));
+                let best = match best {
+                    Some((p, w)) => format!("best {} ({:.0} ns)", p.label, w.wm_time_ns),
+                    None => "no finite point".to_string(),
+                };
+                s.push_str(&format!(
+                    "\n  wl {name}: geomean {:.0} ns | {best}",
+                    self.geomean_time(i)
+                ));
+            }
+        }
+        s
     }
 }
 
@@ -252,6 +369,15 @@ impl SweepAccumulator {
 
     pub fn push(&mut self, point: SweepPoint) {
         self.report.timing.add(&point.timing);
+        // NaN/∞ quarantine: a non-finite point is incomparable under IEEE
+        // ordering — it would never be dominated *or* dominate, lodge on
+        // the frontier forever and survive every later push. Record it for
+        // audit, count it, keep it off the frontier.
+        if !point.is_finite() {
+            self.report.rejected_nonfinite += 1;
+            self.report.points.push(point);
+            return;
+        }
         let idx = self.report.points.len();
         // Dominated by an existing frontier member → not on the frontier.
         let dominated = self
@@ -265,11 +391,12 @@ impl SweepAccumulator {
             self.report.frontier.push(idx);
         }
         self.report.points.push(point);
-        // Keep the frontier readable: ascending by area.
+        // Keep the frontier readable: ascending by area (total order — the
+        // frontier holds finite points only, but stay panic-free anyway).
         let points = &self.report.points;
         self.report
             .frontier
-            .sort_by(|&a, &b| points[a].area_mm2.partial_cmp(&points[b].area_mm2).unwrap());
+            .sort_by(|&a, &b| points[a].area_mm2.total_cmp(&points[b].area_mm2));
     }
 
     pub fn push_failure(&mut self, label: String, error: String) {
@@ -316,7 +443,20 @@ mod tests {
         assert!(m.area_mm2 < l.area_mm2);
     }
 
-    fn point(label: &str, area: f64, power: f64, time: f64) -> SweepPoint {
+    fn suite_point(label: &str, area: f64, power: f64, times: &[f64]) -> SweepPoint {
+        let per_workload: Vec<WorkloadPerf> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| WorkloadPerf {
+                workload: format!("wl{i}"),
+                cycles: if t.is_finite() { t as u64 } else { 0 },
+                wm_time_ns: t,
+                speedup_vs_cpu: 1.0,
+                speedup_vs_gpu: 1.0,
+                ii: 1,
+            })
+            .collect();
+        let agg = geomean(times);
         SweepPoint {
             label: label.to_string(),
             arch_hash: 0,
@@ -326,13 +466,18 @@ mod tests {
             area_mm2: area,
             power_mw: power,
             fmax_mhz: 750.0,
-            cycles: time as u64,
-            wm_time_ns: time,
+            cycles: per_workload.iter().map(|w| w.cycles).sum(),
+            wm_time_ns: agg,
             speedup_vs_cpu: 1.0,
             speedup_vs_gpu: 1.0,
             ii: 1,
+            per_workload,
             timing: JobTiming::default(),
         }
+    }
+
+    fn point(label: &str, area: f64, power: f64, time: f64) -> SweepPoint {
+        suite_point(label, area, power, &[time])
     }
 
     #[test]
@@ -367,6 +512,134 @@ mod tests {
         acc.push(b);
         // Both survive: neither dominates.
         assert_eq!(acc.partial().frontier.len(), 2);
+    }
+
+    /// Regression (pre-PR-5 bug): a NaN-metric point pushed mid-stream is
+    /// incomparable under raw `<`/`<=` — it used to join the frontier and
+    /// never leave. The accumulator must quarantine it: frontier unchanged
+    /// before and after, rejection counted, point kept for audit.
+    #[test]
+    fn nan_point_mid_stream_leaves_the_frontier_unchanged() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(point("a", 1.0, 10.0, 100.0));
+        acc.push(point("b", 3.0, 10.0, 50.0));
+        let before = acc.partial().frontier.clone();
+        assert_eq!(before, vec![0, 1]);
+
+        // The classic upstream failure: 0-cycle division → NaN time.
+        acc.push(point("nan-time", 2.0, 5.0, f64::NAN));
+        // And an ∞-area corner for good measure.
+        acc.push(point("inf-area", f64::INFINITY, 5.0, 10.0));
+        assert_eq!(acc.partial().frontier, before, "frontier must not move");
+        assert_eq!(acc.partial().rejected_nonfinite, 2);
+        assert_eq!(acc.partial().points.len(), 4, "rejected points stay auditable");
+
+        // Later pushes still maintain the frontier correctly — the NaN
+        // point must not shield them (it used to dominate-block forever).
+        acc.push(point("c", 0.5, 5.0, 25.0)); // dominates a and b
+        let r = acc.finish(CacheStats::default(), 1);
+        let labels: Vec<&str> =
+            r.frontier_points().iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["c"]);
+        assert_eq!(r.rejected_nonfinite, 2);
+        assert!(r.summary().contains("rejected 2 non-finite"), "{}", r.summary());
+        // best_performance ignores the NaN corner instead of panicking.
+        assert_eq!(r.best_performance().unwrap().label, "c");
+    }
+
+    /// A NaN in any *suite column* (not just the aggregate) is rejected.
+    #[test]
+    fn nan_in_a_suite_column_is_rejected() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(suite_point("ok", 1.0, 1.0, &[10.0, 20.0]));
+        let mut bad = suite_point("bad", 0.5, 0.5, &[5.0, 5.0]);
+        bad.per_workload[1].wm_time_ns = f64::NAN;
+        bad.wm_time_ns = 7.0; // aggregate looks fine; the column does not
+        assert!(!bad.is_finite());
+        acc.push(bad);
+        let r = acc.finish(CacheStats::default(), 1);
+        assert_eq!(r.frontier, vec![0]);
+        assert_eq!(r.rejected_nonfinite, 1);
+    }
+
+    /// Suite dominance is per-column: faster on one member but slower on
+    /// another must NOT dominate, even if the aggregate (geomean) is
+    /// better — that is the whole point of suite frontiers.
+    #[test]
+    fn suite_dominance_compares_per_workload_columns() {
+        let a = suite_point("a", 1.0, 1.0, &[10.0, 100.0]);
+        let b = suite_point("b", 1.0, 1.0, &[100.0, 10.0]);
+        assert!(a.wm_time_ns == b.wm_time_ns, "same geomean");
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+        let mut acc = SweepAccumulator::new();
+        acc.push(a.clone());
+        acc.push(b);
+        assert_eq!(acc.partial().frontier.len(), 2, "both trade-offs survive");
+
+        // Uniformly no-worse and strictly better somewhere does dominate:
+        // c beats b on both columns (evicting it) but loses column 0 to a.
+        let c = suite_point("c", 1.0, 1.0, &[50.0, 9.0]);
+        assert!(c.dominates(&suite_point("b2", 1.0, 1.0, &[100.0, 10.0])));
+        assert!(!c.dominates(&a) && !a.dominates(&c));
+        acc.push(c);
+        let labels: Vec<String> = acc
+            .partial()
+            .frontier_points()
+            .iter()
+            .map(|p| p.label.clone())
+            .collect();
+        assert!(labels.contains(&"a".to_string()) && labels.contains(&"c".to_string()));
+        assert!(!labels.contains(&"b".to_string()), "{labels:?}");
+    }
+
+    /// Satellite rate-guard audit: every ratio accessor on a completely
+    /// empty report returns 0.0, never NaN, and the summary renders.
+    #[test]
+    fn empty_report_rates_are_zero_not_nan() {
+        let r = SweepReport::default();
+        assert_eq!(r.cache_hit_rate(), 0.0);
+        assert_eq!(r.sim_hit_rate(), 0.0);
+        assert_eq!(r.place_route_reuse(), 0.0);
+        assert_eq!(r.geomean_time(0), 0.0);
+        assert!(r.workload_names().is_empty());
+        assert!(r.best_performance().is_none());
+        let s = r.summary();
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(s.contains("0 points (0 failed)"), "{s}");
+        // And the stats types themselves guard their denominators.
+        let cs = CacheStats::default();
+        assert_eq!(cs.hit_rate(), 0.0);
+        assert_eq!(cs.pass_hit_rate("simulate"), 0.0);
+    }
+
+    #[test]
+    fn geomean_guards_and_exactness() {
+        assert_eq!(geomean(&[]), 0.0);
+        let x = 123.456789;
+        assert_eq!(geomean(&[x]).to_bits(), x.to_bits(), "len-1 is exact, not exp(ln(x))");
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    /// Suite summaries grow per-workload rows; single-workload summaries
+    /// keep the historical one-line format.
+    #[test]
+    fn summary_grows_per_workload_rows_for_suites() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(suite_point("p0", 1.0, 1.0, &[10.0, 40.0]));
+        acc.push(suite_point("p1", 2.0, 2.0, &[20.0, 10.0]));
+        let r = acc.finish(CacheStats::default(), 1);
+        let s = r.summary();
+        assert!(s.contains("wl wl0: geomean"), "{s}");
+        assert!(s.contains("wl wl1: geomean"), "{s}");
+        assert!(s.contains("best p0"), "{s}");
+        assert!(s.contains("best p1"), "{s}");
+        assert_eq!(s.lines().count(), 3, "{s}");
+
+        let mut single = SweepAccumulator::new();
+        single.push(point("q", 1.0, 1.0, 5.0));
+        let s1 = single.finish(CacheStats::default(), 1).summary();
+        assert_eq!(s1.lines().count(), 1, "{s1}");
     }
 
     #[test]

@@ -35,9 +35,9 @@ use crate::diag::service::{ServiceRegistry, SweepService};
 use crate::store::DiskStore;
 
 use super::cache::{ArtifactCache, CacheStats};
-use super::job::{calibrate_params, run_job_cached, JobResult, JobSpec, Workload};
+use super::job::{run_job_cached, JobResult, JobSpec, JobTiming, Workload, WorkloadSuite};
 use super::pool::{run_all_with, run_fifo};
-use super::report::{SweepAccumulator, SweepPoint, SweepReport};
+use super::report::{geomean, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf};
 
 /// Default mapper seed for sweeps submitted without an explicit one.
 pub const DEFAULT_SWEEP_SEED: u64 = 42;
@@ -115,7 +115,20 @@ impl SweepEngine {
     /// [`SweepReport::failures`]; the frontier/timing/cache aggregation is
     /// incremental, so partial sweeps still report coherently.
     pub fn sweep_seeded(&self, grid: &ParamGrid, workload: &Workload, seed: u64) -> SweepReport {
-        self.sweep_points(grid.points(), workload, seed)
+        self.sweep_suite(grid, &WorkloadSuite::single(workload.clone()), seed)
+    }
+
+    /// Sweep a whole [`WorkloadSuite`] — the paper's "three aspects" as
+    /// one co-design run. Every grid point is calibrated once for the
+    /// *union* of the suite's layouts and evaluated against every member
+    /// through the shared cache tiers, so elaboration happens once per
+    /// point and place/route once per `(kernel, seed)` across the entire
+    /// suite (the fabric-keyed stage tiers; see `coordinator::cache`).
+    /// The resulting [`SweepPoint`]s carry per-workload time columns plus
+    /// the suite aggregate, and one Pareto frontier is computed over
+    /// (area, power, per-workload times).
+    pub fn sweep_suite(&self, grid: &ParamGrid, suite: &WorkloadSuite, seed: u64) -> SweepReport {
+        self.sweep_points(grid.points(), suite, seed)
     }
 
     /// Sweep an explicit point list (the sweep-session shard path:
@@ -125,18 +138,21 @@ impl SweepEngine {
     pub fn sweep_points(
         &self,
         points: Vec<(String, WindMillParams)>,
-        workload: &Workload,
+        suite: &WorkloadSuite,
         seed: u64,
     ) -> SweepReport {
         let t0 = Instant::now();
         let stats_before = self.cache.stats();
         let cache = Arc::clone(&self.cache);
-        let wl = workload.clone();
+        let suite = suite.clone();
+        // Member layouts are grid-invariant: compute the suite's memory
+        // requirement once, not once per point inside the workers.
+        let smem_words = suite.required_smem_words();
         let run = run_fifo(points, self.workers, move |(label, params)| {
             // A panicking point must land in `failures`, not take down the
             // sweep (same containment as `run_all_with`).
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                evaluate_point(&cache, label.clone(), params, &wl, seed)
+                evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed)
             }));
             out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
         });
@@ -154,44 +170,78 @@ impl SweepEngine {
     }
 }
 
-/// Evaluate one grid point: cached elaboration + cached per-phase compile +
-/// simulation + baselines + PPA, folded into a [`SweepPoint`].
+/// Evaluate one grid point against a whole suite: one suite-calibrated
+/// parameter set (single elaboration per point), one cached job per
+/// member (schedule/sim fan out; place/route share per `(kernel, seed)`
+/// through the fabric-keyed stage tiers), folded into a [`SweepPoint`]
+/// with per-workload columns and the suite aggregate.
 fn evaluate_point(
     cache: &ArtifactCache,
     label: String,
     params: crate::arch::WindMillParams,
-    workload: &Workload,
+    suite: &WorkloadSuite,
+    suite_smem_words: usize,
     seed: u64,
 ) -> Result<SweepPoint, (String, String)> {
     let inner = || -> Result<SweepPoint, DiagError> {
-        let spec = JobSpec { workload: workload.clone(), params, seed };
-        let (job, timing) = run_job_cached(&spec, Some(cache))?;
-        // PPA of the *calibrated* architecture — the machine the job
-        // actually ran on. The job just populated that elaboration entry,
+        // Calibrate once for the union of the suite's layouts
+        // (`suite_smem_words`, precomputed by the caller — layouts are
+        // grid-invariant): every member then runs on the *same* machine
+        // (the co-design contract — one hardware point must serve the
+        // whole suite), so the per-job re-calibration is a no-op and all
+        // members share one arch hash.
+        let calibrated = super::job::calibrate_params_words(params, suite_smem_words);
+        let mut timing = JobTiming::default();
+        let mut per_workload: Vec<WorkloadPerf> = Vec::with_capacity(suite.len());
+        let mut arch_hash = 0u64;
+        for workload in suite.workloads() {
+            let spec =
+                JobSpec { workload: workload.clone(), params: calibrated.clone(), seed };
+            let (job, t) = run_job_cached(&spec, Some(cache))?;
+            debug_assert!(
+                arch_hash == 0 || arch_hash == job.arch_hash,
+                "suite calibration must give every member the same machine"
+            );
+            arch_hash = job.arch_hash;
+            timing.add(&t);
+            per_workload.push(WorkloadPerf {
+                workload: job.name,
+                cycles: job.cycles,
+                wm_time_ns: job.wm_time_ns,
+                speedup_vs_cpu: job.speedup_vs_cpu,
+                speedup_vs_gpu: job.speedup_vs_gpu,
+                ii: job.ii,
+            });
+        }
+        // PPA of the *calibrated* architecture — the machine the jobs
+        // actually ran on. The jobs just populated that elaboration entry,
         // so the relabel-by-hash lookup is guaranteed to resolve; the
         // fallback recomputes only if the cache was cleared mid-sweep.
-        let ppa = match cache.ppa_by_hash(&label, job.arch_hash) {
+        let ppa = match cache.ppa_by_hash(&label, arch_hash) {
             Some(row) => row,
-            None => {
-                let (_, layout) = spec.workload.build();
-                let calibrated = calibrate_params(spec.params.clone(), &layout);
-                cache.ppa(&label, &calibrated)?
-            }
+            None => cache.ppa(&label, &calibrated)?,
         };
+        let times: Vec<f64> = per_workload.iter().map(|w| w.wm_time_ns).collect();
+        let cpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_cpu).collect();
+        let gpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_gpu).collect();
         Ok(SweepPoint {
             label: label.clone(),
-            arch_hash: job.arch_hash,
+            arch_hash,
             pea: ppa.pea,
             topology: ppa.topology,
             gates: ppa.gates,
             area_mm2: ppa.area_mm2,
             power_mw: ppa.power_mw,
             fmax_mhz: ppa.fmax_mhz,
-            cycles: job.cycles,
-            wm_time_ns: job.wm_time_ns,
-            speedup_vs_cpu: job.speedup_vs_cpu,
-            speedup_vs_gpu: job.speedup_vs_gpu,
-            ii: job.ii,
+            // Aggregates: summed cycles, geomean time/speedups. For a
+            // single-member suite `geomean` returns the member's value
+            // verbatim, keeping plain sweeps bit-identical.
+            cycles: per_workload.iter().map(|w| w.cycles).sum(),
+            wm_time_ns: geomean(&times),
+            speedup_vs_cpu: geomean(&cpu),
+            speedup_vs_gpu: geomean(&gpu),
+            ii: per_workload.iter().map(|w| w.ii).max().unwrap_or(1),
+            per_workload,
             timing,
         })
     };
@@ -324,6 +374,72 @@ mod tests {
         // finished, so ≥3 lookups must be hits even under worst-case races
         // (concurrent cold misses may duplicate work but never corrupt it).
         assert!(stats.hits >= 3, "{stats:?}");
+    }
+
+    /// Tentpole: a suite sweep evaluates every member at every grid point
+    /// through the shared cache — one elaboration per point (the second
+    /// member hits the entry the first populated), per-workload columns in
+    /// suite order, aggregate = geomean, and a warm re-run re-enters
+    /// nothing.
+    #[test]
+    fn suite_sweep_shares_elaboration_and_carries_columns() {
+        let engine = SweepEngine::new(1); // sequential ⇒ exact counts
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8]);
+        let suite = WorkloadSuite::new(vec![
+            Workload::Saxpy { n: 64 },
+            Workload::Dot { n: 64 },
+        ])
+        .unwrap();
+        let r = engine.sweep_suite(&grid, &suite, 3);
+        assert!(r.failures.is_empty(), "{:?}", r.failures);
+        assert_eq!(r.points.len(), 2);
+        for p in &r.points {
+            assert_eq!(p.per_workload.len(), 2, "one column per member");
+            assert_eq!(p.per_workload[0].workload, "saxpy-64");
+            assert_eq!(p.per_workload[1].workload, "dot-64");
+            let times = [p.per_workload[0].wm_time_ns, p.per_workload[1].wm_time_ns];
+            assert_eq!(p.wm_time_ns.to_bits(), geomean(&times).to_bits());
+            assert_eq!(p.cycles, p.per_workload[0].cycles + p.per_workload[1].cycles);
+        }
+        // Elaboration is per-point-shared across the suite: 2 misses (one
+        // per distinct architecture), 2 memory hits (the second member).
+        let elab = r.cache.pass_counts_full("elaborate");
+        assert_eq!(elab.miss, 2, "{:?}", r.cache);
+        assert_eq!(elab.mem, 2, "{:?}", r.cache);
+        assert_eq!(r.workload_names(), vec!["saxpy-64".to_string(), "dot-64".to_string()]);
+        assert!(r.summary().contains("wl saxpy-64"), "{}", r.summary());
+
+        // Warm suite re-run: zero misses anywhere, bit-identical columns.
+        let r2 = engine.sweep_suite(&grid, &suite, 3);
+        assert_eq!(r2.cache.misses, 0, "{:?}", r2.cache);
+        assert_eq!(r2.sim_hit_rate(), 1.0);
+        for (a, b) in r.points.iter().zip(r2.points.iter()) {
+            assert_eq!(a.label, b.label);
+            for (x, y) in a.per_workload.iter().zip(b.per_workload.iter()) {
+                assert_eq!(x.cycles, y.cycles);
+                assert_eq!(x.wm_time_ns.to_bits(), y.wm_time_ns.to_bits());
+            }
+        }
+    }
+
+    /// A single-member suite is exactly the plain sweep: same points, same
+    /// bits, same frontier (the aggregate path special-cases len 1).
+    #[test]
+    fn single_member_suite_equals_plain_sweep() {
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8]);
+        let wl = Workload::Fir { n: 64, taps: 8 };
+        let plain = SweepEngine::new(1).sweep_seeded(&grid, &wl, 7);
+        let suited =
+            SweepEngine::new(1).sweep_suite(&grid, &WorkloadSuite::single(wl), 7);
+        assert_eq!(plain.points.len(), suited.points.len());
+        for (a, b) in plain.points.iter().zip(suited.points.iter()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(b.per_workload.len(), 1);
+        }
+        assert_eq!(plain.frontier, suited.frontier);
     }
 
     #[test]

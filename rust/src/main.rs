@@ -10,7 +10,9 @@ use std::sync::Arc;
 
 use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
-use windmill::coordinator::{ppa_report, run_all, JobSpec, SweepEngine, SweepReport, Workload};
+use windmill::coordinator::{
+    ppa_report, run_all, JobSpec, SweepEngine, SweepReport, Workload, WorkloadSuite,
+};
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
 use windmill::store::{DiskStore, SweepSession};
@@ -25,22 +27,27 @@ USAGE:
     windmill report [--preset P | --sweep]
         PPA report (area / fmax / power) for one preset or the Fig. 6 sweep.
     windmill run <workload> [--preset P] [--seed S]
-        Compile + simulate a workload (saxpy|dot|gemm|spmv|fir|conv|rl)
+        Compile + simulate a workload (saxpy|dot|gemm|spmv|bfs|fir|conv|rl)
         against the CPU/GPU baseline models.
-    windmill sweep <workload> [--preset P] [--workers W] [--seed S]
+    windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
                    [--store DIR] [--shard I/N] [--expect-warm]
-        Design-space sweep (PEA size x topology grid) of a workload through
-        the cache-backed sweep engine; prints the best-PPA frontier.
+        Design-space sweep (PEA size x topology grid) of a workload — or a
+        comma-separated workload *suite* (e.g. `gemm,spmv,rl`), evaluated
+        member-by-member at every grid point into one frontier over
+        (area, power, per-workload times) — through the cache-backed sweep
+        engine; prints the best-PPA frontier.
         --store DIR   read/write artifacts through a persistent store, so a
                       re-run in a fresh process recomputes nothing
         --shard I/N   evaluate the I-th of N contiguous grid shards and
                       save the partial report under DIR/partials/
         --expect-warm exit nonzero unless the sweep re-entered simulate()
                       zero times (CI warm-start assertion)
-    windmill sweep-merge [<workload>] --store DIR [--seed S]
+    windmill sweep-merge [<wl>[,<wl>...]] --store DIR [--seed S] [--list]
         Merge one complete shard session under DIR/partials/ into a report
         bit-identical to the unsharded sweep (a store may hold partials of
-        several sessions; narrow by workload and/or seed).
+        several sessions; narrow by suite and/or seed). With --list, only
+        enumerate the sessions recorded in DIR/manifest.jsonl (complete
+        and resumable) and exit.
     windmill store gc --store DIR [--max-bytes N]
         Garbage-collect a persistent artifact store: drop entries with a
         stale codec version (and temp-file litter), then — with
@@ -174,8 +181,9 @@ fn sweep_grid(base: windmill::arch::WindMillParams) -> ParamGrid {
 }
 
 fn cmd_sweep(args: &[String]) -> Result<(), String> {
-    let wl_name = args.first().ok_or("missing workload")?;
-    let workload = Workload::parse(wl_name).ok_or(format!("unknown workload `{wl_name}`"))?;
+    let wl_name = args.first().ok_or("missing workload (or comma-separated suite)")?;
+    let suite = WorkloadSuite::parse(wl_name)
+        .ok_or(format!("unknown workload in suite `{wl_name}`"))?;
     let base = params_from_args(&args[1..])?;
     let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
     let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
@@ -209,7 +217,7 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 
     let report = match shard {
         Some((i, n)) => {
-            let partial = SweepSession::run_shard(&engine, &grid, &workload, seed, i, n)
+            let partial = SweepSession::run_shard(&engine, &grid, &suite, seed, i, n)
                 .map_err(|e| e.to_string())?;
             let path = SweepSession::save_partial(
                 Path::new(store_dir.as_ref().unwrap()),
@@ -219,15 +227,15 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             eprintln!("shard {i}/{n}: {} points -> {}", partial.report.points.len(), path.display());
             print_sweep_report(
                 &partial.report,
-                &format!("sweep shard {i}/{n} of `{}`", workload.name()),
+                &format!("sweep shard {i}/{n} of `{}`", suite.name()),
             );
             partial.report
         }
         None => {
-            let report = engine.sweep_seeded(&grid, &workload, seed);
+            let report = engine.sweep_suite(&grid, &suite, seed);
             print_sweep_report(
                 &report,
-                &format!("design-space sweep of `{}` (PEA size x topology)", workload.name()),
+                &format!("design-space sweep of `{}` (PEA size x topology)", suite.name()),
             );
             report
         }
@@ -259,19 +267,38 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 
 fn cmd_sweep_merge(args: &[String]) -> Result<(), String> {
     let dir = arg_value(args, "--store").ok_or("sweep-merge needs --store DIR")?;
+    if args.iter().any(|a| a == "--list") {
+        let sessions = SweepSession::list_sessions(Path::new(&dir));
+        if sessions.is_empty() {
+            println!("no sessions recorded in {dir}/manifest.jsonl");
+        }
+        for s in sessions {
+            println!("{s}");
+        }
+        return Ok(());
+    }
     let wl_filter = args.first().filter(|a| !a.starts_with("--")).cloned();
     let seed_filter: Option<u64> = arg_value(args, "--seed").and_then(|s| s.parse().ok());
     let (partials, skipped) =
         SweepSession::load_partials(Path::new(&dir)).map_err(|e| e.to_string())?;
     if skipped > 0 {
-        eprintln!("warning: skipped {skipped} corrupt partial file(s)");
+        eprintln!("warning: skipped {skipped} corrupt or stale-version partial file(s)");
     }
-    // A store accumulates partials from many sessions (other workloads,
+    // A store accumulates partials from many sessions (other suites,
     // re-shardings with a different N); merge exactly one complete one.
     let groups = SweepSession::group_sessions(partials);
+    // The filter accepts the exact suite name, the parsed suite's
+    // canonical name (`gemm,spmv` -> `gemm-32x32x32+spmv-64x64k8`), or a
+    // single-workload prefix (`gemm` matches `gemm-32x32x32`). The prefix
+    // form deliberately only matches *single-member* sessions — a
+    // multi-member suite name also starts with its first member's prefix,
+    // and `gemm` must not silently select a `gemm,spmv` session.
+    let canonical = wl_filter.as_ref().and_then(|w| WorkloadSuite::parse(w)).map(|s| s.name());
     let matches = |g: &[windmill::store::SweepPartial]| {
         let wl_ok = wl_filter.as_ref().map_or(true, |w| {
-            g[0].workload == *w || g[0].workload.starts_with(&format!("{w}-"))
+            g[0].suite == *w
+                || canonical.as_ref() == Some(&g[0].suite)
+                || (!g[0].suite.contains('+') && g[0].suite.starts_with(&format!("{w}-")))
         });
         wl_ok && seed_filter.map_or(true, |s| g[0].seed == s)
     };
@@ -285,6 +312,7 @@ fn cmd_sweep_merge(args: &[String]) -> Result<(), String> {
             for g in &incomplete {
                 msg.push_str(&format!("\n  incomplete: {}", SweepSession::describe(g)));
             }
+            msg.push_str("\n  (see `windmill sweep-merge --store DIR --list`)");
             Err(msg)
         }
         1 => {
@@ -297,7 +325,7 @@ fn cmd_sweep_merge(args: &[String]) -> Result<(), String> {
         }
         _ => {
             let mut msg =
-                "multiple complete sessions; narrow with <workload> and/or --seed:".to_string();
+                "multiple complete sessions; narrow with <suite> and/or --seed:".to_string();
             for g in &complete {
                 msg.push_str(&format!("\n  {}", SweepSession::describe(g)));
             }
@@ -359,6 +387,7 @@ fn cmd_suite(args: &[String]) -> Result<(), String> {
         Workload::Dot { n: 256 },
         Workload::Gemm { m: 32, n: 32, k: 32 },
         Workload::Spmv { rows: 64, cols: 64, k: 8 },
+        Workload::Bfs { n: 64, deg: 4, levels: 4 },
         Workload::Fir { n: 256, taps: 16 },
         Workload::Conv3x3 { h: 32, w: 32 },
         Workload::RlStep,

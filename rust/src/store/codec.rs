@@ -35,7 +35,7 @@ use crate::compiler::{
     CompilePass, ConfigImage, Coord, Dfg, Mapping, Routes, Schedule, StageNanos,
 };
 use crate::coordinator::cache::{CacheStats, ElabArtifacts, PassCounts};
-use crate::coordinator::report::{PpaRow, SweepPoint, SweepReport};
+use crate::coordinator::report::{PpaRow, SweepPoint, SweepReport, WorkloadPerf};
 use crate::coordinator::JobTiming;
 use crate::diag::error::DiagError;
 use crate::sim::engine::SimResult;
@@ -49,7 +49,12 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 
 /// Codec version. Bump on any layout change: entries with a different
 /// version are skipped by the disk store (stale, not fatal).
-pub const VERSION: u16 = 1;
+///
+/// v2 (PR 5): `SweepPartial` carries the suite identity (name +
+/// fingerprint) instead of a bare workload name, `SweepPoint` grew
+/// per-workload performance columns, and `SweepReport` the
+/// `rejected_nonfinite` counter.
+pub const VERSION: u16 = 2;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -925,6 +930,24 @@ fn dec_cache_stats(d: &mut Dec) -> Result<CacheStats, DiagError> {
     Ok(CacheStats { hits, disk_hits, misses, evictions, by_pass })
 }
 
+fn enc_workload_perf(e: &mut Enc, w: &WorkloadPerf) {
+    e.str(&w.workload);
+    e.u64(w.cycles);
+    e.f64(w.wm_time_ns).f64(w.speedup_vs_cpu).f64(w.speedup_vs_gpu);
+    e.u32(w.ii);
+}
+
+fn dec_workload_perf(d: &mut Dec) -> Result<WorkloadPerf, DiagError> {
+    Ok(WorkloadPerf {
+        workload: d.str()?,
+        cycles: d.u64()?,
+        wm_time_ns: d.f64()?,
+        speedup_vs_cpu: d.f64()?,
+        speedup_vs_gpu: d.f64()?,
+        ii: d.u32()?,
+    })
+}
+
 fn enc_point(e: &mut Enc, p: &SweepPoint) {
     e.str(&p.label);
     e.u64(p.arch_hash); // verbatim: hashes exceed 2^53 routinely
@@ -934,31 +957,54 @@ fn enc_point(e: &mut Enc, p: &SweepPoint) {
     e.u64(p.cycles);
     e.f64(p.wm_time_ns).f64(p.speedup_vs_cpu).f64(p.speedup_vs_gpu);
     e.u32(p.ii);
+    e.seq(p.per_workload.len());
+    for w in &p.per_workload {
+        enc_workload_perf(e, w);
+    }
     enc_timing(e, &p.timing);
 }
 
 fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
+    let label = d.str()?;
+    let arch_hash = d.u64()?;
+    let pea = d.str()?;
+    let topology = topology_label(&d.str()?)?;
+    let gates = d.f64()?;
+    let area_mm2 = d.f64()?;
+    let power_mw = d.f64()?;
+    let fmax_mhz = d.f64()?;
+    let cycles = d.u64()?;
+    let wm_time_ns = d.f64()?;
+    let speedup_vs_cpu = d.f64()?;
+    let speedup_vs_gpu = d.f64()?;
+    let ii = d.u32()?;
+    let n_wl = d.seq(41)?; // fixed fields of one perf record
+    let mut per_workload = Vec::with_capacity(n_wl);
+    for _ in 0..n_wl {
+        per_workload.push(dec_workload_perf(d)?);
+    }
     Ok(SweepPoint {
-        label: d.str()?,
-        arch_hash: d.u64()?,
-        pea: d.str()?,
-        topology: topology_label(&d.str()?)?,
-        gates: d.f64()?,
-        area_mm2: d.f64()?,
-        power_mw: d.f64()?,
-        fmax_mhz: d.f64()?,
-        cycles: d.u64()?,
-        wm_time_ns: d.f64()?,
-        speedup_vs_cpu: d.f64()?,
-        speedup_vs_gpu: d.f64()?,
-        ii: d.u32()?,
+        label,
+        arch_hash,
+        pea,
+        topology,
+        gates,
+        area_mm2,
+        power_mw,
+        fmax_mhz,
+        cycles,
+        wm_time_ns,
+        speedup_vs_cpu,
+        speedup_vs_gpu,
+        ii,
+        per_workload,
         timing: dec_timing(d)?,
     })
 }
 
 /// One shard's serialized accumulator state plus the session coordinates
-/// that make merging safe (shard index/count, grid fingerprint, workload,
-/// seed).
+/// that make merging safe (shard index/count, grid fingerprint, suite
+/// identity, seed).
 #[derive(Debug, Clone)]
 pub struct SweepPartial {
     pub shard: u32,
@@ -966,7 +1012,11 @@ pub struct SweepPartial {
     /// [`crate::store::session::SweepSession::grid_hash`] of the *full*
     /// grid — shards of different grids refuse to merge.
     pub grid_hash: u64,
-    pub workload: String,
+    /// [`crate::coordinator::WorkloadSuite::name`] — display/filter key.
+    pub suite: String,
+    /// [`crate::coordinator::WorkloadSuite::fingerprint`] — the identity
+    /// merges validate; shards of different suites refuse to merge.
+    pub suite_hash: u64,
     pub seed: u64,
     pub report: SweepReport,
 }
@@ -974,7 +1024,8 @@ pub struct SweepPartial {
 pub fn encode_sweep_partial(p: &SweepPartial) -> Vec<u8> {
     let mut e = Enc::new(Kind::SweepPartial);
     e.u32(p.shard).u32(p.of).u64(p.grid_hash);
-    e.str(&p.workload);
+    e.str(&p.suite);
+    e.u64(p.suite_hash); // verbatim, like every identity hash
     e.u64(p.seed);
     let r = &p.report;
     e.seq(r.points.len());
@@ -989,6 +1040,7 @@ pub fn encode_sweep_partial(p: &SweepPartial) -> Vec<u8> {
     for &i in &r.frontier {
         e.usize(i);
     }
+    e.u64(r.rejected_nonfinite);
     enc_cache_stats(&mut e, &r.cache);
     enc_timing(&mut e, &r.timing);
     e.u64(r.wall_ns);
@@ -1000,7 +1052,8 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
     let shard = d.u32()?;
     let of = d.u32()?;
     let grid_hash = d.u64()?;
-    let workload = d.str()?;
+    let suite = d.str()?;
+    let suite_hash = d.u64()?;
     let seed = d.u64()?;
     let n_points = d.seq(64)?;
     let mut points = Vec::with_capacity(n_points);
@@ -1017,6 +1070,7 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
     for _ in 0..n_frontier {
         frontier.push(d.usize()?);
     }
+    let rejected_nonfinite = d.u64()?;
     let cache = dec_cache_stats(&mut d)?;
     let timing = dec_timing(&mut d)?;
     let wall_ns = d.u64()?;
@@ -1025,9 +1079,18 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
         shard,
         of,
         grid_hash,
-        workload,
+        suite,
+        suite_hash,
         seed,
-        report: SweepReport { points, failures, frontier, cache, timing, wall_ns },
+        report: SweepReport {
+            points,
+            failures,
+            frontier,
+            rejected_nonfinite,
+            cache,
+            timing,
+            wall_ns,
+        },
     })
 }
 

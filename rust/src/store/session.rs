@@ -3,10 +3,18 @@
 //!
 //! The FIFO worker pool parallelizes one process; a [`SweepSession`]
 //! parallelizes *processes* (or machines sharing a filesystem): each shard
-//! runs `windmill sweep --store DIR --shard I/N` independently against the
-//! shared [`super::disk::DiskStore`], writes its serialized
-//! [`SweepPartial`] under `DIR/partials/`, and `windmill sweep-merge`
-//! folds them into one [`SweepReport`].
+//! runs `windmill sweep wl1,wl2,... --store DIR --shard I/N` independently
+//! against the shared [`super::disk::DiskStore`], writes its serialized
+//! [`SweepPartial`] under `DIR/partials/` (plus a line in
+//! `DIR/manifest.jsonl` — see [`SweepSession::read_manifest`]), and
+//! `windmill sweep-merge` folds them into one [`SweepReport`].
+//!
+//! Sessions are **suite-scoped** (PR 5): a partial carries the
+//! [`crate::coordinator::WorkloadSuite`] name *and* fingerprint alongside
+//! the grid fingerprint and seed, and [`SweepSession::merge`] refuses
+//! mixed-suite shard sets, so a frontier computed over (area, power,
+//! per-workload times) can never silently blend shards that evaluated
+//! different kernel sets.
 //!
 //! **Determinism contract** (pinned by `tests/store_persistence.rs`):
 //! [`SweepSession::shard`] partitions [`ParamGrid::points`] into
@@ -15,14 +23,14 @@
 //! point order of the unsharded sweep — the merged report's points,
 //! frontier indices and every `f64` in them are bit-identical to a
 //! single-process run. Merging validates the session coordinates (shard
-//! count, grid fingerprint, workload, seed) and refuses mixed or
+//! count, grid fingerprint, suite fingerprint, seed) and refuses mixed or
 //! incomplete shard sets.
 
 use std::path::{Path, PathBuf};
 
 use crate::arch::params::{ParamGrid, WindMillParams};
 use crate::coordinator::report::{SweepAccumulator, SweepReport};
-use crate::coordinator::{SweepEngine, Workload};
+use crate::coordinator::{SweepEngine, WorkloadSuite};
 use crate::diag::error::DiagError;
 use crate::util::StableHasher;
 
@@ -30,6 +38,21 @@ use super::codec::{decode_sweep_partial, encode_sweep_partial};
 use super::disk::DiskStore;
 
 pub use super::codec::SweepPartial;
+
+/// One line of `<store>/manifest.jsonl`: the coordinates of a shard run,
+/// appended by [`SweepSession::save_partial`] so `sweep-merge --list` can
+/// enumerate resumable sessions without decoding any partial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub suite: String,
+    /// Hex-encoded in the JSON (u64 hashes exceed what `Num(f64)` holds).
+    pub suite_hash: u64,
+    pub grid_hash: u64,
+    pub seed: u64,
+    pub shard: u32,
+    pub of: u32,
+    pub points: usize,
+}
 
 /// Namespace for shard/merge operations of one design-space sweep.
 pub struct SweepSession;
@@ -51,44 +74,53 @@ impl SweepSession {
 
     /// Deterministically partition `points` into the `index`-th of `of`
     /// contiguous chunks (balanced to within one point). Concatenating the
-    /// chunks for `index = 0..of` reproduces `points` exactly.
+    /// chunks for `index = 0..of` reproduces `points` exactly. A bad
+    /// `index/of` is a [`DiagError::Store`], never a panic — library
+    /// callers (CLI drivers, remote shard assigners) get the same error
+    /// path as [`SweepSession::run_shard`].
     pub fn shard_points(
         points: Vec<(String, WindMillParams)>,
         index: usize,
         of: usize,
-    ) -> Vec<(String, WindMillParams)> {
-        assert!(of > 0 && index < of, "shard {index}/{of} out of range");
+    ) -> Result<Vec<(String, WindMillParams)>, DiagError> {
+        if of == 0 || index >= of {
+            return Err(DiagError::Store(format!(
+                "shard {index}/{of} out of range (want 0 <= index < of)"
+            )));
+        }
         let n = points.len();
         let lo = index * n / of;
         let hi = (index + 1) * n / of;
-        points.into_iter().skip(lo).take(hi - lo).collect()
+        Ok(points.into_iter().skip(lo).take(hi - lo).collect())
     }
 
     /// The `index`-th of `of` shards of the grid's validated points.
-    pub fn shard(grid: &ParamGrid, index: usize, of: usize) -> Vec<(String, WindMillParams)> {
+    pub fn shard(
+        grid: &ParamGrid,
+        index: usize,
+        of: usize,
+    ) -> Result<Vec<(String, WindMillParams)>, DiagError> {
         Self::shard_points(grid.points(), index, of)
     }
 
-    /// Run one shard of `grid` on `engine` and package the result for
-    /// [`SweepSession::merge`].
+    /// Run one shard of `grid` on `engine` against the whole `suite` and
+    /// package the result for [`SweepSession::merge`].
     pub fn run_shard(
         engine: &SweepEngine,
         grid: &ParamGrid,
-        workload: &Workload,
+        suite: &WorkloadSuite,
         seed: u64,
         index: usize,
         of: usize,
     ) -> Result<SweepPartial, DiagError> {
-        if of == 0 || index >= of {
-            return Err(DiagError::Store(format!("shard {index}/{of} out of range")));
-        }
-        let points = Self::shard(grid, index, of);
-        let report = engine.sweep_points(points, workload, seed);
+        let points = Self::shard(grid, index, of)?;
+        let report = engine.sweep_points(points, suite, seed);
         Ok(SweepPartial {
             shard: index as u32,
             of: of as u32,
             grid_hash: Self::grid_hash(grid),
-            workload: workload.name(),
+            suite: suite.name(),
+            suite_hash: suite.fingerprint(),
             seed,
             report,
         })
@@ -99,22 +131,118 @@ impl SweepSession {
         store_root.join("partials")
     }
 
+    /// The session manifest under a store root.
+    pub fn manifest_path(store_root: &Path) -> PathBuf {
+        store_root.join("manifest.jsonl")
+    }
+
     /// Persist one shard's partial under `store_root/partials/` (atomic
-    /// temp+rename, same discipline as artifact entries). Returns the path.
+    /// temp+rename, same discipline as artifact entries) and append its
+    /// coordinates to `store_root/manifest.jsonl`. Returns the path.
     pub fn save_partial(store_root: &Path, partial: &SweepPartial) -> Result<PathBuf, DiagError> {
         let path = Self::partials_dir(store_root).join(format!(
-            "{}-s{}-{:016x}-{}of{}.bin",
-            partial.workload, partial.seed, partial.grid_hash, partial.shard, partial.of
+            "{:016x}-s{}-{:016x}-{}of{}.bin",
+            partial.suite_hash, partial.seed, partial.grid_hash, partial.shard, partial.of
         ));
         let bytes = encode_sweep_partial(partial);
         DiskStore::write_atomic(&path, &bytes)
             .map_err(|e| DiagError::Store(format!("cannot write {}: {e}", path.display())))?;
+        Self::append_manifest(store_root, partial)?;
         Ok(path)
     }
 
+    /// Append one manifest line. Hashes **and the seed** go out as
+    /// 16-digit hex strings — this file is read back through
+    /// [`crate::util::json`], whose `f64` numbers would truncate any u64
+    /// above 2^53 (seeds are arbitrary u64s, same as the fingerprints).
+    fn append_manifest(store_root: &Path, partial: &SweepPartial) -> Result<(), DiagError> {
+        use std::io::Write;
+        let line = format!(
+            "{{\"suite\":{},\"suite_hash\":\"{:016x}\",\"grid\":\"{:016x}\",\"seed\":\"{:016x}\",\"shard\":{},\"of\":{},\"points\":{}}}\n",
+            crate::util::json::Json::Str(partial.suite.clone()),
+            partial.suite_hash,
+            partial.grid_hash,
+            partial.seed,
+            partial.shard,
+            partial.of,
+            partial.report.points.len(),
+        );
+        let path = Self::manifest_path(store_root);
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| f.write_all(line.as_bytes()))
+            .map_err(|e| DiagError::Store(format!("cannot append {}: {e}", path.display())))
+    }
+
+    /// Read the manifest back. Unparseable lines are skipped and counted
+    /// (the crash-mid-append analogue of the corrupt-entry policy); a
+    /// missing manifest is an empty one, not an error.
+    pub fn read_manifest(store_root: &Path) -> (Vec<ManifestEntry>, usize) {
+        let Ok(text) = std::fs::read_to_string(Self::manifest_path(store_root)) else {
+            return (Vec::new(), 0);
+        };
+        let mut entries = Vec::new();
+        let mut skipped = 0;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            match Self::parse_manifest_line(line) {
+                Some(e) => entries.push(e),
+                None => skipped += 1,
+            }
+        }
+        (entries, skipped)
+    }
+
+    fn parse_manifest_line(line: &str) -> Option<ManifestEntry> {
+        let j = crate::util::json::Json::parse(line).ok()?;
+        let hex = |key: &str| u64::from_str_radix(j.get(key)?.as_str()?, 16).ok();
+        Some(ManifestEntry {
+            suite: j.get("suite")?.as_str()?.to_string(),
+            suite_hash: hex("suite_hash")?,
+            grid_hash: hex("grid")?,
+            seed: hex("seed")?,
+            shard: j.get("shard")?.as_f64()? as u32,
+            of: j.get("of")?.as_f64()? as u32,
+            points: j.get("points")?.as_usize()?,
+        })
+    }
+
+    /// Human-readable session inventory from the manifest: one line per
+    /// `(suite, seed, grid, of)` session with the distinct shards seen and
+    /// whether the set is complete — the `sweep-merge --list` view.
+    pub fn list_sessions(store_root: &Path) -> Vec<String> {
+        let (entries, _) = Self::read_manifest(store_root);
+        let mut sessions: std::collections::BTreeMap<
+            (String, u64, u64, u64, u32),
+            std::collections::BTreeSet<u32>,
+        > = std::collections::BTreeMap::new();
+        for e in entries {
+            sessions
+                .entry((e.suite, e.suite_hash, e.seed, e.grid_hash, e.of))
+                .or_default()
+                .insert(e.shard);
+        }
+        sessions
+            .into_iter()
+            .map(|((suite, _, seed, grid, of), shards)| {
+                let status = if shards.len() as u32 == of && shards.iter().all(|&s| s < of) {
+                    "complete"
+                } else {
+                    "resumable"
+                };
+                format!(
+                    "`{suite}` seed {seed} grid {grid:016x}: {}/{of} shards ({status})",
+                    shards.len()
+                )
+            })
+            .collect()
+    }
+
     /// Load every decodable partial under `store_root/partials/`. Returns
-    /// the partials plus the number of files skipped as corrupt (same
-    /// skip-not-fail policy as artifact entries).
+    /// the partials plus the number of files skipped as corrupt **or
+    /// stale-versioned** (same skip-not-fail policy as artifact entries —
+    /// a pre-v2 partial is counted here, never fatal).
     pub fn load_partials(store_root: &Path) -> Result<(Vec<SweepPartial>, usize), DiagError> {
         let dir = Self::partials_dir(store_root);
         let entries = std::fs::read_dir(&dir).map_err(|e| {
@@ -137,19 +265,17 @@ impl SweepSession {
         Ok((partials, skipped))
     }
 
-    /// Group partials by their session coordinates `(workload, seed, grid
-    /// fingerprint, shard count)`, deterministically ordered. A store
-    /// directory accumulates partials from many sessions over time (second
-    /// workloads, re-shardings with a different N); each group is a merge
-    /// candidate on its own, so old sessions never poison new merges.
+    /// Group partials by their session coordinates `(suite fingerprint,
+    /// seed, grid fingerprint, shard count)`, deterministically ordered. A
+    /// store directory accumulates partials from many sessions over time
+    /// (other suites, re-shardings with a different N); each group is a
+    /// merge candidate on its own, so old sessions never poison new
+    /// merges.
     pub fn group_sessions(partials: Vec<SweepPartial>) -> Vec<Vec<SweepPartial>> {
-        let mut groups: std::collections::BTreeMap<(String, u64, u64, u32), Vec<SweepPartial>> =
+        let mut groups: std::collections::BTreeMap<(u64, u64, u64, u32), Vec<SweepPartial>> =
             std::collections::BTreeMap::new();
         for p in partials {
-            groups
-                .entry((p.workload.clone(), p.seed, p.grid_hash, p.of))
-                .or_default()
-                .push(p);
+            groups.entry((p.suite_hash, p.seed, p.grid_hash, p.of)).or_default().push(p);
         }
         groups.into_values().collect()
     }
@@ -172,7 +298,7 @@ impl SweepSession {
                 shards.dedup();
                 format!(
                     "`{}` seed {} grid {:016x}: {}/{} shards",
-                    p.workload,
+                    p.suite,
                     p.seed,
                     p.grid_hash,
                     shards.len(),
@@ -184,23 +310,27 @@ impl SweepSession {
     }
 
     /// Fold shard partials into the single-process report: validates the
-    /// session coordinates, orders by shard index, replays every point
-    /// through a fresh [`SweepAccumulator`] (bit-identical frontier) and
-    /// sums cache/timing/wall counters.
+    /// session coordinates (suite fingerprint included — mixed-suite sets
+    /// refuse), orders by shard index, replays every point through a fresh
+    /// [`SweepAccumulator`] (bit-identical frontier, non-finite points
+    /// re-quarantined) and sums cache/timing/wall counters.
     pub fn merge(mut partials: Vec<SweepPartial>) -> Result<SweepReport, DiagError> {
         let err = |m: String| Err(DiagError::Store(format!("merge: {m}")));
         let Some(first) = partials.first() else {
             return err("no partials to merge".into());
         };
-        let (of, grid_hash, workload, seed) =
-            (first.of, first.grid_hash, first.workload.clone(), first.seed);
+        let (of, grid_hash, suite, suite_hash, seed) =
+            (first.of, first.grid_hash, first.suite.clone(), first.suite_hash, first.seed);
         for p in &partials {
-            if p.of != of || p.grid_hash != grid_hash || p.workload != workload || p.seed != seed
+            if p.of != of
+                || p.grid_hash != grid_hash
+                || p.suite_hash != suite_hash
+                || p.seed != seed
             {
                 return err(format!(
-                    "mixed sessions: shard {}/{} of `{}` (seed {}, grid {:016x}) vs {}/{} of `{}` (seed {}, grid {:016x})",
-                    p.shard, p.of, p.workload, p.seed, p.grid_hash,
-                    first.shard, of, workload, seed, grid_hash
+                    "mixed sessions: shard {}/{} of `{}` (seed {}, suite {:016x}, grid {:016x}) vs {}/{} of `{}` (seed {}, suite {:016x}, grid {:016x})",
+                    p.shard, p.of, p.suite, p.seed, p.suite_hash, p.grid_hash,
+                    first.shard, of, suite, seed, suite_hash, grid_hash
                 ));
             }
         }
@@ -234,9 +364,14 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::arch::Topology;
+    use crate::coordinator::Workload;
 
     fn grid() -> ParamGrid {
         ParamGrid::new(presets::standard()).pea_edges(&[4, 8]).topologies(&Topology::ALL)
+    }
+
+    fn saxpy_suite() -> WorkloadSuite {
+        WorkloadSuite::single(Workload::Saxpy { n: 64 })
     }
 
     #[test]
@@ -246,7 +381,7 @@ mod tests {
         for of in 1..=full.len() + 1 {
             let mut rebuilt = Vec::new();
             for i in 0..of {
-                rebuilt.extend(SweepSession::shard(&g, i, of));
+                rebuilt.extend(SweepSession::shard(&g, i, of).unwrap());
             }
             assert_eq!(rebuilt.len(), full.len(), "of={of}");
             for (a, b) in rebuilt.iter().zip(full.iter()) {
@@ -263,22 +398,43 @@ mod tests {
         assert_ne!(SweepSession::grid_hash(&grid()), SweepSession::grid_hash(&other));
     }
 
+    /// Satellite regression: a bad `index/of` used to `assert!` inside
+    /// `shard_points` — library callers got a panic where the sibling
+    /// `run_shard` returned `DiagError::Store`. Both layers now take the
+    /// error path; the in-range path is unchanged.
     #[test]
-    #[should_panic(expected = "out of range")]
-    fn shard_index_must_be_in_range() {
-        SweepSession::shard(&grid(), 2, 2);
+    fn shard_out_of_range_is_an_error_not_a_panic() {
+        // The library layer.
+        for (i, of) in [(2usize, 2usize), (5, 2), (0, 0)] {
+            let r = SweepSession::shard(&grid(), i, of);
+            assert!(
+                matches!(r, Err(DiagError::Store(ref m)) if m.contains("out of range")),
+                "shard({i},{of}) -> {r:?}"
+            );
+            let r2 = SweepSession::shard_points(grid().points(), i, of);
+            assert!(r2.is_err(), "shard_points({i},{of})");
+        }
+        // The run_shard layer reports the same error.
+        let engine = SweepEngine::new(1);
+        let r = SweepSession::run_shard(&engine, &grid(), &saxpy_suite(), 42, 3, 2);
+        assert!(matches!(r, Err(DiagError::Store(ref m)) if m.contains("out of range")));
+        // And the in-range path still shards correctly.
+        assert_eq!(
+            SweepSession::shard(&grid(), 0, 1).unwrap().len(),
+            grid().points().len()
+        );
     }
 
     #[test]
     fn sessions_group_and_report_completeness() {
         let engine = SweepEngine::new(2);
-        let wl = Workload::Saxpy { n: 64 };
+        let suite = saxpy_suite();
         // Session A: 2 shards, complete. Session B: same grid re-sharded
         // as 3, only one shard present. Session C: different seed.
-        let a0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 2).unwrap();
-        let a1 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 1, 2).unwrap();
-        let b0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 3).unwrap();
-        let c0 = SweepSession::run_shard(&engine, &grid(), &wl, 7, 0, 1).unwrap();
+        let a0 = SweepSession::run_shard(&engine, &grid(), &suite, 42, 0, 2).unwrap();
+        let a1 = SweepSession::run_shard(&engine, &grid(), &suite, 42, 1, 2).unwrap();
+        let b0 = SweepSession::run_shard(&engine, &grid(), &suite, 42, 0, 3).unwrap();
+        let c0 = SweepSession::run_shard(&engine, &grid(), &suite, 7, 0, 1).unwrap();
         let groups =
             SweepSession::group_sessions(vec![b0, a1.clone(), c0, a0.clone(), a1.clone()]);
         assert_eq!(groups.len(), 3, "three distinct sessions");
@@ -298,11 +454,11 @@ mod tests {
     }
 
     #[test]
-    fn merge_rejects_incomplete_and_mixed_sessions() {
+    fn merge_rejects_incomplete_mixed_and_cross_suite_sessions() {
         let engine = SweepEngine::new(2);
-        let wl = Workload::Saxpy { n: 64 };
-        let p0 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 0, 2).unwrap();
-        let p1 = SweepSession::run_shard(&engine, &grid(), &wl, 42, 1, 2).unwrap();
+        let suite = saxpy_suite();
+        let p0 = SweepSession::run_shard(&engine, &grid(), &suite, 42, 0, 2).unwrap();
+        let p1 = SweepSession::run_shard(&engine, &grid(), &suite, 42, 1, 2).unwrap();
 
         assert!(SweepSession::merge(vec![]).is_err());
         assert!(SweepSession::merge(vec![p0.clone()]).is_err(), "missing shard 1");
@@ -312,8 +468,63 @@ mod tests {
         let mut wrong_grid = p1.clone();
         wrong_grid.grid_hash ^= 1;
         assert!(SweepSession::merge(vec![p0.clone(), wrong_grid]).is_err());
+        // Suite identity is validated too: a shard of a different suite
+        // (same grid, same seed) must refuse to merge.
+        let mut wrong_suite = p1.clone();
+        wrong_suite.suite_hash ^= 1;
+        let r = SweepSession::merge(vec![p0.clone(), wrong_suite]);
+        assert!(matches!(r, Err(DiagError::Store(ref m)) if m.contains("mixed sessions")));
 
         let merged = SweepSession::merge(vec![p1, p0]).unwrap(); // order-insensitive
         assert_eq!(merged.points.len(), grid().len());
+    }
+
+    #[test]
+    fn manifest_lines_roundtrip_and_list_sessions() {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let engine = SweepEngine::new(1);
+        let small = ParamGrid::new(presets::standard()).pea_edges(&[4]);
+        let suite = saxpy_suite();
+        let p0 = SweepSession::run_shard(&engine, &small, &suite, 42, 0, 2).unwrap();
+        SweepSession::save_partial(&dir, &p0).unwrap();
+        // Hash round-trip through the hex JSON encoding must be verbatim.
+        let (entries, skipped) = SweepSession::read_manifest(&dir);
+        assert_eq!(skipped, 0);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].suite_hash, suite.fingerprint());
+        assert_eq!(entries[0].grid_hash, SweepSession::grid_hash(&small));
+        assert_eq!(entries[0].shard, 0);
+        assert_eq!(entries[0].of, 2);
+        assert_eq!(entries[0].points, p0.report.points.len());
+        // One shard of two: resumable, not complete.
+        let listing = SweepSession::list_sessions(&dir);
+        assert_eq!(listing.len(), 1);
+        assert!(listing[0].contains("1/2 shards (resumable)"), "{listing:?}");
+        // Second shard completes the session; garbage lines are skipped.
+        let p1 = SweepSession::run_shard(&engine, &small, &suite, 42, 1, 2).unwrap();
+        SweepSession::save_partial(&dir, &p1).unwrap();
+        use std::io::Write;
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(SweepSession::manifest_path(&dir))
+            .unwrap()
+            .write_all(b"{truncated-by-a-cra\n")
+            .unwrap();
+        let (entries, skipped) = SweepSession::read_manifest(&dir);
+        assert_eq!((entries.len(), skipped), (2, 1));
+        let listing = SweepSession::list_sessions(&dir);
+        assert!(listing[0].contains("2/2 shards (complete)"), "{listing:?}");
+        // Seeds are arbitrary u64s: one above 2^53 must round-trip the
+        // manifest verbatim (it is hex-encoded, like the fingerprints —
+        // a JSON f64 number would silently round it).
+        let big_seed = (1u64 << 53) + 3;
+        let pb = SweepSession::run_shard(&engine, &small, &suite, big_seed, 0, 1).unwrap();
+        SweepSession::save_partial(&dir, &pb).unwrap();
+        let (entries, _) = SweepSession::read_manifest(&dir);
+        assert!(entries.iter().any(|e| e.seed == big_seed), "{entries:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,331 @@
+//! Graph workloads: frontier-based BFS over a CSR adjacency structure.
+//!
+//! This is the variable-degree form the ROADMAP calls out beyond the
+//! padded `spmv` kernel: rows (vertices) have *different* degrees, so the
+//! per-row trip count is data — read from the row-pointer array at run
+//! time — rather than a compile-time constant. The DFG iteration space is
+//! still rectangular (`[n, deg_bound]`); slots past a row's true degree
+//! are **predicated off** with an in-bounds comparison, which is exactly
+//! how a CGRA executes a data-dependent inner loop over a static schedule.
+//!
+//! Every inner-loop slot performs a **two-phase row-pointer walk** through
+//! the LSU's non-affine path:
+//!
+//! ```text
+//! phase A   e  = rowptr[v] + j          (affine load + index arithmetic)
+//! phase B   u  = colidx[e]              (indirect: address is data)
+//! phase C   f  = frontier[u]            (indirect chained off phase B)
+//! ```
+//!
+//! so the address of the second gather depends on the *value* of the
+//! first — a chained indirect pattern `spmv` (whose gather address comes
+//! from an affine stream) never exercises.
+//!
+//! BFS itself is level-synchronous ("frontier-based"): each level is one
+//! DFG phase that pulls from the previous frontier/distance arrays and
+//! writes the next ones, ping-ponging between two buffers so no phase
+//! ever reads a region it also writes (the spatial pipeline reorders
+//! accesses within a phase; cross-phase ordering is the task contract).
+//!
+//! Numerics are chosen so the cycle-accurate engine, the DFG interpreter
+//! and the scalar reference below agree **bit-for-bit**: the unreached
+//! sentinel is a large *finite* f32 (`INF_DIST`, not `f32::INFINITY`,
+//! whose `0.0 × ∞ = NaN` would poison the predication arithmetic), flags
+//! are exact {0.0, 1.0}, and the select is the exact two-product blend
+//! `keep·old + take·new` with `keep, take ∈ {0, 1}`.
+
+use crate::arch::isa::Op;
+use crate::compiler::Dfg;
+
+use super::Layout;
+
+/// "Unreached" distance sentinel. A large finite value — deliberately not
+/// `f32::INFINITY`: the predication blend multiplies distances by 0.0
+/// masks, and `0.0 × ∞` is NaN. Exactly representable in f32? It does not
+/// need to be: it only ever compares equal to itself, verbatim.
+pub const INF_DIST: f32 = 1.0e9;
+
+/// Frontier-based BFS from vertex 0: `levels` level-expansion phases over
+/// an in-edge CSR graph with `n` vertices and per-vertex degree at most
+/// `deg`. Returns the phases (one per level) plus the memory layout.
+///
+/// Regions: `rowptr` (n+1), `colidx` (n·deg capacity; only
+/// `rowptr[n]` entries are live), `dist_a`/`front_a` (level inputs at even
+/// levels), `dist_b`/`front_b` (the ping-pong partners). After `levels`
+/// phases the final distances sit in [`dist_region`]`(levels)`.
+pub fn bfs(n: u32, deg: u32, levels: u32) -> (Vec<Dfg>, Layout) {
+    assert!(n >= 1 && deg >= 1 && levels >= 1, "bfs needs n, deg, levels >= 1");
+    let mut l = Layout::new();
+    let rowptr = l.alloc("rowptr", n + 1);
+    let colidx = l.alloc("colidx", n * deg);
+    let dist_a = l.alloc("dist_a", n);
+    let front_a = l.alloc("front_a", n);
+    let dist_b = l.alloc("dist_b", n);
+    let front_b = l.alloc("front_b", n);
+    let phases = (0..levels)
+        .map(|lvl| {
+            let (din, fin, dout, fout) = if lvl % 2 == 0 {
+                (dist_a, front_a, dist_b, front_b)
+            } else {
+                (dist_b, front_b, dist_a, front_a)
+            };
+            bfs_level(n, deg, lvl, rowptr, colidx, din, fin, dout, fout)
+        })
+        .collect();
+    (phases, l)
+}
+
+/// Which distance region holds the answer after `levels` phases (the
+/// ping-pong parity).
+pub fn dist_region(levels: u32) -> &'static str {
+    if levels % 2 == 0 {
+        "dist_a"
+    } else {
+        "dist_b"
+    }
+}
+
+/// One level expansion as a DFG over the `[n, deg]` nest. Pull-style: for
+/// every vertex `v`, scan its (in-)edges `colidx[rowptr[v] .. rowptr[v+1]]`
+/// and join the frontier iff any source vertex is on it and `v` is still
+/// unreached. Slots `j >= degree(v)` are predicated off; their gather
+/// addresses are masked to word 0 (`rowptr[0]`, always in range) so the
+/// LSU never issues an out-of-bounds request.
+#[allow(clippy::too_many_arguments)]
+fn bfs_level(
+    n: u32,
+    deg: u32,
+    level: u32,
+    rowptr: u32,
+    colidx: u32,
+    dist_in: u32,
+    front_in: u32,
+    dist_out: u32,
+    front_out: u32,
+) -> Dfg {
+    let mut d = Dfg::new(&format!("bfs-l{level}"), vec![n, deg]);
+    // Predicate: is slot j a live edge of row v?
+    let j = d.index(1);
+    let rp = d.load_affine(rowptr, vec![1, 0]);
+    let rp1 = d.load_affine(rowptr + 1, vec![1, 0]);
+    let eidx = d.compute(Op::Add, rp, j);
+    let valid = d.compute(Op::Lt, eidx, rp1);
+    // Walk 1: neighbor id, address = colidx base + rowptr-derived offset
+    // (masked to 0 when predicated off).
+    let cbase = d.constant(colidx as f32);
+    let eaddr = d.compute(Op::Add, eidx, cbase);
+    let eaddr_m = d.compute(Op::Mul, eaddr, valid);
+    let u = d.load_indirect(eaddr_m);
+    // Walk 2: the neighbor's frontier flag — address chained off walk 1.
+    let fbase = d.constant(front_in as f32);
+    let faddr = d.compute(Op::Add, u, fbase);
+    let faddr_m = d.compute(Op::Mul, faddr, valid);
+    let fu = d.load_indirect(faddr_m);
+    // Row-wise OR of (valid ∧ neighbor-on-frontier).
+    let contrib = d.compute(Op::Mul, fu, valid);
+    let any = d.accum(Op::Max, contrib, 0.0, deg);
+    // Join iff still unreached; blend is exact for {0,1} masks.
+    let dv = d.load_affine(dist_in, vec![1, 0]);
+    let inf = d.constant(INF_DIST);
+    let unvisited = d.compute(Op::Eq, dv, inf);
+    let newf = d.compute(Op::Mul, any, unvisited);
+    let one = d.constant(1.0);
+    let keep = d.compute(Op::Sub, one, newf);
+    let kept = d.compute(Op::Mul, dv, keep);
+    let lvl = d.constant((level + 1) as f32);
+    let taken = d.compute(Op::Mul, lvl, newf);
+    let nd = d.compute(Op::Add, kept, taken);
+    d.store_affine(nd, dist_out, vec![1, 0], deg);
+    d.store_affine(newf, front_out, vec![1, 0], deg);
+    d
+}
+
+/// Seed a deterministic variable-degree CSR graph plus the BFS state into
+/// `mem`: vertex 0 and every 7th-ish vertex get **zero** in-edges (the
+/// empty-row / all-predicated-off corner), the rest draw a degree from
+/// `1..=deg` with the first slot chained to the previous non-empty vertex
+/// (a "spine", so every seed has a guaranteed multi-level BFS tree — no
+/// flaky fixed-seed tests) and the remaining slots uniform over `0..n`.
+/// Neighbor ids are exact f32 integers; vertex 0 starts at distance 0 on
+/// the initial frontier, everything else at [`INF_DIST`].
+pub fn init_image(n: u32, deg: u32, layout: &Layout, seed: u64, mem_words: usize) -> Vec<f32> {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut mem = vec![0.0f32; mem_words.max(layout.total_words() as usize)];
+    let rowptr = layout.base("rowptr") as usize;
+    let colidx = layout.base("colidx") as usize;
+    let mut edges = 0usize;
+    let mut last_spine = 0u32;
+    mem[rowptr] = 0.0;
+    for v in 0..n as usize {
+        let degree = if v == 0 || v % 7 == 3 {
+            0
+        } else {
+            1 + rng.below(deg as u64) as usize
+        };
+        for slot in 0..degree {
+            let neighbor =
+                if slot == 0 { last_spine } else { rng.below(n as u64) as u32 };
+            mem[colidx + edges] = neighbor as f32;
+            edges += 1;
+        }
+        if degree > 0 {
+            last_spine = v as u32;
+        }
+        mem[rowptr + v + 1] = edges as f32;
+    }
+    let da = layout.base("dist_a") as usize;
+    let fa = layout.base("front_a") as usize;
+    for v in 0..n as usize {
+        mem[da + v] = if v == 0 { 0.0 } else { INF_DIST };
+        mem[fa + v] = if v == 0 { 1.0 } else { 0.0 };
+    }
+    mem
+}
+
+/// Scalar golden model: level-synchronous pull BFS with the same level
+/// cap, sentinel and f32 semantics as the DFG phases. Returns the final
+/// distance array.
+pub fn reference_bfs(n: u32, layout: &Layout, mem: &[f32], levels: u32) -> Vec<f32> {
+    let rowptr = layout.base("rowptr") as usize;
+    let colidx = layout.base("colidx") as usize;
+    let mut dist: Vec<f32> =
+        (0..n as usize).map(|v| if v == 0 { 0.0 } else { INF_DIST }).collect();
+    let mut front: Vec<bool> = (0..n as usize).map(|v| v == 0).collect();
+    for level in 0..levels {
+        let mut nd = dist.clone();
+        let mut nf = vec![false; n as usize];
+        for v in 0..n as usize {
+            let lo = mem[rowptr + v] as usize;
+            let hi = mem[rowptr + v + 1] as usize;
+            let any = (lo..hi).any(|e| front[mem[colidx + e] as usize]);
+            if any && dist[v] == INF_DIST {
+                nd[v] = (level + 1) as f32;
+                nf[v] = true;
+            }
+        }
+        dist = nd;
+        front = nf;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::dfg::{interpret, Access, NodeKind};
+
+    fn run_interpreter(n: u32, deg: u32, levels: u32, seed: u64) -> (Vec<f32>, Layout, Vec<f32>) {
+        let (phases, layout) = bfs(n, deg, levels);
+        let mut mem = init_image(n, deg, &layout, seed, layout.total_words() as usize);
+        let golden_input = mem.clone();
+        for p in &phases {
+            p.validate().unwrap();
+            interpret(p, &mut mem).unwrap();
+        }
+        (mem, layout, golden_input)
+    }
+
+    /// DFG phases equal the scalar golden model exactly, across seeds
+    /// (variable-degree graphs, empty rows included).
+    #[test]
+    fn bfs_matches_scalar_reference() {
+        for seed in [1u64, 7, 42, 0xBF5] {
+            let (n, deg, levels) = (24u32, 3u32, 4u32);
+            let (mem, layout, input) = run_interpreter(n, deg, levels, seed);
+            let want = reference_bfs(n, &layout, &input, levels);
+            let got = layout.read(&mem, dist_region(levels));
+            assert_eq!(got.len(), want.len());
+            for v in 0..n as usize {
+                assert_eq!(
+                    got[v].to_bits(),
+                    want[v].to_bits(),
+                    "seed {seed}: dist[{v}] {} vs {}",
+                    got[v],
+                    want[v]
+                );
+            }
+            // Some vertices reached, and (almost surely on these seeds)
+            // some not — the predication must leave them at the sentinel.
+            assert_eq!(got[0], 0.0, "source distance");
+            assert!(got.iter().any(|&x| x >= 1.0 && x < INF_DIST), "seed {seed}: nothing reached");
+        }
+    }
+
+    /// The walk is genuinely two-phase indirect: two chained
+    /// `Access::Indirect` loads per level, the second addressed off the
+    /// first's value.
+    #[test]
+    fn bfs_gather_is_chained_indirect() {
+        let (phases, _) = bfs(8, 2, 1);
+        let d = &phases[0];
+        let indirect: Vec<usize> = d
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, node)| match node.kind {
+                NodeKind::Load(Access::Indirect { .. }) => Some(i),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(indirect.len(), 2, "colidx gather + frontier gather");
+        // The frontier gather's address chain must pass through the colidx
+        // gather (walk 2 consumes walk 1's value).
+        let mut reachable = vec![false; d.nodes.len()];
+        reachable[indirect[0]] = true;
+        for (i, node) in d.nodes.iter().enumerate() {
+            if node.inputs.iter().any(|&s| reachable[s]) {
+                reachable[i] = true;
+            }
+        }
+        assert!(reachable[indirect[1]], "second walk is chained off the first");
+    }
+
+    /// Degrees really vary (that is the point of the workload), and the
+    /// row-pointer walk stays in range: monotone rowptr, ids in 0..n.
+    #[test]
+    fn bfs_image_is_well_formed_csr() {
+        let (n, deg) = (32u32, 4u32);
+        let (_, layout) = bfs(n, deg, 2);
+        let mem = init_image(n, deg, &layout, 9, layout.total_words() as usize);
+        let rp = layout.read(&mem, "rowptr");
+        let mut degrees = std::collections::BTreeSet::new();
+        for v in 0..n as usize {
+            assert!(rp[v] <= rp[v + 1], "rowptr monotone at {v}");
+            let dv = (rp[v + 1] - rp[v]) as u32;
+            assert!(dv <= deg, "degree {dv} over bound at {v}");
+            degrees.insert(dv);
+        }
+        assert!(degrees.len() > 1, "degrees must vary: {degrees:?}");
+        assert!(rp[n as usize] <= (n * deg) as f32, "edges fit the colidx region");
+        let ci = layout.read(&mem, "colidx");
+        for e in 0..rp[n as usize] as usize {
+            assert_eq!(ci[e], ci[e].trunc(), "neighbor id is an exact integer");
+            assert!((0.0..n as f32).contains(&ci[e]), "neighbor id in range");
+        }
+    }
+
+    /// A one-vertex graph (no edges at all) runs every phase and leaves
+    /// the source at 0 — the all-predicated-off corner.
+    #[test]
+    fn bfs_degenerate_single_vertex() {
+        let (mem, layout, _) = run_interpreter(1, 1, 2, 3);
+        assert_eq!(layout.read(&mem, dist_region(2)), &[0.0]);
+    }
+
+    /// Unreached vertices keep the finite sentinel — and the sentinel is
+    /// finite, so suite aggregation (geomean over times) never sees NaN
+    /// from this kernel.
+    #[test]
+    fn bfs_levels_cap_expansion() {
+        // levels = 1: only direct in-neighbors of the source's frontier
+        // can be reached; everything else must still be INF_DIST.
+        let (mem, layout, input) = run_interpreter(24, 3, 1, 42);
+        let want = reference_bfs(24, &layout, &input, 1);
+        let got = layout.read(&mem, dist_region(1));
+        for v in 0..24 {
+            assert_eq!(got[v].to_bits(), want[v].to_bits(), "dist[{v}]");
+            assert!(got[v].is_finite());
+            assert!(got[v] == 0.0 || got[v] == 1.0 || got[v] == INF_DIST);
+        }
+    }
+}

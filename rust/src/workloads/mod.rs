@@ -1,7 +1,9 @@
 //! Workload library: the paper's "applications and algorithm tasks from
 //! three aspects" as WindMill DFGs.
 //!
-//! * [`linalg`] — dense linear algebra: SAXPY, dot, GEMM.
+//! * [`linalg`] — dense linear algebra: SAXPY, dot, GEMM, padded-CSR SpMV.
+//! * [`graph`] — frontier-based BFS over variable-degree CSR (the
+//!   chained-indirect, data-dependent-trip-count workload).
 //! * [`signal`] — signal processing: FIR filter, 3×3 convolution.
 //! * [`rl`] — the reinforcement-learning training step (REINFORCE over a
 //!   2-layer tanh policy), the paper's headline workload, built to match
@@ -11,6 +13,7 @@
 //! the simulator, the CPU baseline and the PJRT golden reference all
 //! address the same words.
 
+pub mod graph;
 pub mod linalg;
 pub mod rl;
 pub mod signal;

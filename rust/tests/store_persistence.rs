@@ -10,7 +10,7 @@ use std::sync::Arc;
 use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
 use windmill::coordinator::{
-    run_job_cached, ArtifactCache, JobSpec, SweepEngine, SweepReport, Workload,
+    run_job_cached, ArtifactCache, JobSpec, SweepEngine, SweepReport, Workload, WorkloadSuite,
 };
 use windmill::store::codec::{
     decode_mapping, decode_sim, decode_sweep_partial, encode_mapping, encode_sim,
@@ -113,17 +113,14 @@ fn codec_roundtrips_partials_with_hashes_above_2_53() {
     for round in 0..16 {
         let engine = SweepEngine::new(1);
         let grid = ParamGrid::new(presets::standard()).pea_edges(&[4]);
-        let mut partial = SweepSession::run_shard(
-            &engine,
-            &grid,
-            &Workload::Saxpy { n: 32 },
-            rng.next_u64(),
-            0,
-            1,
-        )
-        .unwrap();
+        let suite =
+            WorkloadSuite::new(vec![Workload::Saxpy { n: 32 }, Workload::Dot { n: 32 }])
+                .unwrap();
+        let mut partial =
+            SweepSession::run_shard(&engine, &grid, &suite, rng.next_u64(), 0, 1).unwrap();
         // Force the hash ranges JSON would corrupt.
         partial.grid_hash = rng.next_u64() | (1 << 63);
+        partial.suite_hash = rng.next_u64() | (1 << 63);
         for p in &mut partial.report.points {
             p.arch_hash = (1u64 << 53) + 1 + rng.next_u64() % (1u64 << 20);
             p.wm_time_ns = f64::from_bits(0x7FEF_FFFF_FFFF_FFFF); // f64::MAX
@@ -131,15 +128,54 @@ fn codec_roundtrips_partials_with_hashes_above_2_53() {
         let bytes = encode_sweep_partial(&partial);
         let back: SweepPartial = decode_sweep_partial(&bytes).unwrap();
         assert_eq!(back.grid_hash, partial.grid_hash, "round {round}");
+        assert_eq!(back.suite_hash, partial.suite_hash, "suite fingerprint verbatim");
+        assert_eq!(back.suite, partial.suite);
         for (a, b) in back.report.points.iter().zip(partial.report.points.iter()) {
             assert_eq!(a.arch_hash, b.arch_hash, "hash above 2^53 must be verbatim");
             assert!((1u64 << 53) < a.arch_hash);
             assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
             assert_eq!(a.label, b.label);
+            // Suite columns survive with their bit patterns.
+            assert_eq!(a.per_workload.len(), 2);
+            for (x, y) in a.per_workload.iter().zip(b.per_workload.iter()) {
+                assert_eq!(x.workload, y.workload);
+                assert_eq!(x.cycles, y.cycles);
+                assert_eq!(x.wm_time_ns.to_bits(), y.wm_time_ns.to_bits());
+            }
         }
         assert_eq!(back.report.frontier, partial.report.frontier);
+        assert_eq!(back.report.rejected_nonfinite, partial.report.rejected_nonfinite);
         assert_eq!(encode_sweep_partial(&back), bytes);
     }
+}
+
+/// A partial written by an older codec version must be *skipped and
+/// counted* by `load_partials` — never fatal, never silently merged. (We
+/// forge a v1 header with a valid digest: the version check itself has to
+/// reject it, not the checksum.)
+#[test]
+fn old_version_partials_are_skipped_and_counted() {
+    let tmp = TempDir::new("stale-partial");
+    let engine = SweepEngine::new(1);
+    let grid = ParamGrid::new(presets::standard()).pea_edges(&[4]);
+    let suite = WorkloadSuite::single(Workload::Saxpy { n: 32 });
+    let p = SweepSession::run_shard(&engine, &grid, &suite, 42, 0, 1).unwrap();
+    let path = SweepSession::save_partial(tmp.path(), &p).unwrap();
+
+    // Forge a stale-version sibling: patch VERSION (bytes 4..6) to 1 and
+    // recompute the trailing FNV digest so only the version check trips.
+    let mut stale = std::fs::read(&path).unwrap();
+    stale[4..6].copy_from_slice(&1u16.to_le_bytes());
+    let n = stale.len();
+    let digest = windmill::util::hash::fnv1a(&stale[..n - 8]);
+    stale[n - 8..].copy_from_slice(&digest.to_le_bytes());
+    std::fs::write(path.with_file_name("stale-v1.bin"), &stale).unwrap();
+
+    let (partials, skipped) = SweepSession::load_partials(tmp.path()).unwrap();
+    assert_eq!(partials.len(), 1, "the v2 partial loads");
+    assert_eq!(skipped, 1, "the v1 partial is counted, not fatal");
+    let merged = SweepSession::merge(partials).unwrap();
+    assert_eq!(merged.points.len(), 1);
 }
 
 // ---------------------------------------------------------------------------
@@ -331,9 +367,9 @@ fn cli_expect_warm_gates_on_sim_hit_rate() {
 /// indices — for every shard count that divides the grid or doesn't.
 #[test]
 fn shard_merge_is_bit_identical_to_unsharded_sweep() {
-    let wl = Workload::Saxpy { n: 64 };
+    let suite = WorkloadSuite::single(Workload::Saxpy { n: 64 });
     let grid = small_grid();
-    let full = SweepEngine::new(2).sweep_seeded(&grid, &wl, 42);
+    let full = SweepEngine::new(2).sweep_suite(&grid, &suite, 42);
     assert!(!full.points.is_empty());
 
     for shards in [1usize, 2, 3, full.points.len()] {
@@ -341,7 +377,7 @@ fn shard_merge_is_bit_identical_to_unsharded_sweep() {
             .map(|i| {
                 // Each shard in its own engine = its own process image.
                 let engine = SweepEngine::new(2);
-                SweepSession::run_shard(&engine, &grid, &wl, 42, i, shards).unwrap()
+                SweepSession::run_shard(&engine, &grid, &suite, 42, i, shards).unwrap()
             })
             .collect();
         let merged = SweepSession::merge(partials).unwrap();
@@ -357,6 +393,62 @@ fn shard_merge_is_bit_identical_to_unsharded_sweep() {
         assert_eq!(merged.frontier, full.frontier, "frontier indices (shards={shards})");
         assert_eq!(merged.failures, full.failures);
     }
+}
+
+/// The acceptance bar for suite sessions: a 2-shard *suite* sweep (three
+/// aspects: linalg gemm, non-affine spmv, multi-phase rl-step) over a
+/// context-depth grid merges `to_bits`-identically to the unsharded suite
+/// sweep — per-workload columns included — and the whole suite places and
+/// routes each kernel exactly once per seed across all points.
+#[test]
+fn suite_shard_merge_is_bit_identical_and_reuses_place_route() {
+    let suite = WorkloadSuite::new(vec![
+        Workload::Gemm { m: 8, n: 8, k: 8 },
+        Workload::Spmv { rows: 16, cols: 24, k: 4 },
+        Workload::RlStep,
+    ])
+    .unwrap();
+    // Context-depth-only grid: the fabric sub-hash is constant, so
+    // place/route must be computed once per (kernel, seed), suite-wide.
+    let grid = ParamGrid::new(presets::standard()).context_depths(&[32, 64]);
+    let full_engine = SweepEngine::new(1); // sequential ⇒ exact counts
+    let full = full_engine.sweep_suite(&grid, &suite, 42);
+    assert!(full.failures.is_empty(), "{:?}", full.failures);
+    assert_eq!(full.points.len(), 2);
+
+    // gemm (1 dfg) + spmv (1 dfg) + rl-step (8 phases) = 10 kernels.
+    let n_kernels = suite.workloads().iter().map(|w| w.build().0.len() as u64).sum::<u64>();
+    assert_eq!(n_kernels, 10);
+    for pass in ["place", "route"] {
+        let c = full.cache.pass_counts_full(pass);
+        assert_eq!(c.miss, n_kernels, "{pass}: once per kernel, suite-wide: {:?}", full.cache);
+        assert_eq!(c.mem, n_kernels, "{pass}: second depth reuses: {:?}", full.cache);
+    }
+    // One elaboration per grid point, shared by all three members.
+    assert_eq!(full.cache.pass_counts_full("elaborate").miss, 2, "{:?}", full.cache);
+
+    // 2-shard merge reproduces the report bit-for-bit.
+    let partials: Vec<_> = (0..2)
+        .map(|i| {
+            let engine = SweepEngine::new(1);
+            SweepSession::run_shard(&engine, &grid, &suite, 42, i, 2).unwrap()
+        })
+        .collect();
+    let merged = SweepSession::merge(partials).unwrap();
+    assert_eq!(merged.points.len(), full.points.len());
+    for (a, b) in merged.points.iter().zip(full.points.iter()) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+        assert_eq!(a.per_workload.len(), 3);
+        for (x, y) in a.per_workload.iter().zip(b.per_workload.iter()) {
+            assert_eq!(x.workload, y.workload);
+            assert_eq!(x.cycles, y.cycles);
+            assert_eq!(x.wm_time_ns.to_bits(), y.wm_time_ns.to_bits());
+            assert_eq!(x.speedup_vs_gpu.to_bits(), y.speedup_vs_gpu.to_bits());
+        }
+    }
+    assert_eq!(merged.frontier, full.frontier);
+    assert_eq!(merged.rejected_nonfinite, full.rejected_nonfinite);
 }
 
 /// End-to-end sharding through the CLI: two shard processes + a merge
