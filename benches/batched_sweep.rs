@@ -1,0 +1,157 @@
+//! Batched-sweep bench (PR 6): the lockstep simulation arena on a cold
+//! same-DFG grid, against per-point dispatch.
+//!
+//! A design-space grid that varies architecture parameters but not the
+//! kernel runs the *same* DFG at every point; the [`windmill::sim::SimArena`]
+//! decodes that DFG's skeleton (validation, CSR adjacency, node-state
+//! template) once per launch and steps the points as independent lanes.
+//! Three claims, all asserted:
+//!
+//! 1. The batched cold sweep is **bit-identical** to per-point dispatch —
+//!    every point, every column, plus the skipped-cycle totals.
+//! 2. Batching actually batches: a 16-point grid at `--batch 8` performs
+//!    exactly 2 arena launches at 8.0 lanes/launch (the report's occupancy
+//!    counters), where per-point dispatch enters the engine 16 times.
+//! 3. On equal work — the same 16 lanes — one arena launch beats 16 solo
+//!    engine runs (min over repetitions; the margin is the 15 redundant
+//!    skeleton decodes).
+//!
+//! `cargo bench --bench batched_sweep`
+
+mod bench_util;
+
+use bench_util::{bench, fmt_ns, Table};
+use windmill::arch::isa::Op;
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::compiler::{compile, Dfg};
+use windmill::coordinator::{SweepEngine, SweepReport, Workload};
+use windmill::plugins;
+use windmill::sim::{simulate_batch, simulate_counting, LaneSpec};
+
+/// 16 context depths at or above the standard 32: every point is mappable,
+/// every point runs the identical kernel DFG, and 16 divides evenly into
+/// two batch-8 chunks.
+fn ctx_grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).context_depths(&[
+        32, 40, 48, 56, 64, 72, 80, 88, 96, 104, 112, 120, 128, 160, 192, 256,
+    ])
+}
+
+fn point_key(r: &SweepReport) -> Vec<(String, u64, u64, u64)> {
+    r.points
+        .iter()
+        .map(|p| (p.label.clone(), p.cycles, p.wm_time_ns.to_bits(), p.area_mm2.to_bits()))
+        .collect()
+}
+
+fn main() {
+    let wl = Workload::Fir { n: 128, taps: 12 };
+
+    // ---- cold sweep: batched arena dispatch vs per-point dispatch ----------
+    // Single worker on both sides so the comparison is work done, not
+    // scheduling luck, and the launch/occupancy counters are exact.
+    let batched = SweepEngine::new(1).with_batch(8).sweep(&ctx_grid(), &wl);
+    assert!(batched.failures.is_empty(), "{:?}", batched.failures);
+    let unbatched = SweepEngine::new(1).with_batch(1).sweep(&ctx_grid(), &wl);
+    assert!(unbatched.failures.is_empty(), "{:?}", unbatched.failures);
+
+    // (1) Bit-identical reports.
+    assert_eq!(point_key(&batched), point_key(&unbatched), "batching changed a result");
+    assert_eq!(batched.frontier, unbatched.frontier);
+    assert_eq!(
+        batched.timing.sim_skipped_cycles, unbatched.timing.sim_skipped_cycles,
+        "per-lane event skip must be dispatch-invariant"
+    );
+
+    // (2) The occupancy counters: 16 cold points in two full 8-lane
+    // launches; per-point dispatch never launches an arena.
+    assert_eq!(batched.timing.batch_launches, 2, "{:?}", batched.timing);
+    assert_eq!(batched.timing.batch_lanes, 16, "{:?}", batched.timing);
+    assert_eq!(unbatched.timing.batch_launches, 0, "{:?}", unbatched.timing);
+    let occupancy =
+        batched.timing.batch_lanes as f64 / batched.timing.batch_launches as f64;
+
+    let mut t = Table::new(
+        "cold 16-point same-DFG sweep: arena dispatch vs per-point",
+        &["path", "engine entries", "lanes/launch", "sim wall", "sweep wall"],
+    );
+    t.row(&[
+        "batched (8)".into(),
+        batched.timing.batch_launches.to_string(),
+        format!("{occupancy:.1}"),
+        fmt_ns(batched.timing.simulate_ns as f64),
+        fmt_ns(batched.wall_ns as f64),
+    ]);
+    t.row(&[
+        "per-point".into(),
+        "16".into(),
+        "1.0".into(),
+        fmt_ns(unbatched.timing.simulate_ns as f64),
+        fmt_ns(unbatched.wall_ns as f64),
+    ]);
+    t.print();
+    println!("batched summary: {}", batched.summary());
+
+    // ---- equal-work microbench: one launch vs 16 solo engine runs ----------
+    // A decode-heavy, short-running kernel so the shared skeleton is a
+    // visible fraction of each run; 16 lanes differ by memory image.
+    let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+    let words = machine.smem.as_ref().unwrap().words();
+    let mut d = Dfg::new("chain", vec![2]);
+    let mut v = d.load_affine(0, vec![1]);
+    for i in 0..8 {
+        v = d.unary(if i % 2 == 0 { Op::Abs } else { Op::Neg }, v);
+    }
+    d.store_affine(v, 64, vec![1], 1);
+    let mapping = compile(d, &machine, 42).unwrap();
+    let images: Vec<Vec<f32>> = (0..16)
+        .map(|l| {
+            let mut img = vec![0.0f32; words];
+            for (i, w) in img.iter_mut().take(32).enumerate() {
+                *w = (l * 31 + i) as f32 * 0.125 - 2.0;
+            }
+            img
+        })
+        .collect();
+    let lanes: Vec<LaneSpec> = images
+        .iter()
+        .map(|img| LaneSpec { mapping: &mapping, machine: &machine, image: img })
+        .collect();
+
+    // Equal-work identity first (also pinned in tests/engine_equivalence.rs).
+    let arena_out = simulate_batch(&lanes, 1_000_000);
+    for (l, out) in arena_out.iter().enumerate() {
+        let (r, skipped) = out.as_ref().unwrap();
+        let (solo, solo_skipped) =
+            simulate_counting(&mapping, &machine, &images[l], 1_000_000).unwrap();
+        assert_eq!(r.cycles, solo.cycles, "lane {l}");
+        assert_eq!(*skipped, solo_skipped, "lane {l}");
+        for (i, (a, b)) in r.mem.iter().zip(solo.mem.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "lane {l} mem[{i}]");
+        }
+    }
+
+    let mut arena = bench(5, 40, || simulate_batch(&lanes, 1_000_000));
+    let mut solo = bench(5, 40, || {
+        lanes
+            .iter()
+            .map(|l| simulate_counting(l.mapping, l.machine, l.image, 1_000_000))
+            .collect::<Vec<_>>()
+    });
+    let speedup = solo.min() / arena.min();
+    println!(
+        "16 lanes, equal work: arena {} vs 16 solo runs {} ({speedup:.2}x, min of 40)",
+        fmt_ns(arena.min()),
+        fmt_ns(solo.min()),
+    );
+    assert!(
+        arena.min() < solo.min(),
+        "one arena launch must beat 16 solo engine runs: {} vs {} ns",
+        arena.min(),
+        solo.min()
+    );
+    println!(
+        "batched-sweep acceptance: bit-identical at {occupancy:.1} lanes/launch, arena beats solo"
+    );
+}

@@ -30,7 +30,7 @@ use crate::sim::machine::MachineDesc;
 
 pub use config_gen::ConfigImage;
 pub use dfg::{Access, Dfg, Node, NodeId, NodeKind};
-pub use place::Coord;
+pub use place::{placement_signature, Coord};
 pub use route::Routes;
 pub use schedule::Schedule;
 
@@ -58,6 +58,12 @@ pub enum CompilePass {
     /// Cycle-accurate simulation of one mapped kernel against one memory
     /// image (the sweep-level `SimResult` cache; keys carry the image hash).
     Simulate,
+    /// Seed canonicalization: the mapping from a raw mapper seed to the
+    /// canonical seed of its placement-quality equivalence class
+    /// ([`place::placement_signature`]). Place/Route/Schedule artifacts are
+    /// keyed on the canonical seed, so seed-axis sweep points whose
+    /// annealed placements coincide share one compile instead of one each.
+    SeedClass,
 }
 
 impl CompilePass {
@@ -70,6 +76,7 @@ impl CompilePass {
             CompilePass::Schedule => "schedule",
             CompilePass::ConfigGen => "config_gen",
             CompilePass::Simulate => "simulate",
+            CompilePass::SeedClass => "seed_class",
         }
     }
 }
@@ -131,6 +138,35 @@ impl CompileKey {
     /// `(arch, dfg, seed)` plus the stable hash of the input memory image.
     pub fn simulate(arch: u64, dfg_hash: u64, seed: u64, image: u64) -> Self {
         CompileKey { arch, dfg: dfg_hash, seed, image, pass: CompilePass::Simulate }
+    }
+
+    /// Key of one seed→canonical-seed record: which equivalence class the
+    /// raw `seed` maps to for this `(fabric, kernel)` pair. Fabric sub-hash
+    /// for the same reason as [`CompileKey::place`]: the annealed placement
+    /// reads only the fabric.
+    pub fn seed_class(topology_hash: u64, dfg_hash: u64, seed: u64) -> Self {
+        CompileKey {
+            arch: topology_hash,
+            dfg: dfg_hash,
+            seed,
+            image: 0,
+            pass: CompilePass::SeedClass,
+        }
+    }
+
+    /// Key of one class-representative record: the reverse index from a
+    /// [`place::placement_signature`] to the first (canonical) seed that
+    /// produced it. The signature travels in the `image` field (nonzero by
+    /// construction) and `seed` stays 0, so representative records can
+    /// never collide with the per-seed [`CompileKey::seed_class`] records.
+    pub fn seed_rep(topology_hash: u64, dfg_hash: u64, signature: u64) -> Self {
+        CompileKey {
+            arch: topology_hash,
+            dfg: dfg_hash,
+            seed: 0,
+            image: signature,
+            pass: CompilePass::SeedClass,
+        }
     }
 }
 

@@ -61,6 +61,28 @@ pub fn place_seeded(dfg: &Dfg, m: &MachineDesc, seed: u64) -> Result<Vec<Coord>,
     place(dfg, m, &mut Rng::new(seed))
 }
 
+/// Placement-quality equivalence signature: a stable FNV-1a digest of the
+/// node→PE assignment, forced nonzero so it can ride in a `CompileKey`
+/// field where 0 means "unused". Two seeds whose annealed placements are
+/// coordinate-identical share the signature — and therefore (placement
+/// being the only seed-dependent compile stage) identical Place/Route/
+/// Schedule artifacts — so the sweep cache canonicalizes such seeds onto
+/// one representative instead of recompiling per raw seed
+/// ([`crate::coordinator::ArtifactCache`]).
+pub fn placement_signature(place: &[Coord]) -> u64 {
+    let mut h = crate::util::StableHasher::new();
+    h.usize(place.len());
+    for &(r, c) in place {
+        h.usize(r).usize(c);
+    }
+    let sig = h.finish();
+    if sig == 0 {
+        1
+    } else {
+        sig
+    }
+}
+
 /// Greedy + annealing placement. Deterministic for a given seed.
 pub fn place(dfg: &Dfg, m: &MachineDesc, rng: &mut Rng) -> Result<Vec<Coord>, DiagError> {
     let n = dfg.nodes.len();
@@ -263,6 +285,20 @@ mod tests {
         let a = place(&d, &m, &mut Rng::new(7)).unwrap();
         let b = place(&d, &m, &mut Rng::new(7)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn placement_signature_is_stable_and_coordinate_sensitive() {
+        let m = machine();
+        let d = dot8();
+        let a = place(&d, &m, &mut Rng::new(7)).unwrap();
+        let b = place(&d, &m, &mut Rng::new(7)).unwrap();
+        assert_eq!(placement_signature(&a), placement_signature(&b));
+        assert_ne!(placement_signature(&a), 0, "0 is reserved for 'unused'");
+        let mut moved = a.clone();
+        let last = moved.len() - 1;
+        moved.swap(0, last);
+        assert_ne!(placement_signature(&a), placement_signature(&moved));
     }
 
     #[test]

@@ -98,6 +98,11 @@ enum Entry {
     Route(Arc<Routes>),
     Sched(Arc<Schedule>),
     Sim(Arc<SimResult>),
+    /// Seed-canonicalization records (pass `SeedClass`): under a
+    /// [`CompileKey::seed_class`] key, the canonical seed a raw seed maps
+    /// to; under a [`CompileKey::seed_rep`] key, the first seed that
+    /// produced the placement signature in the key's `image` field.
+    Seed(u64),
 }
 
 /// Where a lookup was answered.
@@ -274,6 +279,12 @@ pub struct ArtifactCache {
     /// `compile_timed` miss path (benchmark baseline and bit-identity
     /// tests).
     stage_memo_disabled: bool,
+    /// Inverted for the same reason: seed canonicalization (see
+    /// [`ArtifactCache::canonical_seed`]) defaults **on**;
+    /// `with_seed_canon(false)` keys the staged tiers on raw seeds — the
+    /// pre-canonicalization behaviour, kept as the comparison baseline for
+    /// the seed-sweep reuse tests.
+    seed_canon_disabled: bool,
 }
 
 impl ArtifactCache {
@@ -307,6 +318,19 @@ impl ArtifactCache {
 
     pub fn stage_memo(&self) -> bool {
         !self.stage_memo_disabled
+    }
+
+    /// Toggle seed canonicalization (default **on**). When off, Place/
+    /// Route/Schedule tiers key on the raw mapper seed, so a seed-axis
+    /// sweep recompiles every seed even when the annealed placements
+    /// coincide.
+    pub fn with_seed_canon(mut self, enabled: bool) -> Self {
+        self.seed_canon_disabled = !enabled;
+        self
+    }
+
+    pub fn seed_canon(&self) -> bool {
+        !self.seed_canon_disabled
     }
 
     pub fn store(&self) -> Option<&Arc<DiskStore>> {
@@ -570,6 +594,83 @@ impl ArtifactCache {
         Ok(get(entry).expect("stage key holds mismatched entry kind"))
     }
 
+    /// Canonicalize a mapper seed into its placement-quality equivalence
+    /// class for `(fabric, kernel)`: seeds whose annealed placements are
+    /// coordinate-identical ([`place::placement_signature`]) share one
+    /// canonical seed — the first seed observed for the class — so the
+    /// seed-keyed stage tiers collapse onto one entry per class.
+    ///
+    /// Three-level like every tier: memory → disk (promote) → compute. A
+    /// miss anneals the placement once (the probe), hashes it, and consults
+    /// the class-representative index ([`CompileKey::seed_rep`]); an
+    /// unknown signature registers this seed as the class representative.
+    /// The probe placement is returned so the place stage can reuse it as
+    /// its compute result instead of annealing twice — sound even when the
+    /// canonical seed differs, because equal signatures mean
+    /// coordinate-identical placements (64-bit FNV collisions are accepted
+    /// as negligible against the annealer's state space).
+    ///
+    /// Only the per-seed lookup is recorded in [`CacheStats`] (pass
+    /// `seed_class`); the signature-keyed representative traffic is
+    /// internal bookkeeping, not avoided recompute, and counting it would
+    /// inflate sweep hit rates.
+    fn canonical_seed(
+        &self,
+        topo_hash: u64,
+        dfg_hash: u64,
+        dfg: &Dfg,
+        machine: &MachineDesc,
+        seed: u64,
+    ) -> Result<(u64, Option<Vec<Coord>>), DiagError> {
+        let key = CompileKey::seed_class(topo_hash, dfg_hash, seed);
+        if let Some(Entry::Seed(canon)) = self.inner.lock().unwrap().entries.get(&key) {
+            let canon = *canon;
+            self.record(CompilePass::SeedClass, Tier::Mem);
+            return Ok((canon, None));
+        }
+        if let Some(store) = &self.store {
+            if let Some(canon) = store.load_seed_class(&key) {
+                self.record(CompilePass::SeedClass, Tier::Disk);
+                self.inner.lock().unwrap().entries.entry(key).or_insert(Entry::Seed(canon));
+                return Ok((canon, None));
+            }
+        }
+        self.record(CompilePass::SeedClass, Tier::Miss);
+        // Probe: anneal this seed's placement once, outside the lock.
+        let probe = place::place_seeded(dfg, machine, seed)?;
+        let sig = place::placement_signature(&probe);
+        let rep_key = CompileKey::seed_rep(topo_hash, dfg_hash, sig);
+        // Silent (unrecorded) representative lookup: memory, then disk.
+        let mut canon = None;
+        if let Some(Entry::Seed(c)) = self.inner.lock().unwrap().entries.get(&rep_key) {
+            canon = Some(*c);
+        }
+        if canon.is_none() {
+            if let Some(store) = &self.store {
+                if let Some(c) = store.load_seed_class(&rep_key) {
+                    self.inner.lock().unwrap().entries.entry(rep_key).or_insert(Entry::Seed(c));
+                    canon = Some(c);
+                }
+            }
+        }
+        let canon = match canon {
+            Some(c) => c,
+            None => {
+                // First seed of its class: it *is* the canonical seed.
+                if let Some(store) = &self.store {
+                    store.store_seed_class(&rep_key, seed);
+                }
+                self.inner.lock().unwrap().entries.entry(rep_key).or_insert(Entry::Seed(seed));
+                seed
+            }
+        };
+        if let Some(store) = &self.store {
+            store.store_seed_class(&key, canon);
+        }
+        self.inner.lock().unwrap().entries.entry(key).or_insert(Entry::Seed(canon));
+        Ok((canon, Some(probe)))
+    }
+
     /// Stage-granular compile: place and route answer from tiers keyed by
     /// the fabric sub-hash (`topo_hash`), the schedule from a tier keyed by
     /// the full arch hash; config generation is always recomputed (a cheap
@@ -577,6 +678,12 @@ impl ArtifactCache {
     /// pure function [`compile_timed`] runs, only sourced differently, so
     /// the assembled [`Mapping`] is bit-identical to a monolithic compile —
     /// pinned by `tests/stage_memoization.rs`.
+    ///
+    /// The seed in every stage key is the **canonical** seed of the raw
+    /// seed's placement-equivalence class ([`ArtifactCache::canonical_seed`],
+    /// unless `with_seed_canon(false)`): placement is the only
+    /// seed-dependent stage, so seeds that anneal to the same placement
+    /// share Place/Route/Schedule artifacts instead of recompiling each.
     fn staged_compile(
         &self,
         arch_hash: u64,
@@ -590,7 +697,14 @@ impl ArtifactCache {
         let dfg_hash = dfg.stable_hash();
         let mut ns = StageNanos::default();
 
+        // `ns.place` covers canonicalization + the place stage: the probe
+        // anneal is the real placement cost of a cold seed, wherever it ran.
         let t0 = std::time::Instant::now();
+        let (seed, probe) = if self.seed_canon_disabled {
+            (seed, None)
+        } else {
+            self.canonical_seed(topo_hash, dfg_hash, dfg, machine, seed)?
+        };
         let pk = CompileKey::place(topo_hash, dfg_hash, seed);
         let placed = self.stage_lookup(
             pk,
@@ -601,7 +715,12 @@ impl ArtifactCache {
             Entry::Place,
             |s| s.load_place(&pk),
             |s, v| s.store_place(&pk, v),
-            || place::place_seeded(dfg, machine, seed),
+            || match probe {
+                // The canonical-class probe is coordinate-identical to the
+                // canonical seed's own anneal — reuse it.
+                Some(p) => Ok(p),
+                None => place::place_seeded(dfg, machine, seed),
+            },
         )?;
         ns.place = t0.elapsed().as_nanos() as u64;
 
@@ -690,6 +809,63 @@ impl ArtifactCache {
         self.insert_sim(key, &r);
         Ok((r, false))
     }
+
+    /// Probe the `SimResult` tiers without computing: the batched job
+    /// runner asks this for every lane of a phase, gathers the misses into
+    /// one [`crate::sim::engine::SimArena`], and feeds the computed lanes
+    /// back through [`ArtifactCache::sim_insert_computed`]. Each probe
+    /// records exactly one tier event — the same accounting
+    /// [`ArtifactCache::sim_result`] would produce — so batched and
+    /// unbatched sweeps report identical cache statistics.
+    pub fn sim_probe(
+        &self,
+        arch_hash: u64,
+        dfg_hash: u64,
+        seed: u64,
+        image: &[f32],
+    ) -> Option<Arc<SimResult>> {
+        let key = CompileKey::simulate(arch_hash, dfg_hash, seed, stable_hash_f32(image));
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(Entry::Sim(r)) = inner.entries.get(&key).cloned() {
+                inner.sim_lru.touch(&key);
+                drop(inner);
+                self.record(CompilePass::Simulate, Tier::Mem);
+                return Some(r);
+            }
+        }
+        if let Some(store) = &self.store {
+            if let Some(result) = store.load_sim(&key) {
+                self.record(CompilePass::Simulate, Tier::Disk);
+                let r = Arc::new(result);
+                self.insert_sim(key, &r);
+                return Some(r);
+            }
+        }
+        self.record(CompilePass::Simulate, Tier::Miss);
+        None
+    }
+
+    /// Insert a `SimResult` computed outside the cache (a batched arena
+    /// lane answering a [`ArtifactCache::sim_probe`] miss). Statistically
+    /// silent — the probe already recorded the miss — but otherwise
+    /// identical to the miss path of [`ArtifactCache::sim_result`]:
+    /// write-through to the store, LRU-budgeted memory insert, first
+    /// insert wins.
+    pub fn sim_insert_computed(
+        &self,
+        arch_hash: u64,
+        dfg_hash: u64,
+        seed: u64,
+        image: &[f32],
+        r: &Arc<SimResult>,
+    ) {
+        let key = CompileKey::simulate(arch_hash, dfg_hash, seed, stable_hash_f32(image));
+        if let Some(store) = &self.store {
+            store.store_sim(&key, r);
+        }
+        self.insert_sim(key, r);
+    }
 }
 
 #[cfg(test)]
@@ -743,13 +919,67 @@ mod tests {
         assert_eq!(m1.schedule, direct.schedule);
         assert_eq!(m1.config.total_words(), direct.config.total_words());
 
-        // Different seed misses (and cannot reuse the seed-keyed stages).
+        // Different seed misses the mapping tier. The stage tiers are keyed
+        // on the canonical seed class: seeds whose placements coincide
+        // share one computation, so the expected miss count is the number
+        // of *distinct* placement signatures.
         let (_, _, hit3) = cache.mapping(&params, &d, &e.machine, 8).unwrap();
         assert!(!hit3);
+        let sig = |seed| {
+            place::placement_signature(&place::place_seeded(&d, &e.machine, seed).unwrap())
+        };
+        let distinct = if sig(7) == sig(8) { 1 } else { 2 };
         let s = cache.stats();
-        assert_eq!(s.pass_counts_full("place").miss, 2, "{s:?}");
-        assert_eq!(s.pass_counts_full("route").miss, 2, "{s:?}");
-        assert_eq!(s.pass_counts_full("schedule").miss, 2, "{s:?}");
+        assert_eq!(s.pass_counts_full("place").miss, distinct, "{s:?}");
+        assert_eq!(s.pass_counts_full("route").miss, distinct, "{s:?}");
+        assert_eq!(s.pass_counts_full("schedule").miss, distinct, "{s:?}");
+        assert_eq!(s.pass_counts_full("seed_class").miss, 2, "one class probe per raw seed");
+    }
+
+    /// Seed canonicalization: stage tiers key on the placement-equivalence
+    /// class, mappings stay bit-identical to the raw-seed baseline, and
+    /// the per-pass counters pin exactly one Place/Route/Schedule
+    /// computation per distinct placement signature.
+    #[test]
+    fn seed_canonicalization_collapses_equivalent_seeds() {
+        let canon = ArtifactCache::new();
+        let raw = ArtifactCache::new().with_seed_canon(false);
+        assert!(canon.seed_canon());
+        assert!(!raw.seed_canon());
+        let params = presets::standard();
+        let d = saxpy_dfg();
+        let (e, _) = canon.elaborated(&params).unwrap();
+        let (er, _) = raw.elaborated(&params).unwrap();
+        let seeds: Vec<u64> = (0..8).collect();
+        let distinct = {
+            let mut sigs = std::collections::HashSet::new();
+            for &s in &seeds {
+                sigs.insert(place::placement_signature(
+                    &place::place_seeded(&d, &e.machine, s).unwrap(),
+                ));
+            }
+            sigs.len() as u64
+        };
+        for &s in &seeds {
+            let (a, _, _) = canon.mapping(&params, &d, &e.machine, s).unwrap();
+            let (b, _, _) = raw.mapping(&params, &d, &er.machine, s).unwrap();
+            // Canonicalization must not change one observable bit.
+            assert_eq!(a.place, b.place, "seed {s}");
+            assert_eq!(a.routes.edges, b.routes.edges, "seed {s}");
+            assert_eq!(a.schedule, b.schedule, "seed {s}");
+            assert_eq!(a.config.total_words(), b.config.total_words(), "seed {s}");
+        }
+        let sc = canon.stats();
+        let sr = raw.stats();
+        for pass in ["place", "route", "schedule"] {
+            assert_eq!(sc.pass_counts_full(pass).miss, distinct, "{pass}: {sc:?}");
+            assert_eq!(sr.pass_counts_full(pass).miss, seeds.len() as u64, "{pass}: {sr:?}");
+        }
+        let class = sc.pass_counts_full("seed_class");
+        assert_eq!(class.miss, seeds.len() as u64, "every fresh raw seed probes once");
+        assert_eq!(sr.pass_counts_full("seed_class").lookups(), 0, "canon off: no seed tier");
+        // Collapsed seeds answer place from memory instead of recomputing.
+        assert_eq!(sc.pass_counts_full("place").mem, seeds.len() as u64 - distinct, "{sc:?}");
     }
 
     /// The tentpole property: sweep points that differ only in context

@@ -17,9 +17,9 @@ use crate::compiler::{compile, Mapping};
 use crate::diag::error::DiagError;
 use crate::model::baseline::{CpuModel, GpuModel};
 use crate::plugins;
-use crate::sim::engine::simulate;
+use crate::sim::engine::{simulate_batch, simulate_counting, LaneSpec, SimResult};
 use crate::sim::machine::MachineDesc;
-use crate::sim::task::{run_task, run_task_with, Phase, Task};
+use crate::sim::task::{run_task, run_task_with, Phase, PhaseReq, Task, TaskCursor, TaskResult};
 use crate::util::Rng;
 use crate::util::StableHasher;
 use crate::workloads::{graph, linalg, rl, signal, Layout};
@@ -320,6 +320,16 @@ pub struct JobTiming {
     pub baseline_ns: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Batched-simulation launches ([`run_jobs_cached_batch`] arenas).
+    /// Counted once per arena on the launch's first job, so the sweep
+    /// aggregate is the true launch count; `batch_lanes / batch_launches`
+    /// is the mean arena occupancy.
+    pub batch_launches: u64,
+    /// Lanes summed over those launches.
+    pub batch_lanes: u64,
+    /// Fully-stalled cycles the event-driven engine skipped instead of
+    /// ticking, summed over this job's simulated (non-cached) phases.
+    pub sim_skipped_cycles: u64,
 }
 
 impl JobTiming {
@@ -334,33 +344,56 @@ impl JobTiming {
         self.baseline_ns += other.baseline_ns;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.batch_launches += other.batch_launches;
+        self.batch_lanes += other.batch_lanes;
+        self.sim_skipped_cycles += other.sim_skipped_cycles;
     }
 }
 
-/// Run one job end-to-end. Deterministic for (spec.seed).
-pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
-    run_job_cached(spec, None).map(|(r, _)| r)
+/// Cycle guard per simulated phase (solo and batched paths alike).
+const MAX_PHASE_CYCLES: u64 = 4_000_000;
+
+/// The elaborated machine a prepared job runs on: a shared cache entry or
+/// an owned elaboration (the uncached path).
+enum MachineHolder {
+    Cached(Arc<ElabArtifacts>),
+    Owned(MachineDesc),
 }
 
-/// Run one job, sourcing elaboration/mapper artifacts *and per-phase
-/// simulation results* from `cache` when given. Produces the same
-/// [`JobResult`] as [`run_job`] (the cache only memoizes deterministic
-/// artifacts); the [`JobTiming`] reports where the wall time went and how
-/// often the cache answered. On a fully warm cache the job performs no
-/// elaboration, no compilation and no simulation.
-pub fn run_job_cached(
+impl MachineHolder {
+    fn machine(&self) -> &MachineDesc {
+        match self {
+            MachineHolder::Cached(e) => &e.machine,
+            MachineHolder::Owned(m) => m,
+        }
+    }
+}
+
+/// A job carried through generate → elaborate → compile, ready for its
+/// compute phases: everything [`run_job_cached`] and the batched runner
+/// [`run_jobs_cached_batch`] share before simulation.
+struct PreparedJob {
+    arch_hash: u64,
+    holder: MachineHolder,
+    task: Task,
+    layout: Layout,
+    mem0: Vec<f32>,
+}
+
+/// Generate the workload, elaborate (cache-first), compile every phase
+/// (cache-first) and build the task + seeded input image. Fills the
+/// elaborate/compile slots of `timing`.
+fn prep_job(
     spec: &JobSpec,
     cache: Option<&ArtifactCache>,
-) -> Result<(JobResult, JobTiming), DiagError> {
-    let mut timing = JobTiming::default();
+    timing: &mut JobTiming,
+) -> Result<PreparedJob, DiagError> {
     let (dfgs, layout) = spec.workload.build();
     let params = calibrate_params(spec.params.clone(), &layout);
     let arch_hash = params.stable_hash();
 
     let t0 = Instant::now();
-    let cached_elab: Arc<ElabArtifacts>;
-    let owned_machine: MachineDesc;
-    let machine: &MachineDesc = match cache {
+    let holder = match cache {
         Some(c) => {
             let (elab, hit) = c.elaborated(&params)?;
             if hit {
@@ -368,21 +401,19 @@ pub fn run_job_cached(
             } else {
                 timing.cache_misses += 1;
             }
-            cached_elab = elab;
-            &cached_elab.machine
+            MachineHolder::Cached(elab)
         }
-        None => {
-            owned_machine = plugins::elaborate(params.clone())?.artifact;
-            &owned_machine
-        }
+        None => MachineHolder::Owned(plugins::elaborate(params.clone())?.artifact),
     };
     timing.elaborate_ns = t0.elapsed().as_nanos() as u64;
+    let machine = holder.machine();
     machine.validate()?;
 
     // Compile every phase (cache key: arch hash × DFG hash × seed). Hits
     // alias the cached `Arc<Mapping>` — no deep clone on the warm path —
-    // and mapping-tier misses still reuse stage artifacts (place/route by
-    // fabric sub-hash) from sweep points compiled earlier.
+    // and mapping-tier misses still reuse stage artifacts (place/route
+    // keyed on the fabric sub-hash and the canonical seed class) from
+    // sweep points compiled earlier.
     let t0 = Instant::now();
     let mut mappings: Vec<Arc<Mapping>> = Vec::with_capacity(dfgs.len());
     for d in &dfgs {
@@ -421,37 +452,22 @@ pub fn run_job_cached(
         })
         .collect();
     let task = Task { name: spec.workload.name(), phases };
-
-    let t0 = Instant::now();
     let mem0 = spec.workload.init_image(&layout, spec.seed, machine.smem.as_ref().unwrap().words());
-    let tr = match cache {
-        Some(c) => {
-            // Per-phase SimResult memoization: key = (arch, DFG, seed,
-            // input-image hash). A warm sweep point never re-enters
-            // `simulate()` — each phase's result (including the output
-            // image the next phase chains from) answers from the cache.
-            let seed = spec.seed;
-            let mut sim_hits = 0u64;
-            let mut sim_misses = 0u64;
-            let tr = run_task_with(&task, machine, &mem0, 4_000_000, &mut |m, mc, img, maxc| {
-                let (r, hit) = c.sim_result(arch_hash, m.dfg.stable_hash(), seed, img, || {
-                    simulate(m, mc, img, maxc)
-                })?;
-                if hit {
-                    sim_hits += 1;
-                } else {
-                    sim_misses += 1;
-                }
-                Ok(r)
-            })?;
-            timing.cache_hits += sim_hits;
-            timing.cache_misses += sim_misses;
-            tr
-        }
-        None => run_task(&task, machine, &mem0, 4_000_000)?,
-    };
+    Ok(PreparedJob { arch_hash, holder, task, layout, mem0 })
+}
+
+/// Baselines + result assembly from a completed task run. Fills the
+/// baseline slot of `timing`.
+fn finalize_job(
+    spec: &JobSpec,
+    prep: &PreparedJob,
+    tr: TaskResult,
+    timing: &mut JobTiming,
+) -> JobResult {
+    let machine = prep.holder.machine();
+    let task = &prep.task;
+    let layout = &prep.layout;
     let wm_time_ns = tr.time_ns(machine);
-    timing.simulate_ns = t0.elapsed().as_nanos() as u64;
 
     // CPU baseline over the same DFGs (numerics identical by construction).
     let t0 = Instant::now();
@@ -475,28 +491,231 @@ pub fn run_job_cached(
             gpu.time_ns(ops as f64, layout.total_words() as f64, 1, layout.total_words() as f64 * 4.0)
         }
     };
-
     timing.baseline_ns = t0.elapsed().as_nanos() as u64;
 
     let ii = task.phases.iter().map(|p| p.mapping.schedule.ii).max().unwrap_or(1);
-    Ok((
-        JobResult {
-            name: spec.workload.name(),
-            pea: format!("{}x{}", spec.params.rows, spec.params.cols),
-            arch_hash,
-            cycles: tr.total_cycles,
-            wm_time_ns,
-            cpu_time_ns,
-            speedup_vs_cpu: cpu_time_ns / wm_time_ns,
-            gpu_time_ns,
-            speedup_vs_gpu: gpu_time_ns / wm_time_ns,
-            ii,
-            measured_ii: 0.0,
-            mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
-            mem: tr.mem,
-        },
-        timing,
-    ))
+    JobResult {
+        name: spec.workload.name(),
+        pea: format!("{}x{}", spec.params.rows, spec.params.cols),
+        arch_hash: prep.arch_hash,
+        cycles: tr.total_cycles,
+        wm_time_ns,
+        cpu_time_ns,
+        speedup_vs_cpu: cpu_time_ns / wm_time_ns,
+        gpu_time_ns,
+        speedup_vs_gpu: gpu_time_ns / wm_time_ns,
+        ii,
+        measured_ii: 0.0,
+        mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
+        mem: tr.mem,
+    }
+}
+
+/// Run one job end-to-end. Deterministic for (spec.seed).
+pub fn run_job(spec: &JobSpec) -> Result<JobResult, DiagError> {
+    run_job_cached(spec, None).map(|(r, _)| r)
+}
+
+/// Run one job, sourcing elaboration/mapper artifacts *and per-phase
+/// simulation results* from `cache` when given. Produces the same
+/// [`JobResult`] as [`run_job`] (the cache only memoizes deterministic
+/// artifacts); the [`JobTiming`] reports where the wall time went and how
+/// often the cache answered. On a fully warm cache the job performs no
+/// elaboration, no compilation and no simulation.
+pub fn run_job_cached(
+    spec: &JobSpec,
+    cache: Option<&ArtifactCache>,
+) -> Result<(JobResult, JobTiming), DiagError> {
+    let mut timing = JobTiming::default();
+    let prep = prep_job(spec, cache, &mut timing)?;
+    let machine = prep.holder.machine();
+
+    let t0 = Instant::now();
+    let tr = match cache {
+        Some(c) => {
+            // Per-phase SimResult memoization: key = (arch, DFG, seed,
+            // input-image hash). A warm sweep point never re-enters
+            // `simulate()` — each phase's result (including the output
+            // image the next phase chains from) answers from the cache.
+            let seed = spec.seed;
+            let arch_hash = prep.arch_hash;
+            let mut sim_hits = 0u64;
+            let mut sim_misses = 0u64;
+            let skipped = std::cell::Cell::new(0u64);
+            let tr = run_task_with(
+                &prep.task,
+                machine,
+                &prep.mem0,
+                MAX_PHASE_CYCLES,
+                &mut |m, mc, img, maxc| {
+                    let (r, hit) = c.sim_result(arch_hash, m.dfg.stable_hash(), seed, img, || {
+                        let (r, sk) = simulate_counting(m, mc, img, maxc)?;
+                        skipped.set(skipped.get() + sk);
+                        Ok(r)
+                    })?;
+                    if hit {
+                        sim_hits += 1;
+                    } else {
+                        sim_misses += 1;
+                    }
+                    Ok(r)
+                },
+            )?;
+            timing.cache_hits += sim_hits;
+            timing.cache_misses += sim_misses;
+            timing.sim_skipped_cycles = skipped.get();
+            tr
+        }
+        None => run_task(&prep.task, machine, &prep.mem0, MAX_PHASE_CYCLES)?,
+    };
+    timing.simulate_ns = t0.elapsed().as_nanos() as u64;
+
+    let result = finalize_job(spec, &prep, tr, &mut timing);
+    Ok((result, timing))
+}
+
+/// Run a chunk of jobs through the batched simulation arena: each job's
+/// [`TaskCursor`] is stepped phase-by-phase, and at every step the
+/// cache-missing compute requests are grouped by DFG identity and run as
+/// lanes of one [`crate::sim::SimArena`] via [`simulate_batch`]. Results
+/// are bit-identical to [`run_job_cached`] per job: lanes share only the
+/// read-only topology skeleton, and the [`TaskCursor`] owns all timing
+/// accounting on both paths. Per-job failures (elaboration, compile, a
+/// lane's cycle-guard trip) fail that job's slot; siblings proceed.
+///
+/// Batch-occupancy counters (`batch_launches`/`batch_lanes`) land on each
+/// launch's first job, so the sweep-level aggregate counts every arena
+/// launch exactly once.
+pub fn run_jobs_cached_batch(
+    specs: &[JobSpec],
+    cache: &ArtifactCache,
+) -> Vec<Result<(JobResult, JobTiming), DiagError>> {
+    let n = specs.len();
+    let mut timings = vec![JobTiming::default(); n];
+    let mut errors: Vec<Option<DiagError>> = (0..n).map(|_| None).collect();
+    let mut preps: Vec<Option<PreparedJob>> = Vec::with_capacity(n);
+    for (i, spec) in specs.iter().enumerate() {
+        match prep_job(spec, Some(cache), &mut timings[i]) {
+            Ok(p) => preps.push(Some(p)),
+            Err(e) => {
+                errors[i] = Some(e);
+                preps.push(None);
+            }
+        }
+    }
+    let mut cursors: Vec<Option<TaskCursor>> = Vec::with_capacity(n);
+    for (i, prep) in preps.iter().enumerate() {
+        let cur = prep.as_ref().and_then(|p| {
+            match TaskCursor::new(&p.task, p.holder.machine(), &p.mem0) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    errors[i] = Some(e);
+                    None
+                }
+            }
+        });
+        cursors.push(cur);
+    }
+
+    loop {
+        // One lockstep round: answer every live cursor's pending phase —
+        // from the SimResult cache where possible, else from a shared
+        // arena per distinct DFG.
+        let mut answered: Vec<(usize, Arc<SimResult>)> = Vec::new();
+        let mut failed: Vec<(usize, DiagError)> = Vec::new();
+        {
+            let mut misses: Vec<(usize, u64, PhaseReq)> = Vec::new();
+            for i in 0..n {
+                let Some(cur) = cursors[i].as_ref() else { continue };
+                let Some(req) = cur.pending() else { continue };
+                let prep = preps[i].as_ref().unwrap();
+                let dh = req.mapping.dfg.stable_hash();
+                match cache.sim_probe(prep.arch_hash, dh, specs[i].seed, req.image) {
+                    Some(r) => {
+                        timings[i].cache_hits += 1;
+                        answered.push((i, r));
+                    }
+                    None => {
+                        timings[i].cache_misses += 1;
+                        misses.push((i, dh, req));
+                    }
+                }
+            }
+            if answered.is_empty() && misses.is_empty() {
+                break;
+            }
+            // Group same-DFG misses: each group is one arena launch.
+            let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+            for (k, &(_, dh, _)) in misses.iter().enumerate() {
+                match groups.iter_mut().find(|(h, _)| *h == dh) {
+                    Some((_, members)) => members.push(k),
+                    None => groups.push((dh, vec![k])),
+                }
+            }
+            for (_, members) in &groups {
+                let lanes: Vec<LaneSpec> = members
+                    .iter()
+                    .map(|&k| {
+                        let (i, _, req) = (&misses[k].0, &misses[k].1, &misses[k].2);
+                        LaneSpec {
+                            mapping: req.mapping,
+                            machine: preps[*i].as_ref().unwrap().holder.machine(),
+                            image: req.image,
+                        }
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let outs = simulate_batch(&lanes, MAX_PHASE_CYCLES);
+                // Arena wall time attributed evenly across its lanes.
+                let per_lane_ns = t0.elapsed().as_nanos() as u64 / members.len() as u64;
+                let first = misses[members[0]].0;
+                timings[first].batch_launches += 1;
+                timings[first].batch_lanes += members.len() as u64;
+                for (&k, out) in members.iter().zip(outs) {
+                    let (i, dh) = (misses[k].0, misses[k].1);
+                    let req = &misses[k].2;
+                    timings[i].simulate_ns += per_lane_ns;
+                    match out {
+                        Ok((r, skipped)) => {
+                            timings[i].sim_skipped_cycles += skipped;
+                            let r = Arc::new(r);
+                            let prep = preps[i].as_ref().unwrap();
+                            cache.sim_insert_computed(
+                                prep.arch_hash,
+                                dh,
+                                specs[i].seed,
+                                req.image,
+                                &r,
+                            );
+                            answered.push((i, r));
+                        }
+                        Err(e) => failed.push((i, e)),
+                    }
+                }
+            }
+        }
+        for (i, e) in failed {
+            errors[i] = Some(e);
+            cursors[i] = None;
+        }
+        for (i, r) in answered {
+            if let Some(cur) = cursors[i].as_mut() {
+                cur.advance(&r);
+            }
+        }
+    }
+
+    (0..n)
+        .map(|i| {
+            if let Some(e) = errors[i].take() {
+                return Err(e);
+            }
+            let tr = cursors[i].take().expect("no error implies a finished cursor").finish();
+            let prep = preps[i].as_ref().unwrap();
+            let result = finalize_job(&specs[i], prep, tr, &mut timings[i]);
+            Ok((result, timings[i]))
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -329,6 +329,22 @@ impl SweepReport {
             self.timing.compile_ns as f64 / 1e6,
             self.timing.simulate_ns as f64 / 1e6,
         );
+        // Lockstep-arena occupancy (batched dispatch only): mean lanes per
+        // arena launch tells at a glance whether chunking actually grouped
+        // same-DFG phases or degenerated to solo launches.
+        if self.timing.batch_launches > 0 {
+            s.push_str(&format!(
+                " | arena {:.1} lanes/launch over {} launches",
+                self.timing.batch_lanes as f64 / self.timing.batch_launches as f64,
+                self.timing.batch_launches,
+            ));
+        }
+        if self.timing.sim_skipped_cycles > 0 {
+            s.push_str(&format!(
+                " | skipped {} idle cycles",
+                self.timing.sim_skipped_cycles
+            ));
+        }
         // Per-workload rows (suite sweeps only — a single-member suite
         // keeps the historical one-line format).
         let names = self.workload_names();

@@ -35,16 +35,24 @@ use crate::diag::service::{ServiceRegistry, SweepService};
 use crate::store::DiskStore;
 
 use super::cache::{ArtifactCache, CacheStats};
-use super::job::{run_job_cached, JobResult, JobSpec, JobTiming, Workload, WorkloadSuite};
+use super::job::{
+    run_job_cached, run_jobs_cached_batch, JobResult, JobSpec, JobTiming, Workload, WorkloadSuite,
+};
 use super::pool::{run_all_with, run_fifo};
 use super::report::{geomean, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf};
 
 /// Default mapper seed for sweeps submitted without an explicit one.
 pub const DEFAULT_SWEEP_SEED: u64 = 42;
 
+/// Default lockstep batch width for grid dispatch (the CLI's `--batch`):
+/// consecutive grid points are grouped into chunks of this size and their
+/// same-DFG phases simulated as lanes of one [`crate::sim::SimArena`].
+pub const DEFAULT_SWEEP_BATCH: usize = 8;
+
 /// A long-lived, cache-backed parallel design-space sweep engine.
 pub struct SweepEngine {
     workers: usize,
+    batch: usize,
     cache: Arc<ArtifactCache>,
 }
 
@@ -57,7 +65,22 @@ impl SweepEngine {
     /// Engine sharing an existing cache (e.g. across several engines or a
     /// surrounding benchmark harness).
     pub fn with_cache(workers: usize, cache: Arc<ArtifactCache>) -> Self {
-        SweepEngine { workers: workers.max(1), cache }
+        SweepEngine { workers: workers.max(1), batch: DEFAULT_SWEEP_BATCH, cache }
+    }
+
+    /// Set the lockstep batch width: consecutive grid points are grouped
+    /// into chunks of `batch` and dispatched through the batched runner
+    /// ([`run_jobs_cached_batch`]), so same-DFG phases across a chunk
+    /// share one simulation arena. `1` restores per-point dispatch; `0`
+    /// is clamped to 1. Results are bit-identical either way.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+
+    /// The configured lockstep batch width.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Engine whose cache reads/writes through a persistent [`DiskStore`]:
@@ -94,6 +117,7 @@ impl SweepEngine {
             Rc::new(SweepService {
                 provider: "coordinator::SweepEngine",
                 workers: self.workers,
+                batch: self.batch,
                 cached: true,
                 persistent: self.cache.has_store(),
             }),
@@ -148,16 +172,47 @@ impl SweepEngine {
         // Member layouts are grid-invariant: compute the suite's memory
         // requirement once, not once per point inside the workers.
         let smem_words = suite.required_smem_words();
-        let run = run_fifo(points, self.workers, move |(label, params)| {
-            // A panicking point must land in `failures`, not take down the
-            // sweep (same containment as `run_all_with`).
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed)
-            }));
-            out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
-        });
+        let results: Vec<Result<SweepPoint, (String, String)>> = if self.batch <= 1 {
+            let run = run_fifo(points, self.workers, move |(label, params)| {
+                // A panicking point must land in `failures`, not take down
+                // the sweep (same containment as `run_all_with`).
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed)
+                }));
+                out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
+            });
+            run.results
+        } else {
+            // Chunk consecutive points: each worker steps a chunk's task
+            // cursors in lockstep, sharing one arena per (phase, DFG).
+            // Flattening `run_fifo`'s submission-order chunk results keeps
+            // the report in grid order, batched or not.
+            let mut chunks = Vec::with_capacity(points.len().div_ceil(self.batch));
+            let mut iter = points.into_iter();
+            loop {
+                let chunk: Vec<(String, WindMillParams)> =
+                    iter.by_ref().take(self.batch).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                chunks.push(chunk);
+            }
+            let run = run_fifo(chunks, self.workers, move |chunk| {
+                let labels: Vec<String> = chunk.iter().map(|(l, _)| l.clone()).collect();
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    evaluate_chunk(&cache, chunk, &suite, smem_words, seed)
+                }));
+                out.unwrap_or_else(|_| {
+                    labels
+                        .into_iter()
+                        .map(|l| Err((l, "panicked in a sweep worker".to_string())))
+                        .collect()
+                })
+            });
+            run.results.into_iter().flatten().collect()
+        };
         let mut acc = SweepAccumulator::new();
-        for r in run.results {
+        for r in results {
             match r {
                 Ok(p) => acc.push(p),
                 Err((label, e)) => acc.push_failure(label, e),
@@ -191,61 +246,125 @@ fn evaluate_point(
         // whole suite), so the per-job re-calibration is a no-op and all
         // members share one arch hash.
         let calibrated = super::job::calibrate_params_words(params, suite_smem_words);
-        let mut timing = JobTiming::default();
-        let mut per_workload: Vec<WorkloadPerf> = Vec::with_capacity(suite.len());
-        let mut arch_hash = 0u64;
+        let mut jobs = Vec::with_capacity(suite.len());
         for workload in suite.workloads() {
             let spec =
                 JobSpec { workload: workload.clone(), params: calibrated.clone(), seed };
-            let (job, t) = run_job_cached(&spec, Some(cache))?;
-            debug_assert!(
-                arch_hash == 0 || arch_hash == job.arch_hash,
-                "suite calibration must give every member the same machine"
-            );
-            arch_hash = job.arch_hash;
-            timing.add(&t);
-            per_workload.push(WorkloadPerf {
-                workload: job.name,
-                cycles: job.cycles,
-                wm_time_ns: job.wm_time_ns,
-                speedup_vs_cpu: job.speedup_vs_cpu,
-                speedup_vs_gpu: job.speedup_vs_gpu,
-                ii: job.ii,
-            });
+            jobs.push(run_job_cached(&spec, Some(cache))?);
         }
-        // PPA of the *calibrated* architecture — the machine the jobs
-        // actually ran on. The jobs just populated that elaboration entry,
-        // so the relabel-by-hash lookup is guaranteed to resolve; the
-        // fallback recomputes only if the cache was cleared mid-sweep.
-        let ppa = match cache.ppa_by_hash(&label, arch_hash) {
-            Some(row) => row,
-            None => cache.ppa(&label, &calibrated)?,
-        };
-        let times: Vec<f64> = per_workload.iter().map(|w| w.wm_time_ns).collect();
-        let cpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_cpu).collect();
-        let gpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_gpu).collect();
-        Ok(SweepPoint {
-            label: label.clone(),
-            arch_hash,
-            pea: ppa.pea,
-            topology: ppa.topology,
-            gates: ppa.gates,
-            area_mm2: ppa.area_mm2,
-            power_mw: ppa.power_mw,
-            fmax_mhz: ppa.fmax_mhz,
-            // Aggregates: summed cycles, geomean time/speedups. For a
-            // single-member suite `geomean` returns the member's value
-            // verbatim, keeping plain sweeps bit-identical.
-            cycles: per_workload.iter().map(|w| w.cycles).sum(),
-            wm_time_ns: geomean(&times),
-            speedup_vs_cpu: geomean(&cpu),
-            speedup_vs_gpu: geomean(&gpu),
-            ii: per_workload.iter().map(|w| w.ii).max().unwrap_or(1),
-            per_workload,
-            timing,
-        })
+        fold_point(cache, &label, &calibrated, jobs)
     };
     inner().map_err(|e| (label.clone(), e.to_string()))
+}
+
+/// Evaluate a *chunk* of grid points together so that same-phase, same-DFG
+/// simulations across the whole chunk run as one lockstep arena launch
+/// ([`run_jobs_cached_batch`]). Specs are laid out point-major — for each
+/// calibrated point, its suite members in order — and results are consumed
+/// back in that order, so every point folds exactly as it would have under
+/// [`evaluate_point`]; the first job error of a point fails that point only.
+fn evaluate_chunk(
+    cache: &ArtifactCache,
+    chunk: Vec<(String, crate::arch::WindMillParams)>,
+    suite: &WorkloadSuite,
+    suite_smem_words: usize,
+    seed: u64,
+) -> Vec<Result<SweepPoint, (String, String)>> {
+    let mut calibrated = Vec::with_capacity(chunk.len());
+    let mut specs = Vec::with_capacity(chunk.len() * suite.len());
+    for (label, params) in chunk {
+        let params = super::job::calibrate_params_words(params, suite_smem_words);
+        for workload in suite.workloads() {
+            specs.push(JobSpec {
+                workload: workload.clone(),
+                params: params.clone(),
+                seed,
+            });
+        }
+        calibrated.push((label, params));
+    }
+    let mut outcomes = run_jobs_cached_batch(&specs, cache).into_iter();
+    calibrated
+        .into_iter()
+        .map(|(label, params)| {
+            let mut jobs = Vec::with_capacity(suite.len());
+            let mut first_err: Option<DiagError> = None;
+            for _ in 0..suite.len() {
+                let outcome = outcomes.next().expect("one batch outcome per spec");
+                match outcome {
+                    Ok(job) => jobs.push(job),
+                    Err(e) if first_err.is_none() => first_err = Some(e),
+                    Err(_) => {}
+                }
+            }
+            let folded = match first_err {
+                Some(e) => Err(e),
+                None => fold_point(cache, &label, &params, jobs),
+            };
+            folded.map_err(|e| (label, e.to_string()))
+        })
+        .collect()
+}
+
+/// Fold one point's per-member job results into a [`SweepPoint`] — shared
+/// verbatim by the per-point and chunked paths so batching cannot change
+/// what a point reports.
+fn fold_point(
+    cache: &ArtifactCache,
+    label: &str,
+    calibrated: &crate::arch::WindMillParams,
+    jobs: Vec<(JobResult, JobTiming)>,
+) -> Result<SweepPoint, DiagError> {
+    let mut timing = JobTiming::default();
+    let mut per_workload: Vec<WorkloadPerf> = Vec::with_capacity(jobs.len());
+    let mut arch_hash = 0u64;
+    for (job, t) in jobs {
+        debug_assert!(
+            arch_hash == 0 || arch_hash == job.arch_hash,
+            "suite calibration must give every member the same machine"
+        );
+        arch_hash = job.arch_hash;
+        timing.add(&t);
+        per_workload.push(WorkloadPerf {
+            workload: job.name,
+            cycles: job.cycles,
+            wm_time_ns: job.wm_time_ns,
+            speedup_vs_cpu: job.speedup_vs_cpu,
+            speedup_vs_gpu: job.speedup_vs_gpu,
+            ii: job.ii,
+        });
+    }
+    // PPA of the *calibrated* architecture — the machine the jobs
+    // actually ran on. The jobs just populated that elaboration entry,
+    // so the relabel-by-hash lookup is guaranteed to resolve; the
+    // fallback recomputes only if the cache was cleared mid-sweep.
+    let ppa = match cache.ppa_by_hash(label, arch_hash) {
+        Some(row) => row,
+        None => cache.ppa(label, calibrated)?,
+    };
+    let times: Vec<f64> = per_workload.iter().map(|w| w.wm_time_ns).collect();
+    let cpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_cpu).collect();
+    let gpu: Vec<f64> = per_workload.iter().map(|w| w.speedup_vs_gpu).collect();
+    Ok(SweepPoint {
+        label: label.to_string(),
+        arch_hash,
+        pea: ppa.pea,
+        topology: ppa.topology,
+        gates: ppa.gates,
+        area_mm2: ppa.area_mm2,
+        power_mw: ppa.power_mw,
+        fmax_mhz: ppa.fmax_mhz,
+        // Aggregates: summed cycles, geomean time/speedups. For a
+        // single-member suite `geomean` returns the member's value
+        // verbatim, keeping plain sweeps bit-identical.
+        cycles: per_workload.iter().map(|w| w.cycles).sum(),
+        wm_time_ns: geomean(&times),
+        speedup_vs_cpu: geomean(&cpu),
+        speedup_vs_gpu: geomean(&gpu),
+        ii: per_workload.iter().map(|w| w.ii).max().unwrap_or(1),
+        per_workload,
+        timing,
+    })
 }
 
 #[cfg(test)]
@@ -449,6 +568,8 @@ mod tests {
         engine.register_service(&mut registry);
         let svc = registry.get::<SweepService>("dse-tool", "create_late").unwrap();
         assert_eq!(svc.workers, 3);
+        assert_eq!(svc.batch, DEFAULT_SWEEP_BATCH, "default lockstep width advertised");
+        assert_eq!(SweepEngine::new(3).with_batch(0).batch(), 1, "zero clamps to per-point");
         assert!(svc.cached);
         assert!(!svc.persistent, "no disk store attached");
         assert_eq!(svc.provider, "coordinator::SweepEngine");

@@ -6,7 +6,7 @@
 
 use std::fmt;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum DiagError {
     /// `get_service::<T>()` found no provider for a required service.
     MissingService {

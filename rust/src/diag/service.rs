@@ -117,6 +117,10 @@ pub struct SweepService {
     pub provider: &'static str,
     /// Worker threads backing the engine.
     pub workers: usize,
+    /// Lockstep simulation batch width: grid points are dispatched in
+    /// chunks of this size and same-DFG phases across a chunk run as lanes
+    /// of one simulation arena (`1` = per-point dispatch).
+    pub batch: usize,
     /// Whether evaluations are memoized across sweep points.
     pub cached: bool,
     /// Whether the memo survives the process (a persistent artifact store

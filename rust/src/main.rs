@@ -30,12 +30,15 @@ USAGE:
         Compile + simulate a workload (saxpy|dot|gemm|spmv|bfs|fir|conv|rl)
         against the CPU/GPU baseline models.
     windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
-                   [--store DIR] [--shard I/N] [--expect-warm]
+                   [--batch N] [--store DIR] [--shard I/N] [--expect-warm]
         Design-space sweep (PEA size x topology grid) of a workload — or a
         comma-separated workload *suite* (e.g. `gemm,spmv,rl`), evaluated
         member-by-member at every grid point into one frontier over
         (area, power, per-workload times) — through the cache-backed sweep
         engine; prints the best-PPA frontier.
+        --batch N     lockstep simulation width: N consecutive grid points
+                      run as lanes of one shared arena (default 8; 1 =
+                      per-point dispatch; results bit-identical either way)
         --store DIR   read/write artifacts through a persistent store, so a
                       re-run in a fresh process recomputes nothing
         --shard I/N   evaluate the I-th of N contiguous grid shards and
@@ -187,6 +190,10 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     let base = params_from_args(&args[1..])?;
     let workers = arg_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
     let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let batch = match arg_value(args, "--batch") {
+        Some(s) => s.parse::<usize>().map_err(|_| format!("bad --batch `{s}`"))?,
+        None => windmill::coordinator::DEFAULT_SWEEP_BATCH,
+    };
     let store_dir = arg_value(args, "--store");
     let shard = match arg_value(args, "--shard") {
         Some(s) => {
@@ -212,7 +219,8 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     let engine = match &store {
         Some(s) => SweepEngine::with_store(workers, Arc::clone(s)),
         None => SweepEngine::new(workers),
-    };
+    }
+    .with_batch(batch);
     let grid = sweep_grid(base);
 
     let report = match shard {

@@ -1,4 +1,5 @@
-//! Cycle-accurate execution of one mapped kernel on one RCA.
+//! Cycle-accurate execution of mapped kernels — one RCA at a time, or a
+//! whole batch of same-DFG grid points through the [`SimArena`].
 //!
 //! Token-dataflow semantics grounded in §IV-A.3: the Iteration Control
 //! Block lets each PE "switch control step statically and process valid
@@ -20,27 +21,34 @@
 //! This is the **fast path** of every design-space sweep (EXPERIMENTS.md
 //! §Perf): the steady-state cycle loop performs no heap allocation —
 //! in-flight deliveries live in a fixed-horizon calendar queue of reusable
-//! slot Vecs, consumer adjacency is a CSR layout with the per-edge delay
-//! (op latency + route hops) precomputed, operand reads are fixed
+//! slot Vecs, consumer adjacency is a CSR layout, operand reads are fixed
 //! two-slot pops instead of collected Vecs, finished nodes leave the
 //! active worklist so long tails do not rescan them, and memory responses
 //! drain into one reusable buffer ([`super::smem::SmemSim::tick_into`]).
 //! The cold path is additionally **event-driven**: when a cycle fires no
 //! node and the shared memory is idle, every cycle before the next
 //! occupied calendar slot is a provable no-op, and the engine jumps
-//! straight to it instead of ticking ([`Engine::run_counting`] documents
-//! the equivalence argument and reports the skipped-cycle count).
-//! Stall-heavy kernels — long-latency SFU chains, recurrence-bound
-//! accumulators, shallow iteration spaces — tick substantially fewer
-//! cycles while reporting identical results.
-//! The pre-optimization implementation is frozen in [`super::reference`]
-//! as the executable semantic specification; `tests/engine_equivalence.rs`
-//! pins this engine to it cycle-for-cycle, skip and all.
+//! straight to it instead of ticking ([`Lane::tick`] documents the
+//! equivalence argument and reports the skipped-cycle count).
+//!
+//! **Batching (EXPERIMENTS.md §Batched sim).** A sweep runs many grid
+//! points over *one* DFG; everything derivable from the DFG alone —
+//! validation, the CSR consumer adjacency, the decoded per-node state
+//! template, the store-commit expectations — is identical across those
+//! points. The [`SimArena`] decodes that skeleton once into a shared
+//! [`Topo`] and steps N per-point [`Lane`]s (machine-sized smem, per-route
+//! edge delays, calendar ring, node state) in round-robin lockstep. Lanes
+//! share no mutable state, so each lane is bit- and cycle-identical to
+//! running it alone; [`simulate`] is the N=1 special case driven by the
+//! very same `tick` loop. The pre-optimization implementation is frozen in
+//! [`super::reference`] as the executable semantic specification;
+//! `tests/engine_equivalence.rs` pins this engine to it cycle-for-cycle,
+//! skip, batch and all.
 
 use std::collections::VecDeque;
 
 use crate::arch::isa::Op;
-use crate::compiler::dfg::{Access, NodeKind};
+use crate::compiler::dfg::{Access, Dfg, NodeKind};
 use crate::compiler::Mapping;
 use crate::diag::error::DiagError;
 use crate::sim::machine::MachineDesc;
@@ -96,20 +104,20 @@ struct Delivery {
     value: f32,
 }
 
-/// One CSR consumer edge: destination node, operand slot, and the total
-/// delivery delay (producer op latency + route hops) precomputed so the
-/// hot loop never touches the route table or the latency table.
+/// One CSR consumer edge: destination node and operand slot. The total
+/// delivery delay (producer op latency + route hops) depends on the lane's
+/// *routes*, so it lives in the parallel per-lane [`Lane::delays`] array —
+/// the adjacency itself is a pure DFG property shared by every lane.
 #[derive(Debug, Clone, Copy)]
 struct ConsEdge {
     dst: u32,
     slot: u8,
-    delay: u32,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct NodeState {
     /// Fixed two-operand input queues (DFG nodes have ≤ 2 data inputs;
-    /// enforced in [`Engine::new`]). Only the first `n_inputs` are live.
+    /// enforced in [`Topo::new`]). Only the first `n_inputs` are live.
     inq: [VecDeque<Token>; 2],
     n_inputs: u8,
     /// Next iteration a source node will emit / a consumer will accept.
@@ -150,73 +158,49 @@ impl NodeState {
     }
 }
 
-pub struct Engine<'a> {
-    mapping: &'a Mapping,
-    smem: SmemSim,
-    nodes: Vec<NodeState>,
-    /// Fixed-horizon calendar queue: deliveries due at cycle `c` live in
-    /// `calendar[c % horizon]`. The horizon exceeds the largest possible
-    /// delivery delay, so a slot never holds two distinct due cycles and
-    /// every slot Vec is drained (and its allocation reused) once per
-    /// `horizon` cycles — this replaces the `BTreeMap<u64, Vec<..>>`
-    /// bucket map whose nodes were allocated and freed every cycle.
-    calendar: Vec<Vec<Delivery>>,
-    horizon: u64,
+/// Everything a batch of lanes shares, decoded **once** per DFG: kernel
+/// validation, the CSR consumer adjacency, the per-node dynamic-state
+/// template and the store-commit expectations. These are pure functions of
+/// the DFG, so N same-DFG grid points pay for them once instead of N times
+/// (the single-point [`Engine`] is the N=1 case of the same structure).
+struct Topo<'a> {
+    dfg: &'a Dfg,
     /// CSR consumer adjacency: node `i`'s consumers are
-    /// `cons[cons_idx[i] .. cons_idx[i+1]]`.
+    /// `cons[cons_idx[i] .. cons_idx[i+1]]`. Entries for one producer
+    /// appear in ascending consumer-node order — the same delivery order
+    /// the reference engine's Vec-of-Vecs produces.
     cons_idx: Vec<u32>,
     cons: Vec<ConsEdge>,
-    /// Nodes still producing/consuming iterations, ascending id order.
-    /// Finished nodes retire so the per-cycle fire scan skips them.
-    active: Vec<u32>,
-    cycle: u64,
-    /// Completed iterations per store node (min over stores = frontier).
+    /// Completed iterations required per store node (min over stores =
+    /// the retired-iteration frontier).
     expected_commits: Vec<(usize, u64)>,
-    /// [`iteration_window`] of the machine this engine was built for.
-    window: u64,
-    /// [`lsu_mshrs`] of the machine this engine was built for.
-    mshrs: u32,
     total_iters: u64,
-    /// Fully-stalled cycles the calendar jump skipped (see
-    /// [`Engine::run_counting`]); they are *counted* in `cycle` but never
-    /// ticked.
-    skipped: u64,
+    /// Per-node dynamic-state template (empty queues, odometer seeded from
+    /// the access patterns); lanes clone it instead of re-decoding every
+    /// `NodeKind`.
+    template: Vec<NodeState>,
 }
 
-impl<'a> Engine<'a> {
-    pub fn new(
-        mapping: &'a Mapping,
-        machine: &MachineDesc,
-        mem_image: &[f32],
-    ) -> Result<Self, DiagError> {
-        let total_iters = mapping.dfg.total_iters();
+impl<'a> Topo<'a> {
+    fn new(dfg: &'a Dfg) -> Result<Topo<'a>, DiagError> {
+        let total_iters = dfg.total_iters();
         // The memory tag packs (node, iteration) as 32+32 bits; iteration
         // ids at or beyond 2^32 would silently alias, so such nests are
         // rejected up front instead of corrupting load/store matching.
         if total_iters >= (1u64 << 32) {
             return Err(DiagError::InvalidParams(format!(
                 "sim `{}`: {} iterations exceed the 32-bit iteration tag",
-                mapping.dfg.name, total_iters
+                dfg.name, total_iters
             )));
         }
-        let sm_desc = machine
-            .smem
-            .as_ref()
-            .ok_or_else(|| DiagError::InvalidParams("machine has no shared memory".into()))?;
-        let mut smem = SmemSim::new(
-            sm_desc.banks,
-            sm_desc.depth,
-            mapping.dfg.nodes.len().max(sm_desc.pai_requesters),
-        );
-        smem.load_image(0, mem_image)?;
-        let ndims = mapping.dfg.dims.len();
-        let n = mapping.dfg.nodes.len();
-        let mut nodes = Vec::with_capacity(n);
-        for (i, nd) in mapping.dfg.nodes.iter().enumerate() {
+        let ndims = dfg.dims.len();
+        let n = dfg.nodes.len();
+        let mut template = Vec::with_capacity(n);
+        for (i, nd) in dfg.nodes.iter().enumerate() {
             if nd.inputs.len() > 2 {
                 return Err(DiagError::InvalidParams(format!(
                     "sim `{}`: node {i} has {} operands (PEs latch at most 2)",
-                    mapping.dfg.name,
+                    dfg.name,
                     nd.inputs.len()
                 )));
             }
@@ -228,7 +212,7 @@ impl<'a> Engine<'a> {
                 NodeKind::Index(_) => (0, Vec::new(), vec![0u32; ndims]),
                 _ => (0, Vec::new(), Vec::new()),
             };
-            nodes.push(NodeState {
+            template.push(NodeState {
                 inq: [VecDeque::new(), VecDeque::new()],
                 n_inputs: nd.inputs.len() as u8,
                 next_iter: 0,
@@ -241,8 +225,7 @@ impl<'a> Engine<'a> {
                 coefs,
             });
         }
-        let expected_commits = mapping
-            .dfg
+        let expected_commits = dfg
             .nodes
             .iter()
             .enumerate()
@@ -251,11 +234,8 @@ impl<'a> Engine<'a> {
                 _ => None,
             })
             .collect();
-        // CSR consumer adjacency with per-edge total delay. Entries for one
-        // producer appear in ascending consumer-node order — the same
-        // delivery order the reference engine's Vec-of-Vecs produces.
         let mut cons_idx = vec![0u32; n + 1];
-        for nd in &mapping.dfg.nodes {
+        for nd in &dfg.nodes {
             for &src in &nd.inputs {
                 cons_idx[src + 1] += 1;
             }
@@ -263,36 +243,106 @@ impl<'a> Engine<'a> {
         for i in 0..n {
             cons_idx[i + 1] += cons_idx[i];
         }
-        let mut cons = vec![ConsEdge { dst: 0, slot: 0, delay: 0 }; cons_idx[n] as usize];
+        let mut cons = vec![ConsEdge { dst: 0, slot: 0 }; cons_idx[n] as usize];
         let mut fill = cons_idx.clone();
-        for (dst, nd) in mapping.dfg.nodes.iter().enumerate() {
+        for (dst, nd) in dfg.nodes.iter().enumerate() {
             for (slot, &src) in nd.inputs.iter().enumerate() {
-                let hops =
-                    mapping.routes.for_edge(src, dst).map(|r| r.hops()).unwrap_or(0);
-                let delay = mapping.dfg.nodes[src].op.latency() + hops;
-                cons[fill[src] as usize] =
-                    ConsEdge { dst: dst as u32, slot: slot as u8, delay };
+                cons[fill[src] as usize] = ConsEdge { dst: dst as u32, slot: slot as u8 };
                 fill[src] += 1;
             }
         }
+        Ok(Topo { dfg, cons_idx, cons, expected_commits, total_iters, template })
+    }
+
+    /// Per-edge delivery delays for one lane's mapping (producer op latency
+    /// + route hops), parallel to `self.cons` (same fill order as the CSR
+    /// build, so `delays[k]` belongs to edge `cons[k]`).
+    fn lane_delays(&self, mapping: &Mapping) -> Vec<u32> {
+        let mut delays = vec![0u32; self.cons.len()];
+        let mut fill = self.cons_idx.clone();
+        for (dst, nd) in self.dfg.nodes.iter().enumerate() {
+            for &src in &nd.inputs {
+                let hops = mapping.routes.for_edge(src, dst).map(|r| r.hops()).unwrap_or(0);
+                delays[fill[src] as usize] = self.dfg.nodes[src].op.latency() + hops;
+                fill[src] += 1;
+            }
+        }
+        delays
+    }
+}
+
+/// One grid point's live simulation state: the machine-sized shared-memory
+/// model, per-node dynamic state cloned from the shared template, the
+/// route-dependent edge delays and the fixed-horizon calendar ring. Lanes
+/// share no mutable state — only the read-only [`Topo`] — so any stepping
+/// interleaving yields results bit-identical to running each lane alone.
+struct Lane {
+    smem: SmemSim,
+    nodes: Vec<NodeState>,
+    /// Fixed-horizon calendar queue: deliveries due at cycle `c` live in
+    /// `calendar[c % horizon]`. The horizon exceeds the largest possible
+    /// delivery delay, so a slot never holds two distinct due cycles and
+    /// every slot Vec is drained (and its allocation reused) once per
+    /// `horizon` cycles.
+    calendar: Vec<Vec<Delivery>>,
+    horizon: u64,
+    /// Per-edge delivery delay, parallel to [`Topo::cons`].
+    delays: Vec<u32>,
+    /// Nodes still producing/consuming iterations, ascending id order.
+    /// Finished nodes retire so the per-cycle fire scan skips them.
+    active: Vec<u32>,
+    cycle: u64,
+    /// [`iteration_window`] of the machine this lane was built for.
+    window: u64,
+    /// [`lsu_mshrs`] of the machine this lane was built for.
+    mshrs: u32,
+    /// Fully-stalled cycles the calendar jump skipped (see [`Lane::tick`]);
+    /// they are *counted* in `cycle` but never ticked.
+    skipped: u64,
+    inflight_sum: f64,
+    steady_start_cycle: Option<u64>,
+    steady_start_frontier: u64,
+    /// One response buffer for the whole run (the old API returned a fresh
+    /// Vec per cycle).
+    resp_buf: Vec<MemResp>,
+}
+
+impl Lane {
+    fn new(
+        topo: &Topo<'_>,
+        mapping: &Mapping,
+        machine: &MachineDesc,
+        mem_image: &[f32],
+    ) -> Result<Lane, DiagError> {
+        let sm_desc = machine
+            .smem
+            .as_ref()
+            .ok_or_else(|| DiagError::InvalidParams("machine has no shared memory".into()))?;
+        let mut smem = SmemSim::new(
+            sm_desc.banks,
+            sm_desc.depth,
+            topo.dfg.nodes.len().max(sm_desc.pai_requesters),
+        );
+        smem.load_image(0, mem_image)?;
+        let delays = topo.lane_delays(mapping);
         // Horizon: strictly above the largest delivery delay, so slot
         // `c % horizon` can only ever hold cycle-`c` deliveries.
-        let horizon = cons.iter().map(|e| e.delay).max().unwrap_or(1).max(1) as u64 + 1;
-        Ok(Engine {
-            mapping,
+        let horizon = delays.iter().copied().max().unwrap_or(1).max(1) as u64 + 1;
+        Ok(Lane {
             smem,
-            nodes,
+            nodes: topo.template.clone(),
             calendar: (0..horizon).map(|_| Vec::new()).collect(),
             horizon,
-            cons_idx,
-            cons,
-            active: (0..n as u32).collect(),
+            delays,
+            active: (0..topo.dfg.nodes.len() as u32).collect(),
             cycle: 0,
-            expected_commits,
             window: iteration_window(machine),
             mshrs: lsu_mshrs(machine),
-            total_iters,
             skipped: 0,
+            inflight_sum: 0.0,
+            steady_start_cycle: None,
+            steady_start_frontier: 0,
+            resp_buf: Vec::new(),
         })
     }
 
@@ -307,11 +357,11 @@ impl<'a> Engine<'a> {
     }
 
     /// Deliver a node's result for iteration `iter` to all consumers.
-    fn broadcast(&mut self, node: usize, iter: u64, value: f32) {
-        let (s, e) = (self.cons_idx[node] as usize, self.cons_idx[node + 1] as usize);
+    fn broadcast(&mut self, topo: &Topo<'_>, node: usize, iter: u64, value: f32) {
+        let (s, e) = (topo.cons_idx[node] as usize, topo.cons_idx[node + 1] as usize);
         for k in s..e {
-            let edge = self.cons[k];
-            let due_slot = ((self.cycle + edge.delay as u64) % self.horizon) as usize;
+            let edge = topo.cons[k];
+            let due_slot = ((self.cycle + self.delays[k] as u64) % self.horizon) as usize;
             self.calendar[due_slot].push(Delivery {
                 dst: edge.dst,
                 slot: edge.slot,
@@ -324,29 +374,25 @@ impl<'a> Engine<'a> {
     /// Retired-iteration frontier: stores consume one token per iteration
     /// (committing only on period boundaries), so the slowest store's
     /// consumed-iteration count bounds how far the sources may run ahead.
-    fn commit_frontier(&self) -> u64 {
-        self.expected_commits
+    fn commit_frontier(&self, topo: &Topo<'_>) -> u64 {
+        topo.expected_commits
             .iter()
             .map(|&(i, _)| self.nodes[i].next_iter)
             .min()
             .unwrap_or(0)
     }
 
-    fn done(&self) -> bool {
-        self.expected_commits.iter().all(|&(i, want)| self.nodes[i].commits >= want)
+    fn done(&self, topo: &Topo<'_>) -> bool {
+        topo.expected_commits.iter().all(|&(i, want)| self.nodes[i].commits >= want)
     }
 
-    /// Run to completion. `max_cycles` guards against deadlock bugs.
-    pub fn run(self, max_cycles: u64) -> Result<SimResult, DiagError> {
-        self.run_counting(max_cycles).map(|(r, _)| r)
-    }
-
-    /// [`Engine::run`], additionally reporting how many fully-stalled
-    /// cycles the event-driven jump skipped instead of ticking (the
-    /// reference engine ticks every one of them; `tests/engine_equivalence`
-    /// pins that skipping is observationally invisible).
+    /// Advance one cycle (plus any event-driven skip); returns `Ok(false)`
+    /// once every store has committed — the caller then drains the bank
+    /// pipeline via [`Lane::finish`]. One call is exactly one iteration of
+    /// the historical single-engine `while !done()` loop, so interleaving
+    /// calls across lanes changes nothing.
     ///
-    /// **Why the jump is sound.** A cycle changes engine state through
+    /// **Why the skip jump is sound.** A cycle changes lane state through
     /// exactly three channels: shared-memory progress (`SmemSim::tick`),
     /// calendar deliveries, and node fires. Suppose cycle `c` fired no
     /// node and left the smem idle. Node firing conditions depend only on
@@ -356,186 +402,188 @@ impl<'a> Engine<'a> {
     /// window — advanced only by fires. So at cycle `c+1` with an empty
     /// calendar slot, *nothing* can fire and the state after `c+1` equals
     /// the state after `c`: by induction every cycle up to (exclusive) the
-    /// next occupied calendar slot is a provable no-op, and the engine may
+    /// next occupied calendar slot is a provable no-op, and the lane may
     /// jump straight to it, adding the constant per-cycle parallelism
     /// contribution in closed form (exact: the increments are integers far
     /// below 2^53, so one f64 multiply-add equals the reference's repeated
-    /// additions bit for bit).
-    pub fn run_counting(mut self, max_cycles: u64) -> Result<(SimResult, u64), DiagError> {
-        let total_iters = self.total_iters;
-        let n = self.mapping.dfg.nodes.len();
-        let mut inflight_sum = 0.0f64;
-        let mut steady_start_cycle = None;
-        let mut steady_start_frontier = 0;
-        // One response buffer for the whole run (the old API returned a
-        // fresh Vec per cycle).
-        let mut resp_buf: Vec<MemResp> = Vec::new();
+    /// additions bit for bit). The skip cannot cross `done()` (commits
+    /// only change on fires) and a genuinely empty calendar is a deadlock:
+    /// fast-forward to the max-cycles guard the reference engine would
+    /// tick its way into.
+    fn tick(&mut self, topo: &Topo<'_>, max_cycles: u64) -> Result<bool, DiagError> {
+        if self.done(topo) {
+            return Ok(false);
+        }
+        if self.cycle >= max_cycles {
+            return Err(DiagError::InvalidParams(format!(
+                "sim `{}`: exceeded {max_cycles} cycles (deadlock or window too small)",
+                topo.dfg.name
+            )));
+        }
+        let total_iters = topo.total_iters;
+        let n = topo.dfg.nodes.len();
 
-        while !self.done() {
-            if self.cycle >= max_cycles {
-                return Err(DiagError::InvalidParams(format!(
-                    "sim `{}`: exceeded {max_cycles} cycles (deadlock or window too small)",
-                    self.mapping.dfg.name
-                )));
+        // 1. Memory completes.
+        let mut resp_buf = std::mem::take(&mut self.resp_buf);
+        resp_buf.clear();
+        self.smem.tick_into(&mut resp_buf);
+        for resp in &resp_buf {
+            if resp.write {
+                continue; // store committed at grant time (counted then)
             }
+            let node = (resp.tag >> 32) as usize;
+            let iter = resp.tag & 0xFFFF_FFFF;
+            self.nodes[node].outstanding -= 1;
+            self.broadcast(topo, node, iter, resp.value);
+        }
+        self.resp_buf = resp_buf;
 
-            // 1. Memory completes.
-            resp_buf.clear();
-            self.smem.tick_into(&mut resp_buf);
-            for resp in &resp_buf {
-                if resp.write {
-                    continue; // store committed at grant time (counted then)
-                }
-                let node = (resp.tag >> 32) as usize;
-                let iter = resp.tag & 0xFFFF_FFFF;
-                self.nodes[node].outstanding -= 1;
-                self.broadcast(node, iter, resp.value);
-            }
-
-            // 2. Deliver this cycle's calendar slot, keeping each queue
-            // iteration-sorted by insertion (queues are short; memory
-            // responses are the only out-of-order producers). The slot Vec
-            // is taken out and put back so its allocation is reused; no
-            // delivery ever lands in the current slot (delay ≥ 1 and
-            // < horizon), so pushes during step 1/3 cannot race this drain.
-            let slot = (self.cycle % self.horizon) as usize;
-            let mut batch = std::mem::take(&mut self.calendar[slot]);
-            for d in batch.drain(..) {
-                let q = &mut self.nodes[d.dst as usize].inq[d.slot as usize];
-                let tok = Token { iter: d.iter, value: d.value };
-                if q.back().map_or(true, |t| t.iter < tok.iter) {
-                    q.push_back(tok);
-                } else {
-                    let pos = q.partition_point(|t| t.iter < tok.iter);
-                    q.insert(pos, tok);
-                }
-            }
-            debug_assert!(self.calendar[slot].is_empty());
-            self.calendar[slot] = batch;
-
-            // 3. Fire PEs (deterministic ascending node order; one fire per
-            // node) — only nodes that still have iterations to process.
-            let frontier = self.commit_frontier();
-            let mut any_fired = false;
-            for i in 0..self.active.len() {
-                let node = self.active[i] as usize;
-                any_fired |= self.step_node(node, total_iters, frontier)?;
-            }
-            {
-                let nodes = &self.nodes;
-                self.active.retain(|&a| nodes[a as usize].next_iter < total_iters);
-            }
-
-            // Furthest-ahead iteration: once any node has finished, the
-            // lead is the full iteration count (a finished node's
-            // `next_iter` equals `total_iters` — what the max over all
-            // nodes used to report).
-            let lead = if self.active.len() < n {
-                total_iters
+        // 2. Deliver this cycle's calendar slot, keeping each queue
+        // iteration-sorted by insertion (queues are short; memory
+        // responses are the only out-of-order producers). The slot Vec
+        // is taken out and put back so its allocation is reused; no
+        // delivery ever lands in the current slot (delay ≥ 1 and
+        // < horizon), so pushes during step 1/3 cannot race this drain.
+        let slot = (self.cycle % self.horizon) as usize;
+        let mut batch = std::mem::take(&mut self.calendar[slot]);
+        for d in batch.drain(..) {
+            let q = &mut self.nodes[d.dst as usize].inq[d.slot as usize];
+            let tok = Token { iter: d.iter, value: d.value };
+            if q.back().map_or(true, |t| t.iter < tok.iter) {
+                q.push_back(tok);
             } else {
-                self.active
-                    .iter()
-                    .map(|&a| self.nodes[a as usize].next_iter)
-                    .max()
-                    .unwrap_or(0)
-            };
-            inflight_sum += lead.saturating_sub(frontier) as f64;
-
-            // Steady-state II measurement: between 25% and 100% of commits.
-            if steady_start_cycle.is_none() && frontier >= total_iters / 4 {
-                steady_start_cycle = Some(self.cycle);
-                steady_start_frontier = frontier;
+                let pos = q.partition_point(|t| t.iter < tok.iter);
+                q.insert(pos, tok);
             }
+        }
+        debug_assert!(self.calendar[slot].is_empty());
+        self.calendar[slot] = batch;
 
-            // Event-driven cycle skip (see `run_counting`): nothing fired
-            // and the memory is idle, so every cycle before the next
-            // occupied calendar slot is a no-op — jump over it. The
-            // frontier/lead pair is unchanged across the skipped cycles, so
-            // their parallelism contribution is `skipped × delta` (exact —
-            // integer-valued f64 sums below 2^53). The skip cannot cross
-            // `done()` (commits only change on fires) and a genuinely
-            // empty calendar is a deadlock: fast-forward to the max-cycles
-            // guard the reference engine would tick its way into.
-            if !any_fired && self.smem.idle() && !self.done() {
-                let next_due = (1..self.horizon).find(|k| {
-                    !self.calendar[((self.cycle + k) % self.horizon) as usize].is_empty()
-                });
-                let jump = next_due
-                    .unwrap_or_else(|| max_cycles.saturating_sub(self.cycle).max(1));
-                let skipped = jump - 1;
-                if skipped > 0 {
-                    let delta = lead.saturating_sub(frontier);
-                    inflight_sum += (skipped * delta) as f64;
-                    self.cycle += skipped;
-                    self.skipped += skipped;
-                }
-            }
-
-            self.cycle += 1;
+        // 3. Fire PEs (deterministic ascending node order; one fire per
+        // node) — only nodes that still have iterations to process.
+        let frontier = self.commit_frontier(topo);
+        let mut any_fired = false;
+        for i in 0..self.active.len() {
+            let node = self.active[i] as usize;
+            any_fired |= self.step_node(topo, node, frontier)?;
+        }
+        {
+            let nodes = &self.nodes;
+            self.active.retain(|&a| nodes[a as usize].next_iter < total_iters);
         }
 
-        // Drain the bank pipeline: commits were counted at submit time but
-        // the writes land one grant + one completion cycle later.
+        // Furthest-ahead iteration: once any node has finished, the
+        // lead is the full iteration count (a finished node's
+        // `next_iter` equals `total_iters` — what the max over all
+        // nodes used to report).
+        let lead = if self.active.len() < n {
+            total_iters
+        } else {
+            self.active
+                .iter()
+                .map(|&a| self.nodes[a as usize].next_iter)
+                .max()
+                .unwrap_or(0)
+        };
+        self.inflight_sum += lead.saturating_sub(frontier) as f64;
+
+        // Steady-state II measurement: between 25% and 100% of commits.
+        if self.steady_start_cycle.is_none() && frontier >= total_iters / 4 {
+            self.steady_start_cycle = Some(self.cycle);
+            self.steady_start_frontier = frontier;
+        }
+
+        // Event-driven cycle skip (equivalence argument above): nothing
+        // fired and the memory is idle, so every cycle before the next
+        // occupied calendar slot is a no-op — jump over it. The
+        // frontier/lead pair is unchanged across the skipped cycles, so
+        // their parallelism contribution is `skipped × delta`.
+        if !any_fired && self.smem.idle() && !self.done(topo) {
+            let next_due = (1..self.horizon).find(|k| {
+                !self.calendar[((self.cycle + k) % self.horizon) as usize].is_empty()
+            });
+            let jump =
+                next_due.unwrap_or_else(|| max_cycles.saturating_sub(self.cycle).max(1));
+            let skipped = jump - 1;
+            if skipped > 0 {
+                let delta = lead.saturating_sub(frontier);
+                self.inflight_sum += (skipped * delta) as f64;
+                self.cycle += skipped;
+                self.skipped += skipped;
+            }
+        }
+
+        self.cycle += 1;
+        Ok(true)
+    }
+
+    /// Drain the bank pipeline and package the lane's result. Called once
+    /// [`Lane::tick`] reports completion: commits were counted at submit
+    /// time but the writes land one grant + one completion cycle later.
+    fn finish(&mut self, topo: &Topo<'_>) -> (SimResult, u64) {
+        let mut resp_buf = std::mem::take(&mut self.resp_buf);
         while !self.smem.idle() {
             resp_buf.clear();
             self.smem.tick_into(&mut resp_buf);
             self.cycle += 1;
         }
+        self.resp_buf = resp_buf;
 
         let fires = self.nodes.iter().map(|s| s.fires).sum();
-        let measured_ii = match steady_start_cycle {
+        let measured_ii = match self.steady_start_cycle {
             Some(c0) => {
-                let di = self.commit_frontier().saturating_sub(steady_start_frontier);
+                let di = self.commit_frontier(topo).saturating_sub(self.steady_start_frontier);
                 if di > 0 {
                     (self.cycle - c0) as f64 / di as f64
                 } else {
                     self.cycle as f64
                 }
             }
-            None => self.cycle as f64 / total_iters as f64,
+            None => self.cycle as f64 / topo.total_iters as f64,
         };
-        Ok((
+        (
             SimResult {
                 cycles: self.cycle,
                 mem: self.smem.image().to_vec(),
                 fires,
                 smem: self.smem.stats.clone(),
-                avg_parallelism: inflight_sum / self.cycle.max(1) as f64,
+                avg_parallelism: self.inflight_sum / self.cycle.max(1) as f64,
                 measured_ii,
             },
             self.skipped,
-        ))
+        )
     }
 
     /// Step one node; returns whether it fired this cycle (the cycle-skip
     /// trigger watches for all-stalled cycles).
     fn step_node(
         &mut self,
+        topo: &Topo<'_>,
         node: usize,
-        total_iters: u64,
         frontier: u64,
     ) -> Result<bool, DiagError> {
+        let total_iters = topo.total_iters;
         let mut fired = false;
-        // `mapping` is a shared borrow independent of `&mut self` (perf:
+        // `dfg` is a shared borrow independent of `&mut self` (perf:
         // avoids cloning NodeKind — and its coef Vec — per node per cycle).
-        let mapping: &'a Mapping = self.mapping;
-        let op = mapping.dfg.nodes[node].op;
-        match &mapping.dfg.nodes[node].kind {
+        let dfg = topo.dfg;
+        let op = dfg.nodes[node].op;
+        match &dfg.nodes[node].kind {
             NodeKind::Const | NodeKind::Index(_) => {
                 let iter = self.nodes[node].next_iter;
                 if iter < total_iters && iter < frontier + self.window {
-                    let value = match mapping.dfg.nodes[node].kind {
-                        NodeKind::Const => mapping.dfg.nodes[node].imm,
+                    let value = match dfg.nodes[node].kind {
+                        NodeKind::Const => dfg.nodes[node].imm,
                         NodeKind::Index(d) => self.nodes[node].idx[d] as f32,
                         _ => unreachable!(),
                     };
-                    if matches!(mapping.dfg.nodes[node].kind, NodeKind::Index(_)) {
-                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    if matches!(dfg.nodes[node].kind, NodeKind::Index(_)) {
+                        self.nodes[node].advance_addr(&dfg.dims);
                     }
                     self.nodes[node].next_iter += 1;
                     self.nodes[node].fires += 1;
                     fired = true;
-                    self.broadcast(node, iter, value);
+                    self.broadcast(topo, node, iter, value);
                 }
             }
             NodeKind::Load(Access::Affine { .. }) => {
@@ -545,7 +593,7 @@ impl<'a> Engine<'a> {
                     && self.nodes[node].outstanding < self.mshrs
                 {
                     let addr = self.nodes[node].addr as usize;
-                    self.nodes[node].advance_addr(&mapping.dfg.dims);
+                    self.nodes[node].advance_addr(&dfg.dims);
                     self.smem.submit(MemReq {
                         requester: node,
                         addr,
@@ -590,11 +638,11 @@ impl<'a> Engine<'a> {
                     } else {
                         0.0
                     };
-                    let v = op.eval(a, b, mapping.dfg.nodes[node].imm);
+                    let v = op.eval(a, b, dfg.nodes[node].imm);
                     self.nodes[node].next_iter = expect + 1;
                     self.nodes[node].fires += 1;
                     fired = true;
-                    self.broadcast(node, expect, v);
+                    self.broadcast(topo, node, expect, v);
                 }
             }
             NodeKind::Accum { reset_period } => {
@@ -608,7 +656,7 @@ impl<'a> Engine<'a> {
                     };
                     let iter = t0.iter;
                     if iter % *reset_period as u64 == 0 {
-                        self.nodes[node].acc = mapping.dfg.nodes[node].imm;
+                        self.nodes[node].acc = dfg.nodes[node].imm;
                     }
                     let a = t0.value;
                     let st = self.nodes[node].acc;
@@ -620,7 +668,7 @@ impl<'a> Engine<'a> {
                     self.nodes[node].next_iter = iter + 1;
                     self.nodes[node].fires += 1;
                     fired = true;
-                    self.broadcast(node, iter, v);
+                    self.broadcast(topo, node, iter, v);
                 }
             }
             NodeKind::Store { access, period } => {
@@ -638,7 +686,7 @@ impl<'a> Engine<'a> {
                     let phase = iter % *period as u64;
                     let gen_addr = self.nodes[node].addr as usize;
                     if matches!(access, Access::Affine { .. }) {
-                        self.nodes[node].advance_addr(&mapping.dfg.dims);
+                        self.nodes[node].advance_addr(&dfg.dims);
                     }
                     if phase == *period as u64 - 1 {
                         let addr = match &access {
@@ -654,7 +702,7 @@ impl<'a> Engine<'a> {
                         })?;
                         // Commit counted at grant; simple model: count now,
                         // the write lands within two cycles and the run only
-                        // ends once the smem is drained below.
+                        // ends once the smem is drained in `finish`.
                         self.nodes[node].commits += 1;
                     }
                     self.nodes[node].fires += 1;
@@ -663,6 +711,163 @@ impl<'a> Engine<'a> {
             }
         }
         Ok(fired)
+    }
+}
+
+/// One grid point's inputs to a batched [`SimArena`] run: a mapping of the
+/// batch's shared DFG onto this point's machine, plus its memory image.
+#[derive(Clone, Copy)]
+pub struct LaneSpec<'a> {
+    pub mapping: &'a Mapping,
+    pub machine: &'a MachineDesc,
+    pub image: &'a [f32],
+}
+
+enum LaneSlot {
+    Running(Box<Lane>),
+    Done(Result<(SimResult, u64), DiagError>),
+}
+
+/// Batched multi-point simulation arena: N same-DFG grid points stepped in
+/// round-robin lockstep over one shared [`Topo`] skeleton. Per-point state
+/// (smem, node queues, calendar, edge delays) lives in per-lane arrays;
+/// the DFG decode, validation, CSR adjacency and node-state template are
+/// shared. Each lane retires independently (and event-skips on its own
+/// cycle counter), and a failing lane never poisons its siblings.
+pub struct SimArena<'a> {
+    topo: Topo<'a>,
+    slots: Vec<LaneSlot>,
+}
+
+impl<'a> SimArena<'a> {
+    /// Build an arena over `specs`. The shared skeleton is decoded once
+    /// from the first lane's DFG; a lane whose mapping carries a
+    /// *different* DFG, or whose machine/image is unusable, fails
+    /// individually without poisoning its siblings. Errs only when the
+    /// batch is empty or the shared DFG itself is rejected (iteration-tag
+    /// overflow, >2-operand nodes) — which would fail every lane anyway.
+    pub fn new(specs: &[LaneSpec<'a>]) -> Result<SimArena<'a>, DiagError> {
+        let first = specs
+            .first()
+            .ok_or_else(|| DiagError::InvalidParams("sim batch: empty lane list".into()))?;
+        let topo = Topo::new(&first.mapping.dfg)?;
+        let dfg_hash = first.mapping.dfg.stable_hash();
+        let slots = specs
+            .iter()
+            .map(|s| {
+                if s.mapping.dfg.stable_hash() != dfg_hash {
+                    return LaneSlot::Done(Err(DiagError::InvalidParams(format!(
+                        "sim batch `{}`: lane DFG `{}` differs from the batch DFG",
+                        topo.dfg.name, s.mapping.dfg.name
+                    ))));
+                }
+                match Lane::new(&topo, s.mapping, s.machine, s.image) {
+                    Ok(l) => LaneSlot::Running(Box::new(l)),
+                    Err(e) => LaneSlot::Done(Err(e)),
+                }
+            })
+            .collect();
+        Ok(SimArena { topo, slots })
+    }
+
+    /// Number of lanes (grid points) in the batch.
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Step every live lane in round-robin lockstep until all complete,
+    /// returning per-lane `(SimResult, skipped_cycles)` in input order.
+    /// Lanes share no mutable state, so the interleaving is unobservable:
+    /// each lane's result is bit- and cycle-identical to running it alone
+    /// through [`simulate_counting`] (pinned in `tests/engine_equivalence`).
+    pub fn run(mut self, max_cycles: u64) -> Vec<Result<(SimResult, u64), DiagError>> {
+        let topo = &self.topo;
+        let mut live: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, LaneSlot::Running(_)))
+            .map(|(i, _)| i)
+            .collect();
+        while !live.is_empty() {
+            let slots = &mut self.slots;
+            live.retain(|&i| {
+                let LaneSlot::Running(lane) = &mut slots[i] else { return false };
+                match lane.tick(topo, max_cycles) {
+                    Ok(true) => true,
+                    Ok(false) => {
+                        let r = lane.finish(topo);
+                        slots[i] = LaneSlot::Done(Ok(r));
+                        false
+                    }
+                    Err(e) => {
+                        slots[i] = LaneSlot::Done(Err(e));
+                        false
+                    }
+                }
+            });
+        }
+        self.slots
+            .into_iter()
+            .map(|s| match s {
+                LaneSlot::Done(r) => r,
+                LaneSlot::Running(_) => unreachable!("live set drained"),
+            })
+            .collect()
+    }
+}
+
+/// Simulate a batch of same-DFG grid points through one [`SimArena`],
+/// returning each lane's `(SimResult, skipped_cycles)` in input order.
+/// Per-lane failures (OOB image, smem-less machine, guard trips) are
+/// per-lane `Err`s; a batch-level DFG rejection fails every lane with the
+/// same error. An empty batch returns an empty Vec.
+pub fn simulate_batch(
+    specs: &[LaneSpec<'_>],
+    max_cycles: u64,
+) -> Vec<Result<(SimResult, u64), DiagError>> {
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    match SimArena::new(specs) {
+        Ok(arena) => arena.run(max_cycles),
+        Err(e) => specs.iter().map(|_| Err(e.clone())).collect(),
+    }
+}
+
+/// Single-point engine: the N=1 special case of the [`SimArena`] — one
+/// shared-topology decode plus one lane, driven by the very same
+/// [`Lane::tick`] loop the batched arena uses, so `simulate()` and
+/// `SimArena::run` cannot drift apart.
+pub struct Engine<'a> {
+    topo: Topo<'a>,
+    lane: Lane,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        mapping: &'a Mapping,
+        machine: &MachineDesc,
+        mem_image: &[f32],
+    ) -> Result<Self, DiagError> {
+        let topo = Topo::new(&mapping.dfg)?;
+        let lane = Lane::new(&topo, mapping, machine, mem_image)?;
+        Ok(Engine { topo, lane })
+    }
+
+    /// Run to completion. `max_cycles` guards against deadlock bugs.
+    pub fn run(self, max_cycles: u64) -> Result<SimResult, DiagError> {
+        self.run_counting(max_cycles).map(|(r, _)| r)
+    }
+
+    /// [`Engine::run`], additionally reporting how many fully-stalled
+    /// cycles the event-driven jump skipped instead of ticking (the
+    /// reference engine ticks every one of them; `tests/engine_equivalence`
+    /// pins that skipping is observationally invisible). The soundness
+    /// argument lives on [`Lane::tick`].
+    pub fn run_counting(mut self, max_cycles: u64) -> Result<(SimResult, u64), DiagError> {
+        while self.lane.tick(&self.topo, max_cycles)? {}
+        Ok(self.lane.finish(&self.topo))
     }
 }
 
@@ -678,8 +883,8 @@ pub fn simulate(
 }
 
 /// [`simulate`], additionally returning the number of fully-stalled cycles
-/// the event-driven jump skipped ([`Engine::run_counting`]). Benches and
-/// the cycle-skip equivalence tests read the counter; the `SimResult` is
+/// the event-driven jump skipped ([`Lane::tick`]). Benches and the
+/// cycle-skip equivalence tests read the counter; the `SimResult` is
 /// identical to [`simulate`]'s.
 pub fn simulate_counting(
     mapping: &Mapping,
@@ -888,6 +1093,13 @@ mod tests {
         let mapping = compile(d, &m, 1).unwrap();
         let err = simulate(&mapping, &m, &[0.0f32; 16], 10).map(|_| ()).unwrap_err();
         assert!(err.to_string().contains("iteration tag"), "{err}");
+        // The batched path rejects the same DFG for every lane.
+        let spec = LaneSpec { mapping: &mapping, machine: &m, image: &[0.0f32; 16] };
+        let batch = simulate_batch(&[spec, spec], 10);
+        assert_eq!(batch.len(), 2);
+        for r in &batch {
+            assert!(r.as_ref().unwrap_err().to_string().contains("iteration tag"));
+        }
         // One iteration fewer than the cap is accepted (construction only;
         // running it would take forever).
         let mut ok = Dfg::new("under", vec![1 << 16, 1 << 15]);
@@ -960,13 +1172,88 @@ mod tests {
         d.store_affine(e, 8, vec![1], 1);
         let mapping = compile(d, &m, 2).unwrap();
         let engine = Engine::new(&mapping, &m, &[0.5f32; 64]).unwrap();
-        let max_delay = engine.cons.iter().map(|c| c.delay as u64).max().unwrap();
-        assert!(engine.horizon > max_delay, "{} vs {}", engine.horizon, max_delay);
-        assert_eq!(engine.calendar.len() as u64, engine.horizon);
-        // CSR covers every DFG edge exactly once.
-        let n_edges: usize =
-            mapping.dfg.nodes.iter().map(|nd| nd.inputs.len()).sum();
-        assert_eq!(engine.cons.len(), n_edges);
-        assert_eq!(engine.cons_idx[engine.cons_idx.len() - 1] as usize, n_edges);
+        let max_delay = engine.lane.delays.iter().map(|&d| d as u64).max().unwrap();
+        assert!(
+            engine.lane.horizon > max_delay,
+            "{} vs {}",
+            engine.lane.horizon,
+            max_delay
+        );
+        assert_eq!(engine.lane.calendar.len() as u64, engine.lane.horizon);
+        // CSR covers every DFG edge exactly once, with one delay per edge.
+        let n_edges: usize = mapping.dfg.nodes.iter().map(|nd| nd.inputs.len()).sum();
+        assert_eq!(engine.topo.cons.len(), n_edges);
+        assert_eq!(engine.lane.delays.len(), n_edges);
+        assert_eq!(engine.topo.cons_idx[engine.topo.cons_idx.len() - 1] as usize, n_edges);
+    }
+
+    #[test]
+    fn arena_lanes_match_solo_runs_bit_for_bit() {
+        // Two machines (different context depths → different windows) and
+        // two images over one DFG: every lane must equal its solo run.
+        let m1 = machine();
+        let mut p2 = presets::standard();
+        p2.context_depth = 16;
+        let m2 = elaborate(p2).unwrap().artifact;
+        let mut d = Dfg::new("vadd-batch", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(16, vec![1]);
+        let s = d.compute(Op::Add, x, y);
+        d.store_affine(s, 32, vec![1], 1);
+        let map1 = compile(d.clone(), &m1, 7).unwrap();
+        let map2 = compile(d, &m2, 7).unwrap();
+        let img1: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let img2: Vec<f32> = (0..64).map(|i| 64.0 - i as f32).collect();
+        let specs = [
+            LaneSpec { mapping: &map1, machine: &m1, image: &img1 },
+            LaneSpec { mapping: &map2, machine: &m2, image: &img2 },
+            LaneSpec { mapping: &map1, machine: &m1, image: &img2 },
+        ];
+        let batch = simulate_batch(&specs, 1_000_000);
+        assert_eq!(batch.len(), 3);
+        for (spec, got) in specs.iter().zip(&batch) {
+            let (got, got_skip) = got.as_ref().unwrap();
+            let (solo, solo_skip) =
+                simulate_counting(spec.mapping, spec.machine, spec.image, 1_000_000).unwrap();
+            assert_eq!(got.cycles, solo.cycles);
+            assert_eq!(got.fires, solo.fires);
+            assert_eq!(got.smem, solo.smem);
+            assert_eq!(got.mem, solo.mem);
+            assert_eq!(got.avg_parallelism.to_bits(), solo.avg_parallelism.to_bits());
+            assert_eq!(got.measured_ii.to_bits(), solo.measured_ii.to_bits());
+            assert_eq!(*got_skip, solo_skip);
+        }
+    }
+
+    #[test]
+    fn arena_isolates_failing_lanes() {
+        let m = machine();
+        let mut d = Dfg::new("vadd-iso", vec![16]);
+        let x = d.load_affine(0, vec![1]);
+        let y = d.load_affine(16, vec![1]);
+        let s = d.compute(Op::Add, x, y);
+        d.store_affine(s, 32, vec![1], 1);
+        let mapping = compile(d.clone(), &m, 7).unwrap();
+        // A lane with a different DFG fails alone; the healthy lanes run.
+        let mut other = Dfg::new("other", vec![4]);
+        let ox = other.load_affine(0, vec![1]);
+        other.store_affine(ox, 8, vec![1], 1);
+        let other_map = compile(other, &m, 7).unwrap();
+        let img: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let specs = [
+            LaneSpec { mapping: &mapping, machine: &m, image: &img },
+            LaneSpec { mapping: &other_map, machine: &m, image: &img },
+            LaneSpec { mapping: &mapping, machine: &m, image: &img },
+        ];
+        let batch = simulate_batch(&specs, 1_000_000);
+        assert!(batch[0].is_ok());
+        let err = batch[1].as_ref().unwrap_err().to_string();
+        assert!(err.contains("differs from the batch DFG"), "{err}");
+        assert!(batch[2].is_ok());
+        let solo = simulate(&mapping, &m, &img, 1_000_000).unwrap();
+        assert_eq!(batch[0].as_ref().unwrap().0.mem, solo.mem);
+        assert_eq!(batch[2].as_ref().unwrap().0.mem, solo.mem);
+        // An empty batch is an empty result, not an error.
+        assert!(simulate_batch(&[], 10).is_empty());
     }
 }

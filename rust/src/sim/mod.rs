@@ -2,8 +2,10 @@
 //!
 //! * [`machine`] — the elaborated architecture description (DIAG artifact).
 //! * [`smem`] — banked shared memory behind the round-robin PAI.
-//! * [`engine`] — token-dataflow cycle simulation of one mapped kernel
-//!   (the allocation-free fast path of every sweep).
+//! * [`engine`] — token-dataflow cycle simulation of mapped kernels: the
+//!   allocation-free fast path of every sweep, plus the batched
+//!   [`engine::SimArena`] that steps many same-DFG grid points in lockstep
+//!   over one shared topology skeleton.
 //! * [`reference`] — the frozen pre-optimization engine: executable
 //!   semantic specification + throughput-bench baseline.
 //! * [`task`] — multi-phase task execution: host launch protocol, DMA
@@ -17,5 +19,5 @@ pub mod scalar;
 pub mod smem;
 pub mod task;
 
-pub use engine::{simulate, simulate_counting, SimResult};
+pub use engine::{simulate, simulate_batch, simulate_counting, LaneSpec, SimArena, SimResult};
 pub use machine::MachineDesc;

@@ -97,38 +97,110 @@ pub fn run_task_with(
     max_cycles_per_phase: u64,
     sim: &mut PhaseSim<'_>,
 ) -> Result<TaskResult, DiagError> {
-    let host = machine
-        .host
-        .as_ref()
-        .ok_or_else(|| DiagError::InvalidParams("machine has no host bridge".into()))?;
-    let dma_wpc = machine.dma.as_ref().map(|d| d.words_per_cycle as u64);
-    let pingpong = machine.dma.as_ref().map(|d| d.pingpong).unwrap_or(false);
+    let mut cur = TaskCursor::new(task, machine, mem_init)?;
+    loop {
+        let sres = match cur.pending() {
+            Some(req) => sim(req.mapping, machine, req.image, max_cycles_per_phase)?,
+            None => break,
+        };
+        cur.advance(&sres);
+    }
+    Ok(cur.finish())
+}
 
-    let mut res = TaskResult::default();
-    let mut mem = mem_init.to_vec();
+/// The next compute step a [`TaskCursor`] needs answered: the pending
+/// phase's mapping and the task's *current* shared-memory image.
+pub struct PhaseReq<'c> {
+    pub mapping: &'c Mapping,
+    pub image: &'c [f32],
+    /// Index of the pending phase within the task.
+    pub phase: usize,
+}
 
-    // Config loading: if the whole task's context images fit the context
-    // memory simultaneously, configurations are loaded once and the CPE can
-    // relaunch phases; otherwise each phase pays a host config load.
-    let ctx_words_total: usize =
-        task.phases.iter().map(|p| p.mapping.config.max_words_per_pe()).sum();
-    let preloadable = ctx_words_total <= machine.context_depth;
-    let config_beats: u64 = task.phases.iter().map(|p| p.mapping.config.load_beats()).sum();
-    let cfg_rate = host.config_words_per_cycle as u64;
+/// Resumable task stepper: the single source of truth for host-protocol,
+/// config-load and DMA accounting. [`TaskCursor::pending`] exposes the next
+/// phase's compute request; the caller answers it (solo engine, SimResult
+/// cache, or a batched [`crate::sim::engine::SimArena`] stepping many
+/// points' cursors in lockstep) and feeds the result to
+/// [`TaskCursor::advance`]. [`run_task_with`] is the drive-to-completion
+/// loop over exactly this cursor, so the batched and single-point paths
+/// cannot diverge on timing accounting.
+pub struct TaskCursor<'t> {
+    task: &'t Task,
+    machine: &'t MachineDesc,
+    mem: Vec<f32>,
+    res: TaskResult,
+    k: usize,
+    preloadable: bool,
+    prev_compute: u64,
+}
 
-    if preloadable {
-        res.config_cycles += config_beats.div_ceil(cfg_rate) + host.axi_latency_cycles as u64;
-        res.host_cycles += (host.rtt_decode_cycles + host.axi_latency_cycles) as u64;
+impl<'t> TaskCursor<'t> {
+    pub fn new(
+        task: &'t Task,
+        machine: &'t MachineDesc,
+        mem_init: &[f32],
+    ) -> Result<TaskCursor<'t>, DiagError> {
+        let host = machine
+            .host
+            .as_ref()
+            .ok_or_else(|| DiagError::InvalidParams("machine has no host bridge".into()))?;
+        let mut res = TaskResult::default();
+
+        // Config loading: if the whole task's context images fit the context
+        // memory simultaneously, configurations are loaded once and the CPE
+        // can relaunch phases; otherwise each phase pays a host config load.
+        let ctx_words_total: usize =
+            task.phases.iter().map(|p| p.mapping.config.max_words_per_pe()).sum();
+        let preloadable = ctx_words_total <= machine.context_depth;
+        let config_beats: u64 = task.phases.iter().map(|p| p.mapping.config.load_beats()).sum();
+        let cfg_rate = host.config_words_per_cycle as u64;
+
+        if preloadable {
+            res.config_cycles += config_beats.div_ceil(cfg_rate) + host.axi_latency_cycles as u64;
+            res.host_cycles += (host.rtt_decode_cycles + host.axi_latency_cycles) as u64;
+        }
+
+        Ok(TaskCursor {
+            task,
+            machine,
+            mem: mem_init.to_vec(),
+            res,
+            k: 0,
+            preloadable,
+            prev_compute: 0,
+        })
     }
 
-    let mut prev_compute: u64 = 0;
-    for (k, phase) in task.phases.iter().enumerate() {
+    /// The next phase awaiting compute, or `None` once every phase ran.
+    pub fn pending(&self) -> Option<PhaseReq<'_>> {
+        self.task.phases.get(self.k).map(|p| PhaseReq {
+            mapping: &p.mapping,
+            image: &self.mem,
+            phase: self.k,
+        })
+    }
+
+    /// Apply the pending phase's full timing accounting — config, launch,
+    /// DMA in, the given compute result, DMA out — and move to the next
+    /// phase. `sres` must answer the request [`TaskCursor::pending`]
+    /// returned (same mapping, same input image).
+    pub fn advance(&mut self, sres: &SimResult) {
+        let (machine, res) = (self.machine, &mut self.res);
+        // `new` verified the host bridge exists.
+        let host = machine.host.as_ref().unwrap();
+        let dma_wpc = machine.dma.as_ref().map(|d| d.words_per_cycle as u64);
+        let pingpong = machine.dma.as_ref().map(|d| d.pingpong).unwrap_or(false);
+        let cfg_rate = host.config_words_per_cycle as u64;
+        let k = self.k;
+        let phase = &self.task.phases[k];
+
         // Per-phase config + launch cost.
-        if !preloadable {
-            res.config_cycles +=
-                phase.mapping.config.load_beats().div_ceil(cfg_rate) + host.axi_latency_cycles as u64;
+        if !self.preloadable {
+            res.config_cycles += phase.mapping.config.load_beats().div_ceil(cfg_rate)
+                + host.axi_latency_cycles as u64;
         }
-        let launch = if k == 0 || machine.cpe.is_none() || !preloadable {
+        let launch = if k == 0 || machine.cpe.is_none() || !self.preloadable {
             (host.rtt_decode_cycles + host.axi_latency_cycles) as u64
         } else {
             machine.cpe.as_ref().unwrap().relaunch_cycles as u64
@@ -139,7 +211,7 @@ pub fn run_task_with(
         if let Some(wpc) = dma_wpc {
             let cyc = phase.dma_in_words.div_ceil(wpc);
             res.dma_cycles_total += cyc;
-            let exposed = if pingpong { cyc.saturating_sub(prev_compute) } else { cyc };
+            let exposed = if pingpong { cyc.saturating_sub(self.prev_compute) } else { cyc };
             res.dma_cycles_exposed += exposed;
         } else if phase.dma_in_words > 0 {
             // No DMA plugin: the host moves data one word per AXI beat.
@@ -148,32 +220,39 @@ pub fn run_task_with(
             res.dma_cycles_exposed += cyc;
         }
 
-        // Compute (possibly answered by the coordinator's SimResult cache;
-        // the image buffer is reused across phases either way).
-        let sres = sim(&phase.mapping, machine, &mem, max_cycles_per_phase)?;
-        mem.clone_from(&sres.mem);
+        // Compute (answered by the caller; the image buffer is reused
+        // across phases either way).
+        self.mem.clone_from(&sres.mem);
         res.compute_cycles += sres.cycles;
         res.phase_compute.push(sres.cycles);
-        prev_compute = sres.cycles;
+        self.prev_compute = sres.cycles;
 
         // DMA out (the next phase's ping-pong overlaps it; charge half
         // exposed under ping-pong as the tail write-back).
         if let Some(wpc) = dma_wpc {
             let cyc = phase.dma_out_words.div_ceil(wpc);
             res.dma_cycles_total += cyc;
-            let exposed = if pingpong && k + 1 < task.phases.len() { 0 } else { cyc };
+            let exposed = if pingpong && k + 1 < self.task.phases.len() { 0 } else { cyc };
             res.dma_cycles_exposed += exposed;
         } else if phase.dma_out_words > 0 {
             let cyc = phase.dma_out_words * 2 + host.axi_latency_cycles as u64;
             res.dma_cycles_total += cyc;
             res.dma_cycles_exposed += cyc;
         }
+
+        self.k += 1;
     }
 
-    res.total_cycles =
-        res.compute_cycles + res.dma_cycles_exposed + res.config_cycles + res.host_cycles;
-    res.mem = mem;
-    Ok(res)
+    /// Total up and return the result. Meaningful once [`TaskCursor::pending`]
+    /// returns `None` (all phases advanced).
+    pub fn finish(mut self) -> TaskResult {
+        self.res.total_cycles = self.res.compute_cycles
+            + self.res.dma_cycles_exposed
+            + self.res.config_cycles
+            + self.res.host_cycles;
+        self.res.mem = self.mem;
+        self.res
+    }
 }
 
 /// Makespan (cycles) of `n_tasks` identical independent tasks pipelined

@@ -54,7 +54,12 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 /// fingerprint) instead of a bare workload name, `SweepPoint` grew
 /// per-workload performance columns, and `SweepReport` the
 /// `rejected_nonfinite` counter.
-pub const VERSION: u16 = 2;
+///
+/// v3 (PR 6): `JobTiming` grew the batched-simulation counters
+/// (`batch_launches`, `batch_lanes`, `sim_skipped_cycles`), and the
+/// [`Kind::SeedClass`] entry maps a raw mapper seed to its canonical
+/// placement-equivalence representative.
+pub const VERSION: u16 = 3;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -77,6 +82,11 @@ pub enum Kind {
     Place = 6,
     Route = 7,
     Schedule = 8,
+    /// Seed canonicalization record (PR 6): the canonical seed of a
+    /// placement-equivalence class. Stored under two key shapes — raw
+    /// seed → canonical seed, and placement signature → representative
+    /// seed — so warm stores skip the probe placement entirely.
+    SeedClass = 9,
 }
 
 fn corrupt(msg: impl Into<String>) -> DiagError {
@@ -348,7 +358,7 @@ fn topology_label(s: &str) -> Result<&'static str, DiagError> {
 /// Resolve a serialized pass name back to `CompilePass::name`'s static.
 fn pass_label(s: &str) -> Result<&'static str, DiagError> {
     use CompilePass::*;
-    [Elaborate, Mapping, Place, Route, Schedule, ConfigGen, Simulate]
+    [Elaborate, Mapping, Place, Route, Schedule, ConfigGen, Simulate, SeedClass]
         .into_iter()
         .map(|p| p.name())
         .find(|n| *n == s)
@@ -845,6 +855,26 @@ pub fn decode_mapping(bytes: &[u8]) -> Result<(Mapping, StageNanos), DiagError> 
 }
 
 // ---------------------------------------------------------------------------
+// Seed-class records
+// ---------------------------------------------------------------------------
+
+/// Seed-class entry: one `u64` — the canonical seed (under a raw-seed
+/// key) or the class representative (under a signature key). The byte
+/// layout is identical for both key shapes; the key disambiguates.
+pub fn encode_seed_class(seed: u64) -> Vec<u8> {
+    let mut e = Enc::new(Kind::SeedClass);
+    e.u64(seed); // verbatim: seeds are full-width identities
+    e.finish()
+}
+
+pub fn decode_seed_class(bytes: &[u8]) -> Result<u64, DiagError> {
+    let mut d = Dec::open(bytes, Kind::SeedClass)?;
+    let seed = d.u64()?;
+    d.close()?;
+    Ok(seed)
+}
+
+// ---------------------------------------------------------------------------
 // SimResult
 // ---------------------------------------------------------------------------
 
@@ -893,7 +923,10 @@ fn enc_timing(e: &mut Enc, t: &JobTiming) {
         .u64(t.simulate_ns)
         .u64(t.baseline_ns)
         .u64(t.cache_hits)
-        .u64(t.cache_misses);
+        .u64(t.cache_misses)
+        .u64(t.batch_launches)
+        .u64(t.batch_lanes)
+        .u64(t.sim_skipped_cycles);
 }
 
 fn dec_timing(d: &mut Dec) -> Result<JobTiming, DiagError> {
@@ -904,6 +937,9 @@ fn dec_timing(d: &mut Dec) -> Result<JobTiming, DiagError> {
         baseline_ns: d.u64()?,
         cache_hits: d.u64()?,
         cache_misses: d.u64()?,
+        batch_launches: d.u64()?,
+        batch_lanes: d.u64()?,
+        sim_skipped_cycles: d.u64()?,
     })
 }
 
@@ -1217,6 +1253,19 @@ mod tests {
         assert_eq!(bits(&back.mem), bits(&r.mem), "-0.0 and denormals survive");
         assert_eq!(back.smem, r.smem);
         assert_eq!(back.fires, r.fires);
+    }
+
+    #[test]
+    fn seed_class_roundtrips_full_width_seeds() {
+        for seed in [0u64, 42, (1 << 53) + 1, u64::MAX] {
+            let bytes = encode_seed_class(seed);
+            assert_eq!(decode_seed_class(&bytes).unwrap(), seed);
+            assert_eq!(encode_seed_class(seed), bytes, "canonical re-encode");
+        }
+        // Kind confusion with other single-value entries is caught.
+        let bytes = encode_seed_class(7);
+        assert!(decode_sim(&bytes).is_err());
+        assert!(decode_seed_class(&bytes[..bytes.len() - 1]).is_err(), "truncation");
     }
 
     #[test]

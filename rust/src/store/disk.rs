@@ -235,6 +235,17 @@ impl DiskStore {
         self.put(key, codec::encode_schedule(schedule));
     }
 
+    // ---- seed canonicalization (PR 6) -------------------------------------
+
+    pub fn load_seed_class(&self, key: &CompileKey) -> Option<u64> {
+        let bytes = self.read(key)?;
+        self.decoded(codec::decode_seed_class(&bytes))
+    }
+
+    pub fn store_seed_class(&self, key: &CompileKey, seed: u64) {
+        self.put(key, codec::encode_seed_class(seed));
+    }
+
     // ---- maintenance ------------------------------------------------------
 
     /// Garbage-collect the store: drop every entry whose codec header is

@@ -317,6 +317,84 @@ fn huge_iteration_spaces_are_rejected_not_truncated() {
     assert!(err_ref.to_string().contains("iteration tag"), "{err_ref}");
 }
 
+/// PR 6 (batched arena): randomized multi-point batches — one shared DFG
+/// mapped onto *different* machines (context-depth variants), different
+/// mapper seeds and different memory images per lane — where every lane of
+/// one [`simulate_batch`] launch must be bit-identical to the sequential
+/// interpreter, cycle-identical to the pre-refactor reference engine, and
+/// exactly equal (result *and* skipped-cycle count) to running that lane
+/// alone through `simulate_counting`. Lockstep interleaving must be
+/// unobservable.
+#[test]
+fn batched_arena_lanes_are_bit_and_cycle_identical() {
+    let machines: Vec<MachineDesc> = [32usize, 64, 128]
+        .iter()
+        .map(|&depth| {
+            let mut p = presets::standard();
+            p.context_depth = depth;
+            plugins::elaborate(p).unwrap().artifact
+        })
+        .collect();
+    let words = machines[0].smem.as_ref().unwrap().words();
+    for case in 0..8usize {
+        let mut rng = Rng::new(17_000 + case as u64);
+        let d = random_kernel(&mut rng, case);
+        d.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // One mapping per machine variant, each with its own mapper seed:
+        // lanes of a batch legitimately differ in placement, not just image.
+        let mappings: Vec<_> = machines
+            .iter()
+            .enumerate()
+            .map(|(k, m)| {
+                compile(d.clone(), m, 500 + (case * 7 + k) as u64)
+                    .unwrap_or_else(|e| panic!("case {case} machine {k}: {e}"))
+            })
+            .collect();
+        let images: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                let mut img = vec![0.0f32; words];
+                for w in img.iter_mut().take(1280) {
+                    *w = rng.normal();
+                }
+                img
+            })
+            .collect();
+        let lanes: Vec<windmill::sim::LaneSpec> = (0..5)
+            .map(|l| windmill::sim::LaneSpec {
+                mapping: &mappings[l % 3],
+                machine: &machines[l % 3],
+                image: &images[l],
+            })
+            .collect();
+        let outs = windmill::sim::simulate_batch(&lanes, 2_000_000);
+        assert_eq!(outs.len(), 5, "case {case}");
+        for (l, out) in outs.into_iter().enumerate() {
+            let tag = format!("case {case} lane {l}");
+            let (fast, skipped) = out.unwrap_or_else(|e| panic!("{tag}: {e}"));
+
+            // (1) Bit-identical to the interpreter on this lane's image.
+            let mut golden = images[l].clone();
+            interpret(&d, &mut golden).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            for (i, (a, b)) in fast.mem.iter().zip(golden.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag} mem[{i}] vs interpreter");
+            }
+
+            // (2) Cycle-identical to the pre-refactor reference engine.
+            let reference =
+                simulate_reference(&mappings[l % 3], &machines[l % 3], &images[l], 2_000_000)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_cycle_identical(&tag, &fast, &reference);
+
+            // (3) Exactly the solo engine run, skip counter included.
+            let (solo, solo_skipped) =
+                simulate_counting(&mappings[l % 3], &machines[l % 3], &images[l], 2_000_000)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_cycle_identical(&format!("{tag} vs solo"), &fast, &solo);
+            assert_eq!(skipped, solo_skipped, "{tag}: skipped-cycle counter");
+        }
+    }
+}
+
 /// Satellite requirement: on a warm [`SweepEngine`] run, `simulate()` is
 /// never re-entered — every phase answers from the SimResult cache (the
 /// cache records a `simulate` miss exactly when it invokes the engine, so

@@ -17,9 +17,10 @@
 
 use std::sync::Arc;
 
+use windmill::arch::isa::OpClass;
 use windmill::arch::params::ParamGrid;
 use windmill::arch::presets;
-use windmill::compiler::compile;
+use windmill::compiler::{compile, placement_signature, Dfg};
 use windmill::coordinator::sweep::DEFAULT_SWEEP_SEED;
 use windmill::coordinator::{
     run_job, ArtifactCache, JobSpec, PassCounts, SweepEngine, SweepReport, Workload,
@@ -176,6 +177,67 @@ fn stage_artifacts_warm_start_from_disk_for_new_context_depths() {
     let (_, _, hit3) = c3.mapping(&b, &dfg, &e3.machine, 7).unwrap();
     assert!(hit3, "the staged build was persisted as a full mapping too");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR 6 acceptance criterion: a seed sweep performs **strictly fewer**
+/// Place/Route computations under seed canonicalization, with bit-identical
+/// mappings. Deterministic by pigeonhole, no annealer luck involved: a
+/// 2-node all-Mem kernel has at most `L·(L-1)` ordered placements over the
+/// `L` Mem-capable PEs of `presets::small()`, so sweeping `L·(L-1) + 1`
+/// seeds guarantees at least two seeds share a placement-equivalence class.
+#[test]
+fn seed_sweep_collapses_placement_classes_by_pigeonhole() {
+    let params = presets::small();
+    let canon = ArtifactCache::new();
+    let raw = ArtifactCache::new().with_seed_canon(false);
+    let e = canon.machine(&params).unwrap();
+    let er = raw.machine(&params).unwrap();
+    let l = e.machine.pes_with(OpClass::Mem).len() as u64;
+
+    // load -> store: two nodes, both requiring a Mem-capable PE.
+    let mut d = Dfg::new("pair", vec![8]);
+    let x = d.load_affine(0, vec![1]);
+    d.store_affine(x, 16, vec![1], 1);
+    d.validate().unwrap();
+
+    let seeds: Vec<u64> = (0..=l * (l - 1)).collect();
+    let mut sigs = std::collections::HashSet::new();
+    for &seed in &seeds {
+        let (a, _, _) = canon.mapping(&params, &d, &e.machine, seed).unwrap();
+        let (b, _, _) = raw.mapping(&params, &d, &er.machine, seed).unwrap();
+        // Canonicalization must not change what any seed compiles to.
+        assert_eq!(a.place, b.place, "seed {seed}");
+        assert_eq!(a.routes.edges, b.routes.edges, "seed {seed}");
+        assert_eq!(a.schedule, b.schedule, "seed {seed}");
+        assert_eq!(a.config.total_words(), b.config.total_words(), "seed {seed}");
+        sigs.insert(placement_signature(&a.place));
+    }
+    let distinct = sigs.len() as u64;
+    assert!(
+        distinct < seeds.len() as u64,
+        "pigeonhole violated: {distinct} classes from {} seeds over {l} Mem PEs",
+        seeds.len()
+    );
+
+    // Canonicalized tiers: one Place/Route/Schedule computation per
+    // equivalence class; one class probe per raw seed.
+    let cs = canon.stats();
+    assert_eq!(cs.pass_counts_full("place").miss, distinct, "{cs:?}");
+    assert_eq!(cs.pass_counts_full("route").miss, distinct, "{cs:?}");
+    assert_eq!(cs.pass_counts_full("schedule").miss, distinct, "{cs:?}");
+    assert_eq!(cs.pass_counts_full("seed_class").miss, seeds.len() as u64, "{cs:?}");
+    assert_eq!(
+        cs.pass_counts_full("place").mem,
+        seeds.len() as u64 - distinct,
+        "every non-representative seed answers from its class entry: {cs:?}"
+    );
+
+    // Raw tiers: one of each per seed — strictly more than the
+    // canonicalized cache did.
+    let rs = raw.stats();
+    assert_eq!(rs.pass_counts_full("place").miss, seeds.len() as u64, "{rs:?}");
+    assert_eq!(rs.pass_counts_full("route").miss, seeds.len() as u64, "{rs:?}");
+    assert_eq!(rs.pass_counts_full("seed_class").lookups(), 0, "{rs:?}");
 }
 
 /// `windmill store gc` smoke at the library level: after a persistent
