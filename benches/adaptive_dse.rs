@@ -1,0 +1,114 @@
+//! Adaptive-DSE bench (PR 7): search-guided exploration vs the exhaustive
+//! grid, on a Fig. 6-style context-depth × PEA-size grid whose Pareto
+//! frontier is known analytically.
+//!
+//! For saxpy-64 every context depth ≥ 32 leaves the engine's iteration
+//! window unbound, so cycles are identical along each depth chain while
+//! area and power grow strictly with depth — the exhaustive frontier
+//! collapses onto the minimum-depth column. A driver that starts from a
+//! stratified sample and refines toward smaller coordinates must therefore
+//! recover the exact frontier while touching a fraction of the grid.
+//! Headline assertions:
+//!
+//! 1. [`SuccessiveHalving`] under a hard budget evaluates **≤ 50%** of the
+//!    72-point grid;
+//! 2. its frontier is dominance-equivalent to the exhaustive one;
+//! 3. the drive is deterministic for a fixed seed;
+//! 4. its cold wall time beats the exhaustive cold sweep's.
+//!
+//! `cargo bench --bench adaptive_dse`
+
+mod bench_util;
+
+use bench_util::{fmt_ns, Table};
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::coordinator::{SuccessiveHalving, SweepEngine, SweepReport, Workload, WorkloadSuite};
+
+fn grid() -> ParamGrid {
+    // 3 PEA edges × 24 context depths (all ≥ the standard 32) = 72 points.
+    let depths: Vec<usize> = (0..24).map(|i| 32 + 16 * i).collect();
+    ParamGrid::new(presets::standard()).pea_edges(&[4, 6, 8]).context_depths(&depths)
+}
+
+fn drive_once(grid: &ParamGrid, suite: &WorkloadSuite, budget: usize) -> SweepReport {
+    let mut driver = SuccessiveHalving::new(grid, 42).with_budget(budget);
+    SweepEngine::new(4).drive(grid, suite, 42, &mut driver)
+}
+
+fn main() {
+    let grid = grid();
+    let n = grid.len();
+    assert_eq!(n, 72, "bench grid must be the 72-point ctx x edge grid");
+    let suite = WorkloadSuite::single(Workload::Saxpy { n: 64 });
+    let budget = n / 2;
+
+    // Exhaustive cold sweep: the baseline every driver must beat.
+    let exhaustive = SweepEngine::new(4).sweep_suite(&grid, &suite, 42);
+    assert!(exhaustive.failures.is_empty(), "{:?}", exhaustive.failures);
+
+    // Search-guided cold drive on a fresh engine (nothing shared).
+    let driven = drive_once(&grid, &suite, budget);
+    assert!(driven.failures.is_empty(), "{:?}", driven.failures);
+
+    let mut t = Table::new(
+        "adaptive DSE vs exhaustive sweep (saxpy-64, 72-point ctx x edge grid)",
+        &["path", "evaluated", "fraction", "frontier", "wall"],
+    );
+    for (name, r) in [("exhaustive", &exhaustive), ("halving drive", &driven)] {
+        t.row(&[
+            name.into(),
+            r.points_evaluated().to_string(),
+            format!("{:.1}%", 100.0 * r.points_evaluated() as f64 / n as f64),
+            r.frontier.len().to_string(),
+            fmt_ns(r.wall_ns as f64),
+        ]);
+    }
+    t.print();
+    println!("driven summary: {}", driven.summary());
+
+    // 1. Budget respected: at most half the grid was ever evaluated.
+    assert!(
+        driven.points_evaluated() * 2 <= n,
+        "driver must evaluate <= 50% of the grid: {}/{n}",
+        driven.points_evaluated()
+    );
+    assert!(driven.summary().contains("searched"), "{}", driven.summary());
+
+    // 2. Dominance-equivalence with the exhaustive frontier, both ways
+    //    (halving only proposes grid points, so neither side may hold a
+    //    point the other fails to match or dominate).
+    let covers = |xs: &SweepReport, e: &windmill::coordinator::SweepPoint| {
+        xs.frontier_points().iter().any(|d| d.arch_hash == e.arch_hash || d.dominates(e))
+    };
+    for e in exhaustive.frontier_points() {
+        assert!(covers(&driven, e), "exhaustive frontier point `{}` missed", e.label);
+    }
+    for d in driven.frontier_points() {
+        assert!(covers(&exhaustive, d), "driven frontier point `{}` is spurious", d.label);
+    }
+
+    // 3. Fixed seed => reproducible search trajectory.
+    let again = drive_once(&grid, &suite, budget);
+    let labels = |r: &SweepReport| r.points.iter().map(|p| p.label.clone()).collect::<Vec<_>>();
+    assert_eq!(labels(&driven), labels(&again), "drive must be deterministic");
+    assert_eq!(
+        driven.frontier_points().iter().map(|p| &p.label).collect::<Vec<_>>(),
+        again.frontier_points().iter().map(|p| &p.label).collect::<Vec<_>>(),
+    );
+
+    // 4. Half the evaluations, less wall time (both cold, same machine).
+    assert!(
+        driven.wall_ns < exhaustive.wall_ns,
+        "cold drive must beat the cold exhaustive sweep: {} vs {} ns",
+        driven.wall_ns,
+        exhaustive.wall_ns
+    );
+    println!(
+        "adaptive-dse acceptance: {} of {n} points ({} frontier) in {} vs exhaustive {}",
+        driven.points_evaluated(),
+        driven.frontier.len(),
+        fmt_ns(driven.wall_ns as f64),
+        fmt_ns(exhaustive.wall_ns as f64),
+    );
+}

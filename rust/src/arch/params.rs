@@ -7,7 +7,7 @@
 
 use super::topology::Topology;
 use crate::diag::error::DiagError;
-use crate::util::StableHasher;
+use crate::util::{Rng, StableHasher};
 
 /// Coarse-grained PE flavour at a grid position (paper §IV-A.2/3/5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -262,6 +262,89 @@ impl WindMillParams {
             .f64_bits(self.freq_mhz);
         h.finish()
     }
+
+    /// Every validity-preserving single-step mutation of this parameter
+    /// set along the axes the adaptive DSE drivers explore: PEA edge ±1
+    /// (rows and cols step together, keeping square arrays), context
+    /// depth ×2/÷2, shared-memory banks ×2/÷2 (stays a power of two) and
+    /// depth ×2/÷2, every alternative topology, and the ping-pong toggle.
+    /// Candidates failing [`WindMillParams::validate`] or hashing equal to
+    /// `self` are dropped. The order is deterministic, so evolutionary
+    /// search is reproducible without any randomness at all.
+    pub fn mutations(&self) -> Vec<WindMillParams> {
+        let mut cands: Vec<WindMillParams> = Vec::new();
+        if self.rows > 1 && self.cols > 1 {
+            let mut p = self.clone();
+            p.rows -= 1;
+            p.cols -= 1;
+            cands.push(p);
+        }
+        {
+            let mut p = self.clone();
+            p.rows += 1;
+            p.cols += 1;
+            cands.push(p);
+        }
+        {
+            let mut p = self.clone();
+            p.context_depth *= 2;
+            cands.push(p);
+        }
+        if self.context_depth >= 2 {
+            let mut p = self.clone();
+            p.context_depth /= 2;
+            cands.push(p);
+        }
+        {
+            let mut p = self.clone();
+            p.smem.banks *= 2;
+            cands.push(p);
+        }
+        if self.smem.banks >= 2 {
+            let mut p = self.clone();
+            p.smem.banks /= 2;
+            cands.push(p);
+        }
+        {
+            let mut p = self.clone();
+            p.smem.depth *= 2;
+            cands.push(p);
+        }
+        if self.smem.depth >= 2 {
+            let mut p = self.clone();
+            p.smem.depth /= 2;
+            cands.push(p);
+        }
+        for t in Topology::ALL {
+            if t != self.topology {
+                let mut p = self.clone();
+                p.topology = t;
+                cands.push(p);
+            }
+        }
+        {
+            let mut p = self.clone();
+            p.pingpong = !p.pingpong;
+            cands.push(p);
+        }
+        let this = self.stable_hash();
+        cands.retain(|p| p.validate().is_ok() && p.stable_hash() != this);
+        cands
+    }
+
+    /// One uniformly-drawn candidate from [`WindMillParams::mutations`],
+    /// or `None` when no valid single-step mutation exists. Deterministic
+    /// for a fixed `rng` state — the evolutionary driver's exploration
+    /// primitive.
+    pub fn mutated(&self, rng: &mut Rng) -> Option<WindMillParams> {
+        let cands = self.mutations();
+        if cands.is_empty() {
+            None
+        } else {
+            let i = rng.range(0, cands.len());
+            Some(cands[i].clone())
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -383,80 +466,175 @@ impl ParamGrid {
         self.len() == 0
     }
 
-    /// Materialize the grid as labeled, *validated* parameter sets.
+    /// Number of options on each of the grid's seven axes, in canonical
+    /// axis order: edge, topology, smem geometry, sfu, cpe, pingpong,
+    /// context depth. An unset axis counts 1 (pinned to base).
+    pub fn axis_lens(&self) -> [usize; 7] {
+        [
+            self.pea_edges.len().max(1),
+            self.topologies.len().max(1),
+            self.smem_geoms.len().max(1),
+            self.sfu.len().max(1),
+            self.cpe.len().max(1),
+            self.pingpong.len().max(1),
+            self.ctx_depths.len().max(1),
+        ]
+    }
+
+    /// Construct the labeled parameter set at one index tuple (canonical
+    /// axis order, see [`ParamGrid::axis_lens`]). Indices on unset axes
+    /// must be 0. Not legality-filtered — callers validate.
+    fn point_at(&self, idx: [usize; 7]) -> (String, WindMillParams) {
+        let mut p = self.base.clone();
+        let mut label = String::new();
+        if !self.pea_edges.is_empty() {
+            let e = self.pea_edges[idx[0]];
+            p.rows = e;
+            p.cols = e;
+            label.push_str(&format!("pea{e}-"));
+        }
+        if !self.topologies.is_empty() {
+            let t = self.topologies[idx[1]];
+            p.topology = t;
+            label.push_str(&format!("{}-", t.name()));
+        }
+        if !self.smem_geoms.is_empty() {
+            let (banks, depth) = self.smem_geoms[idx[2]];
+            p.smem.banks = banks;
+            p.smem.depth = depth;
+            label.push_str(&format!("sm{banks}x{depth}-"));
+        }
+        if !self.sfu.is_empty() {
+            let s = self.sfu[idx[3]];
+            p.sfu_enabled = s;
+            label.push_str(if s { "sfu-" } else { "nosfu-" });
+        }
+        if !self.cpe.is_empty() {
+            let c = self.cpe[idx[4]];
+            p.cpe_enabled = c;
+            label.push_str(if c { "cpe-" } else { "nocpe-" });
+        }
+        if !self.pingpong.is_empty() {
+            let d = self.pingpong[idx[5]];
+            p.pingpong = d;
+            label.push_str(if d { "pp-" } else { "nopp-" });
+        }
+        if !self.ctx_depths.is_empty() {
+            let cd = self.ctx_depths[idx[6]];
+            p.context_depth = cd;
+            label.push_str(&format!("ctx{cd}-"));
+        }
+        if label.is_empty() {
+            label.push_str("base-");
+        }
+        label.pop(); // trailing '-'
+        (label, p)
+    }
+
+    /// Materialize the grid as labeled, *validated* parameter sets, in
+    /// row-major axis order (last axis fastest). Points that hash equal —
+    /// axis values may overlap, e.g. a repeated context depth — are
+    /// emitted once, first label wins, so neither exhaustive sweeps nor
+    /// search drivers ever pay for a point twice.
     pub fn points(&self) -> Vec<(String, WindMillParams)> {
-        /// An unset axis contributes one `None` (pin to base); a set axis
-        /// contributes its values.
-        fn axis<T: Copy>(v: &[T]) -> Vec<Option<T>> {
-            if v.is_empty() {
-                vec![None]
-            } else {
-                v.iter().copied().map(Some).collect()
+        let lens = self.axis_lens();
+        let total: usize = lens.iter().product();
+        let mut out = Vec::with_capacity(total);
+        let mut seen = std::collections::HashSet::with_capacity(total);
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut idx = [0usize; 7];
+            for k in (0..7).rev() {
+                idx[k] = rem % lens[k];
+                rem /= lens[k];
+            }
+            let (label, p) = self.point_at(idx);
+            if p.validate().is_ok() && seen.insert(p.stable_hash()) {
+                out.push((label, p));
             }
         }
-        let edges = axis(&self.pea_edges);
-        let topos = axis(&self.topologies);
-        let smems = axis(&self.smem_geoms);
-        let sfus = axis(&self.sfu);
-        let cpes = axis(&self.cpe);
-        let pps = axis(&self.pingpong);
-        let ctxs = axis(&self.ctx_depths);
+        out
+    }
 
+    /// Recover the axis indices of `params` on this grid, or `None` when
+    /// the point lies off-grid on some set axis. Unset axes (pinned to
+    /// base) are not compared — they always resolve to index 0.
+    pub fn coords_of(&self, params: &WindMillParams) -> Option<[usize; 7]> {
+        let mut idx = [0usize; 7];
+        if !self.pea_edges.is_empty() {
+            idx[0] = self
+                .pea_edges
+                .iter()
+                .position(|&e| e == params.rows && e == params.cols)?;
+        }
+        if !self.topologies.is_empty() {
+            idx[1] = self.topologies.iter().position(|&t| t == params.topology)?;
+        }
+        if !self.smem_geoms.is_empty() {
+            idx[2] = self
+                .smem_geoms
+                .iter()
+                .position(|&(b, d)| b == params.smem.banks && d == params.smem.depth)?;
+        }
+        if !self.sfu.is_empty() {
+            idx[3] = self.sfu.iter().position(|&s| s == params.sfu_enabled)?;
+        }
+        if !self.cpe.is_empty() {
+            idx[4] = self.cpe.iter().position(|&c| c == params.cpe_enabled)?;
+        }
+        if !self.pingpong.is_empty() {
+            idx[5] = self.pingpong.iter().position(|&d| d == params.pingpong)?;
+        }
+        if !self.ctx_depths.is_empty() {
+            idx[6] = self.ctx_depths.iter().position(|&cd| cd == params.context_depth)?;
+        }
+        Some(idx)
+    }
+
+    /// Grid points adjacent to `params` in index space: on each axis with
+    /// more than one option, step the index by ±`radius` (clamped to the
+    /// axis ends). `params` itself is excluded and candidates are
+    /// validated and hash-deduplicated. Labels are exactly the ones
+    /// [`ParamGrid::points`] assigns, so search drivers and exhaustive
+    /// sweeps name the same design identically. Empty when `params` is
+    /// off-grid.
+    pub fn neighbors_at(
+        &self,
+        params: &WindMillParams,
+        radius: usize,
+    ) -> Vec<(String, WindMillParams)> {
+        let Some(center) = self.coords_of(params) else {
+            return Vec::new();
+        };
+        let lens = self.axis_lens();
+        let r = radius.max(1);
         let mut out = Vec::new();
-        for &edge in &edges {
-            for &topo in &topos {
-                for &smem in &smems {
-                    for &sfu in &sfus {
-                        for &cpe in &cpes {
-                            for &pp in &pps {
-                                for &ctx in &ctxs {
-                                    let mut p = self.base.clone();
-                                    let mut label = String::new();
-                                    if let Some(e) = edge {
-                                        p.rows = e;
-                                        p.cols = e;
-                                        label.push_str(&format!("pea{e}-"));
-                                    }
-                                    if let Some(t) = topo {
-                                        p.topology = t;
-                                        label.push_str(&format!("{}-", t.name()));
-                                    }
-                                    if let Some((banks, depth)) = smem {
-                                        p.smem.banks = banks;
-                                        p.smem.depth = depth;
-                                        label.push_str(&format!("sm{banks}x{depth}-"));
-                                    }
-                                    if let Some(s) = sfu {
-                                        p.sfu_enabled = s;
-                                        label.push_str(if s { "sfu-" } else { "nosfu-" });
-                                    }
-                                    if let Some(c) = cpe {
-                                        p.cpe_enabled = c;
-                                        label.push_str(if c { "cpe-" } else { "nocpe-" });
-                                    }
-                                    if let Some(d) = pp {
-                                        p.pingpong = d;
-                                        label.push_str(if d { "pp-" } else { "nopp-" });
-                                    }
-                                    if let Some(cd) = ctx {
-                                        p.context_depth = cd;
-                                        label.push_str(&format!("ctx{cd}-"));
-                                    }
-                                    if label.is_empty() {
-                                        label.push_str("base-");
-                                    }
-                                    label.pop(); // trailing '-'
-                                    if p.validate().is_ok() {
-                                        out.push((label, p));
-                                    }
-                                }
-                            }
-                        }
-                    }
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(params.stable_hash());
+        for k in 0..7 {
+            if lens[k] <= 1 {
+                continue;
+            }
+            let lo = center[k].saturating_sub(r);
+            let hi = (center[k] + r).min(lens[k] - 1);
+            for cand in [lo, hi] {
+                if cand == center[k] {
+                    continue;
+                }
+                let mut idx = center;
+                idx[k] = cand;
+                let (label, p) = self.point_at(idx);
+                if p.validate().is_ok() && seen.insert(p.stable_hash()) {
+                    out.push((label, p));
                 }
             }
         }
         out
+    }
+
+    /// Immediate (radius-1) grid neighborhood of `params`.
+    pub fn neighbors(&self, params: &WindMillParams) -> Vec<(String, WindMillParams)> {
+        self.neighbors_at(params, 1)
     }
 }
 
@@ -710,6 +888,105 @@ mod tests {
         assert_eq!(points.len(), 1);
         assert_eq!(points[0].0, "base");
         assert_eq!(points[0].1, presets::standard());
+    }
+
+    #[test]
+    fn param_grid_dedups_overlapping_axis_values() {
+        // Regression: a repeated axis value used to yield duplicate points
+        // and sweeps paid for the same design twice. First label wins.
+        let grid = ParamGrid::new(presets::standard()).context_depths(&[32, 16, 32]);
+        let points = grid.points();
+        assert_eq!(points.len(), 2);
+        let labels: Vec<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["ctx32", "ctx16"]);
+        // combinations() stays pre-filter, pre-dedup.
+        assert_eq!(grid.combinations(), 3);
+        assert_eq!(grid.len(), 2);
+    }
+
+    #[test]
+    fn coords_round_trip_through_points() {
+        let grid = ParamGrid::new(presets::standard())
+            .pea_edges(&[4, 8])
+            .topologies(&Topology::ALL)
+            .context_depths(&[16, 64]);
+        for (label, p) in grid.points() {
+            let idx = grid.coords_of(&p).unwrap_or_else(|| panic!("{label} off-grid"));
+            let (relabel, rebuilt) = grid.point_at(idx);
+            assert_eq!(relabel, label);
+            assert_eq!(rebuilt.stable_hash(), p.stable_hash());
+        }
+        // Off-grid on a set axis: no coordinates.
+        let mut off = presets::standard();
+        off.rows = 5;
+        off.cols = 5;
+        assert!(grid.coords_of(&off).is_none());
+    }
+
+    #[test]
+    fn neighbors_step_each_set_axis_with_grid_labels() {
+        let grid = ParamGrid::new(presets::standard())
+            .pea_edges(&[4, 8, 12])
+            .context_depths(&[16, 32, 64]);
+        let all = grid.points();
+        // Center of the grid: pea8 / ctx32.
+        let center = &all.iter().find(|(l, _)| l == "pea8-ctx32").unwrap().1;
+        let mut labels: Vec<String> =
+            grid.neighbors(center).into_iter().map(|(l, _)| l).collect();
+        labels.sort_unstable();
+        assert_eq!(labels, vec!["pea12-ctx32", "pea4-ctx32", "pea8-ctx16", "pea8-ctx64"]);
+        // Every neighbor label is a label points() would assign.
+        let known: std::collections::HashSet<&str> =
+            all.iter().map(|(l, _)| l.as_str()).collect();
+        for l in &labels {
+            assert!(known.contains(l.as_str()), "{l} not a grid label");
+        }
+        // Radius clamps at the axis ends and excludes the center itself.
+        let corner = &all.iter().find(|(l, _)| l == "pea4-ctx16").unwrap().1;
+        let far: Vec<String> =
+            grid.neighbors_at(corner, 10).into_iter().map(|(l, _)| l).collect();
+        assert_eq!(far, vec!["pea12-ctx16", "pea4-ctx64"]);
+        // Off-grid center: empty.
+        let mut off = presets::standard();
+        off.rows = 5;
+        off.cols = 5;
+        assert!(grid.neighbors(&off).is_empty());
+    }
+
+    #[test]
+    fn mutations_are_valid_distinct_and_deterministic() {
+        let base = presets::standard();
+        let muts = base.mutations();
+        assert!(!muts.is_empty());
+        let this = base.stable_hash();
+        let mut hashes = std::collections::HashSet::new();
+        for m in &muts {
+            m.validate().unwrap();
+            assert_ne!(m.stable_hash(), this);
+            hashes.insert(m.stable_hash());
+        }
+        assert_eq!(hashes.len(), muts.len(), "mutations must be distinct");
+        // Covers the advertised axes.
+        assert!(muts.iter().any(|m| m.rows == base.rows + 1 && m.cols == base.cols + 1));
+        assert!(muts.iter().any(|m| m.rows + 1 == base.rows && m.cols + 1 == base.cols));
+        assert!(muts.iter().any(|m| m.context_depth == base.context_depth * 2));
+        assert!(muts.iter().any(|m| m.context_depth * 2 == base.context_depth));
+        assert!(muts.iter().any(|m| m.smem.banks == base.smem.banks * 2));
+        assert!(muts.iter().any(|m| m.topology != base.topology));
+        assert!(muts.iter().any(|m| m.pingpong != base.pingpong));
+        // Deterministic order, and `mutated` draws reproducibly.
+        assert_eq!(muts, base.mutations());
+        let mut r1 = Rng::scoped(7, "t");
+        let mut r2 = Rng::scoped(7, "t");
+        assert_eq!(base.mutated(&mut r1), base.mutated(&mut r2));
+        // A 3x3 LSU-ring array cannot shrink (needs ≥ 3x3): every mutation
+        // stays legal.
+        let mut small = presets::standard();
+        small.rows = 3;
+        small.cols = 3;
+        for m in small.mutations() {
+            assert!(m.rows >= 3 && m.cols >= 3);
+        }
     }
 
     #[test]

@@ -1,0 +1,553 @@
+//! Adaptive design-space search: the sweep engine as a *search* engine.
+//!
+//! Exhaustive Fig.-6-style grids square with every new axis; production
+//! co-design cannot enumerate. A [`SweepDriver`] proposes *waves* of
+//! candidate points against the history evaluated so far and
+//! [`SweepEngine::drive`] runs the propose–evaluate–refine loop (the
+//! MACO-style iteration): each wave rides the same batched, cache-backed
+//! dispatch path as an exhaustive sweep — arena batching per wave, store
+//! read-through so a resumed or repeated search recomputes nothing — and
+//! the loop stops when the Pareto frontier's dominance signature survives
+//! K consecutive waves. The headline metric, points evaluated vs. the
+//! exhaustive grid, is carried by [`SweepReport::grid_size`] and printed
+//! by [`SweepReport::summary`].
+//!
+//! Two strategies ship:
+//!
+//! - [`SuccessiveHalving`] — a corner-anchored stratified sample of the
+//!   grid, then per-generation refinement around the Pareto survivors via
+//!   [`ParamGrid::neighbors_at`] with a halving search radius.
+//! - [`Evolutionary`] — the same seeding wave, then systematic single-step
+//!   [`WindMillParams::mutations`] of every frontier member plus a few
+//!   random two-step mutants, which may legally leave the grid.
+//!
+//! Both are deterministic for a fixed seed ([`Rng::scoped`] domain
+//! separation), so searches are reproducible and warm-store re-drives are
+//! bit-identical with zero `simulate()` calls.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use crate::arch::params::{ParamGrid, WindMillParams};
+use crate::store::SweepSession;
+use crate::store::WaveEntry;
+use crate::util::Rng;
+
+use super::job::WorkloadSuite;
+use super::report::{SweepAccumulator, SweepReport};
+use super::sweep::SweepEngine;
+
+/// A search strategy for [`SweepEngine::drive`]: proposes waves of
+/// labeled candidate points against the history evaluated so far and
+/// decides when the search has converged.
+///
+/// The engine owns the loop: it deduplicates proposals against everything
+/// already evaluated (by parameter hash — re-proposing a point is free),
+/// evaluates each wave through the batched cache-backed dispatcher, and
+/// tracks how many consecutive waves left the frontier's dominance
+/// signature unchanged. `converged` is consulted after every wave, and an
+/// empty proposal list also ends the search.
+pub trait SweepDriver {
+    /// Short strategy name (the CLI's `--drive` key, manifest wave
+    /// records).
+    fn name(&self) -> &'static str;
+
+    /// The next wave of labeled candidates, given everything evaluated so
+    /// far. An empty wave means the strategy is exhausted.
+    fn propose(&mut self, history: &SweepReport) -> Vec<(String, WindMillParams)>;
+
+    /// Convergence predicate: `stable_waves` consecutive completed waves
+    /// left the frontier without a dominance change.
+    fn converged(&self, history: &SweepReport, stable_waves: usize) -> bool;
+}
+
+/// Sorted multiset of the frontier's architecture hashes — the dominance
+/// signature convergence is measured against. A wave that neither adds
+/// nor evicts a frontier machine leaves it unchanged, whatever order the
+/// members arrived in.
+fn frontier_signature(report: &SweepReport) -> Vec<u64> {
+    let mut sig: Vec<u64> = report.frontier_points().iter().map(|p| p.arch_hash).collect();
+    sig.sort_unstable();
+    sig
+}
+
+/// Anchored stratified sample of a labeled point list: the first and last
+/// points (the all-minimum and all-maximum index corners of the grid)
+/// plus one rng-drawn point from each of `k` contiguous strata, hash-
+/// deduplicated, anchors first. The corners guarantee the sample brackets
+/// the design space — in particular the minimum-area corner, which is on
+/// every frontier — and the strata spread the rest evenly. Deterministic
+/// for a fixed rng state.
+pub fn stratified_sample(
+    points: &[(String, WindMillParams)],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<(String, WindMillParams)> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut picks: Vec<usize> = vec![0, n - 1];
+    let k = k.clamp(1, n);
+    for s in 0..k {
+        let lo = s * n / k;
+        let hi = (((s + 1) * n / k).max(lo + 1)).min(n);
+        picks.push(rng.range(lo, hi));
+    }
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    for i in picks {
+        let (label, p) = &points[i];
+        if seen.insert(p.stable_hash()) {
+            out.push((label.clone(), p.clone()));
+        }
+    }
+    out
+}
+
+/// Successive halving over a [`ParamGrid`]: wave 0 evaluates a
+/// corner-anchored stratified sample; every later wave keeps the Pareto
+/// survivors (up to `keep`) and proposes their grid neighborhood at the
+/// current radius via [`ParamGrid::neighbors_at`], halving the radius
+/// each generation. Down-index moves (smaller arrays, shallower
+/// contexts — the cheap direction on every axis) are proposed before
+/// up-index ones, so a budget-trimmed wave keeps the moves that tighten
+/// the frontier. Stops after `patience` dominance-stable waves, at
+/// `max_waves`, or when an evaluation `budget` is exhausted.
+pub struct SuccessiveHalving {
+    grid: ParamGrid,
+    rng: Rng,
+    sample: usize,
+    radius: usize,
+    keep: usize,
+    patience: usize,
+    max_waves: usize,
+    budget: Option<usize>,
+    wave: usize,
+    proposed: HashMap<String, WindMillParams>,
+}
+
+impl SuccessiveHalving {
+    pub fn new(grid: &ParamGrid, seed: u64) -> Self {
+        let n = grid.len();
+        let max_axis = grid.axis_lens().into_iter().max().unwrap_or(1);
+        SuccessiveHalving {
+            grid: grid.clone(),
+            rng: Rng::scoped(seed, "drive.halving"),
+            sample: (n / 6).clamp(4, 12),
+            radius: (max_axis / 2).max(1),
+            keep: 8,
+            patience: 1,
+            max_waves: 16,
+            budget: None,
+            wave: 0,
+            proposed: HashMap::new(),
+        }
+    }
+
+    /// Hard cap on total evaluations: once the history holds this many
+    /// points, no further proposals are made (waves are trimmed to fit).
+    pub fn with_budget(mut self, budget: usize) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Dominance-stable waves required before declaring convergence.
+    pub fn with_patience(mut self, patience: usize) -> Self {
+        self.patience = patience.max(1);
+        self
+    }
+
+    /// Cap on the number of proposal waves.
+    pub fn with_max_waves(mut self, waves: usize) -> Self {
+        self.max_waves = waves;
+        self
+    }
+
+    fn record(&mut self, wave: &[(String, WindMillParams)]) {
+        for (l, p) in wave {
+            self.proposed.insert(l.clone(), p.clone());
+        }
+    }
+}
+
+impl SweepDriver for SuccessiveHalving {
+    fn name(&self) -> &'static str {
+        "halving"
+    }
+
+    fn propose(&mut self, history: &SweepReport) -> Vec<(String, WindMillParams)> {
+        let wave = self.wave;
+        self.wave += 1;
+        if wave >= self.max_waves {
+            return Vec::new();
+        }
+        let remaining = self
+            .budget
+            .map_or(usize::MAX, |b| b.saturating_sub(history.points_evaluated()));
+        if remaining == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<(String, WindMillParams)>;
+        if wave == 0 {
+            out = stratified_sample(&self.grid.points(), self.sample, &mut self.rng);
+        } else {
+            // Refine around the Pareto survivors, exploitation before
+            // exploration: down-index neighbors first.
+            let survivors: Vec<WindMillParams> = history
+                .frontier_points()
+                .iter()
+                .take(self.keep)
+                .filter_map(|pt| self.proposed.get(&pt.label).cloned())
+                .collect();
+            let mut downhill = Vec::new();
+            let mut uphill = Vec::new();
+            let mut local: HashSet<u64> = HashSet::new();
+            for params in &survivors {
+                let Some(center) = self.grid.coords_of(params) else {
+                    continue;
+                };
+                let csum: usize = center.iter().sum();
+                for (label, n) in self.grid.neighbors_at(params, self.radius) {
+                    if !local.insert(n.stable_hash()) {
+                        continue;
+                    }
+                    let nsum: usize = self
+                        .grid
+                        .coords_of(&n)
+                        .map(|c| c.iter().sum())
+                        .unwrap_or(usize::MAX);
+                    if nsum < csum {
+                        downhill.push((label, n));
+                    } else {
+                        uphill.push((label, n));
+                    }
+                }
+            }
+            self.radius = (self.radius / 2).max(1);
+            out = downhill;
+            out.extend(uphill);
+        }
+        out.truncate(remaining);
+        self.record(&out);
+        out
+    }
+
+    fn converged(&self, _history: &SweepReport, stable_waves: usize) -> bool {
+        stable_waves >= self.patience
+    }
+}
+
+/// Evolutionary mutation over the frontier: wave 0 evaluates the same
+/// corner-anchored stratified sample as [`SuccessiveHalving`]; every
+/// later wave takes the current Pareto elite as parents and proposes all
+/// their systematic single-step [`WindMillParams::mutations`] plus
+/// `explore` random two-step mutants per parent — children may legally
+/// leave the grid (the store codec round-trips them like any point).
+/// Stops after `patience` dominance-stable waves or at `max_waves`.
+pub struct Evolutionary {
+    grid: ParamGrid,
+    rng: Rng,
+    sample: usize,
+    keep: usize,
+    explore: usize,
+    patience: usize,
+    max_waves: usize,
+    wave: usize,
+    proposed: HashMap<String, WindMillParams>,
+}
+
+impl Evolutionary {
+    pub fn new(grid: &ParamGrid, seed: u64) -> Self {
+        let n = grid.len();
+        Evolutionary {
+            grid: grid.clone(),
+            rng: Rng::scoped(seed, "drive.evolve"),
+            sample: (n / 6).clamp(2, 12),
+            keep: 8,
+            explore: 2,
+            patience: 2,
+            max_waves: 24,
+            wave: 0,
+            proposed: HashMap::new(),
+        }
+    }
+
+    /// Dominance-stable waves required before declaring convergence.
+    pub fn with_patience(mut self, patience: usize) -> Self {
+        self.patience = patience.max(1);
+        self
+    }
+
+    /// Cap on the number of proposal waves.
+    pub fn with_max_waves(mut self, waves: usize) -> Self {
+        self.max_waves = waves;
+        self
+    }
+
+    fn record(&mut self, wave: &[(String, WindMillParams)]) {
+        for (l, p) in wave {
+            self.proposed.insert(l.clone(), p.clone());
+        }
+    }
+}
+
+impl SweepDriver for Evolutionary {
+    fn name(&self) -> &'static str {
+        "evolve"
+    }
+
+    fn propose(&mut self, history: &SweepReport) -> Vec<(String, WindMillParams)> {
+        let wave = self.wave;
+        self.wave += 1;
+        if wave >= self.max_waves {
+            return Vec::new();
+        }
+        if wave == 0 {
+            let out = stratified_sample(&self.grid.points(), self.sample, &mut self.rng);
+            self.record(&out);
+            return out;
+        }
+        // Parents: the Pareto elite. Children: the full deterministic
+        // single-step neighborhood of every parent, plus random two-step
+        // mutants for diversity.
+        let parents: Vec<(String, WindMillParams)> = history
+            .frontier_points()
+            .iter()
+            .take(self.keep)
+            .filter_map(|pt| {
+                self.proposed.get(&pt.label).map(|p| (pt.label.clone(), p.clone()))
+            })
+            .collect();
+        let mut out: Vec<(String, WindMillParams)> = Vec::new();
+        let mut local: HashSet<u64> = HashSet::new();
+        for (plabel, parent) in &parents {
+            for (i, child) in parent.mutations().into_iter().enumerate() {
+                if local.insert(child.stable_hash()) {
+                    out.push((format!("evo{wave}-{plabel}-m{i}"), child));
+                }
+            }
+        }
+        for (plabel, parent) in &parents {
+            for j in 0..self.explore {
+                let Some(step) = parent.mutated(&mut self.rng) else { continue };
+                let Some(child) = step.mutated(&mut self.rng) else { continue };
+                if local.insert(child.stable_hash()) {
+                    out.push((format!("evo{wave}-{plabel}-x{j}"), child));
+                }
+            }
+        }
+        self.record(&out);
+        out
+    }
+
+    fn converged(&self, _history: &SweepReport, stable_waves: usize) -> bool {
+        stable_waves >= self.patience
+    }
+}
+
+impl SweepEngine {
+    /// Adaptive sweep: let `driver` propose waves of candidates until its
+    /// convergence predicate holds (or it runs dry). Each wave reuses the
+    /// exhaustive sweep's batched evaluation path — proposals share
+    /// simulation arenas, panic containment and every cache tier, and a
+    /// warm store answers a repeated search without a single `simulate()`
+    /// call. Proposals are deduplicated against everything already
+    /// evaluated, each completed wave is recorded in the attached store's
+    /// `manifest.jsonl` (`"kind":"wave"` lines), and the final report
+    /// carries `grid_size = grid.len()` so [`SweepReport::summary`] prints
+    /// the evaluated fraction — the headline search metric.
+    pub fn drive(
+        &self,
+        grid: &ParamGrid,
+        suite: &WorkloadSuite,
+        seed: u64,
+        driver: &mut dyn SweepDriver,
+    ) -> SweepReport {
+        let t0 = Instant::now();
+        let stats_before = self.cache_stats();
+        let mut acc = SweepAccumulator::new();
+        acc.set_grid_size(grid.len());
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut prev_sig: Vec<u64> = Vec::new();
+        let mut stable_waves = 0usize;
+        let mut wave = 0u32;
+        loop {
+            let proposals = driver.propose(acc.partial());
+            if proposals.is_empty() {
+                break;
+            }
+            let proposed = proposals.len();
+            let mut fresh: Vec<(String, WindMillParams)> = Vec::new();
+            for (label, params) in proposals {
+                if params.validate().is_ok() && seen.insert(params.stable_hash()) {
+                    fresh.push((label, params));
+                }
+            }
+            let evaluated = fresh.len();
+            for r in self.evaluate_points(fresh, suite, seed) {
+                match r {
+                    Ok(p) => acc.push(p),
+                    Err((label, e)) => acc.push_failure(label, e),
+                }
+            }
+            let sig = frontier_signature(acc.partial());
+            if sig == prev_sig {
+                stable_waves += 1;
+            } else {
+                stable_waves = 0;
+            }
+            prev_sig = sig;
+            if let Some(store) = self.store() {
+                // Best-effort audit trail; a read-only store must not
+                // abort the search.
+                let _ = SweepSession::append_wave(
+                    store.root(),
+                    &WaveEntry {
+                        driver: driver.name().to_string(),
+                        suite: suite.name(),
+                        suite_hash: suite.fingerprint(),
+                        seed,
+                        wave,
+                        proposed,
+                        evaluated,
+                        frontier: acc.partial().frontier.len(),
+                    },
+                );
+            }
+            wave += 1;
+            if driver.converged(acc.partial(), stable_waves) {
+                break;
+            }
+        }
+        acc.finish(
+            self.cache_stats().since(&stats_before),
+            t0.elapsed().as_nanos() as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::coordinator::job::JobTiming;
+    use crate::coordinator::report::{SweepPoint, WorkloadPerf};
+
+    fn synthetic_point(label: &str, arch_hash: u64, area: f64, time: f64) -> SweepPoint {
+        SweepPoint {
+            label: label.to_string(),
+            arch_hash,
+            pea: "8x8".into(),
+            topology: "mesh2d",
+            gates: 0.0,
+            area_mm2: area,
+            power_mw: area,
+            fmax_mhz: 750.0,
+            cycles: time as u64,
+            wm_time_ns: time,
+            speedup_vs_cpu: 1.0,
+            speedup_vs_gpu: 1.0,
+            ii: 1,
+            per_workload: vec![WorkloadPerf {
+                workload: "wl".into(),
+                cycles: time as u64,
+                wm_time_ns: time,
+                speedup_vs_cpu: 1.0,
+                speedup_vs_gpu: 1.0,
+                ii: 1,
+            }],
+            timing: JobTiming::default(),
+        }
+    }
+
+    #[test]
+    fn stratified_sample_anchors_corners_and_is_deterministic() {
+        let grid = ParamGrid::new(presets::standard())
+            .pea_edges(&[4, 8, 12])
+            .context_depths(&[16, 32, 64, 128]);
+        let points = grid.points();
+        let mut r1 = Rng::scoped(7, "t");
+        let s1 = stratified_sample(&points, 4, &mut r1);
+        // Corners always present, first.
+        assert_eq!(s1[0].0, points[0].0);
+        assert_eq!(s1[1].0, points[points.len() - 1].0);
+        // Labels are grid labels and unique.
+        let known: HashSet<&str> = points.iter().map(|(l, _)| l.as_str()).collect();
+        let mut labels: Vec<&str> = s1.iter().map(|(l, _)| l.as_str()).collect();
+        for l in &labels {
+            assert!(known.contains(l));
+        }
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), s1.len());
+        // Deterministic for the same rng state.
+        let mut r2 = Rng::scoped(7, "t");
+        let s2 = stratified_sample(&points, 4, &mut r2);
+        let key = |s: &[(String, WindMillParams)]| -> Vec<String> {
+            s.iter().map(|(l, _)| l.clone()).collect()
+        };
+        assert_eq!(key(&s1), key(&s2));
+        // Degenerate inputs stay sane.
+        assert!(stratified_sample(&[], 4, &mut Rng::scoped(1, "t")).is_empty());
+        let one = stratified_sample(&points[..1], 4, &mut Rng::scoped(1, "t"));
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn frontier_signature_is_order_independent() {
+        let mut a = SweepAccumulator::new();
+        a.push(synthetic_point("p", 1, 1.0, 100.0));
+        a.push(synthetic_point("q", 2, 2.0, 50.0));
+        let mut b = SweepAccumulator::new();
+        b.push(synthetic_point("q", 2, 2.0, 50.0));
+        b.push(synthetic_point("p", 1, 1.0, 100.0));
+        let sig_a = frontier_signature(a.partial());
+        let sig_b = frontier_signature(b.partial());
+        assert_eq!(sig_a, sig_b);
+    }
+
+    #[test]
+    fn halving_respects_budget_and_max_waves() {
+        let grid = ParamGrid::new(presets::standard())
+            .pea_edges(&[4, 8, 12])
+            .context_depths(&[16, 32, 64, 128]);
+        // Budget 3: the seeding wave itself is trimmed to 3 proposals.
+        let mut d = SuccessiveHalving::new(&grid, 1).with_budget(3);
+        let wave0 = d.propose(&SweepReport::default());
+        assert!(wave0.len() <= 3, "{}", wave0.len());
+        // A history that already spent the budget stops the search.
+        let mut spent = SweepAccumulator::new();
+        for i in 0..3 {
+            spent.push(synthetic_point(&format!("p{i}"), i as u64 + 1, 1.0 + i as f64, 10.0));
+        }
+        assert!(d.propose(spent.partial()).is_empty());
+        // max_waves exhausts the strategy outright.
+        let mut e = SuccessiveHalving::new(&grid, 1).with_max_waves(0);
+        assert!(e.propose(&SweepReport::default()).is_empty());
+    }
+
+    #[test]
+    fn evolutionary_waves_mutate_the_frontier() {
+        let grid = ParamGrid::new(presets::standard()).context_depths(&[32, 64, 128]);
+        let mut d = Evolutionary::new(&grid, 5);
+        let wave0 = d.propose(&SweepReport::default());
+        assert!(!wave0.is_empty());
+        // Build a history whose frontier is the first seeded point.
+        let (label, params) = wave0[0].clone();
+        let mut acc = SweepAccumulator::new();
+        acc.push(synthetic_point(&label, params.stable_hash(), 1.0, 10.0));
+        let wave1 = d.propose(acc.partial());
+        assert!(!wave1.is_empty());
+        // Children are valid, distinct from the parent, and include the
+        // parent's systematic mutations (e.g. the ctx x2 step).
+        for (l, c) in &wave1 {
+            c.validate().unwrap();
+            assert_ne!(c.stable_hash(), params.stable_hash());
+            assert!(l.starts_with("evo1-"), "{l}");
+        }
+        assert!(wave1
+            .iter()
+            .any(|(_, c)| c.context_depth == params.context_depth * 2));
+    }
+}

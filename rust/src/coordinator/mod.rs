@@ -27,6 +27,12 @@
 //! * [`report`] — [`PpaRow`] pricing per variant plus incremental
 //!   [`SweepReport`] aggregation: best-PPA Pareto frontier, cache
 //!   hit-rate, per-stage timing.
+//! * [`drive`] — search-guided DSE: a [`SweepDriver`] proposes waves of
+//!   points from the evolving report ([`SuccessiveHalving`] refinement,
+//!   [`Evolutionary`] mutation) and [`SweepEngine::drive`] evaluates them
+//!   until the frontier stabilizes — reaching the exhaustive frontier at
+//!   a fraction of the evaluations (`SweepReport::summary()` prints the
+//!   searched fraction).
 //!
 //! # Using the sweep engine
 //!
@@ -60,12 +66,14 @@
 //! key, which the cache tests assert.
 
 pub mod cache;
+pub mod drive;
 pub mod job;
 pub mod pool;
 pub mod report;
 pub mod sweep;
 
 pub use cache::{ArtifactCache, CacheStats, ElabArtifacts, PassCounts};
+pub use drive::{stratified_sample, Evolutionary, SuccessiveHalving, SweepDriver};
 pub use job::{
     calibrate_params, calibrate_params_words, run_job, run_job_cached, run_jobs_cached_batch,
     JobResult, JobSpec, JobTiming, Workload, WorkloadSuite,

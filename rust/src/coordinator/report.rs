@@ -193,11 +193,25 @@ pub struct SweepReport {
     pub timing: JobTiming,
     /// Wall-clock of the whole sweep, nanoseconds.
     pub wall_ns: u64,
+    /// Size of the full design-space grid this report explored (0 when
+    /// unknown). An exhaustive sweep sets it to the number of submitted
+    /// points, so `summary()` reports 100%; an adaptive drive sets it to
+    /// the full grid size, making the evaluated fraction the headline
+    /// search metric. Shard partials carry their shard's point count and
+    /// merging sums them.
+    pub grid_size: usize,
 }
 
 impl SweepReport {
     pub fn frontier_points(&self) -> Vec<&SweepPoint> {
         self.frontier.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    /// Designs this sweep actually evaluated — successes plus failures.
+    /// Compared against `grid_size`, this is the adaptive-DSE headline:
+    /// how much of the grid was paid for to reach the reported frontier.
+    pub fn points_evaluated(&self) -> usize {
+        self.points.len() + self.failures.len()
     }
 
     pub fn cache_hit_rate(&self) -> f64 {
@@ -313,8 +327,18 @@ impl SweepReport {
         } else {
             String::new()
         };
+        let searched = if self.grid_size > 0 {
+            format!(
+                " | searched {}/{} points ({:.1}%)",
+                self.points_evaluated(),
+                self.grid_size,
+                100.0 * self.points_evaluated() as f64 / self.grid_size as f64
+            )
+        } else {
+            String::new()
+        };
         let mut s = format!(
-            "{} points ({} failed) in {:.1} ms | cache {}/{} hits ({:.0}%, {} from disk) | sim cache {}/{} hits ({:.0}%) | {per_pass}{evicted}{rejected} | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
+            "{} points ({} failed){searched} in {:.1} ms | cache {}/{} hits ({:.0}%, {} from disk) | sim cache {}/{} hits ({:.0}%) | {per_pass}{evicted}{rejected} | elab {:.1} ms, compile {:.1} ms, sim {:.1} ms",
             self.points.len(),
             self.failures.len(),
             self.wall_ns as f64 / 1e6,
@@ -417,6 +441,11 @@ impl SweepAccumulator {
 
     pub fn push_failure(&mut self, label: String, error: String) {
         self.report.failures.push((label, error));
+    }
+
+    /// Record the size of the full grid (see [`SweepReport::grid_size`]).
+    pub fn set_grid_size(&mut self, n: usize) {
+        self.report.grid_size = n;
     }
 
     /// Points accumulated so far (frontier is valid mid-stream too).
@@ -656,6 +685,33 @@ mod tests {
         single.push(point("q", 1.0, 1.0, 5.0));
         let s1 = single.finish(CacheStats::default(), 1).summary();
         assert_eq!(s1.lines().count(), 1, "{s1}");
+    }
+
+    /// Satellite: `summary()` reports the searched fraction whenever the
+    /// grid size is known — 100% for exhaustive sweeps, less for adaptive
+    /// drives — and failures count as evaluated (they were paid for).
+    #[test]
+    fn summary_reports_searched_fraction() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(point("a", 1.0, 1.0, 1.0));
+        acc.push_failure("bad".into(), "boom".into());
+        acc.set_grid_size(4);
+        let r = acc.finish(CacheStats::default(), 1);
+        assert_eq!(r.points_evaluated(), 2);
+        assert_eq!(r.grid_size, 4);
+        assert!(r.summary().contains("searched 2/4 points (50.0%)"), "{}", r.summary());
+
+        // Exhaustive continuity: evaluated == grid → 100%.
+        let mut full = SweepAccumulator::new();
+        full.push(point("a", 1.0, 1.0, 1.0));
+        full.push(point("b", 2.0, 2.0, 2.0));
+        full.set_grid_size(2);
+        let s = full.finish(CacheStats::default(), 1).summary();
+        assert!(s.contains("searched 2/2 points (100.0%)"), "{s}");
+
+        // Unknown grid (grid_size 0): the segment is absent, not a 0/0.
+        let s0 = SweepReport::default().summary();
+        assert!(!s0.contains("searched"), "{s0}");
     }
 
     #[test]

@@ -167,12 +167,40 @@ impl SweepEngine {
     ) -> SweepReport {
         let t0 = Instant::now();
         let stats_before = self.cache.stats();
+        let submitted = points.len();
+        let results = self.evaluate_points(points, suite, seed);
+        let mut acc = SweepAccumulator::new();
+        acc.set_grid_size(submitted);
+        for r in results {
+            match r {
+                Ok(p) => acc.push(p),
+                Err((label, e)) => acc.push_failure(label, e),
+            }
+        }
+        acc.finish(
+            self.cache.stats().since(&stats_before),
+            t0.elapsed().as_nanos() as u64,
+        )
+    }
+
+    /// Evaluate an explicit point list through the batched, cache-backed
+    /// dispatch path *without* aggregating: one `Result` per submitted
+    /// point, in submission order. Shared by [`SweepEngine::sweep_points`]
+    /// and the adaptive driver loop (`SweepEngine::drive`), so search
+    /// waves ride the same arena batching, panic containment and cache
+    /// tiers as exhaustive sweeps.
+    pub(crate) fn evaluate_points(
+        &self,
+        points: Vec<(String, WindMillParams)>,
+        suite: &WorkloadSuite,
+        seed: u64,
+    ) -> Vec<Result<SweepPoint, (String, String)>> {
         let cache = Arc::clone(&self.cache);
         let suite = suite.clone();
         // Member layouts are grid-invariant: compute the suite's memory
         // requirement once, not once per point inside the workers.
         let smem_words = suite.required_smem_words();
-        let results: Vec<Result<SweepPoint, (String, String)>> = if self.batch <= 1 {
+        if self.batch <= 1 {
             let run = run_fifo(points, self.workers, move |(label, params)| {
                 // A panicking point must land in `failures`, not take down
                 // the sweep (same containment as `run_all_with`).
@@ -210,18 +238,7 @@ impl SweepEngine {
                 })
             });
             run.results.into_iter().flatten().collect()
-        };
-        let mut acc = SweepAccumulator::new();
-        for r in results {
-            match r {
-                Ok(p) => acc.push(p),
-                Err((label, e)) => acc.push_failure(label, e),
-            }
         }
-        acc.finish(
-            self.cache.stats().since(&stats_before),
-            t0.elapsed().as_nanos() as u64,
-        )
     }
 }
 

@@ -11,7 +11,8 @@ use std::sync::Arc;
 use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
 use windmill::coordinator::{
-    ppa_report, run_all, JobSpec, SweepEngine, SweepReport, Workload, WorkloadSuite,
+    ppa_report, run_all, Evolutionary, JobSpec, SuccessiveHalving, SweepDriver, SweepEngine,
+    SweepReport, Workload, WorkloadSuite,
 };
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
@@ -31,6 +32,7 @@ USAGE:
         against the CPU/GPU baseline models.
     windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
                    [--batch N] [--store DIR] [--shard I/N] [--expect-warm]
+                   [--drive halving|evolve [--waves K]]
         Design-space sweep (PEA size x topology grid) of a workload — or a
         comma-separated workload *suite* (e.g. `gemm,spmv,rl`), evaluated
         member-by-member at every grid point into one frontier over
@@ -45,6 +47,12 @@ USAGE:
                       save the partial report under DIR/partials/
         --expect-warm exit nonzero unless the sweep re-entered simulate()
                       zero times (CI warm-start assertion)
+        --drive STRAT search the grid instead of exhausting it: a driver
+                      proposes waves of points until the Pareto frontier
+                      stabilizes (`halving` = stratified sample + neighbor
+                      refinement; `evolve` = mutation of frontier elites).
+                      The summary prints the searched fraction.
+        --waves K     cap the driver at K proposal waves
     windmill sweep-merge [<wl>[,<wl>...]] --store DIR [--seed S] [--list]
         Merge one complete shard session under DIR/partials/ into a report
         bit-identical to the unsharded sweep (a store may hold partials of
@@ -211,6 +219,21 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     if shard.is_some() && store_dir.is_none() {
         return Err("--shard needs --store (partials are saved under the store)".into());
     }
+    let drive = match arg_value(args, "--drive") {
+        Some(s) if s == "halving" || s == "evolve" => Some(s),
+        Some(s) => return Err(format!("bad --drive `{s}` (want halving|evolve)")),
+        None => None,
+    };
+    let waves: Option<usize> = match arg_value(args, "--waves") {
+        Some(s) => Some(s.parse().map_err(|_| format!("bad --waves `{s}`"))?),
+        None => None,
+    };
+    if drive.is_some() && shard.is_some() {
+        return Err("--drive searches adaptively; it cannot be sharded with --shard".into());
+    }
+    if waves.is_some() && drive.is_none() {
+        return Err("--waves only applies with --drive".into());
+    }
 
     let store = match &store_dir {
         Some(dir) => Some(Arc::new(DiskStore::open(dir).map_err(|e| e.to_string())?)),
@@ -223,29 +246,56 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     .with_batch(batch);
     let grid = sweep_grid(base);
 
-    let report = match shard {
-        Some((i, n)) => {
-            let partial = SweepSession::run_shard(&engine, &grid, &suite, seed, i, n)
-                .map_err(|e| e.to_string())?;
-            let path = SweepSession::save_partial(
-                Path::new(store_dir.as_ref().unwrap()),
-                &partial,
-            )
-            .map_err(|e| e.to_string())?;
-            eprintln!("shard {i}/{n}: {} points -> {}", partial.report.points.len(), path.display());
-            print_sweep_report(
-                &partial.report,
-                &format!("sweep shard {i}/{n} of `{}`", suite.name()),
-            );
-            partial.report
-        }
-        None => {
-            let report = engine.sweep_suite(&grid, &suite, seed);
-            print_sweep_report(
-                &report,
-                &format!("design-space sweep of `{}` (PEA size x topology)", suite.name()),
-            );
-            report
+    let report = if let Some(strat) = &drive {
+        let mut driver: Box<dyn SweepDriver> = match strat.as_str() {
+            "halving" => {
+                let mut d = SuccessiveHalving::new(&grid, seed);
+                if let Some(k) = waves {
+                    d = d.with_max_waves(k);
+                }
+                Box::new(d)
+            }
+            _ => {
+                let mut d = Evolutionary::new(&grid, seed);
+                if let Some(k) = waves {
+                    d = d.with_max_waves(k);
+                }
+                Box::new(d)
+            }
+        };
+        let report = engine.drive(&grid, &suite, seed, driver.as_mut());
+        print_sweep_report(
+            &report,
+            &format!("adaptive sweep of `{}` (`{strat}` driver)", suite.name()),
+        );
+        report
+    } else {
+        match shard {
+            Some((i, n)) => {
+                let partial = SweepSession::run_shard(&engine, &grid, &suite, seed, i, n)
+                    .map_err(|e| e.to_string())?;
+                let path =
+                    SweepSession::save_partial(Path::new(store_dir.as_ref().unwrap()), &partial)
+                        .map_err(|e| e.to_string())?;
+                eprintln!(
+                    "shard {i}/{n}: {} points -> {}",
+                    partial.report.points.len(),
+                    path.display()
+                );
+                print_sweep_report(
+                    &partial.report,
+                    &format!("sweep shard {i}/{n} of `{}`", suite.name()),
+                );
+                partial.report
+            }
+            None => {
+                let report = engine.sweep_suite(&grid, &suite, seed);
+                print_sweep_report(
+                    &report,
+                    &format!("design-space sweep of `{}` (PEA size x topology)", suite.name()),
+                );
+                report
+            }
         }
     };
     if let Some(s) = &store {

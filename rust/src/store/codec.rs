@@ -59,7 +59,10 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 /// (`batch_launches`, `batch_lanes`, `sim_skipped_cycles`), and the
 /// [`Kind::SeedClass`] entry maps a raw mapper seed to its canonical
 /// placement-equivalence representative.
-pub const VERSION: u16 = 3;
+/// v4 (PR 7): `SweepReport` carries `grid_size` — the full-grid point
+/// count behind the adaptive-DSE evaluated-fraction metric
+/// (`summary()`'s `searched N/M points`).
+pub const VERSION: u16 = 4;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -1080,6 +1083,7 @@ pub fn encode_sweep_partial(p: &SweepPartial) -> Vec<u8> {
     enc_cache_stats(&mut e, &r.cache);
     enc_timing(&mut e, &r.timing);
     e.u64(r.wall_ns);
+    e.usize(r.grid_size);
     e.finish()
 }
 
@@ -1110,6 +1114,7 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
     let cache = dec_cache_stats(&mut d)?;
     let timing = dec_timing(&mut d)?;
     let wall_ns = d.u64()?;
+    let grid_size = d.usize()?;
     d.close()?;
     Ok(SweepPartial {
         shard,
@@ -1126,6 +1131,7 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
             cache,
             timing,
             wall_ns,
+            grid_size,
         },
     })
 }

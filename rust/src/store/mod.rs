@@ -27,4 +27,4 @@ pub mod session;
 
 pub use codec::SweepPartial;
 pub use disk::{DiskStats, DiskStore, GcPassReport, GcReport};
-pub use session::{ManifestEntry, SweepSession};
+pub use session::{ManifestEntry, SweepSession, WaveEntry};

@@ -54,6 +54,30 @@ pub struct ManifestEntry {
     pub points: usize,
 }
 
+/// One `"kind":"wave"` line of `<store>/manifest.jsonl`: the coordinates
+/// of one adaptive-drive proposal wave
+/// ([`crate::coordinator::SweepEngine::drive`]). Wave lines share the
+/// manifest with shard lines; shard readers ([`SweepSession::read_manifest`])
+/// ignore them without counting them as garbage, and
+/// [`SweepSession::read_waves`] is the audit-trail view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaveEntry {
+    /// [`crate::coordinator::SweepDriver::name`] of the strategy.
+    pub driver: String,
+    pub suite: String,
+    /// Hex-encoded in the JSON, like every u64 in the manifest.
+    pub suite_hash: u64,
+    pub seed: u64,
+    /// Wave index within one drive run, starting at 0.
+    pub wave: u32,
+    /// Points the driver proposed this wave, before dedup/validation.
+    pub proposed: usize,
+    /// Fresh points actually evaluated after dedup/validation.
+    pub evaluated: usize,
+    /// Frontier size after folding the wave in.
+    pub frontier: usize,
+}
+
 /// Namespace for shard/merge operations of one design-space sweep.
 pub struct SweepSession;
 
@@ -177,7 +201,9 @@ impl SweepSession {
     }
 
     /// Read the manifest back. Unparseable lines are skipped and counted
-    /// (the crash-mid-append analogue of the corrupt-entry policy); a
+    /// (the crash-mid-append analogue of the corrupt-entry policy), except
+    /// typed non-shard records (`"kind":"wave"` — see
+    /// [`SweepSession::read_waves`]), which are ignored silently; a
     /// missing manifest is an empty one, not an error.
     pub fn read_manifest(store_root: &Path) -> (Vec<ManifestEntry>, usize) {
         let Ok(text) = std::fs::read_to_string(Self::manifest_path(store_root)) else {
@@ -188,10 +214,70 @@ impl SweepSession {
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             match Self::parse_manifest_line(line) {
                 Some(e) => entries.push(e),
+                None if Self::line_kind(line).is_some() => {}
                 None => skipped += 1,
             }
         }
         (entries, skipped)
+    }
+
+    /// The `"kind"` tag of a typed manifest line, if any (shard lines,
+    /// which predate typed records, carry none).
+    fn line_kind(line: &str) -> Option<String> {
+        let j = crate::util::json::Json::parse(line).ok()?;
+        Some(j.get("kind")?.as_str()?.to_string())
+    }
+
+    /// Append one adaptive-drive wave record to the manifest (a
+    /// `"kind":"wave"` JSON line; hashes and the seed hex-encoded like
+    /// shard lines).
+    pub fn append_wave(store_root: &Path, w: &WaveEntry) -> Result<(), DiagError> {
+        use std::io::Write;
+        let line = format!(
+            "{{\"kind\":\"wave\",\"driver\":{},\"suite\":{},\"suite_hash\":\"{:016x}\",\"seed\":\"{:016x}\",\"wave\":{},\"proposed\":{},\"evaluated\":{},\"frontier\":{}}}\n",
+            crate::util::json::Json::Str(w.driver.clone()),
+            crate::util::json::Json::Str(w.suite.clone()),
+            w.suite_hash,
+            w.seed,
+            w.wave,
+            w.proposed,
+            w.evaluated,
+            w.frontier,
+        );
+        let path = Self::manifest_path(store_root);
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| f.write_all(line.as_bytes()))
+            .map_err(|e| DiagError::Store(format!("cannot append {}: {e}", path.display())))
+    }
+
+    /// Read the adaptive-drive wave records back, in append order.
+    /// Missing manifest or no wave lines: empty, not an error.
+    pub fn read_waves(store_root: &Path) -> Vec<WaveEntry> {
+        let Ok(text) = std::fs::read_to_string(Self::manifest_path(store_root)) else {
+            return Vec::new();
+        };
+        text.lines().filter_map(Self::parse_wave_line).collect()
+    }
+
+    fn parse_wave_line(line: &str) -> Option<WaveEntry> {
+        let j = crate::util::json::Json::parse(line).ok()?;
+        if j.get("kind")?.as_str()? != "wave" {
+            return None;
+        }
+        let hex = |key: &str| u64::from_str_radix(j.get(key)?.as_str()?, 16).ok();
+        Some(WaveEntry {
+            driver: j.get("driver")?.as_str()?.to_string(),
+            suite: j.get("suite")?.as_str()?.to_string(),
+            suite_hash: hex("suite_hash")?,
+            seed: hex("seed")?,
+            wave: j.get("wave")?.as_f64()? as u32,
+            proposed: j.get("proposed")?.as_usize()?,
+            evaluated: j.get("evaluated")?.as_usize()?,
+            frontier: j.get("frontier")?.as_usize()?,
+        })
     }
 
     fn parse_manifest_line(line: &str) -> Option<ManifestEntry> {
@@ -345,7 +431,11 @@ impl SweepSession {
         let mut acc = SweepAccumulator::new();
         let mut cache = crate::coordinator::CacheStats::default();
         let mut wall_ns = 0u64;
+        let mut grid_size = 0usize;
         for p in partials {
+            // Shard partials carry their shard's submitted point count;
+            // the merged report's grid size is their sum (the full grid).
+            grid_size += p.report.grid_size;
             for point in p.report.points {
                 acc.push(point);
             }
@@ -355,6 +445,7 @@ impl SweepSession {
             cache.absorb(&p.report.cache);
             wall_ns += p.report.wall_ns;
         }
+        acc.set_grid_size(grid_size);
         Ok(acc.finish(cache, wall_ns))
     }
 }
@@ -477,6 +568,50 @@ mod tests {
 
         let merged = SweepSession::merge(vec![p1, p0]).unwrap(); // order-insensitive
         assert_eq!(merged.points.len(), grid().len());
+        // Shard grid sizes sum to the full grid: the merged summary
+        // reports 100% searched, like the unsharded sweep.
+        assert_eq!(merged.grid_size, grid().len());
+        assert_eq!(merged.points_evaluated(), merged.grid_size);
+    }
+
+    /// Wave records share the manifest with shard lines: `read_waves`
+    /// returns them in order, `read_manifest` ignores them without
+    /// counting them as garbage, and `list_sessions` is unaffected.
+    #[test]
+    fn wave_records_coexist_with_shard_lines() {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-waves-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let engine = SweepEngine::new(1);
+        let small = ParamGrid::new(presets::standard()).pea_edges(&[4]);
+        let suite = saxpy_suite();
+        let p0 = SweepSession::run_shard(&engine, &small, &suite, 42, 0, 1).unwrap();
+        SweepSession::save_partial(&dir, &p0).unwrap();
+        let w0 = WaveEntry {
+            driver: "halving".into(),
+            suite: suite.name(),
+            suite_hash: suite.fingerprint(),
+            seed: (1u64 << 53) + 7, // above f64 precision: must round-trip
+            wave: 0,
+            proposed: 6,
+            evaluated: 5,
+            frontier: 2,
+        };
+        let w1 = WaveEntry { wave: 1, proposed: 4, evaluated: 1, frontier: 2, ..w0.clone() };
+        SweepSession::append_wave(&dir, &w0).unwrap();
+        SweepSession::append_wave(&dir, &w1).unwrap();
+        assert_eq!(SweepSession::read_waves(&dir), vec![w0, w1]);
+        let (entries, skipped) = SweepSession::read_manifest(&dir);
+        assert_eq!(entries.len(), 1, "shard line still read");
+        assert_eq!(skipped, 0, "wave lines are not garbage");
+        assert_eq!(SweepSession::list_sessions(&dir).len(), 1);
+        // A store with no manifest reads back empty.
+        let empty = std::env::temp_dir()
+            .join(format!("windmill-nowaves-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&empty);
+        assert!(SweepSession::read_waves(&empty).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Adaptive-DSE system tests (PR 7): search-guided sweeps must reach the
+//! exhaustive Pareto frontier while evaluating fewer points — and must
+//! compose with every existing guarantee. Pinned here:
+//!
+//! * both shipped drivers ([`SuccessiveHalving`], [`Evolutionary`]) reach a
+//!   frontier dominance-equivalent to the exhaustive sweep on a grid whose
+//!   frontier is known analytically;
+//! * a fixed seed makes a drive fully deterministic — same evaluated
+//!   points, same order, same frontier;
+//! * a re-drive on a warm store performs **zero** `simulate()` calls and
+//!   reproduces the cold report bit-for-bit, and the drive's wave records
+//!   land in `manifest.jsonl` without confusing the shard-session reader;
+//! * an out-of-grid point produced by the mutation operator round-trips
+//!   the persistent store like any grid point (the codec has no grid
+//!   enumeration to lean on — parameters travel by value).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::coordinator::{
+    Evolutionary, SuccessiveHalving, SweepEngine, SweepReport, Workload, WorkloadSuite,
+};
+use windmill::store::{DiskStore, SweepSession};
+use windmill::util::Rng;
+
+/// Unique per-test scratch directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir =
+            std::env::temp_dir().join(format!("windmill-dsetest-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Every frontier point of `reference` is matched (same architecture) or
+/// weakly dominated by some frontier point of `search` — the search lost
+/// nothing the reference found. This is the acceptance notion: the search
+/// may surface a *different* representative only if it is at least as good
+/// on every objective.
+fn assert_frontier_covers(search: &SweepReport, reference: &SweepReport, what: &str) {
+    for e in reference.frontier_points() {
+        let covered = search
+            .frontier_points()
+            .iter()
+            .any(|d| d.arch_hash == e.arch_hash || d.dominates(e));
+        assert!(covered, "{what}: `{}` uncovered by the searched frontier", e.label);
+    }
+}
+
+/// Context-depth chain at or above the standard 32: for saxpy-64 the
+/// iteration window never binds, so cycles are identical across the chain
+/// while area and power grow strictly with depth — the exhaustive frontier
+/// is exactly the minimum-depth point, known without running the search.
+fn ctx_chain() -> ParamGrid {
+    ParamGrid::new(presets::standard()).context_depths(&[32, 64, 128])
+}
+
+fn suite() -> WorkloadSuite {
+    WorkloadSuite::single(Workload::Saxpy { n: 64 })
+}
+
+#[test]
+fn each_strategy_matches_the_exhaustive_frontier() {
+    let grid = ctx_chain();
+    let exhaustive = SweepEngine::new(2).sweep_suite(&grid, &suite(), 42);
+    assert!(exhaustive.failures.is_empty(), "{:?}", exhaustive.failures);
+    assert_eq!(exhaustive.points_evaluated(), grid.len());
+
+    // Halving only ever proposes grid points, so its frontier and the
+    // exhaustive one must cover each other (dominance-equivalence).
+    let mut halving = SuccessiveHalving::new(&grid, 42);
+    let driven_h = SweepEngine::new(2).drive(&grid, &suite(), 42, &mut halving);
+    assert!(driven_h.failures.is_empty(), "{:?}", driven_h.failures);
+    assert_frontier_covers(&driven_h, &exhaustive, "halving");
+    assert_frontier_covers(&exhaustive, &driven_h, "halving (reverse)");
+
+    // Evolution may step *off* the grid and land on strictly better
+    // points, so the guarantee is one-directional: it loses nothing the
+    // exhaustive sweep found. (Exotic mutants may legitimately fail to
+    // map — failures are contained, not fatal.)
+    let mut evolve = Evolutionary::new(&grid, 42);
+    let driven_e = SweepEngine::new(2).drive(&grid, &suite(), 42, &mut evolve);
+    assert_frontier_covers(&driven_e, &exhaustive, "evolve");
+
+    // The headline metric is visible: the drive knows the grid size and
+    // reports the searched fraction (proposals are deduplicated, so the
+    // in-grid evaluations never exceed it; mutation may step off-grid).
+    assert_eq!(driven_h.grid_size, grid.len());
+    assert!(
+        driven_h.summary().contains("searched"),
+        "summary must report the searched fraction: {}",
+        driven_h.summary()
+    );
+    assert!(driven_e.summary().contains("searched"));
+}
+
+#[test]
+fn drivers_are_deterministic_for_a_fixed_seed() {
+    let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 6, 8]).context_depths(&[32, 64]);
+    let run_halving = || {
+        let mut d = SuccessiveHalving::new(&grid, 7);
+        SweepEngine::new(2).drive(&grid, &suite(), 7, &mut d)
+    };
+    let run_evolve = || {
+        let mut d = Evolutionary::new(&grid, 7);
+        SweepEngine::new(2).drive(&grid, &suite(), 7, &mut d)
+    };
+    for (a, b, what) in [
+        (run_halving(), run_halving(), "halving"),
+        (run_evolve(), run_evolve(), "evolve"),
+    ] {
+        let labels = |r: &SweepReport| r.points.iter().map(|p| p.label.clone()).collect::<Vec<_>>();
+        assert_eq!(labels(&a), labels(&b), "{what}: evaluated point sequence must be reproducible");
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.cycles, y.cycles, "{what}: {}", x.label);
+            assert_eq!(x.wm_time_ns.to_bits(), y.wm_time_ns.to_bits(), "{what}: {}", x.label);
+        }
+        let front = |r: &SweepReport| {
+            r.frontier_points().iter().map(|p| p.label.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(front(&a), front(&b), "{what}: frontier must be reproducible");
+    }
+}
+
+#[test]
+fn warm_store_re_drive_performs_zero_simulate_calls() {
+    let tmp = TempDir::new("warm-drive");
+    let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 6]).context_depths(&[32, 64]);
+
+    let store = Arc::new(DiskStore::open(tmp.path()).unwrap());
+    let mut driver = SuccessiveHalving::new(&grid, 7);
+    let cold = SweepEngine::with_store(2, store).drive(&grid, &suite(), 7, &mut driver);
+    assert!(cold.failures.is_empty(), "{:?}", cold.failures);
+    assert!(
+        cold.cache.pass_counts_full("simulate").miss > 0,
+        "cold drive must actually simulate"
+    );
+
+    // Wave records landed in the manifest — and do not confuse the
+    // shard-session reader (no shard entries, nothing counted as garbage).
+    let waves = SweepSession::read_waves(tmp.path());
+    assert!(!waves.is_empty(), "drive with a store must record its waves");
+    for (i, w) in waves.iter().enumerate() {
+        assert_eq!(w.driver, "halving");
+        assert_eq!(w.suite, suite().name());
+        assert_eq!(w.seed, 7);
+        assert_eq!(w.wave, i as u32);
+        assert!(w.evaluated <= w.proposed, "wave {i}: dedup only removes proposals");
+    }
+    assert_eq!(waves.iter().map(|w| w.evaluated).sum::<usize>(), cold.points_evaluated());
+    let (entries, skipped) = SweepSession::read_manifest(tmp.path());
+    assert!(entries.is_empty(), "wave records must not read back as shard entries");
+    assert_eq!(skipped, 0, "wave records must not be counted as garbage");
+
+    // A cold process on the warm store: same drive, zero simulate() calls,
+    // bit-identical report.
+    let store2 = Arc::new(DiskStore::open(tmp.path()).unwrap());
+    let mut driver2 = SuccessiveHalving::new(&grid, 7);
+    let warm = SweepEngine::with_store(2, store2).drive(&grid, &suite(), 7, &mut driver2);
+    assert!(warm.failures.is_empty(), "{:?}", warm.failures);
+    let sim = warm.cache.pass_counts_full("simulate");
+    assert_eq!(sim.miss, 0, "warm re-drive must not re-enter simulate()");
+    assert_eq!(warm.sim_hit_rate(), 1.0);
+    assert_eq!(warm.points.len(), cold.points.len());
+    for (a, b) in warm.points.iter().zip(cold.points.iter()) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles, "{}", a.label);
+        assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits(), "{}", a.label);
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{}", a.label);
+    }
+}
+
+/// The mutation operator steps off every enumerated grid (that is its
+/// point); such a point must flow through the persistent store exactly
+/// like a grid point — parameters travel by value, not by grid index.
+#[test]
+fn out_of_grid_mutated_point_round_trips_the_store() {
+    let tmp = TempDir::new("mutant");
+    let mut rng = Rng::scoped(7, "test.mutant");
+    let mutant = presets::standard().mutated(&mut rng).expect("standard preset has mutations");
+    assert!(mutant.validate().is_ok());
+    assert_ne!(mutant.stable_hash(), presets::standard().stable_hash());
+
+    let run = || {
+        let store = Arc::new(DiskStore::open(tmp.path()).unwrap());
+        SweepEngine::with_store(1, store).sweep_points(
+            vec![("mutant".to_string(), mutant.clone())],
+            &suite(),
+            7,
+        )
+    };
+    let cold = run();
+    assert!(cold.failures.is_empty(), "{:?}", cold.failures);
+    assert!(cold.cache.pass_counts_full("simulate").miss > 0);
+    assert_eq!(cold.grid_size, 1);
+
+    let warm = run();
+    assert!(warm.failures.is_empty(), "{:?}", warm.failures);
+    assert_eq!(warm.cache.pass_counts_full("simulate").miss, 0, "mutant must warm-start");
+    assert_eq!(warm.points[0].cycles, cold.points[0].cycles);
+    assert_eq!(warm.points[0].arch_hash, cold.points[0].arch_hash);
+}
