@@ -1,0 +1,113 @@
+//! Telemetry overhead bench (EXPERIMENTS.md §Telemetry): cycle-attributed
+//! profiling must be close to free, or nobody leaves it on.
+//!
+//! Two acceptance gates, both asserted:
+//!
+//! 1. **Overhead.** A profiled cold GEMM sweep (stall attribution on,
+//!    timeline off — the `--profile` CLI default) completes within 1.10x
+//!    the unprofiled sweep's wall time (min over measured runs, so a
+//!    single scheduler hiccup cannot fail the gate).
+//! 2. **Trace export.** The Chrome `trace_event` document emitted for a
+//!    timeline-profiled sweep parses as valid JSON and carries at least
+//!    one counter event per PE row of the focus point, plus the pipeline
+//!    spans — i.e. the file Perfetto loads is actually produced.
+//!
+//! `cargo bench --bench telemetry_overhead`
+
+mod bench_util;
+
+use bench_util::{bench, fmt_ns, Table};
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::coordinator::{SweepEngine, SweepReport, Workload};
+use windmill::sim::SimOptions;
+use windmill::trace::chrome_trace;
+use windmill::util::json::Json;
+
+fn grid() -> ParamGrid {
+    // Context-depth grid on the standard preset: every point mappable,
+    // stage memoization identical on both arms (same kernel, same seed).
+    ParamGrid::new(presets::standard()).context_depths(&[32, 48, 64, 96])
+}
+
+fn sweep(opts: Option<SimOptions>) -> SweepReport {
+    let mut engine = SweepEngine::new(1);
+    if let Some(o) = opts {
+        engine = engine.with_profile(o);
+    }
+    let r = engine.sweep(&grid(), &Workload::Gemm { m: 16, n: 16, k: 16 });
+    assert!(r.failures.is_empty(), "{:?}", r.failures);
+    r
+}
+
+fn main() {
+    // ---- gate 1: profiling overhead on a cold sweep ------------------------
+    let off = bench(1, 3, || sweep(None).wall_ns);
+    let on = bench(1, 3, || sweep(Some(SimOptions { profile: true, sample_stride: 0 })).wall_ns);
+
+    let ratio = on.min() / off.min().max(1.0);
+    let mut t = Table::new(
+        "telemetry overhead: cold GEMM context-depth sweep (4 points)",
+        &["path", "wall mean", "wall min", "vs off"],
+    );
+    t.row(&["profile off".into(), fmt_ns(off.mean()), fmt_ns(off.min()), "1.00x".into()]);
+    t.row(&["profile on".into(), fmt_ns(on.mean()), fmt_ns(on.min()), format!("{ratio:.3}x")]);
+    t.print();
+    assert!(
+        ratio <= 1.10,
+        "profiled sweep must stay within 1.10x of unprofiled: {ratio:.3}x \
+         ({} vs {})",
+        fmt_ns(on.min()),
+        fmt_ns(off.min())
+    );
+
+    // The profiled report actually carries verdicts on its frontier.
+    let profiled = sweep(Some(SimOptions { profile: true, sample_stride: 0 }));
+    let front = profiled.frontier_points();
+    assert!(!front.is_empty());
+    assert!(
+        front.iter().all(|p| p.telemetry.is_some()),
+        "every profiled frontier point must carry telemetry"
+    );
+    println!("profiled summary: {}", profiled.summary());
+
+    // ---- gate 2: the Chrome trace is valid and row-complete ----------------
+    let traced = sweep(Some(SimOptions { profile: true, sample_stride: 256 }));
+    let doc = chrome_trace(&traced);
+    let j = Json::parse(&doc).expect("trace must parse as JSON");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let name_of = |e: &Json| e.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+    assert!(
+        events.iter().any(|e| name_of(e) == "simulate"),
+        "pipeline spans missing from the trace"
+    );
+
+    let focus = traced
+        .frontier_points()
+        .into_iter()
+        .find(|p| p.telemetry.as_ref().is_some_and(|t| !t.timeline.is_empty()))
+        .expect("a timeline-profiled sweep must yield a focus point");
+    let t = focus.telemetry.as_ref().unwrap();
+    let rows = t.timeline[0].rows_fired.len();
+    let banks = t.timeline[0].bank_conflicts.len();
+    assert!(rows > 0 && banks > 0);
+    for r in 0..rows {
+        let track = format!("pe-row-{r}");
+        assert!(
+            events.iter().any(|e| name_of(e) == track),
+            "trace must carry >=1 counter event for every PE row: missing {track}"
+        );
+    }
+    for b in 0..banks {
+        let track = format!("smem-bank-{b}");
+        assert!(events.iter().any(|e| name_of(e) == track), "missing {track}");
+    }
+    println!(
+        "trace export: {} events, {} PE-row tracks, {} bank tracks, {} bytes",
+        events.len(),
+        rows,
+        banks,
+        doc.len()
+    );
+    println!("telemetry-overhead acceptance: {ratio:.3}x <= 1.10x, trace valid");
+}

@@ -399,6 +399,18 @@ impl SweepEngine {
             }
             prev_sig = sig;
             if let Some(store) = self.store() {
+                // Frontier bottleneck verdicts (profiled drives only —
+                // empty otherwise), so the manifest explains *why* each
+                // wave's survivors look the way they do.
+                let bottlenecks: Vec<String> = acc
+                    .partial()
+                    .frontier_points()
+                    .iter()
+                    .filter_map(|p| {
+                        let t = p.telemetry.as_ref()?;
+                        Some(format!("{}: {}", p.label, t.bottleneck_label()?))
+                    })
+                    .collect();
                 // Best-effort audit trail; a read-only store must not
                 // abort the search.
                 let _ = SweepSession::append_wave(
@@ -412,6 +424,7 @@ impl SweepEngine {
                         proposed,
                         evaluated,
                         frontier: acc.partial().frontier.len(),
+                        bottlenecks,
                     },
                 );
             }
@@ -458,6 +471,7 @@ mod tests {
                 ii: 1,
             }],
             timing: JobTiming::default(),
+            telemetry: None,
         }
     }
 

@@ -17,9 +17,12 @@ use crate::compiler::{compile, Mapping};
 use crate::diag::error::DiagError;
 use crate::model::baseline::{CpuModel, GpuModel};
 use crate::plugins;
-use crate::sim::engine::{simulate_batch, simulate_counting, LaneSpec, SimResult};
+use crate::sim::engine::{
+    simulate_batch_with, simulate_counting, simulate_counting_with, LaneSpec, SimOptions, SimResult,
+};
 use crate::sim::machine::MachineDesc;
 use crate::sim::task::{run_task, run_task_with, Phase, PhaseReq, Task, TaskCursor, TaskResult};
+use crate::sim::telemetry::TelemetrySummary;
 use crate::util::Rng;
 use crate::util::StableHasher;
 use crate::workloads::{graph, linalg, rl, signal, Layout};
@@ -290,6 +293,9 @@ pub struct JobResult {
     pub mapped_nodes: usize,
     /// Final memory image (for golden checks by the caller).
     pub mem: Vec<f32>,
+    /// Merged per-phase telemetry; `Some` only on profiled runs
+    /// ([`SimOptions::profile`]).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 /// Adjust parameters so the workload fits — the Generation→Definition
@@ -507,6 +513,7 @@ fn finalize_job(
         ii,
         measured_ii: 0.0,
         mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
+        telemetry: tr.telemetry,
         mem: tr.mem,
     }
 }
@@ -526,12 +533,44 @@ pub fn run_job_cached(
     spec: &JobSpec,
     cache: Option<&ArtifactCache>,
 ) -> Result<(JobResult, JobTiming), DiagError> {
+    run_job_cached_with(spec, cache, &SimOptions::default())
+}
+
+/// [`run_job_cached`] with simulation-observation options. A profiled job
+/// (`opts.profile`) **bypasses the SimResult cache in both directions**:
+/// cached entries carry no telemetry so a read could not answer the
+/// request, and inserting profiled results would leak telemetry-bearing
+/// entries into unprofiled warm runs. Elaboration/mapping caching is
+/// unaffected — profiling only re-runs the cycle-accurate phases, which is
+/// exactly what it observes.
+pub fn run_job_cached_with(
+    spec: &JobSpec,
+    cache: Option<&ArtifactCache>,
+    opts: &SimOptions,
+) -> Result<(JobResult, JobTiming), DiagError> {
     let mut timing = JobTiming::default();
     let prep = prep_job(spec, cache, &mut timing)?;
     let machine = prep.holder.machine();
 
     let t0 = Instant::now();
     let tr = match cache {
+        // Profiled: always simulate, with telemetry, cache or not.
+        _ if opts.profile => {
+            let skipped = std::cell::Cell::new(0u64);
+            let tr = run_task_with(
+                &prep.task,
+                machine,
+                &prep.mem0,
+                MAX_PHASE_CYCLES,
+                &mut |m, mc, img, maxc| {
+                    let (r, sk) = simulate_counting_with(m, mc, img, maxc, opts)?;
+                    skipped.set(skipped.get() + sk);
+                    Ok(Arc::new(r))
+                },
+            )?;
+            timing.sim_skipped_cycles = skipped.get();
+            tr
+        }
         Some(c) => {
             // Per-phase SimResult memoization: key = (arch, DFG, seed,
             // input-image hash). A warm sweep point never re-enters
@@ -577,7 +616,7 @@ pub fn run_job_cached(
 /// Run a chunk of jobs through the batched simulation arena: each job's
 /// [`TaskCursor`] is stepped phase-by-phase, and at every step the
 /// cache-missing compute requests are grouped by DFG identity and run as
-/// lanes of one [`crate::sim::SimArena`] via [`simulate_batch`]. Results
+/// lanes of one [`crate::sim::SimArena`] via [`simulate_batch_with`]. Results
 /// are bit-identical to [`run_job_cached`] per job: lanes share only the
 /// read-only topology skeleton, and the [`TaskCursor`] owns all timing
 /// accounting on both paths. Per-job failures (elaboration, compile, a
@@ -589,6 +628,18 @@ pub fn run_job_cached(
 pub fn run_jobs_cached_batch(
     specs: &[JobSpec],
     cache: &ArtifactCache,
+) -> Vec<Result<(JobResult, JobTiming), DiagError>> {
+    run_jobs_cached_batch_with(specs, cache, &SimOptions::default())
+}
+
+/// [`run_jobs_cached_batch`] with simulation-observation options. Profiled
+/// batches bypass the SimResult cache in both directions, exactly like
+/// [`run_job_cached_with`] — every phase runs through the arena with
+/// telemetry on, and nothing profiled is inserted.
+pub fn run_jobs_cached_batch_with(
+    specs: &[JobSpec],
+    cache: &ArtifactCache,
+    opts: &SimOptions,
 ) -> Vec<Result<(JobResult, JobTiming), DiagError>> {
     let n = specs.len();
     let mut timings = vec![JobTiming::default(); n];
@@ -630,7 +681,12 @@ pub fn run_jobs_cached_batch(
                 let Some(req) = cur.pending() else { continue };
                 let prep = preps[i].as_ref().unwrap();
                 let dh = req.mapping.dfg.stable_hash();
-                match cache.sim_probe(prep.arch_hash, dh, specs[i].seed, req.image) {
+                let probed = if opts.profile {
+                    None // bypass: cached results carry no telemetry
+                } else {
+                    cache.sim_probe(prep.arch_hash, dh, specs[i].seed, req.image)
+                };
+                match probed {
                     Some(r) => {
                         timings[i].cache_hits += 1;
                         answered.push((i, r));
@@ -665,7 +721,7 @@ pub fn run_jobs_cached_batch(
                     })
                     .collect();
                 let t0 = Instant::now();
-                let outs = simulate_batch(&lanes, MAX_PHASE_CYCLES);
+                let outs = simulate_batch_with(&lanes, MAX_PHASE_CYCLES, opts);
                 // Arena wall time attributed evenly across its lanes.
                 let per_lane_ns = t0.elapsed().as_nanos() as u64 / members.len() as u64;
                 let first = misses[members[0]].0;
@@ -679,14 +735,16 @@ pub fn run_jobs_cached_batch(
                         Ok((r, skipped)) => {
                             timings[i].sim_skipped_cycles += skipped;
                             let r = Arc::new(r);
-                            let prep = preps[i].as_ref().unwrap();
-                            cache.sim_insert_computed(
-                                prep.arch_hash,
-                                dh,
-                                specs[i].seed,
-                                req.image,
-                                &r,
-                            );
+                            if !opts.profile {
+                                let prep = preps[i].as_ref().unwrap();
+                                cache.sim_insert_computed(
+                                    prep.arch_hash,
+                                    dh,
+                                    specs[i].seed,
+                                    req.image,
+                                    &r,
+                                );
+                            }
                             answered.push((i, r));
                         }
                         Err(e) => failed.push((i, e)),

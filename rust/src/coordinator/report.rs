@@ -18,6 +18,8 @@ use crate::model::power::PowerReport;
 use crate::model::timing::TimingReport;
 use crate::netlist::NetlistStats;
 use crate::plugins::{self, WindMill};
+use crate::sim::telemetry::{TelemetrySummary, STALL_NAMES};
+use crate::util::json::Json;
 use crate::util::{table, Table};
 
 use super::cache::CacheStats;
@@ -130,6 +132,10 @@ pub struct SweepPoint {
     /// independently, not just the aggregate.
     pub per_workload: Vec<WorkloadPerf>,
     pub timing: JobTiming,
+    /// Cycle-attributed stall/activity profile, merged across the point's
+    /// member jobs. `Some` only on profiled sweeps (`SimOptions::profile`);
+    /// plain sweeps carry `None` and the report renders exactly as before.
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl SweepPoint {
@@ -390,8 +396,138 @@ impl SweepReport {
                 ));
             }
         }
+        // Per-point bottleneck verdicts — profiled sweeps only. The prefix
+        // is "  bottleneck", never "  *" or "  wl ", so the frontier and
+        // per-workload rows byte-diffed by CI are untouched by profiling.
+        for p in self.frontier_points() {
+            if let Some(t) = &p.telemetry {
+                if let Some(label) = t.bottleneck_label() {
+                    s.push_str(&format!(
+                        "\n  bottleneck {}: {label} | util {:.1}%",
+                        p.label,
+                        100.0 * t.utilization()
+                    ));
+                }
+            }
+        }
         s
     }
+
+    /// The whole report as a [`Json`] value (the CLI `--json` flag). u64
+    /// hashes are hex **strings** — `Json::Num` is an f64 and would corrupt
+    /// identities above 2^53 — while counters small enough by construction
+    /// (cycle counts, cache traffic) stay numeric.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self.points.iter().map(point_json).collect();
+        let failures: Vec<Json> = self
+            .failures
+            .iter()
+            .map(|(l, e)| {
+                Json::obj(vec![("label", l.as_str().into()), ("error", e.as_str().into())])
+            })
+            .collect();
+        let frontier: Vec<Json> = self.frontier.iter().map(|&i| Json::from(i)).collect();
+        Json::obj(vec![
+            ("points", Json::Arr(points)),
+            ("failures", Json::Arr(failures)),
+            ("frontier", Json::Arr(frontier)),
+            ("rejected_nonfinite", (self.rejected_nonfinite as usize).into()),
+            ("grid_size", self.grid_size.into()),
+            ("points_evaluated", self.points_evaluated().into()),
+            ("wall_ns", (self.wall_ns as usize).into()),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", (self.cache.hits as usize).into()),
+                    ("lookups", (self.cache.lookups() as usize).into()),
+                    ("disk_hits", (self.cache.disk_hits as usize).into()),
+                    ("hit_rate", self.cache_hit_rate().into()),
+                    ("sim_hit_rate", self.sim_hit_rate().into()),
+                ]),
+            ),
+            (
+                "timing",
+                Json::obj(vec![
+                    ("elaborate_ns", (self.timing.elaborate_ns as usize).into()),
+                    ("compile_ns", (self.timing.compile_ns as usize).into()),
+                    ("simulate_ns", (self.timing.simulate_ns as usize).into()),
+                    ("baseline_ns", (self.timing.baseline_ns as usize).into()),
+                    ("batch_launches", (self.timing.batch_launches as usize).into()),
+                    ("batch_lanes", (self.timing.batch_lanes as usize).into()),
+                    ("sim_skipped_cycles", (self.timing.sim_skipped_cycles as usize).into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn point_json(p: &SweepPoint) -> Json {
+    let per_workload: Vec<Json> = p
+        .per_workload
+        .iter()
+        .map(|w| {
+            Json::obj(vec![
+                ("workload", w.workload.as_str().into()),
+                ("cycles", (w.cycles as usize).into()),
+                ("wm_time_ns", w.wm_time_ns.into()),
+                ("speedup_vs_cpu", w.speedup_vs_cpu.into()),
+                ("speedup_vs_gpu", w.speedup_vs_gpu.into()),
+                ("ii", (w.ii as usize).into()),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("label", Json::from(p.label.as_str())),
+        ("arch_hash", format!("{:016x}", p.arch_hash).into()),
+        ("pea", p.pea.as_str().into()),
+        ("topology", p.topology.into()),
+        ("gates", p.gates.into()),
+        ("area_mm2", p.area_mm2.into()),
+        ("power_mw", p.power_mw.into()),
+        ("fmax_mhz", p.fmax_mhz.into()),
+        ("cycles", (p.cycles as usize).into()),
+        ("wm_time_ns", p.wm_time_ns.into()),
+        ("speedup_vs_cpu", p.speedup_vs_cpu.into()),
+        ("speedup_vs_gpu", p.speedup_vs_gpu.into()),
+        ("ii", (p.ii as usize).into()),
+        ("per_workload", Json::Arr(per_workload)),
+    ];
+    if let Some(t) = &p.telemetry {
+        fields.push(("telemetry", telemetry_json(t)));
+    }
+    Json::obj(fields)
+}
+
+fn telemetry_json(t: &TelemetrySummary) -> Json {
+    let stalls = Json::Obj(
+        STALL_NAMES
+            .iter()
+            .zip(t.stalls.iter())
+            .map(|(name, &n)| (name.to_string(), Json::from(n as usize)))
+            .collect(),
+    );
+    let pe: Vec<Json> = t
+        .pe
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("row", (a.row as usize).into()),
+                ("col", (a.col as usize).into()),
+                ("fires", (a.fires as usize).into()),
+                ("stalls", (a.stalls as usize).into()),
+            ])
+        })
+        .collect();
+    let banks: Vec<Json> = t.bank_conflicts.iter().map(|&c| Json::from(c as usize)).collect();
+    Json::obj(vec![
+        ("sim_cycles", (t.sim_cycles as usize).into()),
+        ("fires", (t.fires as usize).into()),
+        ("utilization", t.utilization().into()),
+        ("bottleneck", t.bottleneck_label().map(Json::Str).unwrap_or(Json::Null)),
+        ("stalls", stalls),
+        ("pe", Json::Arr(pe)),
+        ("bank_conflicts", Json::Arr(banks)),
+    ])
 }
 
 /// Streaming builder for [`SweepReport`]: push results as workers finish;
@@ -518,6 +654,7 @@ mod tests {
             ii: 1,
             per_workload,
             timing: JobTiming::default(),
+            telemetry: None,
         }
     }
 
@@ -712,6 +849,70 @@ mod tests {
         // Unknown grid (grid_size 0): the segment is absent, not a 0/0.
         let s0 = SweepReport::default().summary();
         assert!(!s0.contains("searched"), "{s0}");
+    }
+
+    /// Tentpole: profiled frontier points grow a `bottleneck` verdict line;
+    /// unprofiled points (telemetry `None`) leave the summary byte-identical
+    /// to the historical format, and the lines never collide with the CI
+    /// byte-diff prefixes (`  *` frontier rows, `  wl ` suite rows).
+    #[test]
+    fn summary_appends_bottleneck_lines_only_for_profiled_frontiers() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(point("plain", 1.0, 1.0, 10.0));
+        let plain = acc.finish(CacheStats::default(), 1).summary();
+        assert!(!plain.contains("bottleneck"), "{plain}");
+        assert_eq!(plain.lines().count(), 1, "{plain}");
+
+        let mut t = TelemetrySummary { sim_cycles: 100, fires: 38, ..Default::default() };
+        t.stalls[crate::sim::StallCause::SmemArbitration as usize] = 62;
+        t.stalls[crate::sim::StallCause::OperandWait as usize] = 38;
+        let mut p = point("hot", 1.0, 1.0, 10.0);
+        p.telemetry = Some(t);
+        let mut acc = SweepAccumulator::new();
+        acc.push(p);
+        let s = acc.finish(CacheStats::default(), 1).summary();
+        let line = s.lines().find(|l| l.contains("bottleneck")).unwrap_or_default();
+        assert!(line.starts_with("  bottleneck hot: smem-arbitration 62%"), "{s}");
+        assert!(!line.starts_with("  *") && !line.starts_with("  wl "), "{s}");
+    }
+
+    /// Satellite: `--json` vehicle. The report round-trips through the
+    /// emitter and parser, hashes survive as 16-digit hex strings (not
+    /// f64-mangled numbers), and telemetry appears only when present.
+    #[test]
+    fn to_json_roundtrips_with_hex_hashes() {
+        let mut acc = SweepAccumulator::new();
+        let mut p = suite_point("p0", 1.0, 1.0, &[10.0, 40.0]);
+        p.arch_hash = 0xdead_beef_cafe_f00d; // > 2^53: f64 would corrupt it
+        p.telemetry = Some(TelemetrySummary {
+            sim_cycles: 10,
+            fires: 4,
+            bank_conflicts: vec![0, 3],
+            ..Default::default()
+        });
+        acc.push(p);
+        acc.push_failure("bad".into(), "boom".into());
+        acc.set_grid_size(4);
+        let r = acc.finish(CacheStats::default(), 7);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let pts = j.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("arch_hash").unwrap().as_str(), Some("deadbeefcafef00d"));
+        assert_eq!(pts[0].at(&["telemetry", "fires"]).unwrap().as_usize(), Some(4));
+        assert_eq!(
+            pts[0].at(&["telemetry", "bank_conflicts"]).unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(pts[0].get("per_workload").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("grid_size").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("wall_ns").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("failures").unwrap().as_arr().unwrap().len(), 1);
+
+        // Unprofiled points omit the key entirely.
+        let mut plain = SweepAccumulator::new();
+        plain.push(point("q", 1.0, 1.0, 5.0));
+        let jq = plain.finish(CacheStats::default(), 1).to_json();
+        assert!(jq.get("points").unwrap().as_arr().unwrap()[0].get("telemetry").is_none());
     }
 
     #[test]

@@ -32,11 +32,14 @@ use std::time::Instant;
 use crate::arch::params::{ParamGrid, WindMillParams};
 use crate::diag::error::DiagError;
 use crate::diag::service::{ServiceRegistry, SweepService};
+use crate::sim::engine::SimOptions;
+use crate::sim::telemetry::TelemetrySummary;
 use crate::store::DiskStore;
 
 use super::cache::{ArtifactCache, CacheStats};
 use super::job::{
-    run_job_cached, run_jobs_cached_batch, JobResult, JobSpec, JobTiming, Workload, WorkloadSuite,
+    run_job_cached_with, run_jobs_cached_batch_with, JobResult, JobSpec, JobTiming, Workload,
+    WorkloadSuite,
 };
 use super::pool::{run_all_with, run_fifo};
 use super::report::{geomean, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf};
@@ -54,6 +57,7 @@ pub struct SweepEngine {
     workers: usize,
     batch: usize,
     cache: Arc<ArtifactCache>,
+    opts: SimOptions,
 }
 
 impl SweepEngine {
@@ -65,7 +69,12 @@ impl SweepEngine {
     /// Engine sharing an existing cache (e.g. across several engines or a
     /// surrounding benchmark harness).
     pub fn with_cache(workers: usize, cache: Arc<ArtifactCache>) -> Self {
-        SweepEngine { workers: workers.max(1), batch: DEFAULT_SWEEP_BATCH, cache }
+        SweepEngine {
+            workers: workers.max(1),
+            batch: DEFAULT_SWEEP_BATCH,
+            cache,
+            opts: SimOptions::default(),
+        }
     }
 
     /// Set the lockstep batch width: consecutive grid points are grouped
@@ -81,6 +90,22 @@ impl SweepEngine {
     /// The configured lockstep batch width.
     pub fn batch(&self) -> usize {
         self.batch
+    }
+
+    /// Enable cycle-attributed telemetry ([`SimOptions::profile`]) for every
+    /// simulation this engine dispatches. Profiled sweep points carry a
+    /// merged [`TelemetrySummary`]; results stay bit-identical to an
+    /// unprofiled run, but the SimResult cache is bypassed (see
+    /// [`run_job_cached_with`]), so profiled sweeps always pay full
+    /// simulation cost.
+    pub fn with_profile(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// The simulation-observation options in effect.
+    pub fn sim_options(&self) -> SimOptions {
+        self.opts
     }
 
     /// Engine whose cache reads/writes through a persistent [`DiskStore`]:
@@ -197,6 +222,7 @@ impl SweepEngine {
     ) -> Vec<Result<SweepPoint, (String, String)>> {
         let cache = Arc::clone(&self.cache);
         let suite = suite.clone();
+        let opts = self.opts;
         // Member layouts are grid-invariant: compute the suite's memory
         // requirement once, not once per point inside the workers.
         let smem_words = suite.required_smem_words();
@@ -205,7 +231,7 @@ impl SweepEngine {
                 // A panicking point must land in `failures`, not take down
                 // the sweep (same containment as `run_all_with`).
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed)
+                    evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed, &opts)
                 }));
                 out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
             });
@@ -228,7 +254,7 @@ impl SweepEngine {
             let run = run_fifo(chunks, self.workers, move |chunk| {
                 let labels: Vec<String> = chunk.iter().map(|(l, _)| l.clone()).collect();
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    evaluate_chunk(&cache, chunk, &suite, smem_words, seed)
+                    evaluate_chunk(&cache, chunk, &suite, smem_words, seed, &opts)
                 }));
                 out.unwrap_or_else(|_| {
                     labels
@@ -254,6 +280,7 @@ fn evaluate_point(
     suite: &WorkloadSuite,
     suite_smem_words: usize,
     seed: u64,
+    opts: &SimOptions,
 ) -> Result<SweepPoint, (String, String)> {
     let inner = || -> Result<SweepPoint, DiagError> {
         // Calibrate once for the union of the suite's layouts
@@ -267,7 +294,7 @@ fn evaluate_point(
         for workload in suite.workloads() {
             let spec =
                 JobSpec { workload: workload.clone(), params: calibrated.clone(), seed };
-            jobs.push(run_job_cached(&spec, Some(cache))?);
+            jobs.push(run_job_cached_with(&spec, Some(cache), opts)?);
         }
         fold_point(cache, &label, &calibrated, jobs)
     };
@@ -286,6 +313,7 @@ fn evaluate_chunk(
     suite: &WorkloadSuite,
     suite_smem_words: usize,
     seed: u64,
+    opts: &SimOptions,
 ) -> Vec<Result<SweepPoint, (String, String)>> {
     let mut calibrated = Vec::with_capacity(chunk.len());
     let mut specs = Vec::with_capacity(chunk.len() * suite.len());
@@ -300,7 +328,7 @@ fn evaluate_chunk(
         }
         calibrated.push((label, params));
     }
-    let mut outcomes = run_jobs_cached_batch(&specs, cache).into_iter();
+    let mut outcomes = run_jobs_cached_batch_with(&specs, cache, opts).into_iter();
     calibrated
         .into_iter()
         .map(|(label, params)| {
@@ -335,6 +363,7 @@ fn fold_point(
     let mut timing = JobTiming::default();
     let mut per_workload: Vec<WorkloadPerf> = Vec::with_capacity(jobs.len());
     let mut arch_hash = 0u64;
+    let mut telemetry: Option<TelemetrySummary> = None;
     for (job, t) in jobs {
         debug_assert!(
             arch_hash == 0 || arch_hash == job.arch_hash,
@@ -342,6 +371,15 @@ fn fold_point(
         );
         arch_hash = job.arch_hash;
         timing.add(&t);
+        // Profiled members each carry a per-job summary; the point reports
+        // their merge (suite members ran on the same machine, so PE/bank
+        // axes line up).
+        if let Some(tel) = job.telemetry {
+            match &mut telemetry {
+                Some(acc) => acc.merge(&tel),
+                None => telemetry = Some(tel),
+            }
+        }
         per_workload.push(WorkloadPerf {
             workload: job.name,
             cycles: job.cycles,
@@ -381,6 +419,7 @@ fn fold_point(
         ii: per_workload.iter().map(|w| w.ii).max().unwrap_or(1),
         per_workload,
         timing,
+        telemetry,
     })
 }
 
@@ -388,7 +427,7 @@ fn fold_point(
 mod tests {
     use super::*;
     use crate::arch::presets;
-    use crate::coordinator::job::run_job;
+    use crate::coordinator::job::{run_job, run_job_cached};
 
     /// Satellite requirement: two sweep points sharing an `ArchParams`
     /// dimension produce identical results with and without the cache, and
@@ -576,6 +615,45 @@ mod tests {
             assert_eq!(b.per_workload.len(), 1);
         }
         assert_eq!(plain.frontier, suited.frontier);
+    }
+
+    /// Tentpole identity: a profiled sweep returns bit-identical numbers to
+    /// an unprofiled one — solo dispatch and arena-batched alike — and
+    /// every profiled point carries a merged telemetry summary whose
+    /// per-PE fires re-sum to the total.
+    #[test]
+    fn profiled_sweep_is_bit_identical_and_carries_telemetry() {
+        let grid = ParamGrid::new(presets::standard()).pea_edges(&[4, 8]);
+        let wl = Workload::Saxpy { n: 64 };
+        let plain = SweepEngine::new(1).sweep_seeded(&grid, &wl, 3);
+        let profiled = SweepEngine::new(1)
+            .with_profile(SimOptions { profile: true, sample_stride: 0 })
+            .sweep_seeded(&grid, &wl, 3);
+        let batched = SweepEngine::new(1)
+            .with_batch(2)
+            .with_profile(SimOptions { profile: true, sample_stride: 16 })
+            .sweep_seeded(&grid, &wl, 3);
+        assert_eq!(plain.points.len(), 2, "{:?}", plain.failures);
+        for variant in [&profiled, &batched] {
+            assert_eq!(variant.points.len(), plain.points.len());
+            for (a, b) in plain.points.iter().zip(variant.points.iter()) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles, "telemetry must never perturb results");
+                assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+                assert!(a.telemetry.is_none(), "plain sweeps carry no telemetry");
+                let t = b.telemetry.as_ref().unwrap();
+                assert!(t.fires > 0);
+                assert_eq!(t.pe.iter().map(|p| p.fires).sum::<u64>(), t.fires);
+                assert!(t.utilization() > 0.0 && t.utilization() <= 1.0);
+            }
+        }
+        // Timeline sampling on: the batched variant recorded activity spans.
+        let t = batched.points[0].telemetry.as_ref().unwrap();
+        assert_eq!(t.sample_stride, 16);
+        assert!(!t.timeline.is_empty());
+        // Profiling bypasses the SimResult cache: even back-to-back profiled
+        // sweeps never answer `simulate` from the cache.
+        assert_eq!(profiled.sim_hit_rate(), 0.0, "{:?}", profiled.cache);
     }
 
     #[test]

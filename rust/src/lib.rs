@@ -21,6 +21,7 @@ pub mod plugins;
 pub mod runtime;
 pub mod sim;
 pub mod store;
+pub mod trace;
 pub mod util;
 pub mod workloads;
 

@@ -16,8 +16,14 @@ use windmill::coordinator::{
 };
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
+use windmill::sim::SimOptions;
 use windmill::store::{DiskStore, SweepSession};
 use windmill::util::{table, Table};
+
+/// Activity-timeline sampling stride (cycles per window) used by
+/// `sweep --profile --trace`: fine enough that small kernels still get
+/// several windows, coarse enough that a long sweep's trace stays small.
+const TRACE_SAMPLE_STRIDE: u64 = 256;
 
 const USAGE: &str = "\
 windmill — parameterized & pluggable CGRA generator (DIAG design flow)
@@ -32,7 +38,8 @@ USAGE:
         against the CPU/GPU baseline models.
     windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
                    [--batch N] [--store DIR] [--shard I/N] [--expect-warm]
-                   [--drive halving|evolve [--waves K]]
+                   [--drive halving|evolve [--waves K]] [--json]
+                   [--profile [--trace FILE]]
         Design-space sweep (PEA size x topology grid) of a workload — or a
         comma-separated workload *suite* (e.g. `gemm,spmv,rl`), evaluated
         member-by-member at every grid point into one frontier over
@@ -53,6 +60,17 @@ USAGE:
                       refinement; `evolve` = mutation of frontier elites).
                       The summary prints the searched fraction.
         --waves K     cap the driver at K proposal waves
+        --json        print the report as one JSON object on stdout instead
+                      of tables (hashes are hex strings; stderr unaffected)
+        --profile     attribute every node-cycle to a fire or a stall cause
+                      and print per-point bottleneck verdicts. Results stay
+                      bit-identical to an unprofiled run, but the sweep
+                      bypasses the simulation-result cache in both
+                      directions (so it conflicts with --expect-warm).
+        --trace FILE  with --profile: write a Chrome trace_event JSON to
+                      FILE (load in Perfetto or chrome://tracing) — the
+                      per-point pipeline stages plus the best profiled
+                      point's per-PE-row / per-smem-bank activity timeline
     windmill sweep-merge [<wl>[,<wl>...]] --store DIR [--seed S] [--list]
         Merge one complete shard session under DIR/partials/ into a report
         bit-identical to the unsharded sweep (a store may hold partials of
@@ -234,19 +252,37 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     if waves.is_some() && drive.is_none() {
         return Err("--waves only applies with --drive".into());
     }
+    let profile = args.iter().any(|a| a == "--profile");
+    let json_out = args.iter().any(|a| a == "--json");
+    let trace_path = arg_value(args, "--trace");
+    if trace_path.is_some() && !profile {
+        return Err("--trace only applies with --profile".into());
+    }
+    if profile && args.iter().any(|a| a == "--expect-warm") {
+        return Err(
+            "--profile bypasses the simulation-result cache; it cannot satisfy --expect-warm"
+                .into(),
+        );
+    }
 
     let store = match &store_dir {
         Some(dir) => Some(Arc::new(DiskStore::open(dir).map_err(|e| e.to_string())?)),
         None => None,
     };
-    let engine = match &store {
+    let mut engine = match &store {
         Some(s) => SweepEngine::with_store(workers, Arc::clone(s)),
         None => SweepEngine::new(workers),
     }
     .with_batch(batch);
+    if profile {
+        // The activity timeline is only sampled when something will render
+        // it (--trace); plain --profile keeps the summary counters only.
+        let stride = if trace_path.is_some() { TRACE_SAMPLE_STRIDE } else { 0 };
+        engine = engine.with_profile(SimOptions { profile: true, sample_stride: stride });
+    }
     let grid = sweep_grid(base);
 
-    let report = if let Some(strat) = &drive {
+    let (report, title) = if let Some(strat) = &drive {
         let mut driver: Box<dyn SweepDriver> = match strat.as_str() {
             "halving" => {
                 let mut d = SuccessiveHalving::new(&grid, seed);
@@ -264,11 +300,8 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             }
         };
         let report = engine.drive(&grid, &suite, seed, driver.as_mut());
-        print_sweep_report(
-            &report,
-            &format!("adaptive sweep of `{}` (`{strat}` driver)", suite.name()),
-        );
-        report
+        let title = format!("adaptive sweep of `{}` (`{strat}` driver)", suite.name());
+        (report, title)
     } else {
         match shard {
             Some((i, n)) => {
@@ -282,22 +315,22 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
                     partial.report.points.len(),
                     path.display()
                 );
-                print_sweep_report(
-                    &partial.report,
-                    &format!("sweep shard {i}/{n} of `{}`", suite.name()),
-                );
-                partial.report
+                let title = format!("sweep shard {i}/{n} of `{}`", suite.name());
+                (partial.report, title)
             }
             None => {
                 let report = engine.sweep_suite(&grid, &suite, seed);
-                print_sweep_report(
-                    &report,
-                    &format!("design-space sweep of `{}` (PEA size x topology)", suite.name()),
-                );
-                report
+                let title =
+                    format!("design-space sweep of `{}` (PEA size x topology)", suite.name());
+                (report, title)
             }
         }
     };
+    if json_out {
+        println!("{}", report.to_json());
+    } else {
+        print_sweep_report(&report, &title);
+    }
     if let Some(s) = &store {
         let ds = s.stats();
         eprintln!(
@@ -319,6 +352,11 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             ));
         }
         eprintln!("--expect-warm: ok (sim cache {}m/{}d/0x)", sim.mem, sim.disk);
+    }
+    if let Some(path) = &trace_path {
+        std::fs::write(path, windmill::trace::chrome_trace(&report))
+            .map_err(|e| format!("writing --trace {path}: {e}"))?;
+        eprintln!("wrote Chrome trace to {path} (open in Perfetto or chrome://tracing)");
     }
     Ok(())
 }

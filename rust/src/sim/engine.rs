@@ -53,6 +53,7 @@ use crate::compiler::Mapping;
 use crate::diag::error::DiagError;
 use crate::sim::machine::MachineDesc;
 use crate::sim::smem::{MemReq, MemResp, SmemSim, SmemStats};
+use crate::sim::telemetry::{StallCause, Telemetry, TelemetrySummary};
 
 /// Result of simulating one kernel.
 #[derive(Debug, Clone)]
@@ -67,6 +68,26 @@ pub struct SimResult {
     pub avg_parallelism: f64,
     /// Measured II: cycles per iteration in steady state.
     pub measured_ii: f64,
+    /// Cycle-attributed telemetry; `Some` only when the run was profiled
+    /// ([`SimOptions::profile`]). Never affects any other field: a profiled
+    /// run is bit- and cycle-identical to an unprofiled one
+    /// (`tests/telemetry.rs` pins it).
+    pub telemetry: Option<TelemetrySummary>,
+}
+
+/// Observation knobs for a simulation run. Nothing here may change the
+/// simulated machine's behaviour — options only control what gets recorded.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimOptions {
+    /// Collect cycle-attributed telemetry (stall-cause histogram, per-PE
+    /// fire/stall counters, per-bank contention). Off by default; the hot
+    /// loop then pays one `Option` discriminant test per node per cycle and
+    /// allocates nothing.
+    pub profile: bool,
+    /// Activity-timeline sampling stride in cycles; 0 disables the
+    /// timeline. Ignored unless `profile` is set. Cycle skips are recorded
+    /// exactly (one idle span), never sampled across.
+    pub sample_stride: u64,
 }
 
 /// Iterations a source node may run ahead of the slowest store on this
@@ -305,6 +326,10 @@ struct Lane {
     /// One response buffer for the whole run (the old API returned a fresh
     /// Vec per cycle).
     resp_buf: Vec<MemResp>,
+    /// Telemetry collector; `None` (the common case) costs one discriminant
+    /// test per node per cycle and nothing else. Boxed so the disabled lane
+    /// stays small.
+    telem: Option<Box<Telemetry>>,
 }
 
 impl Lane {
@@ -313,6 +338,7 @@ impl Lane {
         mapping: &Mapping,
         machine: &MachineDesc,
         mem_image: &[f32],
+        opts: &SimOptions,
     ) -> Result<Lane, DiagError> {
         let sm_desc = machine
             .smem
@@ -328,6 +354,20 @@ impl Lane {
         // Horizon: strictly above the largest delivery delay, so slot
         // `c % horizon` can only ever hold cycle-`c` deliveries.
         let horizon = delays.iter().copied().max().unwrap_or(1).max(1) as u64 + 1;
+        let telem = if opts.profile {
+            // Placement coords per node; defensively padded so telemetry
+            // can never index past a short place vector.
+            let mut place = mapping.place.clone();
+            place.resize(topo.dfg.nodes.len(), (0, 0));
+            Some(Box::new(Telemetry::new(
+                &place,
+                machine.rows.max(1),
+                sm_desc.banks,
+                opts.sample_stride,
+            )))
+        } else {
+            None
+        };
         Ok(Lane {
             smem,
             nodes: topo.template.clone(),
@@ -343,6 +383,7 @@ impl Lane {
             steady_start_cycle: None,
             steady_start_frontier: 0,
             resp_buf: Vec::new(),
+            telem,
         })
     }
 
@@ -465,7 +506,17 @@ impl Lane {
         let mut any_fired = false;
         for i in 0..self.active.len() {
             let node = self.active[i] as usize;
-            any_fired |= self.step_node(topo, node, frontier)?;
+            let fired = self.step_node(topo, node, frontier)?;
+            any_fired |= fired;
+            if self.telem.is_some() {
+                self.telemetry_record(topo, node, fired, frontier, 1);
+            }
+        }
+        if let Some(t) = self.telem.as_deref_mut() {
+            // Nodes retired in earlier cycles spend this cycle drained.
+            // (Nodes retiring *this* cycle fired above and are counted
+            // there — `active` still holds them until the retain below.)
+            t.drained((n - self.active.len()) as u64);
         }
         {
             let nodes = &self.nodes;
@@ -508,12 +559,31 @@ impl Lane {
             if skipped > 0 {
                 let delta = lead.saturating_sub(frontier);
                 self.inflight_sum += (skipped * delta) as f64;
+                if self.telem.is_some() {
+                    // A skipped span is provably stall-constant (the same
+                    // induction that justifies the jump: no fires, no
+                    // deliveries, idle smem ⇒ no state change), so each
+                    // node's cause over the span is its cause *now* — and
+                    // an idle smem means no node is MSHR-blocked, only
+                    // window- or operand-starved. Attribute in closed form.
+                    for i in 0..self.active.len() {
+                        let node = self.active[i] as usize;
+                        self.telemetry_record(topo, node, false, frontier, skipped);
+                    }
+                    if let Some(t) = self.telem.as_deref_mut() {
+                        t.drained((n - self.active.len()) as u64 * skipped);
+                        t.skip(self.cycle + 1, skipped, &self.smem.stats);
+                    }
+                }
                 self.cycle += skipped;
                 self.skipped += skipped;
             }
         }
 
         self.cycle += 1;
+        if let Some(t) = self.telem.as_deref_mut() {
+            t.end_cycle(self.cycle, &self.smem.stats);
+        }
         Ok(true)
     }
 
@@ -522,14 +592,23 @@ impl Lane {
     /// time but the writes land one grant + one completion cycle later.
     fn finish(&mut self, topo: &Topo<'_>) -> (SimResult, u64) {
         let mut resp_buf = std::mem::take(&mut self.resp_buf);
+        let mut drain_cycles = 0u64;
         while !self.smem.idle() {
             resp_buf.clear();
             self.smem.tick_into(&mut resp_buf);
             self.cycle += 1;
+            drain_cycles += 1;
         }
         self.resp_buf = resp_buf;
 
         let fires = self.nodes.iter().map(|s| s.fires).sum();
+        let telemetry = self.telem.take().map(|mut t| {
+            // Every node is retired during the drain tail.
+            t.drained(drain_cycles * self.nodes.len() as u64);
+            t.finish_timeline(self.cycle, &self.smem.stats);
+            let node_fires: Vec<u64> = self.nodes.iter().map(|s| s.fires).collect();
+            t.into_summary(&node_fires, &self.smem.stats, self.cycle)
+        });
         let measured_ii = match self.steady_start_cycle {
             Some(c0) => {
                 let di = self.commit_frontier(topo).saturating_sub(self.steady_start_frontier);
@@ -549,9 +628,74 @@ impl Lane {
                 smem: self.smem.stats.clone(),
                 avg_parallelism: self.inflight_sum / self.cycle.max(1) as f64,
                 measured_ii,
+                telemetry,
             },
             self.skipped,
         )
+    }
+
+    /// Telemetry-only bookkeeping for one node over `span` cycles: either
+    /// the node fired (span is 1 then), or attribute its stall cause.
+    /// Called only when profiling is on; strictly observational.
+    fn telemetry_record(
+        &mut self,
+        topo: &Topo<'_>,
+        node: usize,
+        fired: bool,
+        frontier: u64,
+        span: u64,
+    ) {
+        if fired {
+            if let Some(t) = self.telem.as_deref_mut() {
+                t.fire(node);
+            }
+            return;
+        }
+        let cause = self.stall_cause(topo, node, frontier);
+        if let Some(t) = self.telem.as_deref_mut() {
+            t.stall(node, cause, span);
+        }
+    }
+
+    /// Classify why an *active* node did not fire this cycle. Mirrors the
+    /// fire conditions of [`Lane::step_node`] arm by arm, checked in the
+    /// same short-circuit order, so the attribution is exact: an active
+    /// node that did not fire always has exactly one first failing
+    /// condition. (Active ⇒ `next_iter < total_iters`; the retain at the
+    /// end of every tick guarantees it.)
+    fn stall_cause(&self, topo: &Topo<'_>, node: usize, frontier: u64) -> StallCause {
+        let ns = &self.nodes[node];
+        match &topo.dfg.nodes[node].kind {
+            // Sources fire unconditionally inside the window.
+            NodeKind::Const | NodeKind::Index(_) => StallCause::WindowCredit,
+            NodeKind::Load(Access::Affine { .. }) => {
+                if ns.next_iter >= frontier + self.window {
+                    StallCause::WindowCredit
+                } else {
+                    self.mem_stall(node)
+                }
+            }
+            // In-order issue: MSHR pressure is checked before operands.
+            NodeKind::Load(Access::Indirect { .. }) | NodeKind::Store { .. } => {
+                if ns.outstanding >= self.mshrs {
+                    self.mem_stall(node)
+                } else {
+                    StallCause::OperandWait
+                }
+            }
+            NodeKind::Compute | NodeKind::Accum { .. } => StallCause::OperandWait,
+        }
+    }
+
+    /// Refine an MSHR-full stall: if one of the node's outstanding requests
+    /// is sitting in a contended bank queue the node is *losing
+    /// arbitration*; otherwise it is bound on plain access latency.
+    fn mem_stall(&self, node: usize) -> StallCause {
+        if self.smem.queued_behind_conflict(node) {
+            StallCause::SmemArbitration
+        } else {
+            StallCause::MshrFull
+        }
     }
 
     /// Step one node; returns whether it fired this cycle (the cycle-skip
@@ -747,6 +891,16 @@ impl<'a> SimArena<'a> {
     /// batch is empty or the shared DFG itself is rejected (iteration-tag
     /// overflow, >2-operand nodes) — which would fail every lane anyway.
     pub fn new(specs: &[LaneSpec<'a>]) -> Result<SimArena<'a>, DiagError> {
+        Self::with_options(specs, &SimOptions::default())
+    }
+
+    /// [`SimArena::new`] with observation options applied to every lane
+    /// (telemetry is per-lane state, so profiled batches stay bit-identical
+    /// to profiled solo runs — and to unprofiled ones).
+    pub fn with_options(
+        specs: &[LaneSpec<'a>],
+        opts: &SimOptions,
+    ) -> Result<SimArena<'a>, DiagError> {
         let first = specs
             .first()
             .ok_or_else(|| DiagError::InvalidParams("sim batch: empty lane list".into()))?;
@@ -761,7 +915,7 @@ impl<'a> SimArena<'a> {
                         topo.dfg.name, s.mapping.dfg.name
                     ))));
                 }
-                match Lane::new(&topo, s.mapping, s.machine, s.image) {
+                match Lane::new(&topo, s.mapping, s.machine, s.image, opts) {
                     Ok(l) => LaneSlot::Running(Box::new(l)),
                     Err(e) => LaneSlot::Done(Err(e)),
                 }
@@ -826,10 +980,19 @@ pub fn simulate_batch(
     specs: &[LaneSpec<'_>],
     max_cycles: u64,
 ) -> Vec<Result<(SimResult, u64), DiagError>> {
+    simulate_batch_with(specs, max_cycles, &SimOptions::default())
+}
+
+/// [`simulate_batch`] with observation options (see [`SimOptions`]).
+pub fn simulate_batch_with(
+    specs: &[LaneSpec<'_>],
+    max_cycles: u64,
+    opts: &SimOptions,
+) -> Vec<Result<(SimResult, u64), DiagError>> {
     if specs.is_empty() {
         return Vec::new();
     }
-    match SimArena::new(specs) {
+    match SimArena::with_options(specs, opts) {
         Ok(arena) => arena.run(max_cycles),
         Err(e) => specs.iter().map(|_| Err(e.clone())).collect(),
     }
@@ -850,8 +1013,18 @@ impl<'a> Engine<'a> {
         machine: &MachineDesc,
         mem_image: &[f32],
     ) -> Result<Self, DiagError> {
+        Self::new_with(mapping, machine, mem_image, &SimOptions::default())
+    }
+
+    /// [`Engine::new`] with observation options (see [`SimOptions`]).
+    pub fn new_with(
+        mapping: &'a Mapping,
+        machine: &MachineDesc,
+        mem_image: &[f32],
+        opts: &SimOptions,
+    ) -> Result<Self, DiagError> {
         let topo = Topo::new(&mapping.dfg)?;
-        let lane = Lane::new(&topo, mapping, machine, mem_image)?;
+        let lane = Lane::new(&topo, mapping, machine, mem_image, opts)?;
         Ok(Engine { topo, lane })
     }
 
@@ -893,6 +1066,18 @@ pub fn simulate_counting(
     max_cycles: u64,
 ) -> Result<(SimResult, u64), DiagError> {
     let engine = Engine::new(mapping, machine, mem_image)?;
+    engine.run_counting(max_cycles)
+}
+
+/// [`simulate_counting`] with observation options (see [`SimOptions`]).
+pub fn simulate_counting_with(
+    mapping: &Mapping,
+    machine: &MachineDesc,
+    mem_image: &[f32],
+    max_cycles: u64,
+    opts: &SimOptions,
+) -> Result<(SimResult, u64), DiagError> {
+    let engine = Engine::new_with(mapping, machine, mem_image, opts)?;
     engine.run_counting(max_cycles)
 }
 

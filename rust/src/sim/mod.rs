@@ -11,6 +11,8 @@
 //! * [`task`] — multi-phase task execution: host launch protocol, DMA
 //!   (ping-pong overlap), CPE relaunch, RCA-ring pipelining.
 //! * [`scalar`] — the in-order host-CPU baseline executor.
+//! * [`telemetry`] — opt-in cycle-attributed observation: stall taxonomy,
+//!   per-PE/per-bank counters, skip-exact activity timelines.
 
 pub mod engine;
 pub mod machine;
@@ -18,6 +20,11 @@ pub mod reference;
 pub mod scalar;
 pub mod smem;
 pub mod task;
+pub mod telemetry;
 
-pub use engine::{simulate, simulate_batch, simulate_counting, LaneSpec, SimArena, SimResult};
+pub use engine::{
+    simulate, simulate_batch, simulate_batch_with, simulate_counting, simulate_counting_with,
+    LaneSpec, SimArena, SimOptions, SimResult,
+};
 pub use machine::MachineDesc;
+pub use telemetry::{PeActivity, StallCause, TelemetrySummary, TimelineSpan, STALL_NAMES};

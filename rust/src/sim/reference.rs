@@ -299,6 +299,7 @@ impl<'a> ReferenceEngine<'a> {
         Ok(SimResult {
             cycles: self.cycle,
             mem: self.smem.image().to_vec(),
+            telemetry: None,
             fires,
             smem: self.smem.stats.clone(),
             avg_parallelism: inflight_sum / self.cycle.max(1) as f64,

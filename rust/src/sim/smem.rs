@@ -29,14 +29,50 @@ pub struct MemResp {
 }
 
 /// Contention statistics.
+///
+/// The first four fields are the original global counters; the `bank_*`
+/// vectors (one slot per bank, sized by [`SmemSim::new`]) split the same
+/// events per bank so telemetry can attribute contention to a specific
+/// bank instead of a fabric-wide aggregate. Invariants, pinned by tests:
+/// each global counter equals the sum of its per-bank vector, and
+/// `peak_bank_queue() <= peak_queue` (a single bank can never hold more
+/// than the all-bank snapshot peak).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SmemStats {
     pub requests: u64,
     pub grants: u64,
     /// Cycles × banks where >1 request contended for the same bank.
     pub conflicts: u64,
-    /// Peak queued requests across all banks.
+    /// Peak queued requests across all banks (same-cycle snapshot sum).
     pub peak_queue: usize,
+    /// Requests submitted to each bank.
+    pub bank_requests: Vec<u64>,
+    /// Grants issued by each bank.
+    pub bank_grants: Vec<u64>,
+    /// Conflict cycles (queue depth > 1) per bank.
+    pub bank_conflicts: Vec<u64>,
+    /// Peak queue depth reached by each bank individually.
+    pub bank_peaks: Vec<usize>,
+}
+
+impl SmemStats {
+    /// Zeroed stats with per-bank vectors sized for `banks` banks.
+    pub fn for_banks(banks: usize) -> Self {
+        SmemStats {
+            bank_requests: vec![0; banks],
+            bank_grants: vec![0; banks],
+            bank_conflicts: vec![0; banks],
+            bank_peaks: vec![0; banks],
+            ..Default::default()
+        }
+    }
+
+    /// Deepest any *single* bank's queue ever got — the per-bank peak the
+    /// summed `peak_queue` snapshot loses. Falls back to `peak_queue` when
+    /// the per-bank vectors are absent (e.g. decoded legacy stats).
+    pub fn peak_bank_queue(&self) -> usize {
+        self.bank_peaks.iter().copied().max().unwrap_or(self.peak_queue)
+    }
 }
 
 /// Cycle-accurate banked shared memory with per-bank round-robin PAI.
@@ -63,7 +99,7 @@ impl SmemSim {
             rr: vec![0; banks],
             in_flight: Vec::new(),
             requesters: requesters.max(1),
-            stats: SmemStats::default(),
+            stats: SmemStats::for_banks(banks),
         }
     }
 
@@ -100,6 +136,7 @@ impl SmemSim {
         }
         debug_assert!(req.requester < self.requesters);
         self.stats.requests += 1;
+        self.stats.bank_requests[req.addr % self.banks] += 1;
         self.queues[req.addr % self.banks].push(req);
         Ok(())
     }
@@ -118,11 +155,16 @@ impl SmemSim {
         self.stats.peak_queue = self.stats.peak_queue.max(peak);
 
         for b in 0..self.banks {
-            if self.queues[b].is_empty() {
+            let depth = self.queues[b].len();
+            if depth == 0 {
                 continue;
             }
-            if self.queues[b].len() > 1 {
+            if depth > self.stats.bank_peaks[b] {
+                self.stats.bank_peaks[b] = depth;
+            }
+            if depth > 1 {
                 self.stats.conflicts += 1;
+                self.stats.bank_conflicts[b] += 1;
             }
             // Round-robin: pick the queued request whose requester id is
             // the first at-or-after the pointer (wrapping).
@@ -136,6 +178,7 @@ impl SmemSim {
             let req = self.queues[b].remove(pick);
             self.rr[b] = (req.requester + 1) % self.requesters;
             self.stats.grants += 1;
+            self.stats.bank_grants[b] += 1;
             let value = if req.write {
                 self.data[req.addr] = req.wdata;
                 req.wdata
@@ -162,6 +205,16 @@ impl SmemSim {
 
     pub fn idle(&self) -> bool {
         self.in_flight.is_empty() && self.queues.iter().all(Vec::is_empty)
+    }
+
+    /// Telemetry probe: does `requester` have a request waiting in a bank
+    /// queue that also holds other requests — i.e. is it currently losing
+    /// bank arbitration (as opposed to merely waiting out access latency)?
+    /// Read-only; never called on the non-profiled path.
+    pub fn queued_behind_conflict(&self, requester: usize) -> bool {
+        self.queues
+            .iter()
+            .any(|q| q.len() > 1 && q.iter().any(|r| r.requester == requester))
     }
 }
 
@@ -264,6 +317,44 @@ mod tests {
     fn oob_rejected() {
         let mut sm = SmemSim::new(4, 4, 1);
         assert!(sm.submit(req(0, 999, 0)).is_err());
+    }
+
+    #[test]
+    fn per_bank_stats_partition_the_global_counters() {
+        let mut sm = SmemSim::new(4, 16, 4);
+        // Banks: addr % 4. Hammer bank 1 with three requesters, touch bank 3 once.
+        sm.submit(req(0, 1, 0)).unwrap();
+        sm.submit(req(1, 5, 1)).unwrap();
+        sm.submit(req(2, 9, 2)).unwrap();
+        sm.submit(req(3, 3, 3)).unwrap();
+        assert!(sm.queued_behind_conflict(0));
+        assert!(sm.queued_behind_conflict(2));
+        assert!(!sm.queued_behind_conflict(3), "alone in its bank queue");
+        while !sm.idle() {
+            sm.tick();
+        }
+        let s = &sm.stats;
+        assert_eq!(s.bank_requests, vec![0, 3, 0, 1]);
+        assert_eq!(s.bank_grants, vec![0, 3, 0, 1]);
+        // Bank 1 queue depths over the grant cycles: 3, 2, 1 → two conflict cycles.
+        assert_eq!(s.bank_conflicts, vec![0, 2, 0, 0]);
+        assert_eq!(s.bank_peaks, vec![0, 3, 0, 1]);
+        assert_eq!(s.bank_requests.iter().sum::<u64>(), s.requests);
+        assert_eq!(s.bank_grants.iter().sum::<u64>(), s.grants);
+        assert_eq!(s.bank_conflicts.iter().sum::<u64>(), s.conflicts);
+        // Snapshot-sum peak (4: all four queued at once) vs deepest bank (3).
+        assert_eq!(s.peak_queue, 4);
+        assert_eq!(s.peak_bank_queue(), 3);
+        assert!(s.peak_bank_queue() <= s.peak_queue);
+        assert!(!sm.queued_behind_conflict(0), "drained");
+    }
+
+    #[test]
+    fn peak_bank_queue_falls_back_to_global_peak_without_vectors() {
+        let legacy = SmemStats { peak_queue: 7, ..Default::default() };
+        assert_eq!(legacy.peak_bank_queue(), 7);
+        let sized = SmemStats::for_banks(2);
+        assert_eq!(sized.peak_bank_queue(), 0);
     }
 
     #[test]

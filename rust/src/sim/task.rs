@@ -22,6 +22,7 @@ use crate::compiler::Mapping;
 use crate::diag::error::DiagError;
 use crate::sim::engine::{simulate, SimResult};
 use crate::sim::machine::MachineDesc;
+use crate::sim::telemetry::TelemetrySummary;
 
 /// One kernel phase plus its data movement.
 ///
@@ -59,6 +60,9 @@ pub struct TaskResult {
     pub mem: Vec<f32>,
     /// Per-phase compute cycles (for overlap analysis).
     pub phase_compute: Vec<u64>,
+    /// Merged telemetry across the task's phases; `Some` only when phases
+    /// were simulated with profiling on ([`crate::sim::SimOptions`]).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl TaskResult {
@@ -226,6 +230,12 @@ impl<'t> TaskCursor<'t> {
         res.compute_cycles += sres.cycles;
         res.phase_compute.push(sres.cycles);
         self.prev_compute = sres.cycles;
+        if let Some(t) = &sres.telemetry {
+            match &mut res.telemetry {
+                Some(acc) => acc.merge(t),
+                None => res.telemetry = Some(t.clone()),
+            }
+        }
 
         // DMA out (the next phase's ping-pong overlaps it; charge half
         // exposed under ping-pong as the tail write-back).

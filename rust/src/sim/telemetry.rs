@@ -1,0 +1,452 @@
+//! Cycle-attributed telemetry for the simulation engine.
+//!
+//! When profiling is enabled (see [`crate::sim::engine::SimOptions`]) every
+//! node-cycle of a lane is attributed to exactly one outcome: either the node
+//! fired, or it stalled for one of the causes in [`StallCause`]. The
+//! attribution is *exact*: for a lane with `n` nodes that ran for `c` cycles
+//! (including skipped and drain cycles) and fired `f` times,
+//!
+//! ```text
+//! sum(stall histogram) == n * c - f
+//! ```
+//!
+//! holds to the cycle — `tests/telemetry.rs` pins it. Telemetry is strictly
+//! observational: the collector lives behind an `Option` on the lane, records
+//! after the fire decision has been made, and never influences it, so a
+//! profiled simulation is bit- and cycle-identical to an unprofiled one.
+//!
+//! At an opt-in sampling stride the collector also keeps an activity
+//! timeline: per-PE-row fire counts and per-bank conflict deltas over fixed
+//! windows. Cycle skipping is handled exactly, not sampled-wrong — a skipped
+//! span closes the open window and lands as a single idle interval.
+
+use crate::sim::smem::SmemStats;
+
+/// Why a live node did not fire this cycle.
+///
+/// The five causes mirror the fire conditions in `Lane::step_node`, checked
+/// in the same order the engine checks them so attribution matches what the
+/// hardware would report:
+///
+/// - `OperandWait` — an input queue head for the node's current iteration has
+///   not arrived yet (upstream latency, route delay, or a pending memory
+///   response feeding the operand).
+/// - `MshrFull` — the node wants to issue a memory request but all of its
+///   MSHRs hold outstanding requests, and no losing arbitration is observed.
+/// - `WindowCredit` — the node ran ahead of the commit frontier by the full
+///   iteration window and is throttled for pipeline-balance credit.
+/// - `SmemArbitration` — refinement of `MshrFull`: the node's outstanding
+///   request is sitting in a bank queue behind other requesters, i.e. it is
+///   losing bank arbitration rather than merely being latency-bound.
+/// - `Drained` — the node has retired (all iterations committed) and the
+///   lane is waiting on other nodes or the memory drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallCause {
+    OperandWait = 0,
+    MshrFull = 1,
+    WindowCredit = 2,
+    SmemArbitration = 3,
+    Drained = 4,
+}
+
+/// Number of distinct [`StallCause`] values (histogram width).
+pub const STALL_CAUSES: usize = 5;
+
+/// Display names, indexed by `StallCause as usize`.
+pub const STALL_NAMES: [&str; STALL_CAUSES] = [
+    "operand-wait",
+    "mshr-full",
+    "window-credit",
+    "smem-arbitration",
+    "drained",
+];
+
+/// One sampling window (or skipped span) of the activity timeline.
+///
+/// `start`/`dur` are in lane cycles. `rows_fired[r]` counts fires issued by
+/// PEs in grid row `r` during the window; `bank_conflicts[b]` counts cycles
+/// bank `b` saw more than one queued request. A skipped span has all-zero
+/// vectors by construction (the engine only skips provably idle cycles).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimelineSpan {
+    pub start: u64,
+    pub dur: u64,
+    pub rows_fired: Vec<u32>,
+    pub bank_conflicts: Vec<u32>,
+}
+
+/// Per-PE activity, aggregated over every node placed on that PE.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeActivity {
+    pub row: u32,
+    pub col: u32,
+    pub fires: u64,
+    pub stalls: u64,
+}
+
+/// The persisted, mergeable digest of one profiled simulation.
+///
+/// Summaries merge across task phases, suite members, and store shards;
+/// [`TelemetrySummary::merge`] keeps counters exact and concatenates
+/// timelines on a sequential virtual time axis.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySummary {
+    /// Total simulated cycles covered by this summary (incl. skipped/drain).
+    pub sim_cycles: u64,
+    /// Total node fires.
+    pub fires: u64,
+    /// Stall histogram, indexed by `StallCause as usize`.
+    pub stalls: [u64; STALL_CAUSES],
+    /// Per-PE activity, sorted by `(row, col)` — canonical for the codec.
+    pub pe: Vec<PeActivity>,
+    /// Cumulative conflict cycles per smem bank.
+    pub bank_conflicts: Vec<u64>,
+    /// Timeline sampling stride in cycles; 0 when no timeline was recorded.
+    pub sample_stride: u64,
+    /// Activity timeline (empty unless a stride was requested).
+    pub timeline: Vec<TimelineSpan>,
+}
+
+impl TelemetrySummary {
+    /// Fold `other` into `self`. Counters add; per-PE entries merge by
+    /// coordinate (keeping the canonical `(row, col)` order); `other`'s
+    /// timeline is appended shifted by `self.sim_cycles`, so merged
+    /// timelines live on one sequential virtual time axis.
+    pub fn merge(&mut self, other: &TelemetrySummary) {
+        let base = self.sim_cycles;
+        self.fires += other.fires;
+        for (dst, src) in self.stalls.iter_mut().zip(other.stalls.iter()) {
+            *dst += *src;
+        }
+        for pe in &other.pe {
+            match self.pe.binary_search_by_key(&(pe.row, pe.col), |p| (p.row, p.col)) {
+                Ok(i) => {
+                    self.pe[i].fires += pe.fires;
+                    self.pe[i].stalls += pe.stalls;
+                }
+                Err(i) => self.pe.insert(i, *pe),
+            }
+        }
+        if self.bank_conflicts.len() < other.bank_conflicts.len() {
+            self.bank_conflicts.resize(other.bank_conflicts.len(), 0);
+        }
+        for (b, c) in other.bank_conflicts.iter().enumerate() {
+            self.bank_conflicts[b] += *c;
+        }
+        if self.sample_stride == 0 {
+            self.sample_stride = other.sample_stride;
+        }
+        for span in &other.timeline {
+            let mut s = span.clone();
+            s.start += base;
+            self.timeline.push(s);
+        }
+        self.sim_cycles += other.sim_cycles;
+    }
+
+    /// Fraction of node-cycles that fired; 0.0 for an empty summary.
+    pub fn utilization(&self) -> f64 {
+        let stalled: u64 = self.stalls.iter().sum();
+        let total = self.fires + stalled;
+        if total == 0 { 0.0 } else { self.fires as f64 / total as f64 }
+    }
+
+    /// The dominant *live* stall cause (drained cycles excluded — a retired
+    /// node explains nothing about the bottleneck) as `(name, percent of
+    /// live stalls)`. `None` when no live stalls were recorded.
+    pub fn bottleneck(&self) -> Option<(&'static str, f64)> {
+        let live = &self.stalls[..StallCause::Drained as usize];
+        let total: u64 = live.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let (idx, &top) = live
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))?;
+        Some((STALL_NAMES[idx], 100.0 * top as f64 / total as f64))
+    }
+
+    /// `"cause NN%"` label for reports and wave records.
+    pub fn bottleneck_label(&self) -> Option<String> {
+        self.bottleneck().map(|(name, pct)| format!("{name} {pct:.0}%"))
+    }
+
+    /// The `k` busiest PEs by fire count (ties broken by coordinate).
+    pub fn hottest(&self, k: usize) -> Vec<PeActivity> {
+        let mut ranked = self.pe.clone();
+        ranked.sort_by(|a, b| {
+            b.fires.cmp(&a.fires).then((a.row, a.col).cmp(&(b.row, b.col)))
+        });
+        ranked.truncate(k);
+        ranked
+    }
+}
+
+/// Live per-lane collector. Created by the lane only when profiling is on;
+/// the hot loop pays a single `Option` discriminant test when it is off.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// `(row, col)` of the PE each DFG node is placed on.
+    place: Vec<(u32, u32)>,
+    rows: usize,
+    /// Per-node stall histogram (the `Drained` slot stays zero here; drained
+    /// cycles are lane-wide, not per-node).
+    node_stalls: Vec<[u64; STALL_CAUSES]>,
+    /// Lane-wide stall histogram.
+    hist: [u64; STALL_CAUSES],
+    /// Timeline sampling stride; 0 disables the timeline.
+    stride: u64,
+    timeline: Vec<TimelineSpan>,
+    win_start: u64,
+    win_rows: Vec<u32>,
+    /// Cumulative per-bank conflicts at the last window flush, for deltas.
+    last_bank_conflicts: Vec<u64>,
+}
+
+impl Telemetry {
+    pub fn new(place: &[(usize, usize)], rows: usize, banks: usize, stride: u64) -> Self {
+        Telemetry {
+            place: place.iter().map(|&(r, c)| (r as u32, c as u32)).collect(),
+            rows,
+            node_stalls: vec![[0; STALL_CAUSES]; place.len()],
+            hist: [0; STALL_CAUSES],
+            stride,
+            timeline: Vec::new(),
+            win_start: 0,
+            win_rows: vec![0; rows],
+            last_bank_conflicts: vec![0; banks],
+        }
+    }
+
+    /// Record one fire by `node` (timeline bookkeeping only — fire *counts*
+    /// come from the engine's own per-node counters at summary time).
+    #[inline]
+    pub fn fire(&mut self, node: usize) {
+        if self.stride > 0 {
+            self.win_rows[self.place[node].0 as usize] += 1;
+        }
+    }
+
+    /// Attribute `span` stalled cycles of `node` to `cause`.
+    #[inline]
+    pub fn stall(&mut self, node: usize, cause: StallCause, span: u64) {
+        self.hist[cause as usize] += span;
+        self.node_stalls[node][cause as usize] += span;
+    }
+
+    /// Attribute `count` retired node-cycles to [`StallCause::Drained`].
+    #[inline]
+    pub fn drained(&mut self, count: u64) {
+        self.hist[StallCause::Drained as usize] += count;
+    }
+
+    /// Close the open sampling window if `next_cycle` has reached the
+    /// stride. Call with the cycle the lane is *about* to execute.
+    #[inline]
+    pub fn end_cycle(&mut self, next_cycle: u64, stats: &SmemStats) {
+        if self.stride > 0 && next_cycle - self.win_start >= self.stride {
+            self.flush_window(next_cycle, stats);
+        }
+    }
+
+    /// Record a skipped span exactly: flush the window open up to the skip,
+    /// then emit one idle interval covering all `skipped` cycles.
+    pub fn skip(&mut self, idle_start: u64, skipped: u64, stats: &SmemStats) {
+        if self.stride == 0 {
+            return;
+        }
+        self.flush_window(idle_start, stats);
+        self.timeline.push(TimelineSpan {
+            start: idle_start,
+            dur: skipped,
+            rows_fired: vec![0; self.rows],
+            bank_conflicts: vec![0; self.last_bank_conflicts.len()],
+        });
+        self.win_start = idle_start + skipped;
+    }
+
+    /// Flush any trailing partial window at end of simulation.
+    pub fn finish_timeline(&mut self, end_cycle: u64, stats: &SmemStats) {
+        if self.stride > 0 {
+            self.flush_window(end_cycle, stats);
+        }
+    }
+
+    fn flush_window(&mut self, end: u64, stats: &SmemStats) {
+        if end <= self.win_start {
+            return;
+        }
+        let rows_fired = std::mem::replace(&mut self.win_rows, vec![0; self.rows]);
+        let bank_conflicts = stats
+            .bank_conflicts
+            .iter()
+            .zip(self.last_bank_conflicts.iter_mut())
+            .map(|(cur, last)| {
+                let d = (*cur - *last) as u32;
+                *last = *cur;
+                d
+            })
+            .collect();
+        self.timeline.push(TimelineSpan {
+            start: self.win_start,
+            dur: end - self.win_start,
+            rows_fired,
+            bank_conflicts,
+        });
+        self.win_start = end;
+    }
+
+    /// Consume the collector into the persisted summary. `node_fires[i]` is
+    /// the engine's own fire counter for node `i`; `cycles` the lane's final
+    /// cycle count (including drain).
+    pub fn into_summary(self, node_fires: &[u64], stats: &SmemStats, cycles: u64) -> TelemetrySummary {
+        let mut pe: Vec<PeActivity> = Vec::new();
+        for (i, &(row, col)) in self.place.iter().enumerate() {
+            let stalls: u64 = self.node_stalls[i].iter().sum();
+            match pe.binary_search_by_key(&(row, col), |p| (p.row, p.col)) {
+                Ok(k) => {
+                    pe[k].fires += node_fires[i];
+                    pe[k].stalls += stalls;
+                }
+                Err(k) => pe.insert(k, PeActivity { row, col, fires: node_fires[i], stalls }),
+            }
+        }
+        TelemetrySummary {
+            sim_cycles: cycles,
+            fires: node_fires.iter().sum(),
+            stalls: self.hist,
+            pe,
+            bank_conflicts: stats.bank_conflicts.clone(),
+            sample_stride: self.stride,
+            timeline: self.timeline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(cycles: u64, fires: u64, stalls: [u64; STALL_CAUSES]) -> TelemetrySummary {
+        TelemetrySummary { sim_cycles: cycles, fires, stalls, ..Default::default() }
+    }
+
+    #[test]
+    fn merge_adds_counters_and_offsets_timelines() {
+        let mut a = summary(100, 40, [10, 0, 5, 0, 45]);
+        a.pe = vec![PeActivity { row: 0, col: 0, fires: 40, stalls: 15 }];
+        a.bank_conflicts = vec![3, 1];
+        a.sample_stride = 16;
+        a.timeline = vec![TimelineSpan { start: 0, dur: 100, ..Default::default() }];
+
+        let mut b = summary(50, 10, [5, 5, 0, 0, 30]);
+        b.pe = vec![
+            PeActivity { row: 0, col: 0, fires: 4, stalls: 6 },
+            PeActivity { row: 1, col: 2, fires: 6, stalls: 4 },
+        ];
+        b.bank_conflicts = vec![0, 2, 9];
+        b.timeline = vec![TimelineSpan { start: 0, dur: 50, ..Default::default() }];
+
+        a.merge(&b);
+        assert_eq!(a.sim_cycles, 150);
+        assert_eq!(a.fires, 50);
+        assert_eq!(a.stalls, [15, 5, 5, 0, 75]);
+        assert_eq!(a.pe.len(), 2);
+        assert_eq!(a.pe[0], PeActivity { row: 0, col: 0, fires: 44, stalls: 21 });
+        assert_eq!(a.pe[1], PeActivity { row: 1, col: 2, fires: 6, stalls: 4 });
+        assert_eq!(a.bank_conflicts, vec![3, 3, 9]);
+        // b's timeline lands after a's 100 cycles on the virtual axis.
+        assert_eq!(a.timeline[1].start, 100);
+    }
+
+    #[test]
+    fn bottleneck_excludes_drained_and_is_none_when_live_stalls_are_zero() {
+        let s = summary(10, 5, [0, 0, 0, 0, 45]);
+        assert_eq!(s.bottleneck(), None);
+        assert_eq!(s.bottleneck_label(), None);
+
+        let s = summary(10, 5, [10, 0, 20, 10, 99]);
+        let (name, pct) = s.bottleneck().unwrap();
+        assert_eq!(name, "window-credit");
+        assert!((pct - 50.0).abs() < 1e-9);
+        assert_eq!(s.bottleneck_label().unwrap(), "window-credit 50%");
+    }
+
+    #[test]
+    fn utilization_is_zero_not_nan_on_empty() {
+        assert_eq!(TelemetrySummary::default().utilization(), 0.0);
+        let s = summary(4, 3, [1, 0, 0, 0, 0]);
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hottest_ranks_by_fires_with_coordinate_tiebreak() {
+        let s = TelemetrySummary {
+            pe: vec![
+                PeActivity { row: 0, col: 0, fires: 5, stalls: 0 },
+                PeActivity { row: 0, col: 1, fires: 9, stalls: 0 },
+                PeActivity { row: 1, col: 0, fires: 9, stalls: 0 },
+            ],
+            ..Default::default()
+        };
+        let top = s.hottest(2);
+        assert_eq!((top[0].row, top[0].col), (0, 1));
+        assert_eq!((top[1].row, top[1].col), (1, 0));
+    }
+
+    #[test]
+    fn timeline_windows_and_skips_partition_the_run() {
+        let stats = SmemStats::for_banks(2);
+        let mut t = Telemetry::new(&[(0, 0), (1, 1)], 2, 2, 4);
+        t.fire(0);
+        t.end_cycle(1, &stats); // below stride: no flush
+        assert!(t.timeline.is_empty());
+        t.fire(1);
+        t.end_cycle(4, &stats); // stride reached
+        assert_eq!(t.timeline.len(), 1);
+        assert_eq!(t.timeline[0].rows_fired, vec![1, 1]);
+        // A skip at cycle 6 closes the short window [4, 6) then logs idle.
+        t.fire(0);
+        t.skip(6, 10, &stats);
+        assert_eq!(t.timeline.len(), 3);
+        assert_eq!(t.timeline[1], TimelineSpan {
+            start: 4,
+            dur: 2,
+            rows_fired: vec![1, 0],
+            bank_conflicts: vec![0, 0],
+        });
+        assert_eq!((t.timeline[2].start, t.timeline[2].dur), (6, 10));
+        t.finish_timeline(20, &stats);
+        assert_eq!(t.timeline[3], TimelineSpan {
+            start: 16,
+            dur: 4,
+            rows_fired: vec![0, 0],
+            bank_conflicts: vec![0, 0],
+        });
+        // Spans tile [0, 20) with no gaps or overlaps.
+        let mut cursor = 0;
+        for span in &t.timeline {
+            assert_eq!(span.start, cursor);
+            cursor += span.dur;
+        }
+        assert_eq!(cursor, 20);
+    }
+
+    #[test]
+    fn into_summary_aggregates_nodes_sharing_a_pe() {
+        let stats = SmemStats::for_banks(1);
+        let mut t = Telemetry::new(&[(0, 0), (0, 0), (1, 3)], 2, 1, 0);
+        t.stall(0, StallCause::OperandWait, 3);
+        t.stall(1, StallCause::MshrFull, 2);
+        t.stall(2, StallCause::WindowCredit, 1);
+        t.drained(4);
+        let s = t.into_summary(&[7, 2, 1], &stats, 50);
+        assert_eq!(s.fires, 10);
+        assert_eq!(s.stalls, [3, 2, 1, 0, 4]);
+        assert_eq!(s.pe.len(), 2);
+        assert_eq!(s.pe[0], PeActivity { row: 0, col: 0, fires: 9, stalls: 5 });
+        assert_eq!(s.pe[1], PeActivity { row: 1, col: 3, fires: 1, stalls: 1 });
+        assert_eq!(s.sim_cycles, 50);
+    }
+}

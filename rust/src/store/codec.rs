@@ -43,6 +43,7 @@ use crate::sim::machine::{
     CpeDesc, DmaDesc, HostDesc, MachineDesc, PeDesc, SharedRegsDesc, SmemDesc,
 };
 use crate::sim::smem::SmemStats;
+use crate::sim::telemetry::{PeActivity, TelemetrySummary, TimelineSpan, STALL_CAUSES};
 
 /// File magic of every store entry ("WindMill ARtifact").
 pub const MAGIC: [u8; 4] = *b"WMAR";
@@ -62,7 +63,12 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 /// v4 (PR 7): `SweepReport` carries `grid_size` — the full-grid point
 /// count behind the adaptive-DSE evaluated-fraction metric
 /// (`summary()`'s `searched N/M points`).
-pub const VERSION: u16 = 4;
+///
+/// v5 (PR 8): `SimResult` persists the per-bank shared-memory stats
+/// (`bank_requests`/`bank_grants`/`bank_conflicts`/`bank_peaks`) and an
+/// optional [`TelemetrySummary`]; `SweepPoint` carries the same optional
+/// summary, so profiled shard partials merge without losing attribution.
+pub const VERSION: u16 = 5;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -881,6 +887,149 @@ pub fn decode_seed_class(bytes: &[u8]) -> Result<u64, DiagError> {
 // SimResult
 // ---------------------------------------------------------------------------
 
+fn enc_smem_stats(e: &mut Enc, s: &SmemStats) {
+    e.u64(s.requests).u64(s.grants).u64(s.conflicts).usize(s.peak_queue);
+    e.seq(s.bank_requests.len());
+    for &x in &s.bank_requests {
+        e.u64(x);
+    }
+    e.seq(s.bank_grants.len());
+    for &x in &s.bank_grants {
+        e.u64(x);
+    }
+    e.seq(s.bank_conflicts.len());
+    for &x in &s.bank_conflicts {
+        e.u64(x);
+    }
+    e.seq(s.bank_peaks.len());
+    for &x in &s.bank_peaks {
+        e.usize(x);
+    }
+}
+
+fn dec_smem_stats(d: &mut Dec) -> Result<SmemStats, DiagError> {
+    let requests = d.u64()?;
+    let grants = d.u64()?;
+    let conflicts = d.u64()?;
+    let peak_queue = d.usize()?;
+    let mut vecs: [Vec<u64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for v in &mut vecs {
+        let n = d.seq(8)?;
+        v.reserve(n);
+        for _ in 0..n {
+            v.push(d.u64()?);
+        }
+    }
+    let [bank_requests, bank_grants, bank_conflicts] = vecs;
+    let n = d.seq(8)?;
+    let mut bank_peaks = Vec::with_capacity(n);
+    for _ in 0..n {
+        bank_peaks.push(d.usize()?);
+    }
+    Ok(SmemStats {
+        requests,
+        grants,
+        conflicts,
+        peak_queue,
+        bank_requests,
+        bank_grants,
+        bank_conflicts,
+        bank_peaks,
+    })
+}
+
+/// Telemetry counters are full-width u64s (a long sim legitimately exceeds
+/// 2^53 node-cycles) — verbatim encoding, like the identity hashes.
+fn enc_telemetry(e: &mut Enc, t: &TelemetrySummary) {
+    e.u64(t.sim_cycles).u64(t.fires);
+    e.seq(t.stalls.len());
+    for &s in &t.stalls {
+        e.u64(s);
+    }
+    e.seq(t.pe.len());
+    for p in &t.pe {
+        e.u32(p.row).u32(p.col).u64(p.fires).u64(p.stalls);
+    }
+    e.seq(t.bank_conflicts.len());
+    for &c in &t.bank_conflicts {
+        e.u64(c);
+    }
+    e.u64(t.sample_stride);
+    e.seq(t.timeline.len());
+    for span in &t.timeline {
+        e.u64(span.start).u64(span.dur);
+        e.seq(span.rows_fired.len());
+        for &r in &span.rows_fired {
+            e.u32(r);
+        }
+        e.seq(span.bank_conflicts.len());
+        for &b in &span.bank_conflicts {
+            e.u32(b);
+        }
+    }
+}
+
+fn dec_telemetry(d: &mut Dec) -> Result<TelemetrySummary, DiagError> {
+    let sim_cycles = d.u64()?;
+    let fires = d.u64()?;
+    let n_stalls = d.seq(8)?;
+    if n_stalls != STALL_CAUSES {
+        return Err(corrupt(format!("{n_stalls} stall causes (want {STALL_CAUSES})")));
+    }
+    let mut stalls = [0u64; STALL_CAUSES];
+    for s in &mut stalls {
+        *s = d.u64()?;
+    }
+    let n_pe = d.seq(24)?;
+    let mut pe = Vec::with_capacity(n_pe);
+    for _ in 0..n_pe {
+        pe.push(PeActivity { row: d.u32()?, col: d.u32()?, fires: d.u64()?, stalls: d.u64()? });
+    }
+    let n_banks = d.seq(8)?;
+    let bank_conflicts = (0..n_banks).map(|_| d.u64()).collect::<Result<Vec<u64>, _>>()?;
+    let sample_stride = d.u64()?;
+    let n_spans = d.seq(32)?;
+    let mut timeline = Vec::with_capacity(n_spans);
+    for _ in 0..n_spans {
+        let start = d.u64()?;
+        let dur = d.u64()?;
+        let n_rows = d.seq(4)?;
+        let rows_fired = (0..n_rows).map(|_| d.u32()).collect::<Result<Vec<u32>, _>>()?;
+        let n_b = d.seq(4)?;
+        let bank_conflicts = (0..n_b).map(|_| d.u32()).collect::<Result<Vec<u32>, _>>()?;
+        timeline.push(TimelineSpan { start, dur, rows_fired, bank_conflicts });
+    }
+    Ok(TelemetrySummary {
+        sim_cycles,
+        fires,
+        stalls,
+        pe,
+        bank_conflicts,
+        sample_stride,
+        timeline,
+    })
+}
+
+fn enc_opt_telemetry(e: &mut Enc, t: &Option<TelemetrySummary>) {
+    match t {
+        Some(t) => {
+            e.u8(1);
+            enc_telemetry(e, t);
+        }
+        None => {
+            e.u8(0);
+        }
+    }
+}
+
+fn dec_opt_telemetry(d: &mut Dec) -> Result<Option<TelemetrySummary>, DiagError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(dec_telemetry(d)?)),
+        x => Err(corrupt(format!("telemetry presence byte {x}"))),
+    }
+}
+
 pub fn encode_sim(r: &SimResult) -> Vec<u8> {
     let mut e = Enc::new(Kind::Sim);
     e.u64(r.cycles);
@@ -889,9 +1038,10 @@ pub fn encode_sim(r: &SimResult) -> Vec<u8> {
         e.f32(x);
     }
     e.u64(r.fires);
-    e.u64(r.smem.requests).u64(r.smem.grants).u64(r.smem.conflicts).usize(r.smem.peak_queue);
+    enc_smem_stats(&mut e, &r.smem);
     e.f64(r.avg_parallelism);
     e.f64(r.measured_ii);
+    enc_opt_telemetry(&mut e, &r.telemetry);
     e.finish()
 }
 
@@ -904,16 +1054,12 @@ pub fn decode_sim(bytes: &[u8]) -> Result<SimResult, DiagError> {
         mem.push(d.f32()?);
     }
     let fires = d.u64()?;
-    let smem = SmemStats {
-        requests: d.u64()?,
-        grants: d.u64()?,
-        conflicts: d.u64()?,
-        peak_queue: d.usize()?,
-    };
+    let smem = dec_smem_stats(&mut d)?;
     let avg_parallelism = d.f64()?;
     let measured_ii = d.f64()?;
+    let telemetry = dec_opt_telemetry(&mut d)?;
     d.close()?;
-    Ok(SimResult { cycles, mem, fires, smem, avg_parallelism, measured_ii })
+    Ok(SimResult { cycles, mem, fires, smem, avg_parallelism, measured_ii, telemetry })
 }
 
 // ---------------------------------------------------------------------------
@@ -1001,6 +1147,7 @@ fn enc_point(e: &mut Enc, p: &SweepPoint) {
         enc_workload_perf(e, w);
     }
     enc_timing(e, &p.timing);
+    enc_opt_telemetry(e, &p.telemetry);
 }
 
 fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
@@ -1022,6 +1169,8 @@ fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
     for _ in 0..n_wl {
         per_workload.push(dec_workload_perf(d)?);
     }
+    let timing = dec_timing(d)?;
+    let telemetry = dec_opt_telemetry(d)?;
     Ok(SweepPoint {
         label,
         arch_hash,
@@ -1037,7 +1186,8 @@ fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
         speedup_vs_gpu,
         ii,
         per_workload,
-        timing: dec_timing(d)?,
+        timing,
+        telemetry,
     })
 }
 
@@ -1249,16 +1399,128 @@ mod tests {
             cycles: u64::MAX - 1,
             mem: vec![0.0, -0.0, 1.5e-42, f32::MAX, -7.25],
             fires: 1 << 62,
-            smem: SmemStats { requests: 10, grants: 9, conflicts: 1, peak_queue: 3 },
+            smem: SmemStats {
+                requests: 10,
+                grants: 9,
+                conflicts: 1,
+                peak_queue: 3,
+                bank_requests: vec![4, 0, 6],
+                bank_grants: vec![4, 0, 5],
+                bank_conflicts: vec![0, 0, 1],
+                bank_peaks: vec![1, 0, 2],
+            },
             avg_parallelism: 12.75,
             measured_ii: 1.0625,
+            telemetry: None,
         };
         let back = decode_sim(&encode_sim(&r)).unwrap();
         assert_eq!(back.cycles, r.cycles);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&back.mem), bits(&r.mem), "-0.0 and denormals survive");
         assert_eq!(back.smem, r.smem);
+        assert_eq!(back.smem.peak_bank_queue(), 2, "per-bank peaks survive");
         assert_eq!(back.fires, r.fires);
+        assert!(back.telemetry.is_none());
+        assert_eq!(encode_sim(&back), encode_sim(&r), "canonical re-encode");
+    }
+
+    fn sample_telemetry() -> TelemetrySummary {
+        // Counters above 2^53 — the values a JSON f64 detour would corrupt
+        // — must round-trip verbatim.
+        let mut stalls = [0u64; STALL_CAUSES];
+        stalls[0] = (1 << 53) + 1;
+        stalls[3] = u64::MAX - 5;
+        TelemetrySummary {
+            sim_cycles: (1 << 60) + 3,
+            fires: (1 << 54) + 9,
+            stalls,
+            pe: vec![
+                PeActivity { row: 0, col: 1, fires: (1 << 53) + 7, stalls: 2 },
+                PeActivity { row: 3, col: 2, fires: 5, stalls: u64::MAX },
+            ],
+            bank_conflicts: vec![0, (1 << 53) + 11, 4],
+            sample_stride: 64,
+            timeline: vec![
+                TimelineSpan {
+                    start: 0,
+                    dur: 64,
+                    rows_fired: vec![3, 0, 1],
+                    bank_conflicts: vec![1, 0, 0],
+                },
+                TimelineSpan {
+                    start: 64,
+                    dur: 640,
+                    rows_fired: vec![0, 0, 0],
+                    bank_conflicts: vec![0, 0, 0],
+                },
+            ],
+        }
+    }
+
+    /// Satellite: telemetry summaries survive the Sim entry and the sweep
+    /// partial point record bit-exactly, including >2^53 counters.
+    #[test]
+    fn telemetry_summary_roundtrips_full_width_counters() {
+        let t = sample_telemetry();
+        let r = SimResult {
+            cycles: 100,
+            mem: vec![1.0],
+            fires: 42,
+            smem: SmemStats::for_banks(3),
+            avg_parallelism: 1.0,
+            measured_ii: 1.0,
+            telemetry: Some(t.clone()),
+        };
+        let bytes = encode_sim(&r);
+        let back = decode_sim(&bytes).unwrap();
+        assert_eq!(back.telemetry.as_ref(), Some(&t));
+        assert_eq!(encode_sim(&back), bytes, "canonical re-encode");
+
+        // And through a sweep partial's point record.
+        let point = SweepPoint {
+            label: "p0".into(),
+            arch_hash: 0xdead_beef_cafe_f00d,
+            pea: "8x8".into(),
+            topology: "mesh2d",
+            gates: 1.0,
+            area_mm2: 0.5,
+            power_mw: 16.0,
+            fmax_mhz: 750.0,
+            cycles: 100,
+            wm_time_ns: 133.0,
+            speedup_vs_cpu: 2.0,
+            speedup_vs_gpu: 0.5,
+            ii: 1,
+            per_workload: Vec::new(),
+            timing: JobTiming::default(),
+            telemetry: Some(t.clone()),
+        };
+        let partial = SweepPartial {
+            shard: 0,
+            of: 1,
+            grid_hash: 7,
+            suite: "s".into(),
+            suite_hash: 9,
+            seed: 42,
+            report: SweepReport { points: vec![point], ..Default::default() },
+        };
+        let pb = encode_sweep_partial(&partial);
+        let pback = decode_sweep_partial(&pb).unwrap();
+        assert_eq!(pback.report.points[0].telemetry.as_ref(), Some(&t));
+        assert_eq!(encode_sweep_partial(&pback), pb, "canonical re-encode");
+
+        // A corrupt presence byte is an error, not a panic.
+        let mut e = Enc::new(Kind::Sim);
+        e.u64(1); // cycles
+        e.seq(0); // mem
+        e.u64(0); // fires
+        enc_smem_stats(&mut e, &SmemStats::default());
+        e.f64(1.0).f64(1.0);
+        e.u8(7); // bad presence byte
+        assert!(matches!(
+            decode_sim(&e.finish()),
+            Err(DiagError::Store(m)) if m.contains("presence")
+        ));
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub struct WaveEntry {
     pub evaluated: usize,
     /// Frontier size after folding the wave in.
     pub frontier: usize,
+    /// Frontier bottleneck verdicts after this wave (`"label: cause NN%"`,
+    /// one per profiled frontier member — empty on unprofiled drives and
+    /// on wave lines written before telemetry existed; the parser treats a
+    /// missing key as empty, so old manifests read back fine).
+    pub bottlenecks: Vec<String>,
 }
 
 /// Namespace for shard/merge operations of one design-space sweep.
@@ -234,7 +239,7 @@ impl SweepSession {
     pub fn append_wave(store_root: &Path, w: &WaveEntry) -> Result<(), DiagError> {
         use std::io::Write;
         let line = format!(
-            "{{\"kind\":\"wave\",\"driver\":{},\"suite\":{},\"suite_hash\":\"{:016x}\",\"seed\":\"{:016x}\",\"wave\":{},\"proposed\":{},\"evaluated\":{},\"frontier\":{}}}\n",
+            "{{\"kind\":\"wave\",\"driver\":{},\"suite\":{},\"suite_hash\":\"{:016x}\",\"seed\":\"{:016x}\",\"wave\":{},\"proposed\":{},\"evaluated\":{},\"frontier\":{},\"bottlenecks\":{}}}\n",
             crate::util::json::Json::Str(w.driver.clone()),
             crate::util::json::Json::Str(w.suite.clone()),
             w.suite_hash,
@@ -243,6 +248,9 @@ impl SweepSession {
             w.proposed,
             w.evaluated,
             w.frontier,
+            crate::util::json::Json::Arr(
+                w.bottlenecks.iter().map(|b| crate::util::json::Json::Str(b.clone())).collect()
+            ),
         );
         let path = Self::manifest_path(store_root);
         std::fs::OpenOptions::new()
@@ -277,6 +285,13 @@ impl SweepSession {
             proposed: j.get("proposed")?.as_usize()?,
             evaluated: j.get("evaluated")?.as_usize()?,
             frontier: j.get("frontier")?.as_usize()?,
+            // Tolerant: wave lines written before telemetry carry no
+            // `bottlenecks` key — read them back as empty, not as garbage.
+            bottlenecks: j
+                .get("bottlenecks")
+                .and_then(|b| b.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
         })
     }
 
@@ -597,11 +612,35 @@ mod tests {
             proposed: 6,
             evaluated: 5,
             frontier: 2,
+            bottlenecks: vec!["p0: smem-arbitration 62%".into(), "p3: operand-wait 51%".into()],
         };
-        let w1 = WaveEntry { wave: 1, proposed: 4, evaluated: 1, frontier: 2, ..w0.clone() };
+        let w1 = WaveEntry {
+            wave: 1,
+            proposed: 4,
+            evaluated: 1,
+            frontier: 2,
+            bottlenecks: Vec::new(),
+            ..w0.clone()
+        };
         SweepSession::append_wave(&dir, &w0).unwrap();
         SweepSession::append_wave(&dir, &w1).unwrap();
-        assert_eq!(SweepSession::read_waves(&dir), vec![w0, w1]);
+        // A pre-telemetry wave line (no `bottlenecks` key) still parses,
+        // reading back with an empty verdict list.
+        use std::io::Write as _;
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(SweepSession::manifest_path(&dir))
+            .unwrap()
+            .write_all(
+                b"{\"kind\":\"wave\",\"driver\":\"halving\",\"suite\":\"old\",\"suite_hash\":\"0000000000000001\",\"seed\":\"0000000000000002\",\"wave\":9,\"proposed\":1,\"evaluated\":1,\"frontier\":1}\n",
+            )
+            .unwrap();
+        let waves = SweepSession::read_waves(&dir);
+        assert_eq!(waves.len(), 3);
+        assert_eq!(waves[0], w0);
+        assert_eq!(waves[1], w1);
+        assert_eq!(waves[2].suite, "old");
+        assert!(waves[2].bottlenecks.is_empty(), "missing key reads as empty");
         let (entries, skipped) = SweepSession::read_manifest(&dir);
         assert_eq!(entries.len(), 1, "shard line still read");
         assert_eq!(skipped, 0, "wave lines are not garbage");

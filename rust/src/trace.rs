@@ -1,0 +1,309 @@
+//! Chrome `trace_event` export of a profiled design-space sweep.
+//!
+//! [`chrome_trace`] renders a [`SweepReport`] as the JSON the Chrome
+//! tracing UI and Perfetto ingest (`chrome://tracing` → Load, or
+//! ui.perfetto.dev): an object with a `traceEvents` array of `"X"`
+//! complete-spans, `"C"` counters and `"M"` metadata records.
+//!
+//! Two virtual processes:
+//!
+//! - **pid 1 — sweep pipeline.** One thread per evaluated grid point
+//!   (tid = point index, thread name = point label) carrying the point's
+//!   per-stage wall time from [`JobTiming`] as back-to-back `"X"` spans
+//!   (`elaborate` → `compile` → `simulate` → `baseline`). Timestamps are
+//!   real microseconds (`ns / 1000`).
+//! - **pid 2 — PE / smem activity.** The *focus point* — the first Pareto
+//!   frontier member with a sampled activity timeline, falling back to any
+//!   profiled point — contributes one `"C"` counter track per PE row
+//!   (`pe-row-R`, fires per sampling window) and per shared-memory bank
+//!   (`smem-bank-B`, conflict cycles per window). Here the time axis is
+//!   *virtual*: 1 simulated cycle = 1 µs, so the Perfetto ruler reads
+//!   directly in cycles. A profiled point without a timeline (stride 0)
+//!   still emits one aggregate counter sample per row/bank so the tracks
+//!   exist.
+//!
+//! The emitter only uses [`crate::util::json::Json`], so the output is
+//! valid JSON by construction — `benches/telemetry_overhead.rs` re-parses
+//! it and checks the per-row tracks.
+
+use crate::coordinator::{JobTiming, SweepPoint, SweepReport};
+use crate::sim::TelemetrySummary;
+use crate::util::json::Json;
+
+/// Virtual pid of the per-point pipeline-stage spans.
+const PID_PIPELINE: usize = 1;
+/// Virtual pid of the focus point's PE/smem activity counters.
+const PID_ACTIVITY: usize = 2;
+
+/// Render `report` as a complete Chrome `trace_event` JSON document.
+pub fn chrome_trace(report: &SweepReport) -> String {
+    let mut events: Vec<Json> = vec![
+        meta_event(PID_PIPELINE, 0, "process_name", "windmill sweep pipeline"),
+        meta_event(PID_ACTIVITY, 0, "process_name", "windmill pe/smem activity"),
+    ];
+    for (i, p) in report.points.iter().enumerate() {
+        events.push(meta_event(PID_PIPELINE, i, "thread_name", &p.label));
+        push_stage_spans(&mut events, i, &p.label, &p.timing);
+    }
+    if let Some(p) = focus_point(report) {
+        events.push(meta_event(PID_ACTIVITY, 0, "thread_name", &p.label));
+        if let Some(t) = &p.telemetry {
+            push_activity_counters(&mut events, t);
+        }
+    }
+    let events = Json::Arr(events);
+    Json::obj(vec![("traceEvents", events), ("displayTimeUnit", "ms".into())]).to_string()
+}
+
+/// The point whose activity pid 2 shows: the first frontier member with a
+/// sampled timeline, else the first profiled frontier member, else the
+/// first profiled point anywhere. `None` on unprofiled sweeps — the trace
+/// then carries pipeline spans only.
+fn focus_point(report: &SweepReport) -> Option<&SweepPoint> {
+    let frontier = report.frontier_points();
+    frontier
+        .iter()
+        .find(|p| p.telemetry.as_ref().is_some_and(|t| !t.timeline.is_empty()))
+        .copied()
+        .or_else(|| frontier.into_iter().find(|p| p.telemetry.is_some()))
+        .or_else(|| report.points.iter().find(|p| p.telemetry.is_some()))
+}
+
+fn meta_event(pid: usize, tid: usize, which: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", which.into()),
+        ("ph", "M".into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("args", Json::obj(vec![("name", name.into())])),
+    ])
+}
+
+/// The point's pipeline stages as consecutive `"X"` spans on its own tid.
+/// `JobTiming` records durations, not wall timestamps, so the spans are
+/// laid out back-to-back from t=0 — relative widths are what the view is
+/// for. Zero-length stages (fully cached) are skipped.
+fn push_stage_spans(events: &mut Vec<Json>, tid: usize, label: &str, t: &JobTiming) {
+    let stages = [
+        ("elaborate", t.elaborate_ns),
+        ("compile", t.compile_ns),
+        ("simulate", t.simulate_ns),
+        ("baseline", t.baseline_ns),
+    ];
+    let mut cursor_ns = 0u64;
+    for (name, dur_ns) in stages {
+        if dur_ns > 0 {
+            events.push(Json::obj(vec![
+                ("name", name.into()),
+                ("cat", "sweep".into()),
+                ("ph", "X".into()),
+                ("ts", (cursor_ns as f64 / 1e3).into()),
+                ("dur", (dur_ns as f64 / 1e3).into()),
+                ("pid", PID_PIPELINE.into()),
+                ("tid", tid.into()),
+                ("args", Json::obj(vec![("point", label.into())])),
+            ]));
+        }
+        cursor_ns += dur_ns;
+    }
+}
+
+fn counter_event(name: String, ts_us: f64, series: &str, value: u64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("ph", "C".into()),
+        ("ts", ts_us.into()),
+        ("pid", PID_ACTIVITY.into()),
+        ("args", Json::obj(vec![(series, (value as usize).into())])),
+    ])
+}
+
+/// Counter samples for the focus point: one `pe-row-R` / `smem-bank-B`
+/// value per timeline window at the window's start cycle (1 cycle = 1 µs),
+/// plus a zero sample closing each track at the end of the run. Without a
+/// timeline, a single aggregate sample per row/bank at t=0.
+fn push_activity_counters(events: &mut Vec<Json>, t: &TelemetrySummary) {
+    if t.timeline.is_empty() {
+        let rows = t.pe.iter().map(|a| a.row as usize + 1).max().unwrap_or(0);
+        for r in 0..rows {
+            let fires: u64 = t.pe.iter().filter(|a| a.row as usize == r).map(|a| a.fires).sum();
+            events.push(counter_event(format!("pe-row-{r}"), 0.0, "fires", fires));
+        }
+        for (b, &c) in t.bank_conflicts.iter().enumerate() {
+            events.push(counter_event(format!("smem-bank-{b}"), 0.0, "conflicts", c));
+        }
+        return;
+    }
+    let mut end = 0u64;
+    for span in &t.timeline {
+        let ts = span.start as f64;
+        for (r, &fires) in span.rows_fired.iter().enumerate() {
+            events.push(counter_event(format!("pe-row-{r}"), ts, "fires", fires as u64));
+        }
+        for (b, &c) in span.bank_conflicts.iter().enumerate() {
+            events.push(counter_event(format!("smem-bank-{b}"), ts, "conflicts", c as u64));
+        }
+        end = end.max(span.start + span.dur);
+    }
+    if let Some(last) = t.timeline.last() {
+        for r in 0..last.rows_fired.len() {
+            events.push(counter_event(format!("pe-row-{r}"), end as f64, "fires", 0));
+        }
+        for b in 0..last.bank_conflicts.len() {
+            events.push(counter_event(format!("smem-bank-{b}"), end as f64, "conflicts", 0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{SweepAccumulator, WorkloadPerf};
+    use crate::sim::TimelineSpan;
+
+    fn point(label: &str, area: f64, power: f64, time: f64) -> SweepPoint {
+        SweepPoint {
+            label: label.to_string(),
+            arch_hash: 1,
+            pea: "4x4".into(),
+            topology: "mesh2d",
+            gates: 1.0,
+            area_mm2: area,
+            power_mw: power,
+            fmax_mhz: 750.0,
+            cycles: time as u64,
+            wm_time_ns: time,
+            speedup_vs_cpu: 1.0,
+            speedup_vs_gpu: 1.0,
+            ii: 1,
+            per_workload: vec![WorkloadPerf {
+                workload: "wl".into(),
+                cycles: time as u64,
+                wm_time_ns: time,
+                speedup_vs_cpu: 1.0,
+                speedup_vs_gpu: 1.0,
+                ii: 1,
+            }],
+            timing: JobTiming {
+                elaborate_ns: 2_000,
+                compile_ns: 3_000,
+                simulate_ns: 5_000,
+                baseline_ns: 0, // cached: no span emitted
+                ..Default::default()
+            },
+            telemetry: None,
+        }
+    }
+
+    fn timeline_telemetry() -> TelemetrySummary {
+        TelemetrySummary {
+            sim_cycles: 64,
+            fires: 20,
+            sample_stride: 32,
+            bank_conflicts: vec![1, 5],
+            timeline: vec![
+                TimelineSpan {
+                    start: 0,
+                    dur: 32,
+                    rows_fired: vec![12, 8],
+                    bank_conflicts: vec![1, 3],
+                },
+                TimelineSpan {
+                    start: 32,
+                    dur: 32,
+                    rows_fired: vec![0, 0],
+                    bank_conflicts: vec![0, 2],
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    fn events(doc: &str) -> Vec<Json> {
+        let j = Json::parse(doc).expect("trace must be valid JSON");
+        j.get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+    }
+
+    fn named<'a>(evs: &'a [Json], name: &str) -> Vec<&'a Json> {
+        evs.iter().filter(|e| e.get("name").and_then(Json::as_str) == Some(name)).collect()
+    }
+
+    #[test]
+    fn profiled_report_exports_spans_and_per_row_counters() {
+        let mut acc = SweepAccumulator::new();
+        let mut hot = point("hot", 1.0, 1.0, 10.0);
+        hot.telemetry = Some(timeline_telemetry());
+        acc.push(hot);
+        acc.push(point("cold", 2.0, 2.0, 20.0));
+        let r = acc.finish(Default::default(), 1);
+
+        let evs = events(&chrome_trace(&r));
+        // Pipeline spans: 3 nonzero stages per point, zero-length skipped.
+        assert_eq!(named(&evs, "simulate").len(), 2);
+        assert!(named(&evs, "baseline").is_empty());
+        let sim = named(&evs, "simulate")[0];
+        assert_eq!(sim.get("ph").unwrap().as_str(), Some("X"));
+        // elaborate (2 µs) + compile (3 µs) precede simulate on the tid.
+        assert_eq!(sim.get("ts").unwrap().as_f64(), Some(5.0));
+        assert_eq!(sim.get("dur").unwrap().as_f64(), Some(5.0));
+
+        // Activity counters: every PE row and bank has a track, sampled at
+        // each window start plus the closing zero.
+        for name in ["pe-row-0", "pe-row-1", "smem-bank-0", "smem-bank-1"] {
+            assert_eq!(named(&evs, name).len(), 3, "{name}");
+        }
+        let row0 = named(&evs, "pe-row-0");
+        assert_eq!(row0[0].get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(row0[0].at(&["args", "fires"]).unwrap().as_usize(), Some(12));
+        assert_eq!(row0[1].get("ts").unwrap().as_f64(), Some(32.0));
+        assert_eq!(row0[2].get("ts").unwrap().as_f64(), Some(64.0));
+        // The focus point is named on pid 2.
+        let threads = named(&evs, "thread_name");
+        let focus_named = threads.iter().any(|e| {
+            e.get("pid").unwrap().as_usize() == Some(super::PID_ACTIVITY)
+                && e.at(&["args", "name"]).unwrap().as_str() == Some("hot")
+        });
+        assert!(focus_named);
+    }
+
+    #[test]
+    fn unprofiled_report_still_yields_valid_pipeline_trace() {
+        let mut acc = SweepAccumulator::new();
+        acc.push(point("only", 1.0, 1.0, 10.0));
+        let r = acc.finish(Default::default(), 1);
+        let evs = events(&chrome_trace(&r));
+        assert_eq!(named(&evs, "simulate").len(), 1);
+        assert!(evs.iter().all(|e| e.get("ph").unwrap().as_str() != Some("C")));
+    }
+
+    #[test]
+    fn timeline_less_telemetry_gets_aggregate_counter_samples() {
+        use crate::sim::PeActivity;
+        let mut acc = SweepAccumulator::new();
+        let mut p = point("agg", 1.0, 1.0, 10.0);
+        p.telemetry = Some(TelemetrySummary {
+            sim_cycles: 100,
+            fires: 9,
+            pe: vec![
+                PeActivity { row: 0, col: 0, fires: 4, stalls: 1 },
+                PeActivity { row: 0, col: 1, fires: 3, stalls: 2 },
+                PeActivity { row: 2, col: 0, fires: 2, stalls: 3 },
+            ],
+            bank_conflicts: vec![7],
+            ..Default::default()
+        });
+        acc.push(p);
+        let r = acc.finish(Default::default(), 1);
+        let evs = events(&chrome_trace(&r));
+        // Rows 0..=2 each get one aggregate sample (row 1 exists but is 0).
+        let row0 = named(&evs, "pe-row-0");
+        assert_eq!(row0.len(), 1);
+        assert_eq!(row0[0].at(&["args", "fires"]).unwrap().as_usize(), Some(7));
+        assert_eq!(named(&evs, "pe-row-1").len(), 1);
+        assert_eq!(named(&evs, "pe-row-2").len(), 1);
+        assert_eq!(
+            named(&evs, "smem-bank-0")[0].at(&["args", "conflicts"]).unwrap().as_usize(),
+            Some(7)
+        );
+    }
+}

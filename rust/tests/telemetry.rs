@@ -1,0 +1,305 @@
+//! Telemetry equivalence and accounting suite (EXPERIMENTS.md §Telemetry).
+//!
+//! Three pins:
+//!
+//! 1. **Observational invisibility.** A profiled simulation
+//!    (`SimOptions::profile`, with or without a sampled activity timeline)
+//!    is bit-identical on memory and identical on every timing observable
+//!    (cycles, fires, smem stats, skipped-cycle count, derived metrics) to
+//!    the unprofiled run — solo through [`simulate_counting_with`] and in
+//!    5-lane [`simulate_batch_with`] arenas.
+//! 2. **Exact attribution.** For every profiled kernel the stall histogram
+//!    satisfies `sum(stalls) == n_nodes * cycles - fires` *exactly* —
+//!    every node-cycle is attributed to precisely one outcome, including
+//!    event-skipped spans and the end-of-run drain — and the sampled
+//!    timeline tiles `[0, cycles]` with the per-row fire counts summing to
+//!    the engine's own fire counter.
+//! 3. **Codec round-trip.** `TelemetrySummary` survives the store codec
+//!    bit-exactly, including counters above 2^53 (which a float-backed
+//!    encoding would corrupt).
+
+use windmill::arch::isa::Op;
+use windmill::arch::presets;
+use windmill::compiler::{compile, Dfg, Mapping};
+use windmill::sim::{
+    simulate_batch, simulate_batch_with, simulate_counting, simulate_counting_with, LaneSpec,
+    MachineDesc, PeActivity, SimOptions, SimResult, StallCause, TelemetrySummary, TimelineSpan,
+    STALL_NAMES,
+};
+use windmill::store::codec::{decode_sim, encode_sim};
+use windmill::util::Rng;
+
+fn machine() -> MachineDesc {
+    windmill::plugins::elaborate(presets::standard()).unwrap().artifact
+}
+
+const BINOPS: [Op; 5] = [Op::Add, Op::Sub, Op::Mul, Op::Min, Op::Max];
+const UNOPS: [Op; 4] = [Op::Abs, Op::Neg, Op::Tanh, Op::Add];
+
+/// Randomized kernels cycling through the engine-equivalence shapes:
+/// affine pipelines, 2-D accumulator nests, indirect gathers, and
+/// stall-heavy SFU chains (the skip-path stressor — telemetry must
+/// attribute skipped spans in closed form, not by ticking).
+fn random_kernel(rng: &mut Rng, case: usize) -> Dfg {
+    match case % 4 {
+        0 => {
+            let iters = *rng.choose(&[8u32, 16, 32]);
+            let mut d = Dfg::new(&format!("tel-affine-{case}"), vec![iters]);
+            let a = d.load_affine(0, vec![1]);
+            let b = d.load_affine(64, vec![1]);
+            let mut v = d.compute(*rng.choose(&BINOPS), a, b);
+            for _ in 0..rng.range(1, 4) {
+                v = d.unary(*rng.choose(&UNOPS), v);
+            }
+            d.store_affine(v, 2048, vec![1], 1);
+            d
+        }
+        1 => {
+            let outer = *rng.choose(&[2u32, 4, 8]);
+            let inner = *rng.choose(&[4u32, 8]);
+            let mut d = Dfg::new(&format!("tel-accum-{case}"), vec![outer, inner]);
+            let a = d.load_affine(0, vec![inner as i32, 1]);
+            let b = d.load_affine(64, vec![0, 1]);
+            let v = d.compute(Op::Mul, a, b);
+            let acc = d.accum(Op::Add, v, 0.0, inner);
+            d.store_affine(acc, 2048, vec![1, 0], inner);
+            d
+        }
+        2 => {
+            let iters = *rng.choose(&[8u32, 16, 32]);
+            let mut d = Dfg::new(&format!("tel-gather-{case}"), vec![iters]);
+            let idx = d.index(0);
+            let base = d.constant(1024.0);
+            let addr = d.compute(Op::Add, idx, base);
+            let x = d.load_indirect(addr);
+            let y = d.unary(*rng.choose(&UNOPS), x);
+            d.store_affine(y, 2048, vec![1], 1);
+            d
+        }
+        _ => {
+            let iters = *rng.choose(&[1u32, 2, 4]);
+            let depth = rng.range(3, 8);
+            let mut d = Dfg::new(&format!("tel-sfu-{case}"), vec![iters]);
+            let mut v = d.load_affine(0, vec![1]);
+            for _ in 0..depth {
+                v = d.unary(*rng.choose(&[Op::Tanh, Op::Exp, Op::Abs]), v);
+            }
+            d.store_affine(v, 2048, vec![1], 1);
+            d
+        }
+    }
+}
+
+fn image_for(rng: &mut Rng, words: usize) -> Vec<f32> {
+    let mut image = vec![0.0f32; words];
+    for w in image.iter_mut().take(1280) {
+        *w = rng.normal() * 0.25;
+    }
+    image
+}
+
+/// Everything an unprofiled caller can observe must match bit-for-bit.
+fn assert_observably_identical(case: &str, off: &SimResult, on: &SimResult) {
+    assert_eq!(off.cycles, on.cycles, "{case}: cycles");
+    assert_eq!(off.fires, on.fires, "{case}: fires");
+    assert_eq!(off.smem, on.smem, "{case}: smem stats");
+    assert_eq!(off.mem.len(), on.mem.len(), "{case}");
+    for (i, (a, b)) in off.mem.iter().zip(on.mem.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{case} mem[{i}]: {a} vs {b}");
+    }
+    assert_eq!(
+        off.avg_parallelism.to_bits(),
+        on.avg_parallelism.to_bits(),
+        "{case}: avg_parallelism"
+    );
+    assert_eq!(off.measured_ii.to_bits(), on.measured_ii.to_bits(), "{case}: measured_ii");
+}
+
+/// Pin 1 (solo): telemetry-on is bit- and cycle-identical to telemetry-off
+/// for randomized kernels, with and without a sampled timeline, and the
+/// skip counter (part of the engine's observable behaviour) agrees too.
+#[test]
+fn profiled_solo_runs_are_bit_and_cycle_identical() {
+    let m = machine();
+    let words = m.smem.as_ref().unwrap().words();
+    for case in 0..16usize {
+        let mut rng = Rng::new(11_000 + case as u64);
+        let d = random_kernel(&mut rng, case);
+        d.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let image = image_for(&mut rng, words);
+        let mapping = compile(d, &m, 300 + case as u64)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let (off, skipped_off) = simulate_counting(&mapping, &m, &image, 2_000_000).unwrap();
+        assert!(off.telemetry.is_none(), "case {case}: unprofiled run must carry None");
+
+        for stride in [0u64, 32] {
+            let opts = SimOptions { profile: true, sample_stride: stride };
+            let (on, skipped_on) =
+                simulate_counting_with(&mapping, &m, &image, 2_000_000, &opts).unwrap();
+            let label = format!("case {case} stride {stride}");
+            assert_observably_identical(&label, &off, &on);
+            assert_eq!(skipped_off, skipped_on, "{label}: skipped cycles");
+            let t = on.telemetry.as_ref().unwrap_or_else(|| panic!("{label}: no telemetry"));
+            assert_eq!(t.sim_cycles, on.cycles, "{label}");
+            assert_eq!(t.fires, on.fires, "{label}");
+            assert_eq!(t.sample_stride, stride, "{label}");
+            assert_eq!(t.timeline.is_empty(), stride == 0, "{label}");
+        }
+    }
+}
+
+/// Pin 1 (batched): a profiled 5-lane arena matches both the unprofiled
+/// arena and the profiled solo runs, lane by lane.
+#[test]
+fn profiled_arena_batches_match_solo_runs() {
+    let m = machine();
+    let words = m.smem.as_ref().unwrap().words();
+    for case in 0..4usize {
+        let mut rng = Rng::new(13_000 + case as u64);
+        let d = random_kernel(&mut rng, case);
+        let mapping = compile(d, &m, 500 + case as u64).unwrap();
+        let images: Vec<Vec<f32>> = (0..5).map(|_| image_for(&mut rng, words)).collect();
+        let specs: Vec<LaneSpec> = images
+            .iter()
+            .map(|image| LaneSpec { mapping: &mapping, machine: &m, image })
+            .collect();
+
+        let opts = SimOptions { profile: true, sample_stride: 16 };
+        let off = simulate_batch(&specs, 2_000_000);
+        let on = simulate_batch_with(&specs, 2_000_000, &opts);
+        assert_eq!(off.len(), 5);
+        assert_eq!(on.len(), 5);
+        for (lane, (o, p)) in off.iter().zip(on.iter()).enumerate() {
+            let (o, o_skip) = o.as_ref().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            let (p, p_skip) = p.as_ref().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            let label = format!("case {case} lane {lane}");
+            assert_observably_identical(&label, o, p);
+            assert_eq!(o_skip, p_skip, "{label}: skipped cycles");
+            assert!(o.telemetry.is_none(), "{label}");
+
+            // And the profiled lane is identical to its profiled solo run,
+            // telemetry included — lanes share no observable state.
+            let (solo, _) =
+                simulate_counting_with(&mapping, &m, &images[lane], 2_000_000, &opts).unwrap();
+            assert_observably_identical(&format!("{label} vs solo"), &solo, p);
+            assert_eq!(solo.telemetry, p.telemetry, "{label}: telemetry");
+        }
+    }
+}
+
+/// Pin 2: exact cycle attribution. Every node-cycle is a fire or exactly
+/// one stall, through skip spans and the drain tail; the timeline tiles
+/// the run and its per-row fire counts re-sum to the fire counter.
+#[test]
+fn stall_accounting_is_exact() {
+    let m = machine();
+    let words = m.smem.as_ref().unwrap().words();
+    for case in 0..12usize {
+        let mut rng = Rng::new(17_000 + case as u64);
+        let d = random_kernel(&mut rng, case);
+        let image = image_for(&mut rng, words);
+        let mapping: Mapping = compile(d, &m, 700 + case as u64).unwrap();
+        let n_nodes = mapping.dfg.nodes.len() as u64;
+
+        let opts = SimOptions { profile: true, sample_stride: 64 };
+        let (res, _) = simulate_counting_with(&mapping, &m, &image, 2_000_000, &opts).unwrap();
+        let t = res.telemetry.as_ref().unwrap();
+
+        let stalled: u64 = t.stalls.iter().sum();
+        assert_eq!(
+            stalled,
+            n_nodes * res.cycles - res.fires,
+            "case {case}: {} nodes x {} cycles - {} fires, histogram {:?}",
+            n_nodes,
+            res.cycles,
+            res.fires,
+            t.stalls
+        );
+
+        // Per-PE counters re-aggregate to the lane totals; drained cycles
+        // are lane-wide (not attributed to any PE).
+        let pe_fires: u64 = t.pe.iter().map(|a| a.fires).sum();
+        let pe_stalls: u64 = t.pe.iter().map(|a| a.stalls).sum();
+        let live: u64 = t.stalls[..StallCause::Drained as usize].iter().sum();
+        assert_eq!(pe_fires, res.fires, "case {case}");
+        assert_eq!(pe_stalls, live, "case {case}");
+
+        // Timeline: spans tile [0, cycles] gaplessly; windowed fire counts
+        // re-sum to the engine's fire counter.
+        let mut cursor = 0u64;
+        let mut windowed_fires = 0u64;
+        for span in &t.timeline {
+            assert_eq!(span.start, cursor, "case {case}: timeline gap");
+            cursor += span.dur;
+            windowed_fires += span.rows_fired.iter().map(|&f| f as u64).sum::<u64>();
+        }
+        assert_eq!(cursor, res.cycles, "case {case}: timeline must cover the run");
+        assert_eq!(windowed_fires, res.fires, "case {case}: windowed fires");
+
+        // The utilization/bottleneck accessors stay finite and in range.
+        let u = t.utilization();
+        assert!(u.is_finite() && (0.0..=1.0).contains(&u), "case {case}: {u}");
+        if let Some((name, pct)) = t.bottleneck() {
+            assert!(STALL_NAMES.contains(&name), "case {case}");
+            assert!(pct > 0.0 && pct <= 100.0, "case {case}: {pct}");
+        }
+    }
+}
+
+/// Pin 3: fuzzed codec round-trip. Counters are drawn across the full u64
+/// range (far above 2^53) and must survive encode→decode bit-exactly.
+#[test]
+fn telemetry_codec_roundtrip_fuzz() {
+    for seed in 0..32u64 {
+        let mut rng = Rng::new(23_000 + seed);
+        let wide = |rng: &mut Rng| rng.next_u64() | (1u64 << 54); // force > 2^53
+        let rows = rng.range(1, 5);
+        let banks = rng.range(1, 4);
+        let pe: Vec<PeActivity> = (0..rows)
+            .map(|r| PeActivity {
+                row: r as u32,
+                col: rng.range(0, 4) as u32,
+                fires: wide(&mut rng),
+                stalls: rng.next_u64(),
+            })
+            .collect();
+        let timeline: Vec<TimelineSpan> = (0..rng.range(0, 3))
+            .map(|i| TimelineSpan {
+                start: i as u64 * 64,
+                dur: 64,
+                rows_fired: (0..rows).map(|_| rng.next_u64() as u32).collect(),
+                bank_conflicts: (0..banks).map(|_| rng.next_u64() as u32).collect(),
+            })
+            .collect();
+        let mut stalls = [0u64; STALL_NAMES.len()];
+        for s in stalls.iter_mut() {
+            *s = wide(&mut rng);
+        }
+        let telemetry = TelemetrySummary {
+            sim_cycles: wide(&mut rng),
+            fires: wide(&mut rng),
+            stalls,
+            pe,
+            bank_conflicts: (0..banks).map(|_| wide(&mut rng)).collect(),
+            sample_stride: 64,
+            timeline,
+        };
+        let res = SimResult {
+            cycles: wide(&mut rng),
+            mem: vec![1.5f32, -0.0, f32::MIN_POSITIVE],
+            fires: wide(&mut rng),
+            smem: Default::default(),
+            avg_parallelism: 3.25,
+            measured_ii: 2.5,
+            telemetry: Some(telemetry),
+        };
+        let bytes = encode_sim(&res);
+        let back = decode_sim(&bytes).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back.cycles, res.cycles, "seed {seed}");
+        assert_eq!(back.fires, res.fires, "seed {seed}");
+        assert_eq!(back.telemetry, res.telemetry, "seed {seed}: telemetry must round-trip");
+        // Canonical: re-encoding the decoded value is byte-identical.
+        assert_eq!(encode_sim(&back), bytes, "seed {seed}");
+    }
+}
