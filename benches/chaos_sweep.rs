@@ -1,0 +1,202 @@
+//! Chaos sweep bench (EXPERIMENTS.md §Fault tolerance): crash-tolerant
+//! leased sweeps must be *correct under faults* and *free without them*.
+//!
+//! Three acceptance gates, all asserted:
+//!
+//! 1. **Chaos-off byte-diff guard.** A leased sweep on a clean store (no
+//!    `--chaos`) merges to a report bit-identical to the plain engine
+//!    sweep — same frontier bytes, zero recovery counters, zero disk
+//!    retries, no `recovery` segment in the summary. The fault hooks are
+//!    invisible when disabled.
+//! 2. **Chaos recovery.** Under a fixed chaos seed (torn tmp writes,
+//!    rename failures, transient I/O errors, one injected worker panic,
+//!    one abandoned lease) the same session still converges, the frontier
+//!    stays byte-identical to the fault-free run, and every injected fault
+//!    is visible in the recovery counters — no silent recovery, no abort.
+//! 3. **Bounded retries.** The capped-backoff retry ladder converges: disk
+//!    retries and checkpoint retries stay under fixed bounds instead of
+//!    spinning.
+//!
+//! `cargo bench --bench chaos_sweep`
+
+mod bench_util;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bench_util::{bench, fmt_ns, Table};
+use windmill::arch::params::ParamGrid;
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::{SweepEngine, SweepReport, Workload, WorkloadSuite};
+use windmill::store::{DiskStore, FaultPlan, LeaseRunReport, SweepSession};
+
+/// Fixed chaos seed for the asserted run; any seed must pass, this one is
+/// pinned so CI failures reproduce with
+/// `windmill sweep saxpy --store DIR --lease --chaos 0xC4A05 --worker-id 0`.
+const CHAOS_SEED: u64 = 0xC4A05;
+const RANGES: usize = 4;
+const TTL: u64 = 4;
+
+fn grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).pea_edges(&[4, 8]).topologies(&Topology::ALL)
+}
+
+fn suite() -> WorkloadSuite {
+    WorkloadSuite::single(Workload::Saxpy { n: 64 })
+}
+
+/// Fresh scratch store root (unique per call; removed by the caller).
+fn scratch() -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("windmill-chaosbench-{}-{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The exact frontier lines the CLI prints — the bytes CI diffs.
+fn frontier_bytes(r: &SweepReport) -> String {
+    r.frontier_points()
+        .iter()
+        .map(|p| {
+            format!(
+                "  * {:<20} {:>7.3} mm2  {:>6.2} mW  {:>9} cycles",
+                p.label, p.area_mm2, p.power_mw, p.cycles
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn assert_same_bits(tag: &str, a: &SweepReport, b: &SweepReport) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (x, y) in a.points.iter().zip(b.points.iter()) {
+        assert_eq!(x.label, y.label, "{tag}");
+        assert_eq!(x.cycles, y.cycles, "{tag}: {}", x.label);
+        assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "{tag}: {}", x.label);
+        assert_eq!(x.power_mw.to_bits(), y.power_mw.to_bits(), "{tag}: {}", x.label);
+        assert_eq!(x.wm_time_ns.to_bits(), y.wm_time_ns.to_bits(), "{tag}: {}", x.label);
+    }
+    assert_eq!(a.frontier, b.frontier, "{tag}: frontier indices");
+}
+
+/// One full leased session on a fresh store; `chaos` arms the fault plan.
+fn leased_run(chaos: Option<u64>) -> (SweepReport, LeaseRunReport, Arc<DiskStore>, PathBuf) {
+    let dir = scratch();
+    let mut store = DiskStore::open(&dir).unwrap();
+    let plan = chaos.map(|s| Arc::new(FaultPlan::from_chaos_seed(s)));
+    if let Some(p) = &plan {
+        store = store.with_faults(p.clone());
+    }
+    let store = Arc::new(store);
+    let engine = SweepEngine::with_store(2, store.clone());
+    let (report, run) =
+        SweepSession::run_leased(&engine, &grid(), &suite(), 42, 0xBE7C, RANGES, TTL)
+            .expect("leased session must converge, chaos or not");
+    (report, run, store, dir)
+}
+
+fn main() {
+    // Fault-free unsharded baseline: the bits every arm must reproduce.
+    let baseline = SweepEngine::new(2).sweep_suite(&grid(), &suite(), 42);
+    assert!(baseline.failures.is_empty(), "{:?}", baseline.failures);
+    let baseline_bytes = frontier_bytes(&baseline);
+
+    // ---- gate 1: chaos off is byte-identical and counter-silent ------------
+    let (clean, clean_run, clean_store, clean_dir) = leased_run(None);
+    assert_same_bits("chaos-off", &clean, &baseline);
+    assert_eq!(frontier_bytes(&clean), baseline_bytes, "chaos-off frontier bytes");
+    assert!(!clean.recovery.any(), "clean run must report zero recovery: {:?}", clean.recovery);
+    assert!(
+        !clean.summary().contains("recovery"),
+        "no recovery segment without faults:\n{}",
+        clean.summary()
+    );
+    let ds = clean_store.stats();
+    assert_eq!(ds.retries, 0, "no injected faults, no retries");
+    assert_eq!(ds.backoff_ns, 0);
+    assert_eq!(clean_run.completed, RANGES as u64);
+    assert_eq!(
+        (clean_run.steals, clean_run.panics, clean_run.abandoned, clean_run.checkpoint_retries),
+        (0, 0, 0, 0),
+        "fault hooks must be invisible when disabled"
+    );
+    let _ = std::fs::remove_dir_all(&clean_dir);
+
+    // ---- gate 2: fixed-seed chaos converges to the same bytes --------------
+    let plan = FaultPlan::from_chaos_seed(CHAOS_SEED);
+    let n_points = grid().points().len() as u64;
+    let expect_panics = u64::from(plan.panic_point().unwrap() < n_points);
+    let (chaotic, chaos_run, chaos_store, chaos_dir) = leased_run(Some(CHAOS_SEED));
+    assert_same_bits("chaos", &chaotic, &baseline);
+    assert_eq!(frontier_bytes(&chaotic), baseline_bytes, "chaos frontier bytes");
+    assert_eq!(chaos_run.completed, RANGES as u64, "every lease completed despite faults");
+    assert_eq!(chaos_run.abandoned, 1, "the planned abandonment fired");
+    assert_eq!(chaos_run.panics, expect_panics, "the planned panic was contained");
+    assert!(chaos_run.steals >= 1, "abandoned lease was stolen back");
+    assert_eq!(chaotic.recovery.steals, chaos_run.steals, "recovery visible in the merge");
+    assert_eq!(chaotic.recovery.abandoned, 1);
+    assert!(chaotic.summary().contains("recovery"), "{}", chaotic.summary());
+
+    // ---- gate 3: retries are bounded, backoff is capped --------------------
+    let cs = chaos_store.stats();
+    // Each logical write makes at most 4 attempts (3 retries); the ladder
+    // must converge rather than spin.
+    assert!(
+        cs.retries <= 3 * (cs.writes + cs.write_errors).max(1),
+        "retry ladder diverged: {} retries over {} writes / {} errors",
+        cs.retries,
+        cs.writes,
+        cs.write_errors
+    );
+    assert!(
+        chaos_run.checkpoint_retries <= 12 * RANGES as u64,
+        "checkpoint save ladder diverged: {}",
+        chaos_run.checkpoint_retries
+    );
+    let _ = std::fs::remove_dir_all(&chaos_dir);
+
+    // ---- recovery overhead table (EXPERIMENTS.md §Fault tolerance) ---------
+    let clean_t = bench(1, 3, || {
+        let (r, _, _, dir) = leased_run(None);
+        let _ = std::fs::remove_dir_all(&dir);
+        r.wall_ns
+    });
+    let chaos_t = bench(1, 3, || {
+        let (r, _, _, dir) = leased_run(Some(CHAOS_SEED));
+        let _ = std::fs::remove_dir_all(&dir);
+        r.wall_ns
+    });
+    let ratio = chaos_t.min() / clean_t.min().max(1.0);
+    let mut t = Table::new(
+        "chaos sweep: leased saxpy session, 8 points x 4 ranges (cold store each run)",
+        &["arm", "wall mean", "wall min", "vs clean"],
+    );
+    t.row(&[
+        "lease, no chaos".into(),
+        fmt_ns(clean_t.mean()),
+        fmt_ns(clean_t.min()),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        format!("lease, chaos 0x{CHAOS_SEED:X}"),
+        fmt_ns(chaos_t.mean()),
+        fmt_ns(chaos_t.min()),
+        format!("{ratio:.2}x"),
+    ]);
+    t.print();
+    println!(
+        "chaos recovery: {} steals, {} panics contained, {} abandoned, {} waits, \
+         {} ckpt retries, {} disk retries ({} virtual backoff)",
+        chaos_run.steals,
+        chaos_run.panics,
+        chaos_run.abandoned,
+        chaos_run.waits,
+        chaos_run.checkpoint_retries,
+        cs.retries,
+        fmt_ns(cs.backoff_ns as f64),
+    );
+    println!("chaos-sweep acceptance: frontier byte-identical on both arms, retries bounded");
+}

@@ -78,8 +78,9 @@ pub use job::{
     calibrate_params, calibrate_params_words, run_job, run_job_cached, run_jobs_cached_batch,
     JobResult, JobSpec, JobTiming, Workload, WorkloadSuite,
 };
-pub use pool::{run_all, run_all_with, run_fifo, FifoRun};
+pub use pool::{run_all, run_all_with, run_fifo, run_fifo_jobs, FifoRun};
 pub use report::{
-    ppa_report, ppa_row, PpaRow, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf,
+    ppa_report, ppa_row, PpaRow, RecoveryStats, SweepAccumulator, SweepPoint, SweepReport,
+    WorkloadPerf,
 };
 pub use sweep::{SweepEngine, DEFAULT_SWEEP_BATCH, DEFAULT_SWEEP_SEED};

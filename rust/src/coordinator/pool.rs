@@ -23,6 +23,7 @@
 //! the LIFO inversion is a regression this module must never reintroduce.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc};
 use std::thread;
 
@@ -43,12 +44,30 @@ pub struct FifoRun<R> {
     pub finish_order: Vec<usize>,
 }
 
-/// Run `f` over `items` on `workers` threads with FIFO dispatch.
+/// Best-effort text of a panic payload (`&str` and `String` payloads cover
+/// every `panic!` in this crate).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` over `items` on `workers` threads with FIFO dispatch, converting
+/// a panicking job into that job's `Err` instead of losing it.
 ///
-/// `f` must not panic: a panicking worker abandons its in-flight item and
-/// the run panics with a diagnostic once the channels drain (job-level
-/// fallibility belongs in `R = Result<..>`, as [`run_all`] does).
-pub fn run_fifo<T, R, F>(items: Vec<T>, workers: usize, f: F) -> FifoRun<R>
+/// Each call to `f` runs under `catch_unwind`, so a panicking item (a) does
+/// not kill its worker thread — the worker re-announces readiness and keeps
+/// serving the queue — and (b) surfaces as
+/// `Err(DiagError::InvalidParams("job i panicked ..."))` in that item's
+/// result slot while every sibling completes normally. The drain-time panic
+/// remains only for the case where a slot is empty *without* a recorded
+/// panic, which can no longer be caused by `f` and genuinely indicates a
+/// pool-infrastructure bug.
+pub fn run_fifo_jobs<T, R, F>(items: Vec<T>, workers: usize, f: F) -> FifoRun<Result<R, DiagError>>
 where
     T: Send + 'static,
     R: Send + 'static,
@@ -62,7 +81,7 @@ where
     let f = Arc::new(f);
 
     let (ready_tx, ready_rx) = mpsc::channel::<usize>();
-    let (done_tx, done_rx) = mpsc::channel::<(usize, R)>();
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Result<R, String>)>();
     let mut job_txs = Vec::with_capacity(workers);
     let mut handles = Vec::with_capacity(workers);
     for w in 0..workers {
@@ -73,11 +92,14 @@ where
         let f = Arc::clone(&f);
         handles.push(thread::spawn(move || {
             // Announce readiness, then serve until the job channel closes.
+            // A panicking item is contained right here, so the worker
+            // survives it and the queue keeps draining.
             if ready.send(w).is_err() {
                 return;
             }
             while let Ok((idx, item)) = job_rx.recv() {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|p| panic_text(p.as_ref()));
                 if done.send((idx, r)).is_err() {
                     return;
                 }
@@ -103,7 +125,7 @@ where
     }
     drop(job_txs); // close the job channels; workers exit after draining
 
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
     let mut finish_order = Vec::with_capacity(n);
     for (idx, r) in done_rx {
         finish_order.push(idx);
@@ -115,9 +137,39 @@ where
     let results = slots
         .into_iter()
         .enumerate()
-        .map(|(i, r)| r.unwrap_or_else(|| panic!("worker lost job {i} (did `f` panic?)")))
+        .map(|(i, slot)| match slot {
+            Some(Ok(r)) => Ok(r),
+            Some(Err(msg)) => {
+                Err(DiagError::InvalidParams(format!("job {i} panicked in a worker: {msg}")))
+            }
+            // `f` can no longer lose a job (its panics are caught above):
+            // an empty slot means the pool's own channels misbehaved.
+            None => panic!("pool lost job {i} without a recorded panic (pool-infrastructure bug)"),
+        })
         .collect();
     FifoRun { results, dispatch_order, finish_order }
+}
+
+/// Run `f` over `items` on `workers` threads with FIFO dispatch.
+///
+/// For closures that cannot panic (or contain their own panics). If `f`
+/// does panic for some item, the whole run panics with that item's payload
+/// once the queue drains — siblings still complete first. Callers that want
+/// per-job fallibility use [`run_fifo_jobs`], as [`run_all_with`] and the
+/// sweep engine do.
+pub fn run_fifo<T, R, F>(items: Vec<T>, workers: usize, f: F) -> FifoRun<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let run = run_fifo_jobs(items, workers, f);
+    let results = run
+        .results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("{e}")))
+        .collect();
+    FifoRun { results, dispatch_order: run.dispatch_order, finish_order: run.finish_order }
 }
 
 /// Run all jobs across `workers` threads; results return in input order.
@@ -133,16 +185,13 @@ pub fn run_all_with(
     workers: usize,
     cache: Option<Arc<ArtifactCache>>,
 ) -> Vec<Result<JobResult, DiagError>> {
-    run_fifo(specs, workers, move |spec| {
-        let name = spec.workload.name();
-        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_job_cached(&spec, cache.as_deref()).map(|(r, _)| r)
-        }));
-        out.unwrap_or_else(|_| {
-            Err(DiagError::InvalidParams(format!("job `{name}` panicked in a worker")))
-        })
+    run_fifo_jobs(specs, workers, move |spec| {
+        run_job_cached(&spec, cache.as_deref()).map(|(r, _)| r)
     })
     .results
+    .into_iter()
+    .map(|slot| slot.and_then(|r| r))
+    .collect()
 }
 
 #[cfg(test)]
@@ -234,5 +283,51 @@ mod tests {
     fn worker_count_exceeding_jobs_is_clamped() {
         let run = run_fifo(vec![1u32, 2], 64, |x| x);
         assert_eq!(run.results, vec![1, 2]);
+    }
+
+    /// Regression: a panicking job used to abandon its result slot and the
+    /// drain panicked the *whole run* with "worker lost job". It must now
+    /// surface as that job's own error while every sibling — including jobs
+    /// submitted after the panicking one — completes normally.
+    #[test]
+    fn panicking_job_becomes_a_per_job_error() {
+        let items: Vec<usize> = (0..16).collect();
+        let run = run_fifo_jobs(items, 2, |x| {
+            if x == 3 {
+                panic!("chaos: injected worker panic at item {x}");
+            }
+            x * 10
+        });
+        assert_eq!(run.results.len(), 16);
+        for (i, r) in run.results.iter().enumerate() {
+            if i == 3 {
+                let msg = r.as_ref().unwrap_err().to_string();
+                assert!(msg.contains("panicked in a worker"), "{msg}");
+                assert!(msg.contains("injected worker panic"), "{msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10, "sibling {i} must survive");
+            }
+        }
+        // Every item finished: the panicking worker kept serving the queue.
+        let mut fin = run.finish_order.clone();
+        fin.sort_unstable();
+        assert_eq!(fin, (0..16).collect::<Vec<_>>());
+        assert_eq!(run.dispatch_order, (0..16).collect::<Vec<_>>());
+    }
+
+    /// Even with a single worker (no spare thread to pick up the slack),
+    /// a panicking item must not starve the rest of the queue.
+    #[test]
+    fn single_worker_survives_a_panicking_item() {
+        let run = run_fifo_jobs(vec![1u32, 2, 3], 1, |x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+        assert!(run.results[0].is_err());
+        assert_eq!(*run.results[1].as_ref().unwrap(), 2);
+        assert_eq!(*run.results[2].as_ref().unwrap(), 3);
+        assert_eq!(run.finish_order, vec![0, 1, 2]);
     }
 }

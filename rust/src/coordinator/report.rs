@@ -180,6 +180,52 @@ impl SweepPoint {
     }
 }
 
+/// Crash-recovery traffic behind one sweep report: how many leases were
+/// stolen from stale holders, how many injected (or real) worker panics
+/// were contained, how many checkpoint saves had to be retried. All zero
+/// on a fault-free unsharded sweep; a leased sweep that survived faults
+/// reports every one here — recovery is **visible**, never silent (the
+/// frontier itself stays bit-identical either way).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Expired leases taken over from another (or a crashed former self's)
+    /// worker; each steal implies the range was recomputed.
+    pub steals: u64,
+    /// Worker panics contained by the lease loop (the lease was left to
+    /// expire; the process kept running).
+    pub panics: u64,
+    /// Leases walked away from without completing (chaos abandonment or a
+    /// worker that lost its claim race after evaluation).
+    pub abandoned: u64,
+    /// Epoch-clock ticks appended while every open range was held live by
+    /// another worker.
+    pub waits: u64,
+    /// Checkpoint save-and-verify attempts beyond the first (torn or
+    /// unreadable partials re-written before the lease completed).
+    pub retries: u64,
+}
+
+impl RecoveryStats {
+    /// Any recovery activity at all? Gates the summary segment so
+    /// fault-free reports keep their historical byte-exact format.
+    pub fn any(&self) -> bool {
+        self.steals > 0
+            || self.panics > 0
+            || self.abandoned > 0
+            || self.waits > 0
+            || self.retries > 0
+    }
+
+    /// Fold another worker's (or shard's) counters into this one.
+    pub fn add(&mut self, other: &RecoveryStats) {
+        self.steals += other.steals;
+        self.panics += other.panics;
+        self.abandoned += other.abandoned;
+        self.waits += other.waits;
+        self.retries += other.retries;
+    }
+}
+
 /// Aggregated outcome of one sweep.
 #[derive(Debug, Clone, Default)]
 pub struct SweepReport {
@@ -206,6 +252,10 @@ pub struct SweepReport {
     /// search metric. Shard partials carry their shard's point count and
     /// merging sums them.
     pub grid_size: usize,
+    /// Crash-recovery traffic (leased sweeps; all-zero otherwise). Merging
+    /// sums the per-shard counters, so every steal/panic/retry any worker
+    /// survived is visible in the final report.
+    pub recovery: RecoveryStats,
 }
 
 impl SweepReport {
@@ -375,6 +425,17 @@ impl SweepReport {
                 self.timing.sim_skipped_cycles
             ));
         }
+        // Crash-recovery traffic (leased sweeps only): absent on fault-free
+        // runs so the historical summary format is byte-exact, present
+        // whenever any worker stole, panicked, abandoned, waited or
+        // re-saved — faults are never silently absorbed.
+        if self.recovery.any() {
+            let r = &self.recovery;
+            s.push_str(&format!(
+                " | recovery {} steals, {} panics, {} abandoned, {} waits, {} ckpt retries",
+                r.steals, r.panics, r.abandoned, r.waits, r.retries
+            ));
+        }
         // Per-workload rows (suite sweeps only — a single-member suite
         // keeps the historical one-line format).
         let names = self.workload_names();
@@ -435,6 +496,16 @@ impl SweepReport {
             ("grid_size", self.grid_size.into()),
             ("points_evaluated", self.points_evaluated().into()),
             ("wall_ns", (self.wall_ns as usize).into()),
+            (
+                "recovery",
+                Json::obj(vec![
+                    ("steals", (self.recovery.steals as usize).into()),
+                    ("panics", (self.recovery.panics as usize).into()),
+                    ("abandoned", (self.recovery.abandoned as usize).into()),
+                    ("waits", (self.recovery.waits as usize).into()),
+                    ("retries", (self.recovery.retries as usize).into()),
+                ]),
+            ),
             (
                 "cache",
                 Json::obj(vec![
@@ -849,6 +920,41 @@ mod tests {
         // Unknown grid (grid_size 0): the segment is absent, not a 0/0.
         let s0 = SweepReport::default().summary();
         assert!(!s0.contains("searched"), "{s0}");
+    }
+
+    /// Tentpole: crash-recovery counters surface in the summary exactly
+    /// when any fault was survived — a fault-free report keeps the
+    /// historical byte-exact format, a recovered one names every steal,
+    /// contained panic, abandonment, wait and checkpoint retry.
+    #[test]
+    fn summary_reports_recovery_only_when_faults_were_survived() {
+        let clean = SweepReport::default();
+        assert!(!clean.recovery.any());
+        assert!(!clean.summary().contains("recovery"), "{}", clean.summary());
+
+        let r = SweepReport {
+            recovery: RecoveryStats { steals: 2, panics: 1, abandoned: 1, waits: 3, retries: 4 },
+            ..Default::default()
+        };
+        assert!(r.recovery.any());
+        let s = r.summary();
+        assert!(
+            s.contains("recovery 2 steals, 1 panics, 1 abandoned, 3 waits, 4 ckpt retries"),
+            "{s}"
+        );
+
+        // Folding shard counters sums field-wise.
+        let mut sum = RecoveryStats::default();
+        sum.add(&r.recovery);
+        sum.add(&RecoveryStats { steals: 1, ..Default::default() });
+        assert_eq!(sum.steals, 3);
+        assert_eq!(sum.retries, 4);
+
+        // And the JSON view carries the same numbers.
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let rec = j.get("recovery").unwrap();
+        assert_eq!(rec.get("steals").unwrap().as_usize(), Some(2));
+        assert_eq!(rec.get("waits").unwrap().as_usize(), Some(3));
     }
 
     /// Tentpole: profiled frontier points grow a `bottleneck` verdict line;

@@ -41,7 +41,7 @@ use super::job::{
     run_job_cached_with, run_jobs_cached_batch_with, JobResult, JobSpec, JobTiming, Workload,
     WorkloadSuite,
 };
-use super::pool::{run_all_with, run_fifo};
+use super::pool::{run_all_with, run_fifo_jobs};
 use super::report::{geomean, SweepAccumulator, SweepPoint, SweepReport, WorkloadPerf};
 
 /// Default mapper seed for sweeps submitted without an explicit one.
@@ -227,20 +227,25 @@ impl SweepEngine {
         // requirement once, not once per point inside the workers.
         let smem_words = suite.required_smem_words();
         if self.batch <= 1 {
-            let run = run_fifo(points, self.workers, move |(label, params)| {
-                // A panicking point must land in `failures`, not take down
-                // the sweep (same containment as `run_all_with`).
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    evaluate_point(&cache, label.clone(), params, &suite, smem_words, seed, &opts)
-                }));
-                out.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
+            // A panicking point must land in `failures`, not take down the
+            // sweep: `run_fifo_jobs` contains the panic at the pool level
+            // and hands it back as that point's error slot.
+            let labels: Vec<String> = points.iter().map(|(l, _)| l.clone()).collect();
+            let run = run_fifo_jobs(points, self.workers, move |(label, params)| {
+                evaluate_point(&cache, label, params, &suite, smem_words, seed, &opts)
             });
             run.results
+                .into_iter()
+                .zip(labels)
+                .map(|(slot, label)| {
+                    slot.unwrap_or_else(|_| Err((label, "panicked in a sweep worker".to_string())))
+                })
+                .collect()
         } else {
             // Chunk consecutive points: each worker steps a chunk's task
             // cursors in lockstep, sharing one arena per (phase, DFG).
-            // Flattening `run_fifo`'s submission-order chunk results keeps
-            // the report in grid order, batched or not.
+            // Flattening `run_fifo_jobs`' submission-order chunk results
+            // keeps the report in grid order, batched or not.
             let mut chunks = Vec::with_capacity(points.len().div_ceil(self.batch));
             let mut iter = points.into_iter();
             loop {
@@ -251,19 +256,25 @@ impl SweepEngine {
                 }
                 chunks.push(chunk);
             }
-            let run = run_fifo(chunks, self.workers, move |chunk| {
-                let labels: Vec<String> = chunk.iter().map(|(l, _)| l.clone()).collect();
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    evaluate_chunk(&cache, chunk, &suite, smem_words, seed, &opts)
-                }));
-                out.unwrap_or_else(|_| {
-                    labels
-                        .into_iter()
-                        .map(|l| Err((l, "panicked in a sweep worker".to_string())))
-                        .collect()
-                })
+            let chunk_labels: Vec<Vec<String>> = chunks
+                .iter()
+                .map(|c| c.iter().map(|(l, _)| l.clone()).collect())
+                .collect();
+            let run = run_fifo_jobs(chunks, self.workers, move |chunk| {
+                evaluate_chunk(&cache, chunk, &suite, smem_words, seed, &opts)
             });
-            run.results.into_iter().flatten().collect()
+            run.results
+                .into_iter()
+                .zip(chunk_labels)
+                .flat_map(|(slot, labels)| {
+                    slot.unwrap_or_else(|_| {
+                        labels
+                            .into_iter()
+                            .map(|l| Err((l, "panicked in a sweep worker".to_string())))
+                            .collect()
+                    })
+                })
+                .collect()
         }
     }
 }

@@ -17,7 +17,7 @@ use windmill::coordinator::{
 use windmill::netlist::{verilog, NetlistStats};
 use windmill::plugins;
 use windmill::sim::SimOptions;
-use windmill::store::{DiskStore, SweepSession};
+use windmill::store::{DiskStore, FaultPlan, SweepSession, DEFAULT_LEASE_TTL};
 use windmill::util::{table, Table};
 
 /// Activity-timeline sampling stride (cycles per window) used by
@@ -38,6 +38,8 @@ USAGE:
         against the CPU/GPU baseline models.
     windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
                    [--batch N] [--store DIR] [--shard I/N] [--expect-warm]
+                   [--lease [--ranges N] [--worker-id W] [--ttl T]
+                    [--chaos SEED]]
                    [--drive halving|evolve [--waves K]] [--json]
                    [--profile [--trace FILE]]
         Design-space sweep (PEA size x topology grid) of a workload — or a
@@ -52,6 +54,26 @@ USAGE:
                       re-run in a fresh process recomputes nothing
         --shard I/N   evaluate the I-th of N contiguous grid shards and
                       save the partial report under DIR/partials/
+        --lease       crash-tolerant work-stealing mode (needs --store):
+                      claim point ranges via lease records in
+                      DIR/manifest.jsonl, checkpoint one partial per lease,
+                      steal leases whose holders stopped heartbeating, and
+                      print the merged report once every range completes.
+                      Any number of workers may run this concurrently
+                      against one store; killed workers only delay the
+                      sweep, and the merged frontier stays bit-identical
+                      to the unsharded run.
+        --ranges N    partition the grid into N lease ranges (default
+                      2 x workers)
+        --worker-id W this worker's lease identity (default: process id)
+        --ttl T       lease expiry age in epochs (default 8)
+        --chaos SEED  inject a deterministic fault schedule (torn/failed/
+                      transient store writes, one contained worker panic,
+                      one abandoned lease) derived from SEED and
+                      --worker-id; re-running with the same seed and
+                      worker id replays the same faults. Recovery is
+                      reported, never silent — see the summary's
+                      `recovery` segment and the stderr counters.
         --expect-warm exit nonzero unless the sweep re-entered simulate()
                       zero times (CI warm-start assertion)
         --drive STRAT search the grid instead of exhausting it: a driver
@@ -237,6 +259,53 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     if shard.is_some() && store_dir.is_none() {
         return Err("--shard needs --store (partials are saved under the store)".into());
     }
+    let lease = args.iter().any(|a| a == "--lease");
+    let worker_id = match arg_value(args, "--worker-id") {
+        Some(s) => s.parse::<u64>().map_err(|_| format!("bad --worker-id `{s}`"))?,
+        None => u64::from(std::process::id()),
+    };
+    let lease_ranges = match arg_value(args, "--ranges") {
+        Some(s) => {
+            let n: usize = s.parse().map_err(|_| format!("bad --ranges `{s}`"))?;
+            if n == 0 {
+                return Err("--ranges must be >= 1".into());
+            }
+            n
+        }
+        None => workers.max(1) * 2,
+    };
+    let lease_ttl = match arg_value(args, "--ttl") {
+        Some(s) => {
+            let t: u64 = s.parse().map_err(|_| format!("bad --ttl `{s}`"))?;
+            if t == 0 {
+                return Err("--ttl must be >= 1".into());
+            }
+            t
+        }
+        None => DEFAULT_LEASE_TTL,
+    };
+    let chaos: Option<u64> = match arg_value(args, "--chaos") {
+        Some(s) => Some(s.parse().map_err(|_| format!("bad --chaos `{s}`"))?),
+        None => None,
+    };
+    if lease && store_dir.is_none() {
+        return Err("--lease needs --store (leases live in the store manifest)".into());
+    }
+    if lease && shard.is_some() {
+        return Err("--lease replaces fixed --shard assignment; use one or the other".into());
+    }
+    if !lease {
+        for (flag, given) in [
+            ("--chaos", chaos.is_some()),
+            ("--ranges", arg_value(args, "--ranges").is_some()),
+            ("--ttl", arg_value(args, "--ttl").is_some()),
+            ("--worker-id", arg_value(args, "--worker-id").is_some()),
+        ] {
+            if given {
+                return Err(format!("{flag} only applies with --lease"));
+            }
+        }
+    }
     let drive = match arg_value(args, "--drive") {
         Some(s) if s == "halving" || s == "evolve" => Some(s),
         Some(s) => return Err(format!("bad --drive `{s}` (want halving|evolve)")),
@@ -248,6 +317,9 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     };
     if drive.is_some() && shard.is_some() {
         return Err("--drive searches adaptively; it cannot be sharded with --shard".into());
+    }
+    if drive.is_some() && lease {
+        return Err("--drive searches adaptively; it cannot be leased with --lease".into());
     }
     if waves.is_some() && drive.is_none() {
         return Err("--waves only applies with --drive".into());
@@ -266,7 +338,16 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     }
 
     let store = match &store_dir {
-        Some(dir) => Some(Arc::new(DiskStore::open(dir).map_err(|e| e.to_string())?)),
+        Some(dir) => {
+            let mut s = DiskStore::open(dir).map_err(|e| e.to_string())?;
+            if let Some(seed) = chaos {
+                // Scope the fault schedule by worker id so concurrent
+                // chaos workers crash in different places; the same
+                // (seed, worker id) pair replays the same faults.
+                s = s.with_faults(Arc::new(FaultPlan::from_chaos_seed(seed ^ worker_id)));
+            }
+            Some(Arc::new(s))
+        }
         None => None,
     };
     let mut engine = match &store {
@@ -302,6 +383,31 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
         let report = engine.drive(&grid, &suite, seed, driver.as_mut());
         let title = format!("adaptive sweep of `{}` (`{strat}` driver)", suite.name());
         (report, title)
+    } else if lease {
+        let (report, run) = SweepSession::run_leased(
+            &engine, &grid, &suite, seed, worker_id, lease_ranges, lease_ttl,
+        )
+        .map_err(|e| e.to_string())?;
+        eprintln!(
+            "lease worker {:016x}: {}/{} leases completed, {} stolen, {} panics contained, \
+             {} abandoned, {} waits, {} ckpt retries{}",
+            run.worker,
+            run.completed,
+            run.ranges,
+            run.steals,
+            run.panics,
+            run.abandoned,
+            run.waits,
+            run.checkpoint_retries,
+            if run.corrupt_lease_lines > 0 {
+                format!(", {} corrupt lease lines skipped", run.corrupt_lease_lines)
+            } else {
+                String::new()
+            },
+        );
+        let title =
+            format!("leased sweep of `{}` ({lease_ranges} ranges)", suite.name());
+        (report, title)
     } else {
         match shard {
             Some((i, n)) => {
@@ -333,8 +439,15 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     }
     if let Some(s) = &store {
         let ds = s.stats();
+        // The retry segment appears only when the backoff ladder actually
+        // ran, so fault-free output keeps the historical format.
+        let retried = if ds.retries > 0 {
+            format!(", {} retries ({:.1} ms backoff)", ds.retries, ds.backoff_ns as f64 / 1e6)
+        } else {
+            String::new()
+        };
         eprintln!(
-            "store {}: {} hits, {} writes, {} corrupt, {} write errors",
+            "store {}: {} hits, {} writes, {} corrupt, {} write errors{retried}",
             s.root().display(),
             ds.hits,
             ds.writes,

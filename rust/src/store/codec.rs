@@ -35,7 +35,7 @@ use crate::compiler::{
     CompilePass, ConfigImage, Coord, Dfg, Mapping, Routes, Schedule, StageNanos,
 };
 use crate::coordinator::cache::{CacheStats, ElabArtifacts, PassCounts};
-use crate::coordinator::report::{PpaRow, SweepPoint, SweepReport, WorkloadPerf};
+use crate::coordinator::report::{PpaRow, RecoveryStats, SweepPoint, SweepReport, WorkloadPerf};
 use crate::coordinator::JobTiming;
 use crate::diag::error::DiagError;
 use crate::sim::engine::SimResult;
@@ -68,7 +68,12 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 /// (`bank_requests`/`bank_grants`/`bank_conflicts`/`bank_peaks`) and an
 /// optional [`TelemetrySummary`]; `SweepPoint` carries the same optional
 /// summary, so profiled shard partials merge without losing attribution.
-pub const VERSION: u16 = 5;
+///
+/// v6 (PR 9): `SweepReport` carries [`RecoveryStats`] — the crash-recovery
+/// counters (steals/panics/abandoned/waits/checkpoint retries) a leased
+/// sweep worker survived — so merging lease checkpoints keeps every fault
+/// visible in the final report.
+pub const VERSION: u16 = 6;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -1234,6 +1239,11 @@ pub fn encode_sweep_partial(p: &SweepPartial) -> Vec<u8> {
     enc_timing(&mut e, &r.timing);
     e.u64(r.wall_ns);
     e.usize(r.grid_size);
+    e.u64(r.recovery.steals)
+        .u64(r.recovery.panics)
+        .u64(r.recovery.abandoned)
+        .u64(r.recovery.waits)
+        .u64(r.recovery.retries);
     e.finish()
 }
 
@@ -1265,6 +1275,13 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
     let timing = dec_timing(&mut d)?;
     let wall_ns = d.u64()?;
     let grid_size = d.usize()?;
+    let recovery = RecoveryStats {
+        steals: d.u64()?,
+        panics: d.u64()?,
+        abandoned: d.u64()?,
+        waits: d.u64()?,
+        retries: d.u64()?,
+    };
     d.close()?;
     Ok(SweepPartial {
         shard,
@@ -1282,6 +1299,7 @@ pub fn decode_sweep_partial(bytes: &[u8]) -> Result<SweepPartial, DiagError> {
             timing,
             wall_ns,
             grid_size,
+            recovery,
         },
     })
 }
@@ -1502,11 +1520,24 @@ mod tests {
             suite: "s".into(),
             suite_hash: 9,
             seed: 42,
-            report: SweepReport { points: vec![point], ..Default::default() },
+            report: SweepReport {
+                points: vec![point],
+                // v6: crash-recovery counters ride along in the partial —
+                // full-width u64s, like every counter in the codec.
+                recovery: RecoveryStats {
+                    steals: 1,
+                    panics: 2,
+                    abandoned: 3,
+                    waits: u64::MAX - 5,
+                    retries: 4,
+                },
+                ..Default::default()
+            },
         };
         let pb = encode_sweep_partial(&partial);
         let pback = decode_sweep_partial(&pb).unwrap();
         assert_eq!(pback.report.points[0].telemetry.as_ref(), Some(&t));
+        assert_eq!(pback.report.recovery, partial.report.recovery);
         assert_eq!(encode_sweep_partial(&pback), pb, "canonical re-encode");
 
         // A corrupt presence byte is an error, not a panic.

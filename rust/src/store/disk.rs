@@ -25,12 +25,20 @@
 //!   corrupted or stale-version file is *skipped* (counted in
 //!   [`DiskStats::corrupt`]) and the caller recomputes — corruption can
 //!   cost a warm start, never a sweep.
-//! * Failures to persist are recorded ([`DiskStats::write_errors`]) and
-//!   otherwise ignored: the store is an accelerator, not a dependency.
+//! * Failures to persist are **retried** under a capped exponential
+//!   backoff ladder ([`DiskStats::retries`] / [`DiskStats::backoff_ns`])
+//!   before being recorded ([`DiskStats::write_errors`]) and otherwise
+//!   ignored: the store is an accelerator, not a dependency.
+//! * A handle can carry an injected [`FaultPlan`]
+//!   ([`DiskStore::with_faults`]): every atomic write then consults the
+//!   plan's deterministic schedule of torn writes, rename failures and
+//!   transient I/O errors — the chaos harness behind
+//!   `windmill sweep --lease --chaos SEED`. Without a plan the hook is a
+//!   single `None` check.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::compiler::{CompileKey, Coord, Mapping, Routes, Schedule, StageNanos};
 use crate::coordinator::cache::ElabArtifacts;
@@ -38,6 +46,7 @@ use crate::diag::error::DiagError;
 use crate::sim::engine::SimResult;
 
 use super::codec;
+use super::faults::{FaultPlan, WriteFault};
 
 /// Traffic counters of one [`DiskStore`] handle (per-instance, not global
 /// to the directory).
@@ -51,8 +60,28 @@ pub struct DiskStats {
     pub writes: u64,
     /// Entries present but skipped (truncated / corrupted / stale version).
     pub corrupt: u64,
-    /// Persist attempts that failed at the filesystem level.
+    /// Persist attempts that failed at the filesystem level even after the
+    /// retry ladder was exhausted.
     pub write_errors: u64,
+    /// Write attempts re-issued after a failed attempt (each rung of the
+    /// capped exponential-backoff ladder counts once).
+    pub retries: u64,
+    /// Backoff nanoseconds accrued across those retries — *virtual* under
+    /// an injected [`FaultPlan`] (tests never stall), a real
+    /// `thread::sleep` otherwise.
+    pub backoff_ns: u64,
+}
+
+/// Write-retry ladder: up to this many attempts per entry, backing off
+/// `1ms, 2ms, 4ms` (capped) between rungs. Transient filesystem hiccups
+/// heal within the ladder; anything still failing afterwards is treated as
+/// permanent and surrendered to the caller's degrade path.
+const MAX_WRITE_ATTEMPTS: u32 = 4;
+const BACKOFF_BASE_NS: u64 = 1_000_000;
+const BACKOFF_CAP_NS: u64 = 8_000_000;
+
+fn backoff_after(retry: u32) -> u64 {
+    (BACKOFF_BASE_NS << retry.min(8)).min(BACKOFF_CAP_NS)
 }
 
 /// Minimum age before [`DiskStore::gc`] treats a `.tmp-*` file as a dead
@@ -74,6 +103,9 @@ static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 pub struct DiskStore {
     root: PathBuf,
     stats: Mutex<DiskStats>,
+    /// Injected fault schedule (chaos testing); `None` in production —
+    /// the write path then costs one pointer check.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl DiskStore {
@@ -83,7 +115,19 @@ impl DiskStore {
         std::fs::create_dir_all(&root).map_err(|e| {
             DiagError::Store(format!("cannot create store dir {}: {e}", root.display()))
         })?;
-        Ok(DiskStore { root, stats: Mutex::new(DiskStats::default()) })
+        Ok(DiskStore { root, stats: Mutex::new(DiskStats::default()), faults: None })
+    }
+
+    /// Install a deterministic fault schedule on this handle: every
+    /// subsequent atomic write consults the plan (`--chaos SEED`).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> DiskStore {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The injected fault schedule, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
     }
 
     pub fn root(&self) -> &Path {
@@ -152,10 +196,49 @@ impl DiskStore {
     /// temp name unique per process *and* per call). Shared with the
     /// sweep-session partial writer.
     pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        Self::write_atomic_with(None, path, bytes)
+    }
+
+    /// [`DiskStore::write_atomic`] with an optional injected fault drawn
+    /// from `faults` for this write:
+    ///
+    /// * `Torn` — only a prefix of the payload reaches the temp file and
+    ///   the "writer dies" before the rename: the error surfaces, the
+    ///   truncated temp stays behind as litter (gc's problem, never a
+    ///   reader's — the destination was not touched).
+    /// * `Rename` — the rename step fails; the temp is cleaned up.
+    /// * `Transient` — the attempt fails before any I/O and heals on a
+    ///   retry (the backoff ladder's case).
+    pub fn write_atomic_with(
+        faults: Option<&FaultPlan>,
+        path: &Path,
+        bytes: &[u8],
+    ) -> std::io::Result<()> {
+        let fault = faults.and_then(|p| p.next_write_fault());
+        if let Some(WriteFault::Transient) = fault {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Interrupted,
+                "chaos: transient I/O error",
+            ));
+        }
         let dir = path.parent().ok_or(std::io::ErrorKind::InvalidInput)?;
         std::fs::create_dir_all(dir)?;
         let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
         let tmp = dir.join(format!(".tmp-{}-{seq}", std::process::id()));
+        match fault {
+            Some(WriteFault::Torn) => {
+                std::fs::write(&tmp, &bytes[..bytes.len() / 2])?;
+                return Err(std::io::Error::other(
+                    "chaos: torn write (writer died before rename)",
+                ));
+            }
+            Some(WriteFault::Rename) => {
+                std::fs::write(&tmp, bytes)?;
+                let _ = std::fs::remove_file(&tmp);
+                return Err(std::io::Error::other("chaos: rename failed"));
+            }
+            _ => {}
+        }
         std::fs::write(&tmp, bytes)?;
         match std::fs::rename(&tmp, path) {
             Ok(()) => Ok(()),
@@ -166,9 +249,44 @@ impl DiskStore {
         }
     }
 
+    /// Atomic write through this handle: consults the injected fault
+    /// schedule and retries failed attempts under the capped
+    /// exponential-backoff ladder (retries and backoff time land in
+    /// [`DiskStats`]). Returns the final error only once the ladder is
+    /// exhausted — the caller decides whether that is fatal (a lease
+    /// checkpoint re-verifies and re-saves) or ignorable (artifact tiers).
+    pub fn write_atomic_guarded(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..MAX_WRITE_ATTEMPTS {
+            match Self::write_atomic_with(self.faults.as_deref(), path, bytes) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < MAX_WRITE_ATTEMPTS {
+                        let ns = backoff_after(attempt);
+                        {
+                            let mut s = self.stats.lock().unwrap();
+                            s.retries += 1;
+                            s.backoff_ns += ns;
+                        }
+                        match &self.faults {
+                            // Chaos runs wait virtually: deterministic and
+                            // instant, but still counted above.
+                            Some(p) => {
+                                p.sleep(ns);
+                            }
+                            None => std::thread::sleep(std::time::Duration::from_nanos(ns)),
+                        }
+                    }
+                }
+            }
+        }
+        Err(last.expect("MAX_WRITE_ATTEMPTS > 0"))
+    }
+
     fn put(&self, key: &CompileKey, bytes: Vec<u8>) {
         // I/O outside the stats lock: workers persist concurrently.
-        let wrote = Self::write_atomic(&self.entry_path(key), &bytes).is_ok();
+        let wrote = self.write_atomic_guarded(&self.entry_path(key), &bytes).is_ok();
         let mut s = self.stats.lock().unwrap();
         if wrote {
             s.writes += 1;
@@ -584,6 +702,44 @@ mod tests {
         assert_eq!(store.entry_count(), 0);
         store.store_mapping(&CompileKey::mapping(9, &dfg, 1), &mapping, &ns);
         assert!(store.load_mapping(&CompileKey::mapping(9, &dfg, 1)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retry_ladder_absorbs_injected_faults_with_virtual_backoff() {
+        let (dir, store) = tmp_store("retry");
+        let plan = std::sync::Arc::new(FaultPlan::write_faults_only(3));
+        let store = store.with_faults(plan.clone());
+        let machine = plugins::elaborate(presets::standard()).unwrap().artifact;
+        let (dfg, _) = crate::workloads::linalg::saxpy(16, 1.0);
+        let (mapping, ns) = compile_timed(dfg.clone(), &machine, 1).unwrap();
+
+        // Enough writes that the seeded schedule (70/70/160 per mille)
+        // provably injects faults; the 4-attempt ladder must absorb them.
+        let total = 64u64;
+        for arch in 0..total {
+            store.store_mapping(&CompileKey::mapping(arch, &dfg, 1), &mapping, &ns);
+        }
+        let s = store.stats();
+        assert_eq!(s.writes + s.write_errors, total, "{s:?}");
+        assert!(s.retries > 0, "the chaos schedule must have injected faults: {s:?}");
+        assert!(s.retries <= 3 * total, "ladder is capped at 3 retries per write: {s:?}");
+        assert_eq!(
+            s.backoff_ns,
+            plan.injected_sleep_ns(),
+            "chaos backoff is virtual and fully accounted: {s:?}"
+        );
+
+        // Whatever the ladder persisted reads back clean — torn attempts
+        // never reach the destination file.
+        let mut hits = 0;
+        for arch in 0..total {
+            if store.load_mapping(&CompileKey::mapping(arch, &dfg, 1)).is_some() {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, s.writes, "every reported write is loadable");
+        assert_eq!(store.stats().corrupt, 0, "no torn bytes behind a rename");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,252 @@
+//! Deterministic fault injection for the store and the leased sweep loop.
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of injected failures: given the
+//! same chaos seed, the same sequence of store writes and lease
+//! acquisitions draws exactly the same faults, so a chaos run is fully
+//! reproducible from one `u64` (`windmill sweep --lease --chaos SEED`).
+//! Five fault families are modeled, matching the crash modes a fleet of
+//! sweep workers actually exhibits:
+//!
+//! * **Torn tmp-file write** — the temp file lands truncated and the
+//!   rename "crashes" before completing: the caller sees an I/O error and
+//!   a litter file stays behind (what a power cut mid-`write` leaves).
+//! * **Rename failure** — `fs::rename` itself fails; the temp file is
+//!   cleaned up but the destination was never produced.
+//! * **Transient I/O error** — the write fails outright for a bounded
+//!   number of attempts, then heals (NFS hiccup, EINTR, disk-full race);
+//!   the retry ladder in [`crate::store::DiskStore`] absorbs these under
+//!   capped exponential backoff.
+//! * **Worker panic at point k** — the lease loop panics while holding a
+//!   lease whose range covers grid point `k`; containment must turn it
+//!   into an abandoned lease, never a process abort.
+//! * **Stale-lease abandonment** — a worker silently walks away from its
+//!   n-th acquired lease without renewing or completing it, leaving an
+//!   expiring lease for another worker (or a later self) to steal.
+//!
+//! Everything is counter-derived: no wall clocks, no global RNG state.
+//! When no plan is installed the hooks are a `None` check — the
+//! `--chaos`-off byte-diff guard in CI pins that they are invisible when
+//! disabled.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Rng;
+
+/// Per-mille fault rates drawn for each store write. Chosen so a 4-rung
+/// retry ladder converges with overwhelming probability while a short
+/// chaos run still sees every family fire.
+const TORN_PER_MILLE: u64 = 70;
+const RENAME_PER_MILLE: u64 = 70;
+const TRANSIENT_PER_MILLE: u64 = 160;
+
+/// What a [`FaultPlan`] injects into one atomic store write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Write only a prefix of the payload to the temp file, then fail as
+    /// if the process died before the rename (litter stays behind).
+    Torn,
+    /// Fail the rename step; the temp file is removed, the destination
+    /// never appears.
+    Rename,
+    /// Fail the whole attempt with a transient error that heals on retry.
+    Transient,
+}
+
+/// Deterministic, seeded fault schedule. Cheap to share (`Arc`), safe to
+/// consult from every worker thread: the only state is atomic counters.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Grid-point index at which the lease loop injects a worker panic
+    /// (consumed once per process).
+    panic_point: Option<u64>,
+    /// Ordinal (1-based) of the acquired lease this worker abandons
+    /// without completing (consumed once per process).
+    abandon_lease: Option<u64>,
+    write_seq: AtomicU64,
+    panic_armed: AtomicU64,
+    abandon_armed: AtomicU64,
+    injected_sleep_ns: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Derive the full schedule from one chaos seed. The panic point and
+    /// the abandoned-lease ordinal come from the seed too, so two workers
+    /// given *different* worker-scoped seeds crash in different places.
+    pub fn from_chaos_seed(seed: u64) -> FaultPlan {
+        let mut rng = Rng::scoped(seed, "chaos-plan");
+        // Small moduli keep the crash early enough that short grids and
+        // short lease sessions actually exercise it.
+        let panic_point = Some(rng.below(12));
+        let abandon_lease = Some(1 + rng.below(3));
+        FaultPlan {
+            seed,
+            panic_point,
+            abandon_lease,
+            write_seq: AtomicU64::new(0),
+            panic_armed: AtomicU64::new(1),
+            abandon_armed: AtomicU64::new(1),
+            injected_sleep_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// A plan that injects only write-path faults (no panic, no
+    /// abandonment) — what the disk-layer unit tests use.
+    pub fn write_faults_only(seed: u64) -> FaultPlan {
+        FaultPlan { panic_point: None, abandon_lease: None, ..FaultPlan::from_chaos_seed(seed) }
+    }
+
+    /// The chaos seed this plan was derived from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The grid-point index the panic hook is armed for (None once
+    /// disarmed by construction — not consumed-state; see
+    /// [`FaultPlan::take_panic_for_range`]).
+    pub fn panic_point(&self) -> Option<u64> {
+        self.panic_point
+    }
+
+    /// The 1-based acquired-lease ordinal the abandonment hook is armed
+    /// for.
+    pub fn abandon_ordinal(&self) -> Option<u64> {
+        self.abandon_lease
+    }
+
+    /// Draw the fault (if any) for the next atomic store write. Each call
+    /// consumes one position in the write sequence; the draw depends only
+    /// on `(seed, position)`.
+    pub fn next_write_fault(&self) -> Option<WriteFault> {
+        let seq = self.write_seq.fetch_add(1, Ordering::Relaxed);
+        self.write_fault_at(seq)
+    }
+
+    /// The fault drawn at a given write-sequence position (test hook; the
+    /// live path is [`FaultPlan::next_write_fault`]).
+    pub fn write_fault_at(&self, seq: u64) -> Option<WriteFault> {
+        let mut rng = Rng::scoped(self.seed ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15), "chaos-write");
+        let roll = rng.below(1000);
+        if roll < TORN_PER_MILLE {
+            Some(WriteFault::Torn)
+        } else if roll < TORN_PER_MILLE + RENAME_PER_MILLE {
+            Some(WriteFault::Rename)
+        } else if roll < TORN_PER_MILLE + RENAME_PER_MILLE + TRANSIENT_PER_MILLE {
+            Some(WriteFault::Transient)
+        } else {
+            None
+        }
+    }
+
+    /// True exactly once, the first time the lease loop is about to
+    /// evaluate a range containing grid point `lo..hi ∋ panic_point`.
+    pub fn take_panic_for_range(&self, lo: usize, hi: usize) -> Option<usize> {
+        let k = self.panic_point?;
+        if (lo as u64..hi as u64).contains(&k)
+            && self.panic_armed.swap(0, Ordering::Relaxed) == 1
+        {
+            Some(k as usize)
+        } else {
+            None
+        }
+    }
+
+    /// True exactly once, when the worker acquires its `abandon_lease`-th
+    /// lease: the caller walks away without renewing or completing it.
+    pub fn take_abandon(&self, acquired_ordinal: u64) -> bool {
+        match self.abandon_lease {
+            Some(n) if acquired_ordinal == n => {
+                self.abandon_armed.swap(0, Ordering::Relaxed) == 1
+            }
+            _ => false,
+        }
+    }
+
+    /// Injectable backoff sleep: under a plan the wait is *virtual* — the
+    /// nanoseconds are recorded here instead of stalling the test — so
+    /// chaos runs are deterministic and fast. Returns `false` to tell the
+    /// caller the real `thread::sleep` was skipped.
+    pub fn sleep(&self, ns: u64) -> bool {
+        self.injected_sleep_ns.fetch_add(ns, Ordering::Relaxed);
+        false
+    }
+
+    /// Total virtual backoff accumulated through [`FaultPlan::sleep`].
+    pub fn injected_sleep_ns(&self) -> u64 {
+        self.injected_sleep_ns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_in_the_seed() {
+        let a = FaultPlan::from_chaos_seed(7);
+        let b = FaultPlan::from_chaos_seed(7);
+        for seq in 0..256 {
+            assert_eq!(a.write_fault_at(seq), b.write_fault_at(seq), "seq {seq}");
+        }
+        let c = FaultPlan::from_chaos_seed(8);
+        let differs = (0..256).any(|s| a.write_fault_at(s) != c.write_fault_at(s));
+        assert!(differs, "different seeds must draw different schedules");
+    }
+
+    #[test]
+    fn next_write_fault_walks_the_sequence() {
+        let p = FaultPlan::write_faults_only(11);
+        let drawn: Vec<_> = (0..64).map(|_| p.next_write_fault()).collect();
+        let replay: Vec<_> = (0..64).map(|s| p.write_fault_at(s)).collect();
+        assert_eq!(drawn, replay);
+    }
+
+    #[test]
+    fn every_fault_family_fires_within_a_short_run() {
+        let p = FaultPlan::write_faults_only(3);
+        let mut torn = 0;
+        let mut rename = 0;
+        let mut transient = 0;
+        let mut clean = 0;
+        for s in 0..400 {
+            match p.write_fault_at(s) {
+                Some(WriteFault::Torn) => torn += 1,
+                Some(WriteFault::Rename) => rename += 1,
+                Some(WriteFault::Transient) => transient += 1,
+                None => clean += 1,
+            }
+        }
+        assert!(torn > 0 && rename > 0 && transient > 0, "{torn}/{rename}/{transient}");
+        // Faults must stay the exception: a retry ladder of 4 attempts has
+        // to converge, so most draws are clean.
+        assert!(clean > 250, "clean draws: {clean}");
+    }
+
+    #[test]
+    fn panic_and_abandon_fire_exactly_once() {
+        let p = FaultPlan::from_chaos_seed(5);
+        let k = p.panic_point.unwrap() as usize;
+        assert_eq!(p.take_panic_for_range(0, k + 1), Some(k));
+        assert_eq!(p.take_panic_for_range(0, k + 1), None, "consumed");
+        let n = p.abandon_lease.unwrap();
+        assert!(!p.take_abandon(n + 1), "wrong ordinal never fires");
+        assert!(p.take_abandon(n));
+        assert!(!p.take_abandon(n), "consumed");
+    }
+
+    #[test]
+    fn write_faults_only_disarms_the_crash_hooks() {
+        let p = FaultPlan::write_faults_only(9);
+        assert_eq!(p.take_panic_for_range(0, usize::MAX), None);
+        assert!(!p.take_abandon(1));
+        assert_eq!(p.seed(), 9);
+    }
+
+    #[test]
+    fn injected_sleep_is_virtual_and_counted() {
+        let p = FaultPlan::write_faults_only(1);
+        assert!(!p.sleep(1_000_000));
+        assert!(!p.sleep(2_000_000));
+        assert_eq!(p.injected_sleep_ns(), 3_000_000);
+    }
+}

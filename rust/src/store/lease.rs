@@ -1,0 +1,427 @@
+//! Work-stealing shard leases over `manifest.jsonl`.
+//!
+//! A *lease* grants one worker one contiguous point range of a sweep
+//! session. Leases are append-only `"kind":"lease"` lines in the same
+//! manifest the shard records live in ([`super::SweepSession`]'s
+//! `line_kind` dispatch already ignores typed records it does not know, so
+//! old readers skip them silently):
+//!
+//! ```text
+//! {"kind":"lease","suite_hash":"…","grid":"…","seed":"…",
+//!  "range":2,"of":4,"worker":"00000000000000a1","epoch":7,"state":"acquire"}
+//! ```
+//!
+//! **Epochs, not wall clocks.** Every appended lease line carries
+//! `max-epoch-seen + 1`, a counter derived purely from manifest content.
+//! A lease's *age* is `current_epoch - last_heartbeat_epoch`; it expires
+//! at [`DEFAULT_LEASE_TTL`]. A blocked worker advances the clock itself by
+//! appending `"state":"wait"` lines, so a crashed holder's lease ages out
+//! after a bounded number of appends — deterministically, with no sleeps
+//! and no clock skew between workers.
+//!
+//! **Arbitration is first-claim-wins in file order.** The holder of a
+//! range is resolved by replaying its lease lines: an `acquire` only takes
+//! effect if the range was free or the previous holder was already expired
+//! *at that acquire's epoch*. Appends are serialized by the filesystem
+//! (`O_APPEND`), every worker re-reads after appending its claim, and all
+//! of them replay the same file — so they agree on the single winner.
+//!
+//! Corrupt lease lines are *skipped and counted* ([`LeaseBoard::corrupt`]),
+//! never fatal: a torn manifest append costs one worker one claim, not the
+//! session.
+
+use std::path::Path;
+
+use crate::diag::error::DiagError;
+use crate::util::json::Json;
+
+/// Lease age (in epochs) at which a holder is presumed dead and its range
+/// becomes stealable. Small enough that a blocked worker waits out a
+/// crashed sibling in a handful of appends; large enough that a live
+/// worker completing one range (acquire + renew + complete = 3 epochs,
+/// plus siblings' traffic) cannot be stolen from mid-evaluation in a
+/// two-worker session.
+pub const DEFAULT_LEASE_TTL: u64 = 8;
+
+/// State carried by one lease line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    /// Claim a free (or expired) range.
+    Acquire,
+    /// Heartbeat: the holder is alive and still working the range.
+    Renew,
+    /// The range's checkpoint is saved and its shard line appended.
+    Complete,
+    /// No-op clock tick from a blocked worker waiting out an expiry.
+    Wait,
+}
+
+impl LeaseState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeaseState::Acquire => "acquire",
+            LeaseState::Renew => "renew",
+            LeaseState::Complete => "complete",
+            LeaseState::Wait => "wait",
+        }
+    }
+
+    fn parse(s: &str) -> Option<LeaseState> {
+        match s {
+            "acquire" => Some(LeaseState::Acquire),
+            "renew" => Some(LeaseState::Renew),
+            "complete" => Some(LeaseState::Complete),
+            "wait" => Some(LeaseState::Wait),
+            _ => None,
+        }
+    }
+}
+
+/// One `"kind":"lease"` manifest line. Hashes, seeds and worker ids are
+/// 16-digit hex strings (the manifest's u64 convention — JSON numbers
+/// truncate above 2^53); `range`/`of`/`epoch` are small counters and stay
+/// plain integers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseEntry {
+    pub suite_hash: u64,
+    pub grid_hash: u64,
+    pub seed: u64,
+    /// Point-range index within the session (the checkpoint's shard id).
+    pub range: u32,
+    /// Total ranges the session is partitioned into.
+    pub of: u32,
+    pub worker: u64,
+    pub epoch: u64,
+    pub state: LeaseState,
+}
+
+impl LeaseEntry {
+    /// The manifest line (newline-terminated).
+    pub fn to_line(&self) -> String {
+        format!(
+            "{{\"kind\":\"lease\",\"suite_hash\":\"{:016x}\",\"grid\":\"{:016x}\",\
+             \"seed\":\"{:016x}\",\"range\":{},\"of\":{},\"worker\":\"{:016x}\",\
+             \"epoch\":{},\"state\":{}}}\n",
+            self.suite_hash,
+            self.grid_hash,
+            self.seed,
+            self.range,
+            self.of,
+            self.worker,
+            self.epoch,
+            Json::Str(self.state.name().to_string()),
+        )
+    }
+
+    /// Parse one lease line; `None` for anything that is not a
+    /// well-formed lease record (the caller counts those as corrupt when
+    /// the line *claimed* to be a lease).
+    pub fn parse(line: &str) -> Option<LeaseEntry> {
+        let j = Json::parse(line).ok()?;
+        if j.get("kind")?.as_str()? != "lease" {
+            return None;
+        }
+        let hex = |key: &str| u64::from_str_radix(j.get(key)?.as_str()?, 16).ok();
+        Some(LeaseEntry {
+            suite_hash: hex("suite_hash")?,
+            grid_hash: hex("grid")?,
+            seed: hex("seed")?,
+            range: j.get("range")?.as_f64()? as u32,
+            of: j.get("of")?.as_f64()? as u32,
+            worker: hex("worker")?,
+            epoch: j.get("epoch")?.as_f64()? as u64,
+            state: LeaseState::parse(j.get("state")?.as_str()?)?,
+        })
+    }
+
+    /// Append this entry to `manifest` (`O_APPEND`, one `write_all` — the
+    /// same serialization the shard and wave lines rely on).
+    pub fn append(&self, manifest: &Path) -> Result<(), DiagError> {
+        use std::io::Write;
+        if let Some(dir) = manifest.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| DiagError::Store(format!("cannot create {}: {e}", dir.display())))?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(manifest)
+            .map_err(|e| DiagError::Store(format!("cannot open {}: {e}", manifest.display())))?;
+        f.write_all(self.to_line().as_bytes())
+            .map_err(|e| DiagError::Store(format!("cannot append {}: {e}", manifest.display())))
+    }
+}
+
+/// What the lease lines say about one range right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RangeStatus {
+    /// Never claimed, or its last holder expired: claimable outright.
+    Free,
+    /// Claimed and within TTL; `stealable_in` epochs until it expires.
+    Held { worker: u64, stealable_in: u64 },
+    /// A holder expired without completing: claimable, and the claim
+    /// counts as a *steal*.
+    Expired { worker: u64 },
+    /// Checkpointed and recorded; nothing left to do.
+    Complete,
+}
+
+/// All lease lines of one manifest, replayed into per-range holder state.
+#[derive(Debug, Default)]
+pub struct LeaseBoard {
+    /// Every well-formed lease entry, in file order (all sessions).
+    pub entries: Vec<LeaseEntry>,
+    /// Lines that *claimed* `"kind":"lease"` but did not parse — skipped,
+    /// counted, never fatal.
+    pub corrupt: usize,
+    /// Highest epoch seen across every lease line (any session): the
+    /// monotonic clock the next append increments.
+    pub max_epoch: u64,
+}
+
+impl LeaseBoard {
+    /// Read the manifest's lease lines. A missing manifest is an empty
+    /// board, matching `read_manifest`'s contract.
+    pub fn read(manifest: &Path) -> LeaseBoard {
+        let mut board = LeaseBoard::default();
+        let Ok(text) = std::fs::read_to_string(manifest) else { return board };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || !line.contains("\"kind\":\"lease\"") {
+                continue;
+            }
+            match LeaseEntry::parse(line) {
+                Some(e) => {
+                    board.max_epoch = board.max_epoch.max(e.epoch);
+                    board.entries.push(e);
+                }
+                None => board.corrupt += 1,
+            }
+        }
+        board
+    }
+
+    /// The epoch the next appended line should carry.
+    pub fn next_epoch(&self) -> u64 {
+        self.max_epoch + 1
+    }
+
+    /// Replay one session range's lease lines into its current status.
+    /// First-claim-wins: an `acquire` is ignored unless the range was free
+    /// or its holder was already `ttl` epochs stale at that acquire's
+    /// epoch; a `renew` only counts from the current holder.
+    pub fn range_status(
+        &self,
+        suite_hash: u64,
+        grid_hash: u64,
+        seed: u64,
+        of: u32,
+        range: u32,
+        ttl: u64,
+    ) -> RangeStatus {
+        let mut holder: Option<(u64, u64)> = None; // (worker, last heartbeat epoch)
+        for e in &self.entries {
+            if e.suite_hash != suite_hash
+                || e.grid_hash != grid_hash
+                || e.seed != seed
+                || e.of != of
+                || e.range != range
+            {
+                continue;
+            }
+            match e.state {
+                LeaseState::Acquire => match holder {
+                    None => holder = Some((e.worker, e.epoch)),
+                    Some((_, last)) if e.epoch.saturating_sub(last) >= ttl => {
+                        holder = Some((e.worker, e.epoch));
+                    }
+                    Some(_) => {} // lost the race: earlier live claim wins
+                },
+                LeaseState::Renew => {
+                    if let Some((w, last)) = holder {
+                        if w == e.worker && e.epoch > last {
+                            holder = Some((w, e.epoch));
+                        }
+                    }
+                }
+                LeaseState::Complete => return RangeStatus::Complete,
+                LeaseState::Wait => {}
+            }
+        }
+        match holder {
+            None => RangeStatus::Free,
+            Some((worker, last)) => {
+                let age = self.max_epoch.saturating_sub(last);
+                if age >= ttl {
+                    RangeStatus::Expired { worker }
+                } else {
+                    RangeStatus::Held { worker, stealable_in: ttl - age }
+                }
+            }
+        }
+    }
+
+    /// True when every range of the session carries a `complete` line.
+    pub fn session_complete(&self, suite_hash: u64, grid_hash: u64, seed: u64, of: u32) -> bool {
+        (0..of).all(|r| {
+            self.range_status(suite_hash, grid_hash, seed, of, r, u64::MAX)
+                == RangeStatus::Complete
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_manifest(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-lease-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("manifest.jsonl")
+    }
+
+    fn entry(range: u32, worker: u64, epoch: u64, state: LeaseState) -> LeaseEntry {
+        LeaseEntry {
+            suite_hash: 0xAAAA,
+            grid_hash: 0xBBBB,
+            seed: 42,
+            range,
+            of: 4,
+            worker,
+            epoch,
+            state,
+        }
+    }
+
+    fn status(board: &LeaseBoard, range: u32, ttl: u64) -> RangeStatus {
+        board.range_status(0xAAAA, 0xBBBB, 42, 4, range, ttl)
+    }
+
+    #[test]
+    fn lease_lines_roundtrip_through_the_manifest() {
+        let m = tmp_manifest("roundtrip");
+        let e = LeaseEntry {
+            suite_hash: u64::MAX - 3, // > 2^53: must survive the hex path
+            grid_hash: 0xDEAD_BEEF,
+            seed: (1u64 << 60) + 7,
+            range: 3,
+            of: 4,
+            worker: 0xA1,
+            epoch: 9,
+            state: LeaseState::Acquire,
+        };
+        e.append(&m).unwrap();
+        entry(0, 0xB2, 10, LeaseState::Complete).append(&m).unwrap();
+        let board = LeaseBoard::read(&m);
+        assert_eq!(board.entries.len(), 2);
+        assert_eq!(board.corrupt, 0);
+        assert_eq!(board.entries[0], e);
+        assert_eq!(board.max_epoch, 10);
+        assert_eq!(board.next_epoch(), 11);
+        let _ = std::fs::remove_dir_all(m.parent().unwrap());
+    }
+
+    #[test]
+    fn missing_manifest_is_an_empty_board() {
+        let board = LeaseBoard::read(Path::new("/nonexistent/manifest.jsonl"));
+        assert!(board.entries.is_empty());
+        assert_eq!(board.next_epoch(), 1);
+    }
+
+    #[test]
+    fn corrupt_lease_lines_are_counted_never_fatal() {
+        let m = tmp_manifest("corrupt");
+        entry(0, 1, 1, LeaseState::Acquire).append(&m).unwrap();
+        // A torn append, a wrong-typed field, and an unknown state — each
+        // claims to be a lease, none parses.
+        let mut text = std::fs::read_to_string(&m).unwrap();
+        text.push_str("{\"kind\":\"lease\",\"suite_hash\":\"aaaa\",\"grid\":\"bb\n");
+        text.push_str("{\"kind\":\"lease\",\"suite_hash\":123,\"grid\":\"bbbb\",\"seed\":\"2a\",\"range\":0,\"of\":4,\"worker\":\"1\",\"epoch\":2,\"state\":\"acquire\"}\n");
+        text.push_str("{\"kind\":\"lease\",\"suite_hash\":\"aaaa\",\"grid\":\"bbbb\",\"seed\":\"2a\",\"range\":0,\"of\":4,\"worker\":\"1\",\"epoch\":3,\"state\":\"explode\"}\n");
+        // Other typed lines and shard lines are not corrupt — not leases.
+        text.push_str("{\"kind\":\"wave\",\"driver\":\"halving\"}\n");
+        std::fs::write(&m, text).unwrap();
+        let board = LeaseBoard::read(&m);
+        assert_eq!(board.entries.len(), 1);
+        assert_eq!(board.corrupt, 3);
+        assert_eq!(status(&board, 0, 8), RangeStatus::Held { worker: 1, stealable_in: 8 });
+        let _ = std::fs::remove_dir_all(m.parent().unwrap());
+    }
+
+    #[test]
+    fn holder_resolution_is_first_claim_wins() {
+        let mut board = LeaseBoard::default();
+        board.entries.push(entry(0, 0xA, 1, LeaseState::Acquire));
+        // B races an acquire while A is live: ignored.
+        board.entries.push(entry(0, 0xB, 2, LeaseState::Acquire));
+        board.max_epoch = 2;
+        assert_eq!(status(&board, 0, 8), RangeStatus::Held { worker: 0xA, stealable_in: 7 });
+    }
+
+    #[test]
+    fn renewals_keep_a_lease_alive_and_only_from_the_holder() {
+        let mut board = LeaseBoard::default();
+        board.entries.push(entry(0, 0xA, 1, LeaseState::Acquire));
+        board.entries.push(entry(0, 0xA, 6, LeaseState::Renew));
+        // A renew from a non-holder must not refresh the lease.
+        board.entries.push(entry(0, 0xB, 9, LeaseState::Renew));
+        board.max_epoch = 9;
+        assert_eq!(status(&board, 0, 8), RangeStatus::Held { worker: 0xA, stealable_in: 5 });
+    }
+
+    #[test]
+    fn expired_leases_are_stealable_and_steals_take_over() {
+        let mut board = LeaseBoard::default();
+        board.entries.push(entry(0, 0xA, 1, LeaseState::Acquire));
+        board.max_epoch = 9; // 8 epochs of other traffic: A is stale
+        assert_eq!(status(&board, 0, 8), RangeStatus::Expired { worker: 0xA });
+        // B steals at epoch 10 (A was 9 epochs stale at that point).
+        board.entries.push(entry(0, 0xB, 10, LeaseState::Acquire));
+        board.max_epoch = 10;
+        assert_eq!(status(&board, 0, 8), RangeStatus::Held { worker: 0xB, stealable_in: 8 });
+        // ... and B's completion closes the range for good.
+        board.entries.push(entry(0, 0xB, 11, LeaseState::Complete));
+        board.max_epoch = 11;
+        assert_eq!(status(&board, 0, 8), RangeStatus::Complete);
+    }
+
+    #[test]
+    fn wait_lines_advance_the_clock_without_claiming() {
+        let mut board = LeaseBoard::default();
+        board.entries.push(entry(0, 0xA, 1, LeaseState::Acquire));
+        for e in 2..=9 {
+            board.entries.push(entry(0, 0xB, e, LeaseState::Wait));
+        }
+        board.max_epoch = 9;
+        // The waits aged A out without ever taking the range.
+        assert_eq!(status(&board, 0, 8), RangeStatus::Expired { worker: 0xA });
+        assert_eq!(status(&board, 1, 8), RangeStatus::Free);
+    }
+
+    #[test]
+    fn sessions_do_not_cross_talk() {
+        let mut board = LeaseBoard::default();
+        board.entries.push(entry(0, 0xA, 1, LeaseState::Acquire));
+        let mut other = entry(1, 0xC, 2, LeaseState::Acquire);
+        other.seed = 43; // different session
+        board.entries.push(other);
+        board.max_epoch = 2;
+        assert_eq!(status(&board, 1, 8), RangeStatus::Free, "other session's lease is invisible");
+        // But its epoch still advanced the shared clock.
+        assert_eq!(board.next_epoch(), 3);
+    }
+
+    #[test]
+    fn session_complete_requires_every_range() {
+        let mut board = LeaseBoard::default();
+        for r in 0..3 {
+            board.entries.push(entry(r, 0xA, r as u64 + 1, LeaseState::Complete));
+        }
+        board.max_epoch = 3;
+        assert!(!board.session_complete(0xAAAA, 0xBBBB, 42, 4));
+        board.entries.push(entry(3, 0xB, 4, LeaseState::Complete));
+        assert!(board.session_complete(0xAAAA, 0xBBBB, 42, 4));
+    }
+}

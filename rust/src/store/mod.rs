@@ -15,16 +15,33 @@
 //!   fatal. The coordinator's `ArtifactCache` reads/writes through it
 //!   (`ArtifactCache::with_store`), so a **cold process on a warm store
 //!   performs zero elaborations, zero compiles and zero `simulate()`
-//!   calls**.
+//!   calls**. Transient write failures are retried under capped
+//!   exponential backoff ([`DiskStats::retries`]).
 //! * [`session`] — [`SweepSession`]: deterministic contiguous sharding of
 //!   `ParamGrid::points()` across processes plus a merge that is
 //!   bit-identical to the unsharded sweep (CLI: `windmill sweep --store DIR
 //!   --shard I/N`, then `windmill sweep-merge --store DIR`).
+//! * [`lease`] — work-stealing shard leases for crash-tolerant sweeps:
+//!   `"kind":"lease"` records in the shared manifest carry
+//!   acquire/renew/complete transitions on a wall-clock-free epoch
+//!   counter, so [`SweepSession::run_leased`] workers claim ranges,
+//!   heartbeat, and steal leases whose holders died — converging to the
+//!   same bit-identical merged report (CLI: `windmill sweep --store DIR
+//!   --lease`).
+//! * [`faults`] — deterministic seeded fault injection ([`FaultPlan`]):
+//!   torn writes, rename failures, transient I/O errors, worker panics and
+//!   stale-lease abandonment, reproducible from one chaos seed (CLI:
+//!   `--chaos SEED`). Disabled (the default), every hook is a `None`
+//!   check — byte-identical behavior to a build without it.
 
 pub mod codec;
 pub mod disk;
+pub mod faults;
+pub mod lease;
 pub mod session;
 
 pub use codec::SweepPartial;
 pub use disk::{DiskStats, DiskStore, GcPassReport, GcReport};
-pub use session::{ManifestEntry, SweepSession, WaveEntry};
+pub use faults::{FaultPlan, WriteFault};
+pub use lease::{LeaseBoard, LeaseEntry, LeaseState, RangeStatus, DEFAULT_LEASE_TTL};
+pub use session::{LeaseRunReport, ManifestEntry, SweepSession, WaveEntry};

@@ -1,0 +1,178 @@
+//! Crash-tolerance system tests: a leased sweep worker is SIGKILLed
+//! mid-shard, a second worker steals the expired lease and finishes the
+//! session, and the merged report is still bit-identical to the unsharded
+//! sweep — with zero duplicate evaluations recorded in the manifest.
+//!
+//! These tests drive the real `windmill` binary (the same processes a
+//! cluster would run), so the kill is a genuine `SIGKILL`: no destructors,
+//! no flushes, the lease simply stops heartbeating.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use windmill::arch::params::ParamGrid;
+use windmill::arch::{presets, Topology};
+use windmill::coordinator::{SweepEngine, Workload};
+use windmill::store::{LeaseBoard, SweepSession};
+
+/// Unique per-test scratch directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir()
+            .join(format!("windmill-crashtest-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The CLI `sweep` grid, mirrored so the in-process baseline evaluates the
+/// exact points the binary does.
+fn cli_grid() -> ParamGrid {
+    ParamGrid::new(presets::standard()).pea_edges(&[4, 8, 12, 16]).topologies(&Topology::ALL)
+}
+
+/// Satellite acceptance: worker 1 is killed (SIGKILL) while holding a
+/// lease; worker 2, pointed at the same store, completes the free ranges,
+/// waits out the dead worker's lease on the epoch clock, steals it, and
+/// prints a merged frontier byte-identical to the unsharded sweep. The
+/// manifest records each range exactly once — no duplicate evaluations.
+#[test]
+fn killed_lease_worker_is_stolen_from_and_the_merge_stays_bit_identical() {
+    let tmp = TempDir::new("kill-resume");
+    let manifest = SweepSession::manifest_path(tmp.path());
+
+    // Worker 1: spawn the real binary and SIGKILL it as soon as its first
+    // lease acquisition lands in the manifest — i.e. mid-shard, before any
+    // checkpoint exists.
+    let mut victim = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"))
+        .args(["sweep", "dot", "--workers", "2", "--lease", "--ranges", "4"])
+        .args(["--worker-id", "1", "--store"])
+        .arg(tmp.path())
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn lease worker 1");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let acquired = std::fs::read_to_string(&manifest)
+            .map(|t| t.contains("\"state\":\"acquire\""))
+            .unwrap_or(false);
+        if acquired {
+            break;
+        }
+        assert!(Instant::now() < deadline, "worker 1 never acquired a lease");
+        assert!(
+            victim.try_wait().expect("poll worker 1").is_none(),
+            "worker 1 exited before it could be killed mid-shard"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    victim.kill().expect("SIGKILL worker 1");
+    let _ = victim.wait();
+
+    // The dead worker left a held, never-completed lease behind.
+    let suite_hash = windmill::coordinator::WorkloadSuite::parse("dot").unwrap().fingerprint();
+    let grid_hash = SweepSession::grid_hash(&cli_grid());
+    let board = LeaseBoard::read(&manifest);
+    assert!(!board.entries.is_empty());
+    assert!(!board.session_complete(suite_hash, grid_hash, 42, 4));
+
+    // Worker 2: same store, different identity. It must finish the whole
+    // session, stealing the dead lease once it ages out.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"))
+        .args(["sweep", "dot", "--workers", "2", "--lease", "--ranges", "4"])
+        .args(["--worker-id", "2", "--store"])
+        .arg(tmp.path())
+        .output()
+        .expect("spawn lease worker 2");
+    let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(out.status.success(), "worker 2 failed:\n{stderr}");
+    assert!(
+        stderr.contains("1 stolen"),
+        "worker 2 must report stealing the dead worker's lease:\n{stderr}"
+    );
+
+    // Recovery is visible in the merged report, not silently absorbed.
+    assert!(stdout.contains("recovery"), "summary must carry the recovery segment:\n{stdout}");
+
+    // Zero duplicate evaluations: every range has exactly one shard line.
+    let (entries, skipped) = SweepSession::read_manifest(tmp.path());
+    assert_eq!(skipped, 0, "lease lines must not read as garbage");
+    let mut shards: Vec<u32> = entries.iter().map(|e| e.shard).collect();
+    shards.sort_unstable();
+    assert_eq!(shards, vec![0, 1, 2, 3], "duplicate or missing shard lines: {entries:?}");
+    assert!(
+        LeaseBoard::read(&manifest).session_complete(suite_hash, grid_hash, 42, 4),
+        "every lease completed"
+    );
+
+    // The merged frontier is byte-identical to the unsharded sweep (same
+    // lines the CLI prints for a plain `windmill sweep dot`).
+    let full = SweepEngine::new(2).sweep_seeded(&cli_grid(), &Workload::Dot { n: 256 }, 42);
+    for p in full.frontier_points() {
+        let line = format!(
+            "  * {:<20} {:>7.3} mm2  {:>6.2} mW  {:>9} cycles",
+            p.label, p.area_mm2, p.power_mw, p.cycles
+        );
+        assert!(stdout.contains(&line), "missing frontier line `{line}` in:\n{stdout}");
+    }
+
+    // And the checkpoints themselves merge to the same points, bit for bit.
+    let (partials, bad) = SweepSession::load_partials(tmp.path()).unwrap();
+    assert_eq!(bad, 0);
+    let merged = SweepSession::merge(partials).unwrap();
+    assert_eq!(merged.points.len(), full.points.len());
+    for (a, b) in merged.points.iter().zip(full.points.iter()) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        assert_eq!(a.power_mw.to_bits(), b.power_mw.to_bits());
+        assert_eq!(a.wm_time_ns.to_bits(), b.wm_time_ns.to_bits());
+    }
+    assert_eq!(merged.frontier, full.frontier);
+    assert!(merged.recovery.steals >= 1, "{:?}", merged.recovery);
+}
+
+/// The lease flag grammar is validated up front: every misuse is a clean
+/// CLI error, never a half-started session.
+#[test]
+fn lease_flag_misuse_is_rejected() {
+    let tmp = TempDir::new("flags");
+    let run = |args: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_windmill"));
+        cmd.args(args);
+        cmd.output().expect("spawn windmill")
+    };
+    let cases: &[&[&str]] = &[
+        &["sweep", "dot", "--lease"],          // no --store
+        &["sweep", "dot", "--chaos", "7"],     // chaos without lease
+        &["sweep", "dot", "--ranges", "4"],    // ranges without lease
+        &["sweep", "dot", "--ttl", "8"],       // ttl without lease
+        &["sweep", "dot", "--worker-id", "1"], // id without lease
+    ];
+    for case in cases {
+        let out = run(case);
+        assert!(!out.status.success(), "{case:?} must fail");
+    }
+    // --lease conflicts with --shard and --drive even with a store.
+    let store = tmp.path().to_string_lossy().to_string();
+    for extra in [["--shard", "0/2"], ["--drive", "halving"]] {
+        let out =
+            run(&["sweep", "dot", "--store", store.as_str(), "--lease", extra[0], extra[1]]);
+        assert!(!out.status.success(), "--lease with {} must fail", extra[0]);
+    }
+}
