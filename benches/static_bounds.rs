@@ -1,0 +1,114 @@
+//! Static-bounds bench (PR 10): the analyzer as a permanent oracle and a
+//! near-free pre-sim gate.
+//!
+//! Two headline assertions on a Fig.-6-style grid (PEA edge × context
+//! depth, four-kernel suite):
+//!
+//! 1. **Soundness**: every sweep point satisfies `bound <= cycles` — the
+//!    resource-constrained lower bound never claims a cycle count the
+//!    simulator can beat. This is the same invariant `tests/static_analysis.rs`
+//!    spot-checks, asserted here across the whole grid via the report's new
+//!    `bound` / `bound_gap` columns.
+//! 2. **Cost**: a full static pass (`analysis::check` + `cycles_lower_bound`)
+//!    over every compiled artifact of the grid costs <= 5% of the cold
+//!    sweep's wall — linting the fabric is effectively free next to
+//!    simulating it.
+//!
+//! `cargo bench --bench static_bounds`
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::{fmt_ns, Table};
+use windmill::analysis;
+use windmill::arch::params::ParamGrid;
+use windmill::arch::presets;
+use windmill::compiler::compile;
+use windmill::coordinator::{calibrate_params, SweepEngine, WorkloadSuite};
+use windmill::plugins;
+
+const SEED: u64 = 42;
+
+fn grid() -> ParamGrid {
+    // Edges at or above the standard 8 and depths at or above the standard
+    // 32: every suite kernel maps on every point, so the soundness sweep
+    // has no holes.
+    ParamGrid::new(presets::standard())
+        .pea_edges(&[8, 12, 16])
+        .context_depths(&[32, 64])
+}
+
+fn main() {
+    let suite = WorkloadSuite::parse("saxpy,dot,fir,gemm").unwrap();
+
+    // ---- cold sweep, wall-timed, bound column asserted sound ---------------
+    let t0 = Instant::now();
+    let report = SweepEngine::new(1).sweep_suite(&grid(), &suite, SEED);
+    let sweep_ns = t0.elapsed().as_nanos() as u64;
+    assert!(report.failures.is_empty(), "{:?}", report.failures);
+    assert!(!report.points.is_empty(), "grid produced no points");
+
+    let mut t = Table::new(
+        "static lower bound vs simulated cycles (Fig.-6-style grid)",
+        &["point", "cycles", "bound", "gap", "gap %"],
+    );
+    for p in &report.points {
+        assert!(p.bound > 0, "{}: zero bound", p.label);
+        assert!(
+            p.bound <= p.cycles,
+            "{}: bound {} exceeds simulated {} — the analyzer is unsound",
+            p.label,
+            p.bound,
+            p.cycles
+        );
+        let gap = p.cycles - p.bound;
+        t.row(&[
+            p.label.clone(),
+            p.cycles.to_string(),
+            p.bound.to_string(),
+            gap.to_string(),
+            format!("{:.1}%", 100.0 * gap as f64 / p.cycles as f64),
+        ]);
+    }
+    t.print();
+
+    // ---- pure analyzer wall over the same artifacts ------------------------
+    // Recompile the grid's artifacts untimed (the sweep already priced
+    // compile+sim), then time nothing but the static passes.
+    let mut artifacts = Vec::new();
+    for (_label, params) in grid().points() {
+        for workload in suite.workloads() {
+            let (dfgs, layout) = workload.build();
+            let calibrated = calibrate_params(params.clone(), &layout);
+            let machine = plugins::elaborate(calibrated).unwrap().artifact;
+            for dfg in dfgs {
+                let mapping = compile(dfg, &machine, SEED).unwrap();
+                artifacts.push((mapping, machine.clone()));
+            }
+        }
+    }
+
+    let t1 = Instant::now();
+    let mut bound_sum = 0u64;
+    for (mapping, machine) in &artifacts {
+        let diags = analysis::check(mapping, machine);
+        assert!(diags.is_empty(), "shipped artifact flagged: {diags:?}");
+        bound_sum += analysis::cycles_lower_bound(mapping, machine);
+    }
+    let analyzer_ns = t1.elapsed().as_nanos() as u64;
+    assert!(bound_sum > 0);
+
+    println!(
+        "analyzer wall: {} over {} artifacts vs cold sweep {} ({:.2}%)",
+        fmt_ns(analyzer_ns as f64),
+        artifacts.len(),
+        fmt_ns(sweep_ns as f64),
+        100.0 * analyzer_ns as f64 / sweep_ns as f64
+    );
+    assert!(
+        analyzer_ns * 20 <= sweep_ns,
+        "static pass must cost <= 5% of the cold sweep: {analyzer_ns} vs {sweep_ns} ns"
+    );
+    println!("static-bounds acceptance: bound sound on every grid point, analyzer <= 5% of sweep");
+}

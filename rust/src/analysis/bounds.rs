@@ -1,0 +1,96 @@
+//! Resource-constrained lower bound on simulated cycles (`cycles_lower_bound`).
+//!
+//! Three independently-sound terms, combined by `max` (the engine must pay
+//! all of them, so the largest is still a lower bound):
+//!
+//! 1. **Critical path** — `iters − 1 + D`, where `D` is the longest
+//!    source→store chain of per-edge delivery delays. Edge delay is
+//!    *exactly* what the engine charges (`src latency + route hops`, see
+//!    `Topo::lane_delays`), each node fires at most once per cycle, and a
+//!    store must consume one token per iteration — so the last iteration
+//!    cannot complete before `(iters − 1) + D`.
+//! 2. **Bank bandwidth** — `ceil(requests / banks)`. The PAI grants at
+//!    most one request per bank per cycle; `Dfg::traffic_words` counts the
+//!    kernel's total load and store requests.
+//! 3. **Window throttle** — `max_s D_s · ceil(iters / window)`. Sources
+//!    are credit-gated to `window` in-flight iterations, so every `window`
+//!    iterations the store's own critical path `D_s` must be repaid.
+//!
+//! Deliberately **excluded**: route-slot contention and MSHR queuing. The
+//! engine models fixed per-edge delays and finite MSHRs, but charging for
+//! contention the engine may not actually serialize would make the bound
+//! unsound. Tightness is measured, not assumed — the bound-gap column in
+//! `SweepReport` and the `static_bounds` bench pin `bound ≤ simulated`
+//! on every grid point.
+
+use crate::compiler::dfg::NodeKind;
+use crate::compiler::Mapping;
+use crate::sim::engine::iteration_window;
+use crate::sim::machine::MachineDesc;
+
+/// Longest-path earliest-arrival DP over the explicit data edges, using
+/// the engine's own per-edge delay (`src op latency + route hops`).
+/// Returns `dist[i]` = earliest cycle node `i` can fire iteration 0.
+fn earliest_fire(mapping: &Mapping) -> Vec<u64> {
+    let dfg = &mapping.dfg;
+    let n = dfg.nodes.len();
+    // Kahn topological order (the compiled DFG is acyclic; on a corrupted
+    // cyclic graph unprocessed nodes keep dist 0, which only loosens the
+    // bound — never unsound).
+    let cons = dfg.consumers();
+    let mut indeg: Vec<usize> = dfg.nodes.iter().map(|nd| nd.inputs.len()).collect();
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut dist = vec![0u64; n];
+    while let Some(i) = queue.pop() {
+        for &c in &cons[i] {
+            let hops = mapping
+                .routes
+                .for_edge(i, c)
+                .map(|r| if r.path.is_empty() { 0 } else { r.hops() as u64 })
+                .unwrap_or(0);
+            let arrival = dist[i] + dfg.nodes[i].op.latency() as u64 + hops;
+            dist[c] = dist[c].max(arrival);
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                queue.push(c);
+            }
+        }
+    }
+    dist
+}
+
+/// Lower bound on the cycles the engine will report for this mapping's
+/// compute phase. Guaranteed `bound ≤ simulated cycles` for any mapping
+/// the engine accepts (asserted per sweep point in CI).
+pub fn cycles_lower_bound(mapping: &Mapping, machine: &MachineDesc) -> u64 {
+    let dfg = &mapping.dfg;
+    let iters = dfg.total_iters();
+    if iters == 0 || dfg.nodes.is_empty() {
+        return 0;
+    }
+    let dist = earliest_fire(mapping);
+    let store_depths: Vec<u64> = dfg
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(n.kind, NodeKind::Store { .. }))
+        .map(|(i, _)| dist[i])
+        .collect();
+    let d_max = store_depths.iter().copied().max().unwrap_or(0);
+
+    // Term 1: critical path through the slowest store.
+    let term_path = iters - 1 + d_max;
+
+    // Term 2: aggregate bank bandwidth.
+    let (load_words, store_words) = dfg.traffic_words();
+    let banks = machine.smem.as_ref().map(|s| s.banks as u64).unwrap_or(1).max(1);
+    let term_mem = (load_words + store_words).div_ceil(banks);
+
+    // Term 3: the iteration window repays each store's critical path once
+    // per window of iterations.
+    let window = iteration_window(machine).max(1);
+    let refills = iters.div_ceil(window);
+    let term_window = store_depths.iter().map(|&d| d * refills).max().unwrap_or(0);
+
+    term_path.max(term_mem).max(term_window)
+}

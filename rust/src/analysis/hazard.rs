@@ -1,0 +1,102 @@
+//! Hazard / deadlock analysis (`WM02xx`): dataflow liveness over the DFG.
+//!
+//! The engine's firing rules make deadlock a *structural* property:
+//! `Const`/`Index`/load source nodes always produce tokens, stores consume
+//! one token per iteration but **broadcast nothing**, and every other node
+//! fires only when all of its operands arrive. So a node "produces" iff
+//! every operand chain below it bottoms out in real sources. A store whose
+//! chain does not is token-starved: it never completes an iteration, the
+//! iteration frontier never advances, the window credit runs dry, the
+//! calendar drains — and the engine deadlocks (its empty-calendar error
+//! carries the same [`WM0201`] code this pass predicts statically).
+
+use super::{Diagnostic, Subject, WM0201, WM0202, WM0203};
+use crate::compiler::dfg::{Dfg, NodeKind};
+
+/// True for node kinds that emit a token stream without consuming one.
+fn is_source(kind: &NodeKind) -> bool {
+    matches!(kind, NodeKind::Const | NodeKind::Index(_) | NodeKind::Load(_))
+}
+
+/// Monotone liveness fixpoint: `produces[i]` iff node `i` can emit tokens.
+///
+/// Loads count as sources even when indirect — their *firing* needs the
+/// address operand, which is itself covered by the chain check. Stores are
+/// sinks. Everything else produces iff it has operands and they all do.
+fn producing(dfg: &Dfg) -> Vec<bool> {
+    let n = dfg.nodes.len();
+    // Operand-free sources produce unconditionally; an indirect load is a
+    // *gated* source — it joins the fixpoint below on its address operand.
+    let mut produces: Vec<bool> = dfg
+        .nodes
+        .iter()
+        .map(|node| is_source(&node.kind) && node.inputs.is_empty())
+        .collect();
+    // At most n sweeps to reach the fixpoint; cycles stay false, which is
+    // exactly right — a token cycle with no source can never start.
+    for _ in 0..n {
+        let mut changed = false;
+        for (i, node) in dfg.nodes.iter().enumerate() {
+            if produces[i] || matches!(node.kind, NodeKind::Store { .. }) {
+                continue;
+            }
+            let live = !node.inputs.is_empty()
+                && node.inputs.iter().all(|&src| produces[src]);
+            if live {
+                produces[i] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    produces
+}
+
+/// Run the hazard pass. Call only on graphs whose operand ids are in
+/// range (the `WM0302` lint gates this).
+pub fn check_hazards(dfg: &Dfg) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let produces = producing(dfg);
+
+    for (i, node) in dfg.nodes.iter().enumerate() {
+        // WM0203: a non-source, non-store node with no operands can never
+        // fire (nothing ever arrives to trigger it).
+        if !is_source(&node.kind)
+            && !matches!(node.kind, NodeKind::Store { .. })
+            && node.inputs.is_empty()
+        {
+            diags.push(Diagnostic::error(
+                WM0203,
+                Subject::Node(i),
+                "non-source node with zero data inputs can never fire".into(),
+            ));
+        }
+        // WM0202: stores broadcast nothing, so an edge out of one carries
+        // no tokens, ever.
+        for &src in &node.inputs {
+            if matches!(dfg.nodes[src].kind, NodeKind::Store { .. }) {
+                diags.push(Diagnostic::error(
+                    WM0202,
+                    Subject::Edge(src, i),
+                    "operand sourced from a store node (stores broadcast nothing)".into(),
+                ));
+            }
+        }
+        // WM0201: a token-starved store deadlocks the whole kernel — its
+        // iteration never completes, so the frontier (and with it every
+        // window-gated source) freezes.
+        if matches!(node.kind, NodeKind::Store { .. })
+            && node.inputs.iter().any(|&src| !produces[src])
+        {
+            diags.push(Diagnostic::error(
+                WM0201,
+                Subject::Node(i),
+                "token-starved store: an operand chain never produces, the kernel deadlocks"
+                    .into(),
+            ));
+        }
+    }
+    diags
+}

@@ -1,0 +1,218 @@
+//! Legality checker (`WM01xx`): is a `(Dfg, Mapping, MachineDesc)` triple
+//! structurally executable, checked without running a cycle?
+//!
+//! The checks recompute every invariant the mapper is supposed to
+//! establish — so a healthy `compile()` output is clean by construction,
+//! and any corruption of the artifact (hand-edited placement, bit-rotted
+//! store entry, buggy mapper change) is caught with a stable code before
+//! the simulator is ever launched. Ordering is panic-safe: bounds are
+//! verified before any `machine.pe()` index, route paths are checked
+//! non-empty before `Route::hops()`.
+
+use std::collections::HashMap;
+
+use super::{
+    Diagnostic, Subject, WM0101, WM0102, WM0103, WM0104, WM0105, WM0106, WM0107, WM0108, WM0109,
+    WM0110,
+};
+use crate::compiler::dfg::{Access, NodeKind};
+use crate::compiler::place::required_class;
+use crate::compiler::route::ROUTE_SLOTS_PER_PE;
+use crate::compiler::{Coord, Mapping};
+use crate::sim::machine::MachineDesc;
+
+/// Run every legality check; returns all findings (not just the first).
+pub fn check_mapping(mapping: &Mapping, machine: &MachineDesc) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let dfg = &mapping.dfg;
+    let place = &mapping.place;
+
+    // WM0101: without a 1:1 node->PE map nothing below can be indexed.
+    if place.len() != dfg.nodes.len() {
+        diags.push(Diagnostic::error(
+            WM0101,
+            Subject::Kernel,
+            format!("placement maps {} nodes, dfg has {}", place.len(), dfg.nodes.len()),
+        ));
+        return diags;
+    }
+
+    // WM0102 / WM0103 / WM0104: per-node placement checks.
+    let in_fabric = |c: Coord| c.0 < machine.rows && c.1 < machine.cols;
+    let mut occupied: HashMap<Coord, usize> = HashMap::new();
+    for (i, &coord) in place.iter().enumerate() {
+        if !in_fabric(coord) {
+            diags.push(Diagnostic::error(
+                WM0102,
+                Subject::Node(i),
+                format!(
+                    "placed at ({},{}) outside the {}x{} fabric",
+                    coord.0, coord.1, machine.rows, machine.cols
+                ),
+            ));
+            continue; // machine.pe() would panic; skip dependent checks
+        }
+        if let Some(&prev) = occupied.get(&coord) {
+            diags.push(Diagnostic::error(
+                WM0103,
+                Subject::Pe(coord),
+                format!("nodes {prev} and {i} both placed here"),
+            ));
+        } else {
+            occupied.insert(coord, i);
+        }
+        let class = required_class(dfg, i);
+        if !machine.pe(coord.0, coord.1).caps.contains(&class) {
+            diags.push(Diagnostic::error(
+                WM0104,
+                Subject::Node(i),
+                format!("needs {class:?} but pe ({},{}) lacks it", coord.0, coord.1),
+            ));
+        }
+    }
+
+    // WM0105 / WM0106 / WM0107: every cross-PE data edge must ride a
+    // contiguous route whose endpoints agree with the placement.
+    for (dst, n) in dfg.nodes.iter().enumerate() {
+        for &src in &n.inputs {
+            if src >= place.len() {
+                continue; // WM0302 territory (dfg lint)
+            }
+            let (from, to) = (place[src], place[dst]);
+            if !in_fabric(from) || !in_fabric(to) {
+                continue; // already reported as WM0102
+            }
+            let route = match mapping.routes.for_edge(src, dst) {
+                Some(r) if !r.path.is_empty() => r,
+                Some(_) | None if from == to => continue, // same-PE edge: no route needed
+                Some(_) => {
+                    diags.push(Diagnostic::error(
+                        WM0105,
+                        Subject::Edge(src, dst),
+                        "route exists but its path is empty".into(),
+                    ));
+                    continue;
+                }
+                None => {
+                    diags.push(Diagnostic::error(
+                        WM0105,
+                        Subject::Edge(src, dst),
+                        format!("cross-pe edge ({},{})->({},{}) has no route", from.0, from.1, to.0, to.1),
+                    ));
+                    continue;
+                }
+            };
+            let last = *route.path.last().unwrap();
+            if route.path[0] != from || last != to {
+                diags.push(Diagnostic::error(
+                    WM0106,
+                    Subject::Edge(src, dst),
+                    format!(
+                        "route runs ({},{})->({},{}) but placement says ({},{})->({},{})",
+                        route.path[0].0, route.path[0].1, last.0, last.1, from.0, from.1, to.0, to.1
+                    ),
+                ));
+                continue;
+            }
+            if let Some(topo) = machine.topology {
+                for w in route.path.windows(2) {
+                    let (a, b) = (w[0], w[1]);
+                    if !in_fabric(a) || !in_fabric(b) {
+                        diags.push(Diagnostic::error(
+                            WM0107,
+                            Subject::Edge(src, dst),
+                            format!("route hop ({},{}) leaves the fabric", b.0, b.1),
+                        ));
+                        break;
+                    }
+                    let adjacent = topo
+                        .neighbors(a.0, a.1, machine.rows, machine.cols)
+                        .iter()
+                        .any(|(nb, _)| *nb == b);
+                    if !adjacent {
+                        diags.push(Diagnostic::error(
+                            WM0107,
+                            Subject::Edge(src, dst),
+                            format!(
+                                "hops ({},{})->({},{}) are not {} neighbours",
+                                a.0, a.1, b.0, b.1,
+                                topo.name()
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // WM0108: the scheduled II must cover the route-constrained minimum
+    // (the busiest pass-through PE has ROUTE_SLOTS_PER_PE slots per context).
+    let route_ii = mapping.routes.route_ii();
+    if mapping.schedule.ii < route_ii {
+        diags.push(Diagnostic::error(
+            WM0108,
+            Subject::Kernel,
+            format!(
+                "scheduled ii {} below route-constrained minimum {} ({} slots/pe)",
+                mapping.schedule.ii, route_ii, ROUTE_SLOTS_PER_PE
+            ),
+        ));
+    }
+
+    // WM0109: recompute per-PE context words (one per resident node plus
+    // one per routed pass-through) against the machine's context depth.
+    let mut ctx_words: HashMap<Coord, usize> = HashMap::new();
+    for &coord in place.iter().filter(|c| in_fabric(**c)) {
+        *ctx_words.entry(coord).or_insert(0) += 1;
+    }
+    for (&coord, &load) in &mapping.routes.through_load {
+        *ctx_words.entry(coord).or_insert(0) += load as usize;
+    }
+    for (&coord, &words) in &ctx_words {
+        if words > machine.context_depth {
+            diags.push(Diagnostic::error(
+                WM0109,
+                Subject::Pe(coord),
+                format!("{words} context words exceed depth {}", machine.context_depth),
+            ));
+        }
+    }
+
+    // WM0110: every statically-known affine address must fit shared memory.
+    if let Some(smem) = &machine.smem {
+        let words = smem.words() as i64;
+        for (i, n) in dfg.nodes.iter().enumerate() {
+            let access = match &n.kind {
+                NodeKind::Load(a) => a,
+                NodeKind::Store { access, .. } => access,
+                _ => continue,
+            };
+            if let Access::Affine { base, coefs } = access {
+                let mut lo = *base as i64;
+                let mut hi = *base as i64;
+                for (d, &coef) in coefs.iter().enumerate() {
+                    let extent = dfg.dims.get(d).map(|&x| x as i64 - 1).unwrap_or(0);
+                    let swing = coef as i64 * extent;
+                    if swing >= 0 {
+                        hi += swing;
+                    } else {
+                        lo += swing;
+                    }
+                }
+                if lo < 0 || hi >= words {
+                    diags.push(Diagnostic::error(
+                        WM0110,
+                        Subject::Node(i),
+                        format!(
+                            "affine address range [{lo},{hi}] outside smem [0,{})",
+                            words
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    diags
+}

@@ -1,0 +1,212 @@
+//! Static mapping verifier + performance-bound analyzer (PR 10).
+//!
+//! Lint the fabric before you simulate it: every check here runs over the
+//! existing compile artifacts — `(Dfg, Mapping, MachineDesc)` — without
+//! ticking a single cycle. Three passes:
+//!
+//! * [`legality`] — is the mapping *structurally* executable? Placement in
+//!   fabric bounds and collision-free, every PE capable of its op class,
+//!   routes contiguous under the machine topology, context memory and
+//!   shared-memory footprints within capacity (`WM01xx`).
+//! * [`hazard`] — will the kernel *deadlock*? Dataflow liveness over the
+//!   DFG finds token-starved stores and operands sourced from nodes that
+//!   never broadcast, i.e. the structures the engine can only diagnose by
+//!   running out of calendar (`WM02xx`). The engine's empty-calendar
+//!   deadlock error carries the same `WM0201` code this pass predicts.
+//! * [`bounds`] — how fast could it *possibly* go? A resource-constrained
+//!   lower bound on simulated cycles (critical-path ⊔ bank-bandwidth ⊔
+//!   iteration-window throttle), usable as a permanent correctness oracle
+//!   (`simulated >= bound` for every sweep point) and as a pruning signal
+//!   for search-guided sweeps.
+//!
+//! `WM03xx` codes are DFG-level lints (static forms of the engine's dynamic
+//! guards). Diagnostics are machine-readable: stable `WM####` code, severity,
+//! structured subject, human message — rendered as a table by
+//! `windmill check` and as JSON by `windmill check --json`.
+
+pub mod bounds;
+pub mod hazard;
+pub mod legality;
+
+pub use bounds::cycles_lower_bound;
+
+use crate::compiler::{Coord, Dfg, Mapping};
+use crate::sim::machine::MachineDesc;
+
+// ---- diagnostic codes ------------------------------------------------------
+// Legality (WM01xx)
+/// Placement vector length differs from the node count.
+pub const WM0101: &str = "WM0101";
+/// Node placed outside the fabric (row/col out of range).
+pub const WM0102: &str = "WM0102";
+/// Two nodes placed on the same PE.
+pub const WM0103: &str = "WM0103";
+/// PE lacks the op class its assigned node requires.
+pub const WM0104: &str = "WM0104";
+/// Cross-PE data edge with no (or an empty) route.
+pub const WM0105: &str = "WM0105";
+/// Route endpoints disagree with the placement.
+pub const WM0106: &str = "WM0106";
+/// Consecutive route hops are not neighbours under the machine topology.
+pub const WM0107: &str = "WM0107";
+/// Scheduled II below the route-constrained minimum.
+pub const WM0108: &str = "WM0108";
+/// Context-memory words at a PE exceed the machine's context depth.
+pub const WM0109: &str = "WM0109";
+/// Static affine address range exceeds the shared-memory capacity.
+pub const WM0110: &str = "WM0110";
+// Hazards (WM02xx)
+/// Token-starved store: some operand chain never produces, so the store
+/// (and with it the iteration frontier) can never advance — a deadlock.
+pub const WM0201: &str = "WM0201";
+/// Operand sourced from a store node (stores broadcast nothing).
+pub const WM0202: &str = "WM0202";
+/// Non-source node with zero data inputs can never fire.
+pub const WM0203: &str = "WM0203";
+// DFG lints (WM03xx)
+/// Iteration space exceeds the engines' 32-bit iteration tag.
+pub const WM0301: &str = "WM0301";
+/// Operand references a node id outside the graph.
+pub const WM0302: &str = "WM0302";
+/// Node fan-in exceeds the 2 operands a PE can latch.
+pub const WM0303: &str = "WM0303";
+
+/// How bad a diagnostic is. Errors gate simulation; warnings do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// What a diagnostic is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subject {
+    /// The kernel as a whole.
+    Kernel,
+    /// DFG node id.
+    Node(usize),
+    /// Fabric coordinate.
+    Pe(Coord),
+    /// Shared-memory bank.
+    Bank(usize),
+    /// Data edge `src -> dst` (node ids).
+    Edge(usize, usize),
+}
+
+impl std::fmt::Display for Subject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Subject::Kernel => write!(f, "kernel"),
+            Subject::Node(i) => write!(f, "node {i}"),
+            Subject::Pe((r, c)) => write!(f, "pe ({r},{c})"),
+            Subject::Bank(b) => write!(f, "bank {b}"),
+            Subject::Edge(s, d) => write!(f, "edge {s}->{d}"),
+        }
+    }
+}
+
+/// One machine-readable finding: stable code, severity, subject, message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub subject: Subject,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, subject: Subject, message: String) -> Self {
+        Diagnostic { code, severity: Severity::Error, subject, message }
+    }
+
+    /// One JSON object, no external deps (matches the report.rs idiom).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"code\":\"{}\",\"severity\":\"{}\",\"subject\":\"{}\",\"message\":\"{}\"}}",
+            self.code,
+            self.severity,
+            self.subject,
+            self.message.replace('\\', "\\\\").replace('"', "\\\"")
+        )
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {} {}: {}", self.code, self.severity, self.subject, self.message)
+    }
+}
+
+/// DFG-only checks: structural lints (`WM03xx`) then dataflow-liveness
+/// hazards (`WM02xx`). Structural errors short-circuit the hazard pass so
+/// it never indexes out of range.
+pub fn check_dfg(dfg: &Dfg) -> Vec<Diagnostic> {
+    let mut diags = lint_dfg(dfg);
+    if diags.iter().any(|d| d.code == WM0302) {
+        return diags;
+    }
+    diags.extend(hazard::check_hazards(dfg));
+    diags
+}
+
+/// Full static check of a compiled mapping: DFG lints + hazards + legality.
+pub fn check(mapping: &Mapping, machine: &MachineDesc) -> Vec<Diagnostic> {
+    let mut diags = check_dfg(&mapping.dfg);
+    diags.extend(legality::check_mapping(mapping, machine));
+    diags
+}
+
+/// True if any diagnostic is error-severity (the pre-sim gate condition).
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Render diagnostics as a JSON array.
+pub fn diagnostics_json(diags: &[Diagnostic]) -> String {
+    let items: Vec<String> = diags.iter().map(Diagnostic::json).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// `WM03xx` structural lints: the static forms of the engines' dynamic
+/// rejection guards, plus operand-arity checks `Dfg::validate` leaves to
+/// the mapper.
+fn lint_dfg(dfg: &Dfg) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // Mirrors the engines' 32-bit iteration-tag guard (defense in depth:
+    // the dynamic check stays).
+    if dfg.total_iters() >= 1u64 << 32 {
+        diags.push(Diagnostic::error(
+            WM0301,
+            Subject::Kernel,
+            format!("{} iterations exceed the 32-bit iteration tag", dfg.total_iters()),
+        ));
+    }
+    for (i, n) in dfg.nodes.iter().enumerate() {
+        for &src in &n.inputs {
+            if src >= dfg.nodes.len() {
+                diags.push(Diagnostic::error(
+                    WM0302,
+                    Subject::Node(i),
+                    format!("operand references node {src} of {}", dfg.nodes.len()),
+                ));
+            }
+        }
+        if n.inputs.len() > 2 {
+            diags.push(Diagnostic::error(
+                WM0303,
+                Subject::Node(i),
+                format!("{} operands (PEs latch at most 2)", n.inputs.len()),
+            ));
+        }
+    }
+    diags
+}

@@ -462,6 +462,7 @@ mod tests {
             speedup_vs_cpu: 1.0,
             speedup_vs_gpu: 1.0,
             ii: 1,
+            bound: 0,
             per_workload: vec![WorkloadPerf {
                 workload: "wl".into(),
                 cycles: time as u64,
@@ -469,6 +470,7 @@ mod tests {
                 speedup_vs_cpu: 1.0,
                 speedup_vs_gpu: 1.0,
                 ii: 1,
+                bound: 0,
             }],
             timing: JobTiming::default(),
             telemetry: None,

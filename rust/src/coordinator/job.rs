@@ -12,6 +12,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::analysis;
 use crate::arch::params::WindMillParams;
 use crate::compiler::{compile, Mapping};
 use crate::diag::error::DiagError;
@@ -290,6 +291,10 @@ pub struct JobResult {
     pub speedup_vs_gpu: f64,
     pub ii: u32,
     pub measured_ii: f64,
+    /// Static resource-constrained lower bound on `cycles` (summed over
+    /// phases; see [`crate::analysis::cycles_lower_bound`]). Always
+    /// `bound <= cycles` — asserted per sweep point in CI.
+    pub bound: u64,
     pub mapped_nodes: usize,
     /// Final memory image (for golden checks by the caller).
     pub mem: Vec<f32>,
@@ -500,6 +505,8 @@ fn finalize_job(
     timing.baseline_ns = t0.elapsed().as_nanos() as u64;
 
     let ii = task.phases.iter().map(|p| p.mapping.schedule.ii).max().unwrap_or(1);
+    let bound: u64 =
+        task.phases.iter().map(|p| analysis::cycles_lower_bound(&p.mapping, machine)).sum();
     JobResult {
         name: spec.workload.name(),
         pea: format!("{}x{}", spec.params.rows, spec.params.cols),
@@ -512,10 +519,36 @@ fn finalize_job(
         speedup_vs_gpu: gpu_time_ns / wm_time_ns,
         ii,
         measured_ii: 0.0,
+        bound,
         mapped_nodes: task.phases.iter().map(|p| p.mapping.dfg.nodes.len()).sum(),
         telemetry: tr.telemetry,
         mem: tr.mem,
     }
+}
+
+/// Default-on pre-sim gate: run the static analyzer over every phase
+/// mapping and refuse to launch a simulation while any error-severity
+/// diagnostic stands. Healthy `compile()` output is clean by
+/// construction, so this only fires on corrupted artifacts (or analyzer
+/// regressions) — and when it fires, it fires *before* a single cycle.
+fn verify_task(task: &Task, machine: &MachineDesc) -> Result<(), DiagError> {
+    for phase in &task.phases {
+        let diags = analysis::check(&phase.mapping, machine);
+        if analysis::has_errors(&diags) {
+            let msgs: Vec<String> = diags
+                .iter()
+                .filter(|d| d.severity == analysis::Severity::Error)
+                .map(|d| d.to_string())
+                .collect();
+            return Err(DiagError::Verify(format!(
+                "task `{}` phase `{}`: {}",
+                task.name,
+                phase.mapping.dfg.name,
+                msgs.join("; ")
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Run one job end-to-end. Deterministic for (spec.seed).
@@ -551,6 +584,7 @@ pub fn run_job_cached_with(
     let mut timing = JobTiming::default();
     let prep = prep_job(spec, cache, &mut timing)?;
     let machine = prep.holder.machine();
+    verify_task(&prep.task, machine)?;
 
     let t0 = Instant::now();
     let tr = match cache {
@@ -652,6 +686,19 @@ pub fn run_jobs_cached_batch_with(
                 errors[i] = Some(e);
                 preps.push(None);
             }
+        }
+    }
+    // Pre-sim gate, batched form: a job whose phase mappings carry
+    // error-severity diagnostics fails its slot before any arena launch;
+    // siblings proceed.
+    for i in 0..n {
+        let verdict = match preps[i].as_ref() {
+            Some(p) => verify_task(&p.task, p.holder.machine()),
+            None => Ok(()),
+        };
+        if let Err(e) = verdict {
+            errors[i] = Some(e);
+            preps[i] = None;
         }
     }
     let mut cursors: Vec<Option<TaskCursor>> = Vec::with_capacity(n);

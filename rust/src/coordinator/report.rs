@@ -91,6 +91,8 @@ pub struct WorkloadPerf {
     pub speedup_vs_cpu: f64,
     pub speedup_vs_gpu: f64,
     pub ii: u32,
+    /// Static lower bound on `cycles` ([`crate::analysis::cycles_lower_bound`]).
+    pub bound: u64,
 }
 
 /// Geometric mean. Empty input pins to 0.0 (rate-guard convention across
@@ -127,6 +129,10 @@ pub struct SweepPoint {
     pub speedup_vs_cpu: f64,
     pub speedup_vs_gpu: f64,
     pub ii: u32,
+    /// Static lower bound on `cycles`, summed over suite members. The
+    /// bound-gap (`cycles - bound`) is the analyzer's measured slack on
+    /// this point; `bound <= cycles` is a permanent oracle (CI-asserted).
+    pub bound: u64,
     /// Suite columns, one per workload in suite order (len 1 for a plain
     /// sweep). The Pareto frontier minimizes **each** entry's time
     /// independently, not just the aggregate.
@@ -544,6 +550,7 @@ fn point_json(p: &SweepPoint) -> Json {
                 ("speedup_vs_cpu", w.speedup_vs_cpu.into()),
                 ("speedup_vs_gpu", w.speedup_vs_gpu.into()),
                 ("ii", (w.ii as usize).into()),
+                ("bound", (w.bound as usize).into()),
             ])
         })
         .collect();
@@ -561,6 +568,8 @@ fn point_json(p: &SweepPoint) -> Json {
         ("speedup_vs_cpu", p.speedup_vs_cpu.into()),
         ("speedup_vs_gpu", p.speedup_vs_gpu.into()),
         ("ii", (p.ii as usize).into()),
+        ("bound", (p.bound as usize).into()),
+        ("bound_gap", (p.cycles.saturating_sub(p.bound) as usize).into()),
         ("per_workload", Json::Arr(per_workload)),
     ];
     if let Some(t) = &p.telemetry {
@@ -706,6 +715,7 @@ mod tests {
                 speedup_vs_cpu: 1.0,
                 speedup_vs_gpu: 1.0,
                 ii: 1,
+                bound: 0,
             })
             .collect();
         let agg = geomean(times);
@@ -723,6 +733,7 @@ mod tests {
             speedup_vs_cpu: 1.0,
             speedup_vs_gpu: 1.0,
             ii: 1,
+            bound: 0,
             per_workload,
             timing: JobTiming::default(),
             telemetry: None,

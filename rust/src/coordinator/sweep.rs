@@ -398,6 +398,7 @@ fn fold_point(
             speedup_vs_cpu: job.speedup_vs_cpu,
             speedup_vs_gpu: job.speedup_vs_gpu,
             ii: job.ii,
+            bound: job.bound,
         });
     }
     // PPA of the *calibrated* architecture — the machine the jobs
@@ -428,6 +429,7 @@ fn fold_point(
         speedup_vs_cpu: geomean(&cpu),
         speedup_vs_gpu: geomean(&gpu),
         ii: per_workload.iter().map(|w| w.ii).max().unwrap_or(1),
+        bound: per_workload.iter().map(|w| w.bound).sum(),
         per_workload,
         timing,
         telemetry,

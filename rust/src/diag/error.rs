@@ -43,6 +43,11 @@ pub enum DiagError {
     /// Persistent artifact store problem (I/O, codec corruption, or a
     /// sweep-session shard/merge inconsistency).
     Store(String),
+
+    /// The static analyzer found error-severity diagnostics; the mapping
+    /// was rejected before any simulation (the pre-sim gate in
+    /// `run_job_cached`).
+    Verify(String),
 }
 
 impl fmt::Display for DiagError {
@@ -71,6 +76,7 @@ impl fmt::Display for DiagError {
             }
             DiagError::InvalidParams(msg) => write!(f, "invalid parameters: {msg}"),
             DiagError::Store(msg) => write!(f, "artifact store: {msg}"),
+            DiagError::Verify(msg) => write!(f, "static check failed: {msg}"),
         }
     }
 }

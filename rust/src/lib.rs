@@ -11,6 +11,9 @@
 //! the netlist generator, PPA models, the DFG compiler, and the
 //! cycle-accurate CGRA simulator — lives here.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod arch;
 pub mod compiler;
 pub mod coordinator;

@@ -8,6 +8,7 @@ use std::path::Path;
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use windmill::analysis;
 use windmill::arch::params::ParamGrid;
 use windmill::arch::{presets, Topology};
 use windmill::coordinator::{
@@ -36,6 +37,16 @@ USAGE:
     windmill run <workload> [--preset P] [--seed S]
         Compile + simulate a workload (saxpy|dot|gemm|spmv|bfs|fir|conv|rl)
         against the CPU/GPU baseline models.
+    windmill check <wl>[,<wl>...] [--preset P] [--pea N] [--topology T]
+                   [--seed S] [--json]
+        Static mapping verifier + performance-bound analyzer: compile each
+        workload (or comma-separated suite) and lint the artifacts without
+        simulating a cycle — WM01xx legality (placement, capabilities,
+        routes, context/smem capacity), WM02xx hazard/deadlock analysis,
+        WM03xx DFG lints — plus the resource-constrained cycle lower
+        bound per phase. Exits nonzero if any error-severity diagnostic
+        is found. --json emits one machine-readable object on stdout
+        (per-phase diagnostics + bounds).
     windmill sweep <wl>[,<wl>...] [--preset P] [--workers W] [--seed S]
                    [--batch N] [--store DIR] [--shard I/N] [--expect-warm]
                    [--lease [--ranges N] [--worker-id W] [--ttl T]
@@ -208,6 +219,72 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     t.row(&["mapped DFG nodes".into(), r.mapped_nodes.to_string()]);
     t.print();
     Ok(())
+}
+
+fn cmd_check(args: &[String]) -> Result<(), String> {
+    let wl_name = args.first().ok_or("missing workload (or comma-separated suite)")?;
+    let suite = WorkloadSuite::parse(wl_name)
+        .ok_or(format!("unknown workload in suite `{wl_name}`"))?;
+    let base = params_from_args(&args[1..])?;
+    let seed = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let json = args.iter().any(|a| a == "--json");
+
+    let mut t = Table::new(
+        &format!("static check: suite `{}` seed {seed} (no cycles simulated)", suite.name()),
+        &["workload", "phase", "nodes", "ii", "cycle bound", "diagnostics"],
+    );
+    let mut phases_json: Vec<String> = Vec::new();
+    let mut n_errors = 0usize;
+    for workload in suite.workloads() {
+        let (dfgs, layout) = workload.build();
+        let params = windmill::coordinator::calibrate_params(base.clone(), &layout);
+        let machine =
+            plugins::elaborate(params).map_err(|e| e.to_string())?.artifact;
+        for dfg in dfgs {
+            let mapping =
+                windmill::compiler::compile(dfg, &machine, seed).map_err(|e| e.to_string())?;
+            let diags = analysis::check(&mapping, &machine);
+            let bound = analysis::cycles_lower_bound(&mapping, &machine);
+            n_errors +=
+                diags.iter().filter(|d| d.severity == analysis::Severity::Error).count();
+            let verdict = if diags.is_empty() {
+                "clean".to_string()
+            } else {
+                diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+            };
+            t.row(&[
+                workload.name(),
+                mapping.dfg.name.clone(),
+                mapping.dfg.nodes.len().to_string(),
+                mapping.schedule.ii.to_string(),
+                bound.to_string(),
+                verdict,
+            ]);
+            phases_json.push(format!(
+                "{{\"workload\":\"{}\",\"phase\":\"{}\",\"nodes\":{},\"ii\":{},\"bound\":{},\"diagnostics\":{}}}",
+                workload.name(),
+                mapping.dfg.name,
+                mapping.dfg.nodes.len(),
+                mapping.schedule.ii,
+                bound,
+                analysis::diagnostics_json(&diags)
+            ));
+        }
+    }
+    if json {
+        println!(
+            "{{\"suite\":\"{}\",\"seed\":{seed},\"errors\":{n_errors},\"phases\":[{}]}}",
+            suite.name(),
+            phases_json.join(",")
+        );
+    } else {
+        t.print();
+    }
+    if n_errors > 0 {
+        Err(format!("static check found {n_errors} error-severity diagnostic(s)"))
+    } else {
+        Ok(())
+    }
 }
 
 fn print_sweep_report(report: &SweepReport, title: &str) {
@@ -654,6 +731,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(&rest),
         "report" => cmd_report(&rest),
         "run" => cmd_run(&rest),
+        "check" => cmd_check(&rest),
         "sweep" => cmd_sweep(&rest),
         "sweep-merge" => cmd_sweep_merge(&rest),
         "store" => cmd_store(&rest),

@@ -449,8 +449,12 @@ impl Lane {
     /// below 2^53, so one f64 multiply-add equals the reference's repeated
     /// additions bit for bit). The skip cannot cross `done()` (commits
     /// only change on fires) and a genuinely empty calendar is a deadlock:
-    /// fast-forward to the max-cycles guard the reference engine would
-    /// tick its way into.
+    /// no delivery, fire, or memory response can ever happen again, so the
+    /// lane fails fast with a structured `[WM0201]` error — the same code
+    /// the static hazard analyzer (`analysis::hazard`) assigns to the
+    /// token-starved-store structures that produce this state. (The
+    /// reference engine would tick its way into the max-cycles guard
+    /// instead; equivalence tests only run live kernels.)
     fn tick(&mut self, topo: &Topo<'_>, max_cycles: u64) -> Result<bool, DiagError> {
         if self.done(topo) {
             return Ok(false);
@@ -553,8 +557,24 @@ impl Lane {
             let next_due = (1..self.horizon).find(|k| {
                 !self.calendar[((self.cycle + k) % self.horizon) as usize].is_empty()
             });
-            let jump =
-                next_due.unwrap_or_else(|| max_cycles.saturating_sub(self.cycle).max(1));
+            let jump = match next_due {
+                Some(k) => k,
+                // Nothing in flight anywhere: no delivery, fire, or memory
+                // response can ever happen again. Fail fast with the
+                // hazard code the static analyzer predicts for this
+                // structure instead of burning to the max-cycles guard.
+                None => {
+                    return Err(DiagError::InvalidParams(format!(
+                        "sim `{}`: [WM0201] kernel deadlock at cycle {}: calendar empty with \
+                         {} of {} iterations committed (token-starved store; run `windmill \
+                         check` for the static diagnosis)",
+                        topo.dfg.name,
+                        self.cycle,
+                        frontier,
+                        total_iters
+                    )));
+                }
+            };
             let skipped = jump - 1;
             if skipped > 0 {
                 let delta = lead.saturating_sub(frontier);

@@ -73,7 +73,12 @@ pub const MAGIC: [u8; 4] = *b"WMAR";
 /// counters (steals/panics/abandoned/waits/checkpoint retries) a leased
 /// sweep worker survived — so merging lease checkpoints keeps every fault
 /// visible in the final report.
-pub const VERSION: u16 = 6;
+///
+/// v7 (PR 10): `WorkloadPerf` and `SweepPoint` carry `bound` — the static
+/// resource-constrained lower bound on cycles
+/// ([`crate::analysis::cycles_lower_bound`]) behind the report's
+/// bound-gap column and the `simulated >= bound` CI oracle.
+pub const VERSION: u16 = 7;
 
 /// What a store entry holds (the on-disk counterpart of
 /// [`crate::compiler::CompilePass`] plus the sweep-session partial).
@@ -1125,6 +1130,7 @@ fn enc_workload_perf(e: &mut Enc, w: &WorkloadPerf) {
     e.u64(w.cycles);
     e.f64(w.wm_time_ns).f64(w.speedup_vs_cpu).f64(w.speedup_vs_gpu);
     e.u32(w.ii);
+    e.u64(w.bound);
 }
 
 fn dec_workload_perf(d: &mut Dec) -> Result<WorkloadPerf, DiagError> {
@@ -1135,6 +1141,7 @@ fn dec_workload_perf(d: &mut Dec) -> Result<WorkloadPerf, DiagError> {
         speedup_vs_cpu: d.f64()?,
         speedup_vs_gpu: d.f64()?,
         ii: d.u32()?,
+        bound: d.u64()?,
     })
 }
 
@@ -1147,6 +1154,7 @@ fn enc_point(e: &mut Enc, p: &SweepPoint) {
     e.u64(p.cycles);
     e.f64(p.wm_time_ns).f64(p.speedup_vs_cpu).f64(p.speedup_vs_gpu);
     e.u32(p.ii);
+    e.u64(p.bound);
     e.seq(p.per_workload.len());
     for w in &p.per_workload {
         enc_workload_perf(e, w);
@@ -1169,6 +1177,7 @@ fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
     let speedup_vs_cpu = d.f64()?;
     let speedup_vs_gpu = d.f64()?;
     let ii = d.u32()?;
+    let bound = d.u64()?;
     let n_wl = d.seq(41)?; // fixed fields of one perf record
     let mut per_workload = Vec::with_capacity(n_wl);
     for _ in 0..n_wl {
@@ -1190,6 +1199,7 @@ fn dec_point(d: &mut Dec) -> Result<SweepPoint, DiagError> {
         speedup_vs_cpu,
         speedup_vs_gpu,
         ii,
+        bound,
         per_workload,
         timing,
         telemetry,
@@ -1509,6 +1519,8 @@ mod tests {
             speedup_vs_cpu: 2.0,
             speedup_vs_gpu: 0.5,
             ii: 1,
+            // v7: the static lower bound rides along, full-width.
+            bound: u64::MAX - 11,
             per_workload: Vec::new(),
             timing: JobTiming::default(),
             telemetry: Some(t.clone()),

@@ -176,6 +176,7 @@ mod tests {
             speedup_vs_cpu: 1.0,
             speedup_vs_gpu: 1.0,
             ii: 1,
+            bound: 0,
             per_workload: vec![WorkloadPerf {
                 workload: "wl".into(),
                 cycles: time as u64,
@@ -183,6 +184,7 @@ mod tests {
                 speedup_vs_cpu: 1.0,
                 speedup_vs_gpu: 1.0,
                 ii: 1,
+                bound: 0,
             }],
             timing: JobTiming {
                 elaborate_ns: 2_000,

@@ -1,0 +1,367 @@
+//! Mutation tests for the static analyzer (PR 10): every corruption of a
+//! valid compiled artifact must be caught with its exact `WM####` code
+//! before a single cycle is simulated, every shipped workload × preset
+//! must check clean, the engine's empty-calendar deadlock must carry the
+//! code the analyzer predicts statically, and the whole checker must be
+//! panic-free on randomized garbage.
+
+use windmill::analysis::{self, Severity};
+use windmill::arch::isa::{Op, OpClass};
+use windmill::arch::presets;
+use windmill::compiler::{compile, Dfg, Mapping, Node, NodeKind};
+use windmill::coordinator::{calibrate_params, run_job, JobSpec, Workload};
+use windmill::plugins;
+use windmill::sim::engine::simulate;
+use windmill::sim::machine::MachineDesc;
+use windmill::util::Rng;
+
+fn std_machine() -> MachineDesc {
+    plugins::elaborate(presets::standard()).unwrap().artifact
+}
+
+/// A small but route-rich kernel: the FIR tap chain spreads across PEs,
+/// so its mapping carries multi-hop routes to corrupt.
+fn mapped_fir(machine: &MachineDesc, seed: u64) -> Mapping {
+    let (dfgs, _layout) = Workload::Fir { n: 64, taps: 6 }.build();
+    let dfg = dfgs.into_iter().next().unwrap();
+    compile(dfg, machine, seed).unwrap()
+}
+
+fn codes(diags: &[analysis::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.code).collect()
+}
+
+#[test]
+fn compiled_mapping_is_clean_and_bounded() {
+    let machine = std_machine();
+    let mapping = mapped_fir(&machine, 42);
+    let diags = analysis::check(&mapping, &machine);
+    assert!(diags.is_empty(), "healthy artifact flagged: {diags:?}");
+    let bound = analysis::cycles_lower_bound(&mapping, &machine);
+    assert!(bound > 0, "nonzero kernel must have a nonzero bound");
+    // The oracle: the simulator can never beat the static bound.
+    let words = machine.smem.as_ref().unwrap().words();
+    let res = simulate(&mapping, &machine, &vec![0.5f32; words], 10_000_000).unwrap();
+    assert!(
+        bound <= res.cycles,
+        "bound {bound} exceeds simulated {} cycles",
+        res.cycles
+    );
+}
+
+#[test]
+fn truncated_placement_is_wm0101() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    mapping.place.pop();
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0101"), "{diags:?}");
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn out_of_fabric_placement_is_wm0102() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    mapping.place[0] = (machine.rows + 3, 0);
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0102"), "{diags:?}");
+}
+
+#[test]
+fn duplicate_placement_is_wm0103() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    mapping.place[1] = mapping.place[0];
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0103"), "{diags:?}");
+}
+
+#[test]
+fn capability_mismatch_is_wm0104() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    // Move a memory node onto a PE that cannot execute Mem ops.
+    let load = mapping.dfg.loads()[0];
+    let gpe = (0..machine.rows)
+        .flat_map(|r| (0..machine.cols).map(move |c| (r, c)))
+        .find(|&(r, c)| !machine.pe(r, c).caps.contains(&OpClass::Mem))
+        .expect("standard fabric has non-memory PEs");
+    mapping.place[load] = gpe;
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0104"), "{diags:?}");
+}
+
+#[test]
+fn severed_route_is_wm0105() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    // Drop the route of some cross-PE edge (path length >= 2).
+    let pos = mapping
+        .routes
+        .edges
+        .iter()
+        .position(|r| r.path.len() >= 2)
+        .expect("fir mapping has cross-PE routes");
+    mapping.routes.edges.remove(pos);
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0105"), "{diags:?}");
+}
+
+#[test]
+fn route_endpoint_mismatch_is_wm0106() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    let route = mapping
+        .routes
+        .edges
+        .iter_mut()
+        .find(|r| r.path.len() >= 2)
+        .expect("fir mapping has cross-PE routes");
+    // Retarget the head of the path away from the producer's PE.
+    let head = route.path[0];
+    route.path[0] = ((head.0 + 1) % 8, (head.1 + 1) % 8);
+    let diags = analysis::check(&mapping, &machine);
+    assert!(
+        codes(&diags).contains(&"WM0106") || codes(&diags).contains(&"WM0107"),
+        "{diags:?}"
+    );
+    assert!(analysis::has_errors(&diags));
+}
+
+#[test]
+fn teleporting_route_hop_is_wm0107() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    let route = mapping
+        .routes
+        .edges
+        .iter_mut()
+        .find(|r| r.path.len() >= 2)
+        .expect("fir mapping has cross-PE routes");
+    // Insert an interior hop 3+3 Manhattan away from its predecessor —
+    // no mesh2d neighbour relation can cover that jump.
+    let head = route.path[0];
+    let far = ((head.0 + 3) % machine.rows, (head.1 + 3) % machine.cols);
+    route.path.insert(1, far);
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0107"), "{diags:?}");
+}
+
+#[test]
+fn undersized_ii_is_wm0108() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    mapping.schedule.ii = 0;
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0108"), "{diags:?}");
+}
+
+#[test]
+fn context_overflow_is_wm0109() {
+    let mut machine = std_machine();
+    let mapping = mapped_fir(&machine, 42);
+    // Shrink the fabric's context memory under the mapping's footprint.
+    machine.context_depth = 0;
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0109"), "{diags:?}");
+}
+
+#[test]
+fn smem_overallocation_is_wm0110() {
+    let machine = std_machine();
+    let mut mapping = mapped_fir(&machine, 42);
+    let words = machine.smem.as_ref().unwrap().words() as u32;
+    let load = mapping.dfg.loads()[0];
+    // Rebase the access one word past the end of shared memory.
+    if let NodeKind::Load(windmill::compiler::Access::Affine { base, .. }) =
+        &mut mapping.dfg.nodes[load].kind
+    {
+        *base = words;
+    } else {
+        panic!("fir load is affine");
+    }
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0110"), "{diags:?}");
+}
+
+#[test]
+fn iteration_tag_overflow_is_wm0301() {
+    let mut d = Dfg::new("huge", vec![1 << 16, 1 << 16]);
+    let x = d.load_affine(0, vec![1, 0]);
+    d.store_affine(x, 8, vec![1, 0], 1);
+    let diags = analysis::check_dfg(&d);
+    assert!(
+        diags.iter().any(|dg| dg.code == "WM0301" && dg.severity == Severity::Error),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn dangling_operand_is_wm0302_and_fan_in_is_wm0303() {
+    let mut d = Dfg::new("bad", vec![8]);
+    let x = d.load_affine(0, vec![1]);
+    let y = d.compute(Op::Add, x, x);
+    d.store_affine(y, 16, vec![1], 1);
+    d.nodes.push(Node {
+        op: Op::Add,
+        kind: NodeKind::Compute,
+        inputs: vec![99],
+        imm: 0.0,
+    });
+    let diags = analysis::check_dfg(&d);
+    assert!(codes(&diags).contains(&"WM0302"), "{diags:?}");
+
+    let mut d3 = Dfg::new("wide", vec![8]);
+    let a = d3.load_affine(0, vec![1]);
+    d3.nodes.push(Node {
+        op: Op::Add,
+        kind: NodeKind::Compute,
+        inputs: vec![a, a, a],
+        imm: 0.0,
+    });
+    let w = d3.nodes.len() - 1;
+    d3.store_affine(w, 16, vec![1], 1);
+    let diags = analysis::check_dfg(&d3);
+    assert!(codes(&diags).contains(&"WM0303"), "{diags:?}");
+}
+
+/// The kernel behind the empty-calendar deadlock: a compute node fed by a
+/// store. Stores broadcast nothing, so the second store is token-starved.
+/// Passes `Dfg::validate` and compiles — only the analyzer (statically)
+/// and the engine (dynamically, with the same code) reject it.
+fn deadlock_kernel() -> Dfg {
+    let mut d = Dfg::new("store-fed", vec![16]);
+    let x = d.load_affine(0, vec![1]);
+    let s = d.store_affine(x, 64, vec![1], 1);
+    let y = d.compute(Op::Add, s, s);
+    d.store_affine(y, 128, vec![1], 1);
+    d
+}
+
+#[test]
+fn deadlock_prediction_matches_engine_diagnosis() {
+    let machine = std_machine();
+    let d = deadlock_kernel();
+    d.validate().expect("structurally valid — that's the point");
+    let mapping = compile(d, &machine, 42).unwrap();
+
+    // Static: the hazard pass flags the starved store (WM0201) and the
+    // store-sourced operand (WM0202) without running a cycle.
+    let diags = analysis::check(&mapping, &machine);
+    assert!(codes(&diags).contains(&"WM0201"), "{diags:?}");
+    assert!(codes(&diags).contains(&"WM0202"), "{diags:?}");
+
+    // Dynamic: the engine deadlocks on the same kernel, and its error
+    // carries the exact code the analyzer predicted.
+    let words = machine.smem.as_ref().unwrap().words();
+    let err = simulate(&mapping, &machine, &vec![0.5f32; words], 100_000)
+        .map(|_| ())
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("WM0201"), "engine error lacks the hazard code: {msg}");
+    assert!(msg.contains("deadlock"), "{msg}");
+}
+
+#[test]
+fn shipped_workloads_and_presets_check_clean() {
+    let names = ["saxpy", "dot", "gemm", "spmv", "bfs", "fir", "conv", "rl"];
+    let mut checked = 0usize;
+    for preset in presets::NAMES {
+        let base = presets::by_name(preset).unwrap();
+        for wl_name in names {
+            let workload = Workload::parse(wl_name).unwrap();
+            let (dfgs, layout) = workload.build();
+            let params = calibrate_params(base.clone(), &layout);
+            let machine = plugins::elaborate(params).unwrap().artifact;
+            for dfg in dfgs {
+                let name = dfg.name.clone();
+                let mapping = match compile(dfg, &machine, 42) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        // A capacity refusal by the mapper is legitimate on
+                        // the small preset; on the bigger fabrics every
+                        // shipped kernel must map.
+                        assert_eq!(
+                            preset, "small",
+                            "`{wl_name}`/{name} must map on `{preset}`: {e}"
+                        );
+                        continue;
+                    }
+                };
+                let diags = analysis::check(&mapping, &machine);
+                assert!(
+                    diags.is_empty(),
+                    "`{wl_name}`/{name} on `{preset}` flagged: {diags:?}"
+                );
+                assert!(analysis::cycles_lower_bound(&mapping, &machine) > 0);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 16, "only {checked} workload phases checked");
+}
+
+#[test]
+fn bound_rides_through_run_job_and_stays_sound() {
+    for wl in ["gemm", "fir", "spmv"] {
+        let spec = JobSpec {
+            workload: Workload::parse(wl).unwrap(),
+            params: presets::standard(),
+            seed: 42,
+        };
+        let r = run_job(&spec).unwrap();
+        assert!(r.bound > 0, "{wl}: zero bound");
+        assert!(
+            r.bound <= r.cycles,
+            "{wl}: bound {} exceeds simulated {}",
+            r.bound,
+            r.cycles
+        );
+    }
+}
+
+#[test]
+fn fuzzed_corruptions_never_panic_the_checker() {
+    let machine = std_machine();
+    let mut rng = Rng::new(0xF00D_CAFE);
+    for trial in 0..32u64 {
+        let mut mapping = mapped_fir(&machine, trial % 5);
+        let mut m = machine.clone();
+        for _ in 0..(1 + rng.below(4)) {
+            match rng.below(7) {
+                0 => {
+                    let i = rng.below(mapping.place.len() as u64) as usize;
+                    mapping.place[i] =
+                        (rng.below(12) as usize, rng.below(12) as usize);
+                }
+                1 => {
+                    if !mapping.routes.edges.is_empty() {
+                        let i = rng.below(mapping.routes.edges.len() as u64) as usize;
+                        let r = &mut mapping.routes.edges[i];
+                        let coord = (rng.below(10) as usize, rng.below(10) as usize);
+                        let at = rng.below(r.path.len() as u64 + 1) as usize;
+                        r.path.insert(at, coord);
+                    }
+                }
+                2 => {
+                    if !mapping.routes.edges.is_empty() {
+                        let i = rng.below(mapping.routes.edges.len() as u64) as usize;
+                        mapping.routes.edges[i].path.clear();
+                    }
+                }
+                3 => mapping.schedule.ii = rng.below(3) as u32,
+                4 => m.context_depth = rng.below(4) as usize,
+                5 => {
+                    let i = rng.below(mapping.dfg.nodes.len() as u64) as usize;
+                    mapping.dfg.nodes[i].inputs.push(rng.below(64) as usize);
+                }
+                _ => {
+                    mapping.place.pop();
+                }
+            }
+        }
+        // Must terminate without panicking, whatever it finds.
+        let _ = analysis::check(&mapping, &m);
+    }
+}
